@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root: the build-time
+Python packages live under python/."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

@@ -1,0 +1,92 @@
+//! Regenerate the paper's Figure 1 from the cache simulator.
+//!
+//! Writes CSV series to `reports/`:
+//!   fig1a_canonic.csv / fig1b_hilbert.csv — traversal orders (8×8)
+//!   fig1cd_histories.csv                  — i(t), j(t) for both orders
+//!   fig1e_misses.csv                      — LRU misses vs cache size
+//!
+//! ```sh
+//! cargo run --release --example cache_analysis
+//! ```
+
+use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::curves::{metrics, CurveKind};
+use sfc_mine::util::table::Table;
+
+fn main() -> std::io::Result<()> {
+    std::fs::create_dir_all("reports")?;
+
+    // --- Fig 1(a)/(b): traversal orders on 8x8 ---------------------------
+    for (name, path) in [
+        ("fig1a_canonic", CurveKind::Canonic.enumerate(8)),
+        ("fig1b_hilbert", HilbertIter::new(8).collect::<Vec<_>>()),
+    ] {
+        let mut t = Table::new(vec!["t", "i", "j"]);
+        for (step, (i, j)) in path.iter().enumerate() {
+            t.row(vec![step.to_string(), i.to_string(), j.to_string()]);
+        }
+        t.write_csv(&format!("reports/{name}.csv"))?;
+        println!("wrote reports/{name}.csv ({} rows)", t.len());
+    }
+
+    // --- Fig 1(c)/(d): i/j histories on 64x64 -----------------------------
+    let n = 64u32;
+    let canonic = CurveKind::Canonic.enumerate(n);
+    let hilbert: Vec<_> = HilbertIter::new(n).collect();
+    let (ci, cj) = metrics::histories(&canonic);
+    let (hi, hj) = metrics::histories(&hilbert);
+    let mut t = Table::new(vec!["t", "canonic_i", "canonic_j", "hilbert_i", "hilbert_j"]);
+    for step in 0..canonic.len() {
+        t.row(vec![
+            step.to_string(),
+            ci[step].to_string(),
+            cj[step].to_string(),
+            hi[step].to_string(),
+            hj[step].to_string(),
+        ]);
+    }
+    t.write_csv("reports/fig1cd_histories.csv")?;
+    println!("wrote reports/fig1cd_histories.csv ({} rows)", t.len());
+
+    // --- Fig 1(e): LRU misses vs cache size --------------------------------
+    // 256 objects per side, 256-byte objects (a 64-float matrix row).
+    let cfg = PairLoopConfig { n: 256, m: 256, object_bytes: 256 };
+    let orders: Vec<(CurveKind, Vec<(u32, u32)>)> = vec![
+        (CurveKind::Canonic, CurveKind::Canonic.enumerate(256)),
+        (CurveKind::ZOrder, CurveKind::ZOrder.enumerate(256)),
+        (CurveKind::Hilbert, HilbertIter::new(256).collect()),
+    ];
+    let fractions: Vec<f64> = (1..=50).map(|p| p as f64 / 100.0).collect();
+    let rows = fig1e_sweep(&cfg, &orders, &fractions, 64);
+
+    let mut t = Table::new(vec!["cache_frac", "cache_bytes", "canonic", "zorder", "hilbert"]);
+    for r in &rows {
+        t.row(vec![
+            format!("{:.2}", r.cache_fraction),
+            r.cache_bytes.to_string(),
+            r.misses[0].to_string(),
+            r.misses[1].to_string(),
+            r.misses[2].to_string(),
+        ]);
+    }
+    t.write_csv("reports/fig1e_misses.csv")?;
+    println!("wrote reports/fig1e_misses.csv");
+
+    // Print the headline slice (the paper highlights 5-20% cache sizes).
+    println!("\nFig 1(e) — LRU misses (working set {} KiB):", cfg.working_set() / 1024);
+    let mut headline = Table::new(vec!["cache %", "canonic", "zorder", "hilbert", "canonic/hilbert"]);
+    for r in rows.iter().filter(|r| {
+        [0.05, 0.10, 0.15, 0.20, 0.30, 0.50].iter().any(|f| (r.cache_fraction - f).abs() < 1e-9)
+    }) {
+        headline.row(vec![
+            format!("{:.0}%", r.cache_fraction * 100.0),
+            r.misses[0].to_string(),
+            r.misses[1].to_string(),
+            r.misses[2].to_string(),
+            format!("{:.1}x", r.misses[0] as f64 / r.misses[2] as f64),
+        ]);
+    }
+    print!("{}", headline.render());
+    Ok(())
+}

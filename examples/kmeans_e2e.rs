@@ -1,0 +1,187 @@
+//! END-TO-END driver: k-Means over the full three-layer stack.
+//!
+//! Layer 1 (Pallas distance + matmul kernels) and Layer 2 (the JAX
+//! `kmeans_step` graph) were AOT-lowered by `make artifacts`; this binary
+//! is Layer 3: it loads the HLO artifacts into the PJRT engine, shards the
+//! point set into fixed-size batches (the executable's static shape),
+//! runs Lloyd iterations with Rust-side centroid updates, and logs the
+//! inertia curve. Python is not involved at any point of this run.
+//!
+//! The same problem is then solved by the pure-Rust Hilbert-blocked
+//! parallel path (the coordinator), and the two solutions are
+//! cross-validated label-for-label.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example kmeans_e2e
+//! ```
+
+use sfc_mine::apps::kmeans::{init_centroids, make_blobs, Assignment, KMeans};
+use sfc_mine::apps::Matrix;
+use sfc_mine::coordinator::batch::batch_rows;
+use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
+use sfc_mine::runtime::engine::TensorF32;
+use sfc_mine::runtime::{artifact, Engine};
+use sfc_mine::util::cli::Args;
+use std::time::Instant;
+
+// The artifact's static shapes (must match python/compile/aot.py defaults).
+const BATCH: usize = 4096;
+const DIM: usize = 16;
+const K: usize = 64;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let batches: usize = args.get("batches", 10);
+    let iters: usize = args.get("iters", 12);
+    // "kmeans_step" = Pallas-kernel lowering (the faithful L1 path);
+    // "kmeans_step_ref" = pure-jnp lowering (3.8x faster on CPU-PJRT,
+    // where interpret-mode Pallas becomes a grid while-loop — see
+    // EXPERIMENTS.md §Perf).
+    let model = args.get_str("model", "kmeans_step");
+    let n = BATCH * batches;
+
+    println!("== sfc-mine end-to-end k-means ==");
+    println!("workload: n={n} d={DIM} k={K} ({batches} PJRT batches of {BATCH})");
+
+    // --- L3 setup: load the AOT artifacts into the PJRT engine -----------
+    let dir = artifact::default_dir();
+    let mut engine = Engine::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let manifest = engine
+        .load_manifest_dir(&dir)
+        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
+    println!(
+        "engine: {} | artifacts: {:?}",
+        engine.platform(),
+        manifest.names()
+    );
+
+    // --- Workload ----------------------------------------------------------
+    let (points, _) = make_blobs(n, K, DIM, 0.6, 42);
+    let mut centroids = init_centroids(&points, K, 7);
+
+    // Pre-batch the points once (contiguous shards; each batch is one PJRT
+    // execution of the static-shape kmeans_step) and upload each batch to
+    // the device ONCE — iterations then only move the (tiny) centroid
+    // tensor (§Perf: removes the per-call 256 KiB host→device copy).
+    let point_batches = batch_rows(&points.data, DIM, BATCH);
+    assert_eq!(point_batches.len(), batches);
+    let device_batches: Vec<xla::PjRtBuffer> = point_batches
+        .iter()
+        .map(|b| {
+            engine
+                .to_device(&TensorF32::new(vec![BATCH, DIM], b.data.clone()).unwrap())
+                .map_err(|e| anyhow::anyhow!("{e}"))
+        })
+        .collect::<Result<_, _>>()?;
+
+    // --- Lloyd iterations over PJRT ----------------------------------------
+    println!("\niter    inertia          Δ%        points/s");
+    let mut labels = vec![0u32; n];
+    let mut last_inertia = f64::INFINITY;
+    let run_start = Instant::now();
+    for it in 0..iters {
+        let t0 = Instant::now();
+        let mut sums = vec![0.0f64; K * DIM];
+        let mut counts = vec![0u64; K];
+        let mut inertia = 0.0f64;
+        let dev_centroids = engine
+            .to_device(&TensorF32::new(vec![K, DIM], centroids.data.clone()).unwrap())
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        for (b, batch) in point_batches.iter().enumerate() {
+            let out = engine
+                .execute_buffers(&model, &[&device_batches[b], &dev_centroids])
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let (blabels, bcounts, bsums, binertia) = (&out[0], &out[1], &out[2], &out[3]);
+            // Merge valid lanes only (the tail batch is padded).
+            let valid = batch.valid;
+            for p in 0..valid {
+                labels[b * BATCH + p] = blabels.data[p] as u32;
+            }
+            if valid == BATCH {
+                for (acc, &v) in sums.iter_mut().zip(&bsums.data) {
+                    *acc += v as f64;
+                }
+                for (acc, &v) in counts.iter_mut().zip(&bcounts.data) {
+                    *acc += v as u64;
+                }
+                inertia += binertia.data[0] as f64;
+            } else {
+                // Padded tail: recompute the merge from valid labels (the
+                // kernel's sums include pad rows).
+                for p in 0..valid {
+                    let row = &batch.data[p * DIM..(p + 1) * DIM];
+                    let l = blabels.data[p] as usize;
+                    for (idx, &x) in row.iter().enumerate() {
+                        sums[l * DIM + idx] += x as f64;
+                    }
+                    counts[l] += 1;
+                }
+            }
+        }
+        // Rust-side centroid update (empty-cluster policy lives here).
+        centroids = Matrix::from_fn(K, DIM, |c, idx| {
+            if counts[c] > 0 {
+                (sums[c * DIM + idx] / counts[c] as f64) as f32
+            } else {
+                centroids.at(c, idx)
+            }
+        });
+        let dt = t0.elapsed();
+        let delta = if last_inertia.is_finite() {
+            (last_inertia - inertia) / last_inertia * 100.0
+        } else {
+            f64::NAN
+        };
+        println!(
+            "{it:>4}    {inertia:>13.1}   {delta:>6.2}%   {:>10.0}",
+            n as f64 / dt.as_secs_f64()
+        );
+        if last_inertia.is_finite() && delta.abs() < 0.01 {
+            println!("converged (Δ < 0.01%)");
+            break;
+        }
+        last_inertia = inertia;
+    }
+    // Final assignment-only pass so `labels` reflects the *final*
+    // centroids (the loop's labels predate its last centroid update).
+    let dev_centroids = engine
+        .to_device(&TensorF32::new(vec![K, DIM], centroids.data.clone()).unwrap())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    for (b, batch) in point_batches.iter().enumerate() {
+        let out = engine
+            .execute_buffers(&model, &[&device_batches[b], &dev_centroids])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        for p in 0..batch.valid {
+            labels[b * BATCH + p] = out[0].data[p] as u32;
+        }
+    }
+    let pjrt_total = run_start.elapsed();
+    println!("PJRT path total: {:.2} s", pjrt_total.as_secs_f64());
+
+    // --- Cross-validate against the pure-Rust coordinator path -------------
+    println!("\ncross-validating against the Rust Hilbert-blocked parallel path…");
+    let coord = Coordinator::new(0);
+    let km = KMeans { points: points.clone(), centroids: centroids.clone() };
+    let t0 = Instant::now();
+    let (rust_assign, _): (Assignment, _) = par_kmeans_step(&coord, &km, 256, 16);
+    let rust_dt = t0.elapsed();
+    let mismatches = rust_assign
+        .labels
+        .iter()
+        .zip(&labels)
+        .filter(|(a, b)| a != b)
+        .count();
+    println!(
+        "labels agree on {}/{} points ({} workers, {:.1} ms/assignment pass)",
+        n - mismatches,
+        n,
+        coord.threads(),
+        rust_dt.as_secs_f64() * 1e3
+    );
+    assert!(
+        mismatches * 1000 < n,
+        "more than 0.1% label disagreement ({mismatches})"
+    );
+    println!("\nE2E OK: Pallas kernel → JAX graph → HLO text → PJRT → Rust coordinator");
+    Ok(())
+}

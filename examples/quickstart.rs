@@ -1,0 +1,68 @@
+//! Quickstart: a tour of the space-filling-curve API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use sfc_mine::curves::fgf::{fgf_path, UpperTriangle};
+use sfc_mine::curves::fur::FurHilbert;
+use sfc_mine::curves::hilbert::Hilbert;
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::curves::zorder::ZOrder;
+use sfc_mine::curves::{metrics, CurveKind, SpaceFillingCurve};
+
+fn main() {
+    // --- Order values via the Mealy automaton (paper §3, Fig 3) ---------
+    println!("== Hilbert order values (Mealy automaton), 8x8 ==");
+    for i in 0..8u32 {
+        let row: Vec<String> = (0..8u32)
+            .map(|j| format!("{:3}", Hilbert::order(i, j)))
+            .collect();
+        println!("  {}", row.join(" "));
+    }
+    let (i, j) = Hilbert::coords(37);
+    println!("  H^-1(37) = ({i},{j}); H({i},{j}) = {}", Hilbert::order(i, j));
+
+    // --- Z-order by bit interleaving (Fig 2) -----------------------------
+    println!("\n== Z-order values, 4x4 ==");
+    for i in 0..4u32 {
+        let row: Vec<String> = (0..4u32)
+            .map(|j| format!("{:2}", ZOrder::order(i, j)))
+            .collect();
+        println!("  {}", row.join(" "));
+    }
+
+    // --- Constant-overhead generation (paper §5, Fig 5) ------------------
+    println!("\n== Non-recursive Hilbert loop, first 12 cells of 8x8 ==");
+    let cells: Vec<(u32, u32)> = HilbertIter::new(8).take(12).collect();
+    println!("  {cells:?}");
+
+    // --- Curve segments for parallel workers ------------------------------
+    let seg: Vec<(u32, u32)> = HilbertIter::range(3, 20, 24).collect();
+    println!("  order values [20,24) of the 8x8 curve: {seg:?}");
+
+    // --- Arbitrary n x m grids (paper §6.1, FUR) --------------------------
+    println!("\n== FUR-Hilbert over a 5x13 grid ==");
+    let path = FurHilbert::path(5, 13);
+    println!("  {} cells, first 10: {:?}", path.len(), &path[..10]);
+    let stats = metrics::step_stats(&path);
+    println!("  avg step {:.3}, max step {}", stats.avg, stats.max);
+
+    // --- General regions with jump-over (paper §6.2, FGF) -----------------
+    println!("\n== FGF-Hilbert over the i<j triangle of 16x16 ==");
+    let (tri, st) = fgf_path(4, &UpperTriangle);
+    println!(
+        "  visited {} pairs, jumped {} quadrants ({} order values skipped)",
+        st.visited, st.jumps, st.skipped
+    );
+    println!("  first 6 (i, j, true-hilbert-value): {:?}", &tri[..6]);
+
+    // --- Locality comparison across curves --------------------------------
+    println!("\n== Locality score (mean window working set, 64x64, w=64) ==");
+    for kind in CurveKind::ALL {
+        let path = kind.enumerate(64);
+        let score = metrics::locality_score(&path, 64);
+        println!("  {:>8}: {:7.2}", kind.name(), score);
+    }
+    println!("\n(lower is better; Hilbert/Peano stay near sqrt(w), canonic is ~w)");
+}

@@ -1,0 +1,99 @@
+"""AOT lowering: JAX models -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the runtime's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        [--kmeans-n 4096 --kmeans-d 16 --kmeans-k 64] \
+        [--matmul-n 256 --matmul-k 256 --matmul-m 256]
+
+Writes <name>.hlo.txt per model plus manifest.txt (name\tfile\tcomment).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jax function to HLO text with a tuple root."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(dims, jnp.float32)
+
+
+def build_all(args):
+    """Yield (name, hlo_text, comment) for every artifact."""
+    n, d, k = args.kmeans_n, args.kmeans_d, args.kmeans_k
+    yield (
+        "kmeans_step",
+        to_hlo_text(model.kmeans_step_tuple, f32(n, d), f32(k, d)),
+        f"lloyd step n={n} d={d} k={k} -> (labels,counts,sums,inertia)",
+    )
+    # CPU-PJRT fast path: the same graph from the pure-jnp oracle. The
+    # Pallas kernel lowers (interpret=True) to a grid while-loop that XLA
+    # CPU cannot fuse; the jnp lowering fuses into tight loops. On a real
+    # TPU the Pallas artifact is the perf path; on CPU this one is.
+    from compile.kernels import ref
+
+    yield (
+        "kmeans_step_ref",
+        to_hlo_text(lambda p, c: ref.kmeans_step(p, c), f32(n, d), f32(k, d)),
+        f"lloyd step (pure-jnp lowering) n={n} d={d} k={k}",
+    )
+    yield (
+        "pairwise_dists",
+        to_hlo_text(model.pairwise_dists_tuple, f32(n, d), f32(k, d)),
+        f"sq dists n={n} d={d} k={k}",
+    )
+    mn, mk, mm = args.matmul_n, args.matmul_k, args.matmul_m
+    yield (
+        "matmul",
+        to_hlo_text(model.matmul_tuple, f32(mn, mk), f32(mk, mm)),
+        f"block matmul {mn}x{mk} * {mk}x{mm}",
+    )
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--kmeans-n", type=int, default=4096)
+    p.add_argument("--kmeans-d", type=int, default=16)
+    p.add_argument("--kmeans-k", type=int, default=64)
+    p.add_argument("--matmul-n", type=int, default=256)
+    p.add_argument("--matmul-k", type=int, default=256)
+    p.add_argument("--matmul-m", type=int, default=256)
+    args = p.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, hlo, comment in build_all(args):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest_lines.append(f"{name}\t{fname}\t{comment}")
+        print(f"wrote {path} ({len(hlo)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# sfc-mine AOT artifacts (HLO text)\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {args.out_dir}/manifest.txt ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: tiled pairwise squared distances.
+
+The compute hot-spot of k-Means assignment (and of the similarity join's
+refinement phase) as a Pallas kernel. TPU mapping of the paper's idea (see
+DESIGN.md §Hardware-Adaptation): the (point-tile x centroid-tile) blocking
+keeps both operand tiles resident in VMEM while the MXU computes the
+cross-term as a matmul:
+
+    ||x - c||^2 = ||x||^2 + ||c||^2 - 2 x.c
+
+Grid: (n/TP, k/TC); each step produces one (TP, TC) output tile from a
+(TP, D) point tile and a (TC, D) centroid tile. The Hilbert-order dispatch
+of larger block batches lives in the Rust coordinator (L3); within one
+dispatch the dense tile grid maximises VMEM reuse.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: 8x128 keeps the f32 VMEM tiling of the TPU happy
+# (8-sublane x 128-lane registers) while staying tiny enough for tests.
+DEFAULT_TP = 128
+DEFAULT_TC = 128
+
+
+def _dist_kernel(x_ref, c_ref, o_ref):
+    """One (TP, TC) tile: x_ref (TP, D), c_ref (TC, D)."""
+    x = x_ref[...]
+    c = c_ref[...]
+    # Cross term on the MXU; norms on the VPU.
+    cross = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    xn = jnp.sum(x * x, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1, keepdims=True)
+    o_ref[...] = xn + cn.T - 2.0 * cross
+
+
+@functools.partial(jax.jit, static_argnames=("tp", "tc"))
+def pairwise_sq_dists(points, centroids, tp=None, tc=None):
+    """(n, d) x (k, d) -> (n, k) squared distances via the Pallas kernel.
+
+    n must divide by tp and k by tc (the L2 model pads when needed).
+    """
+    n, d = points.shape
+    k, d2 = centroids.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    tp = min(n, DEFAULT_TP) if tp is None else tp
+    tc = min(k, DEFAULT_TC) if tc is None else tc
+    assert n % tp == 0, f"n={n} not divisible by tile {tp}"
+    assert k % tc == 0, f"k={k} not divisible by tile {tc}"
+    grid = (n // tp, k // tc)
+    return pl.pallas_call(
+        _dist_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tc, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tp, tc), lambda i, j: (i, j)),
+        interpret=True,
+    )(points, centroids)

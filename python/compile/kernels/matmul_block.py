@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: tiled block matmul with a k-loop accumulator.
+
+The paper's SS1 running example on the TPU: the (i-block, j-block) output
+tile stays resident in VMEM while the k-loop streams (TI, TK) x (TK, TJ)
+operand tiles through the MXU. Grid order within one dispatch is the dense
+(bi, bj, bk) nest; the cache-oblivious *Hilbert* ordering of coarser block
+batches is applied by the Rust coordinator (L3), mirroring how the paper
+hoists the traversal-order decision out of the innermost loops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 128
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """Accumulating tile kernel; bk is the innermost grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("ti", "tj", "tk"))
+def matmul(a, b, ti=None, tj=None, tk=None):
+    """(n, k) x (k, m) -> (n, m) via the tiled Pallas kernel."""
+    n, kk = a.shape
+    kk2, m = b.shape
+    assert kk == kk2, f"inner dim mismatch {kk} vs {kk2}"
+    ti = min(n, DEFAULT_TILE) if ti is None else ti
+    tj = min(m, DEFAULT_TILE) if tj is None else tj
+    tk = min(kk, DEFAULT_TILE) if tk is None else tk
+    assert n % ti == 0 and m % tj == 0 and kk % tk == 0, (
+        f"shape ({n},{kk})x({kk},{m}) not divisible by tiles ({ti},{tj},{tk})"
+    )
+    grid = (n // ti, m // tj, kk // tk)
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tj), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((ti, tj), lambda i, j, k: (i, j)),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1 reference).
+
+Every Pallas kernel in this package has an oracle here; pytest asserts
+allclose between kernel and oracle across a hypothesis sweep of shapes.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(points, centroids):
+    """Squared Euclidean distances, (n, d) x (k, d) -> (n, k)."""
+    diff = points[:, None, :] - centroids[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def matmul(a, b):
+    """Plain matmul oracle, (n, k) x (k, m) -> (n, m)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def kmeans_step(points, centroids):
+    """One Lloyd step: (labels, counts, sums, inertia) — all float32.
+
+    labels : (n,)  nearest-centroid index per point (as f32)
+    counts : (k,)  points per centroid
+    sums   : (k,d) coordinate sums per centroid
+    inertia: ()    sum of squared distances to the nearest centroid
+    """
+    d2 = pairwise_sq_dists(points, centroids)
+    labels = jnp.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    one_hot = (labels[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    sums = jnp.dot(one_hot.T, points, preferred_element_type=jnp.float32)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return labels.astype(jnp.float32), counts, sums, inertia

@@ -1,0 +1,99 @@
+"""L2 JAX models: the compute graphs the Rust coordinator executes via PJRT.
+
+Each model calls the L1 Pallas kernels so that kernel and surrounding math
+lower into one HLO module. Shapes are static (AOT); the models pad
+non-tile-divisible inputs internally so the Rust side can use natural sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import distance, matmul_block
+
+
+def _pad_rows(x, multiple):
+    """Pad axis 0 up to a multiple; returns (padded, original_len)."""
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem:
+        x = jnp.pad(x, ((0, rem),) + ((0, 0),) * (x.ndim - 1))
+    return x, n
+
+
+def pairwise_dists(points, centroids):
+    """(n,d) x (k,d) -> (n,k) squared distances (padding-safe)."""
+    tp = min(points.shape[0], distance.DEFAULT_TP)
+    tc = min(centroids.shape[0], distance.DEFAULT_TC)
+    pp, n = _pad_rows(points, tp)
+    cc, k = _pad_rows(centroids, tc)
+    d2 = distance.pairwise_sq_dists(pp, cc, tp=tp, tc=tc)
+    return d2[:n, :k]
+
+
+def kmeans_step(points, centroids):
+    """One Lloyd step on top of the distance kernel.
+
+    Returns (labels, counts, sums, inertia), all float32:
+      labels  (n,)   nearest-centroid index per point
+      counts  (k,)   points per centroid
+      sums    (k,d)  coordinate sums per centroid (centroid = sums/counts,
+                     computed on the Rust side where empty-cluster policy
+                     lives)
+      inertia ()     total squared distance
+    """
+    d2 = pairwise_dists(points, centroids)
+    labels = jnp.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    one_hot = (labels[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    # Accumulate centroid sums on the MXU via the block-matmul kernel
+    # (padding k up to the tile size; points rows already tile-aligned via
+    # pairwise_dists' contract is NOT guaranteed here, so pad both).
+    oh_t, k_real = _pad_rows(one_hot.T, min(k, matmul_block.DEFAULT_TILE))
+    pts, _ = _pad_rows(points, 1)  # no-op; keeps shapes explicit
+    # Inner dim n must divide the tk tile; pad it too.
+    tk = min(pts.shape[0], matmul_block.DEFAULT_TILE)
+    rem = (-pts.shape[0]) % tk
+    if rem:
+        oh_t = jnp.pad(oh_t, ((0, 0), (0, rem)))
+        pts = jnp.pad(pts, ((0, rem), (0, 0)))
+    d = pts.shape[1]
+    tj = min(d, matmul_block.DEFAULT_TILE)
+    rem_d = (-d) % tj
+    if rem_d:
+        pts = jnp.pad(pts, ((0, 0), (0, rem_d)))
+    sums = matmul_block.matmul(oh_t, pts, ti=min(oh_t.shape[0], 128), tj=tj, tk=tk)
+    sums = sums[:k_real, :points.shape[1]]
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return labels.astype(jnp.float32), counts, sums, inertia
+
+
+def matmul(a, b):
+    """(n,k) x (k,m) -> (n,m) via the Pallas block kernel (padding-safe)."""
+    n, kk = a.shape
+    _, m = b.shape
+    ti = min(n, matmul_block.DEFAULT_TILE)
+    tj = min(m, matmul_block.DEFAULT_TILE)
+    tk = min(kk, matmul_block.DEFAULT_TILE)
+    pad_n = (-n) % ti
+    pad_m = (-m) % tj
+    pad_k = (-kk) % tk
+    if pad_n or pad_k:
+        a = jnp.pad(a, ((0, pad_n), (0, pad_k)))
+    if pad_k or pad_m:
+        b = jnp.pad(b, ((0, pad_k), (0, pad_m)))
+    out = matmul_block.matmul(a, b, ti=ti, tj=tj, tk=tk)
+    return out[:n, :m]
+
+
+# Tuple-returning wrappers for AOT lowering (PJRT side unwraps tuples).
+def kmeans_step_tuple(points, centroids):
+    return kmeans_step(points, centroids)
+
+
+def matmul_tuple(a, b):
+    return (matmul(a, b),)
+
+
+def pairwise_dists_tuple(points, centroids):
+    return (pairwise_dists(points, centroids),)

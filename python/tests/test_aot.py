@@ -1,0 +1,70 @@
+"""AOT path: lowering emits parseable HLO text with a tuple root."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_text_structure():
+    hlo = aot.to_hlo_text(model.matmul_tuple, aot.f32(16, 16), aot.f32(16, 16))
+    assert "HloModule" in hlo
+    assert "ENTRY" in hlo
+    assert "f32[16,16]" in hlo
+    # Tuple root: the entry computation returns a tuple type.
+    assert "ROOT tuple" in hlo
+
+
+def test_kmeans_step_hlo_has_four_outputs():
+    hlo = aot.to_hlo_text(model.kmeans_step_tuple, aot.f32(64, 4), aot.f32(8, 4))
+    assert "HloModule" in hlo
+    # Root tuple of four f32 results: labels(64), counts(8), sums(8,4), inertia().
+    assert "f32[64]" in hlo and "f32[8]" in hlo and "f32[8,4]" in hlo
+
+
+def test_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    repo_python = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = repo_python
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--kmeans-n",
+            "32",
+            "--kmeans-d",
+            "4",
+            "--kmeans-k",
+            "8",
+            "--matmul-n",
+            "16",
+            "--matmul-k",
+            "16",
+            "--matmul-m",
+            "16",
+        ],
+        check=True,
+        cwd=repo_python,
+        env=env,
+    )
+    names = sorted(p.name for p in out.iterdir())
+    assert "manifest.txt" in names
+    assert "kmeans_step.hlo.txt" in names
+    assert "matmul.hlo.txt" in names
+    assert "pairwise_dists.hlo.txt" in names
+    manifest = (out / "manifest.txt").read_text()
+    for line in manifest.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        name, fname, _comment = line.split("\t", 2)
+        assert (out / fname).exists(), f"{name} file missing"

@@ -1,0 +1,76 @@
+"""L2 model correctness: padded-odd shapes, Lloyd-step semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, -3.0, 3.0)
+
+
+class TestPairwiseDists:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 50), k=st.integers(1, 20), d=st.integers(1, 10), seed=st.integers(0, 999))
+    def test_odd_shapes_match_ref(self, n, k, d, seed):
+        x = rand(seed, n, d)
+        c = rand(seed + 1, k, d)
+        got = model.pairwise_dists(x, c)
+        np.testing.assert_allclose(got, ref.pairwise_sq_dists(x, c), rtol=1e-4, atol=1e-4)
+
+
+class TestMatmulModel:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(1, 40), k=st.integers(1, 40), m=st.integers(1, 40), seed=st.integers(0, 999))
+    def test_odd_shapes_match_ref(self, n, k, m, seed):
+        a = rand(seed, n, k)
+        b = rand(seed + 1, k, m)
+        got = model.matmul(a, b)
+        np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-3, atol=1e-3)
+
+
+class TestKmeansStep:
+    def _check(self, n, d, k, seed):
+        pts = rand(seed, n, d)
+        cents = rand(seed + 1, k, d)
+        labels, counts, sums, inertia = model.kmeans_step(pts, cents)
+        rl, rc, rs, ri = ref.kmeans_step(pts, cents)
+        np.testing.assert_array_equal(labels, rl)
+        np.testing.assert_allclose(counts, rc)
+        np.testing.assert_allclose(sums, rs, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(inertia, ri, rtol=1e-4)
+        # Invariants.
+        assert labels.shape == (n,)
+        assert counts.shape == (k,)
+        assert sums.shape == (k, d)
+        assert float(jnp.sum(counts)) == n
+        assert float(inertia) >= 0.0
+
+    def test_tile_aligned(self):
+        self._check(128, 16, 128, 3)
+
+    def test_odd_shapes(self):
+        self._check(100, 7, 13, 5)
+        self._check(33, 3, 5, 7)
+        self._check(5, 2, 3, 11)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(2, 60), d=st.integers(1, 8), k=st.integers(1, 10), seed=st.integers(0, 999))
+    def test_hypothesis_sweep(self, n, d, k, seed):
+        self._check(n, d, k, seed)
+
+    def test_centroid_update_reduces_inertia(self):
+        # Lloyd's guarantee, through the model path.
+        pts = rand(42, 200, 4)
+        cents = rand(43, 8, 4)
+        _, counts, sums, inertia0 = model.kmeans_step(pts, cents)
+        counts = jnp.maximum(counts, 1.0)
+        new_cents = sums / counts[:, None]
+        _, _, _, inertia1 = model.kmeans_step(pts, new_cents)
+        assert float(inertia1) <= float(inertia0) + 1e-3

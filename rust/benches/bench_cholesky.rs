@@ -1,0 +1,96 @@
+//! §7 Cholesky bench: trailing-update traversal order (canonic vs
+//! FGF-Hilbert) across matrix and block sizes.
+
+use sfc_mine::apps::cholesky::{cholesky_blocked, random_spd, TrailingOrder};
+use sfc_mine::cachesim::{LruCache, MemSink};
+use sfc_mine::curves::fgf::{fgf_hilbert_loop, Intersect, LowerTriangleIncl, MinBounds, Rect};
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+/// Replay the trailing-update block-access trace through an LRU cache:
+/// block (ib, jb) at step kb touches A-blocks (ib,jb), (ib,kb), (jb,kb).
+/// This is the paper's own metric (misses, Fig 1e) at block granularity,
+/// independent of this container's prefetcher.
+fn simulated_misses(nb: u32, block_bytes: u32, cache_blocks: u64, order: TrailingOrder) -> u64 {
+    let mut cache = LruCache::with_bytes(cache_blocks * block_bytes as u64, block_bytes);
+    let mut touch = |bi: u32, bj: u32| {
+        cache.touch((bi as u64 * nb as u64 + bj as u64) * block_bytes as u64, block_bytes);
+    };
+    for kb in 0..nb {
+        let mut visit = |ib: u32, jb: u32| {
+            touch(ib, jb);
+            touch(ib, kb);
+            touch(jb, kb);
+        };
+        match order {
+            TrailingOrder::Canonic => {
+                for ib in kb + 1..nb {
+                    for jb in kb + 1..=ib {
+                        visit(ib, jb);
+                    }
+                }
+            }
+            TrailingOrder::Hilbert => {
+                let level = nb.next_power_of_two().trailing_zeros();
+                let region = Intersect(
+                    Intersect(LowerTriangleIncl, MinBounds { i_min: kb + 1, j_min: kb + 1 }),
+                    Rect { n: nb, m: nb },
+                );
+                fgf_hilbert_loop(level, &region, |ib, jb, _| visit(ib, jb));
+            }
+        }
+    }
+    cache.stats.misses
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let sizes: Vec<usize> = if fast { vec![128] } else { vec![256, 512, 1024] };
+    let mut bench = Bench::new();
+    let mut table = Table::new(vec!["n", "block", "order", "median", "GFLOP/s"]);
+
+    for &n in &sizes {
+        let a = random_spd(n, 7);
+        let fl = (n as f64).powi(3) / 3.0; // ~n³/3 FLOPs
+        for t in [16usize, 32, 64] {
+            for (name, order) in [
+                ("canonic", TrailingOrder::Canonic),
+                ("hilbert", TrailingOrder::Hilbert),
+            ] {
+                let m = bench.run(&format!("cholesky/{name}/{n}/t{t}"), || {
+                    let mut l = a.clone();
+                    cholesky_blocked(&mut l, t, order).unwrap();
+                    l
+                });
+                table.row(vec![
+                    n.to_string(),
+                    t.to_string(),
+                    name.to_string(),
+                    sfc_mine::util::bench::fmt_dur(m.median),
+                    format!("{:.2}", fl / m.median.as_secs_f64() / 1e9),
+                ]);
+            }
+        }
+    }
+    println!("\n== §7 Cholesky (blocked right-looking) ==");
+    print!("{}", table.render());
+
+    // Simulated block-trace misses (the paper's metric; see fn docs).
+    let nb = 64u32; // 64×64 blocks of 32×32 f32 = a 2048² matrix
+    let block_bytes = 32 * 32 * 4u32;
+    let mut miss_table = Table::new(vec!["LRU capacity (blocks)", "canonic", "hilbert", "ratio"]);
+    for cache_blocks in [32u64, 64, 128, 256] {
+        let mc = simulated_misses(nb, block_bytes, cache_blocks, TrailingOrder::Canonic);
+        let mh = simulated_misses(nb, block_bytes, cache_blocks, TrailingOrder::Hilbert);
+        miss_table.row(vec![
+            cache_blocks.to_string(),
+            mc.to_string(),
+            mh.to_string(),
+            format!("{:.2}x", mc as f64 / mh as f64),
+        ]);
+    }
+    println!("\n== simulated LRU block misses (2048² matrix as 64² blocks) ==");
+    print!("{}", miss_table.render());
+    miss_table.write_csv("reports/cholesky_sim_misses.csv").unwrap();
+    bench.write_csv("reports/bench_cholesky.csv").unwrap();
+}

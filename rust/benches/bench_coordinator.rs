@@ -1,0 +1,84 @@
+//! Coordinator bench: thread scaling and chunk-size ablation of the
+//! Hilbert-segment scheduler (the §7 MIMD claim), plus load-imbalance
+//! reporting.
+
+use sfc_mine::coordinator::metrics::RunMetrics;
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+/// A small per-cell workload with spatial variation (so balance matters).
+#[inline(always)]
+fn cell_work(i: u32, j: u32) -> u64 {
+    let mut acc = (i as u64) << 32 | j as u64;
+    // ~50 cheap ops; heavier in one quadrant to stress the scheduler.
+    let rounds = if i > j { 80 } else { 30 };
+    for _ in 0..rounds {
+        acc = acc.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17);
+    }
+    acc
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let level: u32 = if fast { 8 } else { 10 };
+    let cells = 1u64 << (2 * level);
+    let mut bench = Bench::new();
+
+    // --- Thread scaling -----------------------------------------------------
+    let mut scaling = Table::new(vec!["threads", "median", "Mcell/s", "imbalance"]);
+    let mut base = None;
+    for threads in [1usize, 2, 4, 8] {
+        let coord = Coordinator::new(threads);
+        let mut last_imbalance = 1.0;
+        let m = bench.throughput(&format!("coordinator/scaling/t{threads}"), cells, || {
+            let (acc, metrics) = coord.par_hilbert_fold(
+                level,
+                || 0u64,
+                |s, i, j| *s = s.wrapping_add(cell_work(i, j)),
+                |a, b| a.wrapping_add(b),
+            );
+            last_imbalance = RunMetrics::aggregate(&metrics).imbalance;
+            acc
+        });
+        if base.is_none() {
+            base = Some(m.median);
+        }
+        scaling.row(vec![
+            threads.to_string(),
+            sfc_mine::util::bench::fmt_dur(m.median),
+            format!("{:.1}", m.throughput().unwrap() / 1e6),
+            format!("{last_imbalance:.2}"),
+        ]);
+    }
+    println!("\n== coordinator thread scaling (2^{level} grid) ==");
+    print!("{}", scaling.render());
+    println!("(this container has {} core(s); scaling saturates there)",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+
+    // --- Chunk-size ablation -------------------------------------------------
+    let mut ablation = Table::new(vec!["chunk", "median", "imbalance"]);
+    for chunk in [256u64, 1024, 4096, 16384, 65536] {
+        let mut coord = Coordinator::new(4);
+        coord.chunk = chunk;
+        let mut last_imbalance = 1.0;
+        let m = bench.throughput(&format!("coordinator/chunk/{chunk}"), cells, || {
+            let (acc, metrics) = coord.par_hilbert_fold(
+                level,
+                || 0u64,
+                |s, i, j| *s = s.wrapping_add(cell_work(i, j)),
+                |a, b| a.wrapping_add(b),
+            );
+            last_imbalance = RunMetrics::aggregate(&metrics).imbalance;
+            acc
+        });
+        ablation.row(vec![
+            chunk.to_string(),
+            sfc_mine::util::bench::fmt_dur(m.median),
+            format!("{last_imbalance:.2}"),
+        ]);
+    }
+    println!("\n== chunk-size ablation (4 workers, skewed workload) ==");
+    print!("{}", ablation.render());
+    bench.write_csv("reports/bench_coordinator.csv").unwrap();
+}

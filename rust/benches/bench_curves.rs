@@ -1,0 +1,93 @@
+//! Figure 5 / §5 bench: Hilbert generation strategies, time per cell.
+//!
+//! Series (per grid size n):
+//!   mealy_per_iter — ℋ⁻¹(h) every iteration (O(log h)/cell, the baseline
+//!                    the paper calls "prohibitive")
+//!   lindenmayer    — recursive CFG (§4, amortised O(1), O(log n) stack)
+//!   nonrecursive   — Figure-5 loop (§5, O(1) time and space)
+//!   fur_overlay    — overlay grid + nano-programs (§6.1/§6.3)
+//!   zorder         — bit-interleave coords per iteration (for context)
+//!
+//! Expected shape: nonrecursive ≥ lindenmayer >> mealy_per_iter, with the
+//! gap growing ~log n; fur_overlay within a small factor of nonrecursive.
+
+use sfc_mine::curves::fur::FurHilbert;
+use sfc_mine::curves::hilbert::Hilbert;
+use sfc_mine::curves::lindenmayer::hilbert_loop;
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::curves::zorder::ZOrder;
+use sfc_mine::curves::SpaceFillingCurve;
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+fn main() {
+    let mut bench = Bench::new();
+    let sizes: Vec<u32> = if std::env::var("SFC_BENCH_FAST").is_ok() {
+        vec![64, 256]
+    } else {
+        vec![64, 256, 1024, 4096]
+    };
+    let mut table = Table::new(vec![
+        "n",
+        "mealy ns/cell",
+        "lindenmayer",
+        "nonrecursive",
+        "fur_overlay",
+        "zorder",
+        "speedup mealy/nonrec",
+    ]);
+    for &n in &sizes {
+        let cells = (n as u64) * (n as u64);
+        let level = n.trailing_zeros();
+
+        let m_mealy = bench.throughput(&format!("curves/mealy_per_iter/{n}"), cells, || {
+            let mut acc = 0u64;
+            for h in 0..cells {
+                let (i, j) = Hilbert::coords_at_level(h, level);
+                acc = acc.wrapping_add((i ^ j) as u64);
+            }
+            acc
+        });
+        let m_lind = bench.throughput(&format!("curves/lindenmayer/{n}"), cells, || {
+            let mut acc = 0u64;
+            hilbert_loop(level, |i, j| acc = acc.wrapping_add((i ^ j) as u64));
+            acc
+        });
+        let m_nonrec = bench.throughput(&format!("curves/nonrecursive/{n}"), cells, || {
+            let mut acc = 0u64;
+            for (i, j) in HilbertIter::new(n) {
+                acc = acc.wrapping_add((i ^ j) as u64);
+            }
+            acc
+        });
+        let m_fur = bench.throughput(&format!("curves/fur_overlay/{n}"), cells, || {
+            let mut acc = 0u64;
+            FurHilbert::new(n, n).for_each(|i, j| acc = acc.wrapping_add((i ^ j) as u64));
+            acc
+        });
+        let m_z = bench.throughput(&format!("curves/zorder/{n}"), cells, || {
+            let mut acc = 0u64;
+            for h in 0..cells {
+                let (i, j) = ZOrder::coords(h);
+                acc = acc.wrapping_add((i ^ j) as u64);
+            }
+            acc
+        });
+
+        let per_cell =
+            |m: &sfc_mine::util::bench::Measurement| m.median.as_nanos() as f64 / cells as f64;
+        table.row(vec![
+            n.to_string(),
+            format!("{:.2}", per_cell(&m_mealy)),
+            format!("{:.2}", per_cell(&m_lind)),
+            format!("{:.2}", per_cell(&m_nonrec)),
+            format!("{:.2}", per_cell(&m_fur)),
+            format!("{:.2}", per_cell(&m_z)),
+            format!("{:.1}x", per_cell(&m_mealy) / per_cell(&m_nonrec)),
+        ]);
+    }
+    println!("\n== Figure 5 / §5: Hilbert generation, ns per cell ==");
+    print!("{}", table.render());
+    bench.write_csv("reports/bench_curves.csv").unwrap();
+    table.write_csv("reports/fig5_generators.csv").unwrap();
+}

@@ -1,0 +1,73 @@
+//! Figure 1(e) bench: simulated LRU misses over varying cache size for the
+//! nested-loop (canonic), Z-order and Hilbert traversals of a pair loop.
+//!
+//! Also times the simulation itself (the substrate's own throughput).
+//! Writes `reports/fig1e.csv` with the full sweep.
+
+use sfc_mine::apps::pairloop::{cold_misses, fig1e_sweep, misses_for, PairLoopConfig};
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n: u32 = if fast { 64 } else { 256 };
+    let cfg = PairLoopConfig { n, m: n, object_bytes: 256 };
+    println!(
+        "pair loop {n}x{n}, 256-byte objects, working set {} KiB",
+        cfg.working_set() / 1024
+    );
+
+    let orders: Vec<(CurveKind, Vec<(u32, u32)>)> = vec![
+        (CurveKind::Canonic, CurveKind::Canonic.enumerate(n)),
+        (CurveKind::ZOrder, CurveKind::ZOrder.enumerate(n)),
+        (CurveKind::Hilbert, HilbertIter::new(n).collect()),
+    ];
+
+    // Full sweep for the figure.
+    let fractions: Vec<f64> = (1..=50).map(|p| p as f64 / 100.0).collect();
+    let rows = fig1e_sweep(&cfg, &orders, &fractions, 64);
+    let mut csv = Table::new(vec!["cache_frac", "cache_bytes", "canonic", "zorder", "hilbert"]);
+    for r in &rows {
+        csv.row(vec![
+            format!("{:.2}", r.cache_fraction),
+            r.cache_bytes.to_string(),
+            r.misses[0].to_string(),
+            r.misses[1].to_string(),
+            r.misses[2].to_string(),
+        ]);
+    }
+    csv.write_csv("reports/fig1e.csv").unwrap();
+
+    // Headline table (the paper's 5–20% band).
+    let cold = cold_misses(&cfg, 64);
+    let mut t = Table::new(vec![
+        "cache %", "canonic", "zorder", "hilbert", "canonic/hilbert", "hilbert/cold",
+    ]);
+    for r in rows.iter().filter(|r| {
+        [0.05, 0.10, 0.20, 0.30, 0.50]
+            .iter()
+            .any(|f| (r.cache_fraction - f).abs() < 1e-9)
+    }) {
+        t.row(vec![
+            format!("{:.0}%", r.cache_fraction * 100.0),
+            r.misses[0].to_string(),
+            r.misses[1].to_string(),
+            r.misses[2].to_string(),
+            format!("{:.1}x", r.misses[0] as f64 / r.misses[2] as f64),
+            format!("{:.1}x", r.misses[2] as f64 / cold as f64),
+        ]);
+    }
+    println!("\n== Figure 1(e): LRU misses vs cache size ==");
+    print!("{}", t.render());
+    println!("(cold-miss floor: {cold})");
+
+    // Simulator throughput (substrate self-check).
+    let mut bench = Bench::new();
+    let hilb = &orders[2].1;
+    bench.throughput("fig1/simulate_hilbert_10pct", 2 * hilb.len() as u64, || {
+        misses_for(&cfg, hilb, cfg.working_set() / 10, 64)
+    });
+    bench.write_csv("reports/bench_fig1.csv").unwrap();
+}

@@ -1,0 +1,88 @@
+//! §7 Floyd–Warshall bench: canonic vs tiled vs Hilbert-blocked inner
+//! traversal.
+
+use sfc_mine::apps::floyd::{
+    floyd_canonic, floyd_hilbert_blocked, floyd_tiled, random_graph,
+};
+use sfc_mine::cachesim::{LruCache, MemSink};
+use sfc_mine::curves::fur::general_hilbert_loop;
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+/// Replay the FW block-access trace through an LRU cache: block (bi, bj)
+/// at pivot k touches d-blocks (bi,bj), (bi,bk), (bk,bj) — the paper's
+/// miss metric at block granularity.
+fn simulated_misses(nb: u32, block_bytes: u32, cache_blocks: u64, hilbert: bool) -> u64 {
+    let mut cache = LruCache::with_bytes(cache_blocks * block_bytes as u64, block_bytes);
+    for bk in 0..nb {
+        let mut visit = |bi: u32, bj: u32| {
+            for (i, j) in [(bi, bj), (bi, bk), (bk, bj)] {
+                cache.touch((i as u64 * nb as u64 + j as u64) * block_bytes as u64, block_bytes);
+            }
+        };
+        if hilbert {
+            general_hilbert_loop(nb, nb, |bi, bj| visit(bi, bj));
+        } else {
+            for bi in 0..nb {
+                for bj in 0..nb {
+                    visit(bi, bj);
+                }
+            }
+        }
+    }
+    cache.stats.misses
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let sizes: Vec<usize> = if fast { vec![96] } else { vec![256, 512] };
+    let tile = 32usize;
+    let mut bench = Bench::new();
+    let mut table = Table::new(vec!["|V|", "variant", "median", "GUPS"]);
+
+    for &n in &sizes {
+        let g = random_graph(n, 0.05, 11);
+        let updates = (n as f64).powi(3);
+        let mut run = |name: &str, f: &dyn Fn() -> ()| {
+            let m = bench.run(&format!("floyd/{name}/{n}"), f);
+            table.row(vec![
+                n.to_string(),
+                name.to_string(),
+                sfc_mine::util::bench::fmt_dur(m.median),
+                format!("{:.3}", updates / m.median.as_secs_f64() / 1e9),
+            ]);
+        };
+        run("canonic", &|| {
+            let mut d = g.clone();
+            floyd_canonic(&mut d);
+        });
+        run("tiled", &|| {
+            let mut d = g.clone();
+            floyd_tiled(&mut d, tile);
+        });
+        run("hilbert_blocked", &|| {
+            let mut d = g.clone();
+            floyd_hilbert_blocked(&mut d, tile);
+        });
+    }
+    println!("\n== §7 Floyd–Warshall ==");
+    print!("{}", table.render());
+
+    let nb = 64u32;
+    let block_bytes = 32 * 32 * 4u32;
+    let mut miss_table = Table::new(vec!["LRU capacity (blocks)", "canonic", "hilbert", "ratio"]);
+    for cache_blocks in [32u64, 64, 128, 256] {
+        let mc = simulated_misses(nb, block_bytes, cache_blocks, false);
+        let mh = simulated_misses(nb, block_bytes, cache_blocks, true);
+        miss_table.row(vec![
+            cache_blocks.to_string(),
+            mc.to_string(),
+            mh.to_string(),
+            format!("{:.2}x", mc as f64 / mh as f64),
+        ]);
+    }
+    println!("\n== simulated LRU block misses (2048² dist matrix as 64² blocks) ==");
+    print!("{}", miss_table.render());
+    miss_table.write_csv("reports/floyd_sim_misses.csv").unwrap();
+    bench.write_csv("reports/bench_floyd.csv").unwrap();
+}

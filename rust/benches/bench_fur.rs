@@ -1,0 +1,117 @@
+//! §6 bench: non-square grids — the overhead of round-up-to-N×N vs the
+//! FUR overlay grid vs the FGF rectangle region, across skew ratios;
+//! plus the i<j triangle (FGF jump-over vs per-pair skipping).
+
+use sfc_mine::curves::fgf::{fgf_hilbert_loop, PredicateRegion, Rect, UpperTriangle};
+use sfc_mine::curves::fur::FurHilbert;
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let base: u32 = if fast { 512 } else { 4096 };
+    let mut bench = Bench::new();
+
+    // --- Overhead: generated pairs per useful pair -------------------------
+    let mut overhead = Table::new(vec![
+        "grid", "useful", "roundup generated", "roundup overhead", "fur generated",
+        "fgf visited+skipchecks",
+    ]);
+    for &(n, m) in &[(base, base), (base, base / 3), (base, base / 16), (base / 64, base)] {
+        let useful = (n as u64) * (m as u64);
+        let np2 = n.max(m).next_power_of_two();
+        let generated = (np2 as u64) * (np2 as u64);
+        let (mut vis, mut cls) = (0u64, 0u64);
+        let stats = fgf_hilbert_loop(np2.trailing_zeros(), &Rect { n, m }, |_, _, _| {});
+        vis += stats.visited;
+        cls += stats.classifications;
+        overhead.row(vec![
+            format!("{n}x{m}"),
+            useful.to_string(),
+            generated.to_string(),
+            format!("{:.2}x", generated as f64 / useful as f64),
+            useful.to_string(), // FUR generates exactly n·m
+            format!("{vis}+{cls}"),
+        ]);
+    }
+    println!("\n== §6: non-square overhead (pairs generated / useful) ==");
+    print!("{}", overhead.render());
+
+    // --- Throughput: time per useful pair ----------------------------------
+    let mut tput = Table::new(vec!["grid", "roundup+filter ns", "fur ns", "fgf ns"]);
+    for &(n, m) in &[(base, base / 3), (base, base / 16)] {
+        let useful = (n as u64) * (m as u64);
+        let np2 = n.max(m).next_power_of_two();
+        let m_round = bench.throughput(&format!("fur/roundup/{n}x{m}"), useful, || {
+            let mut acc = 0u64;
+            for (i, j) in HilbertIter::new(np2) {
+                if i < n && j < m {
+                    acc = acc.wrapping_add((i ^ j) as u64);
+                }
+            }
+            acc
+        });
+        let m_fur = bench.throughput(&format!("fur/overlay/{n}x{m}"), useful, || {
+            let mut acc = 0u64;
+            FurHilbert::new(n, m).for_each(|i, j| acc = acc.wrapping_add((i ^ j) as u64));
+            acc
+        });
+        let m_fgf = bench.throughput(&format!("fur/fgf_rect/{n}x{m}"), useful, || {
+            let mut acc = 0u64;
+            fgf_hilbert_loop(np2.trailing_zeros(), &Rect { n, m }, |i, j, _| {
+                acc = acc.wrapping_add((i ^ j) as u64);
+            });
+            acc
+        });
+        let per = |mm: &sfc_mine::util::bench::Measurement| {
+            mm.median.as_nanos() as f64 / useful as f64
+        };
+        tput.row(vec![
+            format!("{n}x{m}"),
+            format!("{:.2}", per(&m_round)),
+            format!("{:.2}", per(&m_fur)),
+            format!("{:.2}", per(&m_fgf)),
+        ]);
+    }
+    println!("\n== §6: ns per useful pair ==");
+    print!("{}", tput.render());
+
+    // --- Triangle: jump-over vs per-pair predicate -------------------------
+    let level = if fast { 9 } else { 11 };
+    let useful = {
+        let n = 1u64 << level;
+        n * (n - 1) / 2
+    };
+    let mut tri = Table::new(vec!["method", "ns/pair", "classifications"]);
+    let m_jump = bench.throughput(&format!("fur/triangle_jumpover/L{level}"), useful, || {
+        let mut acc = 0u64;
+        fgf_hilbert_loop(level, &UpperTriangle, |i, j, _| {
+            acc = acc.wrapping_add((i ^ j) as u64);
+        });
+        acc
+    });
+    let s_jump = fgf_hilbert_loop(level, &UpperTriangle, |_, _, _| {});
+    let pred = PredicateRegion(|i, j| i < j);
+    let m_pred = bench.throughput(&format!("fur/triangle_percell/L{level}"), useful, || {
+        let mut acc = 0u64;
+        fgf_hilbert_loop(level, &pred, |i, j, _| {
+            acc = acc.wrapping_add((i ^ j) as u64);
+        });
+        acc
+    });
+    let s_pred = fgf_hilbert_loop(level, &pred, |_, _, _| {});
+    tri.row(vec![
+        "fgf jump-over".into(),
+        format!("{:.2}", m_jump.median.as_nanos() as f64 / useful as f64),
+        s_jump.classifications.to_string(),
+    ]);
+    tri.row(vec![
+        "per-pair skip".into(),
+        format!("{:.2}", m_pred.median.as_nanos() as f64 / useful as f64),
+        s_pred.classifications.to_string(),
+    ]);
+    println!("\n== §6.2: i<j triangle, 2^{level} grid ==");
+    print!("{}", tri.render());
+    bench.write_csv("reports/bench_fur.csv").unwrap();
+}

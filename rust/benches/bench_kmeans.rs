@@ -1,0 +1,137 @@
+//! §7 k-Means bench: assignment strategies (naive / blocked / Hilbert),
+//! thread scaling through the coordinator, and — when artifacts are
+//! present — the PJRT-offloaded kernel path.
+
+use sfc_mine::apps::kmeans::{
+    assign_blocked, assign_hilbert, assign_naive, init_centroids, make_blobs, KMeans,
+};
+use sfc_mine::apps::Matrix;
+use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
+use sfc_mine::runtime::engine::TensorF32;
+use sfc_mine::runtime::{artifact, Engine};
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n: usize = if fast { 8_192 } else { 100_000 };
+    let d = 16usize;
+    let ks: Vec<usize> = if fast { vec![64] } else { vec![64, 256] };
+    let mut bench = Bench::new();
+    let mut table = Table::new(vec!["k", "variant", "median", "Mpoint·cent/s"]);
+
+    for &k in &ks {
+        let (points, _) = make_blobs(n, k, d, 0.6, 42);
+        let centroids = init_centroids(&points, k, 7);
+        let km = KMeans { points, centroids };
+        let work = (n as u64) * (k as u64);
+        let mut run = |name: &str, f: &dyn Fn() -> u64| {
+            let m = bench.throughput(&format!("kmeans/{name}/k{k}"), work, f);
+            table.row(vec![
+                k.to_string(),
+                name.to_string(),
+                sfc_mine::util::bench::fmt_dur(m.median),
+                format!("{:.1}", m.throughput().unwrap() / 1e6),
+            ]);
+        };
+        run("naive", &|| assign_naive(&km).labels[0] as u64);
+        run("blocked(256,16)", &|| assign_blocked(&km, 256, 16).labels[0] as u64);
+        run("hilbert(256,16)", &|| assign_hilbert(&km, 256, 16).labels[0] as u64);
+        // Thread scaling (MIMD, §7).
+        for threads in [1usize, 2, 4] {
+            let coord = Coordinator::new(threads);
+            run(&format!("par_hilbert/t{threads}"), &|| {
+                par_kmeans_step(&coord, &km, 256, 16).0.labels[0] as u64
+            });
+        }
+    }
+
+    // Large-centroid regime: k·d·4 B = 512 KiB exceeds L2, so the
+    // assignment pair loop actually thrashes — the Fig-1 premise. This is
+    // where the blocked/Hilbert variants win on wallclock, not only on
+    // simulated misses.
+    if !fast {
+        let (n2, d2, k2) = (10_000usize, 64usize, 2048usize);
+        let (points, _) = make_blobs(n2, 64, d2, 0.6, 9);
+        let centroids = Matrix::random(k2, d2, 10, -10.0, 10.0);
+        let km = KMeans { points, centroids };
+        let work = (n2 as u64) * (k2 as u64);
+        for (name, f) in [
+            ("naive", Box::new(|| assign_naive(&km).labels[0] as u64)
+                as Box<dyn Fn() -> u64>),
+            ("blocked(256,64)", Box::new(|| assign_blocked(&km, 256, 64).labels[0] as u64)),
+            ("hilbert(256,64)", Box::new(|| assign_hilbert(&km, 256, 64).labels[0] as u64)),
+        ] {
+            let m = bench.throughput(&format!("kmeans_big/{name}"), work, || f());
+            table.row(vec![
+                format!("{k2} (d={d2})"),
+                name.to_string(),
+                sfc_mine::util::bench::fmt_dur(m.median),
+                format!("{:.1}", m.throughput().unwrap() / 1e6),
+            ]);
+        }
+    }
+
+    // PJRT path (static shapes from the artifact: 4096×16, k=64).
+    if let Ok(manifest) = sfc_mine::runtime::Manifest::load(artifact::default_dir()) {
+        if manifest.get("kmeans_step").is_some() {
+            let mut engine = Engine::cpu().unwrap();
+            engine.load_manifest_dir(artifact::default_dir()).unwrap();
+            let (bn, bd, bk) = (4096usize, 16usize, 64usize);
+            let (points, _) = make_blobs(bn, bk, bd, 0.6, 1);
+            let centroids = init_centroids(&points, bk, 2);
+            let pts = TensorF32::new(vec![bn, bd], points.data.clone()).unwrap();
+            let cents = TensorF32::new(vec![bk, bd], centroids.data.clone()).unwrap();
+            let work = (bn as u64) * (bk as u64);
+            let m = bench.throughput("kmeans/pjrt_kernel/k64", work, || {
+                engine
+                    .execute("kmeans_step", &[pts.clone(), cents.clone()])
+                    .unwrap()[3]
+                    .data[0]
+            });
+            table.row(vec![
+                "64".into(),
+                format!("pjrt_kernel (batch {bn})"),
+                sfc_mine::util::bench::fmt_dur(m.median),
+                format!("{:.1}", m.throughput().unwrap() / 1e6),
+            ]);
+            // Device-resident inputs (§Perf): loop-invariant points
+            // uploaded once, only centroids move per call.
+            let dev_pts = engine.to_device(&pts).unwrap();
+            let dev_cents = engine.to_device(&cents).unwrap();
+            let m = bench.throughput("kmeans/pjrt_kernel_buffers/k64", work, || {
+                engine
+                    .execute_buffers("kmeans_step", &[&dev_pts, &dev_cents])
+                    .unwrap()[3]
+                    .data[0]
+            });
+            table.row(vec![
+                "64".into(),
+                format!("pjrt_kernel dev-resident (batch {bn})"),
+                sfc_mine::util::bench::fmt_dur(m.median),
+                format!("{:.1}", m.throughput().unwrap() / 1e6),
+            ]);
+            // Pure-jnp lowering (CPU-PJRT fast path; see aot.py).
+            if engine.loaded().contains(&"kmeans_step_ref") {
+                let m = bench.throughput("kmeans/pjrt_kernel_ref/k64", work, || {
+                    engine
+                        .execute_buffers("kmeans_step_ref", &[&dev_pts, &dev_cents])
+                        .unwrap()[3]
+                        .data[0]
+                });
+                table.row(vec![
+                    "64".into(),
+                    format!("pjrt_kernel jnp-lowered (batch {bn})"),
+                    sfc_mine::util::bench::fmt_dur(m.median),
+                    format!("{:.1}", m.throughput().unwrap() / 1e6),
+                ]);
+            }
+        }
+    } else {
+        eprintln!("(skipping PJRT series: run `make artifacts`)");
+    }
+
+    println!("\n== §7 k-means assignment (n={n}, d={d}) ==");
+    print!("{}", table.render());
+    bench.write_csv("reports/bench_kmeans.csv").unwrap();
+}

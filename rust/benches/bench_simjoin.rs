@@ -1,0 +1,58 @@
+//! §7 similarity-join bench: brute force vs grid-nested vs FGF-Hilbert
+//! over an ε sweep on clustered data.
+
+use sfc_mine::apps::simjoin::{
+    join_bruteforce, join_fgf_hilbert, join_grid_nested, make_clustered,
+};
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::table::Table;
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n: usize = if fast { 4_000 } else { 30_000 };
+    let d = 8usize;
+    let points = make_clustered(n, d, 40, 0.8, 7);
+    let mut bench = Bench::new();
+    let mut table = Table::new(vec!["eps", "variant", "median", "comparisons", "results"]);
+
+    for eps in [0.5f32, 1.0, 2.0] {
+        if n <= 8_000 {
+            let m = bench.run(&format!("simjoin/brute/eps{eps}"), || {
+                join_bruteforce(&points, eps).1.results
+            });
+            let (_, s) = join_bruteforce(&points, eps);
+            table.row(vec![
+                eps.to_string(),
+                "brute".into(),
+                sfc_mine::util::bench::fmt_dur(m.median),
+                s.comparisons.to_string(),
+                s.results.to_string(),
+            ]);
+        }
+        let m = bench.run(&format!("simjoin/grid/eps{eps}"), || {
+            join_grid_nested(&points, eps).1.results
+        });
+        let (_, s) = join_grid_nested(&points, eps);
+        table.row(vec![
+            eps.to_string(),
+            "grid_nested".into(),
+            sfc_mine::util::bench::fmt_dur(m.median),
+            s.comparisons.to_string(),
+            s.results.to_string(),
+        ]);
+        let m = bench.run(&format!("simjoin/fgf/eps{eps}"), || {
+            join_fgf_hilbert(&points, eps).1.results
+        });
+        let (_, s) = join_fgf_hilbert(&points, eps);
+        table.row(vec![
+            eps.to_string(),
+            "fgf_hilbert".into(),
+            sfc_mine::util::bench::fmt_dur(m.median),
+            s.comparisons.to_string(),
+            s.results.to_string(),
+        ]);
+    }
+    println!("\n== §7 similarity join (n={n}, d={d}, clustered) ==");
+    print!("{}", table.render());
+    bench.write_csv("reports/bench_simjoin.csv").unwrap();
+}

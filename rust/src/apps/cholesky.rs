@@ -1,0 +1,268 @@
+//! Cholesky decomposition `A = L·Lᵀ` (paper §7).
+//!
+//! Blocked right-looking factorization. Within one step `k`, the trailing
+//! update blocks `(i, j)` with `k < j ≤ i` are mutually independent — the
+//! "maximum parts compatible with an arbitrary traversal" the paper
+//! describes — so that sub-grid can be walked in any order:
+//!
+//! * [`cholesky_blocked`] with [`TrailingOrder::Canonic`] — nested loops
+//!   (the cache-conscious baseline; block size is the tuning knob);
+//! * [`TrailingOrder::Hilbert`] — FGF-Hilbert over the trailing triangle
+//!   (`Intersect(LowerTriangleIncl, MinBounds)`), cache-oblivious.
+//!
+//! The unblocked [`cholesky_unblocked`] is the correctness reference.
+
+use super::Matrix;
+use crate::curves::fgf::{fgf_hilbert_loop, Intersect, LowerTriangleIncl, MinBounds};
+use crate::{Error, Result};
+
+/// Traversal order of the trailing-update block grid.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum TrailingOrder {
+    /// Row-major nested block loops.
+    Canonic,
+    /// FGF-Hilbert over the trailing lower triangle.
+    Hilbert,
+}
+
+/// Unblocked (scalar) Cholesky; the lower triangle of `a` is overwritten
+/// with `L`, the strict upper triangle is zeroed. Errors on a non-PD input.
+pub fn cholesky_unblocked(a: &mut Matrix) -> Result<()> {
+    assert_eq!(a.rows, a.cols, "Cholesky needs a square matrix");
+    let n = a.rows;
+    for j in 0..n {
+        let mut diag = a.at(j, j);
+        for k in 0..j {
+            let v = a.at(j, k);
+            diag -= v * v;
+        }
+        if diag <= 0.0 {
+            return Err(Error::Numerical(format!(
+                "matrix not positive definite at pivot {j} (d={diag})"
+            )));
+        }
+        let ljj = diag.sqrt();
+        *a.at_mut(j, j) = ljj;
+        for i in j + 1..n {
+            let mut v = a.at(i, j);
+            for k in 0..j {
+                v -= a.at(i, k) * a.at(j, k);
+            }
+            *a.at_mut(i, j) = v / ljj;
+        }
+        for i in 0..j {
+            *a.at_mut(i, j) = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Blocked right-looking Cholesky with block size `t`; the trailing update
+/// is traversed in the given order.
+pub fn cholesky_blocked(a: &mut Matrix, t: usize, order: TrailingOrder) -> Result<()> {
+    assert_eq!(a.rows, a.cols);
+    assert!(t > 0);
+    let n = a.rows;
+    let nb = n.div_ceil(t);
+    for kb in 0..nb {
+        let k0 = kb * t;
+        let k1 = (k0 + t).min(n);
+        // 1. Factor the diagonal block in place.
+        factor_diag(a, k0, k1)?;
+        // 2. Panel solve: rows below the diagonal block.
+        for ib in kb + 1..nb {
+            let i0 = ib * t;
+            let i1 = (i0 + t).min(n);
+            panel_solve(a, k0, k1, i0, i1);
+        }
+        // 3. Trailing update: independent blocks, any traversal order.
+        let update = |ib: usize, jb: usize, a: &mut Matrix| {
+            let i0 = ib * t;
+            let i1 = (i0 + t).min(n);
+            let j0 = jb * t;
+            let j1 = (j0 + t).min(n);
+            trailing_update(a, k0, k1, i0, i1, j0, j1);
+        };
+        match order {
+            TrailingOrder::Canonic => {
+                for ib in kb + 1..nb {
+                    for jb in kb + 1..=ib {
+                        update(ib, jb, a);
+                    }
+                }
+            }
+            TrailingOrder::Hilbert => {
+                let level = (nb as u32).next_power_of_two().trailing_zeros();
+                let region = Intersect(
+                    Intersect(LowerTriangleIncl, MinBounds {
+                        i_min: (kb + 1) as u32,
+                        j_min: (kb + 1) as u32,
+                    }),
+                    crate::curves::fgf::Rect { n: nb as u32, m: nb as u32 },
+                );
+                fgf_hilbert_loop(level, &region, |ib, jb, _h| {
+                    update(ib as usize, jb as usize, a);
+                });
+            }
+        }
+    }
+    // Zero the strict upper triangle for a clean L.
+    for i in 0..n {
+        for j in i + 1..n {
+            *a.at_mut(i, j) = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Factor `A[k0..k1, k0..k1]` in place (unblocked).
+fn factor_diag(a: &mut Matrix, k0: usize, k1: usize) -> Result<()> {
+    for j in k0..k1 {
+        let mut diag = a.at(j, j);
+        for k in k0..j {
+            let v = a.at(j, k);
+            diag -= v * v;
+        }
+        if diag <= 0.0 {
+            return Err(Error::Numerical(format!(
+                "matrix not positive definite at pivot {j} (d={diag})"
+            )));
+        }
+        let ljj = diag.sqrt();
+        *a.at_mut(j, j) = ljj;
+        for i in j + 1..k1 {
+            let mut v = a.at(i, j);
+            for k in k0..j {
+                v -= a.at(i, k) * a.at(j, k);
+            }
+            *a.at_mut(i, j) = v / ljj;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `X · L[k]ᵀ = A[i0..i1, k0..k1]` in place (forward substitution
+/// against the already-factored diagonal block).
+fn panel_solve(a: &mut Matrix, k0: usize, k1: usize, i0: usize, i1: usize) {
+    for i in i0..i1 {
+        for j in k0..k1 {
+            let mut v = a.at(i, j);
+            for k in k0..j {
+                v -= a.at(i, k) * a.at(j, k);
+            }
+            *a.at_mut(i, j) = v / a.at(j, j);
+        }
+    }
+}
+
+/// `A[i0..i1, j0..j1] -= L[i0..i1, k0..k1] · L[j0..j1, k0..k1]ᵀ`, lower
+/// part only where the block straddles the diagonal.
+fn trailing_update(
+    a: &mut Matrix,
+    k0: usize,
+    k1: usize,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+) {
+    for i in i0..i1 {
+        let jmax = j1.min(i + 1); // stay in the lower triangle
+        for j in j0..jmax {
+            let mut v = a.at(i, j);
+            for k in k0..k1 {
+                v -= a.at(i, k) * a.at(j, k);
+            }
+            *a.at_mut(i, j) = v;
+        }
+    }
+}
+
+/// Build a well-conditioned SPD test matrix `M·Mᵀ + n·I`.
+pub fn random_spd(n: usize, seed: u64) -> Matrix {
+    let m = Matrix::random(n, n, seed, -1.0, 1.0);
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += m.at(i, k) * m.at(j, k);
+            }
+            *a.at_mut(i, j) = s + if i == j { n as f32 } else { 0.0 };
+        }
+    }
+    a
+}
+
+/// Verify `L·Lᵀ ≈ A` (max-abs residual).
+pub fn residual(l: &Matrix, a: &Matrix) -> f32 {
+    let n = a.rows;
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = 0.0;
+            for k in 0..=j {
+                s += l.at(i, k) * l.at(j, k);
+            }
+            worst = worst.max((s - a.at(i, j)).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unblocked_factors_spd() {
+        let a = random_spd(24, 7);
+        let mut l = a.clone();
+        cholesky_unblocked(&mut l).unwrap();
+        assert!(residual(&l, &a) < 1e-3, "residual {}", residual(&l, &a));
+    }
+
+    #[test]
+    fn blocked_variants_match_unblocked() {
+        for n in [16usize, 30, 65] {
+            let a = random_spd(n, 11);
+            let mut reference = a.clone();
+            cholesky_unblocked(&mut reference).unwrap();
+            for order in [TrailingOrder::Canonic, TrailingOrder::Hilbert] {
+                for t in [4usize, 8, 16] {
+                    let mut l = a.clone();
+                    cholesky_blocked(&mut l, t, order).unwrap();
+                    let d = l.max_abs_diff(&reference);
+                    assert!(d < 1e-3, "n={n} t={t} {order:?}: diff {d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_pd_detected() {
+        let mut a = Matrix::from_fn(3, 3, |i, j| if i == j { -1.0 } else { 0.0 });
+        assert!(cholesky_unblocked(&mut a).is_err());
+        let mut b = Matrix::from_fn(3, 3, |i, j| if i == j { -1.0 } else { 0.0 });
+        assert!(cholesky_blocked(&mut b, 2, TrailingOrder::Hilbert).is_err());
+    }
+
+    #[test]
+    fn upper_triangle_zeroed() {
+        let a = random_spd(9, 3);
+        let mut l = a.clone();
+        cholesky_blocked(&mut l, 4, TrailingOrder::Hilbert).unwrap();
+        for i in 0..9 {
+            for j in i + 1..9 {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn one_by_one() {
+        let mut a = Matrix { rows: 1, cols: 1, data: vec![4.0] };
+        cholesky_blocked(&mut a, 8, TrailingOrder::Hilbert).unwrap();
+        assert_eq!(a.data, vec![2.0]);
+    }
+}

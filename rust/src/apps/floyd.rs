@@ -1,0 +1,175 @@
+//! Floyd–Warshall all-pairs shortest paths / transitive closure (paper §7).
+//!
+//! At a fixed pivot `k`, the updates `d[i][j] = min(d[i][j], d[i][k] +
+//! d[k][j])` are order-independent over `(i, j)` (for non-negative weights
+//! the pivot row/column are fixed points of step `k`), so the inner double
+//! loop can be traversed cache-obliviously:
+//!
+//! * [`floyd_canonic`] — textbook `k, i, j` loops;
+//! * [`floyd_hilbert`] — `(i, j)` in generalized-Hilbert order per `k`;
+//! * [`floyd_hilbert_blocked`] — `(i-block, j-block)` grid in Hilbert
+//!   order with canonic interiors (the practical hot-path variant);
+//! * [`floyd_tiled`] — canonic block order (the cache-conscious baseline).
+
+use super::Matrix;
+use crate::curves::fur::general_hilbert_loop;
+
+/// Value used for "no edge". Additions saturate below f32::MAX.
+pub const INF: f32 = 1.0e30;
+
+/// Random weighted digraph distance matrix: `density` of the off-diagonal
+/// entries get a uniform weight in `[1, 10)`, the rest are [`INF`].
+pub fn random_graph(n: usize, density: f64, seed: u64) -> Matrix {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    Matrix::from_fn(n, n, |i, j| {
+        if i == j {
+            0.0
+        } else if rng.bool(density) {
+            1.0 + 9.0 * rng.f32()
+        } else {
+            INF
+        }
+    })
+}
+
+/// Textbook `k, i, j` Floyd–Warshall.
+pub fn floyd_canonic(d: &mut Matrix) {
+    let n = d.rows;
+    assert_eq!(n, d.cols);
+    for k in 0..n {
+        for i in 0..n {
+            let dik = d.at(i, k);
+            if dik >= INF {
+                continue;
+            }
+            for j in 0..n {
+                let cand = dik + d.at(k, j);
+                if cand < d.at(i, j) {
+                    *d.at_mut(i, j) = cand;
+                }
+            }
+        }
+    }
+}
+
+/// `(i, j)` in generalized-Hilbert order for each pivot.
+pub fn floyd_hilbert(d: &mut Matrix) {
+    let n = d.rows as u32;
+    assert_eq!(d.rows, d.cols);
+    for k in 0..d.rows {
+        general_hilbert_loop(n, n, |i, j| {
+            let (i, j) = (i as usize, j as usize);
+            let cand = d.at(i, k) + d.at(k, j);
+            if cand < d.at(i, j) {
+                *d.at_mut(i, j) = cand;
+            }
+        });
+    }
+}
+
+/// `(i-block, j-block)` in Hilbert order, canonic interior.
+pub fn floyd_hilbert_blocked(d: &mut Matrix, t: usize) {
+    let n = d.rows;
+    assert_eq!(n, d.cols);
+    assert!(t > 0);
+    let nb = n.div_ceil(t) as u32;
+    for k in 0..n {
+        general_hilbert_loop(nb, nb, |bi, bj| {
+            block_update(d, k, bi as usize * t, bj as usize * t, t);
+        });
+    }
+}
+
+/// Canonic block order (cache-conscious baseline).
+pub fn floyd_tiled(d: &mut Matrix, t: usize) {
+    let n = d.rows;
+    assert_eq!(n, d.cols);
+    assert!(t > 0);
+    let nb = n.div_ceil(t);
+    for k in 0..n {
+        for bi in 0..nb {
+            for bj in 0..nb {
+                block_update(d, k, bi * t, bj * t, t);
+            }
+        }
+    }
+}
+
+#[inline]
+fn block_update(d: &mut Matrix, k: usize, i0: usize, j0: usize, t: usize) {
+    let n = d.rows;
+    let i1 = (i0 + t).min(n);
+    let j1 = (j0 + t).min(n);
+    for i in i0..i1 {
+        let dik = d.at(i, k);
+        if dik >= INF {
+            continue;
+        }
+        for j in j0..j1 {
+            let cand = dik + d.at(k, j);
+            if cand < d.at(i, j) {
+                *d.at_mut(i, j) = cand;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_agree_exactly() {
+        for n in [17usize, 32, 50] {
+            let g = random_graph(n, 0.2, 5);
+            let mut a = g.clone();
+            floyd_canonic(&mut a);
+            let mut b = g.clone();
+            floyd_hilbert(&mut b);
+            assert_eq!(a.data, b.data, "hilbert n={n}");
+            let mut c = g.clone();
+            floyd_hilbert_blocked(&mut c, 8);
+            assert_eq!(a.data, c.data, "hilbert_blocked n={n}");
+            let mut e = g.clone();
+            floyd_tiled(&mut e, 8);
+            assert_eq!(a.data, e.data, "tiled n={n}");
+        }
+    }
+
+    #[test]
+    fn known_triangle_shortcut() {
+        // 0→1 cost 5 direct, or 0→2→1 cost 3.
+        let mut d = Matrix::from_fn(3, 3, |i, j| if i == j { 0.0 } else { INF });
+        *d.at_mut(0, 1) = 5.0;
+        *d.at_mut(0, 2) = 1.0;
+        *d.at_mut(2, 1) = 2.0;
+        floyd_hilbert(&mut d);
+        assert_eq!(d.at(0, 1), 3.0);
+    }
+
+    #[test]
+    fn triangle_inequality_holds() {
+        let g = random_graph(24, 0.3, 9);
+        let mut d = g.clone();
+        floyd_hilbert_blocked(&mut d, 4);
+        for i in 0..24 {
+            for j in 0..24 {
+                for k in 0..24 {
+                    assert!(
+                        d.at(i, j) <= d.at(i, k) + d.at(k, j) + 1e-3,
+                        "({i},{j},{k})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disconnected_stays_inf() {
+        let mut d = Matrix::from_fn(4, 4, |i, j| if i == j { 0.0 } else { INF });
+        *d.at_mut(0, 1) = 1.0;
+        floyd_hilbert(&mut d);
+        assert!(d.at(2, 3) >= INF);
+        assert!(d.at(1, 0) >= INF, "directed: reverse edge absent");
+    }
+}

@@ -1,0 +1,330 @@
+//! k-Means clustering (Lloyd's algorithm, paper §7).
+//!
+//! The assignment phase is a pair loop over (point, centroid): for large
+//! `k·d` the centroid set outgrows the cache and the canonic scan thrashes
+//! exactly like Figure 1's nested loops. Variants:
+//!
+//! * [`assign_naive`] — canonic scan, all centroids per point;
+//! * [`assign_blocked`] — `(point-block × centroid-block)` grid in canonic
+//!   block order (cache-conscious);
+//! * [`assign_hilbert`] — the same grid in generalized-Hilbert order
+//!   (cache-oblivious).
+//!
+//! All three produce identical assignments. [`lloyd`] runs full iterations
+//! with any assigner; the [`crate::coordinator`] parallelises the Hilbert
+//! variant across workers and [`crate::runtime`] can offload the distance
+//! kernel to an AOT-compiled Pallas kernel via PJRT.
+
+use super::Matrix;
+use crate::curves::fur::general_hilbert_loop;
+use crate::util::rng::Rng;
+
+/// Clustering problem state: `points` is `n×d`, `centroids` is `k×d`.
+#[derive(Clone, Debug)]
+pub struct KMeans {
+    /// Input points, row-major `n×d`.
+    pub points: Matrix,
+    /// Current centroids, row-major `k×d`.
+    pub centroids: Matrix,
+}
+
+/// Result of one assignment pass.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    /// Nearest-centroid index per point.
+    pub labels: Vec<u32>,
+    /// Squared distance to the nearest centroid per point.
+    pub dist2: Vec<f32>,
+}
+
+impl Assignment {
+    /// Sum of squared distances (the k-Means objective).
+    pub fn inertia(&self) -> f64 {
+        self.dist2.iter().map(|&d| d as f64).sum()
+    }
+}
+
+#[inline(always)]
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Canonic full scan: for each point, check every centroid.
+pub fn assign_naive(km: &KMeans) -> Assignment {
+    let n = km.points.rows;
+    let mut labels = vec![0u32; n];
+    let mut dist2 = vec![f32::INFINITY; n];
+    for p in 0..n {
+        let row = km.points.row(p);
+        for c in 0..km.centroids.rows {
+            let d = sq_dist(row, km.centroids.row(c));
+            if d < dist2[p] {
+                dist2[p] = d;
+                labels[p] = c as u32;
+            }
+        }
+    }
+    Assignment { labels, dist2 }
+}
+
+/// Shared block kernel: update running minima for a (point-block,
+/// centroid-block) pair.
+#[inline]
+fn block_assign(
+    km: &KMeans,
+    p0: usize,
+    p1: usize,
+    c0: usize,
+    c1: usize,
+    labels: &mut [u32],
+    dist2: &mut [f32],
+) {
+    for p in p0..p1 {
+        let row = km.points.row(p);
+        let (mut best_d, mut best_c) = (dist2[p], labels[p]);
+        for c in c0..c1 {
+            let d = sq_dist(row, km.centroids.row(c));
+            if d < best_d {
+                best_d = d;
+                best_c = c as u32;
+            }
+        }
+        dist2[p] = best_d;
+        labels[p] = best_c;
+    }
+}
+
+/// Cache-conscious blocked assignment (canonic block order).
+pub fn assign_blocked(km: &KMeans, tp: usize, tc: usize) -> Assignment {
+    assert!(tp > 0 && tc > 0);
+    let n = km.points.rows;
+    let k = km.centroids.rows;
+    let mut labels = vec![0u32; n];
+    let mut dist2 = vec![f32::INFINITY; n];
+    for p0 in (0..n).step_by(tp) {
+        for c0 in (0..k).step_by(tc) {
+            block_assign(km, p0, (p0 + tp).min(n), c0, (c0 + tc).min(k), &mut labels, &mut dist2);
+        }
+    }
+    Assignment { labels, dist2 }
+}
+
+/// Cache-oblivious assignment: Hilbert traversal of the block grid.
+pub fn assign_hilbert(km: &KMeans, tp: usize, tc: usize) -> Assignment {
+    assert!(tp > 0 && tc > 0);
+    let n = km.points.rows;
+    let k = km.centroids.rows;
+    let mut labels = vec![0u32; n];
+    let mut dist2 = vec![f32::INFINITY; n];
+    let pb = n.div_ceil(tp) as u32;
+    let cb = k.div_ceil(tc) as u32;
+    general_hilbert_loop(pb, cb, |bp, bc| {
+        let p0 = bp as usize * tp;
+        let c0 = bc as usize * tc;
+        block_assign(km, p0, (p0 + tp).min(n), c0, (c0 + tc).min(k), &mut labels, &mut dist2);
+    });
+    Assignment { labels, dist2 }
+}
+
+/// Recompute centroids as label means; empty clusters keep their previous
+/// position (standard Lloyd fallback). Returns the new centroids.
+pub fn update_centroids(km: &KMeans, assign: &Assignment) -> Matrix {
+    let d = km.points.cols;
+    let k = km.centroids.rows;
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    for (p, &label) in assign.labels.iter().enumerate() {
+        let row = km.points.row(p);
+        let base = label as usize * d;
+        for (idx, &x) in row.iter().enumerate() {
+            sums[base + idx] += x as f64;
+        }
+        counts[label as usize] += 1;
+    }
+    Matrix::from_fn(k, d, |c, idx| {
+        if counts[c] > 0 {
+            (sums[c * d + idx] / counts[c] as f64) as f32
+        } else {
+            km.centroids.at(c, idx)
+        }
+    })
+}
+
+/// Which assignment strategy [`lloyd`] uses per iteration.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Assigner {
+    /// [`assign_naive`].
+    Naive,
+    /// [`assign_blocked`] with `(tp, tc)`.
+    Blocked(usize, usize),
+    /// [`assign_hilbert`] with `(tp, tc)`.
+    Hilbert(usize, usize),
+}
+
+impl Assigner {
+    /// Run the selected assignment.
+    pub fn run(self, km: &KMeans) -> Assignment {
+        match self {
+            Assigner::Naive => assign_naive(km),
+            Assigner::Blocked(tp, tc) => assign_blocked(km, tp, tc),
+            Assigner::Hilbert(tp, tc) => assign_hilbert(km, tp, tc),
+        }
+    }
+}
+
+/// Outcome of a full Lloyd run.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    /// Final assignment.
+    pub assignment: Assignment,
+    /// Objective value per iteration (monotone non-increasing).
+    pub inertia_trace: Vec<f64>,
+    /// Iterations executed.
+    pub iterations: usize,
+    /// Whether assignments reached a fixed point before `max_iter`.
+    pub converged: bool,
+}
+
+/// Full Lloyd iteration loop with the given assigner.
+pub fn lloyd(km: &mut KMeans, assigner: Assigner, max_iter: usize, tol: f64) -> LloydResult {
+    let mut inertia_trace = Vec::new();
+    let mut last_labels: Option<Vec<u32>> = None;
+    let mut assignment = assigner.run(km);
+    for it in 0..max_iter {
+        inertia_trace.push(assignment.inertia());
+        km.centroids = update_centroids(km, &assignment);
+        let next = assigner.run(km);
+        let converged = last_labels.as_deref() == Some(&next.labels[..])
+            || assignment.labels == next.labels
+            || (assignment.inertia() - next.inertia()).abs() < tol * assignment.inertia().max(1e-12);
+        last_labels = Some(std::mem::replace(&mut assignment, next).labels);
+        if converged {
+            return LloydResult {
+                assignment,
+                inertia_trace,
+                iterations: it + 1,
+                converged: true,
+            };
+        }
+    }
+    LloydResult {
+        assignment,
+        inertia_trace,
+        iterations: max_iter,
+        converged: false,
+    }
+}
+
+/// Sample `k` distinct points as initial centroids (seeded).
+pub fn init_centroids(points: &Matrix, k: usize, seed: u64) -> Matrix {
+    assert!(k <= points.rows, "k exceeds point count");
+    let mut rng = Rng::new(seed);
+    let mut picks: Vec<usize> = (0..points.rows).collect();
+    rng.shuffle(&mut picks);
+    Matrix::from_fn(k, points.cols, |c, idx| points.at(picks[c], idx))
+}
+
+/// Synthetic Gaussian blobs: `k` well-separated centers in `d` dims,
+/// `n` points total. Returns (points, true centers).
+pub fn make_blobs(n: usize, k: usize, d: usize, spread: f32, seed: u64) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let centers = Matrix::from_fn(k, d, |_, _| (rng.f32() - 0.5) * 20.0);
+    let points = Matrix::from_fn(n, d, |p, idx| {
+        let c = p % k;
+        centers.at(c, idx) + spread * rng.normal() as f32
+    });
+    (points, centers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problem(n: usize, k: usize, d: usize) -> KMeans {
+        let (points, _) = make_blobs(n, k, d, 0.5, 42);
+        let centroids = init_centroids(&points, k, 7);
+        KMeans { points, centroids }
+    }
+
+    #[test]
+    fn assigners_agree_exactly() {
+        let km = problem(300, 17, 6);
+        let a = assign_naive(&km);
+        for (tp, tc) in [(32, 4), (64, 8), (7, 3)] {
+            let b = assign_blocked(&km, tp, tc);
+            let c = assign_hilbert(&km, tp, tc);
+            assert_eq!(a.labels, b.labels, "blocked tp={tp} tc={tc}");
+            assert_eq!(a.labels, c.labels, "hilbert tp={tp} tc={tc}");
+        }
+    }
+
+    #[test]
+    fn inertia_monotone_under_lloyd() {
+        let mut km = problem(400, 8, 4);
+        let res = lloyd(&mut km, Assigner::Hilbert(64, 4), 30, 1e-9);
+        for w in res.inertia_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "inertia must not increase: {w:?}");
+        }
+    }
+
+    #[test]
+    fn converges_on_separated_blobs() {
+        let mut km = problem(600, 5, 3);
+        let res = lloyd(&mut km, Assigner::Hilbert(64, 4), 50, 1e-9);
+        assert!(res.converged, "blobs must converge");
+        // Every cluster non-trivial.
+        let mut counts = vec![0u32; 5];
+        for &l in &res.assignment.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "counts {counts:?}");
+    }
+
+    #[test]
+    fn update_centroids_means() {
+        let points = Matrix { rows: 4, cols: 1, data: vec![0.0, 2.0, 10.0, 14.0] };
+        let centroids = Matrix { rows: 2, cols: 1, data: vec![1.0, 12.0] };
+        let km = KMeans { points, centroids };
+        let a = assign_naive(&km);
+        assert_eq!(a.labels, vec![0, 0, 1, 1]);
+        let updated = update_centroids(&km, &a);
+        assert_eq!(updated.data, vec![1.0, 12.0]);
+    }
+
+    #[test]
+    fn empty_cluster_keeps_position() {
+        let points = Matrix { rows: 2, cols: 1, data: vec![0.0, 1.0] };
+        let centroids = Matrix { rows: 2, cols: 1, data: vec![0.5, 100.0] };
+        let km = KMeans { points, centroids };
+        let a = assign_naive(&km);
+        let updated = update_centroids(&km, &a);
+        assert_eq!(updated.at(1, 0), 100.0, "empty cluster unchanged");
+    }
+
+    #[test]
+    fn init_centroids_distinct_rows() {
+        let (points, _) = make_blobs(50, 3, 2, 0.1, 1);
+        let c = init_centroids(&points, 10, 2);
+        assert_eq!(c.rows, 10);
+        // Rows come from distinct source points (shuffle-based).
+        for a in 0..10 {
+            for b in a + 1..10 {
+                assert!(
+                    (0..2).any(|idx| c.at(a, idx) != c.at(b, idx)),
+                    "rows {a} and {b} identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inertia_is_sum() {
+        let a = Assignment { labels: vec![0, 0], dist2: vec![1.5, 2.5] };
+        assert!((a.inertia() - 4.0).abs() < 1e-12);
+    }
+}

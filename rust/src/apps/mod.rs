@@ -1,0 +1,135 @@
+//! The paper's §7 application suite, each in canonic (nested-loop),
+//! cache-conscious (tiled) and cache-oblivious (Hilbert) variants:
+//!
+//! * [`matmul`] — matrix multiplication (the paper's §1 running example).
+//! * [`cholesky`] — Cholesky decomposition (dependency-constrained
+//!   traversal).
+//! * [`floyd`] — Floyd–Warshall transitive closure.
+//! * [`kmeans`] — k-Means clustering (the coordinator parallelises this
+//!   one; [`crate::runtime`] can offload its inner kernel to PJRT).
+//! * [`simjoin`] — ε-similarity join over a grid index, driven by the
+//!   FGF-Hilbert jump-over loop.
+//! * [`pairloop`] — the abstract "process all object pairs" loop of
+//!   Figure 1, instrumented against the cache simulator.
+
+pub mod cholesky;
+pub mod floyd;
+pub mod kmeans;
+pub mod matmul;
+pub mod pairloop;
+pub mod simjoin;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    /// Rows.
+    pub rows: usize,
+    /// Columns.
+    pub cols: usize,
+    /// Row-major data, `rows * cols` entries.
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform random entries in `[lo, hi)` from a seeded RNG.
+    pub fn random(rows: usize, cols: usize, seed: u64, lo: f32, hi: f32) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_f32(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Element accessor.
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    /// Mutable element accessor.
+    #[inline(always)]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    /// Row slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transposed(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Max absolute element-wise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_layout() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(0, 2), 2.0);
+        assert_eq!(m.at(1, 0), 10.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::random(5, 7, 1, -1.0, 1.0);
+        assert_eq!(m.transposed().transposed(), m);
+    }
+
+    #[test]
+    fn diff_and_norm() {
+        let a = Matrix::from_fn(2, 2, |_, _| 1.0);
+        let b = Matrix::from_fn(2, 2, |_, _| 1.5);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+        assert!((a.fro_norm() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_is_seeded() {
+        let a = Matrix::random(3, 3, 9, 0.0, 1.0);
+        let b = Matrix::random(3, 3, 9, 0.0, 1.0);
+        assert_eq!(a, b);
+        let c = Matrix::random(3, 3, 10, 0.0, 1.0);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,173 @@
+//! The Figure-1 experiment: an abstract algorithm that processes all pairs
+//! `(i, j)` of two object collections, where processing a pair touches
+//! object `i` of collection `B` and object `j` of collection `C` — the
+//! paper's model of matrix multiplication, joins, and "countless algorithms
+//! … formulated as two or three nested loops".
+//!
+//! Running the pair loop against a simulated cache of varying size, for the
+//! canonic order versus the Hilbert order, regenerates Figure 1(e).
+
+use crate::cachesim::trace::{AddressSpace, MemSink};
+use crate::cachesim::LruCache;
+use crate::curves::CurveKind;
+
+/// Configuration of one pair-loop trace.
+#[derive(Copy, Clone, Debug)]
+pub struct PairLoopConfig {
+    /// Objects in collection B (the `i` axis).
+    pub n: u32,
+    /// Objects in collection C (the `j` axis).
+    pub m: u32,
+    /// Object size in bytes (e.g. a matrix row: cols × 4).
+    pub object_bytes: u32,
+}
+
+impl PairLoopConfig {
+    /// Total bytes of both collections (the working set).
+    pub fn working_set(&self) -> u64 {
+        (self.n as u64 + self.m as u64) * self.object_bytes as u64
+    }
+}
+
+/// Replay the pair loop in the given traversal order against `sink`.
+///
+/// Each pair `(i, j)` touches the whole of object `B_i` and object `C_j`
+/// (the paper's scalar-product model reads both rows entirely).
+pub fn trace_pairs<S: MemSink>(cfg: &PairLoopConfig, order: &[(u32, u32)], sink: &mut S) {
+    let mut space = AddressSpace::new();
+    let b_base = space.alloc((cfg.n as u64) * cfg.object_bytes as u64, 64);
+    let c_base = space.alloc((cfg.m as u64) * cfg.object_bytes as u64, 64);
+    for &(i, j) in order {
+        debug_assert!(i < cfg.n && j < cfg.m);
+        sink.touch(b_base + i as u64 * cfg.object_bytes as u64, cfg.object_bytes);
+        sink.touch(c_base + j as u64 * cfg.object_bytes as u64, cfg.object_bytes);
+    }
+}
+
+/// One Figure-1(e) data point: simulated LRU misses of a full pair loop.
+pub fn misses_for(cfg: &PairLoopConfig, order: &[(u32, u32)], cache_bytes: u64, line: u32) -> u64 {
+    let mut cache = LruCache::with_bytes(cache_bytes, line);
+    trace_pairs(cfg, order, &mut cache);
+    cache.stats.misses
+}
+
+/// A row of the Figure-1(e) sweep.
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    /// Cache size as a fraction of the working set.
+    pub cache_fraction: f64,
+    /// Cache size in bytes.
+    pub cache_bytes: u64,
+    /// Misses per traversal order, keyed like `orders`.
+    pub misses: Vec<u64>,
+}
+
+/// Run the full Figure-1(e) sweep: LRU misses over varying cache size for
+/// each traversal order. `fractions` are cache sizes as fractions of the
+/// working set (the paper highlights 5–20%).
+pub fn fig1e_sweep(
+    cfg: &PairLoopConfig,
+    orders: &[(CurveKind, Vec<(u32, u32)>)],
+    fractions: &[f64],
+    line: u32,
+) -> Vec<Fig1Row> {
+    let ws = cfg.working_set();
+    fractions
+        .iter()
+        .map(|&f| {
+            let cache_bytes = ((ws as f64 * f) as u64).max(line as u64);
+            let misses = orders
+                .iter()
+                .map(|(_, order)| misses_for(cfg, order, cache_bytes, line))
+                .collect();
+            Fig1Row { cache_fraction: f, cache_bytes, misses }
+        })
+        .collect()
+}
+
+/// Compulsory (cold) miss floor: every distinct line of both collections
+/// must be loaded at least once.
+pub fn cold_misses(cfg: &PairLoopConfig, line: u32) -> u64 {
+    let lines = |count: u64, bytes: u64| -> u64 { (count * bytes).div_ceil(line as u64) };
+    lines(cfg.n as u64, cfg.object_bytes as u64) + lines(cfg.m as u64, cfg.object_bytes as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::CountingSink;
+    use crate::curves::nonrecursive::HilbertIter;
+
+    fn cfg() -> PairLoopConfig {
+        PairLoopConfig { n: 32, m: 32, object_bytes: 64 }
+    }
+
+    fn canonic(n: u32, m: u32) -> Vec<(u32, u32)> {
+        (0..n).flat_map(|i| (0..m).map(move |j| (i, j))).collect()
+    }
+
+    #[test]
+    fn trace_touches_every_pair_twice() {
+        let c = cfg();
+        let order = canonic(c.n, c.m);
+        let mut sink = CountingSink::default();
+        trace_pairs(&c, &order, &mut sink);
+        assert_eq!(sink.count, 2 * 32 * 32);
+    }
+
+    #[test]
+    fn huge_cache_only_cold_misses() {
+        let c = cfg();
+        let order = canonic(c.n, c.m);
+        let misses = misses_for(&c, &order, c.working_set() * 2, 64);
+        assert_eq!(misses, cold_misses(&c, 64));
+    }
+
+    #[test]
+    fn hilbert_beats_canonic_at_small_cache() {
+        // The Figure-1(e) claim, in miniature: at cache sizes well below
+        // the working set, the Hilbert traversal misses far less.
+        let c = cfg();
+        let canon = canonic(c.n, c.m);
+        let hilb: Vec<_> = HilbertIter::new(32).collect();
+        let cache = c.working_set() / 8; // 12.5% of working set
+        let m_canon = misses_for(&c, &canon, cache, 64);
+        let m_hilb = misses_for(&c, &hilb, cache, 64);
+        assert!(
+            m_hilb * 2 < m_canon,
+            "hilbert {m_hilb} should be ≤ half of canonic {m_canon}"
+        );
+    }
+
+    #[test]
+    fn canonic_thrashes_below_working_set() {
+        // LRU pathological case (§1): once C doesn't fit, every row of C
+        // misses every outer iteration.
+        let c = cfg();
+        let canon = canonic(c.n, c.m);
+        let cache = c.working_set() / 4;
+        let misses = misses_for(&c, &canon, cache, 64);
+        // n outer iterations × m rows of C ≈ full thrash on the C side.
+        let thrash_floor = (c.n as u64) * (c.m as u64) / 2;
+        assert!(misses > thrash_floor, "misses {misses} < floor {thrash_floor}");
+    }
+
+    #[test]
+    fn sweep_is_monotone_for_canonic() {
+        let c = cfg();
+        let orders = vec![(CurveKind::Canonic, canonic(c.n, c.m))];
+        let rows = fig1e_sweep(&c, &orders, &[0.05, 0.2, 0.5, 1.5], 64);
+        for w in rows.windows(2) {
+            assert!(
+                w[0].misses[0] >= w[1].misses[0],
+                "more cache must not increase LRU misses on this trace"
+            );
+        }
+    }
+
+    #[test]
+    fn working_set_math() {
+        let c = cfg();
+        assert_eq!(c.working_set(), (32 + 32) * 64);
+    }
+}

@@ -1,0 +1,286 @@
+//! ε-similarity join (paper §7, after [20]): report all point pairs with
+//! Euclidean distance ≤ ε.
+//!
+//! Variants:
+//!
+//! * [`join_bruteforce`] — all `n(n−1)/2` pairs (the correctness oracle);
+//! * [`join_grid_nested`] — grid-index candidates, cell pairs in canonic
+//!   order (the cache-conscious baseline);
+//! * [`join_fgf_hilbert`] — grid-index candidates traversed by the
+//!   **FGF-Hilbert loop with jump-over**: non-empty cells are numbered
+//!   along their spatial Hilbert order, the candidate cell-pair matrix
+//!   becomes a [`BlockMask`] region, and whole non-candidate quadrants are
+//!   jumped over while point data is accessed in a locality-preserving
+//!   order (the paper's similarity-join design).
+//!
+//! All variants return the same pair set.
+
+use super::Matrix;
+use crate::curves::fgf::{fgf_hilbert_loop, FgfStats, HilbertSet};
+use crate::curves::hilbert::Hilbert;
+use crate::curves::SpaceFillingCurve;
+use crate::index::GridIndex;
+
+/// A join result pair, normalized `a < b`.
+pub type Pair = (u32, u32);
+
+/// Join statistics.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct JoinStats {
+    /// Distance computations performed.
+    pub comparisons: u64,
+    /// Result pairs found.
+    pub results: u64,
+    /// Candidate cell pairs visited (index variants).
+    pub cell_pairs: u64,
+    /// FGF traversal stats (Hilbert variant only).
+    pub fgf: Option<FgfStats>,
+}
+
+#[inline(always)]
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Compare two point lists (or one list with itself when `same`), pushing
+/// qualifying pairs.
+#[inline]
+fn join_lists(
+    points: &Matrix,
+    la: &[u32],
+    lb: &[u32],
+    same: bool,
+    eps2: f32,
+    out: &mut Vec<Pair>,
+    stats: &mut JoinStats,
+) {
+    for (ai, &a) in la.iter().enumerate() {
+        let row_a = points.row(a as usize);
+        let start = if same { ai + 1 } else { 0 };
+        for &b in &lb[start..] {
+            stats.comparisons += 1;
+            if sq_dist(row_a, points.row(b as usize)) <= eps2 {
+                out.push(if a < b { (a, b) } else { (b, a) });
+                stats.results += 1;
+            }
+        }
+    }
+}
+
+/// Brute-force oracle.
+pub fn join_bruteforce(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
+    let n = points.rows as u32;
+    let eps2 = eps * eps;
+    let mut out = Vec::new();
+    let mut stats = JoinStats::default();
+    for a in 0..n {
+        for b in a + 1..n {
+            stats.comparisons += 1;
+            if sq_dist(points.row(a as usize), points.row(b as usize)) <= eps2 {
+                out.push((a, b));
+                stats.results += 1;
+            }
+        }
+    }
+    (out, stats)
+}
+
+/// Grid-index join, canonic order over cell pairs.
+pub fn join_grid_nested(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
+    let index = GridIndex::build(points, eps);
+    let eps2 = eps * eps;
+    let mut out = Vec::new();
+    let mut stats = JoinStats::default();
+    let cells = index.cells();
+    for (ci, (ca, la)) in cells.iter().enumerate() {
+        for (cb, lb) in &cells[ci..] {
+            if !GridIndex::neighbors(*ca, *cb) {
+                continue;
+            }
+            stats.cell_pairs += 1;
+            let same = ca == cb;
+            join_lists(points, la, lb, same, eps2, &mut out, &mut stats);
+        }
+    }
+    (out, stats)
+}
+
+/// Grid-index join driven by the FGF-Hilbert jump-over loop.
+pub fn join_fgf_hilbert(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
+    let index = GridIndex::build(points, eps);
+    let eps2 = eps * eps;
+    let mut out = Vec::new();
+    let mut stats = JoinStats::default();
+    let cells = index.cells();
+    if cells.is_empty() {
+        return (out, stats);
+    }
+
+    // 1. Number the non-empty cells along their spatial Hilbert order so
+    //    that nearby cell ids mean nearby data (the locality transfer).
+    let mut order: Vec<u32> = (0..cells.len() as u32).collect();
+    order.sort_by_key(|&idx| {
+        let (c, _) = &cells[idx as usize];
+        Hilbert::order(c.0, c.1)
+    });
+    // rank[cells-index] = hilbert-position
+    let mut rank = vec![0u32; cells.len()];
+    for (pos, &idx) in order.iter().enumerate() {
+        rank[idx as usize] = pos as u32;
+    }
+
+    // 2. Collect candidate cell pairs (rank_a ≤ rank_b) as *Hilbert order
+    //    values* of the rank×rank pair grid. Neighbors are found by binary
+    //    search on the 9 cell offsets — O(C·9·log C), not O(C²) — and the
+    //    sorted-value set makes every FGF block test one binary search
+    //    (§6.2's "sorting the edges according to the Hilbert value",
+    //    applied to the region itself; see §Perf).
+    let c = cells.len() as u32;
+    let cover = c.next_power_of_two().max(1);
+    let level = cover.trailing_zeros();
+    let mut pair_values: Vec<u64> = Vec::with_capacity(cells.len() * 5);
+    for (ia, (ca, _)) in cells.iter().enumerate() {
+        for di in -1i64..=1 {
+            for dj in -1i64..=1 {
+                let ni = ca.0 as i64 + di;
+                let nj = ca.1 as i64 + dj;
+                if ni < 0 || nj < 0 {
+                    continue;
+                }
+                let ncoord = (ni as u32, nj as u32);
+                if let Ok(ib) = cells.binary_search_by_key(&ncoord, |cell| cell.0) {
+                    if ib >= ia {
+                        let (ra, rb) = (rank[ia], rank[ib]);
+                        pair_values.push(Hilbert::order_at_level(
+                            ra.min(rb),
+                            ra.max(rb),
+                            level,
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    let mask = HilbertSet::from_values(level, pair_values);
+
+    // 3. FGF-Hilbert over the masked pair grid: whole non-candidate
+    //    quadrants are jumped over; visited pairs carry true Hilbert
+    //    values (usable as stable pair ids).
+    let fgf = fgf_hilbert_loop(level, &mask, |ra, rb, _h| {
+        let ia = order[ra as usize] as usize;
+        let ib = order[rb as usize] as usize;
+        stats.cell_pairs += 1;
+        let (la, lb) = (&cells[ia].1, &cells[ib].1);
+        join_lists(points, la, lb, ia == ib, eps2, &mut out, &mut stats);
+    });
+    stats.fgf = Some(fgf);
+    (out, stats)
+}
+
+/// Clustered synthetic workload: points drawn around `clusters` seeds (the
+/// shape that makes index joins shine).
+pub fn make_clustered(n: usize, d: usize, clusters: usize, spread: f32, seed: u64) -> Matrix {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let centers = Matrix::from_fn(clusters, d, |_, _| rng.f32() * 100.0);
+    Matrix::from_fn(n, d, |p, idx| {
+        let c = p % clusters;
+        centers.at(c, idx) + spread * rng.normal() as f32
+    })
+}
+
+/// Normalize a pair list for set comparison.
+pub fn normalize(mut pairs: Vec<Pair>) -> Vec<Pair> {
+    pairs.sort_unstable();
+    pairs.dedup();
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_agree_on_clustered_data() {
+        let points = make_clustered(400, 4, 8, 1.0, 3);
+        for eps in [0.5f32, 1.5, 4.0] {
+            let (a, _) = join_bruteforce(&points, eps);
+            let (b, _) = join_grid_nested(&points, eps);
+            let (c, _) = join_fgf_hilbert(&points, eps);
+            assert_eq!(normalize(a.clone()), normalize(b), "grid eps={eps}");
+            assert_eq!(normalize(a), normalize(c), "fgf eps={eps}");
+        }
+    }
+
+    #[test]
+    fn variants_agree_on_uniform_data() {
+        let points = Matrix::random(300, 3, 17, 0.0, 10.0);
+        let eps = 0.8f32;
+        let (a, _) = join_bruteforce(&points, eps);
+        let (b, _) = join_grid_nested(&points, eps);
+        let (c, _) = join_fgf_hilbert(&points, eps);
+        assert_eq!(normalize(a.clone()), normalize(b));
+        assert_eq!(normalize(a), normalize(c));
+    }
+
+    #[test]
+    fn index_prunes_comparisons() {
+        let points = make_clustered(500, 4, 20, 0.5, 5);
+        let eps = 1.0f32;
+        let (_, brute) = join_bruteforce(&points, eps);
+        let (_, grid) = join_grid_nested(&points, eps);
+        let (_, fgf) = join_fgf_hilbert(&points, eps);
+        assert!(
+            grid.comparisons * 4 < brute.comparisons,
+            "grid {} vs brute {}",
+            grid.comparisons,
+            brute.comparisons
+        );
+        assert!(
+            fgf.comparisons * 4 < brute.comparisons,
+            "fgf {} vs brute {}",
+            fgf.comparisons,
+            brute.comparisons
+        );
+    }
+
+    #[test]
+    fn fgf_jump_over_happens() {
+        let points = make_clustered(300, 3, 12, 0.4, 9);
+        let (_, stats) = join_fgf_hilbert(&points, 0.8);
+        let fgf = stats.fgf.expect("fgf stats");
+        assert!(fgf.jumps > 0, "sparse mask must trigger jump-over");
+        assert!(fgf.skipped > fgf.visited, "most of the pair grid is skipped");
+    }
+
+    #[test]
+    fn no_self_pairs_no_duplicates() {
+        let points = make_clustered(200, 2, 4, 1.0, 13);
+        let (pairs, _) = join_fgf_hilbert(&points, 2.0);
+        let norm = normalize(pairs.clone());
+        assert_eq!(norm.len(), pairs.len(), "no duplicates");
+        assert!(pairs.iter().all(|&(a, b)| a < b), "normalized, no self");
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let empty = Matrix::zeros(0, 2);
+        assert!(join_fgf_hilbert(&empty, 1.0).0.is_empty());
+        let one = Matrix::from_fn(1, 2, |_, _| 0.0);
+        assert!(join_fgf_hilbert(&one, 1.0).0.is_empty());
+        let two = Matrix::from_fn(2, 2, |i, _| i as f32 * 0.1);
+        assert_eq!(join_fgf_hilbert(&two, 1.0).0.len(), 1);
+    }
+
+    #[test]
+    fn eps_zero_like_behaviour() {
+        // Distinct points, tiny eps: no pairs.
+        let points = Matrix::from_fn(10, 2, |i, j| (i * 2 + j) as f32 * 10.0);
+        let (pairs, _) = join_fgf_hilbert(&points, 0.001);
+        assert!(pairs.is_empty());
+    }
+}

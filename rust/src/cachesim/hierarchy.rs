@@ -1,0 +1,257 @@
+//! Multi-level cache hierarchy (L1 → L2 → L3 → memory) plus a TLB — the
+//! full memory model of the paper's §1: several caches of different sizes
+//! are active *simultaneously*, which is exactly why a cache-oblivious
+//! traversal (good at every scale) beats a cache-conscious one (tuned for
+//! one scale).
+
+use super::setassoc::{Policy, SetAssocCache};
+use super::stats::CacheStats;
+use super::trace::MemSink;
+
+/// Geometry of one cache level.
+#[derive(Copy, Clone, Debug)]
+pub struct LevelConfig {
+    /// Number of sets (power of two).
+    pub sets: usize,
+    /// Associativity.
+    pub ways: usize,
+    /// Line size in bytes (power of two).
+    pub line: u32,
+    /// Replacement policy.
+    pub policy: Policy,
+}
+
+impl LevelConfig {
+    /// Capacity in bytes.
+    pub fn bytes(&self) -> u64 {
+        self.sets as u64 * self.ways as u64 * self.line as u64
+    }
+}
+
+/// Hierarchy configuration.
+#[derive(Clone, Debug)]
+pub struct HierarchyConfig {
+    /// Cache levels, fastest first.
+    pub levels: Vec<LevelConfig>,
+    /// TLB entries (fully-associative LRU over pages); 0 disables.
+    pub tlb_entries: usize,
+    /// Page size in bytes (power of two).
+    pub page_size: u32,
+}
+
+impl HierarchyConfig {
+    /// A small "laptop-class" default: 32 KiB/8-way L1, 256 KiB/8-way L2,
+    /// 8 MiB/16-way L3, 64-entry TLB over 4 KiB pages, 64-byte lines.
+    pub fn laptop() -> Self {
+        HierarchyConfig {
+            levels: vec![
+                LevelConfig { sets: 64, ways: 8, line: 64, policy: Policy::Lru },
+                LevelConfig { sets: 512, ways: 8, line: 64, policy: Policy::Lru },
+                LevelConfig { sets: 8192, ways: 16, line: 64, policy: Policy::Lru },
+            ],
+            tlb_entries: 64,
+            page_size: 4096,
+        }
+    }
+
+    /// A deliberately tiny hierarchy for tests.
+    pub fn tiny() -> Self {
+        HierarchyConfig {
+            levels: vec![
+                LevelConfig { sets: 4, ways: 2, line: 64, policy: Policy::Lru },
+                LevelConfig { sets: 16, ways: 4, line: 64, policy: Policy::Lru },
+            ],
+            tlb_entries: 4,
+            page_size: 4096,
+        }
+    }
+}
+
+/// A simulated multi-level hierarchy. An access walks L1 → L2 → … and stops
+/// at the first hit; lower levels are only consulted (and only record an
+/// access) on a miss above, like an inclusive hierarchy's miss path.
+pub struct Hierarchy {
+    levels: Vec<SetAssocCache>,
+    tlb: Option<super::lru::LruCache>,
+    page_shift: u32,
+    /// TLB statistics (separate from the per-level cache stats).
+    pub tlb_stats: CacheStats,
+}
+
+impl Hierarchy {
+    /// Build from a configuration.
+    pub fn new(cfg: &HierarchyConfig) -> Self {
+        Hierarchy {
+            levels: cfg
+                .levels
+                .iter()
+                .map(|l| SetAssocCache::new(l.sets, l.ways, l.line, l.policy))
+                .collect(),
+            tlb: (cfg.tlb_entries > 0)
+                .then(|| super::lru::LruCache::new(cfg.tlb_entries, cfg.page_size)),
+            page_shift: cfg.page_size.trailing_zeros(),
+            tlb_stats: CacheStats::default(),
+        }
+    }
+
+    /// Access one address (line-sized granularity handled per level).
+    pub fn access(&mut self, addr: u64) {
+        // TLB first (§1: the translation look-aside buffer is its own tiny
+        // locality problem).
+        if let Some(tlb) = &mut self.tlb {
+            let miss = tlb.access_tag(addr >> self.page_shift);
+            self.tlb_stats.record(miss);
+        }
+        for level in &mut self.levels {
+            if !level.access(addr) {
+                return; // hit: stop descending
+            }
+        }
+    }
+
+    /// Per-level statistics, fastest level first.
+    pub fn level_stats(&self) -> Vec<CacheStats> {
+        self.levels.iter().map(|l| l.stats).collect()
+    }
+
+    /// Misses that reached main memory (= misses of the last level).
+    pub fn memory_accesses(&self) -> u64 {
+        self.levels.last().map(|l| l.stats.misses).unwrap_or(0)
+    }
+
+    /// A simple weighted cost model: hits at level k cost `latency[k]`,
+    /// memory costs `mem_latency` (default weights approximate cycles:
+    /// 4 / 12 / 40 / 200).
+    pub fn cost_cycles(&self) -> u64 {
+        let lat: [u64; 4] = [4, 12, 40, 200];
+        let mut cost = 0u64;
+        for (k, l) in self.levels.iter().enumerate() {
+            let hits = l.stats.hits();
+            cost += hits * lat[k.min(2)];
+        }
+        cost += self.memory_accesses() * lat[3];
+        // TLB misses add a page-walk penalty.
+        cost += self.tlb_stats.misses * 30;
+        cost
+    }
+
+    /// Reset all levels and statistics.
+    pub fn clear(&mut self) {
+        for l in &mut self.levels {
+            l.clear();
+        }
+        if let Some(t) = &mut self.tlb {
+            t.clear();
+        }
+        self.tlb_stats = CacheStats::default();
+    }
+}
+
+impl MemSink for Hierarchy {
+    #[inline]
+    fn touch(&mut self, addr: u64, len: u32) {
+        // Walk at the finest line granularity (L1's).
+        let shift = 6; // 64-byte steps
+        let first = addr >> shift;
+        let last = (addr + len.max(1) as u64 - 1) >> shift;
+        for line in first..=last {
+            self.access(line << shift);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::trace::MemSink;
+
+    #[test]
+    fn l2_only_sees_l1_misses() {
+        let mut h = Hierarchy::new(&HierarchyConfig::tiny());
+        // Two accesses to the same line: second is an L1 hit, L2 sees one.
+        h.access(0);
+        h.access(0);
+        let stats = h.level_stats();
+        assert_eq!(stats[0].accesses, 2);
+        assert_eq!(stats[0].misses, 1);
+        assert_eq!(stats[1].accesses, 1);
+    }
+
+    #[test]
+    fn working_set_between_l1_and_l2() {
+        let cfg = HierarchyConfig::tiny(); // L1 = 8 lines, L2 = 64 lines
+        let mut h = Hierarchy::new(&cfg);
+        // 32 distinct lines: fits L2, thrashes L1.
+        for round in 0..10 {
+            for line in 0..32u64 {
+                h.access(line * 64);
+            }
+            let _ = round;
+        }
+        let s = h.level_stats();
+        assert!(s[0].miss_rate() > 0.9, "L1 thrashes: {}", s[0].miss_rate());
+        // After the cold round, L2 hits everything.
+        assert!(
+            s[1].misses <= 32,
+            "L2 only cold misses, got {}",
+            s[1].misses
+        );
+    }
+
+    #[test]
+    fn tlb_counts_page_locality() {
+        let cfg = HierarchyConfig::tiny(); // 4-entry TLB
+        let mut h = Hierarchy::new(&cfg);
+        // Touch 8 pages cyclically: TLB thrashes.
+        for _ in 0..5 {
+            for p in 0..8u64 {
+                h.access(p * 4096);
+            }
+        }
+        assert!(h.tlb_stats.miss_rate() > 0.9);
+        // Touch one page repeatedly: one reload miss, then all hits.
+        let before = h.tlb_stats.misses;
+        for _ in 0..100 {
+            h.access(0);
+        }
+        assert_eq!(h.tlb_stats.misses, before + 1);
+    }
+
+    #[test]
+    fn memory_accesses_are_llc_misses() {
+        let mut h = Hierarchy::new(&HierarchyConfig::tiny());
+        for line in 0..1000u64 {
+            h.access(line * 64);
+        }
+        assert_eq!(h.memory_accesses(), 1000, "all cold");
+    }
+
+    #[test]
+    fn cost_model_monotone_in_misses() {
+        let mut good = Hierarchy::new(&HierarchyConfig::tiny());
+        let mut bad = Hierarchy::new(&HierarchyConfig::tiny());
+        for _ in 0..100 {
+            good.access(0);
+        }
+        for line in 0..100u64 {
+            bad.access(line * 64);
+        }
+        assert!(good.cost_cycles() < bad.cost_cycles());
+    }
+
+    #[test]
+    fn touch_as_mem_sink() {
+        let mut h = Hierarchy::new(&HierarchyConfig::tiny());
+        h.touch(10, 4);
+        assert_eq!(h.level_stats()[0].accesses, 1);
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut h = Hierarchy::new(&HierarchyConfig::tiny());
+        h.access(0);
+        h.clear();
+        assert_eq!(h.level_stats()[0].accesses, 0);
+        assert_eq!(h.tlb_stats.accesses, 0);
+    }
+}

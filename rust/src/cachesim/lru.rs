@@ -1,0 +1,235 @@
+//! Fully-associative LRU cache — the replacement model of the paper's §1
+//! discussion and the Fig-1e measurement.
+//!
+//! Implemented as a hash map over cache-line tags plus an intrusive
+//! doubly-linked recency list in a slab (O(1) per access, no allocation on
+//! the steady state).
+
+use super::stats::CacheStats;
+use super::trace::MemSink;
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Copy, Clone)]
+struct Node {
+    tag: u64,
+    prev: u32,
+    next: u32,
+}
+
+/// Fully-associative LRU cache of `capacity_lines` lines of `line_size`
+/// bytes.
+pub struct LruCache {
+    line_shift: u32,
+    capacity: usize,
+    map: HashMap<u64, u32>,
+    slab: Vec<Node>,
+    head: u32, // most recently used
+    tail: u32, // least recently used
+    free: Vec<u32>,
+    /// Access statistics.
+    pub stats: CacheStats,
+}
+
+impl LruCache {
+    /// New cache with `capacity_lines` lines of `line_size` bytes
+    /// (`line_size` a power of two).
+    pub fn new(capacity_lines: usize, line_size: u32) -> Self {
+        assert!(line_size.is_power_of_two(), "line size must be a power of two");
+        assert!(capacity_lines > 0, "capacity must be positive");
+        LruCache {
+            line_shift: line_size.trailing_zeros(),
+            capacity: capacity_lines,
+            map: HashMap::with_capacity(capacity_lines * 2),
+            slab: Vec::with_capacity(capacity_lines),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Convenience: cache of `bytes` total capacity.
+    pub fn with_bytes(bytes: u64, line_size: u32) -> Self {
+        Self::new(((bytes / line_size as u64).max(1)) as usize, line_size)
+    }
+
+    /// Line size in bytes.
+    pub fn line_size(&self) -> u32 {
+        1 << self.line_shift
+    }
+
+    /// Number of lines currently resident.
+    pub fn resident(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Access one cache line by tag; returns `true` on miss.
+    pub fn access_tag(&mut self, tag: u64) -> bool {
+        if let Some(&idx) = self.map.get(&tag) {
+            self.unlink(idx);
+            self.push_front(idx);
+            self.stats.record(false);
+            return false;
+        }
+        // Miss: evict LRU if full.
+        if self.map.len() == self.capacity {
+            let victim = self.tail;
+            self.unlink(victim);
+            let vt = self.slab[victim as usize].tag;
+            self.map.remove(&vt);
+            self.free.push(victim);
+        }
+        let idx = if let Some(idx) = self.free.pop() {
+            self.slab[idx as usize].tag = tag;
+            idx
+        } else {
+            self.slab.push(Node { tag, prev: NIL, next: NIL });
+            (self.slab.len() - 1) as u32
+        };
+        self.map.insert(tag, idx);
+        self.push_front(idx);
+        self.stats.record(true);
+        true
+    }
+
+    /// Reset contents and statistics.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.slab.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.stats = CacheStats::default();
+    }
+
+    fn unlink(&mut self, idx: u32) {
+        let (p, n) = {
+            let node = &self.slab[idx as usize];
+            (node.prev, node.next)
+        };
+        if p != NIL {
+            self.slab[p as usize].next = n;
+        } else if self.head == idx {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slab[n as usize].prev = p;
+        } else if self.tail == idx {
+            self.tail = p;
+        }
+        self.slab[idx as usize].prev = NIL;
+        self.slab[idx as usize].next = NIL;
+    }
+
+    fn push_front(&mut self, idx: u32) {
+        self.slab[idx as usize].prev = NIL;
+        self.slab[idx as usize].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+}
+
+impl MemSink for LruCache {
+    #[inline]
+    fn touch(&mut self, addr: u64, len: u32) {
+        let first = addr >> self.line_shift;
+        let last = (addr + len.max(1) as u64 - 1) >> self.line_shift;
+        for tag in first..=last {
+            self.access_tag(tag);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_within_capacity() {
+        let mut c = LruCache::new(4, 64);
+        for tag in 0..4u64 {
+            assert!(c.access_tag(tag), "cold miss");
+        }
+        for tag in 0..4u64 {
+            assert!(!c.access_tag(tag), "warm hit");
+        }
+        assert_eq!(c.stats.misses, 4);
+        assert_eq!(c.stats.accesses, 8);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = LruCache::new(2, 64);
+        c.access_tag(1);
+        c.access_tag(2);
+        c.access_tag(1); // 2 is now LRU
+        c.access_tag(3); // evicts 2
+        assert!(!c.access_tag(1), "1 still resident");
+        assert!(c.access_tag(2), "2 was evicted");
+    }
+
+    #[test]
+    fn cyclic_pattern_defeats_lru() {
+        // The §1 motivation: cycling over capacity+1 lines misses always.
+        let mut c = LruCache::new(8, 64);
+        for round in 0..3 {
+            for tag in 0..9u64 {
+                let miss = c.access_tag(tag);
+                if round > 0 {
+                    assert!(miss, "LRU must thrash on cyclic over-capacity");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn touch_spans_lines() {
+        let mut c = LruCache::new(16, 64);
+        c.touch(60, 8); // crosses the 64-byte boundary
+        assert_eq!(c.stats.accesses, 2);
+        c.touch(0, 1);
+        assert_eq!(c.stats.accesses, 3);
+        assert_eq!(c.stats.misses, 2, "line 0 already resident");
+    }
+
+    #[test]
+    fn resident_bounded_by_capacity() {
+        let mut c = LruCache::new(3, 64);
+        for tag in 0..100u64 {
+            c.access_tag(tag);
+        }
+        assert_eq!(c.resident(), 3);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = LruCache::new(2, 64);
+        c.access_tag(1);
+        c.clear();
+        assert_eq!(c.resident(), 0);
+        assert_eq!(c.stats.accesses, 0);
+        assert!(c.access_tag(1));
+    }
+
+    #[test]
+    fn with_bytes_capacity() {
+        let c = LruCache::with_bytes(4096, 64);
+        assert_eq!(c.capacity, 64);
+    }
+
+    #[test]
+    fn slab_reuse_after_eviction() {
+        let mut c = LruCache::new(2, 64);
+        for tag in 0..1000u64 {
+            c.access_tag(tag);
+        }
+        assert!(c.slab.len() <= 3, "slab must not grow unboundedly");
+    }
+}

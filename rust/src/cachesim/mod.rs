@@ -1,0 +1,30 @@
+//! Cache-hierarchy simulator — the measurement substrate for the paper's
+//! Figure 1(e) ("number of cache misses over varying cache size").
+//!
+//! The paper's evaluation is defined over miss *counts* under LRU-style
+//! replacement, which a simulator reproduces exactly and portably (the
+//! authors' hardware-counter testbed is not available here; see DESIGN.md
+//! §3). Components:
+//!
+//! * [`lru`] — fully-associative LRU cache (the Fig-1e model).
+//! * [`setassoc`] — set-associative cache with LRU/FIFO/PLRU replacement
+//!   (the realistic L1/L2/L3 geometry).
+//! * [`hierarchy`] — multi-level hierarchy (L1→L2→L3 + TLB), modelling the
+//!   §1 discussion of simultaneous cache levels of unknown effective size —
+//!   exactly the scenario cache-oblivious traversals are for.
+//! * [`trace`] — the [`trace::MemSink`] abstraction apps emit accesses to.
+//! * [`stats`] — hit/miss accounting.
+
+pub mod hierarchy;
+pub mod lru;
+pub mod prefetch;
+pub mod setassoc;
+pub mod stats;
+pub mod trace;
+
+pub use hierarchy::{Hierarchy, HierarchyConfig, LevelConfig};
+pub use lru::LruCache;
+pub use prefetch::PrefetchingCache;
+pub use setassoc::{Policy, SetAssocCache};
+pub use stats::CacheStats;
+pub use trace::{CountingSink, MemSink, NullSink};

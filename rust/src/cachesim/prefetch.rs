@@ -1,0 +1,272 @@
+//! Stream-prefetcher model: an N-stream, stride-detecting prefetcher in
+//! front of an LRU cache.
+//!
+//! Modern cores hide sequential-miss latency with hardware stream
+//! prefetchers; this model quantifies the interaction with traversal
+//! order that the wallclock benches exhibit: the canonic order's long
+//! unit-stride runs are prefetch-friendly (most of its misses become
+//! *covered* misses), while a space-filling curve's short runs defeat
+//! stride detection — even though the curve has far fewer raw misses.
+//! Both effects are real; which dominates depends on how much of the miss
+//! latency prefetch can actually hide (the `reports/prefetch_*.csv`
+//! sweep).
+
+use super::lru::LruCache;
+use super::stats::CacheStats;
+use super::trace::MemSink;
+
+/// One tracked stream: last line, detected stride, confidence.
+#[derive(Copy, Clone, Debug)]
+struct Stream {
+    last_line: u64,
+    stride: i64,
+    confidence: u8,
+    lru_tick: u64,
+}
+
+/// Prefetch statistics.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct PrefetchStats {
+    /// Demand misses that a prefetch had already covered (latency hidden).
+    pub covered_misses: u64,
+    /// Demand misses with no covering prefetch (full latency).
+    pub uncovered_misses: u64,
+    /// Prefetches issued.
+    pub issued: u64,
+    /// Prefetched lines that were never demanded before eviction is not
+    /// tracked per-line; `issued - covered_misses` bounds the waste.
+    pub hits: u64,
+}
+
+/// An LRU cache fronted by an N-stream stride prefetcher.
+///
+/// On every demand access the prefetcher trains its streams; on a stride
+/// match with confidence ≥ 2 it prefetches `depth` lines ahead into the
+/// cache and marks them covered.
+pub struct PrefetchingCache {
+    cache: LruCache,
+    streams: Vec<Stream>,
+    covered: std::collections::HashSet<u64>,
+    depth: u64,
+    tick: u64,
+    /// Statistics.
+    pub stats: PrefetchStats,
+}
+
+impl PrefetchingCache {
+    /// `capacity_lines`/`line_size` as in [`LruCache`]; `streams` tracked
+    /// stride streams; `depth` lines prefetched ahead.
+    pub fn new(capacity_lines: usize, line_size: u32, streams: usize, depth: u64) -> Self {
+        PrefetchingCache {
+            cache: LruCache::new(capacity_lines, line_size),
+            streams: Vec::with_capacity(streams.max(1)),
+            covered: std::collections::HashSet::new(),
+            depth,
+            tick: 0,
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    /// Max streams tracked.
+    fn max_streams(&self) -> usize {
+        self.streams.capacity()
+    }
+
+    /// Demand-access one line.
+    pub fn access_line(&mut self, line: u64) {
+        self.tick += 1;
+        let miss = self.cache.access_tag(line);
+        if self.covered.remove(&line) {
+            // The line was brought in (or at least requested) by a
+            // prefetch: the demand access that would have stalled is
+            // (mostly) hidden.
+            self.stats.covered_misses += 1;
+        } else if miss {
+            self.stats.uncovered_misses += 1;
+        } else {
+            self.stats.hits += 1;
+        }
+        // Train streams: find one whose continuation matches.
+        let mut trained = false;
+        for s in self.streams.iter_mut() {
+            let delta = line as i64 - s.last_line as i64;
+            if delta == s.stride && delta != 0 {
+                s.confidence = s.confidence.saturating_add(1);
+                s.last_line = line;
+                s.lru_tick = self.tick;
+                trained = true;
+                if s.confidence >= 2 {
+                    // Issue prefetches ahead.
+                    let (stride, last, conf) = (s.stride, s.last_line, s.confidence);
+                    let _ = conf;
+                    for k in 1..=self.depth {
+                        let target = last as i64 + stride * k as i64;
+                        if target >= 0 {
+                            let t = target as u64;
+                            // Prefetch fill: counts as cache insertion, not
+                            // a demand access.
+                            let was_miss = self.cache.access_tag(t);
+                            // Do not let prefetch fills pollute demand stats.
+                            self.cache.stats.accesses -= 1;
+                            self.cache.stats.misses -= u64::from(was_miss);
+                            if was_miss {
+                                self.covered.insert(t);
+                                self.stats.issued += 1;
+                            }
+                        }
+                    }
+                }
+                break;
+            }
+            if delta != 0 && (delta.abs() as u64) <= 8 && s.confidence == 0 {
+                // Retrain idle stream with the new stride.
+                s.stride = delta;
+                s.last_line = line;
+                s.confidence = 1;
+                s.lru_tick = self.tick;
+                trained = true;
+                break;
+            }
+        }
+        if !trained {
+            if self.streams.len() < self.max_streams() {
+                self.streams.push(Stream {
+                    last_line: line,
+                    stride: 1,
+                    confidence: 0,
+                    lru_tick: self.tick,
+                });
+            } else if let Some(victim) = self
+                .streams
+                .iter_mut()
+                .min_by_key(|s| (s.confidence, s.lru_tick))
+            {
+                *victim = Stream { last_line: line, stride: 1, confidence: 0, lru_tick: self.tick };
+            }
+        }
+    }
+
+    /// Demand-access statistics of the backing cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats
+    }
+
+    /// Effective cost under a latency model: hits cost 1, covered misses
+    /// `covered_cost`, uncovered misses `miss_cost`.
+    pub fn cost(&self, covered_cost: u64, miss_cost: u64) -> u64 {
+        self.stats.hits
+            + self.stats.covered_misses * covered_cost
+            + self.stats.uncovered_misses * miss_cost
+    }
+}
+
+impl MemSink for PrefetchingCache {
+    #[inline]
+    fn touch(&mut self, addr: u64, len: u32) {
+        let shift = self.cache.line_size().trailing_zeros();
+        let first = addr >> shift;
+        let last = (addr + len.max(1) as u64 - 1) >> shift;
+        for line in first..=last {
+            self.access_line(line);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_stream_gets_covered() {
+        let mut c = PrefetchingCache::new(64, 64, 4, 4);
+        for line in 0..200u64 {
+            c.access_line(line);
+        }
+        let s = c.stats;
+        // After training, nearly all misses are covered by prefetch.
+        assert!(
+            s.covered_misses > 150,
+            "covered {} uncovered {}",
+            s.covered_misses,
+            s.uncovered_misses
+        );
+        assert!(s.uncovered_misses < 20);
+    }
+
+    #[test]
+    fn random_pattern_defeats_prefetcher() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let mut c = PrefetchingCache::new(64, 64, 4, 4);
+        for _ in 0..500 {
+            c.access_line(rng.below(100_000));
+        }
+        assert!(c.stats.covered_misses < c.stats.uncovered_misses / 5);
+    }
+
+    #[test]
+    fn strided_stream_detected() {
+        let mut c = PrefetchingCache::new(64, 64, 4, 4);
+        for k in 0..100u64 {
+            c.access_line(k * 3);
+        }
+        assert!(c.stats.covered_misses > 60);
+    }
+
+    #[test]
+    fn canonic_more_prefetchable_than_hilbert_but_more_misses() {
+        // The wallclock-vs-misses reconciliation, in one test: replay the
+        // Fig-1 pair loop; canonic has MORE raw misses but a HIGHER
+        // covered fraction.
+        use crate::apps::pairloop::{trace_pairs, PairLoopConfig};
+        use crate::curves::nonrecursive::HilbertIter;
+        use crate::curves::CurveKind;
+        let cfg = PairLoopConfig { n: 64, m: 64, object_bytes: 256 };
+        let run = |order: &[(u32, u32)]| {
+            let mut c = PrefetchingCache::new(
+                (cfg.working_set() / 8 / 64) as usize,
+                64,
+                8,
+                4,
+            );
+            trace_pairs(&cfg, order, &mut c);
+            c
+        };
+        let canon = run(&CurveKind::Canonic.enumerate(64));
+        let hilb = run(&HilbertIter::new(64).collect::<Vec<_>>());
+        let raw = |c: &PrefetchingCache| c.stats.covered_misses + c.stats.uncovered_misses;
+        assert!(raw(&canon) > raw(&hilb), "hilbert has fewer raw misses");
+        let frac = |c: &PrefetchingCache| {
+            c.stats.covered_misses as f64 / raw(c).max(1) as f64
+        };
+        assert!(
+            frac(&canon) > frac(&hilb),
+            "canonic is more prefetch-covered: {:.2} vs {:.2}",
+            frac(&canon),
+            frac(&hilb)
+        );
+    }
+
+    #[test]
+    fn prefetch_fills_do_not_pollute_demand_stats() {
+        let mut c = PrefetchingCache::new(64, 64, 4, 8);
+        for line in 0..50u64 {
+            c.access_line(line);
+        }
+        let s = c.cache_stats();
+        assert_eq!(s.accesses, 50, "only demand accesses counted");
+    }
+
+    #[test]
+    fn cost_model_orders() {
+        let mut seq = PrefetchingCache::new(32, 64, 4, 4);
+        for line in 0..300u64 {
+            seq.access_line(line);
+        }
+        let mut rnd = PrefetchingCache::new(32, 64, 4, 4);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..300 {
+            rnd.access_line(rng.below(1_000_000));
+        }
+        assert!(seq.cost(30, 200) < rnd.cost(30, 200));
+    }
+}

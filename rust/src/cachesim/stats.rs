@@ -1,0 +1,66 @@
+//! Hit/miss accounting shared by all cache models.
+
+/// Access statistics of one cache (or cache level).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Total accesses seen.
+    pub accesses: u64,
+    /// Accesses that missed.
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Hits (= accesses − misses).
+    pub fn hits(&self) -> u64 {
+        self.accesses - self.misses
+    }
+
+    /// Miss rate in `[0, 1]`; 0 for an untouched cache.
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+
+    /// Record one access.
+    #[inline]
+    pub fn record(&mut self, miss: bool) {
+        self.accesses += 1;
+        self.misses += u64::from(miss);
+    }
+
+    /// Merge another stats block (for per-worker aggregation).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.accesses += other.accesses;
+        self.misses += other.misses;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let mut s = CacheStats::default();
+        assert_eq!(s.miss_rate(), 0.0);
+        s.record(true);
+        s.record(false);
+        s.record(false);
+        s.record(true);
+        assert_eq!(s.accesses, 4);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.hits(), 2);
+        assert_eq!(s.miss_rate(), 0.5);
+    }
+
+    #[test]
+    fn merge() {
+        let mut a = CacheStats { accesses: 10, misses: 3 };
+        let b = CacheStats { accesses: 5, misses: 5 };
+        a.merge(&b);
+        assert_eq!(a, CacheStats { accesses: 15, misses: 8 });
+    }
+}

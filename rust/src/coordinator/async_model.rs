@@ -1,0 +1,219 @@
+//! Asynchronous model updates (paper §7, after Plant & Böhm [21]):
+//! MIMD k-Means where workers exchange intermediate results (centroids)
+//! *without a barrier*, trading bounded staleness for zero idle time.
+//!
+//! Each worker sweeps its contiguous Hilbert-ordered point shard in
+//! chunks; after every chunk it merges its partial (sums, counts) into the
+//! shared model and refreshes its local centroid copy from the running
+//! aggregate. The model therefore advances continuously within an epoch
+//! instead of once per barrier — the paper's "frequency with which
+//! processes exchange their intermediate results is optimized" idea, with
+//! the chunk size as the exchange-frequency knob.
+
+use crate::apps::kmeans::KMeans;
+use crate::apps::Matrix;
+use crate::coordinator::Coordinator;
+use std::sync::Mutex;
+
+/// Tuning for the asynchronous run.
+#[derive(Copy, Clone, Debug)]
+pub struct AsyncOpts {
+    /// Points processed between model exchanges (the exchange frequency).
+    pub sync_every: usize,
+    /// Full sweeps over the data.
+    pub epochs: usize,
+}
+
+impl Default for AsyncOpts {
+    fn default() -> Self {
+        AsyncOpts { sync_every: 1024, epochs: 8 }
+    }
+}
+
+/// Shared running model: per-centroid coordinate sums and counts,
+/// accumulated across all workers within an epoch.
+struct SharedModel {
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+    centroids: Matrix,
+}
+
+impl SharedModel {
+    fn snapshot_centroids(&self) -> Matrix {
+        self.centroids.clone()
+    }
+
+    /// Merge a partial and refresh the centroid estimate from the running
+    /// epoch aggregate (falling back to the previous position for
+    /// still-empty clusters).
+    fn merge(&mut self, part_sums: &[f64], part_counts: &[u64], d: usize) {
+        for (a, b) in self.sums.iter_mut().zip(part_sums) {
+            *a += b;
+        }
+        for (a, b) in self.counts.iter_mut().zip(part_counts) {
+            *a += b;
+        }
+        for c in 0..self.counts.len() {
+            if self.counts[c] > 0 {
+                for idx in 0..d {
+                    *self.centroids.at_mut(c, idx) =
+                        (self.sums[c * d + idx] / self.counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+
+    fn reset_epoch(&mut self) {
+        self.sums.iter_mut().for_each(|s| *s = 0.0);
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+/// Result of an asynchronous run.
+#[derive(Clone, Debug)]
+pub struct AsyncResult {
+    /// Final centroids.
+    pub centroids: Matrix,
+    /// Inertia measured after each epoch (with the then-current model).
+    pub inertia_trace: Vec<f64>,
+    /// Total model exchanges performed.
+    pub exchanges: u64,
+}
+
+/// Run asynchronous k-Means: workers sweep Hilbert-contiguous shards and
+/// exchange partial models every `opts.sync_every` points, no barrier
+/// inside an epoch.
+pub fn async_kmeans(coord: &Coordinator, km: &KMeans, opts: AsyncOpts) -> AsyncResult {
+    let n = km.points.rows;
+    let k = km.centroids.rows;
+    let d = km.points.cols;
+    let shared = Mutex::new(SharedModel {
+        sums: vec![0.0; k * d],
+        counts: vec![0u64; k],
+        centroids: km.centroids.clone(),
+    });
+    let exchanges = std::sync::atomic::AtomicU64::new(0);
+    let mut inertia_trace = Vec::with_capacity(opts.epochs);
+
+    for _epoch in 0..opts.epochs {
+        shared.lock().unwrap().reset_epoch();
+        coord.par_shards(n, |_id, start, end| {
+            let mut local = shared.lock().unwrap().snapshot_centroids();
+            let mut part_sums = vec![0.0f64; k * d];
+            let mut part_counts = vec![0u64; k];
+            let mut since_sync = 0usize;
+            for p in start..end {
+                let row = km.points.row(p);
+                // Nearest centroid under the (possibly stale) local model.
+                let (mut best_d, mut best_c) = (f32::INFINITY, 0usize);
+                for c in 0..k {
+                    let mut s = 0.0f32;
+                    for (x, y) in row.iter().zip(local.row(c)) {
+                        let t = x - y;
+                        s += t * t;
+                    }
+                    if s < best_d {
+                        best_d = s;
+                        best_c = c;
+                    }
+                }
+                for (idx, &x) in row.iter().enumerate() {
+                    part_sums[best_c * d + idx] += x as f64;
+                }
+                part_counts[best_c] += 1;
+                since_sync += 1;
+                if since_sync >= opts.sync_every {
+                    let mut m = shared.lock().unwrap();
+                    m.merge(&part_sums, &part_counts, d);
+                    local = m.snapshot_centroids();
+                    drop(m);
+                    part_sums.iter_mut().for_each(|s| *s = 0.0);
+                    part_counts.iter_mut().for_each(|c| *c = 0);
+                    since_sync = 0;
+                    exchanges.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            // Tail merge.
+            if part_counts.iter().any(|&c| c > 0) {
+                shared.lock().unwrap().merge(&part_sums, &part_counts, d);
+                exchanges.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        });
+        // Epoch diagnostics (not a barrier for correctness, only metrics).
+        let model = shared.lock().unwrap().snapshot_centroids();
+        let probe = KMeans { points: km.points.clone(), centroids: model };
+        inertia_trace.push(crate::apps::kmeans::assign_naive(&probe).inertia());
+    }
+
+    AsyncResult {
+        centroids: shared.into_inner().unwrap().centroids,
+        inertia_trace,
+        exchanges: exchanges.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::kmeans::{init_centroids, lloyd, make_blobs, Assigner};
+
+    fn problem(n: usize, k: usize, d: usize) -> KMeans {
+        let (points, _) = make_blobs(n, k, d, 0.5, 31);
+        let centroids = init_centroids(&points, k, 5);
+        KMeans { points, centroids }
+    }
+
+    #[test]
+    fn async_converges_close_to_sync() {
+        let km = problem(800, 6, 4);
+        // Sync reference.
+        let mut sync_km = km.clone();
+        let sync = lloyd(&mut sync_km, Assigner::Naive, 12, 1e-10);
+        let sync_inertia = *sync.inertia_trace.last().unwrap();
+        // Async with 3 workers.
+        let coord = Coordinator::new(3);
+        let res = async_kmeans(&coord, &km, AsyncOpts { sync_every: 64, epochs: 12 });
+        let async_inertia = *res.inertia_trace.last().unwrap();
+        assert!(
+            async_inertia <= sync_inertia * 1.15,
+            "async {async_inertia} vs sync {sync_inertia}"
+        );
+        assert!(res.exchanges > 0);
+    }
+
+    #[test]
+    fn inertia_trend_is_downward() {
+        let km = problem(600, 5, 3);
+        let coord = Coordinator::new(2);
+        let res = async_kmeans(&coord, &km, AsyncOpts { sync_every: 128, epochs: 8 });
+        let first = res.inertia_trace[0];
+        let last = *res.inertia_trace.last().unwrap();
+        assert!(last <= first, "inertia {first} -> {last} must not worsen");
+    }
+
+    #[test]
+    fn exchange_frequency_knob_counts() {
+        let km = problem(500, 4, 3);
+        let coord = Coordinator::new(2);
+        let frequent = async_kmeans(&coord, &km, AsyncOpts { sync_every: 32, epochs: 2 });
+        let rare = async_kmeans(&coord, &km, AsyncOpts { sync_every: 100_000, epochs: 2 });
+        assert!(
+            frequent.exchanges > rare.exchanges,
+            "smaller sync_every must exchange more ({} vs {})",
+            frequent.exchanges,
+            rare.exchanges
+        );
+    }
+
+    #[test]
+    fn single_worker_single_epoch_is_one_lloyd_half_step() {
+        // With one worker, sync_every >= n and one epoch, async k-means
+        // degenerates to: assign all under initial model, then one merge.
+        let km = problem(200, 3, 2);
+        let coord = Coordinator::new(1);
+        let res = async_kmeans(&coord, &km, AsyncOpts { sync_every: 1_000_000, epochs: 1 });
+        let a = crate::apps::kmeans::assign_naive(&km);
+        let expect = crate::apps::kmeans::update_centroids(&km, &a);
+        assert!(res.centroids.max_abs_diff(&expect) < 1e-4);
+    }
+}

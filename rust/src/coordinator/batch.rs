@@ -1,0 +1,98 @@
+//! Fixed-size batching for PJRT kernel invocations.
+//!
+//! AOT-compiled executables have static shapes, so the runtime executes
+//! fixed-size batches; the batcher groups a stream of items into full
+//! batches and pads the tail (callers mask padded lanes out of results).
+
+/// A batch of row-vectors, padded to exactly `batch × width`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    /// Flattened `batch × width` data.
+    pub data: Vec<f32>,
+    /// Valid rows (≤ batch).
+    pub valid: usize,
+}
+
+/// Split `rows × width` data into fixed `batch`-row batches, padding the
+/// last batch by repeating row 0 (a harmless in-distribution pad).
+pub fn batch_rows(data: &[f32], width: usize, batch: usize) -> Vec<Batch> {
+    assert!(width > 0 && batch > 0);
+    assert_eq!(data.len() % width, 0, "data not a whole number of rows");
+    let rows = data.len() / width;
+    if rows == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(rows.div_ceil(batch));
+    for start in (0..rows).step_by(batch) {
+        let end = (start + batch).min(rows);
+        let valid = end - start;
+        let mut buf = Vec::with_capacity(batch * width);
+        buf.extend_from_slice(&data[start * width..end * width]);
+        for _ in valid..batch {
+            buf.extend_from_slice(&data[..width]); // pad with row 0
+        }
+        out.push(Batch { data: buf, valid });
+    }
+    out
+}
+
+/// Reassemble per-row results from padded batches: takes `out_width`
+/// values per row, dropping padded lanes.
+pub fn unbatch_rows(batches: &[(Batch, Vec<f32>)], out_width: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    for (b, result) in batches {
+        assert!(result.len() >= b.valid * out_width, "result too short");
+        out.extend_from_slice(&result[..b.valid * out_width]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiple() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let batches = batch_rows(&data, 3, 2);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.valid == 2));
+        assert_eq!(batches[0].data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn tail_padded_with_row0() {
+        let data: Vec<f32> = (0..9).map(|x| x as f32).collect(); // 3 rows of 3
+        let batches = batch_rows(&data, 3, 2);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].valid, 1);
+        assert_eq!(batches[1].data, vec![6.0, 7.0, 8.0, 0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn roundtrip_with_unbatch() {
+        let data: Vec<f32> = (0..10).map(|x| x as f32).collect(); // 5 rows of 2
+        let batches = batch_rows(&data, 2, 4);
+        // Fake kernel: sum each row → 1 value per row.
+        let with_results: Vec<(Batch, Vec<f32>)> = batches
+            .into_iter()
+            .map(|b| {
+                let sums: Vec<f32> = b.data.chunks(2).map(|r| r[0] + r[1]).collect();
+                (b, sums)
+            })
+            .collect();
+        let out = unbatch_rows(&with_results, 1);
+        assert_eq!(out, vec![1.0, 5.0, 9.0, 13.0, 17.0]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(batch_rows(&[], 4, 8).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number of rows")]
+    fn ragged_rejected() {
+        batch_rows(&[1.0, 2.0, 3.0], 2, 2);
+    }
+}

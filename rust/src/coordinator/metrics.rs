@@ -1,0 +1,101 @@
+//! Per-worker execution metrics.
+
+use std::time::Duration;
+
+/// Counters for one worker's share of a parallel run.
+#[derive(Clone, Debug)]
+pub struct WorkerMetrics {
+    /// Worker id.
+    pub id: usize,
+    /// Chunks processed.
+    pub chunks: u64,
+    /// Items (order values) processed.
+    pub items: u64,
+    /// Busy time.
+    pub busy: Duration,
+}
+
+impl WorkerMetrics {
+    /// Fresh counters.
+    pub fn new(id: usize) -> Self {
+        WorkerMetrics { id, chunks: 0, items: 0, busy: Duration::ZERO }
+    }
+
+    /// Record one chunk of `items` taking `took`.
+    pub fn record_chunk(&mut self, items: u64, took: Duration) {
+        self.chunks += 1;
+        self.items += items;
+        self.busy += took;
+    }
+
+    /// Items per second (0 if nothing ran).
+    pub fn throughput(&self) -> f64 {
+        if self.busy.is_zero() {
+            0.0
+        } else {
+            self.items as f64 / self.busy.as_secs_f64()
+        }
+    }
+}
+
+/// Aggregate of all workers.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Total items.
+    pub items: u64,
+    /// Total busy time across workers.
+    pub busy: Duration,
+    /// Load imbalance: max worker items / mean worker items (1.0 = ideal).
+    pub imbalance: f64,
+}
+
+impl RunMetrics {
+    /// Aggregate per-worker metrics.
+    pub fn aggregate(workers: &[WorkerMetrics]) -> Self {
+        if workers.is_empty() {
+            return RunMetrics::default();
+        }
+        let items: u64 = workers.iter().map(|w| w.items).sum();
+        let busy = workers.iter().map(|w| w.busy).sum();
+        let max = workers.iter().map(|w| w.items).max().unwrap_or(0) as f64;
+        let mean = items as f64 / workers.len() as f64;
+        RunMetrics {
+            items,
+            busy,
+            imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_throughput() {
+        let mut m = WorkerMetrics::new(0);
+        m.record_chunk(100, Duration::from_millis(10));
+        m.record_chunk(50, Duration::from_millis(5));
+        assert_eq!(m.chunks, 2);
+        assert_eq!(m.items, 150);
+        let tp = m.throughput();
+        assert!((tp - 10_000.0).abs() < 500.0, "tp={tp}");
+    }
+
+    #[test]
+    fn aggregate_imbalance() {
+        let mut a = WorkerMetrics::new(0);
+        a.record_chunk(90, Duration::from_millis(1));
+        let mut b = WorkerMetrics::new(1);
+        b.record_chunk(10, Duration::from_millis(1));
+        let agg = RunMetrics::aggregate(&[a, b]);
+        assert_eq!(agg.items, 100);
+        assert!((agg.imbalance - 1.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_aggregate() {
+        let agg = RunMetrics::aggregate(&[]);
+        assert_eq!(agg.items, 0);
+    }
+}

@@ -1,0 +1,320 @@
+//! The MIMD coordinator: parallel execution of Hilbert-ordered work
+//! (paper §7's "parallel threads on multiple cores").
+//!
+//! The key design point is *locality-preserving partitioning*: the Hilbert
+//! order value range is cut into **contiguous curve segments**, so each
+//! worker's accesses stay spatially clustered (per-worker cache locality),
+//! while dynamic chunk hand-out keeps the load balanced.
+//!
+//! * [`scheduler`] — curve-segment scheduling (static ranges + dynamic
+//!   chunk queue).
+//! * [`pool`] — a long-lived worker pool (std threads; the vendored crate
+//!   set has no tokio, and this hot path is pure compute — see DESIGN.md
+//!   §3).
+//! * [`batch`] — fixed-size batching for PJRT kernel invocations.
+//! * [`metrics`] — per-worker counters.
+//!
+//! The flagship application is [`par_kmeans_step`]: a parallel Lloyd
+//! iteration whose point range is sharded into contiguous segments, with
+//! per-worker partial centroid sums merged at the barrier.
+
+pub mod async_model;
+pub mod batch;
+pub mod metrics;
+pub mod pool;
+pub mod scheduler;
+
+use crate::apps::kmeans::{Assignment, KMeans};
+use crate::apps::Matrix;
+use crate::curves::fur::general_hilbert_loop;
+use metrics::WorkerMetrics;
+use scheduler::ChunkQueue;
+
+/// The coordinator: owns a worker count and dispatches Hilbert-ordered
+/// work across scoped threads.
+#[derive(Clone, Debug)]
+pub struct Coordinator {
+    threads: usize,
+    /// Hilbert chunk size (order values per hand-out).
+    pub chunk: u64,
+}
+
+impl Coordinator {
+    /// Coordinator with `threads` workers (0 = one per available core).
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Coordinator { threads, chunk: 4096 }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `body` over every cell of the `2^level × 2^level` grid in
+    /// parallel: workers pull contiguous Hilbert segments from a dynamic
+    /// queue; each worker folds into its own state `S`, and the states are
+    /// merged at the end.
+    ///
+    /// Returns the merged state and per-worker metrics.
+    pub fn par_hilbert_fold<S, I, B, M>(
+        &self,
+        level: u32,
+        init: I,
+        body: B,
+        mut merge: M,
+    ) -> (S, Vec<WorkerMetrics>)
+    where
+        S: Send,
+        I: Fn() -> S + Sync,
+        B: Fn(&mut S, u32, u32) + Sync,
+        M: FnMut(S, S) -> S,
+    {
+        let total = 1u64 << (2 * level);
+        let queue = ChunkQueue::new(total, self.chunk);
+        let mut results: Vec<(S, WorkerMetrics)> = Vec::with_capacity(self.threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.threads);
+            for worker_id in 0..self.threads {
+                let queue = &queue;
+                let init = &init;
+                let body = &body;
+                handles.push(scope.spawn(move || {
+                    let mut state = init();
+                    let mut m = WorkerMetrics::new(worker_id);
+                    while let Some((start, end)) = queue.next_chunk() {
+                        let t0 = std::time::Instant::now();
+                        for (i, j) in
+                            crate::curves::nonrecursive::HilbertIter::range(level, start, end)
+                        {
+                            body(&mut state, i, j);
+                        }
+                        m.record_chunk(end - start, t0.elapsed());
+                    }
+                    (state, m)
+                }));
+            }
+            for h in handles {
+                results.push(h.join().expect("worker panicked"));
+            }
+        });
+        let mut metrics = Vec::with_capacity(self.threads);
+        let mut merged: Option<S> = None;
+        for (state, m) in results {
+            metrics.push(m);
+            merged = Some(match merged {
+                None => state,
+                Some(acc) => merge(acc, state),
+            });
+        }
+        (merged.expect("at least one worker"), metrics)
+    }
+
+    /// Parallel map over an index range `[0, n)`: contiguous shards, one
+    /// per worker. `body(worker_id, start, end)` returns a per-shard value.
+    pub fn par_shards<R: Send>(
+        &self,
+        n: usize,
+        body: impl Fn(usize, usize, usize) -> R + Sync,
+    ) -> Vec<R> {
+        let w = self.threads.min(n.max(1));
+        let per = n.div_ceil(w.max(1));
+        let mut out: Vec<R> = Vec::with_capacity(w);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(w);
+            for id in 0..w {
+                let body = &body;
+                let start = (id * per).min(n);
+                let end = ((id + 1) * per).min(n);
+                handles.push(scope.spawn(move || body(id, start, end)));
+            }
+            for h in handles {
+                out.push(h.join().expect("worker panicked"));
+            }
+        });
+        out
+    }
+}
+
+/// One parallel Lloyd step: assignment sharded over contiguous point
+/// ranges (each worker traverses its `(point-block × centroid-block)` grid
+/// in Hilbert order), plus per-worker partial sums for the update phase.
+///
+/// Returns `(assignment, new_centroids)`.
+pub fn par_kmeans_step(
+    coord: &Coordinator,
+    km: &KMeans,
+    tp: usize,
+    tc: usize,
+) -> (Assignment, Matrix) {
+    let n = km.points.rows;
+    let k = km.centroids.rows;
+    let d = km.points.cols;
+    assert!(tp > 0 && tc > 0);
+
+    struct Shard {
+        start: usize,
+        labels: Vec<u32>,
+        dist2: Vec<f32>,
+        sums: Vec<f64>,
+        counts: Vec<u64>,
+    }
+
+    let shards = coord.par_shards(n, |_id, start, end| {
+        let len = end - start;
+        let mut labels = vec![0u32; len];
+        let mut dist2 = vec![f32::INFINITY; len];
+        if len > 0 {
+            // Hilbert over this shard's block grid.
+            let pb = len.div_ceil(tp) as u32;
+            let cb = k.div_ceil(tc) as u32;
+            general_hilbert_loop(pb, cb, |bp, bc| {
+                let p0 = start + bp as usize * tp;
+                let p1 = (p0 + tp).min(end);
+                let c0 = bc as usize * tc;
+                let c1 = (c0 + tc).min(k);
+                for p in p0..p1 {
+                    let row = km.points.row(p);
+                    let (mut bd, mut bl) = (dist2[p - start], labels[p - start]);
+                    for c in c0..c1 {
+                        let mut s = 0.0f32;
+                        for (x, y) in row.iter().zip(km.centroids.row(c)) {
+                            let t = x - y;
+                            s += t * t;
+                        }
+                        if s < bd {
+                            bd = s;
+                            bl = c as u32;
+                        }
+                    }
+                    dist2[p - start] = bd;
+                    labels[p - start] = bl;
+                }
+            });
+        }
+        // Partial centroid sums.
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u64; k];
+        for (off, &label) in labels.iter().enumerate() {
+            let row = km.points.row(start + off);
+            let base = label as usize * d;
+            for (idx, &x) in row.iter().enumerate() {
+                sums[base + idx] += x as f64;
+            }
+            counts[label as usize] += 1;
+        }
+        Shard { start, labels, dist2, sums, counts }
+    });
+
+    // Merge shards (the barrier).
+    let mut labels = vec![0u32; n];
+    let mut dist2 = vec![0.0f32; n];
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u64; k];
+    for s in shards {
+        labels[s.start..s.start + s.labels.len()].copy_from_slice(&s.labels);
+        dist2[s.start..s.start + s.dist2.len()].copy_from_slice(&s.dist2);
+        for (a, b) in sums.iter_mut().zip(&s.sums) {
+            *a += b;
+        }
+        for (a, b) in counts.iter_mut().zip(&s.counts) {
+            *a += b;
+        }
+    }
+    let centroids = Matrix::from_fn(k, d, |c, idx| {
+        if counts[c] > 0 {
+            (sums[c * d + idx] / counts[c] as f64) as f32
+        } else {
+            km.centroids.at(c, idx)
+        }
+    });
+    (Assignment { labels, dist2 }, centroids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::kmeans::{assign_naive, init_centroids, make_blobs, update_centroids};
+
+    #[test]
+    fn par_hilbert_fold_covers_grid() {
+        let coord = Coordinator { threads: 4, chunk: 16 };
+        let level = 5u32;
+        let (count, metrics) =
+            coord.par_hilbert_fold(level, || 0u64, |acc, _i, _j| *acc += 1, |a, b| a + b);
+        assert_eq!(count, 1 << (2 * level));
+        assert_eq!(metrics.len(), 4);
+        let chunks: u64 = metrics.iter().map(|m| m.chunks).sum();
+        assert_eq!(chunks, (1u64 << (2 * level)) / 16);
+    }
+
+    #[test]
+    fn par_hilbert_fold_sums_match_serial() {
+        let coord = Coordinator { threads: 3, chunk: 7 };
+        let level = 4u32;
+        let (sum, _) = coord.par_hilbert_fold(
+            level,
+            || 0u64,
+            |acc, i, j| *acc += (i as u64) * 1000 + j as u64,
+            |a, b| a + b,
+        );
+        let serial: u64 = crate::curves::nonrecursive::HilbertIter::with_level(level)
+            .map(|(i, j)| (i as u64) * 1000 + j as u64)
+            .sum();
+        assert_eq!(sum, serial);
+    }
+
+    #[test]
+    fn par_shards_cover_range_once() {
+        let coord = Coordinator::new(4);
+        let shards = coord.par_shards(103, |_id, s, e| (s, e));
+        let mut covered = vec![false; 103];
+        for (s, e) in shards {
+            for x in s..e {
+                assert!(!covered[x], "overlap at {x}");
+                covered[x] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn par_kmeans_step_matches_serial() {
+        let (points, _) = make_blobs(500, 6, 5, 0.5, 21);
+        let centroids = init_centroids(&points, 6, 3);
+        let km = KMeans { points, centroids };
+        let serial_assign = assign_naive(&km);
+        let serial_update = update_centroids(&km, &serial_assign);
+        for threads in [1usize, 2, 4] {
+            let coord = Coordinator::new(threads);
+            let (a, c) = par_kmeans_step(&coord, &km, 64, 4);
+            assert_eq!(a.labels, serial_assign.labels, "threads={threads}");
+            assert!(c.max_abs_diff(&serial_update) < 1e-4, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_cores() {
+        let c = Coordinator::new(0);
+        assert!(c.threads() >= 1);
+    }
+
+    #[test]
+    fn single_thread_degenerate() {
+        let coord = Coordinator { threads: 1, chunk: 1_000_000 };
+        let (count, _) = coord.par_hilbert_fold(3, || 0u64, |a, _, _| *a += 1, |a, b| a + b);
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let coord = Coordinator::new(8);
+        let shards = coord.par_shards(3, |_id, s, e| e - s);
+        let total: usize = shards.iter().sum();
+        assert_eq!(total, 3);
+    }
+}

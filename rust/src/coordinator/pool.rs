@@ -1,0 +1,173 @@
+//! A long-lived worker pool for job-at-a-time dispatch.
+//!
+//! The scoped-thread helpers in [`super::Coordinator`] cover fork-join
+//! workloads; this pool covers the *service* shape — e.g. the CLI's
+//! interactive mode and the PJRT batcher — where jobs arrive over time and
+//! threads must not be respawned per job.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `size` workers (≥ 1).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1, "pool needs at least one worker");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..size)
+            .map(|id| {
+                let rx: Arc<Mutex<Receiver<Job>>> = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("sfc-worker-{id}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed: shutdown
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles, size }
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool is shut down")
+            .send(Box::new(job))
+            .expect("workers alive");
+    }
+
+    /// Submit a job and get a handle to its result.
+    pub fn submit_with_result<R: Send + 'static>(
+        &self,
+        job: impl FnOnce() -> R + Send + 'static,
+    ) -> JobHandle<R> {
+        let (tx, rx) = channel();
+        self.submit(move || {
+            let _ = tx.send(job());
+        });
+        JobHandle { rx }
+    }
+
+    /// Block until every submitted job has finished (barrier).
+    pub fn barrier(&self) {
+        let (tx, rx) = channel();
+        for _ in 0..self.size {
+            let tx = tx.clone();
+            // Each worker parks on this job until all have arrived — a
+            // full-pool rendezvous.
+            let (release_tx, release_rx) = channel::<()>();
+            self.submit(move || {
+                let _ = tx.send(release_tx);
+                let _ = release_rx.recv();
+            });
+        }
+        let gates: Vec<Sender<()>> = (0..self.size).map(|_| rx.recv().unwrap()).collect();
+        for g in gates {
+            let _ = g.send(());
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Handle to a pool job's result.
+pub struct JobHandle<R> {
+    rx: Receiver<R>,
+}
+
+impl<R> JobHandle<R> {
+    /// Wait for the result.
+    pub fn join(self) -> R {
+        self.rx.recv().expect("job panicked or pool dropped")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn executes_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let handles: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.submit_with_result(move || c.fetch_add(1, Ordering::Relaxed))
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn results_come_back() {
+        let pool = WorkerPool::new(2);
+        let h1 = pool.submit_with_result(|| 6 * 7);
+        let h2 = pool.submit_with_result(|| "hello".to_string());
+        assert_eq!(h1.join(), 42);
+        assert_eq!(h2.join(), "hello");
+    }
+
+    #[test]
+    fn barrier_waits_for_all() {
+        let pool = WorkerPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..30 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.barrier();
+        assert_eq!(counter.load(Ordering::Relaxed), 30);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        } // drop waits for the queue to drain
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+}

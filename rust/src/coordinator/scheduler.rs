@@ -1,0 +1,130 @@
+//! Curve-segment scheduling: hand out contiguous Hilbert-order ranges.
+//!
+//! Contiguity is the point — a contiguous order-value range is a spatially
+//! compact blob of the grid (the Hilbert curve's defining property), so a
+//! worker that processes one chunk end-to-end enjoys the same locality the
+//! serial loop would.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Dynamic chunk queue over the order-value range `[0, total)`.
+///
+/// Lock-free: a single atomic cursor; each `next_chunk` claims the next
+/// `chunk`-sized contiguous segment.
+#[derive(Debug)]
+pub struct ChunkQueue {
+    cursor: AtomicU64,
+    total: u64,
+    chunk: u64,
+}
+
+impl ChunkQueue {
+    /// Queue over `[0, total)` with the given chunk size (≥ 1).
+    pub fn new(total: u64, chunk: u64) -> Self {
+        assert!(chunk >= 1, "chunk size must be ≥ 1");
+        ChunkQueue { cursor: AtomicU64::new(0), total, chunk }
+    }
+
+    /// Claim the next chunk; `None` once the range is exhausted.
+    #[inline]
+    pub fn next_chunk(&self) -> Option<(u64, u64)> {
+        let start = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+        if start >= self.total {
+            return None;
+        }
+        Some((start, (start + self.chunk).min(self.total)))
+    }
+
+    /// Remaining order values (approximate under concurrency).
+    pub fn remaining(&self) -> u64 {
+        self.total.saturating_sub(self.cursor.load(Ordering::Relaxed))
+    }
+}
+
+/// Static partition of `[0, total)` into `parts` near-equal contiguous
+/// ranges (the zero-coordination alternative to [`ChunkQueue`]).
+pub fn static_ranges(total: u64, parts: usize) -> Vec<(u64, u64)> {
+    assert!(parts >= 1);
+    let parts = parts as u64;
+    let base = total / parts;
+    let rem = total % parts;
+    let mut out = Vec::with_capacity(parts as usize);
+    let mut start = 0u64;
+    for p in 0..parts {
+        let len = base + u64::from(p < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_partition_range() {
+        let q = ChunkQueue::new(100, 7);
+        let mut seen = vec![false; 100];
+        while let Some((s, e)) = q.next_chunk() {
+            for x in s..e {
+                assert!(!seen[x as usize], "duplicate at {x}");
+                seen[x as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn concurrent_claims_are_disjoint() {
+        let q = ChunkQueue::new(10_000, 13);
+        let mut claimed: Vec<(u64, u64)> = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut mine = Vec::new();
+                        while let Some(c) = q.next_chunk() {
+                            mine.push(c);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            for h in handles {
+                claimed.extend(h.join().unwrap());
+            }
+        });
+        claimed.sort_unstable();
+        let total: u64 = claimed.iter().map(|&(s, e)| e - s).sum();
+        assert_eq!(total, 10_000);
+        for w in claimed.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "gap or overlap between {:?} and {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn remaining_decreases() {
+        let q = ChunkQueue::new(20, 10);
+        assert_eq!(q.remaining(), 20);
+        q.next_chunk();
+        assert_eq!(q.remaining(), 10);
+    }
+
+    #[test]
+    fn static_ranges_cover() {
+        for (total, parts) in [(100u64, 3usize), (7, 10), (0, 2), (64, 64)] {
+            let ranges = static_ranges(total, parts);
+            assert_eq!(ranges.len(), parts);
+            let sum: u64 = ranges.iter().map(|&(s, e)| e - s).sum();
+            assert_eq!(sum, total);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            // Near-equal: lengths differ by at most 1.
+            let lens: Vec<u64> = ranges.iter().map(|&(s, e)| e - s).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+}

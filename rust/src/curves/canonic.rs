@@ -1,0 +1,108 @@
+//! Canonic (row-major) order 𝒩(i,j) = i·n + j — the nested-loop baseline.
+//!
+//! Unlike the fractal curves, the canonic order depends on the grid width
+//! `n`, so it is exposed as an instance API. A width-2³²-fixed variant
+//! [`CanonicFixed`] implements [`SpaceFillingCurve`] for generic code that
+//! needs a stateless baseline.
+
+use super::SpaceFillingCurve;
+
+/// Row-major order over a grid of fixed width.
+#[derive(Copy, Clone, Debug)]
+pub struct Canonic {
+    n: u32,
+}
+
+impl Canonic {
+    /// Canonic order for an `…×n` grid (width `n` columns).
+    pub fn new(n: u32) -> Self {
+        assert!(n > 0, "grid width must be positive");
+        Canonic { n }
+    }
+
+    /// 𝒩(i,j) = i·n + j.
+    #[inline]
+    pub fn order(&self, i: u32, j: u32) -> u64 {
+        debug_assert!(j < self.n);
+        (i as u64) * (self.n as u64) + j as u64
+    }
+
+    /// Inverse of [`Canonic::order`].
+    #[inline]
+    pub fn coords(&self, c: u64) -> (u32, u32) {
+        ((c / self.n as u64) as u32, (c % self.n as u64) as u32)
+    }
+
+    /// Grid width.
+    pub fn width(&self) -> u32 {
+        self.n
+    }
+}
+
+/// Stateless canonic order with the width fixed at 2³²: bijective on the
+/// whole `u32 × u32` domain, suitable as the generic baseline curve.
+#[derive(Copy, Clone, Debug)]
+pub struct CanonicFixed;
+
+impl SpaceFillingCurve for CanonicFixed {
+    const NAME: &'static str = "canonic";
+
+    #[inline]
+    fn order(i: u32, j: u32) -> u64 {
+        ((i as u64) << 32) | j as u64
+    }
+
+    #[inline]
+    fn coords(c: u64) -> (u32, u32) {
+        ((c >> 32) as u32, c as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn order_matches_definition() {
+        let c = Canonic::new(10);
+        assert_eq!(c.order(0, 0), 0);
+        assert_eq!(c.order(0, 9), 9);
+        assert_eq!(c.order(1, 0), 10);
+        assert_eq!(c.order(3, 7), 37);
+    }
+
+    #[test]
+    fn roundtrip_instance() {
+        let c = Canonic::new(17);
+        for i in 0..40u32 {
+            for j in 0..17u32 {
+                assert_eq!(c.coords(c.order(i, j)), (i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_fixed_property() {
+        forall::<(u32, u32)>("canonic-fixed-roundtrip", |&(i, j)| {
+            CanonicFixed::coords(CanonicFixed::order(i, j)) == (i, j)
+        });
+    }
+
+    #[test]
+    fn fixed_is_monotone_rowmajor() {
+        assert!(CanonicFixed::order(0, 5) < CanonicFixed::order(1, 0));
+        assert!(CanonicFixed::order(2, 3) < CanonicFixed::order(2, 4));
+    }
+
+    #[test]
+    fn transpose() {
+        assert_eq!(CanonicFixed::order_t(3, 4), CanonicFixed::order(4, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_width_rejected() {
+        Canonic::new(0);
+    }
+}

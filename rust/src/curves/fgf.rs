@@ -1,0 +1,604 @@
+//! FGF-Hilbert loops (§6.2): jump-over of bisection quadrants for general
+//! iteration regions.
+//!
+//! Instead of discarding out-of-region `(i,j)` pairs one by one, the
+//! FGF (<u>F</u>ast <u>G</u>eneral <u>F</u>orm) traversal decides for whole
+//! `2^ℓ × 2^ℓ` bisection quadrants — at any level ℓ — whether they can be
+//! safely discarded. Finding the re-entry point costs `O(log n)` (the
+//! quadtree descent), but arbitrarily shaped regions become iterable:
+//! triangles (`i < j` pair loops), rectangles, and index-driven candidate
+//! masks for the similarity join.
+//!
+//! Crucially (paper §6.2), the **1:1 relationship between order value and
+//! coordinate pair is maintained**: skipped quadrants advance the Hilbert
+//! value by `4^ℓ`, so every visited pair is reported with its *true*
+//! Hilbert value `h = ℋ(i,j)` — usable as a stable pair identifier (e.g.
+//! for edge lookups in graph algorithms).
+
+use super::hilbert::{INV, STATE_D, STATE_U};
+
+/// Classification of a bisection quadrant against a region.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum BlockClass {
+    /// No cell of the block is in the region — jump over it.
+    Disjoint,
+    /// Every cell of the block is in the region — descend without further
+    /// classification.
+    Full,
+    /// Mixed — descend and classify children.
+    Partial,
+}
+
+/// An iteration region over the `2^L × 2^L` cover grid.
+pub trait Region {
+    /// Classify the `2^level × 2^level` block anchored at `(i0, j0)`.
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass;
+
+    /// Classify with the block's base Hilbert value `h0` supplied by the
+    /// traversal (aligned blocks occupy `[h0, h0 + 4^level)`). Regions
+    /// indexed by order value override this to skip the coordinate
+    /// round-trip; the default ignores `h0`.
+    #[inline]
+    fn classify_h(&self, i0: u32, j0: u32, _h0: u64, level: u32) -> BlockClass {
+        self.classify(i0, j0, level)
+    }
+
+    /// Cell-level membership (derived from `classify` at level 0).
+    fn contains(&self, i: u32, j: u32) -> bool {
+        self.classify(i, j, 0) == BlockClass::Full
+    }
+}
+
+/// The strict upper triangle `i < j` — the paper's canonical example for
+/// self-join pair loops (each unordered pair visited once).
+#[derive(Copy, Clone, Debug)]
+pub struct UpperTriangle;
+
+impl Region for UpperTriangle {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        let s = 1u64 << level;
+        let (i0, j0) = (i0 as u64, j0 as u64);
+        if i0 + s <= j0 {
+            // max i = i0+s−1 < j0 = min j ⇒ all pairs satisfy i < j.
+            BlockClass::Full
+        } else if i0 + 1 >= j0 + s {
+            // min i = i0 ≥ j0+s−1 = max j ⇒ no pair satisfies i < j.
+            BlockClass::Disjoint
+        } else {
+            BlockClass::Partial
+        }
+    }
+}
+
+/// The inclusive lower triangle `i ≥ j` — the shape of a trailing
+/// Cholesky update and of symmetric-matrix block loops.
+#[derive(Copy, Clone, Debug)]
+pub struct LowerTriangleIncl;
+
+impl Region for LowerTriangleIncl {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        let s = 1u64 << level;
+        let (i0, j0) = (i0 as u64, j0 as u64);
+        if i0 >= j0 + s - 1 {
+            // min i ≥ max j ⇒ every cell has i ≥ j.
+            BlockClass::Full
+        } else if i0 + s <= j0 + 1 {
+            // max i = i0+s−1 < … ⇒ i < j everywhere.
+            BlockClass::Disjoint
+        } else {
+            BlockClass::Partial
+        }
+    }
+}
+
+/// The quarter-plane `i ≥ i_min ∧ j ≥ j_min` — composes (via
+/// [`Intersect`]) into trailing-submatrix shapes.
+#[derive(Copy, Clone, Debug)]
+pub struct MinBounds {
+    /// Minimum row (inclusive).
+    pub i_min: u32,
+    /// Minimum column (inclusive).
+    pub j_min: u32,
+}
+
+impl Region for MinBounds {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        let s = 1u64 << level;
+        if (i0 as u64) + s <= self.i_min as u64 || (j0 as u64) + s <= self.j_min as u64 {
+            BlockClass::Disjoint
+        } else if i0 >= self.i_min && j0 >= self.j_min {
+            BlockClass::Full
+        } else {
+            BlockClass::Partial
+        }
+    }
+}
+
+/// An `n×m` rectangle `{0..n} × {0..m}` — FGF's answer to non-square grids
+/// (§6's overhead comparison baseline against FUR).
+#[derive(Copy, Clone, Debug)]
+pub struct Rect {
+    /// Rows.
+    pub n: u32,
+    /// Columns.
+    pub m: u32,
+}
+
+impl Region for Rect {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        let s = 1u64 << level;
+        if i0 as u64 >= self.n as u64 || j0 as u64 >= self.m as u64 {
+            BlockClass::Disjoint
+        } else if i0 as u64 + s <= self.n as u64 && j0 as u64 + s <= self.m as u64 {
+            BlockClass::Full
+        } else {
+            BlockClass::Partial
+        }
+    }
+}
+
+/// Intersection of two regions.
+#[derive(Copy, Clone, Debug)]
+pub struct Intersect<A, B>(pub A, pub B);
+
+impl<A: Region, B: Region> Region for Intersect<A, B> {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        match (self.0.classify(i0, j0, level), self.1.classify(i0, j0, level)) {
+            (BlockClass::Disjoint, _) | (_, BlockClass::Disjoint) => BlockClass::Disjoint,
+            (BlockClass::Full, BlockClass::Full) => BlockClass::Full,
+            _ => BlockClass::Partial,
+        }
+    }
+}
+
+/// A region defined by a per-cell predicate; blocks are always `Partial`
+/// (no pruning) — the generic fallback and the "skip one-by-one" baseline
+/// FGF is compared against.
+pub struct PredicateRegion<F: Fn(u32, u32) -> bool>(pub F);
+
+impl<F: Fn(u32, u32) -> bool> Region for PredicateRegion<F> {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        if level == 0 {
+            if (self.0)(i0, j0) {
+                BlockClass::Full
+            } else {
+                BlockClass::Disjoint
+            }
+        } else {
+            BlockClass::Partial
+        }
+    }
+}
+
+/// A coarse bitmask region: the grid is divided into `granularity ×
+/// granularity` blocks (`granularity` a power of two) and a bit per block
+/// marks candidate areas. This is the index-driven shape the similarity
+/// join feeds FGF (paper §7): block = (cell-pair of the data-space grid
+/// index).
+#[derive(Clone, Debug)]
+pub struct BlockMask {
+    /// log2 of the block side.
+    pub block_level: u32,
+    /// Blocks per side.
+    pub blocks: u32,
+    /// Row-major bit per block.
+    pub mask: Vec<bool>,
+}
+
+impl BlockMask {
+    /// Create an all-false mask with `blocks × blocks` entries of side
+    /// `2^block_level`.
+    pub fn new(block_level: u32, blocks: u32) -> Self {
+        BlockMask {
+            block_level,
+            blocks,
+            mask: vec![false; (blocks as usize) * (blocks as usize)],
+        }
+    }
+
+    /// Mark block `(bi, bj)` as candidate.
+    pub fn set(&mut self, bi: u32, bj: u32) {
+        self.mask[(bi * self.blocks + bj) as usize] = true;
+    }
+
+    /// Is block `(bi, bj)` marked?
+    pub fn get(&self, bi: u32, bj: u32) -> bool {
+        self.mask
+            .get((bi * self.blocks + bj) as usize)
+            .copied()
+            .unwrap_or(false)
+    }
+
+    /// Fraction of marked blocks.
+    pub fn density(&self) -> f64 {
+        self.mask.iter().filter(|&&b| b).count() as f64 / self.mask.len() as f64
+    }
+}
+
+impl Region for BlockMask {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        if level >= self.block_level {
+            // One or more whole mask blocks.
+            let shift = level - self.block_level;
+            let bi0 = (i0 >> self.block_level) as u64;
+            let bj0 = (j0 >> self.block_level) as u64;
+            let span = 1u64 << shift;
+            let mut any = false;
+            let mut all = true;
+            for bi in bi0..(bi0 + span).min(self.blocks as u64) {
+                for bj in bj0..(bj0 + span).min(self.blocks as u64) {
+                    if self.get(bi as u32, bj as u32) {
+                        any = true;
+                    } else {
+                        all = false;
+                    }
+                }
+            }
+            if bi0 + span > self.blocks as u64 || bj0 + span > self.blocks as u64 {
+                all = false; // partially outside the mask ⇒ treat as absent
+            }
+            match (any, all) {
+                (false, _) => BlockClass::Disjoint,
+                (true, true) => BlockClass::Full,
+                (true, false) => BlockClass::Partial,
+            }
+        } else {
+            // Sub-block of one mask block.
+            if self.get(i0 >> self.block_level, j0 >> self.block_level) {
+                BlockClass::Full
+            } else {
+                BlockClass::Disjoint
+            }
+        }
+    }
+}
+
+/// A sparse cell set indexed by **Hilbert order value** — the fast region
+/// for jump-over (§Perf).
+///
+/// Because an aligned `2^ℓ × 2^ℓ` bisection quadrant occupies one
+/// *contiguous* order-value range `[h₀, h₀ + 4^ℓ)`, classifying a block
+/// against the set is a single binary search over the sorted values —
+/// `O(log |set|)` instead of scanning a dense mask. This is the paper's
+/// own observation (§6.2) that edges/candidates "may be facilitated by
+/// determining the Hilbert values … and sorting according to the Hilbert
+/// value", applied to the region test itself.
+#[derive(Clone, Debug)]
+pub struct HilbertSet {
+    /// Sorted, deduplicated Hilbert order values (at the cover level).
+    values: Vec<u64>,
+    /// Cover level the values were computed at.
+    pub level: u32,
+}
+
+impl HilbertSet {
+    /// Build from cell coordinates on the `2^level` cover grid.
+    pub fn from_cells(level: u32, cells: impl IntoIterator<Item = (u32, u32)>) -> Self {
+        let mut values: Vec<u64> = cells
+            .into_iter()
+            .map(|(i, j)| super::hilbert::Hilbert::order_at_level(i, j, level))
+            .collect();
+        values.sort_unstable();
+        values.dedup();
+        HilbertSet { values, level }
+    }
+
+    /// Build directly from order values (must be at the same cover level).
+    pub fn from_values(level: u32, mut values: Vec<u64>) -> Self {
+        values.sort_unstable();
+        values.dedup();
+        HilbertSet { values, level }
+    }
+
+    /// Number of cells in the set.
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True if the set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+impl HilbertSet {
+    #[inline]
+    fn classify_range(&self, h0: u64, level: u32) -> BlockClass {
+        let size = 1u64 << (2 * level);
+        let lb = self.values.partition_point(|&v| v < h0);
+        let ub = self.values.partition_point(|&v| v < h0 + size);
+        let present = (ub - lb) as u64;
+        if present == 0 {
+            BlockClass::Disjoint
+        } else if present == size {
+            BlockClass::Full
+        } else {
+            BlockClass::Partial
+        }
+    }
+}
+
+impl Region for HilbertSet {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        // Aligned block ⇒ contiguous order-value range.
+        let size = 1u64 << (2 * level);
+        let h0 = super::hilbert::Hilbert::order_at_level(i0, j0, self.level) & !(size - 1);
+        self.classify_range(h0, level)
+    }
+
+    #[inline]
+    fn classify_h(&self, _i0: u32, _j0: u32, h0: u64, level: u32) -> BlockClass {
+        self.classify_range(h0, level)
+    }
+}
+
+/// Statistics of one FGF traversal.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct FgfStats {
+    /// Pairs visited (in the region).
+    pub visited: u64,
+    /// Jump-over events (whole quadrants discarded), per level summed.
+    pub jumps: u64,
+    /// Order values skipped by jumps (= pairs *not* generated that the
+    /// round-up baseline would have generated).
+    pub skipped: u64,
+    /// Classification calls made (the traversal's overhead measure).
+    pub classifications: u64,
+}
+
+/// Run `body(i, j, h)` over every region cell of the `2^level` cover grid
+/// in Hilbert order, with `h` the true Hilbert value of `(i, j)`.
+pub fn fgf_hilbert_loop<R: Region>(
+    level: u32,
+    region: &R,
+    mut body: impl FnMut(u32, u32, u64),
+) -> FgfStats {
+    assert!(level <= 16, "level {level} exceeds supported 16");
+    let mut stats = FgfStats::default();
+    let start = if level % 2 == 0 { STATE_U } else { STATE_D };
+    descend(start, level, 0, 0, 0, region, false, &mut stats, &mut body);
+    stats
+}
+
+#[allow(clippy::too_many_arguments)]
+fn descend<R: Region>(
+    state: u8,
+    level: u32,
+    i0: u32,
+    j0: u32,
+    h0: u64,
+    region: &R,
+    known_full: bool,
+    stats: &mut FgfStats,
+    body: &mut impl FnMut(u32, u32, u64),
+) {
+    let full = known_full || {
+        stats.classifications += 1;
+        match region.classify_h(i0, j0, h0, level) {
+            BlockClass::Disjoint => {
+                stats.jumps += 1;
+                stats.skipped += 1u64 << (2 * level);
+                return;
+            }
+            BlockClass::Full => true,
+            BlockClass::Partial => false,
+        }
+    };
+    if level == 0 {
+        stats.visited += 1;
+        body(i0, j0, h0);
+        return;
+    }
+    let half = 1u32 << (level - 1);
+    let step = 1u64 << (2 * (level - 1));
+    for digit in 0..4u64 {
+        let (ib, jb, next) = INV[state as usize][digit as usize];
+        descend(
+            next,
+            level - 1,
+            i0 + (ib as u32) * half,
+            j0 + (jb as u32) * half,
+            h0 + digit * step,
+            region,
+            full,
+            stats,
+            body,
+        );
+    }
+}
+
+/// Collect the traversal (testing/analysis helper).
+pub fn fgf_path<R: Region>(level: u32, region: &R) -> (Vec<(u32, u32, u64)>, FgfStats) {
+    let mut out = Vec::new();
+    let stats = fgf_hilbert_loop(level, region, |i, j, h| out.push((i, j, h)));
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::hilbert::Hilbert;
+    use std::collections::HashSet;
+
+    #[test]
+    fn triangle_visits_exactly_i_lt_j() {
+        let level = 4u32;
+        let n = 1u32 << level;
+        let (path, stats) = fgf_path(level, &UpperTriangle);
+        let set: HashSet<(u32, u32)> = path.iter().map(|&(i, j, _)| (i, j)).collect();
+        assert_eq!(set.len() as u64, stats.visited);
+        let expected = (n as u64) * (n as u64 - 1) / 2;
+        assert_eq!(set.len() as u64, expected);
+        assert!(set.iter().all(|&(i, j)| i < j));
+    }
+
+    #[test]
+    fn true_hilbert_values_maintained() {
+        // Paper §6.2: the 1:1 order-value/pair relationship survives
+        // jump-over.
+        let (path, _) = fgf_path(5, &UpperTriangle);
+        for &(i, j, h) in &path {
+            assert_eq!(Hilbert::order_at_level(i, j, 5), h, "({i},{j})");
+        }
+        // And the h sequence is strictly increasing (Hilbert order).
+        assert!(path.windows(2).all(|w| w[0].2 < w[1].2));
+    }
+
+    #[test]
+    fn rect_region_matches_grid() {
+        let (n, m) = (10u32, 23u32);
+        let level = 5u32; // 32×32 cover
+        let (path, stats) = fgf_path(level, &Rect { n, m });
+        assert_eq!(path.len(), (n * m) as usize);
+        assert!(path.iter().all(|&(i, j, _)| i < n && j < m));
+        assert!(stats.skipped > 0, "must jump over out-of-rect quadrants");
+    }
+
+    #[test]
+    fn jump_over_beats_per_cell_filtering() {
+        // FGF's point: the predicate baseline classifies every cell of the
+        // cover grid; jump-over classifies a logarithmic envelope.
+        let level = 6u32;
+        let rect = Rect { n: 7, m: 60 };
+        let (_, smart) = fgf_path(level, &rect);
+        let pred = PredicateRegion(|i, j| i < 7 && j < 60);
+        let (_, dumb) = fgf_path(level, &pred);
+        assert_eq!(smart.visited, dumb.visited);
+        assert!(
+            smart.classifications < dumb.classifications / 4,
+            "jump-over {} vs per-cell {}",
+            smart.classifications,
+            dumb.classifications
+        );
+    }
+
+    #[test]
+    fn full_grid_region_equals_plain_hilbert() {
+        let level = 3u32;
+        let n = 1u32 << level;
+        let (path, stats) = fgf_path(level, &Rect { n, m: n });
+        let plain: Vec<_> = crate::curves::nonrecursive::HilbertIter::with_level(level).collect();
+        let got: Vec<_> = path.iter().map(|&(i, j, _)| (i, j)).collect();
+        assert_eq!(got, plain);
+        assert_eq!(stats.jumps, 0);
+    }
+
+    #[test]
+    fn intersect_region() {
+        let level = 4u32;
+        let r = Intersect(UpperTriangle, Rect { n: 8, m: 12 });
+        let (path, _) = fgf_path(level, &r);
+        assert!(path.iter().all(|&(i, j, _)| i < j && i < 8 && j < 12));
+        let brute = (0..8u32)
+            .flat_map(|i| (0..12u32).map(move |j| (i, j)))
+            .filter(|&(i, j)| i < j)
+            .count();
+        assert_eq!(path.len(), brute);
+    }
+
+    #[test]
+    fn lower_triangle_incl_complements_upper() {
+        let level = 4u32;
+        let n = 1u32 << level;
+        let (lower, _) = fgf_path(level, &LowerTriangleIncl);
+        let (upper, _) = fgf_path(level, &UpperTriangle);
+        assert_eq!(lower.len() + upper.len(), (n as usize) * (n as usize));
+        assert!(lower.iter().all(|&(i, j, _)| i >= j));
+    }
+
+    #[test]
+    fn min_bounds_trailing_shape() {
+        let r = Intersect(LowerTriangleIncl, MinBounds { i_min: 3, j_min: 3 });
+        let (path, stats) = fgf_path(4, &r);
+        assert!(path.iter().all(|&(i, j, _)| i >= j && i >= 3 && j >= 3));
+        let brute = (3..16u32).map(|i| i - 3 + 1).sum::<u32>() as usize;
+        assert_eq!(path.len(), brute);
+        assert!(stats.jumps > 0);
+    }
+
+    #[test]
+    fn block_mask_region() {
+        let mut mask = BlockMask::new(2, 4); // 4×4 blocks of 4×4 cells = 16×16 grid
+        mask.set(0, 0);
+        mask.set(2, 3);
+        let (path, _) = fgf_path(4, &mask);
+        assert_eq!(path.len(), 2 * 16);
+        assert!(path
+            .iter()
+            .all(|&(i, j, _)| (i < 4 && j < 4) || ((8..12).contains(&i) && (12..16).contains(&j))));
+    }
+
+    #[test]
+    fn hilbert_set_equals_block_mask_traversal() {
+        // HilbertSet and BlockMask(level 0) define the same region; the
+        // traversals must visit identical cells in identical order.
+        let level = 5u32;
+        let mut mask = BlockMask::new(0, 1 << level);
+        let cells = [(3u32, 7u32), (0, 0), (31, 31), (12, 13), (12, 14), (13, 13)];
+        for &(i, j) in &cells {
+            mask.set(i, j);
+        }
+        let set = HilbertSet::from_cells(level, cells.iter().copied());
+        assert_eq!(set.len(), cells.len());
+        let (a, _) = fgf_path(level, &mask);
+        let (b, _) = fgf_path(level, &set);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hilbert_set_classify_is_consistent() {
+        use crate::util::check::forall_seeded;
+        forall_seeded::<(u32, u32)>("hilbertset-consistency", 77, 64, |&(seed, _)| {
+            let level = 4u32;
+            let side = 1u32 << level;
+            let mut rng = crate::util::rng::Rng::new(seed as u64);
+            let cells: Vec<(u32, u32)> = (0..20)
+                .map(|_| (rng.below(side as u64) as u32, rng.below(side as u64) as u32))
+                .collect();
+            let set = HilbertSet::from_cells(level, cells.iter().copied());
+            let inset: std::collections::HashSet<_> = cells.iter().copied().collect();
+            let (path, _) = fgf_path(level, &set);
+            let visited: std::collections::HashSet<_> =
+                path.iter().map(|&(i, j, _)| (i, j)).collect();
+            visited == inset
+        });
+    }
+
+    #[test]
+    fn hilbert_set_full_grid_is_full() {
+        let level = 3u32;
+        let side = 1u32 << level;
+        let all: Vec<(u32, u32)> =
+            (0..side).flat_map(|i| (0..side).map(move |j| (i, j))).collect();
+        let set = HilbertSet::from_cells(level, all);
+        assert_eq!(set.classify(0, 0, level), BlockClass::Full);
+        let (_, stats) = fgf_path(level, &set);
+        assert_eq!(stats.jumps, 0);
+        assert!(HilbertSet::from_cells(3, std::iter::empty()).is_empty());
+    }
+
+    #[test]
+    fn block_mask_density() {
+        let mut mask = BlockMask::new(1, 2);
+        assert_eq!(mask.density(), 0.0);
+        mask.set(0, 1);
+        assert_eq!(mask.density(), 0.25);
+    }
+
+    #[test]
+    fn stats_account_for_all_values() {
+        // visited + skipped = 4^level: every order value is either visited
+        // or jumped, never both.
+        let level = 5u32;
+        let (_, stats) = fgf_path(level, &UpperTriangle);
+        assert_eq!(stats.visited + stats.skipped, 1u64 << (2 * level));
+    }
+
+    #[test]
+    fn empty_region() {
+        let (path, stats) = fgf_path(4, &Rect { n: 0, m: 10 });
+        assert!(path.is_empty());
+        assert_eq!(stats.visited, 0);
+        assert_eq!(stats.skipped, 256);
+    }
+}

@@ -1,0 +1,108 @@
+//! Gray-code curve 𝒢 (Faloutsos & Roseman [13]; paper §2.1).
+//!
+//! The order value is the *Gray-code rank* of the bit-interleaved
+//! coordinates: `𝒢(i,j) = gray⁻¹(ℤ(i,j))`. Consecutive order values then
+//! differ in exactly one bit of the interleaved word, i.e. one coordinate
+//! changes by a power of two — smaller jumps than the Z-order's worst case,
+//! though not the unit steps of Hilbert.
+
+use super::zorder::{compact, spread};
+use super::SpaceFillingCurve;
+
+/// Gray code of `x` (binary-reflected).
+#[inline]
+pub fn gray(x: u64) -> u64 {
+    x ^ (x >> 1)
+}
+
+/// Inverse Gray code (prefix-xor).
+#[inline]
+pub fn gray_inv(mut g: u64) -> u64 {
+    g ^= g >> 1;
+    g ^= g >> 2;
+    g ^= g >> 4;
+    g ^= g >> 8;
+    g ^= g >> 16;
+    g ^= g >> 32;
+    g
+}
+
+/// The Gray-code curve.
+#[derive(Copy, Clone, Debug)]
+pub struct GrayCode;
+
+impl SpaceFillingCurve for GrayCode {
+    const NAME: &'static str = "gray";
+
+    #[inline]
+    fn order(i: u32, j: u32) -> u64 {
+        gray_inv((spread(i) << 1) | spread(j))
+    }
+
+    #[inline]
+    fn coords(c: u64) -> (u32, u32) {
+        let z = gray(c);
+        (compact(z >> 1), compact(z))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use std::collections::HashSet;
+
+    #[test]
+    fn gray_code_basics() {
+        assert_eq!(gray(0), 0);
+        assert_eq!(gray(1), 1);
+        assert_eq!(gray(2), 3);
+        assert_eq!(gray(3), 2);
+        assert_eq!(gray(4), 6);
+    }
+
+    #[test]
+    fn gray_inverse_property() {
+        forall::<u64>("gray-inverse", |&x| gray_inv(gray(x)) == x && gray(gray_inv(x)) == x);
+    }
+
+    #[test]
+    fn successive_gray_codes_differ_one_bit() {
+        forall::<u64>("gray-one-bit", |&x| {
+            let x = x & (u64::MAX >> 1);
+            (gray(x) ^ gray(x + 1)).count_ones() == 1
+        });
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall::<(u32, u32)>("graycurve-roundtrip", |&(i, j)| {
+            GrayCode::coords(GrayCode::order(i, j)) == (i, j)
+        });
+    }
+
+    #[test]
+    fn bijective_on_grid() {
+        let vals: HashSet<u64> = (0..16u32)
+            .flat_map(|i| (0..16u32).map(move |j| GrayCode::order(i, j)))
+            .collect();
+        assert_eq!(vals.len(), 256);
+        assert_eq!(*vals.iter().max().unwrap(), 255);
+    }
+
+    #[test]
+    fn steps_are_single_coordinate_power_of_two() {
+        // The Gray-curve locality guarantee: one coordinate moves by ±2^k,
+        // the other is unchanged.
+        for c in 0..4095u64 {
+            let (i0, j0) = GrayCode::coords(c);
+            let (i1, j1) = GrayCode::coords(c + 1);
+            let di = (i1 as i64 - i0 as i64).unsigned_abs();
+            let dj = (j1 as i64 - j0 as i64).unsigned_abs();
+            assert!(
+                (di == 0 && dj.is_power_of_two()) || (dj == 0 && di.is_power_of_two()),
+                "c={c}: ({i0},{j0})→({i1},{j1})"
+            );
+        }
+    }
+}

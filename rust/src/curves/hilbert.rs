@@ -1,0 +1,305 @@
+//! The Hilbert curve as a Mealy automaton (§3, Fig 3 of the paper).
+//!
+//! The four automaton states are the basic traversal patterns `U`, `D`, `A`,
+//! `C` (named after the letter shapes they draw). Each state transition
+//! consumes one input bit pair `(i_ℓ, j_ℓ)` and emits one four-adic output
+//! digit `h_ℓ`; the inverse automaton swaps input and output.
+//!
+//! Quadrant visit orders (coordinates top-down: `(i_bit, j_bit)`,
+//! `(0,0)` = upper-left, `(1,0)` = lower-left):
+//!
+//! ```text
+//! U: (0,0)→0  (1,0)→1  (1,1)→2  (0,1)→3     enters UL, exits UR
+//! D: (0,0)→0  (0,1)→1  (1,1)→2  (1,0)→3     enters UL, exits LL
+//! A: (1,1)→0  (0,1)→1  (0,0)→2  (1,0)→3     enters LR, exits LL
+//! C: (1,1)→0  (1,0)→1  (0,0)→2  (0,1)→3     enters LR, exits UR
+//! ```
+//!
+//! As the paper observes, the `U↔D` transition is labelled `(0,0)→0`, so
+//! leading zero bit pairs only toggle between `U` and `D` and can be skipped
+//! entirely: the *variable-resolution* functions [`Hilbert::order`] /
+//! [`Hilbert::coords`] pick the start state by the parity rule
+//! (`U` if the number of considered bit pairs is even, `D` if odd) and are
+//! therefore consistent across all resolutions `L ≥ L(i,j)`.
+
+use super::SpaceFillingCurve;
+
+/// Automaton states, indexed `U=0, D=1, A=2, C=3`.
+pub const STATE_U: u8 = 0;
+/// State `D`.
+pub const STATE_D: u8 = 1;
+/// State `A`.
+pub const STATE_A: u8 = 2;
+/// State `C`.
+pub const STATE_C: u8 = 3;
+
+/// Forward transitions: `TRANS[state][(i_bit << 1) | j_bit] = (digit, next)`.
+pub const TRANS: [[(u8, u8); 4]; 4] = [
+    // U
+    [(0, STATE_D), (3, STATE_C), (1, STATE_U), (2, STATE_U)],
+    // D
+    [(0, STATE_U), (1, STATE_D), (3, STATE_A), (2, STATE_D)],
+    // A
+    [(2, STATE_A), (1, STATE_A), (3, STATE_D), (0, STATE_C)],
+    // C
+    [(2, STATE_C), (3, STATE_U), (1, STATE_C), (0, STATE_A)],
+];
+
+/// Inverse transitions: `INV[state][digit] = (i_bit, j_bit, next)`.
+pub const INV: [[(u8, u8, u8); 4]; 4] = [
+    // U
+    [
+        (0, 0, STATE_D),
+        (1, 0, STATE_U),
+        (1, 1, STATE_U),
+        (0, 1, STATE_C),
+    ],
+    // D
+    [
+        (0, 0, STATE_U),
+        (0, 1, STATE_D),
+        (1, 1, STATE_D),
+        (1, 0, STATE_A),
+    ],
+    // A
+    [
+        (1, 1, STATE_C),
+        (0, 1, STATE_A),
+        (0, 0, STATE_A),
+        (1, 0, STATE_D),
+    ],
+    // C
+    [
+        (1, 1, STATE_A),
+        (1, 0, STATE_C),
+        (0, 0, STATE_C),
+        (0, 1, STATE_U),
+    ],
+];
+
+/// The Hilbert curve ℋ.
+#[derive(Copy, Clone, Debug)]
+pub struct Hilbert;
+
+impl Hilbert {
+    /// ℋ(i,j) at a fixed resolution of `level` bit pairs, starting from the
+    /// parity-correct state. Requires `i, j < 2^level` and `level ≤ 32`.
+    #[inline]
+    pub fn order_at_level(i: u32, j: u32, level: u32) -> u64 {
+        debug_assert!(level <= 32);
+        debug_assert!(level == 32 || (i < (1u64 << level) as u32 && j < (1u64 << level) as u32));
+        let mut state = if level % 2 == 0 { STATE_U } else { STATE_D };
+        let mut h: u64 = 0;
+        let mut l = level;
+        while l > 0 {
+            l -= 1;
+            let ib = (i >> l) & 1;
+            let jb = (j >> l) & 1;
+            let (digit, next) = TRANS[state as usize][((ib << 1) | jb) as usize];
+            h = (h << 2) | digit as u64;
+            state = next;
+        }
+        h
+    }
+
+    /// ℋ⁻¹(h) at a fixed resolution of `level` digit positions.
+    #[inline]
+    pub fn coords_at_level(h: u64, level: u32) -> (u32, u32) {
+        debug_assert!(level <= 32);
+        debug_assert!(level == 32 || h < 1u64 << (2 * level));
+        let mut state = if level % 2 == 0 { STATE_U } else { STATE_D };
+        let mut i: u32 = 0;
+        let mut j: u32 = 0;
+        let mut l = level;
+        while l > 0 {
+            l -= 1;
+            let digit = ((h >> (2 * l)) & 3) as usize;
+            let (ib, jb, next) = INV[state as usize][digit];
+            i = (i << 1) | ib as u32;
+            j = (j << 1) | jb as u32;
+            state = next;
+        }
+        (i, j)
+    }
+
+    /// Effective resolution `L(i,j) = ⌈log₂(max(i,j)+1)/2⌉·2` (paper §3):
+    /// the even number of bit pairs that the variable-resolution automaton
+    /// actually processes.
+    #[inline]
+    pub fn effective_level(i: u32, j: u32) -> u32 {
+        let m = i | j;
+        let bits = 32 - m.leading_zeros(); // bits needed for max(i,j)
+        (bits + 1) & !1 // round up to even
+    }
+
+    /// Effective resolution for an order value: `L(h) = ⌈log₄(h+1)/2⌉·2`
+    /// four-adic digits, rounded up to even.
+    #[inline]
+    pub fn effective_level_h(h: u64) -> u32 {
+        let bits = 64 - h.leading_zeros();
+        let digits = bits.div_ceil(2);
+        (digits + 1) & !1
+    }
+}
+
+impl SpaceFillingCurve for Hilbert {
+    const NAME: &'static str = "hilbert";
+
+    /// Variable-resolution ℋ(i,j): skips leading zero pairs per the paper's
+    /// parity rule, `O(log max(i,j))`.
+    #[inline]
+    fn order(i: u32, j: u32) -> u64 {
+        Self::order_at_level(i, j, Self::effective_level(i, j))
+    }
+
+    /// Variable-resolution ℋ⁻¹(h), `O(log h)`.
+    #[inline]
+    fn coords(c: u64) -> (u32, u32) {
+        Self::coords_at_level(c, Self::effective_level_h(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use std::collections::HashSet;
+
+    #[test]
+    fn fig3_4x4_table() {
+        // Level-2 Hilbert values over the 4×4 grid (start state U), derived
+        // from the Fig-3 automaton and cross-validated against the
+        // independent python fit in /tmp/hilbert_fit.py.
+        let expect: [[u64; 4]; 4] = [
+            [0, 1, 14, 15],
+            [3, 2, 13, 12],
+            [4, 7, 8, 11],
+            [5, 6, 9, 10],
+        ];
+        for i in 0..4u32 {
+            for j in 0..4u32 {
+                assert_eq!(
+                    Hilbert::order_at_level(i, j, 2),
+                    expect[i as usize][j as usize],
+                    "(i,j)=({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn level1_is_d_pattern() {
+        // Odd level ⇒ start state D: order (0,0),(0,1),(1,1),(1,0).
+        assert_eq!(Hilbert::order_at_level(0, 0, 1), 0);
+        assert_eq!(Hilbert::order_at_level(0, 1, 1), 1);
+        assert_eq!(Hilbert::order_at_level(1, 1, 1), 2);
+        assert_eq!(Hilbert::order_at_level(1, 0, 1), 3);
+    }
+
+    #[test]
+    fn roundtrip_fixed_levels() {
+        for level in 1..=6u32 {
+            let n = 1u32 << level;
+            let mut seen = HashSet::new();
+            for i in 0..n {
+                for j in 0..n {
+                    let h = Hilbert::order_at_level(i, j, level);
+                    assert!(h < (n as u64) * (n as u64));
+                    assert!(seen.insert(h), "duplicate at L={level} ({i},{j})");
+                    assert_eq!(Hilbert::coords_at_level(h, level), (i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unit_steps_at_level() {
+        // Consecutive order values are grid neighbours (the defining
+        // locality property of the Hilbert curve).
+        for level in 1..=5u32 {
+            let n = 1u64 << level;
+            let mut prev = Hilbert::coords_at_level(0, level);
+            for h in 1..n * n {
+                let p = Hilbert::coords_at_level(h, level);
+                let d = (p.0 as i64 - prev.0 as i64).abs() + (p.1 as i64 - prev.1 as i64).abs();
+                assert_eq!(d, 1, "L={level} h={h} {prev:?}→{p:?}");
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn parity_rule_level_consistency() {
+        // ℋ at level L and L+2 agree (leading zero pairs toggle U↔D and
+        // emit 0), which is what makes the variable-resolution API sound.
+        forall::<(u32, u32)>("hilbert-parity-consistency", |&(i, j)| {
+            let (i, j) = (i & 0xFFFF, j & 0xFFFF);
+            let l = Hilbert::effective_level(i, j);
+            Hilbert::order_at_level(i, j, l) == Hilbert::order_at_level(i, j, (l + 2).min(32))
+        });
+    }
+
+    #[test]
+    fn variable_resolution_roundtrip() {
+        forall::<(u32, u32)>("hilbert-roundtrip", |&(i, j)| {
+            Hilbert::coords(Hilbert::order(i, j)) == (i, j)
+        });
+    }
+
+    #[test]
+    fn variable_resolution_roundtrip_h() {
+        forall::<u64>("hilbert-roundtrip-h", |&h| {
+            let (i, j) = Hilbert::coords(h);
+            Hilbert::order(i, j) == h
+        });
+    }
+
+    #[test]
+    fn effective_level_examples() {
+        assert_eq!(Hilbert::effective_level(0, 0), 0);
+        assert_eq!(Hilbert::effective_level(1, 0), 2);
+        assert_eq!(Hilbert::effective_level(3, 2), 2);
+        assert_eq!(Hilbert::effective_level(4, 0), 4);
+        assert_eq!(Hilbert::effective_level(u32::MAX, 0), 32);
+    }
+
+    #[test]
+    fn u_d_transition_is_zero_labelled() {
+        // The paper's §3 observation enabling resolution independence.
+        assert_eq!(TRANS[STATE_U as usize][0], (0, STATE_D));
+        assert_eq!(TRANS[STATE_D as usize][0], (0, STATE_U));
+    }
+
+    #[test]
+    fn automaton_tables_are_mutually_inverse() {
+        for s in 0..4usize {
+            for input in 0..4usize {
+                let (digit, next) = TRANS[s][input];
+                let (ib, jb, inext) = INV[s][digit as usize];
+                assert_eq!(((ib << 1) | jb) as usize, input);
+                assert_eq!(inext, next);
+            }
+        }
+    }
+
+    #[test]
+    fn each_state_emits_all_digits() {
+        for s in 0..4usize {
+            let mut digits: Vec<u8> = TRANS[s].iter().map(|&(d, _)| d).collect();
+            digits.sort_unstable();
+            assert_eq!(digits, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn transpose_is_mirror() {
+        // ℋᵀ(i,j) = ℋ(j,i) is itself a valid Hilbert curve (the U↔D mirror).
+        let mut seen = HashSet::new();
+        for i in 0..8u32 {
+            for j in 0..8u32 {
+                seen.insert(Hilbert::order_t(i, j));
+            }
+        }
+        assert_eq!(seen.len(), 64);
+    }
+}

@@ -1,0 +1,190 @@
+//! Recursive Hilbert generation via the context-free grammar (§4, Fig 4).
+//!
+//! The Lindenmayer system has non-terminals `U, D, A, C` (one per Mealy
+//! state) and terminals `π ↓ ↑ → ←`. The production rules — derived from
+//! the Fig-3 automaton's quadrant orders and entry/exit corners — are:
+//!
+//! ```text
+//! U(ℓ) → D(ℓ−1) ↓ U(ℓ−1) → U(ℓ−1) ↑ C(ℓ−1)
+//! D(ℓ) → U(ℓ−1) → D(ℓ−1) ↓ D(ℓ−1) ← A(ℓ−1)
+//! A(ℓ) → C(ℓ−1) ↑ A(ℓ−1) ← A(ℓ−1) ↓ D(ℓ−1)
+//! C(ℓ) → A(ℓ−1) ← C(ℓ−1) ↑ C(ℓ−1) → U(ℓ−1)
+//! ```
+//!
+//! `π` (the host algorithm's loop body) fires at `ℓ = −1`. Generating the
+//! whole word costs `O(n²)` total — amortised **constant time per visited
+//! pair** (the recursive-call count is a geometric series `≤ 4n²/3`) — at
+//! the price of `O(log n)` stack, which §5's non-recursive variant removes.
+
+/// The four grammar non-terminals.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Enters upper-left, exits upper-right.
+    U,
+    /// Enters upper-left, exits lower-left.
+    D,
+    /// Enters lower-right, exits lower-left.
+    A,
+    /// Enters lower-right, exits upper-right.
+    C,
+}
+
+impl Pattern {
+    /// Start symbol for an `n×n` grid, `n = 2^L`: `U` if `L` even, else `D`
+    /// (the paper's parity rule).
+    pub fn start_for_level(level: u32) -> Pattern {
+        if level % 2 == 0 {
+            Pattern::U
+        } else {
+            Pattern::D
+        }
+    }
+}
+
+/// Generate the Hilbert traversal of the `n×n` grid (`n = 2^level`) and
+/// invoke `body(i, j)` for every cell, in Hilbert order.
+///
+/// Equivalent to the Mealy enumeration `(ℋ⁻¹(0), ℋ⁻¹(1), …)` but with
+/// constant amortised per-cell cost instead of `O(log n)`.
+pub fn hilbert_loop(level: u32, mut body: impl FnMut(u32, u32)) {
+    assert!(level <= 16, "level {level} exceeds supported 16 (n=65536)");
+    let mut gen = Gen {
+        i: 0,
+        j: 0,
+        body: &mut body,
+    };
+    // Start symbol at ℓ = level − 1 (π fires at ℓ = −1); level 0 is a
+    // single cell.
+    if level == 0 {
+        gen.emit();
+        return;
+    }
+    gen.expand(Pattern::start_for_level(level), level as i32 - 1);
+}
+
+struct Gen<'a, F: FnMut(u32, u32)> {
+    i: u32,
+    j: u32,
+    body: &'a mut F,
+}
+
+impl<F: FnMut(u32, u32)> Gen<'_, F> {
+    #[inline]
+    fn emit(&mut self) {
+        (self.body)(self.i, self.j);
+    }
+
+    fn expand(&mut self, p: Pattern, l: i32) {
+        if l < 0 {
+            self.emit();
+            return;
+        }
+        use Pattern::*;
+        match p {
+            U => {
+                self.expand(D, l - 1);
+                self.i += 1; // ↓
+                self.expand(U, l - 1);
+                self.j += 1; // →
+                self.expand(U, l - 1);
+                self.i -= 1; // ↑
+                self.expand(C, l - 1);
+            }
+            D => {
+                self.expand(U, l - 1);
+                self.j += 1; // →
+                self.expand(D, l - 1);
+                self.i += 1; // ↓
+                self.expand(D, l - 1);
+                self.j -= 1; // ←
+                self.expand(A, l - 1);
+            }
+            A => {
+                self.expand(C, l - 1);
+                self.i -= 1; // ↑
+                self.expand(A, l - 1);
+                self.j -= 1; // ←
+                self.expand(A, l - 1);
+                self.i += 1; // ↓
+                self.expand(D, l - 1);
+            }
+            C => {
+                self.expand(A, l - 1);
+                self.j -= 1; // ←
+                self.expand(C, l - 1);
+                self.i -= 1; // ↑
+                self.expand(C, l - 1);
+                self.j += 1; // →
+                self.expand(U, l - 1);
+            }
+        }
+    }
+}
+
+/// Collect the full traversal (testing/analysis helper).
+pub fn hilbert_path(level: u32) -> Vec<(u32, u32)> {
+    let n = 1usize << level;
+    let mut out = Vec::with_capacity(n * n);
+    hilbert_loop(level, |i, j| out.push((i, j)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::hilbert::Hilbert;
+
+    #[test]
+    fn matches_mealy_inverse() {
+        // The CFG generates exactly the sequence ℋ⁻¹(0), ℋ⁻¹(1), … — the
+        // paper's equivalence between §3 and §4.
+        for level in 0..=6u32 {
+            let path = hilbert_path(level);
+            let n = 1u64 << level;
+            assert_eq!(path.len() as u64, n * n);
+            for (h, &(i, j)) in path.iter().enumerate() {
+                assert_eq!(
+                    Hilbert::coords_at_level(h as u64, level),
+                    (i, j),
+                    "L={level} h={h}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn starts_at_origin_unit_steps() {
+        for level in 1..=5u32 {
+            let path = hilbert_path(level);
+            assert_eq!(path[0], (0, 0));
+            for w in path.windows(2) {
+                let d = (w[1].0 as i64 - w[0].0 as i64).abs()
+                    + (w[1].1 as i64 - w[0].1 as i64).abs();
+                assert_eq!(d, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn exit_corner_matches_pattern() {
+        // U exits upper-right, D exits lower-left.
+        let l = 4u32;
+        let n = 1u32 << l;
+        let path = hilbert_path(l); // L even → U
+        assert_eq!(*path.last().unwrap(), (0, n - 1), "U exits upper-right");
+        let path3 = hilbert_path(3); // L odd → D
+        assert_eq!(*path3.last().unwrap(), (7, 0), "D exits lower-left");
+    }
+
+    #[test]
+    fn start_symbol_parity() {
+        assert_eq!(Pattern::start_for_level(0), Pattern::U);
+        assert_eq!(Pattern::start_for_level(1), Pattern::D);
+        assert_eq!(Pattern::start_for_level(2), Pattern::U);
+    }
+
+    #[test]
+    fn level_zero_single_cell() {
+        assert_eq!(hilbert_path(0), vec![(0, 0)]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Locality analysis for traversal orders (paper Fig 1(c)/(d) and the
+//! qualitative comparisons of §2).
+
+use std::collections::HashMap;
+
+/// Summary statistics of the step lengths of a traversal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepStats {
+    /// Mean Manhattan step length (1.0 for a perfect space-filling curve).
+    pub avg: f64,
+    /// Maximum step length.
+    pub max: u64,
+    /// Histogram: step length → count.
+    pub histogram: HashMap<u64, u64>,
+    /// Number of steps (|path| − 1).
+    pub steps: u64,
+}
+
+/// Compute step statistics of a traversal path.
+pub fn step_stats(path: &[(u32, u32)]) -> StepStats {
+    let mut histogram = HashMap::new();
+    let mut total = 0u64;
+    let mut max = 0u64;
+    for w in path.windows(2) {
+        let d = (w[1].0 as i64 - w[0].0 as i64).unsigned_abs()
+            + (w[1].1 as i64 - w[0].1 as i64).unsigned_abs();
+        *histogram.entry(d).or_insert(0) += 1;
+        total += d;
+        max = max.max(d);
+    }
+    let steps = path.len().saturating_sub(1) as u64;
+    StepStats {
+        avg: if steps == 0 { 0.0 } else { total as f64 / steps as f64 },
+        max,
+        histogram,
+        steps,
+    }
+}
+
+/// The i/j histories over time (paper Fig 1(c),(d)): the sequences
+/// `i(t)` and `j(t)` of a traversal.
+pub fn histories(path: &[(u32, u32)]) -> (Vec<u32>, Vec<u32>) {
+    (
+        path.iter().map(|&(i, _)| i).collect(),
+        path.iter().map(|&(_, j)| j).collect(),
+    )
+}
+
+/// Working-set profile: number of *distinct* values of one coordinate within
+/// a sliding window of `w` consecutive loop iterations — a direct proxy for
+/// how many distinct cache-resident objects the traversal touches. Returns
+/// the mean over all window positions.
+///
+/// For the canonic order the `j` working set of a window spanning whole rows
+/// is the entire axis; for the Hilbert order it stays near `√w`.
+pub fn mean_window_working_set(history: &[u32], w: usize) -> f64 {
+    if history.len() < w || w == 0 {
+        return history
+            .iter()
+            .collect::<std::collections::HashSet<_>>()
+            .len() as f64;
+    }
+    // Sliding multiset with distinct counter.
+    let mut counts: HashMap<u32, u32> = HashMap::new();
+    let mut distinct = 0u64;
+    let mut sum = 0u64;
+    let mut windows = 0u64;
+    for (t, &v) in history.iter().enumerate() {
+        let e = counts.entry(v).or_insert(0);
+        if *e == 0 {
+            distinct += 1;
+        }
+        *e += 1;
+        if t + 1 >= w {
+            sum += distinct;
+            windows += 1;
+            let old = history[t + 1 - w];
+            let e = counts.get_mut(&old).unwrap();
+            *e -= 1;
+            if *e == 0 {
+                distinct -= 1;
+            }
+        }
+    }
+    sum as f64 / windows as f64
+}
+
+/// Average over both coordinates of [`mean_window_working_set`] — the
+/// single-number locality score used in reports (lower = more local).
+pub fn locality_score(path: &[(u32, u32)], window: usize) -> f64 {
+    let (hi, hj) = histories(path);
+    (mean_window_working_set(&hi, window) + mean_window_working_set(&hj, window)) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::nonrecursive::HilbertIter;
+    use crate::curves::CurveKind;
+
+    #[test]
+    fn unit_path_stats() {
+        let path = [(0u32, 0u32), (0, 1), (1, 1), (1, 0)];
+        let s = step_stats(&path);
+        assert_eq!(s.avg, 1.0);
+        assert_eq!(s.max, 1);
+        assert_eq!(s.steps, 3);
+        assert_eq!(s.histogram[&1], 3);
+    }
+
+    #[test]
+    fn canonic_has_row_jumps() {
+        let path = CurveKind::Canonic.enumerate(8);
+        let s = step_stats(&path);
+        assert_eq!(s.max, 8, "wrap from (i,7) to (i+1,0) costs 1+7");
+        assert!(s.avg > 1.0);
+    }
+
+    #[test]
+    fn hilbert_is_unit_step() {
+        let path: Vec<_> = HilbertIter::new(16).collect();
+        let s = step_stats(&path);
+        assert_eq!(s.avg, 1.0);
+        assert_eq!(s.max, 1);
+    }
+
+    #[test]
+    fn zorder_has_large_jumps() {
+        let path = CurveKind::ZOrder.enumerate(16);
+        let s = step_stats(&path);
+        assert!(s.max > 8, "Z-order's diagonal jumps, got max={}", s.max);
+    }
+
+    #[test]
+    fn histories_shapes() {
+        let path = [(0u32, 0u32), (1, 0), (1, 1)];
+        let (hi, hj) = histories(&path);
+        assert_eq!(hi, vec![0, 1, 1]);
+        assert_eq!(hj, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn working_set_canonic_vs_hilbert() {
+        // Fig 1(c,d) quantified: over a window of n iterations, canonic
+        // touches n distinct j values but only 1 distinct i; Hilbert stays
+        // near √n on both.
+        let n = 32u32;
+        let canonic = CurveKind::Canonic.enumerate(n);
+        let hilbert: Vec<_> = HilbertIter::new(n).collect();
+        let w = n as usize;
+        let (_, cj) = histories(&canonic);
+        let (_, hj) = histories(&hilbert);
+        let canonic_ws = mean_window_working_set(&cj, w);
+        let hilbert_ws = mean_window_working_set(&hj, w);
+        assert!(canonic_ws > (n - 1) as f64, "canonic j-ws ≈ n, got {canonic_ws}");
+        assert!(
+            hilbert_ws < canonic_ws / 2.0,
+            "hilbert j-ws {hilbert_ws} should be far below canonic {canonic_ws}"
+        );
+    }
+
+    #[test]
+    fn locality_score_orders_curves() {
+        let n = 32u32;
+        let hilbert: Vec<_> = HilbertIter::new(n).collect();
+        let canonic = CurveKind::Canonic.enumerate(n);
+        let w = 64;
+        assert!(locality_score(&hilbert, w) < locality_score(&canonic, w));
+    }
+
+    #[test]
+    fn window_bigger_than_path() {
+        let path = [(0u32, 0u32), (0, 1)];
+        let (hi, _) = histories(&path);
+        // Falls back to global distinct count.
+        assert_eq!(mean_window_working_set(&hi, 10), 1.0);
+    }
+}

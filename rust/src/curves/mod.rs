@@ -1,0 +1,254 @@
+//! Space-filling curves (§2–§6 of the paper).
+//!
+//! A space-filling curve here is, following the paper's §2, a **bijective
+//! mapping** `C : ℕ₀ × ℕ₀ → ℕ₀` between a pair of object indices `(i, j)`
+//! and an order value `c`:
+//!
+//! ```text
+//! c = C(i, j);     (i, j) = C⁻¹(c)
+//! ```
+//!
+//! The coordinate convention is the paper's: `i` is the *row* (oriented
+//! top-down), `j` the *column* (left-right).
+//!
+//! Implementations:
+//!
+//! | Curve | Module | Generation |
+//! |---|---|---|
+//! | canonic 𝒩(i,j)=i·n+j | [`canonic`] | closed form |
+//! | Z-order ℤ | [`zorder`] | bit interleaving (§2.2, Fig 2) |
+//! | Gray-code 𝒢 | [`gray`] | interleave + Gray decode |
+//! | Hilbert ℋ | [`hilbert`] | Mealy automaton (§3, Fig 3) |
+//! | Peano 𝒫 | [`peano`] | 3-adic Mealy automaton |
+//! | Hilbert, whole curve | [`lindenmayer`] | recursive CFG (§4, Fig 4) |
+//! | Hilbert, whole curve | [`nonrecursive`] | constant-overhead loop (§5, Fig 5) |
+//! | Hilbert, arbitrary n×m | [`fur`] | overlay grid (§6.1) |
+//! | Hilbert, general regions | [`fgf`] | jump-over (§6.2) |
+//! | nano-programs | [`nano`] | pre-computed 4×4 tiles in u64 (§6.3) |
+
+pub mod canonic;
+pub mod fgf;
+pub mod fur;
+pub mod gray;
+pub mod hilbert;
+pub mod lindenmayer;
+pub mod metrics;
+pub mod nano;
+pub mod nonrecursive;
+pub mod peano;
+pub mod zorder;
+
+/// A bijective order-value mapping `C : ℕ₀ × ℕ₀ → ℕ₀` (paper §2).
+///
+/// All functions are *stateless class methods*: curves in this family are
+/// pure functions of the coordinates. Curves that depend on grid shape
+/// (canonic order) or region (FUR/FGF) expose instance APIs instead.
+pub trait SpaceFillingCurve {
+    /// Human-readable curve name (used in benchmark/report labels).
+    const NAME: &'static str;
+
+    /// Order value for the coordinate pair `(i, j)`.
+    fn order(i: u32, j: u32) -> u64;
+
+    /// Inverse: coordinate pair for an order value.
+    fn coords(c: u64) -> (u32, u32);
+
+    /// The transposed curve `Cᵀ(i,j) = C(j,i)` (paper §2.1).
+    #[inline]
+    fn order_t(i: u32, j: u32) -> u64 {
+        Self::order(j, i)
+    }
+
+    /// Enumerate the `n×n` grid in curve order via repeated `coords`.
+    ///
+    /// This is the generic `O(n² log n)` path; the Hilbert curve has the
+    /// `O(n²)` generators in [`lindenmayer`] / [`nonrecursive`].
+    fn enumerate(n: u32) -> GridEnum<Self>
+    where
+        Self: Sized,
+    {
+        GridEnum {
+            c: 0,
+            end: (n as u64) * (n as u64),
+            _marker: std::marker::PhantomData,
+        }
+    }
+}
+
+/// Iterator produced by [`SpaceFillingCurve::enumerate`].
+pub struct GridEnum<C: SpaceFillingCurve> {
+    c: u64,
+    end: u64,
+    _marker: std::marker::PhantomData<C>,
+}
+
+impl<C: SpaceFillingCurve> Iterator for GridEnum<C> {
+    type Item = (u32, u32);
+
+    #[inline]
+    fn next(&mut self) -> Option<(u32, u32)> {
+        if self.c >= self.end {
+            return None;
+        }
+        let p = C::coords(self.c);
+        self.c += 1;
+        Some(p)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = (self.end - self.c) as usize;
+        (rem, Some(rem))
+    }
+}
+
+impl<C: SpaceFillingCurve> ExactSizeIterator for GridEnum<C> {}
+
+/// Which curve to use, for CLI/config dispatch.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum CurveKind {
+    /// Row-major nested loops (the baseline).
+    Canonic,
+    /// Z-order / Morton / Lebesgue.
+    ZOrder,
+    /// Gray-code curve.
+    Gray,
+    /// Hilbert curve.
+    Hilbert,
+    /// Peano curve (3-adic).
+    Peano,
+}
+
+impl CurveKind {
+    /// All kinds, for sweeps.
+    pub const ALL: [CurveKind; 5] = [
+        CurveKind::Canonic,
+        CurveKind::ZOrder,
+        CurveKind::Gray,
+        CurveKind::Hilbert,
+        CurveKind::Peano,
+    ];
+
+    /// Stable lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CurveKind::Canonic => "canonic",
+            CurveKind::ZOrder => "zorder",
+            CurveKind::Gray => "gray",
+            CurveKind::Hilbert => "hilbert",
+            CurveKind::Peano => "peano",
+        }
+    }
+
+    /// Enumerate an `n×n` grid in this curve's order into a vector.
+    ///
+    /// Peano enumerates the smallest 3-adic grid covering `n` and filters;
+    /// all others enumerate natively.
+    pub fn enumerate(self, n: u32) -> Vec<(u32, u32)> {
+        match self {
+            CurveKind::Canonic => {
+                let mut v = Vec::with_capacity((n as usize) * (n as usize));
+                for i in 0..n {
+                    for j in 0..n {
+                        v.push((i, j));
+                    }
+                }
+                v
+            }
+            CurveKind::ZOrder => collect_filtered::<zorder::ZOrder>(n),
+            CurveKind::Gray => collect_filtered::<gray::GrayCode>(n),
+            CurveKind::Hilbert => nonrecursive::HilbertIter::new(n.next_power_of_two())
+                .filter(|&(i, j)| i < n && j < n)
+                .collect(),
+            CurveKind::Peano => collect_filtered::<peano::Peano>(n),
+        }
+    }
+}
+
+impl std::str::FromStr for CurveKind {
+    type Err = crate::Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "canonic" | "nested" | "rowmajor" => Ok(CurveKind::Canonic),
+            "zorder" | "z" | "morton" => Ok(CurveKind::ZOrder),
+            "gray" => Ok(CurveKind::Gray),
+            "hilbert" | "h" => Ok(CurveKind::Hilbert),
+            "peano" | "p" => Ok(CurveKind::Peano),
+            other => Err(crate::Error::InvalidArgument(format!(
+                "unknown curve '{other}' (canonic|zorder|gray|hilbert|peano)"
+            ))),
+        }
+    }
+}
+
+/// Enumerate the power-of-two (or power-of-three) cover of `n` and keep the
+/// in-grid cells.
+fn collect_filtered<C: SpaceFillingCurve>(n: u32) -> Vec<(u32, u32)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    // Find the curve's natural cover: smallest square the curve's coords()
+    // stays inside for a contiguous order-value prefix.
+    // For the 2-adic curves that is next_power_of_two(n); for Peano the next
+    // power of three. We detect via NAME to keep the trait lean.
+    let cover: u64 = if C::NAME == "peano" {
+        let mut s = 1u64;
+        while s < n as u64 {
+            s *= 3;
+        }
+        s
+    } else {
+        n.next_power_of_two() as u64
+    };
+    let mut out = Vec::with_capacity((n as usize) * (n as usize));
+    for c in 0..cover * cover {
+        let (i, j) = C::coords(c);
+        if i < n && j < n {
+            out.push((i, j));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn curvekind_parse_roundtrip() {
+        for k in CurveKind::ALL {
+            let parsed: CurveKind = k.name().parse().unwrap();
+            assert_eq!(parsed, k);
+        }
+        assert!("bogus".parse::<CurveKind>().is_err());
+    }
+
+    #[test]
+    fn enumerate_each_kind_is_permutation() {
+        for k in CurveKind::ALL {
+            for n in [1u32, 4, 5, 8, 9] {
+                let cells = k.enumerate(n);
+                assert_eq!(cells.len(), (n * n) as usize, "{} n={}", k.name(), n);
+                let set: HashSet<_> = cells.iter().copied().collect();
+                assert_eq!(set.len(), cells.len(), "{} n={} has dupes", k.name(), n);
+                assert!(cells.iter().all(|&(i, j)| i < n && j < n));
+            }
+        }
+    }
+
+    #[test]
+    fn generic_enumerate_matches_coords() {
+        let via_iter: Vec<_> = zorder::ZOrder::enumerate(8).collect();
+        let via_fn: Vec<_> = (0..64).map(zorder::ZOrder::coords).collect();
+        assert_eq!(via_iter, via_fn);
+    }
+
+    #[test]
+    fn exact_size_iterator() {
+        let mut it = zorder::ZOrder::enumerate(4);
+        assert_eq!(it.len(), 16);
+        it.next();
+        assert_eq!(it.len(), 15);
+    }
+}

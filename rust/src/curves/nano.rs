@@ -1,0 +1,398 @@
+//! Nano-programs (§6.3): tiny pre-computed curve fragments packed into
+//! 64-bit words.
+//!
+//! A nano-program is a Hamiltonian path over an elementary cell of the
+//! FUR overlay grid (side lengths 1–4), encoded as a start position plus a
+//! sequence of 2-bit moves (`R,D,L,U`) packed into a single `u64` — at most
+//! 15 moves for a 4×4 cell, i.e. 30 bits. Reading moves out of a register
+//! is faster than running the Figure-5 update (the paper's second claimed
+//! benefit), and the store below memoises every (cell-size, entry, exit
+//! side) combination the overlay construction can request.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A move direction, 2-bit encoded (same convention as Fig 5's `c`).
+pub const MOVE_RIGHT: u8 = 0;
+/// Move down (i += 1).
+pub const MOVE_DOWN: u8 = 1;
+/// Move left (j -= 1).
+pub const MOVE_LEFT: u8 = 2;
+/// Move up (i -= 1).
+pub const MOVE_UP: u8 = 3;
+
+/// Which side of a cell the path must exit towards (the direction of the
+/// next elementary cell in the overlay traversal).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Side {
+    /// Exit anywhere (last cell of the traversal).
+    Any,
+    /// Exit on the right edge (`j = b−1`).
+    Right,
+    /// Exit on the bottom edge (`i = a−1`).
+    Down,
+    /// Exit on the left edge (`j = 0`).
+    Left,
+    /// Exit on the top edge (`i = 0`).
+    Up,
+}
+
+impl Side {
+    /// Does local position `(i, j)` of an `a×b` cell lie on this side?
+    #[inline]
+    pub fn contains(self, i: u8, j: u8, a: u8, b: u8) -> bool {
+        match self {
+            Side::Any => true,
+            Side::Right => j == b - 1,
+            Side::Down => i == a - 1,
+            Side::Left => j == 0,
+            Side::Up => i == 0,
+        }
+    }
+}
+
+/// A packed nano-program: Hamiltonian path over an `a×b` cell.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct NanoProgram {
+    /// Cell height (rows).
+    pub a: u8,
+    /// Cell width (cols).
+    pub b: u8,
+    /// Start position (local row, local col).
+    pub start: (u8, u8),
+    /// 2-bit moves, least significant pair first.
+    pub moves: u64,
+    /// Number of moves (= a·b − 1).
+    pub len: u8,
+    /// Final position (cached; the hot loop chains entries from it).
+    pub end: (u8, u8),
+}
+
+impl NanoProgram {
+    /// Decode into the full local path (start included).
+    pub fn path(&self) -> Vec<(u8, u8)> {
+        let mut out = Vec::with_capacity(self.len as usize + 1);
+        let (mut i, mut j) = self.start;
+        out.push((i, j));
+        let mut m = self.moves;
+        for _ in 0..self.len {
+            match (m & 3) as u8 {
+                MOVE_RIGHT => j += 1,
+                MOVE_DOWN => i += 1,
+                MOVE_LEFT => j -= 1,
+                _ => i -= 1,
+            }
+            m >>= 2;
+            out.push((i, j));
+        }
+        out
+    }
+
+    /// Final position of the path (O(1), cached at construction).
+    #[inline]
+    pub fn end(&self) -> (u8, u8) {
+        self.end
+    }
+
+    /// Iterate the path without allocating.
+    #[inline]
+    pub fn iter(&self) -> NanoIter {
+        NanoIter {
+            i: self.start.0,
+            j: self.start.1,
+            moves: self.moves,
+            remaining: self.len as u16 + 1,
+            first: true,
+        }
+    }
+}
+
+/// Streaming decoder for a [`NanoProgram`].
+#[derive(Clone, Debug)]
+pub struct NanoIter {
+    i: u8,
+    j: u8,
+    moves: u64,
+    remaining: u16,
+    first: bool,
+}
+
+impl Iterator for NanoIter {
+    type Item = (u8, u8);
+
+    #[inline]
+    fn next(&mut self) -> Option<(u8, u8)> {
+        if self.remaining == 0 {
+            return None;
+        }
+        if !self.first {
+            match (self.moves & 3) as u8 {
+                MOVE_RIGHT => self.j += 1,
+                MOVE_DOWN => self.i += 1,
+                MOVE_LEFT => self.j -= 1,
+                _ => self.i -= 1,
+            }
+            self.moves >>= 2;
+        }
+        self.first = false;
+        self.remaining -= 1;
+        Some((self.i, self.j))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining as usize, Some(self.remaining as usize))
+    }
+}
+
+impl ExactSizeIterator for NanoIter {}
+
+/// Key for the nano-program store.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct NanoKey {
+    /// Cell height (1..=4).
+    pub a: u8,
+    /// Cell width (1..=4).
+    pub b: u8,
+    /// Entry position (local row, col); must be on the cell boundary.
+    pub entry: (u8, u8),
+    /// Side the path must end on.
+    pub exit: Side,
+}
+
+/// Memoised store of nano-programs, searched on demand by DFS.
+///
+/// The search space is tiny (≤ 16 cells), so a miss costs microseconds and
+/// every program is found once per process.
+#[derive(Default)]
+pub struct NanoStore {
+    cache: Mutex<HashMap<NanoKey, Option<NanoProgram>>>,
+}
+
+impl NanoStore {
+    /// New empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Global shared store.
+    pub fn global() -> &'static NanoStore {
+        static STORE: once_cell::sync::Lazy<NanoStore> = once_cell::sync::Lazy::new(NanoStore::new);
+        &STORE
+    }
+
+    /// Find (or recall) the nano-program for `key`: a Hamiltonian path over
+    /// the `a×b` cell starting at `entry` and ending on `exit`.
+    /// Returns `None` when parity makes the request infeasible.
+    pub fn get(&self, key: NanoKey) -> Option<NanoProgram> {
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return *hit;
+        }
+        let found = search(key);
+        self.cache.lock().unwrap().insert(key, found);
+        found
+    }
+
+    /// Number of memoised entries (for tests/metrics).
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// True if nothing has been memoised yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// DFS for a Hamiltonian path with Warnsdorff-style ordering (fewest onward
+/// moves first) — instant at these sizes.
+fn search(key: NanoKey) -> Option<NanoProgram> {
+    let NanoKey { a, b, entry, exit } = key;
+    debug_assert!(
+        (1..=4).contains(&a) && (1..=4).contains(&b),
+        "cell {a}x{b} out of nano range"
+    );
+    debug_assert!(entry.0 < a && entry.1 < b, "entry {entry:?} outside {a}x{b}");
+    let total = (a * b) as usize;
+    let mut visited = [[false; 4]; 4];
+    let mut moves: Vec<u8> = Vec::with_capacity(total - 1);
+    visited[entry.0 as usize][entry.1 as usize] = true;
+    if dfs(entry, 1, total, a, b, exit, &mut visited, &mut moves) {
+        let mut packed = 0u64;
+        let (mut ei, mut ej) = entry;
+        for (k, &mv) in moves.iter().enumerate() {
+            packed |= (mv as u64) << (2 * k);
+            match mv {
+                MOVE_RIGHT => ej += 1,
+                MOVE_DOWN => ei += 1,
+                MOVE_LEFT => ej -= 1,
+                _ => ei -= 1,
+            }
+        }
+        Some(NanoProgram {
+            a,
+            b,
+            start: entry,
+            moves: packed,
+            len: moves.len() as u8,
+            end: (ei, ej),
+        })
+    } else {
+        None
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    pos: (u8, u8),
+    count: usize,
+    total: usize,
+    a: u8,
+    b: u8,
+    exit: Side,
+    visited: &mut [[bool; 4]; 4],
+    moves: &mut Vec<u8>,
+) -> bool {
+    if count == total {
+        return exit.contains(pos.0, pos.1, a, b);
+    }
+    // Candidate moves ordered by onward degree (Warnsdorff) to keep the
+    // DFS near-linear.
+    let mut cands: Vec<(u8, (u8, u8), u32)> = Vec::with_capacity(4);
+    for (mv, di, dj) in [
+        (MOVE_RIGHT, 0i8, 1i8),
+        (MOVE_DOWN, 1, 0),
+        (MOVE_LEFT, 0, -1),
+        (MOVE_UP, -1, 0),
+    ] {
+        let ni = pos.0 as i8 + di;
+        let nj = pos.1 as i8 + dj;
+        if ni < 0 || nj < 0 || ni >= a as i8 || nj >= b as i8 {
+            continue;
+        }
+        let (ni, nj) = (ni as u8, nj as u8);
+        if visited[ni as usize][nj as usize] {
+            continue;
+        }
+        let degree = [(0i8, 1i8), (1, 0), (0, -1), (-1, 0)]
+            .iter()
+            .filter(|(di2, dj2)| {
+                let mi = ni as i8 + di2;
+                let mj = nj as i8 + dj2;
+                mi >= 0
+                    && mj >= 0
+                    && mi < a as i8
+                    && mj < b as i8
+                    && !visited[mi as usize][mj as usize]
+            })
+            .count() as u32;
+        cands.push((mv, (ni, nj), degree));
+    }
+    cands.sort_by_key(|&(_, _, d)| d);
+    for (mv, next, _) in cands {
+        visited[next.0 as usize][next.1 as usize] = true;
+        moves.push(mv);
+        if dfs(next, count + 1, total, a, b, exit, visited, moves) {
+            return true;
+        }
+        moves.pop();
+        visited[next.0 as usize][next.1 as usize] = false;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn assert_hamiltonian(p: &NanoProgram) {
+        let path = p.path();
+        assert_eq!(path.len(), (p.a * p.b) as usize);
+        let set: HashSet<_> = path.iter().copied().collect();
+        assert_eq!(set.len(), path.len(), "not a permutation: {path:?}");
+        assert!(path.iter().all(|&(i, j)| i < p.a && j < p.b));
+        for w in path.windows(2) {
+            let d = (w[1].0 as i8 - w[0].0 as i8).abs() + (w[1].1 as i8 - w[0].1 as i8).abs();
+            assert_eq!(d, 1, "non-unit step in {path:?}");
+        }
+    }
+
+    #[test]
+    fn all_sizes_from_corner_any_exit() {
+        let store = NanoStore::new();
+        for a in 1..=4u8 {
+            for b in 1..=4u8 {
+                let p = store
+                    .get(NanoKey { a, b, entry: (0, 0), exit: Side::Any })
+                    .unwrap_or_else(|| panic!("{a}x{b} corner start must have a path"));
+                assert_hamiltonian(&p);
+            }
+        }
+    }
+
+    #[test]
+    fn exit_side_respected() {
+        let store = NanoStore::new();
+        for exit in [Side::Right, Side::Down] {
+            let p = store
+                .get(NanoKey { a: 4, b: 4, entry: (0, 0), exit })
+                .unwrap();
+            assert_hamiltonian(&p);
+            let (ei, ej) = p.end();
+            assert!(exit.contains(ei, ej, 4, 4), "end {:?} not on {exit:?}", (ei, ej));
+        }
+    }
+
+    #[test]
+    fn parity_infeasible_is_none() {
+        // 3×3 has 9 cells; a Hamiltonian path must start and end on the
+        // majority colour. Entry (0,1) is minority ⇒ no path at all.
+        let store = NanoStore::new();
+        assert_eq!(
+            store.get(NanoKey { a: 3, b: 3, entry: (0, 1), exit: Side::Any }),
+            None
+        );
+    }
+
+    #[test]
+    fn memoisation_caches() {
+        let store = NanoStore::new();
+        let key = NanoKey { a: 2, b: 3, entry: (0, 0), exit: Side::Right };
+        let a = store.get(key);
+        let b = store.get(key);
+        assert_eq!(a, b);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn packing_fits_u64() {
+        // 4×4 path = 15 moves = 30 bits; well inside one register, as the
+        // paper's nano-program format requires.
+        let store = NanoStore::new();
+        let p = store
+            .get(NanoKey { a: 4, b: 4, entry: (0, 0), exit: Side::Any })
+            .unwrap();
+        assert_eq!(p.len, 15);
+        assert!(p.moves < (1u64 << 30));
+    }
+
+    #[test]
+    fn iter_matches_path() {
+        let store = NanoStore::new();
+        let p = store
+            .get(NanoKey { a: 3, b: 4, entry: (2, 0), exit: Side::Any })
+            .unwrap();
+        let via_iter: Vec<_> = p.iter().collect();
+        assert_eq!(via_iter, p.path());
+    }
+
+    #[test]
+    fn single_cell_program() {
+        let store = NanoStore::new();
+        let p = store
+            .get(NanoKey { a: 1, b: 1, entry: (0, 0), exit: Side::Any })
+            .unwrap();
+        assert_eq!(p.len, 0);
+        assert_eq!(p.path(), vec![(0, 0)]);
+    }
+}

@@ -1,0 +1,273 @@
+//! Non-recursive, constant-overhead Hilbert generation (§5, Fig 5).
+//!
+//! All the information on the recursion stack of the §4 grammar can be
+//! recovered from the order value itself: the level of the production rule
+//! responsible for the move from `h` to `h+1` is determined by the number
+//! of trailing zeros of `h+1`, and a single 2-bit direction register `c`
+//! carries the orientation across iterations.
+//!
+//! Per iteration this costs a `trailing_zeros` (one `TZCNT` instruction — the
+//! paper's `_tzcnt_u64`), two shifts, two XORs and two adds: **O(1) time,
+//! O(1) space**, in contrast to per-iteration `ℋ⁻¹(h)` (`O(log h)`) and to
+//! the recursive grammar (`O(log n)` stack).
+//!
+//! Direction encoding (paper §5):
+//!
+//! ```text
+//! c = 0 ⇔ look right: j += 1        c = 2 ⇔ look left: j −= 1
+//! c = 1 ⇔ look down:  i += 1        c = 3 ⇔ look up:   i −= 1
+//! ```
+//!
+//! The exact flip constants (`c ^= 3·(odd(ℓ−1) ⊕ [a=3])` before the move,
+//! `c ^= odd(ℓ−1) ⊕ [a=1]` after, starting from `c = 0`) were fitted and
+//! verified exhaustively against the Mealy automaton for all `L ≤ 6`
+//! (see the module tests; the paper's Figure 5 prints the same structure
+//! with its own sign conventions for the modulo).
+
+use super::hilbert::Hilbert;
+
+/// Coordinate deltas per direction `c` (branch-free via table lookup; the
+/// paper uses a sign-preserving modulo for the same purpose).
+const DJ: [i32; 4] = [1, 0, -1, 0];
+const DI: [i32; 4] = [0, 1, 0, -1];
+
+/// Constant-overhead iterator over the `n×n` Hilbert traversal
+/// (`n` a power of two), yielding `(i, j)` pairs in Hilbert order.
+///
+/// Supports starting at an arbitrary order value (`O(log n)` once) via
+/// [`HilbertIter::range`], which is what lets the coordinator hand disjoint
+/// *contiguous curve segments* to parallel workers.
+#[derive(Clone, Debug)]
+pub struct HilbertIter {
+    i: u32,
+    j: u32,
+    h: u64,
+    end: u64,
+    c: u32,
+    level: u32,
+}
+
+impl HilbertIter {
+    /// Iterate the full `n×n` grid, `n` a power of two (`n ≥ 1`).
+    pub fn new(n: u32) -> Self {
+        assert!(n.is_power_of_two(), "grid side {n} must be a power of two");
+        let level = n.trailing_zeros();
+        Self::with_level(level)
+    }
+
+    /// Iterate the full grid of side `2^level`.
+    pub fn with_level(level: u32) -> Self {
+        assert!(level <= 16, "level {level} exceeds supported 16");
+        let n = 1u64 << level;
+        HilbertIter {
+            i: 0,
+            j: 0,
+            h: 0,
+            end: n * n,
+            c: 0,
+            level,
+        }
+    }
+
+    /// Iterate the curve segment `[h_start, h_end)` of the `2^level` grid.
+    ///
+    /// Start-up costs one `ℋ⁻¹` evaluation (`O(level)`); iteration is then
+    /// constant-overhead as usual.
+    pub fn range(level: u32, h_start: u64, h_end: u64) -> Self {
+        assert!(level <= 16, "level {level} exceeds supported 16");
+        let n = 1u64 << level;
+        let total = n * n;
+        assert!(
+            h_start <= h_end && h_end <= total,
+            "invalid range [{h_start}, {h_end}) for n={n}"
+        );
+        if h_start == 0 {
+            let mut it = Self::with_level(level);
+            it.end = h_end;
+            return it;
+        }
+        let (i, j) = Hilbert::coords_at_level(h_start, level);
+        // Reconstruct the carried direction register: the move direction
+        // h_start → h_start+1 equals c_post(h_start) ⊕ pre(h_start+1), so
+        // c_post = dir ⊕ pre. For the last cell there is no next move and
+        // the register is never read.
+        let c = if h_start + 1 < total {
+            let (i2, j2) = Hilbert::coords_at_level(h_start + 1, level);
+            let dir = match (i2 as i64 - i as i64, j2 as i64 - j as i64) {
+                (0, 1) => 0u32,
+                (1, 0) => 1,
+                (0, -1) => 2,
+                (-1, 0) => 3,
+                other => unreachable!("non-unit Hilbert step {other:?}"),
+            };
+            let (pre, _post) = flips(h_start + 1);
+            dir ^ pre
+        } else {
+            0
+        };
+        HilbertIter {
+            i,
+            j,
+            h: h_start,
+            end: h_end,
+            c,
+            level,
+        }
+    }
+
+    /// The current order value (the `h` of the *next* yielded pair).
+    #[inline]
+    pub fn order_value(&self) -> u64 {
+        self.h
+    }
+
+    /// Grid level (side = `2^level`).
+    #[inline]
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+}
+
+/// The two flip masks applied around the move to cell `h` (paper Fig 5
+/// lines 6–8 and 11): `pre` is XORed into `c` before the move, `post`
+/// after.
+#[inline(always)]
+fn flips(h: u64) -> (u32, u32) {
+    debug_assert!(h > 0);
+    let l_minus_1 = h.trailing_zeros() >> 1; // ℓ − 1
+    let a = ((h >> (2 * l_minus_1)) & 3) as u32;
+    let odd = l_minus_1 & 1;
+    let pre = 3 * (odd ^ (a == 3) as u32);
+    let post = odd ^ (a == 1) as u32;
+    (pre, post)
+}
+
+impl Iterator for HilbertIter {
+    type Item = (u32, u32);
+
+    #[inline(always)]
+    fn next(&mut self) -> Option<(u32, u32)> {
+        if self.h >= self.end {
+            return None;
+        }
+        let out = (self.i, self.j);
+        self.h += 1;
+        if self.h < self.end {
+            // Figure 5 inner loop: constant number of ops, branch-free
+            // moves via delta tables.
+            let (pre, post) = flips(self.h);
+            self.c ^= pre;
+            self.j = self.j.wrapping_add(DJ[self.c as usize] as u32);
+            self.i = self.i.wrapping_add(DI[self.c as usize] as u32);
+            self.c ^= post;
+        }
+        Some(out)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = (self.end - self.h) as usize;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for HilbertIter {}
+
+/// Run `body(i, j)` over the full `n×n` Hilbert traversal — the paper's
+/// "preprocessor macro" shape, usable like an ordinary loop statement.
+#[inline]
+pub fn hilbert_loop_nonrec(n: u32, mut body: impl FnMut(u32, u32)) {
+    for (i, j) in HilbertIter::new(n) {
+        body(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::lindenmayer::hilbert_path;
+    use crate::util::check::forall;
+
+    #[test]
+    fn matches_recursive_grammar() {
+        for level in 0..=6u32 {
+            let rec = hilbert_path(level);
+            let nonrec: Vec<_> = HilbertIter::with_level(level).collect();
+            assert_eq!(rec, nonrec, "L={level}");
+        }
+    }
+
+    #[test]
+    fn matches_mealy() {
+        for level in [1u32, 3, 5] {
+            let n = 1u64 << level;
+            for (got, h) in HilbertIter::with_level(level).zip(0..n * n) {
+                assert_eq!(got, Hilbert::coords_at_level(h, level));
+            }
+        }
+    }
+
+    #[test]
+    fn range_equals_skip_take() {
+        let level = 4u32;
+        let total = 1u64 << (2 * level);
+        for (s, e) in [(0u64, 0u64), (0, 10), (7, 96), (100, 256), (255, 256), (37, 37)] {
+            let full: Vec<_> = HilbertIter::with_level(level)
+                .skip(s as usize)
+                .take((e - s) as usize)
+                .collect();
+            let ranged: Vec<_> = HilbertIter::range(level, s, e).collect();
+            assert_eq!(full, ranged, "[{s},{e}) of {total}");
+        }
+    }
+
+    #[test]
+    fn range_property() {
+        forall::<(u32, u32)>("hilbert-range-resume", |&(a, b)| {
+            let level = 5u32;
+            let total = 1u64 << (2 * level);
+            let s = (a as u64) % total;
+            let e = s + ((b as u64) % (total - s + 1).min(64));
+            let full: Vec<_> = HilbertIter::with_level(level)
+                .skip(s as usize)
+                .take((e - s) as usize)
+                .collect();
+            let ranged: Vec<_> = HilbertIter::range(level, s, e.min(total)).collect();
+            full == ranged
+        });
+    }
+
+    #[test]
+    fn order_value_tracks_position() {
+        let mut it = HilbertIter::new(8);
+        assert_eq!(it.order_value(), 0);
+        it.next();
+        it.next();
+        assert_eq!(it.order_value(), 2);
+    }
+
+    #[test]
+    fn exact_size() {
+        let mut it = HilbertIter::new(4);
+        assert_eq!(it.len(), 16);
+        it.next();
+        assert_eq!(it.len(), 15);
+    }
+
+    #[test]
+    fn single_cell_grid() {
+        let v: Vec<_> = HilbertIter::new(1).collect();
+        assert_eq!(v, vec![(0, 0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_rejected() {
+        HilbertIter::new(6);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid range")]
+    fn bad_range_rejected() {
+        HilbertIter::range(2, 10, 17);
+    }
+}

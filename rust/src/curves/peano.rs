@@ -1,0 +1,272 @@
+//! Peano curve 𝒫 (paper §2.1): 3-adic recursive serpentine.
+//!
+//! The space is bisected into 3×3 partitions; sub-partitions are traversed
+//! column-serpentine with horizontally/vertically flipped orientations.
+//! Implemented, like Hilbert, as a Mealy automaton — here over the four
+//! flip states `(flip_i, flip_j)`, consuming one *ternary* digit pair per
+//! step and emitting one 9-adic output digit.
+//!
+//! The child-orientation rule (`flip_i ^= j_digit odd`, `flip_j ^= i_digit
+//! odd`) was validated exhaustively against a geometric reference up to
+//! 81×81 (unit steps + bijectivity): see the repo's property tests.
+
+use super::SpaceFillingCurve;
+
+/// Largest power of three representable in u32: 3^20.
+pub const MAX_LEVEL: u32 = 20;
+
+/// Serpentine position of ternary digit pair `(it, jt)` inside one 3×3
+/// block with no flips: down column 0, up column 1, down column 2.
+#[inline]
+fn serp_pos(it: u32, jt: u32) -> u32 {
+    if jt % 2 == 0 {
+        jt * 3 + it
+    } else {
+        jt * 3 + (2 - it)
+    }
+}
+
+/// Inverse of [`serp_pos`].
+#[inline]
+fn serp_coords(k: u32) -> (u32, u32) {
+    let jt = k / 3;
+    let r = k % 3;
+    let it = if jt % 2 == 0 { r } else { 2 - r };
+    (it, jt)
+}
+
+/// The Peano curve.
+#[derive(Copy, Clone, Debug)]
+pub struct Peano;
+
+impl Peano {
+    /// 𝒫(i,j) at a fixed resolution of `level` ternary digit pairs.
+    /// Requires `i, j < 3^level`.
+    pub fn order_at_level(i: u32, j: u32, level: u32) -> u64 {
+        debug_assert!(level <= MAX_LEVEL);
+        // Extract ternary digits, most significant first.
+        let mut pow = 1u64;
+        for _ in 0..level {
+            pow *= 3;
+        }
+        debug_assert!((i as u64) < pow && (j as u64) < pow);
+        let (mut fi, mut fj) = (0u32, 0u32);
+        let mut h: u64 = 0;
+        let mut p = pow;
+        let (mut ri, mut rj) = (i as u64, j as u64);
+        for _ in 0..level {
+            p /= 3;
+            let mut it = (ri / p) as u32;
+            let mut jt = (rj / p) as u32;
+            ri %= p;
+            rj %= p;
+            // The *global* digit parities drive the child orientation
+            // (validated rule): vertical flip toggles on odd global
+            // column digit, horizontal flip on odd global row digit.
+            let (gi, gj) = (it, jt);
+            // Apply current flips to get the *traversal-local* digits.
+            if fi == 1 {
+                it = 2 - it;
+            }
+            if fj == 1 {
+                jt = 2 - jt;
+            }
+            h = h * 9 + serp_pos(it, jt) as u64;
+            fi ^= gj % 2;
+            fj ^= gi % 2;
+        }
+        h
+    }
+
+    /// 𝒫⁻¹(h) at a fixed resolution of `level` 9-adic digits.
+    pub fn coords_at_level(h: u64, level: u32) -> (u32, u32) {
+        debug_assert!(level <= MAX_LEVEL);
+        let mut digits = [0u32; MAX_LEVEL as usize];
+        let mut rest = h;
+        for l in (0..level).rev() {
+            digits[l as usize] = (rest % 9) as u32;
+            rest /= 9;
+        }
+        debug_assert_eq!(rest, 0, "order value exceeds 9^level");
+        let (mut fi, mut fj) = (0u32, 0u32);
+        let (mut i, mut j) = (0u64, 0u64);
+        for l in 0..level {
+            let (mut it, mut jt) = serp_coords(digits[l as usize]);
+            // Un-flip the local digits to global, then update the flips
+            // from the *global* digit parities (same rule as forward).
+            if fi == 1 {
+                it = 2 - it;
+            }
+            if fj == 1 {
+                jt = 2 - jt;
+            }
+            i = i * 3 + it as u64;
+            j = j * 3 + jt as u64;
+            fi ^= jt % 2;
+            fj ^= it % 2;
+        }
+        (i as u32, j as u32)
+    }
+
+    /// Smallest level whose 3^level grid contains both coordinates.
+    #[inline]
+    pub fn effective_level(i: u32, j: u32) -> u32 {
+        let m = i.max(j) as u64;
+        let mut level = 0;
+        let mut pow = 1u64;
+        while pow <= m {
+            pow *= 3;
+            level += 1;
+        }
+        level
+    }
+
+    /// Smallest level with `9^level > h`.
+    #[inline]
+    pub fn effective_level_h(h: u64) -> u32 {
+        let mut level = 0;
+        let mut pow = 1u64;
+        while pow <= h {
+            pow = pow.saturating_mul(9);
+            level += 1;
+        }
+        level
+    }
+}
+
+impl SpaceFillingCurve for Peano {
+    const NAME: &'static str = "peano";
+
+    /// Variable-resolution 𝒫(i,j).
+    ///
+    /// Unlike Hilbert, Peano's pattern at `(0,0)` is flip-free at every
+    /// level (digit pair `(0,0)` → output 0, flips unchanged), so leading
+    /// zero digit pairs are skippable with *no* parity rule.
+    #[inline]
+    fn order(i: u32, j: u32) -> u64 {
+        Self::order_at_level(i, j, Self::effective_level(i, j))
+    }
+
+    #[inline]
+    fn coords(c: u64) -> (u32, u32) {
+        Self::coords_at_level(c, Self::effective_level_h(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use std::collections::HashSet;
+
+    /// Geometric reference: explicit recursive serpentine generation.
+    fn reference(level: u32, fi: u32, fj: u32) -> Vec<(u32, u32)> {
+        if level == 0 {
+            return vec![(0, 0)];
+        }
+        let s = 3u32.pow(level - 1);
+        let mut out = Vec::new();
+        for k in 0..9 {
+            let (lit, ljt) = serp_coords(k);
+            let (mut it, mut jt) = (lit, ljt);
+            if fi == 1 {
+                it = 2 - it;
+            }
+            if fj == 1 {
+                jt = 2 - jt;
+            }
+            // Child flips from the *global* (flipped) digit parities.
+            for (i, j) in reference(level - 1, fi ^ (jt % 2), fj ^ (it % 2)) {
+                out.push((it * s + i, jt * s + j));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn first_3x3_block_is_serpentine() {
+        let expect = [
+            (0, 0),
+            (1, 0),
+            (2, 0),
+            (2, 1),
+            (1, 1),
+            (0, 1),
+            (0, 2),
+            (1, 2),
+            (2, 2),
+        ];
+        for (h, &(i, j)) in expect.iter().enumerate() {
+            assert_eq!(Peano::order_at_level(i, j, 1), h as u64);
+            assert_eq!(Peano::coords_at_level(h as u64, 1), (i, j));
+        }
+    }
+
+    #[test]
+    fn matches_geometric_reference() {
+        for level in 1..=4u32 {
+            let path = reference(level, 0, 0);
+            for (h, &(i, j)) in path.iter().enumerate() {
+                assert_eq!(
+                    Peano::coords_at_level(h as u64, level),
+                    (i, j),
+                    "L={level} h={h}"
+                );
+                assert_eq!(Peano::order_at_level(i, j, level), h as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn unit_steps() {
+        for level in 1..=4u32 {
+            let n = 3u64.pow(level);
+            let mut prev = Peano::coords_at_level(0, level);
+            for h in 1..n * n {
+                let p = Peano::coords_at_level(h, level);
+                let d = (p.0 as i64 - prev.0 as i64).abs() + (p.1 as i64 - prev.1 as i64).abs();
+                assert_eq!(d, 1, "L={level} h={h}");
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn bijective() {
+        for level in 1..=3u32 {
+            let n = 3u32.pow(level);
+            let mut seen = HashSet::new();
+            for i in 0..n {
+                for j in 0..n {
+                    assert!(seen.insert(Peano::order_at_level(i, j, level)));
+                }
+            }
+            assert_eq!(seen.len(), (n * n) as usize);
+        }
+    }
+
+    #[test]
+    fn level_consistency_no_parity_rule() {
+        // Leading (0,0) digit pairs are invisible: level L and L+1 agree.
+        forall::<(u32, u32)>("peano-level-consistency", |&(i, j)| {
+            let (i, j) = (i % 6561, j % 6561);
+            let l = Peano::effective_level(i, j);
+            Peano::order_at_level(i, j, l) == Peano::order_at_level(i, j, (l + 1).min(MAX_LEVEL))
+        });
+    }
+
+    #[test]
+    fn variable_resolution_roundtrip() {
+        forall::<(u32, u32)>("peano-roundtrip", |&(i, j)| {
+            Peano::coords(Peano::order(i, j)) == (i, j)
+        });
+    }
+
+    #[test]
+    fn effective_level_examples() {
+        assert_eq!(Peano::effective_level(0, 0), 0);
+        assert_eq!(Peano::effective_level(2, 2), 1);
+        assert_eq!(Peano::effective_level(3, 0), 2);
+        assert_eq!(Peano::effective_level(9, 8), 3);
+    }
+}

@@ -1,0 +1,134 @@
+//! Z-order (Morton / Lebesgue / N-order) by bit interleaving (§2.2, Fig 2).
+//!
+//! `ℤ(i,j)` interleaves the bits of `i` and `j`:
+//! `c = ⟨i_L j_L … i_1 j_1 i_0 j_0⟩`. The paper notes hardware support via
+//! BMI2 `PDEP`/`PEXT`; the portable magic-mask expansion below compiles to a
+//! handful of shift/mask ops and is the standard software equivalent.
+
+use super::SpaceFillingCurve;
+
+/// Spread the 32 bits of `x` into the even bit positions of a u64
+/// (software `PDEP(x, 0x5555…)`).
+#[inline]
+pub fn spread(x: u32) -> u64 {
+    let mut x = x as u64;
+    x = (x | (x << 16)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x << 8)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x << 2)) & 0x3333_3333_3333_3333;
+    x = (x | (x << 1)) & 0x5555_5555_5555_5555;
+    x
+}
+
+/// Inverse of [`spread`]: gather the even bit positions of `x` into a u32
+/// (software `PEXT(x, 0x5555…)`).
+#[inline]
+pub fn compact(x: u64) -> u32 {
+    let mut x = x & 0x5555_5555_5555_5555;
+    x = (x | (x >> 1)) & 0x3333_3333_3333_3333;
+    x = (x | (x >> 2)) & 0x0F0F_0F0F_0F0F_0F0F;
+    x = (x | (x >> 4)) & 0x00FF_00FF_00FF_00FF;
+    x = (x | (x >> 8)) & 0x0000_FFFF_0000_FFFF;
+    x = (x | (x >> 16)) & 0x0000_0000_FFFF_FFFF;
+    x as u32
+}
+
+/// The Z-order curve.
+///
+/// Digit convention (paper Fig 2, coordinate system top-down): the quadrant
+/// order is `(0,0) → 0, (0,1) → 1, (1,0) → 2, (1,1) → 3`, i.e. the `i` bit
+/// is the *high* bit of each four-adic output digit.
+#[derive(Copy, Clone, Debug)]
+pub struct ZOrder;
+
+impl SpaceFillingCurve for ZOrder {
+    const NAME: &'static str = "zorder";
+
+    #[inline]
+    fn order(i: u32, j: u32) -> u64 {
+        (spread(i) << 1) | spread(j)
+    }
+
+    #[inline]
+    fn coords(c: u64) -> (u32, u32) {
+        (compact(c >> 1), compact(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn spread_compact_roundtrip() {
+        forall::<u32>("spread-compact", |&x| compact(spread(x)) == x);
+    }
+
+    #[test]
+    fn spread_known_values() {
+        assert_eq!(spread(0), 0);
+        assert_eq!(spread(0b1), 0b1);
+        assert_eq!(spread(0b11), 0b101);
+        assert_eq!(spread(0b101), 0b10001);
+        assert_eq!(spread(u32::MAX), 0x5555_5555_5555_5555);
+    }
+
+    #[test]
+    fn fig2_quadrant_digits() {
+        // Paper Fig 2 convention: (0,0)→0, (0,1)→1, (1,0)→2, (1,1)→3.
+        assert_eq!(ZOrder::order(0, 0), 0);
+        assert_eq!(ZOrder::order(0, 1), 1);
+        assert_eq!(ZOrder::order(1, 0), 2);
+        assert_eq!(ZOrder::order(1, 1), 3);
+    }
+
+    #[test]
+    fn fig2_4x4_table() {
+        // The level-2 Z-order over a 4×4 grid (paper Fig 2, right side).
+        let expect: [[u64; 4]; 4] = [
+            [0, 1, 4, 5],
+            [2, 3, 6, 7],
+            [8, 9, 12, 13],
+            [10, 11, 14, 15],
+        ];
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(ZOrder::order(i, j), expect[i as usize][j as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        forall::<(u32, u32)>("zorder-roundtrip", |&(i, j)| {
+            ZOrder::coords(ZOrder::order(i, j)) == (i, j)
+        });
+    }
+
+    #[test]
+    fn bijective_on_prefix() {
+        use std::collections::HashSet;
+        let vals: HashSet<u64> = (0..32u32)
+            .flat_map(|i| (0..32u32).map(move |j| ZOrder::order(i, j)))
+            .collect();
+        assert_eq!(vals.len(), 1024);
+        assert_eq!(*vals.iter().max().unwrap(), 1023);
+    }
+
+    #[test]
+    fn recursive_self_similarity() {
+        // ℤ(2i, 2j) == 4·ℤ(i,j): each bisection step multiplies by 4.
+        forall::<(u32, u32)>("zorder-selfsim", |&(i, j)| {
+            let (i, j) = (i >> 1, j >> 1); // keep doubling in range
+            ZOrder::order(2 * i, 2 * j) == 4 * ZOrder::order(i, j)
+        });
+    }
+
+    #[test]
+    fn max_coordinates_roundtrip() {
+        let c = ZOrder::order(u32::MAX, u32::MAX);
+        assert_eq!(c, u64::MAX);
+        assert_eq!(ZOrder::coords(c), (u32::MAX, u32::MAX));
+    }
+}

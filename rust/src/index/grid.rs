@@ -1,0 +1,178 @@
+//! Uniform grid index over the first two dimensions of a point set.
+//!
+//! The similarity-join substrate: points are bucketed into square cells of
+//! side `eps` (over dims 0 and 1). Any join pair within distance `eps` in
+//! the *full* space is also within `eps` in the 2-d projection, so the
+//! candidate set "all pairs from cells within Chebyshev distance 1" is
+//! conservative (no false dismissals) — the same role the hierarchical
+//! index of [20] plays for the paper's FGF join.
+
+use crate::apps::Matrix;
+
+/// A grid cell's integer coordinates (0-based after offsetting).
+pub type Cell = (u32, u32);
+
+/// Uniform grid index.
+#[derive(Clone, Debug)]
+pub struct GridIndex {
+    /// Cell side length (= join radius).
+    pub eps: f32,
+    /// Minimum corner of the bounding box (dims 0, 1).
+    pub origin: (f32, f32),
+    /// Grid extent in cells per axis.
+    pub extent: (u32, u32),
+    /// Non-empty cells with their point lists, sorted by cell coordinate.
+    cells: Vec<(Cell, Vec<u32>)>,
+}
+
+impl GridIndex {
+    /// Build the index for join radius `eps` (> 0) over `points` (`n×d`,
+    /// `d ≥ 2`).
+    pub fn build(points: &Matrix, eps: f32) -> Self {
+        assert!(eps > 0.0, "eps must be positive");
+        assert!(points.cols >= 2, "grid index needs ≥ 2 dimensions");
+        let n = points.rows;
+        let (mut min0, mut min1) = (f32::INFINITY, f32::INFINITY);
+        let (mut max0, mut max1) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for p in 0..n {
+            min0 = min0.min(points.at(p, 0));
+            max0 = max0.max(points.at(p, 0));
+            min1 = min1.min(points.at(p, 1));
+            max1 = max1.max(points.at(p, 1));
+        }
+        if n == 0 {
+            return GridIndex {
+                eps,
+                origin: (0.0, 0.0),
+                extent: (0, 0),
+                cells: Vec::new(),
+            };
+        }
+        let to_cell = |v: f32, lo: f32| -> u32 { ((v - lo) / eps).floor() as u32 };
+        let extent = (to_cell(max0, min0) + 1, to_cell(max1, min1) + 1);
+        let mut map: std::collections::HashMap<Cell, Vec<u32>> = std::collections::HashMap::new();
+        for p in 0..n {
+            let c = (to_cell(points.at(p, 0), min0), to_cell(points.at(p, 1), min1));
+            map.entry(c).or_default().push(p as u32);
+        }
+        let mut cells: Vec<(Cell, Vec<u32>)> = map.into_iter().collect();
+        cells.sort_by_key(|&(c, _)| c);
+        GridIndex {
+            eps,
+            origin: (min0, min1),
+            extent,
+            cells,
+        }
+    }
+
+    /// Number of non-empty cells.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if the index holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Non-empty cells, sorted by coordinate.
+    pub fn cells(&self) -> &[(Cell, Vec<u32>)] {
+        &self.cells
+    }
+
+    /// Points of the cell at `coord`, if non-empty.
+    pub fn cell_points(&self, coord: Cell) -> Option<&[u32]> {
+        self.cells
+            .binary_search_by_key(&coord, |&(c, _)| c)
+            .ok()
+            .map(|idx| self.cells[idx].1.as_slice())
+    }
+
+    /// Are two cells within Chebyshev distance 1 (i.e. a candidate pair)?
+    pub fn neighbors(a: Cell, b: Cell) -> bool {
+        a.0.abs_diff(b.0) <= 1 && a.1.abs_diff(b.1) <= 1
+    }
+
+    /// Average points per non-empty cell.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.cells.is_empty() {
+            0.0
+        } else {
+            self.cells.iter().map(|(_, v)| v.len() as f64).sum::<f64>() / self.cells.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(rows: &[[f32; 2]]) -> Matrix {
+        Matrix::from_fn(rows.len(), 2, |i, j| rows[i][j])
+    }
+
+    #[test]
+    fn buckets_points_correctly() {
+        let m = pts(&[[0.1, 0.1], [0.2, 0.15], [2.5, 0.1], [0.1, 2.5]]);
+        let g = GridIndex::build(&m, 1.0);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.cell_points((0, 0)).unwrap(), &[0, 1]);
+        assert_eq!(g.cell_points((2, 0)).unwrap(), &[2]);
+        assert_eq!(g.cell_points((0, 2)).unwrap(), &[3]);
+        assert_eq!(g.extent, (3, 3));
+    }
+
+    #[test]
+    fn every_point_in_exactly_one_cell() {
+        let m = Matrix::random(500, 4, 3, -10.0, 10.0);
+        let g = GridIndex::build(&m, 0.7);
+        let total: usize = g.cells().iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 500);
+        let mut seen = std::collections::HashSet::new();
+        for (_, v) in g.cells() {
+            for &p in v {
+                assert!(seen.insert(p));
+            }
+        }
+    }
+
+    #[test]
+    fn close_pairs_are_in_neighbor_cells() {
+        // The conservative-candidates guarantee: any pair within eps (full
+        // distance) lands in cells within Chebyshev distance 1.
+        let m = Matrix::random(300, 3, 11, 0.0, 5.0);
+        let eps = 0.5f32;
+        let g = GridIndex::build(&m, eps);
+        let cell_of = |p: usize| -> Cell {
+            let c0 = ((m.at(p, 0) - g.origin.0) / eps).floor() as u32;
+            let c1 = ((m.at(p, 1) - g.origin.1) / eps).floor() as u32;
+            (c0, c1)
+        };
+        for a in 0..300 {
+            for b in (a + 1)..300 {
+                let d: f32 = (0..3).map(|k| (m.at(a, k) - m.at(b, k)).powi(2)).sum::<f32>().sqrt();
+                if d <= eps {
+                    assert!(
+                        GridIndex::neighbors(cell_of(a), cell_of(b)),
+                        "close pair ({a},{b}) in non-neighbor cells"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let m = Matrix::zeros(0, 2);
+        let g = GridIndex::build(&m, 1.0);
+        assert!(g.is_empty());
+        assert_eq!(g.mean_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn neighbors_relation() {
+        assert!(GridIndex::neighbors((3, 3), (4, 2)));
+        assert!(GridIndex::neighbors((3, 3), (3, 3)));
+        assert!(!GridIndex::neighbors((3, 3), (5, 3)));
+    }
+}

@@ -1,0 +1,5 @@
+//! Index substrates for the similarity join (paper §7).
+
+pub mod grid;
+
+pub use grid::GridIndex;

@@ -1,0 +1,77 @@
+//! # sfc-mine — Space-filling Curves for High-performance Data Mining
+//!
+//! A reproduction of Böhm, *"Space-filling Curves for High-performance Data
+//! Mining"* (2020) as a production-grade library:
+//!
+//! * [`curves`] — the complete space-filling-curve toolkit: Z-order, Hilbert
+//!   (Mealy automaton, recursive Lindenmayer grammar, non-recursive
+//!   constant-overhead generator), Gray-code, Peano, FUR-Hilbert loops over
+//!   arbitrary `n×m` grids, FGF-Hilbert loops with jump-over for general
+//!   regions, and nano-programs.
+//! * [`cachesim`] — the cache-hierarchy simulator used to regenerate the
+//!   paper's Figure 1(e) (LRU / set-associative / multi-level + TLB).
+//! * [`apps`] — the paper's §7 application suite: matrix multiplication,
+//!   Cholesky decomposition, Floyd–Warshall, k-Means, and the ε-similarity
+//!   join, each in canonic, cache-conscious (tiled) and cache-oblivious
+//!   (Hilbert) variants.
+//! * [`index`] — the uniform grid index substrate for the similarity join.
+//! * [`coordinator`] — the MIMD runtime: a Hilbert-range scheduler that
+//!   partitions curve segments across a worker pool, preserving locality
+//!   per worker.
+//! * [`runtime`] — the PJRT engine: loads AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them from the Rust hot path.
+//! * [`util`] — deterministic RNG, a mini property-testing harness, the
+//!   benchmark harness, and CLI plumbing.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use sfc_mine::curves::{hilbert::Hilbert, nonrecursive::HilbertIter};
+//! use sfc_mine::curves::SpaceFillingCurve;
+//!
+//! // Order values via the Mealy automaton (§3 of the paper):
+//! let h = Hilbert::order(2, 3);
+//! assert_eq!(Hilbert::coords(h), (2, 3));
+//!
+//! // Constant-overhead enumeration of a whole grid (§5, Figure 5):
+//! let cells: Vec<(u32, u32)> = HilbertIter::new(4).collect();
+//! assert_eq!(cells.len(), 16);
+//! assert_eq!(cells[0], (0, 0));
+//! ```
+
+pub mod apps;
+pub mod cachesim;
+pub mod coordinator;
+pub mod curves;
+pub mod index;
+pub mod runtime;
+pub mod util;
+
+pub use curves::nonrecursive::HilbertIter;
+pub use curves::SpaceFillingCurve;
+
+/// Library-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A grid/curve parameter was out of the supported domain.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+    /// An artifact (AOT-compiled HLO module) was missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    /// The PJRT runtime failed to compile or execute a module.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Numerical failure inside an application kernel (e.g. a non-PD matrix
+    /// handed to Cholesky).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+    /// Coordinator/scheduling failure (worker panic, queue shutdown).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+    #[error("I/O error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,185 @@
+//! sfc-mine CLI: the Layer-3 launcher.
+//!
+//! ```text
+//! sfc-mine info                         # platform + artifact status
+//! sfc-mine fig1  [--n 256]              # regenerate Figure 1(e)
+//! sfc-mine curves [--n 64]              # locality comparison table
+//! sfc-mine matmul [--n 512 --tile 32]   # §7 matmul variants
+//! sfc-mine kmeans [--n 40960 ...]       # parallel k-means loop
+//! sfc-mine simjoin [--n 20000 --eps 1]  # §7 similarity join variants
+//! ```
+
+use sfc_mine::apps::kmeans::{init_centroids, make_blobs, KMeans};
+use sfc_mine::apps::matmul::{flops, matmul_hilbert, matmul_tiled, matmul_transposed};
+use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
+use sfc_mine::apps::simjoin::{join_fgf_hilbert, join_grid_nested, make_clustered};
+use sfc_mine::apps::Matrix;
+use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::curves::{metrics, CurveKind};
+use sfc_mine::runtime::{artifact, Engine};
+use sfc_mine::util::cli::Args;
+use sfc_mine::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("info") => info(),
+        Some("fig1") => fig1(&args),
+        Some("curves") => curves(&args),
+        Some("matmul") => matmul_cmd(&args),
+        Some("kmeans") => kmeans_cmd(&args),
+        Some("simjoin") => simjoin_cmd(&args),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown command '{cmd}'\n");
+            }
+            eprintln!(
+                "usage: sfc-mine <info|fig1|curves|matmul|kmeans|simjoin> [--key value]…\n\
+                 see README.md for options"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info() {
+    println!(
+        "sfc-mine {} — space-filling curves for high-performance data mining",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!(
+        "cores: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    match Engine::cpu() {
+        Ok(engine) => println!("pjrt:  {}", engine.platform()),
+        Err(e) => println!("pjrt:  unavailable ({e})"),
+    }
+    let dir = artifact::default_dir();
+    match sfc_mine::runtime::Manifest::load(&dir) {
+        Ok(m) => println!("artifacts at {}: {:?}", dir.display(), m.names()),
+        Err(_) => println!("artifacts at {}: none (run `make artifacts`)", dir.display()),
+    }
+}
+
+fn fig1(args: &Args) {
+    let n: u32 = args.get("n", 256);
+    let n = n.next_power_of_two();
+    let obj: u32 = args.get("object-bytes", 256);
+    let cfg = PairLoopConfig { n, m: n, object_bytes: obj };
+    let orders = vec![
+        (CurveKind::Canonic, CurveKind::Canonic.enumerate(n)),
+        (CurveKind::ZOrder, CurveKind::ZOrder.enumerate(n)),
+        (CurveKind::Hilbert, HilbertIter::new(n).collect::<Vec<_>>()),
+    ];
+    let fractions = [0.05, 0.10, 0.15, 0.20, 0.30, 0.50];
+    let rows = fig1e_sweep(&cfg, &orders, &fractions, 64);
+    let mut t = Table::new(vec!["cache %", "canonic", "zorder", "hilbert", "canonic/hilbert"]);
+    for r in &rows {
+        t.row(vec![
+            format!("{:.0}%", r.cache_fraction * 100.0),
+            r.misses[0].to_string(),
+            r.misses[1].to_string(),
+            r.misses[2].to_string(),
+            format!("{:.1}x", r.misses[0] as f64 / r.misses[2] as f64),
+        ]);
+    }
+    println!("Fig 1(e): LRU misses, {n}x{n} pair loop, {obj}-byte objects");
+    print!("{}", t.render());
+}
+
+fn curves(args: &Args) {
+    let n: u32 = args.get("n", 64);
+    let w: usize = args.get("window", 64);
+    let mut t = Table::new(vec!["curve", "avg step", "max step", "locality score"]);
+    for kind in CurveKind::ALL {
+        let path = kind.enumerate(n);
+        let s = metrics::step_stats(&path);
+        t.row(vec![
+            kind.name().to_string(),
+            format!("{:.3}", s.avg),
+            s.max.to_string(),
+            format!("{:.2}", metrics::locality_score(&path, w)),
+        ]);
+    }
+    println!("curve locality on {n}x{n} (window {w}):");
+    print!("{}", t.render());
+}
+
+fn matmul_cmd(args: &Args) {
+    let n: usize = args.get("n", 512);
+    let tile: usize = args.get("tile", 32);
+    let b = Matrix::random(n, n, 1, -1.0, 1.0);
+    let c = Matrix::random(n, n, 2, -1.0, 1.0);
+    let mut t = Table::new(vec!["variant", "ms", "GFLOP/s"]);
+    for (name, f) in [
+        (
+            "transposed",
+            Box::new(|| matmul_transposed(&b, &c)) as Box<dyn Fn() -> Matrix>,
+        ),
+        ("tiled", Box::new(|| matmul_tiled(&b, &c, tile))),
+        ("hilbert", Box::new(|| matmul_hilbert(&b, &c, tile))),
+    ] {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", dt.as_secs_f64() * 1e3),
+            format!("{:.2}", flops(n, n, n) as f64 / dt.as_secs_f64() / 1e9),
+        ]);
+    }
+    println!("matmul n={n} tile={tile}:");
+    print!("{}", t.render());
+}
+
+fn kmeans_cmd(args: &Args) {
+    let n: usize = args.get("n", 40_960);
+    let k: usize = args.get("k", 64);
+    let d: usize = args.get("d", 16);
+    let iters: usize = args.get("iters", 10);
+    let threads: usize = args.get("threads", 0);
+    let (points, _) = make_blobs(n, k, d, 0.6, 42);
+    let centroids = init_centroids(&points, k, 7);
+    let mut km = KMeans { points, centroids };
+    let coord = Coordinator::new(threads);
+    println!(
+        "k-means n={n} k={k} d={d}, {} workers (Hilbert-blocked assignment)",
+        coord.threads()
+    );
+    for it in 0..iters {
+        let t0 = Instant::now();
+        let (assign, new_centroids) = par_kmeans_step(&coord, &km, 256, 16);
+        km.centroids = new_centroids;
+        println!(
+            "iter {it:>3}: inertia {:>14.1}  ({:.1} ms)",
+            assign.inertia(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+}
+
+fn simjoin_cmd(args: &Args) {
+    let n: usize = args.get("n", 20_000);
+    let eps: f32 = args.get("eps", 1.0);
+    let d: usize = args.get("d", 8);
+    let points = make_clustered(n, d, 40, 0.8, 7);
+    let t0 = Instant::now();
+    let (pairs_grid, sg) = join_grid_nested(&points, eps);
+    let grid_dt = t0.elapsed();
+    let t0 = Instant::now();
+    let (pairs_fgf, sf) = join_fgf_hilbert(&points, eps);
+    let fgf_dt = t0.elapsed();
+    assert_eq!(pairs_grid.len(), pairs_fgf.len());
+    println!(
+        "simjoin n={n} eps={eps}: {} pairs | grid {:.1} ms ({} cmp) | fgf-hilbert {:.1} ms ({} cmp, {} jumps)",
+        pairs_fgf.len(),
+        grid_dt.as_secs_f64() * 1e3,
+        sg.comparisons,
+        fgf_dt.as_secs_f64() * 1e3,
+        sf.comparisons,
+        sf.fgf.map(|f| f.jumps).unwrap_or(0),
+    );
+}

@@ -1,0 +1,133 @@
+//! Artifact discovery: the `artifacts/` directory layout and manifest.
+//!
+//! `make artifacts` writes one `<name>.hlo.txt` per compiled computation
+//! plus a `manifest.txt` with one line per artifact:
+//!
+//! ```text
+//! <name>\t<file>\t<comment…>
+//! ```
+
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Artifact {
+    /// Logical name (the key the engine executes by).
+    pub name: String,
+    /// HLO text file path.
+    pub path: PathBuf,
+    /// Free-form description from the manifest.
+    pub comment: String,
+}
+
+/// The parsed manifest of an artifacts directory.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Artifacts in manifest order.
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.txt` and resolve artifact paths against `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {}/manifest.txt (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(3, '\t');
+            let name = parts.next().unwrap_or_default().to_string();
+            let file = parts.next().ok_or_else(|| {
+                Error::Artifact(format!("manifest line {} malformed: '{line}'", lineno + 1))
+            })?;
+            let comment = parts.next().unwrap_or("").to_string();
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(Error::Artifact(format!(
+                    "artifact '{name}' file missing: {}",
+                    path.display()
+                )));
+            }
+            artifacts.push(Artifact { name, path, comment });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Artifact names.
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+/// The default artifacts directory: `$SFC_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("SFC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp_manifest(body: &str, files: &[&str]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "sfc_manifest_test_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = write_tmp_manifest(
+            "# comment line\nkmeans_step\tkmeans_step.hlo.txt\tassign+update\n\nmatmul\tmatmul.hlo.txt\t\n",
+            &["kmeans_step.hlo.txt", "matmul.hlo.txt"],
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.names(), vec!["kmeans_step", "matmul"]);
+        assert_eq!(m.get("kmeans_step").unwrap().comment, "assign+update");
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_artifact_error() {
+        let err = Manifest::load("/nonexistent/dir").unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = write_tmp_manifest("ghost\tghost.hlo.txt\t\n", &[]);
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("ghost"));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        let dir = write_tmp_manifest("justonename\n", &[]);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! The PJRT execution engine: compile-once, execute-many.
+
+use super::artifact::Manifest;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A typed f32 tensor argument/result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    /// Shape (row-major).
+    pub dims: Vec<usize>,
+    /// Flattened data, `dims.product()` entries.
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    /// New tensor; checks the element count.
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = dims.iter().product();
+        if data.len() != expect {
+            return Err(Error::InvalidArgument(format!(
+                "tensor data length {} != shape product {expect}",
+                data.len()
+            )));
+        }
+        Ok(TensorF32 { dims, data })
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        TensorF32 { dims: vec![], data: vec![v] }
+    }
+}
+
+/// The PJRT engine: a CPU client plus a map of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client with no executables loaded.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT CPU client: {e}")))?;
+        Ok(Engine { client, exes: HashMap::new() })
+    }
+
+    /// Platform description (for logs).
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-UTF8 path {}", path.display())))?,
+        )
+        .map_err(|e| Error::Artifact(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile '{name}': {e}")))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every artifact of a manifest directory.
+    pub fn load_manifest_dir(&mut self, dir: impl AsRef<Path>) -> Result<Manifest> {
+        let manifest = Manifest::load(&dir)?;
+        for a in &manifest.artifacts {
+            self.load_hlo_text(&a.name, &a.path)?;
+        }
+        Ok(manifest)
+    }
+
+    /// Names of loaded executables.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a loaded computation on f32 inputs; returns the tuple of
+    /// f32 outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no executable '{name}' loaded")))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(&t.data);
+                if t.dims.is_empty() {
+                    return Ok(lit);
+                }
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute '{name}': {e}")))?;
+        Self::fetch_tuple(&result[0][0], name)
+    }
+
+    /// Upload a tensor to the device once; the returned buffer can be
+    /// passed to [`Engine::execute_buffers`] any number of times. This is
+    /// the hot-path API: per-call host→device copies of loop-invariant
+    /// inputs (e.g. the point batches of a k-Means run) disappear
+    /// (§Perf).
+    pub fn to_device(&self, t: &TensorF32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&t.data, &t.dims, None)
+            .map_err(|e| Error::Runtime(format!("to_device: {e}")))
+    }
+
+    /// Execute on pre-uploaded device buffers (see [`Engine::to_device`]).
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<TensorF32>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("no executable '{name}' loaded")))?;
+        let result = exe
+            .execute_b(inputs)
+            .map_err(|e| Error::Runtime(format!("execute_b '{name}': {e}")))?;
+        Self::fetch_tuple(&result[0][0], name)
+    }
+
+    /// Fetch and untuple one execution result.
+    fn fetch_tuple(buffer: &xla::PjRtBuffer, name: &str) -> Result<Vec<TensorF32>> {
+        let out_literal = buffer
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result '{name}': {e}")))?;
+        let parts = out_literal
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("untuple result '{name}': {e}")))?;
+        parts
+            .into_iter()
+            .map(|lit| -> Result<TensorF32> {
+                let shape = lit
+                    .shape()
+                    .map_err(|e| Error::Runtime(format!("result shape: {e}")))?;
+                let dims: Vec<usize> = match &shape {
+                    xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+                    _ => Vec::new(),
+                };
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("result data: {e}")))?;
+                TensorF32::new(dims, data)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        assert!(TensorF32::new(vec![2, 2], vec![1.0; 4]).is_ok());
+        assert!(TensorF32::new(vec![2, 2], vec![1.0; 3]).is_err());
+        assert_eq!(TensorF32::scalar(5.0).data, vec![5.0]);
+    }
+
+    #[test]
+    fn missing_executable_is_error() {
+        let engine = Engine::cpu().expect("PJRT CPU client");
+        let err = engine.execute("ghost", &[]).unwrap_err();
+        assert!(err.to_string().contains("ghost"));
+    }
+
+    #[test]
+    fn cpu_client_reports_platform() {
+        let engine = Engine::cpu().expect("PJRT CPU client");
+        let p = engine.platform();
+        assert!(!p.is_empty());
+    }
+
+    // End-to-end execute tests live in rust/tests/runtime_e2e.rs and are
+    // gated on `make artifacts` having produced the HLO files.
+}

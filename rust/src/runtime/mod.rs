@@ -1,0 +1,14 @@
+//! The PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO text
+//! emitted once by `python/compile/aot.py`) and executes them from the
+//! Rust hot path. Python is never on the request path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto` —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! DESIGN.md and `/opt/xla-example/README.md`).
+
+pub mod artifact;
+pub mod engine;
+
+pub use artifact::{Artifact, Manifest};
+pub use engine::Engine;

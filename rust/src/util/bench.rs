@@ -1,0 +1,234 @@
+//! Benchmark harness (criterion stand-in; see DESIGN.md §3).
+//!
+//! Methodology: a warm-up phase, automatic iteration-count calibration to a
+//! target sample time, then `samples` timed runs; reported statistics are
+//! the median and the median absolute deviation (robust against scheduler
+//! noise in a container).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Benchmark id, e.g. `"matmul/hilbert/512"`.
+    pub name: String,
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Median absolute deviation per iteration.
+    pub mad: Duration,
+    /// Iterations per sample (after calibration).
+    pub iters: u64,
+    /// Number of samples.
+    pub samples: usize,
+    /// Optional throughput denominator (elements processed per iteration);
+    /// lets the report print Melem/s.
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    /// Elements per second, if a denominator was declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64())
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    warmup: Duration,
+    sample_time: Duration,
+    samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    /// Default: 0.3 s warm-up, 15 samples of ≥ 0.1 s each. Override with
+    /// `SFC_BENCH_FAST=1` for CI smoke runs.
+    pub fn new() -> Self {
+        let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+        Bench {
+            warmup: if fast { Duration::from_millis(20) } else { Duration::from_millis(300) },
+            sample_time: if fast { Duration::from_millis(10) } else { Duration::from_millis(100) },
+            samples: if fast { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration, and record under
+    /// `name`. Returns the measurement.
+    pub fn run<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Measurement {
+        self.run_with_elements(name, None, &mut f)
+    }
+
+    /// Like [`Bench::run`] but declaring an element-throughput denominator.
+    pub fn throughput<R>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut() -> R,
+    ) -> Measurement {
+        self.run_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn run_with_elements<R>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut impl FnMut() -> R,
+    ) -> Measurement {
+        // Warm-up and single-iteration estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        // Calibrate iterations per sample.
+        let iters = ((self.sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let m = Measurement {
+            name: name.to_string(),
+            median: Duration::from_secs_f64(median),
+            mad: Duration::from_secs_f64(mad),
+            iters,
+            samples: self.samples,
+            elements,
+        };
+        eprintln!("{}", format_measurement(&m));
+        self.results.push(m.clone());
+        m
+    }
+
+    /// All measurements recorded so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write a CSV report (`name,median_ns,mad_ns,throughput_eps`).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = String::from("name,median_ns,mad_ns,elements,throughput_eps\n");
+        for m in &self.results {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                m.name,
+                m.median.as_nanos(),
+                m.mad.as_nanos(),
+                m.elements.map(|e| e.to_string()).unwrap_or_default(),
+                m.throughput().map(|t| format!("{t:.1}")).unwrap_or_default(),
+            ));
+        }
+        std::fs::write(path, s)
+    }
+}
+
+/// Human-readable one-liner for a measurement.
+pub fn format_measurement(m: &Measurement) -> String {
+    let tput = m
+        .throughput()
+        .map(|t| format!("  {:>10.2} Melem/s", t / 1e6))
+        .unwrap_or_default();
+    format!(
+        "{:<44} {:>12} ± {:<10}{}",
+        m.name,
+        fmt_dur(m.median),
+        fmt_dur(m.mad),
+        tput
+    )
+}
+
+/// Format a duration with an adaptive unit.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_bench() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(1),
+            sample_time: Duration::from_micros(200),
+            samples: 3,
+            results: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = fast_bench();
+        let m = b.run("spin", || {
+            // black_box the bound so the loop cannot be const-folded.
+            let n = std::hint::black_box(1000u64);
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(std::hint::black_box(i) * i);
+            }
+            acc
+        });
+        assert!(m.median > Duration::ZERO);
+        assert!(m.iters >= 1);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = fast_bench();
+        let m = b.throughput("tp", 1000, || {
+            std::hint::black_box((0..1000u64).sum::<u64>())
+        });
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut b = fast_bench();
+        b.run("a", || 1 + 1);
+        let path = "/tmp/sfc_bench_test.csv";
+        b.write_csv(path).unwrap();
+        let body = std::fs::read_to_string(path).unwrap();
+        assert!(body.starts_with("name,median_ns"));
+        assert!(body.contains("\na,"));
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,190 @@
+//! Mini property-testing harness (proptest stand-in; see DESIGN.md §3).
+//!
+//! Deterministic: every property runs a fixed number of cases from a seeded
+//! [`Rng`](crate::util::rng::Rng), ramping generator "size" from small to
+//! large so that boundary cases come first. On failure the harness performs
+//! a simple halving shrink on every integer component and reports the
+//! minimal failing case it found.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (can be raised via `SFC_CHECK_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("SFC_CHECK_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256)
+}
+
+/// A generated value together with the "size" budget it was drawn at.
+pub trait Gen: Clone + std::fmt::Debug {
+    /// Draw a value; `size` ramps 0..=100 over the run.
+    fn gen(rng: &mut Rng, size: u32) -> Self;
+    /// Candidate shrinks, simplest first. Default: none.
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Gen for u32 {
+    fn gen(rng: &mut Rng, size: u32) -> Self {
+        // Ramp the magnitude: small sizes draw tiny values.
+        let max = 1u64 << (2 + (size as u64 * 28) / 100); // 4 .. 2^30
+        rng.below(max) as u32
+    }
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Gen for u64 {
+    fn gen(rng: &mut Rng, size: u32) -> Self {
+        let max = 1u64 << (2 + (size as u64 * 58) / 100);
+        rng.below(max)
+    }
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Gen for bool {
+    fn gen(rng: &mut Rng, _size: u32) -> Self {
+        rng.bool(0.5)
+    }
+    fn shrinks(&self) -> Vec<Self> {
+        if *self { vec![false] } else { vec![] }
+    }
+}
+
+impl<A: Gen, B: Gen> Gen for (A, B) {
+    fn gen(rng: &mut Rng, size: u32) -> Self {
+        (A::gen(rng, size), B::gen(rng, size))
+    }
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Gen, B: Gen, C: Gen> Gen for (A, B, C) {
+    fn gen(rng: &mut Rng, size: u32) -> Self {
+        (A::gen(rng, size), B::gen(rng, size), C::gen(rng, size))
+    }
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrinks()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrinks()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with the minimal failing
+/// case if any input violates the property.
+pub fn forall<T: Gen>(name: &str, prop: impl Fn(&T) -> bool) {
+    forall_seeded(name, 0xC0FFEE, default_cases(), prop)
+}
+
+/// [`forall`] with explicit seed and case count.
+pub fn forall_seeded<T: Gen>(name: &str, seed: u64, cases: usize, prop: impl Fn(&T) -> bool) {
+    let mut rng = Rng::new(seed ^ fxhash(name));
+    for case in 0..cases {
+        let size = ((case * 100) / cases.max(1)) as u32;
+        let input = T::gen(&mut rng, size);
+        if !prop(&input) {
+            let minimal = shrink(input, &prop);
+            panic!("property '{name}' failed; minimal counterexample: {minimal:?}");
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly take the first shrink candidate that still
+/// fails, until none do.
+fn shrink<T: Gen>(mut failing: T, prop: &impl Fn(&T) -> bool) -> T {
+    'outer: loop {
+        for cand in failing.shrinks() {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        return failing;
+    }
+}
+
+/// Tiny FNV-style string hash to decorrelate per-property streams.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall::<(u32, u32)>("add-commutes", |&(a, b)| {
+            a.wrapping_add(b) == b.wrapping_add(a)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_reports() {
+        forall::<u32>("all-small", |&x| x < 5);
+    }
+
+    #[test]
+    fn shrink_reaches_minimal() {
+        // property fails for x >= 17; the shrinker must land exactly on 17.
+        let failing = 900_000u32;
+        let min = shrink(failing, &|&x: &u32| x < 17);
+        assert_eq!(min, 17);
+    }
+
+    #[test]
+    fn size_ramp_generates_small_values_first() {
+        let mut rng = Rng::new(1);
+        let early = u32::gen(&mut rng, 0);
+        assert!(early < 4, "size-0 draws are tiny, got {early}");
+    }
+}

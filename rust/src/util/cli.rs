@@ -1,0 +1,118 @@
+//! Minimal CLI argument parsing (clap stand-in; see DESIGN.md §3).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.options.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed option getter with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// String option getter.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// True if `--key` was present (any value but "false").
+    pub fn flag(&self, key: &str) -> bool {
+        self.options
+            .get(key)
+            .map(|v| v != "false")
+            .unwrap_or(false)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("run --n 512 --mode=hilbert --verbose");
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get("n", 0usize), 512);
+        assert_eq!(a.get_str("mode", ""), "hilbert");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.get("k", 7u32), 7);
+        assert_eq!(a.get_str("name", "d"), "d");
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--flag positional` consumes the positional as its value when it
+        // doesn't start with `--`; callers use `--flag=true` form to avoid
+        // ambiguity. Document the behaviour.
+        let a = parse("--fast=true cmd");
+        assert!(a.flag("fast"));
+        assert_eq!(a.subcommand(), Some("cmd"));
+    }
+
+    #[test]
+    fn bad_parse_falls_back() {
+        let a = parse("--n notanumber");
+        assert_eq!(a.get("n", 3usize), 3);
+    }
+}

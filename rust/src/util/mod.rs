@@ -1,0 +1,11 @@
+//! Infrastructure: deterministic RNG, property-testing, bench harness, CLI.
+//!
+//! The container's vendored crate set has neither `criterion` nor `proptest`
+//! nor `rand`; these modules provide the same methodology from scratch (see
+//! DESIGN.md §3 "Substitutions").
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod rng;
+pub mod table;

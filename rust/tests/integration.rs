@@ -1,0 +1,190 @@
+//! Cross-module integration tests (no PJRT required).
+
+use sfc_mine::apps::cholesky::{cholesky_blocked, random_spd, residual, TrailingOrder};
+use sfc_mine::apps::kmeans::{
+    assign_naive, init_centroids, lloyd, make_blobs, Assigner, KMeans,
+};
+use sfc_mine::apps::matmul::{matmul_hilbert, matmul_transposed};
+use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
+use sfc_mine::apps::simjoin::{join_bruteforce, join_fgf_hilbert, make_clustered, normalize};
+use sfc_mine::apps::Matrix;
+use sfc_mine::cachesim::{Hierarchy, HierarchyConfig, MemSink};
+use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
+use sfc_mine::curves::fur::{general_hilbert_path, FurHilbert};
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::curves::CurveKind;
+
+#[test]
+fn fig1e_hilbert_wins_in_the_realistic_band() {
+    // The paper's headline: at 5–20% cache, Hilbert beats nested loops by
+    // a large factor.
+    let n = 128u32;
+    let cfg = PairLoopConfig { n, m: n, object_bytes: 256 };
+    let orders = vec![
+        (CurveKind::Canonic, CurveKind::Canonic.enumerate(n)),
+        (CurveKind::Hilbert, HilbertIter::new(n).collect::<Vec<_>>()),
+    ];
+    let rows = fig1e_sweep(&cfg, &orders, &[0.05, 0.10, 0.20], 64);
+    for r in &rows {
+        let ratio = r.misses[0] as f64 / r.misses[1] as f64;
+        assert!(
+            ratio > 3.0,
+            "at {:.0}% cache canonic/hilbert = {ratio:.1} (expected >3x)",
+            r.cache_fraction * 100.0
+        );
+    }
+}
+
+#[test]
+fn hierarchy_prefers_hilbert_matmul_trace() {
+    // Replay the pair-loop trace of a blocked matmul through the full
+    // L1/L2/TLB hierarchy: the Hilbert block order must cost less.
+    let blocks = 32u32;
+    let block_bytes = 4096u32; // one 32x32 f32 block
+    let cost = |order: &[(u32, u32)]| {
+        let mut h = Hierarchy::new(&HierarchyConfig::tiny());
+        let cfg = PairLoopConfig { n: blocks, m: blocks, object_bytes: block_bytes };
+        sfc_mine::apps::pairloop::trace_pairs(&cfg, order, &mut h);
+        h.cost_cycles()
+    };
+    let canonic_cost = cost(&CurveKind::Canonic.enumerate(blocks));
+    let hilbert_cost = cost(&HilbertIter::new(blocks).collect::<Vec<_>>());
+    assert!(
+        hilbert_cost < canonic_cost,
+        "hierarchy cost: hilbert {hilbert_cost} vs canonic {canonic_cost}"
+    );
+}
+
+#[test]
+fn cholesky_reconstructs_via_hilbert_matmul() {
+    // apps compose: factor with FGF-Hilbert traversal, reconstruct with
+    // Hilbert matmul, compare against the original.
+    let n = 48;
+    let a = random_spd(n, 3);
+    let mut l = a.clone();
+    cholesky_blocked(&mut l, 16, TrailingOrder::Hilbert).unwrap();
+    assert!(residual(&l, &a) < 1e-2);
+    let lt = l.transposed();
+    let rebuilt = matmul_hilbert(&l, &lt, 16);
+    assert!(rebuilt.max_abs_diff(&a) < 1e-2);
+}
+
+#[test]
+fn lloyd_full_run_all_assigners_same_fixed_point() {
+    let (points, _) = make_blobs(400, 5, 4, 0.4, 17);
+    let mut results = Vec::new();
+    for assigner in [
+        Assigner::Naive,
+        Assigner::Blocked(64, 4),
+        Assigner::Hilbert(64, 4),
+    ] {
+        let mut km = KMeans {
+            points: points.clone(),
+            centroids: init_centroids(&points, 5, 9),
+        };
+        let res = lloyd(&mut km, assigner, 40, 1e-10);
+        assert!(res.converged, "{assigner:?} did not converge");
+        results.push(res.assignment.labels);
+    }
+    assert_eq!(results[0], results[1]);
+    assert_eq!(results[0], results[2]);
+}
+
+#[test]
+fn coordinator_lloyd_matches_serial_lloyd() {
+    let (points, _) = make_blobs(600, 8, 6, 0.5, 23);
+    let centroids = init_centroids(&points, 8, 4);
+    // Serial steps.
+    let mut serial = KMeans { points: points.clone(), centroids: centroids.clone() };
+    for _ in 0..5 {
+        let a = assign_naive(&serial);
+        serial.centroids = sfc_mine::apps::kmeans::update_centroids(&serial, &a);
+    }
+    // Coordinator steps.
+    let coord = Coordinator::new(3);
+    let mut par = KMeans { points, centroids };
+    for _ in 0..5 {
+        let (_, c) = par_kmeans_step(&coord, &par, 128, 8);
+        par.centroids = c;
+    }
+    assert!(par.centroids.max_abs_diff(&serial.centroids) < 1e-3);
+}
+
+#[test]
+fn simjoin_fgf_equals_bruteforce_many_workloads() {
+    for seed in [1u64, 2, 3] {
+        for eps in [0.6f32, 1.2] {
+            let points = make_clustered(250, 3, 10, 0.7, seed);
+            let (a, _) = join_bruteforce(&points, eps);
+            let (b, _) = join_fgf_hilbert(&points, eps);
+            assert_eq!(normalize(a), normalize(b), "seed={seed} eps={eps}");
+        }
+    }
+}
+
+#[test]
+fn fur_trace_has_better_locality_than_roundup_filter() {
+    // Iterating a skewed rectangle: FUR's traversal touches object rows
+    // with fewer LRU misses than the round-up+filter traversal.
+    let (n, m) = (48u32, 160u32);
+    let cfg = PairLoopConfig { n, m, object_bytes: 256 };
+    let np2 = n.max(m).next_power_of_two();
+    let roundup: Vec<(u32, u32)> = HilbertIter::new(np2)
+        .filter(|&(i, j)| i < n && j < m)
+        .collect();
+    let fur = FurHilbert::path(n, m);
+    assert_eq!(roundup.len(), fur.len());
+    let misses = |order: &[(u32, u32)]| {
+        let mut cache = sfc_mine::cachesim::LruCache::with_bytes(cfg.working_set() / 8, 64);
+        sfc_mine::apps::pairloop::trace_pairs(&cfg, order, &mut cache);
+        cache.stats.misses
+    };
+    let m_fur = misses(&fur);
+    let m_round = misses(&roundup);
+    // FUR should be at least comparable (the filtered round-up keeps the
+    // Hilbert shape but wastes generation; locality is similar) — assert
+    // FUR within 1.5x and not pathological.
+    assert!(
+        (m_fur as f64) < (m_round as f64) * 1.5,
+        "fur {m_fur} vs roundup {m_round}"
+    );
+}
+
+#[test]
+fn general_hilbert_feeds_matmul_blocks_completely() {
+    // The block traversal used by matmul_hilbert covers every block pair
+    // exactly once for awkward shapes.
+    let (bi, bj) = (7u32, 13u32);
+    let path = general_hilbert_path(bi, bj);
+    assert_eq!(path.len(), (bi * bj) as usize);
+    // And the resulting matmul is correct (cross-checked vs transposed).
+    let b = Matrix::random(7 * 8, 13 * 8, 1, -1.0, 1.0);
+    let c = Matrix::random(13 * 8, 7 * 8, 2, -1.0, 1.0);
+    let x = matmul_hilbert(&b, &c, 8);
+    let y = matmul_transposed(&b, &c);
+    assert!(x.max_abs_diff(&y) < 1e-3);
+}
+
+#[test]
+fn hierarchy_memsink_composes_with_pairloop() {
+    let cfg = PairLoopConfig { n: 32, m: 32, object_bytes: 128 };
+    let mut h = Hierarchy::new(&HierarchyConfig::tiny());
+    let order: Vec<(u32, u32)> = HilbertIter::new(32).collect();
+    sfc_mine::apps::pairloop::trace_pairs(&cfg, &order, &mut h);
+    let stats = h.level_stats();
+    assert!(stats[0].accesses > 0);
+    assert!(stats[1].accesses <= stats[0].accesses);
+    // TLB saw page-granular traffic.
+    assert!(h.tlb_stats.accesses == stats[0].accesses);
+}
+
+#[test]
+fn memsink_trait_object_safety() {
+    // MemSink is usable as a trait object (apps take &mut dyn MemSink in
+    // generic replay helpers).
+    let mut cache = sfc_mine::cachesim::LruCache::new(4, 64);
+    let sink: &mut dyn MemSink = &mut cache;
+    sink.touch(0, 4);
+    sink.touch_elem(1000, 3, 8);
+    assert_eq!(cache.stats.accesses, 2);
+}

@@ -1,0 +1,250 @@
+//! Repo-wide property tests (the proptest-role suite; see DESIGN.md §3).
+//!
+//! Each property sweeps a seeded, size-ramped input space via
+//! `util::check::forall` and shrinks failures to minimal counterexamples.
+
+use sfc_mine::apps::simjoin::{join_bruteforce, join_grid_nested, make_clustered, normalize};
+use sfc_mine::cachesim::LruCache;
+use sfc_mine::curves::fgf::{fgf_path, BlockClass, Rect, Region, UpperTriangle};
+use sfc_mine::curves::fur::{general_hilbert_path, FurHilbert};
+use sfc_mine::curves::gray::GrayCode;
+use sfc_mine::curves::hilbert::Hilbert;
+use sfc_mine::curves::lindenmayer::hilbert_path;
+use sfc_mine::curves::nonrecursive::HilbertIter;
+use sfc_mine::curves::peano::Peano;
+use sfc_mine::curves::zorder::ZOrder;
+use sfc_mine::curves::SpaceFillingCurve;
+use sfc_mine::util::check::{forall, forall_seeded};
+use sfc_mine::util::rng::Rng;
+use std::collections::HashSet;
+
+// --------------------------------------------------------------------------
+// Curve bijectivity on the full u32 domain
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_all_curves_roundtrip_any_coords() {
+    forall::<(u32, u32)>("roundtrip-hilbert", |&(i, j)| {
+        Hilbert::coords(Hilbert::order(i, j)) == (i, j)
+    });
+    forall::<(u32, u32)>("roundtrip-zorder", |&(i, j)| {
+        ZOrder::coords(ZOrder::order(i, j)) == (i, j)
+    });
+    forall::<(u32, u32)>("roundtrip-gray", |&(i, j)| {
+        GrayCode::coords(GrayCode::order(i, j)) == (i, j)
+    });
+    forall::<(u32, u32)>("roundtrip-peano", |&(i, j)| {
+        Peano::coords(Peano::order(i, j)) == (i, j)
+    });
+}
+
+#[test]
+fn prop_curves_injective_on_random_pairs() {
+    // Distinct coordinate pairs map to distinct order values.
+    forall::<(u32, u32)>("injective", |&(a, b)| {
+        let p1 = (a & 0xFFFF, b & 0xFFFF);
+        let p2 = (b & 0xFFFF, a & 0xFFFF);
+        if p1 == p2 {
+            return true;
+        }
+        Hilbert::order(p1.0, p1.1) != Hilbert::order(p2.0, p2.1)
+            && ZOrder::order(p1.0, p1.1) != ZOrder::order(p2.0, p2.1)
+            && Peano::order(p1.0, p1.1) != Peano::order(p2.0, p2.1)
+    });
+}
+
+// --------------------------------------------------------------------------
+// Generator equivalence: Mealy ≡ Lindenmayer ≡ Figure-5 ≡ range-resume
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_hilbert_generators_equivalent() {
+    for level in 0..=7u32 {
+        let rec = hilbert_path(level);
+        let nonrec: Vec<_> = HilbertIter::with_level(level).collect();
+        assert_eq!(rec, nonrec, "L={level}");
+        // Spot-check Mealy equality at random order values.
+        let mut rng = Rng::new(level as u64);
+        for _ in 0..50 {
+            let h = rng.below(1u64 << (2 * level));
+            assert_eq!(rec[h as usize], Hilbert::coords_at_level(h, level));
+        }
+    }
+}
+
+#[test]
+fn prop_range_resume_equals_full_iteration() {
+    forall_seeded::<(u32, u32)>("range-resume", 99, 128, |&(a, b)| {
+        let level = 6u32;
+        let total = 1u64 << (2 * level);
+        let s = (a as u64) % total;
+        let len = (b as u64) % 200;
+        let e = (s + len).min(total);
+        let expect: Vec<_> = HilbertIter::with_level(level)
+            .skip(s as usize)
+            .take((e - s) as usize)
+            .collect();
+        let got: Vec<_> = HilbertIter::range(level, s, e).collect();
+        expect == got
+    });
+}
+
+// --------------------------------------------------------------------------
+// FUR / generalized curves over random rectangles
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_fur_is_permutation_any_rectangle() {
+    forall_seeded::<(u32, u32)>("fur-permutation", 7, 160, |&(n, m)| {
+        let (n, m) = (n % 200 + 1, m % 200 + 1);
+        let p = FurHilbert::path(n, m);
+        if p.len() != (n as usize) * (m as usize) {
+            return false;
+        }
+        let set: HashSet<_> = p.iter().copied().collect();
+        set.len() == p.len() && p.iter().all(|&(i, j)| i < n && j < m)
+    });
+}
+
+#[test]
+fn prop_general_hilbert_near_unit_steps() {
+    forall_seeded::<(u32, u32)>("gilbert-steps", 13, 160, |&(n, m)| {
+        let (n, m) = (n % 150 + 1, m % 150 + 1);
+        let p = general_hilbert_path(n, m);
+        let non_unit = p
+            .windows(2)
+            .map(|w| {
+                (w[1].0 as i64 - w[0].0 as i64).abs() + (w[1].1 as i64 - w[0].1 as i64).abs()
+            })
+            .filter(|&d| d != 1)
+            .count();
+        non_unit <= 1
+    });
+}
+
+// --------------------------------------------------------------------------
+// FGF invariants over random regions
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_fgf_accounts_every_order_value() {
+    forall_seeded::<(u32, u32)>("fgf-accounting", 23, 96, |&(n, m)| {
+        let level = 6u32;
+        let side = 1u32 << level;
+        let r = Rect { n: n % (side + 20), m: m % (side + 20) };
+        let (_, stats) = fgf_path(level, &r);
+        stats.visited + stats.skipped == 1u64 << (2 * level)
+    });
+}
+
+#[test]
+fn prop_fgf_visits_exactly_region_cells() {
+    forall_seeded::<(u32, u32)>("fgf-membership", 29, 64, |&(n, m)| {
+        let level = 5u32;
+        let side = 1u32 << level;
+        let r = Rect { n: n % side + 1, m: m % side + 1 };
+        let (path, _) = fgf_path(level, &r);
+        let brute: usize = (r.n.min(side) as usize) * (r.m.min(side) as usize);
+        path.len() == brute && path.iter().all(|&(i, j, _)| i < r.n && j < r.m)
+    });
+}
+
+#[test]
+fn prop_fgf_hilbert_values_strictly_increase() {
+    let (path, _) = fgf_path(7, &UpperTriangle);
+    assert!(path.windows(2).all(|w| w[0].2 < w[1].2));
+    // And each equals the true Mealy value.
+    let mut rng = Rng::new(5);
+    for _ in 0..200 {
+        let idx = rng.below_usize(path.len());
+        let (i, j, h) = path[idx];
+        assert_eq!(Hilbert::order_at_level(i, j, 7), h);
+    }
+}
+
+#[test]
+fn prop_region_classify_consistent_with_membership() {
+    // A region's block classification must agree with cell membership.
+    forall_seeded::<(u32, u32, u32)>("region-consistency", 31, 96, |&(i0, j0, lv)| {
+        let level = lv % 4;
+        let (i0, j0) = (i0 % 64, j0 % 64);
+        let r = UpperTriangle;
+        let s = 1u32 << level;
+        let class = r.classify(i0, j0, level);
+        let mut any = false;
+        let mut all = true;
+        for i in i0..i0 + s {
+            for j in j0..j0 + s {
+                if i < j {
+                    any = true;
+                } else {
+                    all = false;
+                }
+            }
+        }
+        match class {
+            BlockClass::Full => all,
+            BlockClass::Disjoint => !any,
+            BlockClass::Partial => true,
+        }
+    });
+}
+
+// --------------------------------------------------------------------------
+// Cache simulator: LRU inclusion property
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_lru_inclusion_bigger_cache_never_worse() {
+    // Fully-associative LRU has the stack property: misses are monotone
+    // non-increasing in capacity, for ANY trace.
+    forall_seeded::<u64>("lru-inclusion", 41, 48, |&seed| {
+        let mut rng = Rng::new(seed);
+        let trace: Vec<u64> = (0..800).map(|_| rng.below(120)).collect();
+        let mut last = u64::MAX;
+        for cap in [4usize, 8, 16, 32, 64, 128] {
+            let mut c = LruCache::new(cap, 64);
+            for &t in &trace {
+                c.access_tag(t);
+            }
+            if c.stats.misses > last {
+                return false;
+            }
+            last = c.stats.misses;
+        }
+        true
+    });
+}
+
+// --------------------------------------------------------------------------
+// Similarity join: result-set equality on random workloads
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_simjoin_variants_agree() {
+    forall_seeded::<(u32, u32)>("simjoin-agree", 43, 12, |&(a, b)| {
+        let n = (a % 150 + 20) as usize;
+        let eps = 0.3 + (b % 20) as f32 * 0.1;
+        let points = make_clustered(n, 3, 5, 0.6, a as u64 * 7 + 1);
+        let (x, _) = join_bruteforce(&points, eps);
+        let (y, _) = join_grid_nested(&points, eps);
+        let (z, _) = sfc_mine::apps::simjoin::join_fgf_hilbert(&points, eps);
+        let x = normalize(x);
+        x == normalize(y) && x == normalize(z)
+    });
+}
+
+// --------------------------------------------------------------------------
+// Hilbert locality bound (a paper-level guarantee)
+// --------------------------------------------------------------------------
+
+#[test]
+fn prop_hilbert_consecutive_values_are_neighbors() {
+    forall::<u64>("hilbert-adjacency", |&h| {
+        let h = h & ((1u64 << 32) - 2); // keep h+1 in range
+        let (i1, j1) = Hilbert::coords(h);
+        let (i2, j2) = Hilbert::coords(h + 1);
+        let d = (i1 as i64 - i2 as i64).abs() + (j1 as i64 - j2 as i64).abs();
+        d == 1
+    });
+}

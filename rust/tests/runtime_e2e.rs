@@ -1,0 +1,166 @@
+//! Integration: the full AOT bridge — load `artifacts/*.hlo.txt` (lowered
+//! from JAX+Pallas by `make artifacts`), compile on the PJRT CPU client,
+//! execute from Rust, and check numerics against Rust-side references.
+//!
+//! These tests skip (with a loud message) when artifacts are missing so
+//! `cargo test` works standalone; `make test` always builds them first.
+
+use sfc_mine::apps::kmeans::{assign_naive, KMeans};
+use sfc_mine::apps::matmul::matmul_naive;
+use sfc_mine::apps::Matrix;
+use sfc_mine::runtime::{artifact, Engine, Manifest};
+use sfc_mine::runtime::engine::TensorF32;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // Tests run from the crate root.
+    let dir = artifact::default_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        );
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_expected_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    for name in ["kmeans_step", "pairwise_dists", "matmul"] {
+        assert!(m.get(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn engine_loads_and_lists() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_manifest_dir(&dir).unwrap();
+    let mut names = engine.loaded();
+    names.sort_unstable();
+    assert!(names.contains(&"kmeans_step"));
+}
+
+#[test]
+fn matmul_via_pjrt_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_manifest_dir(&dir).unwrap();
+
+    // The artifact was lowered for 256x256 inputs.
+    let n = 256usize;
+    let a = Matrix::random(n, n, 5, -1.0, 1.0);
+    let b = Matrix::random(n, n, 6, -1.0, 1.0);
+    let out = engine
+        .execute(
+            "matmul",
+            &[
+                TensorF32::new(vec![n, n], a.data.clone()).unwrap(),
+                TensorF32::new(vec![n, n], b.data.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].dims, vec![n, n]);
+    let reference = matmul_naive(&a, &b);
+    let got = Matrix { rows: n, cols: n, data: out[0].data.clone() };
+    let diff = got.max_abs_diff(&reference);
+    assert!(diff < 1e-2, "PJRT vs Rust matmul diff {diff}");
+}
+
+#[test]
+fn kmeans_step_via_pjrt_matches_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_manifest_dir(&dir).unwrap();
+
+    // Artifact shapes: n=4096, d=16, k=64.
+    let (n, d, k) = (4096usize, 16usize, 64usize);
+    let points = Matrix::random(n, d, 11, -5.0, 5.0);
+    let centroids = Matrix::random(k, d, 12, -5.0, 5.0);
+    let out = engine
+        .execute(
+            "kmeans_step",
+            &[
+                TensorF32::new(vec![n, d], points.data.clone()).unwrap(),
+                TensorF32::new(vec![k, d], centroids.data.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 4, "labels, counts, sums, inertia");
+    let labels = &out[0];
+    let counts = &out[1];
+    let sums = &out[2];
+    let inertia = &out[3];
+    assert_eq!(labels.dims, vec![n]);
+    assert_eq!(counts.dims, vec![k]);
+    assert_eq!(sums.dims, vec![k, d]);
+    assert!(inertia.dims.is_empty());
+
+    // Cross-check against the Rust-side assignment.
+    let km = KMeans { points: points.clone(), centroids };
+    let rust_assign = assign_naive(&km);
+    let pjrt_labels: Vec<u32> = labels.data.iter().map(|&x| x as u32).collect();
+    assert_eq!(pjrt_labels, rust_assign.labels, "PJRT vs Rust labels");
+    let total: f32 = counts.data.iter().sum();
+    assert_eq!(total as usize, n);
+    let rust_inertia = rust_assign.inertia();
+    let rel = ((inertia.data[0] as f64) - rust_inertia).abs() / rust_inertia.max(1e-9);
+    assert!(rel < 1e-3, "inertia rel err {rel}");
+}
+
+#[test]
+fn execute_buffers_matches_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_manifest_dir(&dir).unwrap();
+    let n = 256usize;
+    let a = TensorF32::new(vec![n, n], Matrix::random(n, n, 31, -1.0, 1.0).data).unwrap();
+    let b = TensorF32::new(vec![n, n], Matrix::random(n, n, 32, -1.0, 1.0).data).unwrap();
+    let via_literals = engine.execute("matmul", &[a.clone(), b.clone()]).unwrap();
+    let da = engine.to_device(&a).unwrap();
+    let db = engine.to_device(&b).unwrap();
+    let via_buffers = engine.execute_buffers("matmul", &[&da, &db]).unwrap();
+    assert_eq!(via_literals.len(), via_buffers.len());
+    assert_eq!(via_literals[0].dims, via_buffers[0].dims);
+    assert_eq!(via_literals[0].data, via_buffers[0].data, "bitwise-identical results");
+    // Buffers are reusable across calls.
+    let again = engine.execute_buffers("matmul", &[&da, &db]).unwrap();
+    assert_eq!(again[0].data, via_buffers[0].data);
+}
+
+#[test]
+fn pairwise_dists_via_pjrt_spot_check() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    engine.load_manifest_dir(&dir).unwrap();
+    let (n, d, k) = (4096usize, 16usize, 64usize);
+    let points = Matrix::random(n, d, 21, -1.0, 1.0);
+    let centroids = Matrix::random(k, d, 22, -1.0, 1.0);
+    let out = engine
+        .execute(
+            "pairwise_dists",
+            &[
+                TensorF32::new(vec![n, d], points.data.clone()).unwrap(),
+                TensorF32::new(vec![k, d], centroids.data.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].dims, vec![n, k]);
+    // Spot-check a handful of entries.
+    for &(p, c) in &[(0usize, 0usize), (17, 3), (4095, 63), (2048, 31)] {
+        let mut want = 0.0f32;
+        for idx in 0..d {
+            let t = points.at(p, idx) - centroids.at(c, idx);
+            want += t * t;
+        }
+        let got = out[0].data[p * k + c];
+        assert!(
+            (got - want).abs() < 1e-3 * want.max(1.0),
+            "d2[{p},{c}] = {got}, want {want}"
+        );
+    }
+}
