@@ -19,9 +19,10 @@ use sfc_mine::apps::kmeans::{init_centroids, make_blobs, Assignment, KMeans};
 use sfc_mine::apps::Matrix;
 use sfc_mine::coordinator::batch::batch_rows;
 use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
-use sfc_mine::runtime::engine::TensorF32;
+use sfc_mine::runtime::engine::{DeviceBuffer, TensorF32};
 use sfc_mine::runtime::{artifact, Engine};
 use sfc_mine::util::cli::Args;
+use sfc_mine::Error;
 use std::time::Instant;
 
 // The artifact's static shapes (must match python/compile/aot.py defaults).
@@ -29,7 +30,7 @@ const BATCH: usize = 4096;
 const DIM: usize = 16;
 const K: usize = 64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sfc_mine::Result<()> {
     let args = Args::from_env();
     let batches: usize = args.get("batches", 10);
     let iters: usize = args.get("iters", 12);
@@ -45,10 +46,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- L3 setup: load the AOT artifacts into the PJRT engine -----------
     let dir = artifact::default_dir();
-    let mut engine = Engine::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut engine = Engine::cpu()?;
     let manifest = engine
         .load_manifest_dir(&dir)
-        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
+        .map_err(|e| Error::Runtime(format!("{e} — run `make artifacts` first")))?;
     println!(
         "engine: {} | artifacts: {:?}",
         engine.platform(),
@@ -65,14 +66,10 @@ fn main() -> anyhow::Result<()> {
     // tensor (§Perf: removes the per-call 256 KiB host→device copy).
     let point_batches = batch_rows(&points.data, DIM, BATCH);
     assert_eq!(point_batches.len(), batches);
-    let device_batches: Vec<xla::PjRtBuffer> = point_batches
+    let device_batches: Vec<DeviceBuffer> = point_batches
         .iter()
-        .map(|b| {
-            engine
-                .to_device(&TensorF32::new(vec![BATCH, DIM], b.data.clone()).unwrap())
-                .map_err(|e| anyhow::anyhow!("{e}"))
-        })
-        .collect::<Result<_, _>>()?;
+        .map(|b| engine.to_device(&TensorF32::new(vec![BATCH, DIM], b.data.clone()).unwrap()))
+        .collect::<sfc_mine::Result<_>>()?;
 
     // --- Lloyd iterations over PJRT ----------------------------------------
     println!("\niter    inertia          Δ%        points/s");
@@ -86,11 +83,11 @@ fn main() -> anyhow::Result<()> {
         let mut inertia = 0.0f64;
         let dev_centroids = engine
             .to_device(&TensorF32::new(vec![K, DIM], centroids.data.clone()).unwrap())
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            ?;
         for (b, batch) in point_batches.iter().enumerate() {
             let out = engine
                 .execute_buffers(&model, &[&device_batches[b], &dev_centroids])
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                ?;
             let (blabels, bcounts, bsums, binertia) = (&out[0], &out[1], &out[2], &out[3]);
             // Merge valid lanes only (the tail batch is padded).
             let valid = batch.valid;
@@ -146,11 +143,11 @@ fn main() -> anyhow::Result<()> {
     // centroids (the loop's labels predate its last centroid update).
     let dev_centroids = engine
         .to_device(&TensorF32::new(vec![K, DIM], centroids.data.clone()).unwrap())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        ?;
     for (b, batch) in point_batches.iter().enumerate() {
         let out = engine
             .execute_buffers(&model, &[&device_batches[b], &dev_centroids])
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            ?;
         for p in 0..batch.valid {
             labels[b * BATCH + p] = out[0].data[p] as u32;
         }

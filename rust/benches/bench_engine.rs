@@ -1,0 +1,190 @@
+//! Engine bench (ISSUE 1): scalar vs **batched** conversion, and
+//! engine-routed enumeration vs the legacy repeated-`coords` filter loop,
+//! across all curves. Emits JSON (`reports/bench_engine.json`) for the
+//! perf trajectory in addition to the usual CSV.
+//!
+//! Expected shape: batched inverse conversion on order-sorted workloads
+//! beats scalar by ~log(n) for Hilbert (Figure-5 stepping instead of one
+//! Mealy inversion per value) and is at least on par everywhere else;
+//! engine enumeration matches or beats the legacy path for every curve
+//! (it is the same cover filter, minus the per-cell `O(log)` inversions
+//! for Hilbert/Peano).
+
+use sfc_mine::curves::engine::CurveMapper;
+use sfc_mine::curves::gray::GrayCode;
+use sfc_mine::curves::hilbert::Hilbert;
+use sfc_mine::curves::peano::Peano;
+use sfc_mine::curves::zorder::ZOrder;
+use sfc_mine::curves::{CurveKind, SpaceFillingCurve};
+use sfc_mine::util::bench::{Bench, Measurement};
+use sfc_mine::util::table::Table;
+
+/// The legacy enumeration path this bench regresses against: one
+/// `coords` per cover order value (`O(n² log n)` for Hilbert/Peano),
+/// filtering the in-grid cells — what `collect_filtered` did before the
+/// engine.
+fn legacy_collect<C: SpaceFillingCurve>(n: u32) -> Vec<(u32, u32)> {
+    let cover = C::cover_side(n) as u64;
+    let mut out = Vec::with_capacity((n as usize) * (n as usize));
+    for c in 0..cover * cover {
+        let (i, j) = C::coords(c);
+        if i < n && j < n {
+            out.push((i, j));
+        }
+    }
+    out
+}
+
+fn write_json(bench: &Bench, path: &str) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (idx, m) in bench.results().iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {}, \"mad_ns\": {}, \"elements\": {}}}",
+            m.name,
+            m.median.as_nanos(),
+            m.mad.as_nanos(),
+            m.elements.unwrap_or(0)
+        ));
+    }
+    s.push_str("\n]\n");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s)
+}
+
+fn per_elem(m: &Measurement) -> f64 {
+    m.median.as_nanos() as f64 / m.elements.unwrap_or(1) as f64
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n_conv: u64 = if fast { 1 << 14 } else { 1 << 20 };
+    let n_enum: u32 = if fast { 256 } else { 1024 };
+    let mut bench = Bench::new();
+
+    // --- Scalar vs batched conversion (order-sorted workload) --------------
+    let mut conv = Table::new(vec![
+        "curve",
+        "scalar coords ns/val",
+        "batched coords ns/val",
+        "speedup",
+        "scalar order ns/pair",
+        "batched order ns/pair",
+    ]);
+    let orders: Vec<u64> = (0..n_conv).collect();
+    for kind in CurveKind::ALL {
+        let mapper = kind.mapper();
+        let mut cells: Vec<(u32, u32)> = Vec::with_capacity(orders.len());
+        let m_scalar = bench.throughput(
+            &format!("engine/coords_scalar/{}", kind.name()),
+            n_conv,
+            || {
+                let mut acc = 0u64;
+                for &c in &orders {
+                    let (i, j) = mapper.coords(c);
+                    acc = acc.wrapping_add((i ^ j) as u64);
+                }
+                acc
+            },
+        );
+        let m_batched = bench.throughput(
+            &format!("engine/coords_batched/{}", kind.name()),
+            n_conv,
+            || {
+                cells.clear();
+                mapper.coords_batch(&orders, &mut cells);
+                cells.len()
+            },
+        );
+        // Forward direction on the cells we just produced (clear first:
+        // the bench closure left its last fill in place).
+        cells.clear();
+        mapper.coords_batch(&orders, &mut cells);
+        let mut hs: Vec<u64> = Vec::with_capacity(cells.len());
+        let f_scalar = bench.throughput(
+            &format!("engine/order_scalar/{}", kind.name()),
+            n_conv,
+            || {
+                let mut acc = 0u64;
+                for &(i, j) in &cells {
+                    acc = acc.wrapping_add(mapper.order(i, j));
+                }
+                acc
+            },
+        );
+        let f_batched = bench.throughput(
+            &format!("engine/order_batched/{}", kind.name()),
+            n_conv,
+            || {
+                hs.clear();
+                mapper.order_batch(&cells, &mut hs);
+                hs.len()
+            },
+        );
+        conv.row(vec![
+            kind.name().to_string(),
+            format!("{:.2}", per_elem(&m_scalar)),
+            format!("{:.2}", per_elem(&m_batched)),
+            format!("{:.2}x", per_elem(&m_scalar) / per_elem(&m_batched)),
+            format!("{:.2}", per_elem(&f_scalar)),
+            format!("{:.2}", per_elem(&f_batched)),
+        ]);
+    }
+    println!("\n== engine: scalar vs batched conversion ({n_conv} values) ==");
+    print!("{}", conv.render());
+
+    // --- Engine enumeration vs legacy repeated-coords filter ---------------
+    // Non-power-of-two side so every curve actually filters its cover.
+    let n = n_enum - n_enum / 5;
+    let cells64 = (n as u64) * (n as u64);
+    let mut enum_t = Table::new(vec!["curve", "legacy ns/cell", "engine ns/cell", "speedup"]);
+    for kind in CurveKind::ALL {
+        let m_legacy = bench.throughput(
+            &format!("engine/enumerate_legacy/{}", kind.name()),
+            cells64,
+            || {
+                let v = match kind {
+                    CurveKind::Canonic => {
+                        // The legacy path had a bespoke nested loop here;
+                        // measure that faithfully.
+                        let mut v = Vec::with_capacity((n as usize) * (n as usize));
+                        for i in 0..n {
+                            for j in 0..n {
+                                v.push((i, j));
+                            }
+                        }
+                        v
+                    }
+                    CurveKind::ZOrder => legacy_collect::<ZOrder>(n),
+                    CurveKind::Gray => legacy_collect::<GrayCode>(n),
+                    CurveKind::Hilbert => legacy_collect::<Hilbert>(n),
+                    CurveKind::Peano => legacy_collect::<Peano>(n),
+                };
+                v.len()
+            },
+        );
+        let m_engine = bench.throughput(
+            &format!("engine/enumerate_engine/{}", kind.name()),
+            cells64,
+            || kind.enumerate(n).len(),
+        );
+        enum_t.row(vec![
+            kind.name().to_string(),
+            format!("{:.2}", per_elem(&m_legacy)),
+            format!("{:.2}", per_elem(&m_engine)),
+            format!("{:.2}x", per_elem(&m_legacy) / per_elem(&m_engine)),
+        ]);
+    }
+    println!("\n== engine enumerate vs legacy collect_filtered ({n}x{n}) ==");
+    print!("{}", enum_t.render());
+
+    bench.write_csv("reports/bench_engine.csv").unwrap();
+    write_json(&bench, "reports/bench_engine.json").unwrap();
+    conv.write_csv("reports/engine_conversion.csv").unwrap();
+    enum_t.write_csv("reports/engine_enumerate.csv").unwrap();
+    println!("\nreports: reports/bench_engine.{{csv,json}}");
+}

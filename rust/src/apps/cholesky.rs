@@ -7,13 +7,15 @@
 //!
 //! * [`cholesky_blocked`] with [`TrailingOrder::Canonic`] — nested loops
 //!   (the cache-conscious baseline; block size is the tuning knob);
-//! * [`TrailingOrder::Hilbert`] — FGF-Hilbert over the trailing triangle
-//!   (`Intersect(LowerTriangleIncl, MinBounds)`), cache-oblivious.
+//! * [`TrailingOrder::Hilbert`] — the engine's [`FgfMapper`] over the
+//!   trailing triangle (`Intersect(LowerTriangleIncl, MinBounds)`),
+//!   cache-oblivious with jump-over.
 //!
 //! The unblocked [`cholesky_unblocked`] is the correctness reference.
 
 use super::Matrix;
-use crate::curves::fgf::{fgf_hilbert_loop, Intersect, LowerTriangleIncl, MinBounds};
+use crate::curves::engine::FgfMapper;
+use crate::curves::fgf::{Intersect, LowerTriangleIncl, MinBounds};
 use crate::{Error, Result};
 
 /// Traversal order of the trailing-update block grid.
@@ -100,7 +102,8 @@ pub fn cholesky_blocked(a: &mut Matrix, t: usize, order: TrailingOrder) -> Resul
                     }),
                     crate::curves::fgf::Rect { n: nb as u32, m: nb as u32 },
                 );
-                fgf_hilbert_loop(level, &region, |ib, jb, _h| {
+                let mapper = FgfMapper::new(level, region);
+                mapper.traverse(|ib, jb, _h| {
                     update(ib as usize, jb as usize, a);
                 });
             }

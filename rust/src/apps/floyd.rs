@@ -6,13 +6,17 @@
 //! loop can be traversed cache-obliviously:
 //!
 //! * [`floyd_canonic`] — textbook `k, i, j` loops;
-//! * [`floyd_hilbert`] — `(i, j)` in generalized-Hilbert order per `k`;
-//! * [`floyd_hilbert_blocked`] — `(i-block, j-block)` grid in Hilbert
-//!   order with canonic interiors (the practical hot-path variant);
+//! * [`floyd_curve`] — `(i, j)` in any engine curve order per `k` (the
+//!   mapper is planned once and replayed for every pivot);
+//!   [`floyd_hilbert`] is the Hilbert instantiation;
+//! * [`floyd_curve_blocked`] / [`floyd_hilbert_blocked`] — `(i-block,
+//!   j-block)` grid in curve order with canonic interiors (the practical
+//!   hot-path variant);
 //! * [`floyd_tiled`] — canonic block order (the cache-conscious baseline).
 
 use super::Matrix;
-use crate::curves::fur::general_hilbert_loop;
+use crate::curves::engine::CurveMapper as _;
+use crate::curves::CurveKind;
 
 /// Value used for "no edge". Additions saturate below f32::MAX.
 pub const INF: f32 = 1.0e30;
@@ -52,32 +56,54 @@ pub fn floyd_canonic(d: &mut Matrix) {
     }
 }
 
-/// `(i, j)` in generalized-Hilbert order for each pivot.
-pub fn floyd_hilbert(d: &mut Matrix) {
+/// `(i, j)` in any engine curve order for each pivot. The rect mapper is
+/// planned once and its segments replayed for every pivot (the engine win
+/// over re-running a recursive generator per `k`).
+pub fn floyd_curve(d: &mut Matrix, kind: CurveKind) {
     let n = d.rows as u32;
     assert_eq!(d.rows, d.cols);
+    if n == 0 {
+        return;
+    }
+    let mapper = kind.rect_mapper(n, n);
+    let span = mapper.domain().order_span().expect("rect mapper is finite");
     for k in 0..d.rows {
-        general_hilbert_loop(n, n, |i, j| {
+        for (i, j) in mapper.segments(0..span) {
             let (i, j) = (i as usize, j as usize);
             let cand = d.at(i, k) + d.at(k, j);
             if cand < d.at(i, j) {
                 *d.at_mut(i, j) = cand;
             }
-        });
+        }
     }
 }
 
-/// `(i-block, j-block)` in Hilbert order, canonic interior.
-pub fn floyd_hilbert_blocked(d: &mut Matrix, t: usize) {
+/// [`floyd_curve`] with the Hilbert curve (the paper's §7 variant).
+pub fn floyd_hilbert(d: &mut Matrix) {
+    floyd_curve(d, CurveKind::Hilbert);
+}
+
+/// `(i-block, j-block)` in any engine curve order, canonic interior.
+pub fn floyd_curve_blocked(d: &mut Matrix, t: usize, kind: CurveKind) {
     let n = d.rows;
     assert_eq!(n, d.cols);
     assert!(t > 0);
-    let nb = n.div_ceil(t) as u32;
-    for k in 0..n {
-        general_hilbert_loop(nb, nb, |bi, bj| {
-            block_update(d, k, bi as usize * t, bj as usize * t, t);
-        });
+    if n == 0 {
+        return;
     }
+    let nb = n.div_ceil(t) as u32;
+    let mapper = kind.rect_mapper(nb, nb);
+    let span = mapper.domain().order_span().expect("rect mapper is finite");
+    for k in 0..n {
+        for (bi, bj) in mapper.segments(0..span) {
+            block_update(d, k, bi as usize * t, bj as usize * t, t);
+        }
+    }
+}
+
+/// [`floyd_curve_blocked`] with the Hilbert curve.
+pub fn floyd_hilbert_blocked(d: &mut Matrix, t: usize) {
+    floyd_curve_blocked(d, t, CurveKind::Hilbert);
 }
 
 /// Canonic block order (cache-conscious baseline).
@@ -133,6 +159,14 @@ mod tests {
             let mut e = g.clone();
             floyd_tiled(&mut e, 8);
             assert_eq!(a.data, e.data, "tiled n={n}");
+            for kind in CurveKind::ALL {
+                let mut f = g.clone();
+                floyd_curve(&mut f, kind);
+                assert_eq!(a.data, f.data, "{} n={n}", kind.name());
+                let mut h = g.clone();
+                floyd_curve_blocked(&mut h, 8, kind);
+                assert_eq!(a.data, h.data, "{} blocked n={n}", kind.name());
+            }
         }
     }
 

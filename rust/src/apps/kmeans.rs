@@ -7,16 +7,17 @@
 //! * [`assign_naive`] — canonic scan, all centroids per point;
 //! * [`assign_blocked`] — `(point-block × centroid-block)` grid in canonic
 //!   block order (cache-conscious);
-//! * [`assign_hilbert`] — the same grid in generalized-Hilbert order
-//!   (cache-oblivious).
+//! * [`assign_curve`] — the same grid in any engine curve order
+//!   (cache-oblivious); [`assign_hilbert`] is the Hilbert instantiation.
 //!
-//! All three produce identical assignments. [`lloyd`] runs full iterations
-//! with any assigner; the [`crate::coordinator`] parallelises the Hilbert
-//! variant across workers and [`crate::runtime`] can offload the distance
-//! kernel to an AOT-compiled Pallas kernel via PJRT.
+//! All variants produce identical assignments. [`lloyd`] runs full
+//! iterations with any assigner; the [`crate::coordinator`] parallelises
+//! the Hilbert variant across workers and [`crate::runtime`] can offload
+//! the distance kernel to an AOT-compiled Pallas kernel via PJRT.
 
 use super::Matrix;
-use crate::curves::fur::general_hilbert_loop;
+use crate::curves::engine;
+use crate::curves::CurveKind;
 use crate::util::rng::Rng;
 
 /// Clustering problem state: `points` is `n×d`, `centroids` is `k×d`.
@@ -114,8 +115,8 @@ pub fn assign_blocked(km: &KMeans, tp: usize, tc: usize) -> Assignment {
     Assignment { labels, dist2 }
 }
 
-/// Cache-oblivious assignment: Hilbert traversal of the block grid.
-pub fn assign_hilbert(km: &KMeans, tp: usize, tc: usize) -> Assignment {
+/// Cache-oblivious assignment: engine-curve traversal of the block grid.
+pub fn assign_curve(km: &KMeans, tp: usize, tc: usize, kind: CurveKind) -> Assignment {
     assert!(tp > 0 && tc > 0);
     let n = km.points.rows;
     let k = km.centroids.rows;
@@ -123,12 +124,18 @@ pub fn assign_hilbert(km: &KMeans, tp: usize, tc: usize) -> Assignment {
     let mut dist2 = vec![f32::INFINITY; n];
     let pb = n.div_ceil(tp) as u32;
     let cb = k.div_ceil(tc) as u32;
-    general_hilbert_loop(pb, cb, |bp, bc| {
+    let mapper = kind.rect_mapper(pb, cb);
+    engine::for_each(mapper.as_ref(), |bp, bc| {
         let p0 = bp as usize * tp;
         let c0 = bc as usize * tc;
         block_assign(km, p0, (p0 + tp).min(n), c0, (c0 + tc).min(k), &mut labels, &mut dist2);
     });
     Assignment { labels, dist2 }
+}
+
+/// [`assign_curve`] with the Hilbert curve (the paper's §7 variant).
+pub fn assign_hilbert(km: &KMeans, tp: usize, tc: usize) -> Assignment {
+    assign_curve(km, tp, tc, CurveKind::Hilbert)
 }
 
 /// Recompute centroids as label means; empty clusters keep their previous
@@ -164,6 +171,8 @@ pub enum Assigner {
     Blocked(usize, usize),
     /// [`assign_hilbert`] with `(tp, tc)`.
     Hilbert(usize, usize),
+    /// [`assign_curve`] with an explicit engine curve and `(tp, tc)`.
+    Curve(CurveKind, usize, usize),
 }
 
 impl Assigner {
@@ -173,6 +182,7 @@ impl Assigner {
             Assigner::Naive => assign_naive(km),
             Assigner::Blocked(tp, tc) => assign_blocked(km, tp, tc),
             Assigner::Hilbert(tp, tc) => assign_hilbert(km, tp, tc),
+            Assigner::Curve(kind, tp, tc) => assign_curve(km, tp, tc, kind),
         }
     }
 }
@@ -260,6 +270,10 @@ mod tests {
             let c = assign_hilbert(&km, tp, tc);
             assert_eq!(a.labels, b.labels, "blocked tp={tp} tc={tc}");
             assert_eq!(a.labels, c.labels, "hilbert tp={tp} tc={tc}");
+            for kind in CurveKind::ALL {
+                let d = assign_curve(&km, tp, tc, kind);
+                assert_eq!(a.labels, d.labels, "{} tp={tp} tc={tc}", kind.name());
+            }
         }
     }
 

@@ -7,14 +7,16 @@
 //!   practice" of §1; still thrashes once `Cᵀ` outgrows the cache).
 //! * [`matmul_tiled`] — the §1 cache-*conscious* extra blocking loop, tuned
 //!   to one block size.
-//! * [`matmul_hilbert`] — cache-*oblivious*: the `(row-block, col-block)`
-//!   grid is traversed in Hilbert order (FUR/generalized curve, so any
-//!   shape works), giving locality at every scale simultaneously.
+//! * [`matmul_curve`] — cache-*oblivious*: the `(row-block, col-block)`
+//!   grid is traversed in any engine curve order (the rect mapper handles
+//!   any shape), giving locality at every scale simultaneously.
+//!   [`matmul_hilbert`] is the Hilbert instantiation.
 //!
 //! All variants produce identical results (up to f32 summation order).
 
 use super::Matrix;
-use crate::curves::fur::general_hilbert_loop;
+use crate::curves::engine;
+use crate::curves::CurveKind;
 
 /// Micro-kernel: `a_block += b_row ⋅ c` for one scalar `b`, vectorizable.
 #[inline(always)]
@@ -92,17 +94,18 @@ pub fn matmul_tiled(b: &Matrix, c: &Matrix, t: usize) -> Matrix {
     a
 }
 
-/// Cache-oblivious: Hilbert traversal of the `(i-block, j-block)` grid;
-/// the inner `k` loop reuses whichever of the B-panel / C-panel the Hilbert
-/// neighbourhood keeps warm, at every cache level at once.
-pub fn matmul_hilbert(b: &Matrix, c: &Matrix, t: usize) -> Matrix {
+/// Cache-oblivious: engine-curve traversal of the `(i-block, j-block)`
+/// grid; the inner `k` loop reuses whichever of the B-panel / C-panel the
+/// curve neighbourhood keeps warm, at every cache level at once.
+pub fn matmul_curve(b: &Matrix, c: &Matrix, t: usize, kind: CurveKind) -> Matrix {
     assert_eq!(b.cols, c.rows);
     assert!(t > 0);
     let (n, m, kk) = (b.rows, c.cols, b.cols);
     let mut a = Matrix::zeros(n, m);
     let bi_blocks = n.div_ceil(t) as u32;
     let bj_blocks = m.div_ceil(t) as u32;
-    general_hilbert_loop(bi_blocks, bj_blocks, |bi, bj| {
+    let mapper = kind.rect_mapper(bi_blocks, bj_blocks);
+    engine::for_each(mapper.as_ref(), |bi, bj| {
         let i0 = bi as usize * t;
         let j0 = bj as usize * t;
         for k0 in (0..kk).step_by(t) {
@@ -110,6 +113,11 @@ pub fn matmul_hilbert(b: &Matrix, c: &Matrix, t: usize) -> Matrix {
         }
     });
     a
+}
+
+/// [`matmul_curve`] with the Hilbert curve (the paper's §7 variant).
+pub fn matmul_hilbert(b: &Matrix, c: &Matrix, t: usize) -> Matrix {
+    matmul_curve(b, c, t, CurveKind::Hilbert)
 }
 
 /// `A[i0.., j0..] += B[i0.., k0..] · C[k0.., j0..]` over one `t`-block.
@@ -186,5 +194,20 @@ mod tests {
     #[test]
     fn flops_count() {
         assert_eq!(flops(2, 3, 4), 48);
+    }
+
+    #[test]
+    fn every_curve_kind_multiplies_correctly() {
+        let b = Matrix::random(19, 11, 4, -1.0, 1.0);
+        let c = Matrix::random(11, 23, 5, -1.0, 1.0);
+        let reference = matmul_naive(&b, &c);
+        for kind in CurveKind::ALL {
+            let got = matmul_curve(&b, &c, 4, kind);
+            assert!(
+                got.max_abs_diff(&reference) < 1e-3,
+                "{} diverges",
+                kind.name()
+            );
+        }
     }
 }

@@ -7,18 +7,20 @@
 //! * [`join_grid_nested`] — grid-index candidates, cell pairs in canonic
 //!   order (the cache-conscious baseline);
 //! * [`join_fgf_hilbert`] — grid-index candidates traversed by the
-//!   **FGF-Hilbert loop with jump-over**: non-empty cells are numbered
-//!   along their spatial Hilbert order, the candidate cell-pair matrix
-//!   becomes a [`BlockMask`] region, and whole non-candidate quadrants are
-//!   jumped over while point data is accessed in a locality-preserving
-//!   order (the paper's similarity-join design).
+//!   engine's **[`FgfMapper`] with jump-over**: non-empty cells are
+//!   numbered along their spatial Hilbert order
+//!   ([`GridIndex::hilbert_cell_ranks`], batched conversion), the
+//!   candidate cell-pair matrix becomes a sorted [`HilbertSet`] region,
+//!   and whole non-candidate quadrants are jumped over while point data
+//!   is accessed in a locality-preserving order (the paper's
+//!   similarity-join design).
 //!
 //! All variants return the same pair set.
 
 use super::Matrix;
-use crate::curves::fgf::{fgf_hilbert_loop, FgfStats, HilbertSet};
+use crate::curves::engine::FgfMapper;
+use crate::curves::fgf::{FgfStats, HilbertSet};
 use crate::curves::hilbert::Hilbert;
-use crate::curves::SpaceFillingCurve;
 use crate::index::GridIndex;
 
 /// A join result pair, normalized `a < b`.
@@ -122,17 +124,10 @@ pub fn join_fgf_hilbert(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
     }
 
     // 1. Number the non-empty cells along their spatial Hilbert order so
-    //    that nearby cell ids mean nearby data (the locality transfer).
-    let mut order: Vec<u32> = (0..cells.len() as u32).collect();
-    order.sort_by_key(|&idx| {
-        let (c, _) = &cells[idx as usize];
-        Hilbert::order(c.0, c.1)
-    });
-    // rank[cells-index] = hilbert-position
-    let mut rank = vec![0u32; cells.len()];
-    for (pos, &idx) in order.iter().enumerate() {
-        rank[idx as usize] = pos as u32;
-    }
+    //    that nearby cell ids mean nearby data (the locality transfer);
+    //    the index computes the ranks through the engine's batched
+    //    conversion.
+    let (order, rank) = index.hilbert_cell_ranks();
 
     // 2. Collect candidate cell pairs (rank_a ≤ rank_b) as *Hilbert order
     //    values* of the rank×rank pair grid. Neighbors are found by binary
@@ -168,10 +163,11 @@ pub fn join_fgf_hilbert(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
     }
     let mask = HilbertSet::from_values(level, pair_values);
 
-    // 3. FGF-Hilbert over the masked pair grid: whole non-candidate
-    //    quadrants are jumped over; visited pairs carry true Hilbert
-    //    values (usable as stable pair ids).
-    let fgf = fgf_hilbert_loop(level, &mask, |ra, rb, _h| {
+    // 3. The engine's FGF mapper over the masked pair grid: whole
+    //    non-candidate quadrants are jumped over; visited pairs carry
+    //    true Hilbert values (usable as stable pair ids).
+    let mapper = FgfMapper::new(level, mask);
+    let fgf = mapper.traverse(|ra, rb, _h| {
         let ia = order[ra as usize] as usize;
         let ib = order[rb as usize] as usize;
         stats.cell_pairs += 1;

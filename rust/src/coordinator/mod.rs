@@ -1,10 +1,17 @@
-//! The MIMD coordinator: parallel execution of Hilbert-ordered work
+//! The MIMD coordinator: parallel execution of curve-ordered work
 //! (paper §7's "parallel threads on multiple cores").
 //!
-//! The key design point is *locality-preserving partitioning*: the Hilbert
-//! order value range is cut into **contiguous curve segments**, so each
+//! The key design point is *locality-preserving partitioning*: a mapper's
+//! order-value range is cut into **contiguous curve segments**, so each
 //! worker's accesses stay spatially clustered (per-worker cache locality),
 //! while dynamic chunk hand-out keeps the load balanced.
+//!
+//! The scheduling core is [`Coordinator::par_fold`]: it takes any
+//! finite-domain [`CurveMapper`] — a power-of-two Hilbert square, a FUR
+//! rectangle, a filtered cover, or an FGF region — so every curve and
+//! every `n×m` shape parallelises through one code path.
+//! [`Coordinator::par_hilbert_fold`] is the Hilbert-square convenience
+//! wrapper.
 //!
 //! * [`scheduler`] — curve-segment scheduling (static ranges + dynamic
 //!   chunk queue).
@@ -26,7 +33,8 @@ pub mod scheduler;
 
 use crate::apps::kmeans::{Assignment, KMeans};
 use crate::apps::Matrix;
-use crate::curves::fur::general_hilbert_loop;
+use crate::curves::engine::{self, CurveMapper, HilbertSquare};
+use crate::curves::CurveKind;
 use metrics::WorkerMetrics;
 use scheduler::ChunkQueue;
 
@@ -55,15 +63,24 @@ impl Coordinator {
         self.threads
     }
 
-    /// Run `body` over every cell of the `2^level × 2^level` grid in
-    /// parallel: workers pull contiguous Hilbert segments from a dynamic
-    /// queue; each worker folds into its own state `S`, and the states are
-    /// merged at the end.
+    /// Run `body` over every cell of a finite-domain [`CurveMapper`] in
+    /// parallel: workers pull contiguous curve segments (order-value
+    /// chunks) from a dynamic queue; each worker folds into its own state
+    /// `S`, and the states are merged at the end.
     ///
-    /// Returns the merged state and per-worker metrics.
-    pub fn par_hilbert_fold<S, I, B, M>(
+    /// Works for any curve over any `n×m` rectangle (via
+    /// [`CurveKind::rect_mapper`]) and for FGF region mappers (whose
+    /// sparse order values make some chunks cheap no-ops).
+    ///
+    /// Returns the merged state and per-worker metrics (a worker's `items`
+    /// counts order values of its chunks, which for sparse domains can
+    /// exceed the cells actually visited).
+    ///
+    /// # Panics
+    /// Panics if the mapper's domain is the unbounded plane.
+    pub fn par_fold<S, I, B, M>(
         &self,
-        level: u32,
+        mapper: &dyn CurveMapper,
         init: I,
         body: B,
         mut merge: M,
@@ -74,7 +91,9 @@ impl Coordinator {
         B: Fn(&mut S, u32, u32) + Sync,
         M: FnMut(S, S) -> S,
     {
-        let total = 1u64 << (2 * level);
+        let total = mapper
+            .order_span()
+            .expect("par_fold requires a finite-domain mapper (rect/region)");
         let queue = ChunkQueue::new(total, self.chunk);
         let mut results: Vec<(S, WorkerMetrics)> = Vec::with_capacity(self.threads);
         std::thread::scope(|scope| {
@@ -88,9 +107,7 @@ impl Coordinator {
                     let mut m = WorkerMetrics::new(worker_id);
                     while let Some((start, end)) = queue.next_chunk() {
                         let t0 = std::time::Instant::now();
-                        for (i, j) in
-                            crate::curves::nonrecursive::HilbertIter::range(level, start, end)
-                        {
+                        for (i, j) in mapper.segments(start..end) {
                             body(&mut state, i, j);
                         }
                         m.record_chunk(end - start, t0.elapsed());
@@ -112,6 +129,25 @@ impl Coordinator {
             });
         }
         (merged.expect("at least one worker"), metrics)
+    }
+
+    /// [`Coordinator::par_fold`] over the `2^level × 2^level` Hilbert
+    /// grid (zero-allocation segments via the Figure-5 range iterator).
+    pub fn par_hilbert_fold<S, I, B, M>(
+        &self,
+        level: u32,
+        init: I,
+        body: B,
+        merge: M,
+    ) -> (S, Vec<WorkerMetrics>)
+    where
+        S: Send,
+        I: Fn() -> S + Sync,
+        B: Fn(&mut S, u32, u32) + Sync,
+        M: FnMut(S, S) -> S,
+    {
+        let mapper = HilbertSquare::new(level);
+        self.par_fold(&mapper, init, body, merge)
     }
 
     /// Parallel map over an index range `[0, n)`: contiguous shards, one
@@ -169,10 +205,12 @@ pub fn par_kmeans_step(
         let mut labels = vec![0u32; len];
         let mut dist2 = vec![f32::INFINITY; len];
         if len > 0 {
-            // Hilbert over this shard's block grid.
+            // Hilbert over this shard's block grid (engine rect mapper:
+            // fixed-level square or FUR overlay, whichever fits).
             let pb = len.div_ceil(tp) as u32;
             let cb = k.div_ceil(tc) as u32;
-            general_hilbert_loop(pb, cb, |bp, bc| {
+            let mapper = CurveKind::Hilbert.rect_mapper(pb, cb);
+            engine::for_each(mapper.as_ref(), |bp, bc| {
                 let p0 = start + bp as usize * tp;
                 let p1 = (p0 + tp).min(end);
                 let c0 = bc as usize * tc;
@@ -266,6 +304,36 @@ mod tests {
             .map(|(i, j)| (i as u64) * 1000 + j as u64)
             .sum();
         assert_eq!(sum, serial);
+    }
+
+    #[test]
+    fn par_fold_generic_curves_match_serial() {
+        let coord = Coordinator { threads: 4, chunk: 13 };
+        for kind in CurveKind::ALL {
+            let mapper = kind.rect_mapper(9, 21);
+            let (sum, _) = coord.par_fold(
+                mapper.as_ref(),
+                || 0u64,
+                |a, i, j| *a += (i as u64) * 1009 + j as u64,
+                |a, b| a + b,
+            );
+            let mut serial = 0u64;
+            engine::for_each(mapper.as_ref(), |i, j| serial += (i as u64) * 1009 + j as u64);
+            assert_eq!(sum, serial, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn par_fold_fgf_region_counts_cells() {
+        use crate::curves::engine::FgfMapper;
+        use crate::curves::fgf::UpperTriangle;
+        let coord = Coordinator { threads: 3, chunk: 64 };
+        let level = 5u32;
+        let mapper = FgfMapper::new(level, UpperTriangle);
+        let (count, _) =
+            coord.par_fold(&mapper, || 0u64, |a, _i, _j| *a += 1, |a, b| a + b);
+        let n = 1u64 << level;
+        assert_eq!(count, n * (n - 1) / 2);
     }
 
     #[test]

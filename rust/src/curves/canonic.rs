@@ -56,6 +56,21 @@ impl SpaceFillingCurve for CanonicFixed {
     fn coords(c: u64) -> (u32, u32) {
         ((c >> 32) as u32, c as u32)
     }
+
+    /// Row-major order restricted to any `n×n` grid is itself row-major,
+    /// so the tightest cover of an `n×n` grid is the grid itself.
+    fn cover_side(n: u32) -> u32 {
+        n.max(1)
+    }
+
+    /// Closed-form row-major generation (the fixed width never enters).
+    fn generate_cover(side: u32, body: &mut dyn FnMut(u32, u32)) {
+        for i in 0..side {
+            for j in 0..side {
+                body(i, j);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,945 @@
+//! The traversal engine: one **object-safe** interface over every curve
+//! in the toolkit (paper §2's single abstraction `C(i,j) ⇄ c`, made a
+//! runtime value).
+//!
+//! The seed codebase grew two incompatible API families — the
+//! static-method [`SpaceFillingCurve`] trait for the stateless fractal
+//! curves versus bespoke instance APIs for FUR/FGF. This module unifies
+//! them behind [`CurveMapper`]:
+//!
+//! * [`StaticCurve`] — the blanket adapter turning any
+//!   [`SpaceFillingCurve`] into a mapper over the full `u32 × u32` plane;
+//! * [`HilbertSquare`] — the Hilbert curve at a fixed level over a
+//!   `2^L × 2^L` grid, with zero-allocation [`CurveMapper::segments`] via
+//!   the Figure-5 constant-overhead iterator;
+//! * [`RectMapper`] — any curve over an arbitrary `n×m` rectangle with a
+//!   *contiguous* order-value range `0..n·m` ([`RectMapper::fur`] plans
+//!   the rectangle with the §6.1 FUR overlay grid);
+//! * [`CanonicRect`] — the closed-form row-major baseline (no tables);
+//! * [`FgfMapper`] — the §6.2 jump-over traversal of an arbitrary
+//!   [`Region`], exposing **true Hilbert values** as (sparse) order
+//!   values, range-restrictable via [`HilbertRange`] so even irregular
+//!   regions can be cut into contiguous curve segments for parallel
+//!   workers.
+//!
+//! Batched conversion ([`CurveMapper::order_batch`] /
+//! [`CurveMapper::coords_batch`]) amortises automaton state over
+//! [`BATCH`]-value runs: the Hilbert path detects consecutive order-value
+//! runs and switches from the `O(log h)` Mealy inverse to the `O(1)`
+//! Figure-5 stepper, and forward conversion hoists the effective-level /
+//! parity computation out of the per-element loop.
+//!
+//! Everything here is object-safe on purpose: the coordinator, the §7
+//! applications, the grid index and the CLI all take `&dyn CurveMapper`,
+//! so adding a curve (or a sharded/remote mapper) is a single-layer
+//! change.
+//!
+//! ```
+//! use sfc_mine::curves::engine::CurveMapper;
+//! use sfc_mine::curves::CurveKind;
+//!
+//! // A plane mapper for any curve kind:
+//! let curve = CurveKind::Hilbert.mapper();
+//! let c = curve.order(2, 3);
+//! assert_eq!(curve.coords(c), (2, 3));
+//!
+//! // An arbitrary-rectangle mapper (FUR overlay under the hood):
+//! let rect = CurveKind::Hilbert.rect_mapper(3, 5);
+//! let span = rect.domain().order_span().unwrap();
+//! assert_eq!(rect.segments(0..span).count(), 15);
+//! ```
+
+use super::fgf::{fgf_hilbert_loop, BlockClass, FgfStats, Intersect, Region};
+use super::fur::FurHilbert;
+use super::hilbert::Hilbert;
+use super::nonrecursive::HilbertIter;
+use super::SpaceFillingCurve;
+use std::marker::PhantomData;
+use std::ops::Range;
+
+/// Run length over which batched conversions amortise automaton state.
+pub const BATCH: usize = 64;
+
+/// Split `orders` into maximal consecutive ascending runs (`v, v+1, …`)
+/// and hand each run to `on_run` — the shared front half of every
+/// batched inverse conversion that fast-paths consecutive values.
+pub(crate) fn split_consecutive_runs(orders: &[u64], mut on_run: impl FnMut(&[u64])) {
+    let mut idx = 0;
+    while idx < orders.len() {
+        let mut end = idx + 1;
+        while end < orders.len()
+            && orders[end - 1] != u64::MAX
+            && orders[end] == orders[end - 1] + 1
+        {
+            end += 1;
+        }
+        on_run(&orders[idx..end]);
+        idx = end;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Domain
+// ---------------------------------------------------------------------------
+
+/// The domain a [`CurveMapper`] is bijective on.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// The full `u32 × u32` plane (stateless fractal curves); order values
+    /// are unbounded, so there is no finite segment span.
+    Plane,
+    /// An `rows × cols` rectangle with the *contiguous* order-value range
+    /// `0 .. rows·cols`.
+    Rect {
+        /// Rows (the `i` axis).
+        rows: u32,
+        /// Columns (the `j` axis).
+        cols: u32,
+    },
+    /// A sparse cell set inside the `2^level × 2^level` cover grid; order
+    /// values are **true Hilbert values** (non-contiguous), spanning
+    /// `0 .. 4^level`.
+    Sparse {
+        /// Cover-grid level (side `2^level`).
+        level: u32,
+        /// Number of cells actually in the domain.
+        cells: u64,
+    },
+}
+
+impl Domain {
+    /// The contiguous order-value span `[0, span)` that
+    /// [`CurveMapper::segments`] ranges over, or `None` for the unbounded
+    /// plane.
+    pub fn order_span(&self) -> Option<u64> {
+        match *self {
+            Domain::Plane => None,
+            Domain::Rect { rows, cols } => Some(rows as u64 * cols as u64),
+            Domain::Sparse { level, .. } => Some(1u64 << (2 * level)),
+        }
+    }
+
+    /// Number of cells in the domain (`None` for the plane).
+    pub fn cell_count(&self) -> Option<u64> {
+        match *self {
+            Domain::Plane => None,
+            Domain::Rect { rows, cols } => Some(rows as u64 * cols as u64),
+            Domain::Sparse { cells, .. } => Some(cells),
+        }
+    }
+
+    /// Is the coordinate pair inside the domain's bounding box?
+    pub fn contains(&self, i: u32, j: u32) -> bool {
+        match *self {
+            Domain::Plane => true,
+            Domain::Rect { rows, cols } => i < rows && j < cols,
+            Domain::Sparse { level, .. } => {
+                (i as u64) < (1u64 << level) && (j as u64) < (1u64 << level)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Segments iterator
+// ---------------------------------------------------------------------------
+
+/// Iterator over the cells of one contiguous order-value range of a
+/// mapper, in curve order (returned by [`CurveMapper::segments`]).
+pub struct Segments<'a>(SegInner<'a>);
+
+enum SegInner<'a> {
+    Slice(std::slice::Iter<'a, (u32, u32)>),
+    Owned(std::vec::IntoIter<(u32, u32)>),
+    Dyn(Box<dyn Iterator<Item = (u32, u32)> + 'a>),
+}
+
+impl<'a> Segments<'a> {
+    /// Wrap a precomputed path slice.
+    pub fn from_slice(cells: &'a [(u32, u32)]) -> Self {
+        Segments(SegInner::Slice(cells.iter()))
+    }
+
+    /// Wrap an owned cell vector.
+    pub fn from_vec(cells: Vec<(u32, u32)>) -> Self {
+        Segments(SegInner::Owned(cells.into_iter()))
+    }
+
+    /// Wrap an arbitrary iterator (boxed).
+    pub fn from_iter_dyn(it: impl Iterator<Item = (u32, u32)> + 'a) -> Self {
+        Segments(SegInner::Dyn(Box::new(it)))
+    }
+}
+
+impl Iterator for Segments<'_> {
+    type Item = (u32, u32);
+
+    #[inline]
+    fn next(&mut self) -> Option<(u32, u32)> {
+        match &mut self.0 {
+            SegInner::Slice(it) => it.next().copied(),
+            SegInner::Owned(it) => it.next(),
+            SegInner::Dyn(it) => it.next(),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match &self.0 {
+            SegInner::Slice(it) => it.size_hint(),
+            SegInner::Owned(it) => it.size_hint(),
+            SegInner::Dyn(it) => it.size_hint(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// An **object-safe** bijective order mapping `C(i,j) ⇄ c` (paper §2),
+/// the single entry point every layer above the curves dispatches
+/// through.
+///
+/// Implementations are instances (possibly carrying planned state, like a
+/// FUR overlay path), so square static curves, rectangle traversals and
+/// region jump-over all share one interface; `&dyn CurveMapper` is `Send
+/// + Sync` and can be handed straight to the coordinator's worker pool.
+pub trait CurveMapper: Send + Sync {
+    /// Curve name for labels and reports.
+    fn name(&self) -> &'static str;
+
+    /// The domain this mapper is bijective on.
+    fn domain(&self) -> Domain;
+
+    /// The contiguous order-value span `[0, span)` segments range over
+    /// (`None` for the unbounded plane). Defaults through
+    /// [`CurveMapper::domain`]; mappers whose domain carries
+    /// lazily-computed statistics override this with the cheap answer so
+    /// schedulers never trigger the expensive path.
+    fn order_span(&self) -> Option<u64> {
+        self.domain().order_span()
+    }
+
+    /// Order value of the coordinate pair.
+    fn order(&self, i: u32, j: u32) -> u64;
+
+    /// Coordinate pair of an order value.
+    fn coords(&self, c: u64) -> (u32, u32);
+
+    /// Batched forward conversion; appends one order value per pair.
+    ///
+    /// The default is the scalar loop; native implementations amortise
+    /// per-element automaton setup across [`BATCH`]-value runs.
+    fn order_batch(&self, pairs: &[(u32, u32)], out: &mut Vec<u64>) {
+        out.reserve(pairs.len());
+        for &(i, j) in pairs {
+            out.push(self.order(i, j));
+        }
+    }
+
+    /// Batched inverse conversion; appends one pair per order value.
+    ///
+    /// The default is the scalar loop; native implementations detect
+    /// consecutive runs and switch to constant-overhead stepping.
+    fn coords_batch(&self, orders: &[u64], out: &mut Vec<(u32, u32)>) {
+        out.reserve(orders.len());
+        for &c in orders {
+            out.push(self.coords(c));
+        }
+    }
+
+    /// Iterate the cells whose order values fall in `range` (clamped to
+    /// the domain), in curve order — the contiguous *curve segment* the
+    /// coordinator schedules across workers.
+    fn segments(&self, range: Range<u64>) -> Segments<'_>;
+}
+
+/// Run `body` over every cell of the mapper's (finite) domain in curve
+/// order.
+///
+/// # Panics
+/// Panics if the mapper's domain is the unbounded plane.
+pub fn for_each(mapper: &dyn CurveMapper, mut body: impl FnMut(u32, u32)) {
+    let span = mapper
+        .order_span()
+        .expect("for_each requires a finite-domain mapper (rect/region)");
+    for (i, j) in mapper.segments(0..span) {
+        body(i, j);
+    }
+}
+
+/// Enumerate the `rows × cols` rectangle in curve order by generating the
+/// curve's natural cover grid (via
+/// [`SpaceFillingCurve::generate_cover`], `O(1)` amortised per cover
+/// cell) and keeping the in-rectangle cells.
+pub fn collect_rect<C: SpaceFillingCurve>(rows: u32, cols: u32) -> Vec<(u32, u32)> {
+    if rows == 0 || cols == 0 {
+        return Vec::new();
+    }
+    let side = C::cover_side(rows.max(cols));
+    let mut out = Vec::with_capacity(rows as usize * cols as usize);
+    C::generate_cover(side, &mut |i, j| {
+        if i < rows && j < cols {
+            out.push((i, j));
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// StaticCurve: the blanket adapter
+// ---------------------------------------------------------------------------
+
+/// Blanket adapter giving any static [`SpaceFillingCurve`] the instance
+/// [`CurveMapper`] interface over the full plane.
+pub struct StaticCurve<C>(PhantomData<C>);
+
+impl<C> StaticCurve<C> {
+    /// The adapter is a zero-sized value.
+    pub const fn new() -> Self {
+        StaticCurve(PhantomData)
+    }
+}
+
+impl<C> Default for StaticCurve<C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<C> Clone for StaticCurve<C> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<C> Copy for StaticCurve<C> {}
+
+impl<C> std::fmt::Debug for StaticCurve<C> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("StaticCurve")
+    }
+}
+
+impl<C: SpaceFillingCurve + Send + Sync + 'static> CurveMapper for StaticCurve<C> {
+    fn name(&self) -> &'static str {
+        C::NAME
+    }
+
+    fn domain(&self) -> Domain {
+        Domain::Plane
+    }
+
+    #[inline]
+    fn order(&self, i: u32, j: u32) -> u64 {
+        C::order(i, j)
+    }
+
+    #[inline]
+    fn coords(&self, c: u64) -> (u32, u32) {
+        C::coords(c)
+    }
+
+    fn order_batch(&self, pairs: &[(u32, u32)], out: &mut Vec<u64>) {
+        out.reserve(pairs.len());
+        C::order_batch_static(pairs, out);
+    }
+
+    fn coords_batch(&self, orders: &[u64], out: &mut Vec<(u32, u32)>) {
+        out.reserve(orders.len());
+        C::coords_batch_static(orders, out);
+    }
+
+    fn segments(&self, range: Range<u64>) -> Segments<'_> {
+        Segments::from_iter_dyn(PlaneSegments::<C>::new(range))
+    }
+}
+
+/// Lazy plane-segment iterator: pulls [`BATCH`]-sized consecutive chunks
+/// through the curve's batched inverse conversion.
+struct PlaneSegments<C> {
+    next: u64,
+    end: u64,
+    buf: std::vec::IntoIter<(u32, u32)>,
+    _curve: PhantomData<C>,
+}
+
+impl<C: SpaceFillingCurve> PlaneSegments<C> {
+    fn new(range: Range<u64>) -> Self {
+        PlaneSegments {
+            next: range.start,
+            end: range.end.max(range.start),
+            buf: Vec::new().into_iter(),
+            _curve: PhantomData,
+        }
+    }
+}
+
+impl<C: SpaceFillingCurve> Iterator for PlaneSegments<C> {
+    type Item = (u32, u32);
+
+    fn next(&mut self) -> Option<(u32, u32)> {
+        if let Some(p) = self.buf.next() {
+            return Some(p);
+        }
+        if self.next >= self.end {
+            return None;
+        }
+        let take = (self.end - self.next).min(BATCH as u64);
+        let orders: Vec<u64> = (self.next..self.next + take).collect();
+        let mut cells = Vec::with_capacity(take as usize);
+        C::coords_batch_static(&orders, &mut cells);
+        self.next += take;
+        self.buf = cells.into_iter();
+        self.buf.next()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = (self.end - self.next) as usize + self.buf.len();
+        (rem, Some(rem))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HilbertSquare: fixed-level Hilbert over a 2^L grid
+// ---------------------------------------------------------------------------
+
+/// The Hilbert curve at a fixed level `L` over the `2^L × 2^L` grid.
+///
+/// [`CurveMapper::segments`] resumes mid-curve via
+/// [`HilbertIter::range`] — `O(L)` startup, `O(1)` per cell, zero
+/// allocation — which is what lets the coordinator hand out disjoint
+/// contiguous curve segments to parallel workers.
+#[derive(Copy, Clone, Debug)]
+pub struct HilbertSquare {
+    level: u32,
+}
+
+impl HilbertSquare {
+    /// Mapper for the `2^level` grid (`level ≤ 16`).
+    pub fn new(level: u32) -> Self {
+        assert!(level <= 16, "level {level} exceeds supported 16");
+        HilbertSquare { level }
+    }
+
+    /// Mapper for an `n×n` grid, `n` a power of two.
+    pub fn with_side(n: u32) -> Self {
+        assert!(n.is_power_of_two(), "side {n} must be a power of two");
+        Self::new(n.trailing_zeros())
+    }
+
+    /// Grid level.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Grid side `2^level`.
+    pub fn side(&self) -> u32 {
+        1u32 << self.level
+    }
+}
+
+impl CurveMapper for HilbertSquare {
+    fn name(&self) -> &'static str {
+        "hilbert"
+    }
+
+    fn domain(&self) -> Domain {
+        Domain::Rect { rows: self.side(), cols: self.side() }
+    }
+
+    #[inline]
+    fn order(&self, i: u32, j: u32) -> u64 {
+        Hilbert::order_at_level(i, j, self.level)
+    }
+
+    #[inline]
+    fn coords(&self, c: u64) -> (u32, u32) {
+        Hilbert::coords_at_level(c, self.level)
+    }
+
+    fn order_batch(&self, pairs: &[(u32, u32)], out: &mut Vec<u64>) {
+        // Fixed level: the per-element effective-level/parity logic of the
+        // variable-resolution path is already hoisted.
+        out.reserve(pairs.len());
+        for &(i, j) in pairs {
+            out.push(Hilbert::order_at_level(i, j, self.level));
+        }
+    }
+
+    fn coords_batch(&self, orders: &[u64], out: &mut Vec<(u32, u32)>) {
+        out.reserve(orders.len());
+        let total = 1u64 << (2 * self.level);
+        split_consecutive_runs(orders, |run| {
+            let last = run[run.len() - 1];
+            if run.len() >= 2 && last < total {
+                // Consecutive run inside the grid: Figure-5 stepping.
+                for p in HilbertIter::range(self.level, run[0], last + 1) {
+                    out.push(p);
+                }
+            } else {
+                for &h in run {
+                    out.push(Hilbert::coords_at_level(h, self.level));
+                }
+            }
+        });
+    }
+
+    fn segments(&self, range: Range<u64>) -> Segments<'_> {
+        let total = 1u64 << (2 * self.level);
+        let start = range.start.min(total);
+        let end = range.end.min(total).max(start);
+        Segments::from_iter_dyn(HilbertIter::range(self.level, start, end))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RectMapper: any curve over an arbitrary rectangle
+// ---------------------------------------------------------------------------
+
+/// A planned traversal of an arbitrary `rows × cols` rectangle with a
+/// contiguous order-value range `0 .. rows·cols`.
+///
+/// Construction materialises the path (`O(rows·cols)` memory) plus the
+/// inverse rank table, making both conversions `O(1)` lookups and
+/// [`CurveMapper::segments`] a slice window.
+#[derive(Clone, Debug)]
+pub struct RectMapper {
+    name: &'static str,
+    rows: u32,
+    cols: u32,
+    /// Order value → coordinates.
+    path: Vec<(u32, u32)>,
+    /// Row-major `i·cols + j` → order value; built lazily on the first
+    /// `order`/`order_batch` call, because the hot traversal consumers
+    /// (`segments`/[`for_each`]) never need the inverse direction.
+    rank: std::sync::OnceLock<Vec<u64>>,
+}
+
+impl RectMapper {
+    /// Plan the rectangle with the §6.1 FUR overlay-grid Hilbert
+    /// traversal (exactly `rows·cols` cells generated, near-unit steps).
+    pub fn fur(rows: u32, cols: u32) -> RectMapper {
+        Self::from_path("fur-hilbert", rows, cols, FurHilbert::path(rows, cols))
+    }
+
+    /// Plan the rectangle by filtering the curve's natural cover grid
+    /// (engine enumeration path).
+    pub fn from_curve<C: SpaceFillingCurve>(rows: u32, cols: u32) -> RectMapper {
+        Self::from_path(C::NAME, rows, cols, collect_rect::<C>(rows, cols))
+    }
+
+    /// Wrap an explicit traversal path (must visit every cell of the
+    /// rectangle exactly once).
+    pub fn from_path(
+        name: &'static str,
+        rows: u32,
+        cols: u32,
+        path: Vec<(u32, u32)>,
+    ) -> RectMapper {
+        assert_eq!(
+            path.len() as u64,
+            rows as u64 * cols as u64,
+            "path must cover the {rows}x{cols} rectangle"
+        );
+        RectMapper {
+            name,
+            rows,
+            cols,
+            path,
+            rank: std::sync::OnceLock::new(),
+        }
+    }
+
+    /// The full traversal path (order value → coordinates).
+    pub fn path(&self) -> &[(u32, u32)] {
+        &self.path
+    }
+
+    fn rank_table(&self) -> &[u64] {
+        self.rank.get_or_init(|| {
+            let mut rank = vec![0u64; self.path.len()];
+            for (c, &(i, j)) in self.path.iter().enumerate() {
+                rank[i as usize * self.cols as usize + j as usize] = c as u64;
+            }
+            rank
+        })
+    }
+}
+
+impl CurveMapper for RectMapper {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn domain(&self) -> Domain {
+        Domain::Rect { rows: self.rows, cols: self.cols }
+    }
+
+    #[inline]
+    fn order(&self, i: u32, j: u32) -> u64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.rank_table()[i as usize * self.cols as usize + j as usize]
+    }
+
+    #[inline]
+    fn coords(&self, c: u64) -> (u32, u32) {
+        self.path[c as usize]
+    }
+
+    fn segments(&self, range: Range<u64>) -> Segments<'_> {
+        let len = self.path.len() as u64;
+        let start = range.start.min(len) as usize;
+        let end = range.end.min(len).max(start as u64) as usize;
+        Segments::from_slice(&self.path[start..end])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CanonicRect: closed-form row-major rectangle
+// ---------------------------------------------------------------------------
+
+/// Row-major order over an `rows × cols` rectangle — the nested-loop
+/// baseline as a mapper, in closed form (no tables).
+#[derive(Copy, Clone, Debug)]
+pub struct CanonicRect {
+    rows: u32,
+    cols: u32,
+}
+
+impl CanonicRect {
+    /// Mapper for the `rows × cols` rectangle.
+    pub fn new(rows: u32, cols: u32) -> Self {
+        CanonicRect { rows, cols }
+    }
+}
+
+impl CurveMapper for CanonicRect {
+    fn name(&self) -> &'static str {
+        "canonic"
+    }
+
+    fn domain(&self) -> Domain {
+        Domain::Rect { rows: self.rows, cols: self.cols }
+    }
+
+    #[inline]
+    fn order(&self, i: u32, j: u32) -> u64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        i as u64 * self.cols as u64 + j as u64
+    }
+
+    #[inline]
+    fn coords(&self, c: u64) -> (u32, u32) {
+        ((c / self.cols as u64) as u32, (c % self.cols as u64) as u32)
+    }
+
+    fn segments(&self, range: Range<u64>) -> Segments<'_> {
+        let span = self.rows as u64 * self.cols as u64;
+        let start = range.start.min(span);
+        let end = range.end.min(span).max(start);
+        let cols = self.cols as u64;
+        Segments::from_iter_dyn(
+            (start..end).map(move |c| ((c / cols) as u32, (c % cols) as u32)),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FgfMapper: jump-over traversal of arbitrary regions
+// ---------------------------------------------------------------------------
+
+/// The §6.2 FGF jump-over traversal of an arbitrary [`Region`] as a
+/// mapper.
+///
+/// Order values are **true Hilbert values** at the cover level (sparse
+/// within `0..4^level`), so they stay stable pair identifiers across
+/// different regions — and because aligned bisection quadrants occupy
+/// contiguous order-value ranges, [`CurveMapper::segments`] restricts the
+/// traversal to a range with an [`HilbertRange`] intersection instead of
+/// scanning, keeping jump-over pruning active inside each segment.
+#[derive(Clone, Debug)]
+pub struct FgfMapper<R> {
+    level: u32,
+    region: R,
+    /// Region cell count, computed lazily on the first [`Domain`] query —
+    /// traverse-only users (cholesky's trailing updates, the similarity
+    /// join) never pay for a counting pass.
+    cells: std::sync::OnceLock<u64>,
+}
+
+impl<R: Region> FgfMapper<R> {
+    /// Plan a jump-over traversal of `region` on the `2^level` cover grid
+    /// (`level ≤ 16`). Construction is free; the first
+    /// [`CurveMapper::domain`] call counts the region's cells with one
+    /// classify-only traversal.
+    pub fn new(level: u32, region: R) -> Self {
+        assert!(level <= 16, "level {level} exceeds supported 16");
+        FgfMapper {
+            level,
+            region,
+            cells: std::sync::OnceLock::new(),
+        }
+    }
+
+    fn cell_count(&self) -> u64 {
+        *self
+            .cells
+            .get_or_init(|| fgf_hilbert_loop(self.level, &self.region, |_, _, _| {}).visited)
+    }
+
+    /// Cover-grid level.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// The underlying region.
+    pub fn region(&self) -> &R {
+        &self.region
+    }
+
+    /// Run `body(i, j, h)` over every region cell in Hilbert order, with
+    /// `h` the true Hilbert value; returns traversal statistics.
+    pub fn traverse(&self, body: impl FnMut(u32, u32, u64)) -> FgfStats {
+        fgf_hilbert_loop(self.level, &self.region, body)
+    }
+
+    /// Like [`FgfMapper::traverse`], restricted to order values in
+    /// `[lo, hi)` — whole quadrants outside the window are jumped over.
+    pub fn traverse_range(&self, lo: u64, hi: u64, body: impl FnMut(u32, u32, u64)) -> FgfStats {
+        let window = HilbertRange { lo, hi, cover_level: self.level };
+        fgf_hilbert_loop(self.level, &Intersect(&self.region, window), body)
+    }
+}
+
+impl<R: Region + Send + Sync> CurveMapper for FgfMapper<R> {
+    fn name(&self) -> &'static str {
+        "fgf-hilbert"
+    }
+
+    fn domain(&self) -> Domain {
+        Domain::Sparse { level: self.level, cells: self.cell_count() }
+    }
+
+    fn order_span(&self) -> Option<u64> {
+        Some(1u64 << (2 * self.level))
+    }
+
+    #[inline]
+    fn order(&self, i: u32, j: u32) -> u64 {
+        Hilbert::order_at_level(i, j, self.level)
+    }
+
+    #[inline]
+    fn coords(&self, c: u64) -> (u32, u32) {
+        Hilbert::coords_at_level(c, self.level)
+    }
+
+    fn segments(&self, range: Range<u64>) -> Segments<'_> {
+        let mut cells = Vec::new();
+        self.traverse_range(range.start, range.end, |i, j, _h| cells.push((i, j)));
+        Segments::from_vec(cells)
+    }
+}
+
+/// A [`Region`] selecting the cells whose Hilbert order value (at
+/// `cover_level`) lies in `[lo, hi)` — the bridge between FGF's
+/// region language and the engine's contiguous curve segments.
+///
+/// Classification uses the §6.2 invariant that an aligned `2^ℓ × 2^ℓ`
+/// quadrant occupies one contiguous order-value range: one interval
+/// comparison per block, no per-cell work.
+#[derive(Copy, Clone, Debug)]
+pub struct HilbertRange {
+    /// Inclusive lower order value.
+    pub lo: u64,
+    /// Exclusive upper order value.
+    pub hi: u64,
+    /// Cover-grid level the order values are computed at.
+    pub cover_level: u32,
+}
+
+impl HilbertRange {
+    #[inline]
+    fn classify_span(&self, h0: u64, size: u64) -> BlockClass {
+        if h0 >= self.hi || h0 + size <= self.lo {
+            BlockClass::Disjoint
+        } else if self.lo <= h0 && h0 + size <= self.hi {
+            BlockClass::Full
+        } else {
+            BlockClass::Partial
+        }
+    }
+}
+
+impl Region for HilbertRange {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        let size = 1u64 << (2 * level);
+        let h0 = Hilbert::order_at_level(i0, j0, self.cover_level) & !(size - 1);
+        self.classify_span(h0, size)
+    }
+
+    #[inline]
+    fn classify_h(&self, _i0: u32, _j0: u32, h0: u64, level: u32) -> BlockClass {
+        self.classify_span(h0, 1u64 << (2 * level))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::fgf::UpperTriangle;
+    use crate::curves::CurveKind;
+    use std::collections::HashSet;
+
+    #[test]
+    fn domain_accounting() {
+        assert_eq!(Domain::Plane.order_span(), None);
+        assert_eq!(Domain::Rect { rows: 3, cols: 5 }.order_span(), Some(15));
+        assert_eq!(Domain::Rect { rows: 3, cols: 5 }.cell_count(), Some(15));
+        let s = Domain::Sparse { level: 3, cells: 10 };
+        assert_eq!(s.order_span(), Some(64));
+        assert_eq!(s.cell_count(), Some(10));
+        assert!(s.contains(7, 7));
+        assert!(!s.contains(8, 0));
+    }
+
+    #[test]
+    fn static_adapter_matches_static_trait() {
+        let m = CurveKind::Hilbert.mapper();
+        for (i, j) in [(0u32, 0u32), (2, 3), (100, 7), (65535, 1)] {
+            let c = m.order(i, j);
+            assert_eq!(c, Hilbert::order(i, j));
+            assert_eq!(m.coords(c), (i, j));
+        }
+        assert_eq!(m.name(), "hilbert");
+        assert_eq!(m.domain(), Domain::Plane);
+    }
+
+    #[test]
+    fn plane_segments_match_scalar_coords() {
+        for kind in CurveKind::ALL {
+            let m = kind.mapper();
+            let got: Vec<_> = m.segments(5..200).collect();
+            let want: Vec<_> = (5u64..200).map(|c| m.coords(c)).collect();
+            assert_eq!(got, want, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn hilbert_square_equals_fig5_iterator() {
+        let sq = HilbertSquare::with_side(16);
+        let span = sq.domain().order_span().unwrap();
+        let via_engine: Vec<_> = sq.segments(0..span).collect();
+        let via_fig5: Vec<_> = HilbertIter::new(16).collect();
+        assert_eq!(via_engine, via_fig5);
+        // Mid-curve resume.
+        let mid: Vec<_> = sq.segments(100..140).collect();
+        assert_eq!(mid[..], via_fig5[100..140]);
+    }
+
+    #[test]
+    fn hilbert_square_batched_agree_with_scalar() {
+        let sq = HilbertSquare::new(5);
+        let orders: Vec<u64> = (0..1024u64).chain([7, 3, 900, 901, 902]).collect();
+        let mut batched = Vec::new();
+        sq.coords_batch(&orders, &mut batched);
+        let scalar: Vec<_> = orders.iter().map(|&c| sq.coords(c)).collect();
+        assert_eq!(batched, scalar);
+        let pairs: Vec<(u32, u32)> = (0..32).flat_map(|i| (0..32).map(move |j| (i, j))).collect();
+        let mut fwd = Vec::new();
+        sq.order_batch(&pairs, &mut fwd);
+        let fwd_scalar: Vec<_> = pairs.iter().map(|&(i, j)| sq.order(i, j)).collect();
+        assert_eq!(fwd, fwd_scalar);
+    }
+
+    #[test]
+    fn rect_mapper_is_bijective() {
+        for (n, m) in [(5u32, 9u32), (9, 5), (1, 7), (16, 16)] {
+            let r = RectMapper::fur(n, m);
+            let span = r.domain().order_span().unwrap();
+            assert_eq!(span, n as u64 * m as u64);
+            let mut seen = HashSet::new();
+            for c in 0..span {
+                let (i, j) = r.coords(c);
+                assert!(i < n && j < m);
+                assert_eq!(r.order(i, j), c);
+                assert!(seen.insert((i, j)));
+            }
+            assert_eq!(seen.len() as u64, span);
+        }
+    }
+
+    #[test]
+    fn rect_mapper_segments_window() {
+        let r = RectMapper::from_curve::<crate::curves::zorder::ZOrder>(6, 10);
+        let all: Vec<_> = r.segments(0..60).collect();
+        assert_eq!(all.len(), 60);
+        let window: Vec<_> = r.segments(10..25).collect();
+        assert_eq!(window[..], all[10..25]);
+        // Out-of-range clamps instead of panicking.
+        assert_eq!(r.segments(55..1000).count(), 5);
+        assert_eq!(r.segments(70..80).count(), 0);
+    }
+
+    #[test]
+    fn canonic_rect_closed_form() {
+        let c = CanonicRect::new(4, 7);
+        assert_eq!(c.order(0, 0), 0);
+        assert_eq!(c.order(1, 0), 7);
+        assert_eq!(c.coords(9), (1, 2));
+        let cells: Vec<_> = c.segments(0..28).collect();
+        assert_eq!(cells[0], (0, 0));
+        assert_eq!(cells[27], (3, 6));
+        assert_eq!(cells.len(), 28);
+    }
+
+    #[test]
+    fn fgf_mapper_segments_cover_the_region() {
+        let level = 4u32;
+        let m = FgfMapper::new(level, UpperTriangle);
+        let span = m.domain().order_span().unwrap();
+        assert_eq!(span, 256);
+        let n = 1u32 << level;
+        assert_eq!(m.domain().cell_count(), Some((n as u64) * (n as u64 - 1) / 2));
+        // Full-range segments equal the plain traversal...
+        let via_segments: Vec<_> = m.segments(0..span).collect();
+        let mut via_traverse = Vec::new();
+        m.traverse(|i, j, _| via_traverse.push((i, j)));
+        assert_eq!(via_segments, via_traverse);
+        // ...and two half-ranges concatenate to the same path.
+        let lo: Vec<_> = m.segments(0..128).collect();
+        let hi: Vec<_> = m.segments(128..span).collect();
+        let glued: Vec<_> = lo.into_iter().chain(hi).collect();
+        assert_eq!(glued, via_traverse);
+    }
+
+    #[test]
+    fn fgf_mapper_orders_are_true_hilbert_values() {
+        let m = FgfMapper::new(5, UpperTriangle);
+        let mut ok = true;
+        m.traverse(|i, j, h| {
+            ok &= m.order(i, j) == h && m.coords(h) == (i, j);
+        });
+        assert!(ok);
+    }
+
+    #[test]
+    fn hilbert_range_region_prunes() {
+        // The window region alone visits exactly the order values in range.
+        let level = 4u32;
+        let w = HilbertRange { lo: 37, hi: 91, cover_level: level };
+        let mut hs = Vec::new();
+        fgf_hilbert_loop(level, &w, |_, _, h| hs.push(h));
+        let want: Vec<u64> = (37..91).collect();
+        assert_eq!(hs, want);
+    }
+
+    #[test]
+    fn for_each_covers_rect_domains() {
+        let r = RectMapper::fur(7, 4);
+        let mut count = 0u64;
+        for_each(&r, |_, _| count += 1);
+        assert_eq!(count, 28);
+    }
+}

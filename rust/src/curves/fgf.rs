@@ -49,6 +49,20 @@ pub trait Region {
     }
 }
 
+impl<'a, R: Region + ?Sized> Region for &'a R {
+    fn classify(&self, i0: u32, j0: u32, level: u32) -> BlockClass {
+        (**self).classify(i0, j0, level)
+    }
+
+    fn classify_h(&self, i0: u32, j0: u32, h0: u64, level: u32) -> BlockClass {
+        (**self).classify_h(i0, j0, h0, level)
+    }
+
+    fn contains(&self, i: u32, j: u32) -> bool {
+        (**self).contains(i, j)
+    }
+}
+
 /// The strict upper triangle `i < j` — the paper's canonical example for
 /// self-join pair loops (each unordered pair visited once).
 #[derive(Copy, Clone, Debug)]

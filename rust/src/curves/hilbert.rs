@@ -22,6 +22,8 @@
 //! (`U` if the number of considered bit pairs is even, `D` if odd) and are
 //! therefore consistent across all resolutions `L ≥ L(i,j)`.
 
+use super::engine::{split_consecutive_runs, BATCH};
+use super::nonrecursive::HilbertIter;
 use super::SpaceFillingCurve;
 
 /// Automaton states, indexed `U=0, D=1, A=2, C=3`.
@@ -156,6 +158,50 @@ impl SpaceFillingCurve for Hilbert {
     #[inline]
     fn coords(c: u64) -> (u32, u32) {
         Self::coords_at_level(c, Self::effective_level_h(c))
+    }
+
+    /// `O(n²)` cover generation via the Figure-5 constant-overhead loop
+    /// (instead of one `O(log)` automaton inversion per cell).
+    fn generate_cover(side: u32, body: &mut dyn FnMut(u32, u32)) {
+        for (i, j) in HilbertIter::new(side.max(1)) {
+            body(i, j);
+        }
+    }
+
+    /// Batched ℋ(i,j): hoists the effective-level/parity computation out
+    /// of the element loop, once per [`BATCH`]-value chunk (sound by the
+    /// §3 parity rule: any even level ≥ the effective level agrees).
+    fn order_batch_static(pairs: &[(u32, u32)], out: &mut Vec<u64>) {
+        for chunk in pairs.chunks(BATCH) {
+            let mut m = 0u32;
+            for &(i, j) in chunk {
+                m |= i | j;
+            }
+            let bits = 32 - m.leading_zeros();
+            let level = (bits + 1) & !1; // round up to even
+            for &(i, j) in chunk {
+                out.push(Self::order_at_level(i, j, level));
+            }
+        }
+    }
+
+    /// Batched ℋ⁻¹(h): consecutive order-value runs are stepped with the
+    /// Figure-5 `O(1)` update (one automaton inversion per run) instead
+    /// of one `O(log h)` inversion per value.
+    fn coords_batch_static(orders: &[u64], out: &mut Vec<(u32, u32)>) {
+        split_consecutive_runs(orders, |run| {
+            let last = run[run.len() - 1];
+            let level = Self::effective_level_h(last);
+            if run.len() >= 2 && level <= 16 {
+                for p in HilbertIter::range(level, run[0], last + 1) {
+                    out.push(p);
+                }
+            } else {
+                for &h in run {
+                    out.push(Self::coords(h));
+                }
+            }
+        });
     }
 }
 

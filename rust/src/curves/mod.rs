@@ -11,22 +11,43 @@
 //! The coordinate convention is the paper's: `i` is the *row* (oriented
 //! top-down), `j` the *column* (left-right).
 //!
-//! Implementations:
+//! ## The engine is the entry point
 //!
-//! | Curve | Module | Generation |
-//! |---|---|---|
-//! | canonic 𝒩(i,j)=i·n+j | [`canonic`] | closed form |
-//! | Z-order ℤ | [`zorder`] | bit interleaving (§2.2, Fig 2) |
-//! | Gray-code 𝒢 | [`gray`] | interleave + Gray decode |
-//! | Hilbert ℋ | [`hilbert`] | Mealy automaton (§3, Fig 3) |
-//! | Peano 𝒫 | [`peano`] | 3-adic Mealy automaton |
-//! | Hilbert, whole curve | [`lindenmayer`] | recursive CFG (§4, Fig 4) |
-//! | Hilbert, whole curve | [`nonrecursive`] | constant-overhead loop (§5, Fig 5) |
-//! | Hilbert, arbitrary n×m | [`fur`] | overlay grid (§6.1) |
-//! | Hilbert, general regions | [`fgf`] | jump-over (§6.2) |
-//! | nano-programs | [`nano`] | pre-computed 4×4 tiles in u64 (§6.3) |
+//! Every consumer above this layer — the coordinator, the §7 apps, the
+//! grid index, the CLI — dispatches through the object-safe
+//! [`engine::CurveMapper`] interface. Pick a mapper via [`CurveKind`]:
+//!
+//! ```
+//! use sfc_mine::curves::engine::CurveMapper;
+//! use sfc_mine::curves::CurveKind;
+//!
+//! // Plane mapper: scalar + batched conversion for any curve.
+//! let z = CurveKind::ZOrder.mapper();
+//! assert_eq!(z.coords(z.order(5, 9)), (5, 9));
+//!
+//! // Rectangle mapper: contiguous order values over any n×m grid.
+//! let h = CurveKind::Hilbert.rect_mapper(6, 10);
+//! let span = h.domain().order_span().unwrap();
+//! assert_eq!(h.segments(0..span).count(), 60);
+//! ```
+//!
+//! ## Curve implementations
+//!
+//! | Curve | Module | Generation | Engine mapper |
+//! |---|---|---|---|
+//! | canonic 𝒩(i,j)=i·n+j | [`canonic`] | closed form | [`engine::CanonicRect`] |
+//! | Z-order ℤ | [`zorder`] | bit interleaving (§2.2, Fig 2) | [`engine::StaticCurve`] / [`engine::RectMapper`] |
+//! | Gray-code 𝒢 | [`gray`] | interleave + Gray decode | [`engine::StaticCurve`] / [`engine::RectMapper`] |
+//! | Hilbert ℋ | [`hilbert`] | Mealy automaton (§3, Fig 3) | [`engine::StaticCurve`] / [`engine::HilbertSquare`] |
+//! | Peano 𝒫 | [`peano`] | 3-adic Mealy automaton | [`engine::StaticCurve`] / [`engine::RectMapper`] |
+//! | Hilbert, whole curve | [`lindenmayer`] | recursive CFG (§4, Fig 4) | (generator) |
+//! | Hilbert, whole curve | [`nonrecursive`] | constant-overhead loop (§5, Fig 5) | backs [`engine::HilbertSquare`] |
+//! | Hilbert, arbitrary n×m | [`fur`] | overlay grid (§6.1) | backs [`engine::RectMapper::fur`] |
+//! | Hilbert, general regions | [`fgf`] | jump-over (§6.2) | [`engine::FgfMapper`] |
+//! | nano-programs | [`nano`] | pre-computed 4×4 tiles in u64 (§6.3) | (FUR internals) |
 
 pub mod canonic;
+pub mod engine;
 pub mod fgf;
 pub mod fur;
 pub mod gray;
@@ -38,14 +59,22 @@ pub mod nonrecursive;
 pub mod peano;
 pub mod zorder;
 
-/// A bijective order-value mapping `C : ℕ₀ × ℕ₀ → ℕ₀` (paper §2).
+/// A bijective order-value mapping `C : ℕ₀ × ℕ₀ → ℕ₀` (paper §2) as
+/// *stateless class methods* — curves in this family are pure functions
+/// of the coordinates.
 ///
-/// All functions are *stateless class methods*: curves in this family are
-/// pure functions of the coordinates. Curves that depend on grid shape
-/// (canonic order) or region (FUR/FGF) expose instance APIs instead.
+/// This is the static (compile-time dispatched) layer; generic code above
+/// the curves should use the object-safe [`engine::CurveMapper`] instead
+/// (any `SpaceFillingCurve` adapts via [`engine::StaticCurve`]).
 pub trait SpaceFillingCurve {
     /// Human-readable curve name (used in benchmark/report labels).
     const NAME: &'static str;
+
+    /// Branching radix of the curve's recursive construction: natural
+    /// cover grids have side `RADIX^k`. 2 for the 2-adic curves, 3 for
+    /// Peano. (This replaces the old name-string dispatch in the
+    /// enumeration path.)
+    const RADIX: u32 = 2;
 
     /// Order value for the coordinate pair `(i, j)`.
     fn order(i: u32, j: u32) -> u64;
@@ -59,10 +88,51 @@ pub trait SpaceFillingCurve {
         Self::order(j, i)
     }
 
+    /// Side of the smallest natural cover grid containing an `n×n` grid:
+    /// the least `RADIX^k ≥ n`. Curves whose restriction to any prefix is
+    /// grid-shaped (canonic) override this to `n` itself.
+    fn cover_side(n: u32) -> u32 {
+        let mut s = 1u32;
+        while s < n {
+            s = s.saturating_mul(Self::RADIX);
+        }
+        s
+    }
+
+    /// Visit every cell of the `side × side` cover grid in curve order
+    /// (`side` a value produced by [`SpaceFillingCurve::cover_side`]).
+    ///
+    /// The default evaluates one `coords` per order value (`O(n² log n)`
+    /// total); curves with constant-overhead generators override this
+    /// with their `O(n²)` path (Hilbert: the Figure-5 loop; Peano: the
+    /// recursive serpentine).
+    fn generate_cover(side: u32, body: &mut dyn FnMut(u32, u32)) {
+        let cells = (side as u64) * (side as u64);
+        for c in 0..cells {
+            let (i, j) = Self::coords(c);
+            body(i, j);
+        }
+    }
+
+    /// Batched forward conversion (see [`engine::CurveMapper::order_batch`]).
+    /// Default: the scalar loop. Curves with per-call automaton setup
+    /// override to amortise it across [`engine::BATCH`]-value chunks.
+    fn order_batch_static(pairs: &[(u32, u32)], out: &mut Vec<u64>) {
+        out.extend(pairs.iter().map(|&(i, j)| Self::order(i, j)));
+    }
+
+    /// Batched inverse conversion (see [`engine::CurveMapper::coords_batch`]).
+    /// Default: the scalar loop.
+    fn coords_batch_static(orders: &[u64], out: &mut Vec<(u32, u32)>) {
+        out.extend(orders.iter().map(|&c| Self::coords(c)));
+    }
+
     /// Enumerate the `n×n` grid in curve order via repeated `coords`.
     ///
-    /// This is the generic `O(n² log n)` path; the Hilbert curve has the
-    /// `O(n²)` generators in [`lindenmayer`] / [`nonrecursive`].
+    /// This is the generic lazy path; for materialised, cover-filtered
+    /// enumeration use [`CurveKind::enumerate`] /
+    /// [`engine::collect_rect`], which route through the `O(n²)`
+    /// generators.
     fn enumerate(n: u32) -> GridEnum<Self>
     where
         Self: Sized,
@@ -139,27 +209,65 @@ impl CurveKind {
         }
     }
 
+    /// The engine mapper over the full `u32 × u32` plane (zero-sized,
+    /// `'static`).
+    pub fn mapper(self) -> &'static dyn engine::CurveMapper {
+        static CANONIC: engine::StaticCurve<canonic::CanonicFixed> = engine::StaticCurve::new();
+        static ZORDER: engine::StaticCurve<zorder::ZOrder> = engine::StaticCurve::new();
+        static GRAY: engine::StaticCurve<gray::GrayCode> = engine::StaticCurve::new();
+        static HILBERT: engine::StaticCurve<hilbert::Hilbert> = engine::StaticCurve::new();
+        static PEANO: engine::StaticCurve<peano::Peano> = engine::StaticCurve::new();
+        match self {
+            CurveKind::Canonic => &CANONIC,
+            CurveKind::ZOrder => &ZORDER,
+            CurveKind::Gray => &GRAY,
+            CurveKind::Hilbert => &HILBERT,
+            CurveKind::Peano => &PEANO,
+        }
+    }
+
+    /// An engine mapper with a *contiguous* order-value range over an
+    /// arbitrary `rows × cols` rectangle.
+    ///
+    /// Hilbert uses the zero-allocation fixed-level mapper on power-of-two
+    /// squares and the §6.1 FUR overlay grid elsewhere; canonic is closed
+    /// form; the remaining curves filter their natural cover grid.
+    pub fn rect_mapper(self, rows: u32, cols: u32) -> Box<dyn engine::CurveMapper> {
+        match self {
+            CurveKind::Canonic => Box::new(engine::CanonicRect::new(rows, cols)),
+            CurveKind::Hilbert => {
+                if rows == cols && rows.is_power_of_two() && rows.trailing_zeros() <= 16 {
+                    Box::new(engine::HilbertSquare::with_side(rows))
+                } else {
+                    Box::new(engine::RectMapper::fur(rows, cols))
+                }
+            }
+            CurveKind::ZOrder => Box::new(engine::RectMapper::from_curve::<zorder::ZOrder>(
+                rows, cols,
+            )),
+            CurveKind::Gray => Box::new(engine::RectMapper::from_curve::<gray::GrayCode>(
+                rows, cols,
+            )),
+            CurveKind::Peano => Box::new(engine::RectMapper::from_curve::<peano::Peano>(
+                rows, cols,
+            )),
+        }
+    }
+
     /// Enumerate an `n×n` grid in this curve's order into a vector.
     ///
-    /// Peano enumerates the smallest 3-adic grid covering `n` and filters;
-    /// all others enumerate natively.
+    /// Routed through the engine's cover generation
+    /// ([`engine::collect_rect`]): each curve enumerates its smallest
+    /// natural cover ([`SpaceFillingCurve::cover_side`]) with its `O(n²)`
+    /// generator and keeps the in-grid cells — no per-curve special
+    /// cases.
     pub fn enumerate(self, n: u32) -> Vec<(u32, u32)> {
         match self {
-            CurveKind::Canonic => {
-                let mut v = Vec::with_capacity((n as usize) * (n as usize));
-                for i in 0..n {
-                    for j in 0..n {
-                        v.push((i, j));
-                    }
-                }
-                v
-            }
-            CurveKind::ZOrder => collect_filtered::<zorder::ZOrder>(n),
-            CurveKind::Gray => collect_filtered::<gray::GrayCode>(n),
-            CurveKind::Hilbert => nonrecursive::HilbertIter::new(n.next_power_of_two())
-                .filter(|&(i, j)| i < n && j < n)
-                .collect(),
-            CurveKind::Peano => collect_filtered::<peano::Peano>(n),
+            CurveKind::Canonic => engine::collect_rect::<canonic::CanonicFixed>(n, n),
+            CurveKind::ZOrder => engine::collect_rect::<zorder::ZOrder>(n, n),
+            CurveKind::Gray => engine::collect_rect::<gray::GrayCode>(n, n),
+            CurveKind::Hilbert => engine::collect_rect::<hilbert::Hilbert>(n, n),
+            CurveKind::Peano => engine::collect_rect::<peano::Peano>(n, n),
         }
     }
 }
@@ -179,35 +287,6 @@ impl std::str::FromStr for CurveKind {
             ))),
         }
     }
-}
-
-/// Enumerate the power-of-two (or power-of-three) cover of `n` and keep the
-/// in-grid cells.
-fn collect_filtered<C: SpaceFillingCurve>(n: u32) -> Vec<(u32, u32)> {
-    if n == 0 {
-        return Vec::new();
-    }
-    // Find the curve's natural cover: smallest square the curve's coords()
-    // stays inside for a contiguous order-value prefix.
-    // For the 2-adic curves that is next_power_of_two(n); for Peano the next
-    // power of three. We detect via NAME to keep the trait lean.
-    let cover: u64 = if C::NAME == "peano" {
-        let mut s = 1u64;
-        while s < n as u64 {
-            s *= 3;
-        }
-        s
-    } else {
-        n.next_power_of_two() as u64
-    };
-    let mut out = Vec::with_capacity((n as usize) * (n as usize));
-    for c in 0..cover * cover {
-        let (i, j) = C::coords(c);
-        if i < n && j < n {
-            out.push((i, j));
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -235,6 +314,64 @@ mod tests {
                 assert!(cells.iter().all(|&(i, j)| i < n && j < n));
             }
         }
+    }
+
+    #[test]
+    fn enumerate_canonic_is_row_major() {
+        let cells = CurveKind::Canonic.enumerate(3);
+        assert_eq!(
+            cells,
+            vec![
+                (0, 0),
+                (0, 1),
+                (0, 2),
+                (1, 0),
+                (1, 1),
+                (1, 2),
+                (2, 0),
+                (2, 1),
+                (2, 2)
+            ]
+        );
+    }
+
+    #[test]
+    fn enumerate_hilbert_matches_fig5_on_powers_of_two() {
+        for n in [1u32, 2, 4, 16] {
+            let via_kind = CurveKind::Hilbert.enumerate(n);
+            let via_iter: Vec<_> = nonrecursive::HilbertIter::new(n).collect();
+            assert_eq!(via_kind, via_iter, "n={n}");
+        }
+    }
+
+    #[test]
+    fn enumerate_preserves_curve_order() {
+        // The engine cover path must keep each curve's own order: order
+        // values of the emitted cells are strictly increasing.
+        fn check<C: SpaceFillingCurve>(n: u32) {
+            let cells = engine::collect_rect::<C>(n, n);
+            let mut last = None;
+            for &(i, j) in &cells {
+                let h = C::order(i, j);
+                if let Some(prev) = last {
+                    assert!(h > prev, "{} not increasing at ({i},{j})", C::NAME);
+                }
+                last = Some(h);
+            }
+        }
+        check::<zorder::ZOrder>(9);
+        check::<gray::GrayCode>(9);
+        check::<peano::Peano>(5);
+    }
+
+    #[test]
+    fn cover_side_uses_radix() {
+        assert_eq!(zorder::ZOrder::cover_side(5), 8);
+        assert_eq!(peano::Peano::cover_side(5), 9);
+        assert_eq!(peano::Peano::cover_side(9), 9);
+        assert_eq!(peano::Peano::cover_side(10), 27);
+        assert_eq!(canonic::CanonicFixed::cover_side(5), 5);
+        assert_eq!(hilbert::Hilbert::cover_side(0), 1);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! odd`) was validated exhaustively against a geometric reference up to
 //! 81×81 (unit steps + bijectivity): see the repo's property tests.
 
+use super::engine::BATCH;
 use super::SpaceFillingCurve;
 
 /// Largest power of three representable in u32: 3^20.
@@ -132,10 +133,41 @@ impl Peano {
         }
         level
     }
+
+    /// Recursive serpentine generation of the whole `3^level` grid in
+    /// curve order — amortised `O(1)` per cell (the Peano counterpart of
+    /// the Hilbert grammar generator; same structure as the geometric
+    /// reference the automaton was validated against).
+    pub fn generate(level: u32, body: &mut dyn FnMut(u32, u32)) {
+        fn rec(level: u32, i0: u32, j0: u32, fi: u32, fj: u32, body: &mut dyn FnMut(u32, u32)) {
+            if level == 0 {
+                body(i0, j0);
+                return;
+            }
+            let s = 3u32.pow(level - 1);
+            for k in 0..9 {
+                let (lit, ljt) = serp_coords(k);
+                let (mut it, mut jt) = (lit, ljt);
+                if fi == 1 {
+                    it = 2 - it;
+                }
+                if fj == 1 {
+                    jt = 2 - jt;
+                }
+                rec(level - 1, i0 + it * s, j0 + jt * s, fi ^ (jt % 2), fj ^ (it % 2), body);
+            }
+        }
+        debug_assert!(level <= MAX_LEVEL);
+        rec(level, 0, 0, 0, 0, body);
+    }
 }
 
 impl SpaceFillingCurve for Peano {
     const NAME: &'static str = "peano";
+
+    /// 3-adic: natural cover grids have side `3^k` (this is what the old
+    /// enumeration path detected by comparing `NAME == "peano"`).
+    const RADIX: u32 = 3;
 
     /// Variable-resolution 𝒫(i,j).
     ///
@@ -150,6 +182,49 @@ impl SpaceFillingCurve for Peano {
     #[inline]
     fn coords(c: u64) -> (u32, u32) {
         Self::coords_at_level(c, Self::effective_level_h(c))
+    }
+
+    /// `O(n²)` cover generation via the recursive serpentine (instead of
+    /// one `O(log)` digit decomposition per cell).
+    fn generate_cover(side: u32, body: &mut dyn FnMut(u32, u32)) {
+        let mut level = 0u32;
+        let mut s = 1u64;
+        while s < side as u64 {
+            s *= 3;
+            level += 1;
+        }
+        debug_assert_eq!(s, side as u64, "cover side {side} must be a power of three");
+        Self::generate(level, body);
+    }
+
+    /// Batched 𝒫(i,j): the ternary digit-extraction setup (`3^level`
+    /// computation and level search) runs once per [`BATCH`]-value chunk.
+    fn order_batch_static(pairs: &[(u32, u32)], out: &mut Vec<u64>) {
+        for chunk in pairs.chunks(BATCH) {
+            let mut m = 0u32;
+            for &(i, j) in chunk {
+                m = m.max(i).max(j);
+            }
+            let level = Self::effective_level(m, m);
+            for &(i, j) in chunk {
+                out.push(Self::order_at_level(i, j, level));
+            }
+        }
+    }
+
+    /// Batched 𝒫⁻¹(h): one level search per [`BATCH`]-value chunk
+    /// (sound because leading `(0,0)` digit pairs are invisible).
+    fn coords_batch_static(orders: &[u64], out: &mut Vec<(u32, u32)>) {
+        for chunk in orders.chunks(BATCH) {
+            let mut m = 0u64;
+            for &c in chunk {
+                m = m.max(c);
+            }
+            let level = Self::effective_level_h(m);
+            for &c in chunk {
+                out.push(Self::coords_at_level(c, level));
+            }
+        }
     }
 }
 
@@ -260,6 +335,17 @@ mod tests {
         forall::<(u32, u32)>("peano-roundtrip", |&(i, j)| {
             Peano::coords(Peano::order(i, j)) == (i, j)
         });
+    }
+
+    #[test]
+    fn generate_matches_automaton() {
+        for level in 0..=3u32 {
+            let n = 3u64.pow(level);
+            let mut got = Vec::new();
+            Peano::generate(level, &mut |i, j| got.push((i, j)));
+            let want: Vec<_> = (0..n * n).map(|h| Peano::coords_at_level(h, level)).collect();
+            assert_eq!(got, want, "L={level}");
+        }
     }
 
     #[test]

@@ -6,8 +6,15 @@
 //! candidate set "all pairs from cells within Chebyshev distance 1" is
 //! conservative (no false dismissals) — the same role the hierarchical
 //! index of [20] plays for the paper's FGF join.
+//!
+//! [`GridIndex::hilbert_cell_ranks`] numbers the non-empty cells along
+//! their spatial Hilbert order through the engine's batched conversion,
+//! which is what transfers curve locality onto index-driven workloads
+//! (the similarity join's cell-pair grid).
 
 use crate::apps::Matrix;
+use crate::curves::engine::CurveMapper;
+use crate::curves::CurveKind;
 
 /// A grid cell's integer coordinates (0-based after offsetting).
 pub type Cell = (u32, u32);
@@ -93,6 +100,27 @@ impl GridIndex {
         a.0.abs_diff(b.0) <= 1 && a.1.abs_diff(b.1) <= 1
     }
 
+    /// Number the non-empty cells along their spatial Hilbert order.
+    ///
+    /// Returns `(order, rank)`: `order[pos]` is the cells-index of the
+    /// `pos`-th cell in Hilbert order, and `rank[idx]` is the Hilbert
+    /// position of cells-index `idx` (mutually inverse permutations).
+    /// Cell coordinates convert through the engine's batched path, so the
+    /// automaton setup is amortised across the whole index.
+    pub fn hilbert_cell_ranks(&self) -> (Vec<u32>, Vec<u32>) {
+        let mapper = CurveKind::Hilbert.mapper();
+        let coords: Vec<Cell> = self.cells.iter().map(|&(c, _)| c).collect();
+        let mut hs = Vec::new();
+        mapper.order_batch(&coords, &mut hs);
+        let mut order: Vec<u32> = (0..self.cells.len() as u32).collect();
+        order.sort_by_key(|&idx| hs[idx as usize]);
+        let mut rank = vec![0u32; self.cells.len()];
+        for (pos, &idx) in order.iter().enumerate() {
+            rank[idx as usize] = pos as u32;
+        }
+        (order, rank)
+    }
+
     /// Average points per non-empty cell.
     pub fn mean_occupancy(&self) -> f64 {
         if self.cells.is_empty() {
@@ -167,6 +195,27 @@ mod tests {
         let g = GridIndex::build(&m, 1.0);
         assert!(g.is_empty());
         assert_eq!(g.mean_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn hilbert_ranks_are_inverse_permutations() {
+        let m = Matrix::random(200, 2, 5, 0.0, 8.0);
+        let g = GridIndex::build(&m, 0.9);
+        let (order, rank) = g.hilbert_cell_ranks();
+        assert_eq!(order.len(), g.len());
+        assert_eq!(rank.len(), g.len());
+        for (pos, &idx) in order.iter().enumerate() {
+            assert_eq!(rank[idx as usize] as usize, pos);
+        }
+        // Hilbert order: strictly increasing order values along `order`.
+        use crate::curves::hilbert::Hilbert;
+        use crate::curves::SpaceFillingCurve;
+        let cells = g.cells();
+        for w in order.windows(2) {
+            let a = cells[w[0] as usize].0;
+            let b = cells[w[1] as usize].0;
+            assert!(Hilbert::order(a.0, a.1) < Hilbert::order(b.0, b.1));
+        }
     }
 
     #[test]

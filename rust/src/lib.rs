@@ -1,42 +1,65 @@
 //! # sfc-mine — Space-filling Curves for High-performance Data Mining
 //!
 //! A reproduction of Böhm, *"Space-filling Curves for High-performance Data
-//! Mining"* (2020) as a production-grade library:
+//! Mining"* (2020) as a production-grade library.
 //!
-//! * [`curves`] — the complete space-filling-curve toolkit: Z-order, Hilbert
+//! ## Architecture: one engine, many curves
+//!
+//! The paper's central idea is that a single abstraction — a bijective
+//! order mapping `C(i,j) ⇄ c` — drives every application. The codebase
+//! mirrors that: the **[`curves::engine`]** module is the single entry
+//! point, an object-safe [`CurveMapper`] interface that every layer above
+//! the curves dispatches through:
+//!
+//! * [`curves`] — the curve toolkit behind the engine: Z-order, Hilbert
 //!   (Mealy automaton, recursive Lindenmayer grammar, non-recursive
-//!   constant-overhead generator), Gray-code, Peano, FUR-Hilbert loops over
-//!   arbitrary `n×m` grids, FGF-Hilbert loops with jump-over for general
-//!   regions, and nano-programs.
+//!   constant-overhead generator), Gray-code, Peano, FUR-Hilbert loops
+//!   over arbitrary `n×m` grids, FGF-Hilbert jump-over for general
+//!   regions, and nano-programs. Pick a mapper with
+//!   [`curves::CurveKind::mapper`] (full plane) or
+//!   [`curves::CurveKind::rect_mapper`] (any rectangle, contiguous order
+//!   values); batched `order_batch`/`coords_batch` amortise automaton
+//!   state across runs.
+//! * [`coordinator`] — the MIMD runtime: [`coordinator::Coordinator::par_fold`]
+//!   schedules **contiguous curve segments** of any finite-domain mapper
+//!   across a worker pool, preserving locality per worker.
+//! * [`apps`] — the paper's §7 application suite: matrix multiplication,
+//!   Cholesky decomposition, Floyd–Warshall, k-Means, and the
+//!   ε-similarity join, each in canonic, cache-conscious (tiled) and
+//!   cache-oblivious (engine-curve) variants.
+//! * [`index`] — the uniform grid index substrate for the similarity
+//!   join; numbers its cells along the Hilbert curve via the engine's
+//!   batched conversion.
 //! * [`cachesim`] — the cache-hierarchy simulator used to regenerate the
 //!   paper's Figure 1(e) (LRU / set-associative / multi-level + TLB).
-//! * [`apps`] — the paper's §7 application suite: matrix multiplication,
-//!   Cholesky decomposition, Floyd–Warshall, k-Means, and the ε-similarity
-//!   join, each in canonic, cache-conscious (tiled) and cache-oblivious
-//!   (Hilbert) variants.
-//! * [`index`] — the uniform grid index substrate for the similarity join.
-//! * [`coordinator`] — the MIMD runtime: a Hilbert-range scheduler that
-//!   partitions curve segments across a worker pool, preserving locality
-//!   per worker.
-//! * [`runtime`] — the PJRT engine: loads AOT-compiled JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`) and executes them from the Rust hot path.
+//! * [`runtime`] — the PJRT engine: loads AOT-compiled JAX/Pallas
+//!   artifacts and executes them from the Rust hot path (compiled with
+//!   the `pjrt` cargo feature; default builds use a dependency-free
+//!   stub).
 //! * [`util`] — deterministic RNG, a mini property-testing harness, the
 //!   benchmark harness, and CLI plumbing.
 //!
 //! ## Quickstart
 //!
 //! ```
-//! use sfc_mine::curves::{hilbert::Hilbert, nonrecursive::HilbertIter};
-//! use sfc_mine::curves::SpaceFillingCurve;
+//! use sfc_mine::curves::engine::CurveMapper;
+//! use sfc_mine::curves::CurveKind;
 //!
-//! // Order values via the Mealy automaton (§3 of the paper):
-//! let h = Hilbert::order(2, 3);
-//! assert_eq!(Hilbert::coords(h), (2, 3));
+//! // Every curve is an object-safe mapper (paper §2's C(i,j) ⇄ c):
+//! let curve = CurveKind::Hilbert.mapper();
+//! let c = curve.order(2, 3);
+//! assert_eq!(curve.coords(c), (2, 3));
 //!
-//! // Constant-overhead enumeration of a whole grid (§5, Figure 5):
-//! let cells: Vec<(u32, u32)> = HilbertIter::new(4).collect();
-//! assert_eq!(cells.len(), 16);
-//! assert_eq!(cells[0], (0, 0));
+//! // Batched conversion amortises automaton state across runs:
+//! let mut orders = Vec::new();
+//! curve.order_batch(&[(0, 0), (1, 0), (1, 1)], &mut orders);
+//! assert_eq!(orders.len(), 3);
+//!
+//! // Arbitrary n×m rectangles traverse through the same interface
+//! // (FUR overlay grid, §6.1), with a contiguous order-value range:
+//! let rect = CurveKind::Hilbert.rect_mapper(3, 5);
+//! let span = rect.domain().order_span().unwrap();
+//! assert_eq!(rect.segments(0..span).count(), 15);
 //! ```
 
 pub mod apps;
@@ -47,31 +70,77 @@ pub mod index;
 pub mod runtime;
 pub mod util;
 
+pub use curves::engine::CurveMapper;
 pub use curves::nonrecursive::HilbertIter;
 pub use curves::SpaceFillingCurve;
 
 /// Library-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate is
+/// dependency-free by design so it builds on the container's vendored
+/// toolchain without a registry.
+#[derive(Debug)]
 pub enum Error {
     /// A grid/curve parameter was out of the supported domain.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
     /// An artifact (AOT-compiled HLO module) was missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
     /// The PJRT runtime failed to compile or execute a module.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Numerical failure inside an application kernel (e.g. a non-PD matrix
     /// handed to Cholesky).
-    #[error("numerical error: {0}")]
     Numerical(String),
     /// Coordinator/scheduling failure (worker panic, queue shutdown).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-    #[error("I/O error: {0}")]
-    Io(#[from] std::io::Error),
+    /// An I/O failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "I/O error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_matches_legacy_format() {
+        assert_eq!(
+            Error::InvalidArgument("x".into()).to_string(),
+            "invalid argument: x"
+        );
+        assert_eq!(Error::Artifact("y".into()).to_string(), "artifact error: y");
+        assert_eq!(Error::Runtime("z".into()).to_string(), "runtime error: z");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(io.to_string().starts_with("I/O error:"));
+        assert!(std::error::Error::source(&io).is_some());
+    }
+}

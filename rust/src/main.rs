@@ -4,18 +4,21 @@
 //! sfc-mine info                         # platform + artifact status
 //! sfc-mine fig1  [--n 256]              # regenerate Figure 1(e)
 //! sfc-mine curves [--n 64]              # locality comparison table
-//! sfc-mine matmul [--n 512 --tile 32]   # §7 matmul variants
+//! sfc-mine matmul [--n 512 --tile 32 --curve hilbert]  # §7 matmul variants
 //! sfc-mine kmeans [--n 40960 ...]       # parallel k-means loop
 //! sfc-mine simjoin [--n 20000 --eps 1]  # §7 similarity join variants
 //! ```
+//!
+//! All curve dispatch goes through the engine ([`CurveKind::mapper`] /
+//! [`CurveKind::rect_mapper`]); `--curve` accepts any
+//! `canonic|zorder|gray|hilbert|peano`.
 
 use sfc_mine::apps::kmeans::{init_centroids, make_blobs, KMeans};
-use sfc_mine::apps::matmul::{flops, matmul_hilbert, matmul_tiled, matmul_transposed};
+use sfc_mine::apps::matmul::{flops, matmul_curve, matmul_tiled, matmul_transposed};
 use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
 use sfc_mine::apps::simjoin::{join_fgf_hilbert, join_grid_nested, make_clustered};
 use sfc_mine::apps::Matrix;
 use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
-use sfc_mine::curves::nonrecursive::HilbertIter;
 use sfc_mine::curves::{metrics, CurveKind};
 use sfc_mine::runtime::{artifact, Engine};
 use sfc_mine::util::cli::Args;
@@ -72,7 +75,7 @@ fn fig1(args: &Args) {
     let orders = vec![
         (CurveKind::Canonic, CurveKind::Canonic.enumerate(n)),
         (CurveKind::ZOrder, CurveKind::ZOrder.enumerate(n)),
-        (CurveKind::Hilbert, HilbertIter::new(n).collect::<Vec<_>>()),
+        (CurveKind::Hilbert, CurveKind::Hilbert.enumerate(n)),
     ];
     let fractions = [0.05, 0.10, 0.15, 0.20, 0.30, 0.50];
     let rows = fig1e_sweep(&cfg, &orders, &fractions, 64);
@@ -111,6 +114,13 @@ fn curves(args: &Args) {
 fn matmul_cmd(args: &Args) {
     let n: usize = args.get("n", 512);
     let tile: usize = args.get("tile", 32);
+    let curve: CurveKind = match args.get_str("curve", "hilbert").parse() {
+        Ok(k) => k,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
     let b = Matrix::random(n, n, 1, -1.0, 1.0);
     let c = Matrix::random(n, n, 2, -1.0, 1.0);
     let mut t = Table::new(vec!["variant", "ms", "GFLOP/s"]);
@@ -120,7 +130,7 @@ fn matmul_cmd(args: &Args) {
             Box::new(|| matmul_transposed(&b, &c)) as Box<dyn Fn() -> Matrix>,
         ),
         ("tiled", Box::new(|| matmul_tiled(&b, &c, tile))),
-        ("hilbert", Box::new(|| matmul_hilbert(&b, &c, tile))),
+        (curve.name(), Box::new(|| matmul_curve(&b, &c, tile, curve))),
     ] {
         let t0 = Instant::now();
         std::hint::black_box(f());
@@ -131,7 +141,7 @@ fn matmul_cmd(args: &Args) {
             format!("{:.2}", flops(n, n, n) as f64 / dt.as_secs_f64() / 1e9),
         ]);
     }
-    println!("matmul n={n} tile={tile}:");
+    println!("matmul n={n} tile={tile} curve={}:", curve.name());
     print!("{}", t.render());
 }
 

@@ -1,7 +1,18 @@
 //! The PJRT execution engine: compile-once, execute-many.
+//!
+//! The real backend links the vendored `xla` crate and is compiled only
+//! with the **`pjrt` cargo feature** — which also requires adding the
+//! `xla` dependency to `rust/Cargo.toml` in an environment that ships
+//! it (the feature alone does not declare the dep; see the manifest
+//! note). Default builds get a dependency-free stub with the same API
+//! surface:
+//! `Engine::cpu()` succeeds (so `sfc-mine info` and the test suite run
+//! anywhere), and every load/execute call reports a descriptive
+//! [`Error::Runtime`] instead — the "stub or gate missing deps" policy.
 
 use super::artifact::Manifest;
 use crate::{Error, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -33,12 +44,25 @@ impl TensorF32 {
     }
 }
 
+/// A device-resident buffer (opaque; see [`Engine::to_device`]).
+#[cfg(feature = "pjrt")]
+pub type DeviceBuffer = xla::PjRtBuffer;
+
+/// A device-resident buffer (stub: never constructed without `pjrt`).
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct DeviceBuffer {
+    _priv: (),
+}
+
 /// The PJRT engine: a CPU client plus a map of compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU PJRT client with no executables loaded.
     pub fn cpu() -> Result<Engine> {
@@ -117,7 +141,7 @@ impl Engine {
     /// the hot-path API: per-call host→device copies of loop-invariant
     /// inputs (e.g. the point batches of a k-Means run) disappear
     /// (§Perf).
-    pub fn to_device(&self, t: &TensorF32) -> Result<xla::PjRtBuffer> {
+    pub fn to_device(&self, t: &TensorF32) -> Result<DeviceBuffer> {
         self.client
             .buffer_from_host_buffer(&t.data, &t.dims, None)
             .map_err(|e| Error::Runtime(format!("to_device: {e}")))
@@ -127,7 +151,7 @@ impl Engine {
     pub fn execute_buffers(
         &self,
         name: &str,
-        inputs: &[&xla::PjRtBuffer],
+        inputs: &[&DeviceBuffer],
     ) -> Result<Vec<TensorF32>> {
         let exe = self
             .exes
@@ -166,6 +190,77 @@ impl Engine {
     }
 }
 
+/// The stub engine (no `pjrt` feature): construction succeeds so status
+/// commands and tests run, but nothing can be loaded or executed.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    _priv: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Create the stub engine (always succeeds).
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { _priv: () })
+    }
+
+    /// Platform description (for logs).
+    pub fn platform(&self) -> String {
+        "cpu-stub (0 devices; rebuild with --features pjrt)".to_string()
+    }
+
+    /// Stub: always an error — artifacts need the real backend.
+    pub fn load_hlo_text(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let _ = path;
+        Err(Error::Runtime(format!(
+            "cannot load '{name}': built without the `pjrt` feature"
+        )))
+    }
+
+    /// Stub: loads the manifest metadata, but errors if it names any
+    /// artifact (they could not be executed anyway).
+    pub fn load_manifest_dir(&mut self, dir: impl AsRef<Path>) -> Result<Manifest> {
+        let manifest = Manifest::load(&dir)?;
+        if manifest.artifacts.is_empty() {
+            Ok(manifest)
+        } else {
+            Err(Error::Runtime(
+                "artifacts present but built without the `pjrt` feature".to_string(),
+            ))
+        }
+    }
+
+    /// Names of loaded executables (stub: always empty).
+    pub fn loaded(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// Stub: always an error naming the missing executable.
+    pub fn execute(&self, name: &str, _inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        Err(Error::Runtime(format!(
+            "no executable '{name}' loaded (built without the `pjrt` feature)"
+        )))
+    }
+
+    /// Stub: always an error.
+    pub fn to_device(&self, _t: &TensorF32) -> Result<DeviceBuffer> {
+        Err(Error::Runtime(
+            "to_device requires the `pjrt` feature".to_string(),
+        ))
+    }
+
+    /// Stub: always an error naming the missing executable.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        _inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<TensorF32>> {
+        Err(Error::Runtime(format!(
+            "no executable '{name}' loaded (built without the `pjrt` feature)"
+        )))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,18 +274,29 @@ mod tests {
 
     #[test]
     fn missing_executable_is_error() {
-        let engine = Engine::cpu().expect("PJRT CPU client");
+        let engine = Engine::cpu().expect("engine construction");
         let err = engine.execute("ghost", &[]).unwrap_err();
         assert!(err.to_string().contains("ghost"));
     }
 
     #[test]
     fn cpu_client_reports_platform() {
-        let engine = Engine::cpu().expect("PJRT CPU client");
+        let engine = Engine::cpu().expect("engine construction");
         let p = engine.platform();
         assert!(!p.is_empty());
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_surface_is_inert() {
+        let mut engine = Engine::cpu().unwrap();
+        assert!(engine.loaded().is_empty());
+        assert!(engine.load_hlo_text("x", "/nonexistent").is_err());
+        let t = TensorF32::scalar(1.0);
+        assert!(engine.to_device(&t).is_err());
+    }
+
     // End-to-end execute tests live in rust/tests/runtime_e2e.rs and are
-    // gated on `make artifacts` having produced the HLO files.
+    // gated on `make artifacts` having produced the HLO files (they
+    // require a `pjrt`-featured build to actually load them).
 }

@@ -6,6 +6,10 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
 //! DESIGN.md and `/opt/xla-example/README.md`).
+//!
+//! The real backend is gated behind the `pjrt` cargo feature (it links
+//! the vendored `xla` crate); default builds ship a dependency-free stub
+//! [`Engine`] with the same API surface.
 
 pub mod artifact;
 pub mod engine;

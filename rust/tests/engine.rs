@@ -1,0 +1,217 @@
+//! Engine-layer property tests (ISSUE 1): batched conversion agrees
+//! element-wise with the scalar paths for every `CurveKind`, and the
+//! curve-generic `Coordinator::par_fold` visits every cell of arbitrary
+//! `n×m` rectangles exactly once, matching the serial fold.
+
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::curves::engine::{for_each, CurveMapper, Domain, FgfMapper, HilbertSquare};
+use sfc_mine::curves::fgf::UpperTriangle;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::util::check::forall_seeded;
+use sfc_mine::util::rng::Rng;
+
+/// Keep generated inputs inside every curve's comfortable domain (Peano's
+/// digit tables cap at 3^20; stay well below).
+fn coord_limit(kind: CurveKind) -> u64 {
+    match kind {
+        CurveKind::Peano => 3u64.pow(15),
+        _ => 1u64 << 31,
+    }
+}
+
+fn order_limit(kind: CurveKind) -> u64 {
+    match kind {
+        CurveKind::Peano => 9u64.pow(15),
+        // ≤ 4^15 keeps Hilbert's consecutive-run fast path (level ≤ 16)
+        // active, which is the branch worth hammering.
+        _ => 1u64 << 30,
+    }
+}
+
+#[test]
+fn prop_order_batch_matches_scalar_for_all_curves() {
+    for kind in CurveKind::ALL {
+        let mapper = kind.mapper();
+        let name = format!("order-batch-{}", kind.name());
+        forall_seeded::<(u32, u32)>(&name, 17, 48, |&(a, b)| {
+            let mut rng = Rng::new(((a as u64) << 32) ^ b as u64 ^ 0x5EED);
+            let limit = coord_limit(kind);
+            // 2.5 BATCHes plus a ragged tail, mixing tiny and large pairs.
+            let pairs: Vec<(u32, u32)> = (0..165)
+                .map(|t| {
+                    if t % 3 == 0 {
+                        (rng.below(16) as u32, rng.below(16) as u32)
+                    } else {
+                        (rng.below(limit) as u32, rng.below(limit) as u32)
+                    }
+                })
+                .collect();
+            let mut batched = Vec::new();
+            mapper.order_batch(&pairs, &mut batched);
+            let scalar: Vec<u64> = pairs.iter().map(|&(i, j)| mapper.order(i, j)).collect();
+            batched == scalar
+        });
+    }
+}
+
+#[test]
+fn prop_coords_batch_matches_scalar_for_all_curves() {
+    for kind in CurveKind::ALL {
+        let mapper = kind.mapper();
+        let name = format!("coords-batch-{}", kind.name());
+        forall_seeded::<(u32, u32)>(&name, 23, 48, |&(a, b)| {
+            let mut rng = Rng::new(((a as u64) << 32) ^ b as u64 ^ 0xFACE);
+            let limit = order_limit(kind);
+            // Random scatter plus a consecutive run (exercises the
+            // amortised stepping path) plus duplicates.
+            let mut orders: Vec<u64> = (0..90).map(|_| rng.below(limit)).collect();
+            let base = rng.below(limit - 200);
+            orders.extend(base..base + 150);
+            orders.push(base);
+            orders.push(base);
+            let mut batched = Vec::new();
+            mapper.coords_batch(&orders, &mut batched);
+            let scalar: Vec<(u32, u32)> = orders.iter().map(|&c| mapper.coords(c)).collect();
+            batched == scalar
+        });
+    }
+}
+
+#[test]
+fn prop_batched_roundtrip_through_both_directions() {
+    for kind in CurveKind::ALL {
+        let mapper = kind.mapper();
+        let name = format!("batch-roundtrip-{}", kind.name());
+        forall_seeded::<(u32, u32)>(&name, 31, 32, |&(a, b)| {
+            let mut rng = Rng::new(((a as u64) << 17) ^ b as u64);
+            let limit = coord_limit(kind);
+            let pairs: Vec<(u32, u32)> = (0..100)
+                .map(|_| (rng.below(limit) as u32, rng.below(limit) as u32))
+                .collect();
+            let mut orders = Vec::new();
+            mapper.order_batch(&pairs, &mut orders);
+            let mut back = Vec::new();
+            mapper.coords_batch(&orders, &mut back);
+            back == pairs
+        });
+    }
+}
+
+#[test]
+fn par_fold_visits_every_rect_cell_exactly_once_all_curves() {
+    let mut coord = Coordinator::new(3);
+    coord.chunk = 37;
+    for kind in CurveKind::ALL {
+        for (n, m) in [(13u32, 29u32), (32, 32), (27, 9), (1, 17), (24, 24)] {
+            let mapper = kind.rect_mapper(n, m);
+            assert_eq!(mapper.domain(), Domain::Rect { rows: n, cols: m });
+            let (seen, metrics) = coord.par_fold(
+                mapper.as_ref(),
+                || vec![0u32; (n * m) as usize],
+                |acc, i, j| acc[(i * m + j) as usize] += 1,
+                |mut a, b| {
+                    for (x, y) in a.iter_mut().zip(&b) {
+                        *x += *y;
+                    }
+                    a
+                },
+            );
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "{} {n}x{m}: cell visited != once",
+                kind.name()
+            );
+            let items: u64 = metrics.iter().map(|w| w.items).sum();
+            assert_eq!(items, n as u64 * m as u64, "{} {n}x{m}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn par_fold_matches_serial_fold_all_curves() {
+    let mut coord = Coordinator::new(4);
+    coord.chunk = 53;
+    for kind in CurveKind::ALL {
+        let mapper = kind.rect_mapper(21, 34);
+        let (par_sum, _) = coord.par_fold(
+            mapper.as_ref(),
+            || 0u64,
+            |s, i, j| *s += (i as u64) * 1_000_003 + j as u64,
+            |a, b| a + b,
+        );
+        let mut serial = 0u64;
+        for_each(mapper.as_ref(), |i, j| serial += (i as u64) * 1_000_003 + j as u64);
+        assert_eq!(par_sum, serial, "{}", kind.name());
+    }
+}
+
+#[test]
+fn par_fold_segments_concatenate_to_the_full_path() {
+    // Serial check of the scheduling invariant: chunked segments glued in
+    // order equal the full traversal, for every curve and a ragged chunk
+    // size.
+    for kind in CurveKind::ALL {
+        let mapper = kind.rect_mapper(11, 19);
+        let span = mapper.domain().order_span().unwrap();
+        let full: Vec<(u32, u32)> = mapper.segments(0..span).collect();
+        let mut glued = Vec::new();
+        let mut start = 0u64;
+        while start < span {
+            let end = (start + 23).min(span);
+            glued.extend(mapper.segments(start..end));
+            start = end;
+        }
+        assert_eq!(glued, full, "{}", kind.name());
+    }
+}
+
+#[test]
+fn par_fold_over_fgf_region_matches_serial_traverse() {
+    let mut coord = Coordinator::new(3);
+    coord.chunk = 100;
+    let level = 5u32;
+    let mapper = FgfMapper::new(level, UpperTriangle);
+    let (par_sum, _) = coord.par_fold(
+        &mapper,
+        || 0u64,
+        |s, i, j| *s += (i as u64) << 16 | j as u64,
+        |a, b| a + b,
+    );
+    let mut serial = 0u64;
+    mapper.traverse(|i, j, _h| serial += (i as u64) << 16 | j as u64);
+    assert_eq!(par_sum, serial);
+    let n = 1u64 << level;
+    assert_eq!(mapper.domain().cell_count(), Some(n * (n - 1) / 2));
+}
+
+#[test]
+fn hilbert_square_par_fold_equals_legacy_hilbert_fold() {
+    let coord = Coordinator::new(2);
+    let level = 4u32;
+    let sq = HilbertSquare::new(level);
+    let (a, _) = coord.par_fold(
+        &sq,
+        || 0u64,
+        |s, i, j| *s += (i as u64) * 77 + j as u64,
+        |x, y| x + y,
+    );
+    let (b, _) = coord.par_hilbert_fold(
+        level,
+        || 0u64,
+        |s, i, j| *s += (i as u64) * 77 + j as u64,
+        |x, y| x + y,
+    );
+    assert_eq!(a, b);
+}
+
+#[test]
+fn rect_mapper_order_and_coords_are_inverse() {
+    for kind in CurveKind::ALL {
+        let mapper = kind.rect_mapper(14, 6);
+        let span = mapper.domain().order_span().unwrap();
+        for c in 0..span {
+            let (i, j) = mapper.coords(c);
+            assert_eq!(mapper.order(i, j), c, "{} c={c}", kind.name());
+        }
+    }
+}
