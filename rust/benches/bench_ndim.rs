@@ -1,0 +1,155 @@
+//! d-dimensional engine bench (ISSUE 2): scalar vs batched Nd conversion
+//! across dimensions, and the native Nd Hilbert against the blanket-
+//! adapted 2-D automaton at d = 2. Emits JSON
+//! (`reports/bench_ndim.json`) for the perf trajectory.
+//!
+//! Expected shape: the run-resuming Nd batched inverse beats the scalar
+//! per-value descent on order-sorted workloads at every dimension (it
+//! re-derives only the digits below each carry), and the d = 2 native
+//! path is within a small factor of the specialized 2-D Mealy automaton
+//! it replicates bit-for-bit.
+
+use sfc_mine::curves::engine::CurveMapperNd;
+use sfc_mine::curves::hilbert::Hilbert;
+use sfc_mine::curves::ndim::HilbertNd;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::util::bench::{Bench, Measurement};
+use sfc_mine::util::table::Table;
+
+fn write_json(bench: &Bench, path: &str) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (idx, m) in bench.results().iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {}, \"mad_ns\": {}, \"elements\": {}}}",
+            m.name,
+            m.median.as_nanos(),
+            m.mad.as_nanos(),
+            m.elements.unwrap_or(0)
+        ));
+    }
+    s.push_str("\n]\n");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s)
+}
+
+fn per_elem(m: &Measurement) -> f64 {
+    m.median.as_nanos() as f64 / m.elements.unwrap_or(1) as f64
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n_conv: u64 = if fast { 1 << 13 } else { 1 << 18 };
+    let mut bench = Bench::new();
+
+    // --- Nd scalar vs batched inverse conversion, d = 2..6 -----------------
+    let mut conv = Table::new(vec![
+        "dims",
+        "level",
+        "scalar coords ns/val",
+        "batched coords ns/val",
+        "speedup",
+        "order ns/pt",
+    ]);
+    for dims in [2usize, 3, 4, 6] {
+        let level = (60 / dims as u32).min(10);
+        let mapper = HilbertNd::new(dims, level);
+        let span = mapper.order_span_nd().unwrap();
+        let orders: Vec<u64> = (0..n_conv.min(span)).collect();
+        let count = orders.len() as u64;
+        let mut p = vec![0u32; dims];
+        let m_scalar = bench.throughput(&format!("ndim/coords_scalar/d{dims}"), count, || {
+            let mut acc = 0u64;
+            for &c in &orders {
+                mapper.coords_nd(c, &mut p);
+                acc = acc.wrapping_add(p[0] as u64);
+            }
+            acc
+        });
+        let mut flat: Vec<u32> = Vec::with_capacity(orders.len() * dims);
+        let m_batched = bench.throughput(&format!("ndim/coords_batched/d{dims}"), count, || {
+            flat.clear();
+            mapper.coords_batch_nd(&orders, &mut flat);
+            flat.len()
+        });
+        flat.clear();
+        mapper.coords_batch_nd(&orders, &mut flat);
+        let mut hs: Vec<u64> = Vec::with_capacity(orders.len());
+        let m_fwd = bench.throughput(&format!("ndim/order_batched/d{dims}"), count, || {
+            hs.clear();
+            mapper.order_batch_nd(&flat, &mut hs);
+            hs.len()
+        });
+        conv.row(vec![
+            dims.to_string(),
+            level.to_string(),
+            format!("{:.2}", per_elem(&m_scalar)),
+            format!("{:.2}", per_elem(&m_batched)),
+            format!("{:.2}x", per_elem(&m_scalar) / per_elem(&m_batched)),
+            format!("{:.2}", per_elem(&m_fwd)),
+        ]);
+    }
+    println!("\n== ndim: Hilbert scalar vs batched conversion ({n_conv} values max) ==");
+    print!("{}", conv.render());
+
+    // --- Native d=2 automaton vs the specialized 2-D Mealy automaton -------
+    let level = 15u32;
+    let nd = HilbertNd::new(2, level);
+    let side = 1u64 << level;
+    let pairs: Vec<(u32, u32)> = (0..n_conv)
+        .map(|t| {
+            let v = t.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            ((v % side) as u32, ((v >> 32) % side) as u32)
+        })
+        .collect();
+    let m_nd = bench.throughput("ndim/order_d2_native", n_conv, || {
+        let mut acc = 0u64;
+        for &(i, j) in &pairs {
+            acc = acc.wrapping_add(nd.order_nd(&[i, j]));
+        }
+        acc
+    });
+    let m_2d = bench.throughput("ndim/order_d2_mealy", n_conv, || {
+        let mut acc = 0u64;
+        for &(i, j) in &pairs {
+            acc = acc.wrapping_add(Hilbert::order_at_level(i, j, level));
+        }
+        acc
+    });
+    println!(
+        "\n== ndim: d=2 forward conversion, native Nd {:.2} ns/pt vs 2-D Mealy {:.2} ns/pt ==",
+        per_elem(&m_nd),
+        per_elem(&m_2d)
+    );
+
+    // --- Nd enumeration throughput per curve kind, d = 3 -------------------
+    let mut enum_t = Table::new(vec!["curve", "cells", "ns/cell"]);
+    for kind in CurveKind::ALL {
+        let lvl = if kind == CurveKind::Peano { 3 } else { 5 };
+        let mapper = kind.nd_mapper(3, lvl);
+        let span = mapper.order_span_nd().unwrap();
+        let m = bench.throughput(&format!("ndim/enumerate_d3/{}", kind.name()), span, || {
+            let mut count = 0u64;
+            let mut seg = mapper.segments_nd(0..span);
+            while let Some(p) = seg.next_point() {
+                count += p[0] as u64 & 1;
+            }
+            count
+        });
+        enum_t.row(vec![
+            kind.name().to_string(),
+            span.to_string(),
+            format!("{:.2}", per_elem(&m)),
+        ]);
+    }
+    println!("\n== ndim: 3-d cube enumeration ==");
+    print!("{}", enum_t.render());
+
+    bench.write_csv("reports/bench_ndim.csv").unwrap();
+    write_json(&bench, "reports/bench_ndim.json").unwrap();
+    println!("\nreports: reports/bench_ndim.{{csv,json}}");
+}

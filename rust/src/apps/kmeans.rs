@@ -14,9 +14,15 @@
 //! iterations with any assigner; the [`crate::coordinator`] parallelises
 //! the Hilbert variant across workers and [`crate::runtime`] can offload
 //! the distance kernel to an AOT-compiled Pallas kernel via PJRT.
+//!
+//! [`hilbert_point_order`] pre-sorts the point set along its
+//! **d-dimensional** Hilbert rank, so the coordinator's contiguous point
+//! shards become spatially compact blobs in the full space (true data
+//! locality — the 2-D projection used to cluster only dims 0–1).
 
 use super::Matrix;
 use crate::curves::engine;
+use crate::curves::ndim::hilbert_argsort;
 use crate::curves::CurveKind;
 use crate::util::rng::Rng;
 
@@ -230,6 +236,55 @@ pub fn lloyd(km: &mut KMeans, assigner: Assigner, max_iter: usize, tol: f64) -> 
     }
 }
 
+/// Permutation ordering the points along their **d-dimensional** Hilbert
+/// rank.
+///
+/// Each of the first `min(d, 16)` dimensions is quantized to `2^level`
+/// bins over its own min–max range (`level` chosen so `d·level ≤ 63`, at
+/// most 10 bits per axis) and points sort by the d-dim Hilbert value of
+/// their bin vector through the engine's Nd batched conversion
+/// ([`hilbert_argsort`]). Feeding contiguous slices of the reordered
+/// point set to workers ([`crate::coordinator::par_kmeans_step`]'s
+/// shards) gives
+/// each worker a spatially compact blob in the *full* space.
+pub fn hilbert_point_order(points: &Matrix) -> Vec<u32> {
+    let n = points.rows;
+    if n == 0 {
+        return Vec::new();
+    }
+    let d = points.cols.clamp(1, 16);
+    let level = (63 / d as u32).clamp(1, 10);
+    let bins = 1u32 << level;
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for p in 0..n {
+        for a in 0..d {
+            let v = points.at(p, a);
+            lo[a] = lo[a].min(v);
+            hi[a] = hi[a].max(v);
+        }
+    }
+    let mut flat = Vec::with_capacity(n * d);
+    for p in 0..n {
+        for a in 0..d {
+            let range = hi[a] - lo[a];
+            let q = if range > 0.0 {
+                (((points.at(p, a) - lo[a]) / range) * (bins - 1) as f32).round() as u32
+            } else {
+                0
+            };
+            flat.push(q.min(bins - 1));
+        }
+    }
+    hilbert_argsort(&flat, d, level)
+}
+
+/// Reorder matrix rows by `order` (a permutation of `0..m.rows`).
+pub fn permute_rows(m: &Matrix, order: &[u32]) -> Matrix {
+    assert_eq!(order.len(), m.rows, "order must be a row permutation");
+    Matrix::from_fn(m.rows, m.cols, |i, j| m.at(order[i] as usize, j))
+}
+
 /// Sample `k` distinct points as initial centroids (seeded).
 pub fn init_centroids(points: &Matrix, k: usize, seed: u64) -> Matrix {
     assert!(k <= points.rows, "k exceeds point count");
@@ -340,5 +395,59 @@ mod tests {
     fn inertia_is_sum() {
         let a = Assignment { labels: vec![0, 0], dist2: vec![1.5, 2.5] };
         assert!((a.inertia() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hilbert_point_order_is_permutation() {
+        let (points, _) = make_blobs(257, 4, 5, 0.4, 17);
+        let order = hilbert_point_order(&points);
+        assert_eq!(order.len(), 257);
+        let mut seen = vec![false; 257];
+        for &p in &order {
+            assert!(!seen[p as usize], "duplicate {p}");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert!(hilbert_point_order(&Matrix::zeros(0, 3)).is_empty());
+    }
+
+    #[test]
+    fn hilbert_reorder_preserves_assignment_up_to_permutation() {
+        let (points, _) = make_blobs(300, 5, 3, 0.5, 9);
+        let centroids = init_centroids(&points, 5, 3);
+        let order = hilbert_point_order(&points);
+        let reordered = permute_rows(&points, &order);
+        let a1 = assign_naive(&KMeans { points: points.clone(), centroids: centroids.clone() });
+        let a2 = assign_naive(&KMeans { points: reordered, centroids });
+        for (pos, &src) in order.iter().enumerate() {
+            assert_eq!(a2.labels[pos], a1.labels[src as usize], "pos={pos}");
+            assert_eq!(a2.dist2[pos], a1.dist2[src as usize], "pos={pos}");
+        }
+    }
+
+    #[test]
+    fn hilbert_order_shrinks_consecutive_distances_on_blobs() {
+        // make_blobs interleaves clusters (point p belongs to cluster
+        // p % k), so the input order ping-pongs across space; the d-dim
+        // Hilbert sort must leave consecutive points far closer on
+        // average — that distance is exactly what a worker's contiguous
+        // shard sees.
+        let (points, _) = make_blobs(600, 6, 4, 0.5, 23);
+        let mean_step = |m: &Matrix| -> f64 {
+            let mut acc = 0.0f64;
+            for p in 1..m.rows {
+                let d2: f32 = (0..m.cols)
+                    .map(|a| (m.at(p, a) - m.at(p - 1, a)).powi(2))
+                    .sum();
+                acc += (d2 as f64).sqrt();
+            }
+            acc / (m.rows - 1) as f64
+        };
+        let before = mean_step(&points);
+        let after = mean_step(&permute_rows(&points, &hilbert_point_order(&points)));
+        assert!(
+            after * 2.0 < before,
+            "hilbert order should at least halve the mean step: {after} vs {before}"
+        );
     }
 }

@@ -11,7 +11,11 @@
 //! rectangle, a filtered cover, or an FGF region — so every curve and
 //! every `n×m` shape parallelises through one code path.
 //! [`Coordinator::par_hilbert_fold`] is the Hilbert-square convenience
-//! wrapper.
+//! wrapper, and [`Coordinator::par_fold_nd`] is the same scheduler over
+//! **d-dimensional** domains: any finite [`CurveMapperNd`] (a native
+//! hypercube curve or a blanket-adapted 2-D mapper) is cut into the same
+//! contiguous [`ChunkQueue`] segments, with the worker body receiving
+//! `&[u32]` points.
 //!
 //! * [`scheduler`] — curve-segment scheduling (static ranges + dynamic
 //!   chunk queue).
@@ -33,7 +37,7 @@ pub mod scheduler;
 
 use crate::apps::kmeans::{Assignment, KMeans};
 use crate::apps::Matrix;
-use crate::curves::engine::{self, CurveMapper, HilbertSquare};
+use crate::curves::engine::{self, CurveMapper, CurveMapperNd, HilbertSquare};
 use crate::curves::CurveKind;
 use metrics::WorkerMetrics;
 use scheduler::ChunkQueue;
@@ -131,6 +135,69 @@ impl Coordinator {
         (merged.expect("at least one worker"), metrics)
     }
 
+    /// Run `body` over every point of a finite-domain [`CurveMapperNd`]
+    /// in parallel — [`Coordinator::par_fold`] for **d-dimensional**
+    /// domains, scheduled through the same [`ChunkQueue`] of contiguous
+    /// curve segments. The body receives each point as a `&[u32]` slice
+    /// of `mapper.dims()` coordinates (lent from a per-worker buffer, so
+    /// the traversal does not allocate per cell).
+    ///
+    /// # Panics
+    /// Panics if the mapper's domain is unbounded.
+    pub fn par_fold_nd<S, I, B, M>(
+        &self,
+        mapper: &dyn CurveMapperNd,
+        init: I,
+        body: B,
+        mut merge: M,
+    ) -> (S, Vec<WorkerMetrics>)
+    where
+        S: Send,
+        I: Fn() -> S + Sync,
+        B: Fn(&mut S, &[u32]) + Sync,
+        M: FnMut(S, S) -> S,
+    {
+        let total = mapper
+            .order_span_nd()
+            .expect("par_fold_nd requires a finite-domain mapper");
+        let queue = ChunkQueue::new(total, self.chunk);
+        let mut results: Vec<(S, WorkerMetrics)> = Vec::with_capacity(self.threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.threads);
+            for worker_id in 0..self.threads {
+                let queue = &queue;
+                let init = &init;
+                let body = &body;
+                handles.push(scope.spawn(move || {
+                    let mut state = init();
+                    let mut m = WorkerMetrics::new(worker_id);
+                    while let Some((start, end)) = queue.next_chunk() {
+                        let t0 = std::time::Instant::now();
+                        let mut seg = mapper.segments_nd(start..end);
+                        while let Some(p) = seg.next_point() {
+                            body(&mut state, p);
+                        }
+                        m.record_chunk(end - start, t0.elapsed());
+                    }
+                    (state, m)
+                }));
+            }
+            for h in handles {
+                results.push(h.join().expect("worker panicked"));
+            }
+        });
+        let mut metrics = Vec::with_capacity(self.threads);
+        let mut merged: Option<S> = None;
+        for (state, m) in results {
+            metrics.push(m);
+            merged = Some(match merged {
+                None => state,
+                Some(acc) => merge(acc, state),
+            });
+        }
+        (merged.expect("at least one worker"), metrics)
+    }
+
     /// [`Coordinator::par_fold`] over the `2^level × 2^level` Hilbert
     /// grid (zero-allocation segments via the Figure-5 range iterator).
     pub fn par_hilbert_fold<S, I, B, M>(
@@ -179,6 +246,11 @@ impl Coordinator {
 /// One parallel Lloyd step: assignment sharded over contiguous point
 /// ranges (each worker traverses its `(point-block × centroid-block)` grid
 /// in Hilbert order), plus per-worker partial sums for the update phase.
+///
+/// Shards are contiguous *row* ranges, so pre-sorting the point set with
+/// [`crate::apps::kmeans::hilbert_point_order`] (the d-dimensional
+/// Hilbert rank) turns every shard into a spatially compact blob of the
+/// full space — the CLI's `kmeans --shard hilbert` does exactly that.
 ///
 /// Returns `(assignment, new_centroids)`.
 pub fn par_kmeans_step(
@@ -334,6 +406,49 @@ mod tests {
             coord.par_fold(&mapper, || 0u64, |a, _i, _j| *a += 1, |a, b| a + b);
         let n = 1u64 << level;
         assert_eq!(count, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn par_fold_nd_covers_hypercube_once() {
+        use crate::curves::ndim::HilbertNd;
+        let coord = Coordinator { threads: 4, chunk: 32 };
+        let mapper = HilbertNd::new(3, 3); // 8×8×8
+        let (sum, metrics) = coord.par_fold_nd(
+            &mapper,
+            || (0u64, 0u64),
+            |acc, p| {
+                acc.0 += 1;
+                acc.1 += p.iter().enumerate().map(|(a, &c)| (a as u64 + 1) * c as u64).sum::<u64>();
+            },
+            |a, b| (a.0 + b.0, a.1 + b.1),
+        );
+        assert_eq!(sum.0, 512);
+        let mut serial = (0u64, 0u64);
+        engine::for_each_nd(&mapper, |p| {
+            serial.0 += 1;
+            serial.1 += p.iter().enumerate().map(|(a, &c)| (a as u64 + 1) * c as u64).sum::<u64>();
+        });
+        assert_eq!(sum, serial);
+        assert_eq!(metrics.len(), 4);
+    }
+
+    #[test]
+    fn par_fold_nd_accepts_blanket_adapted_2d_mappers() {
+        let coord = Coordinator { threads: 3, chunk: 17 };
+        let sq = HilbertSquare::new(4);
+        let (nd_sum, _) = coord.par_fold_nd(
+            &sq,
+            || 0u64,
+            |a, p| *a += (p[0] as u64) * 1009 + p[1] as u64,
+            |a, b| a + b,
+        );
+        let (sum_2d, _) = coord.par_fold(
+            &sq,
+            || 0u64,
+            |a, i, j| *a += (i as u64) * 1009 + j as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(nd_sum, sum_2d);
     }
 
     #[test]

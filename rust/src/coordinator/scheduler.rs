@@ -26,16 +26,31 @@ impl ChunkQueue {
     }
 
     /// Claim the next chunk; `None` once the range is exhausted.
+    ///
+    /// Compare-exchange rather than an unconditional `fetch_add`: the
+    /// cursor is clamped at `total`, so a long-lived queue polled after
+    /// exhaustion can never advance the atomic further (an unconditional
+    /// add would keep growing it and could in principle wrap `u64` and
+    /// restart the range), and [`ChunkQueue::remaining`] stays exact.
     #[inline]
     pub fn next_chunk(&self) -> Option<(u64, u64)> {
-        let start = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
-        if start >= self.total {
-            return None;
+        let mut start = self.cursor.load(Ordering::Relaxed);
+        loop {
+            if start >= self.total {
+                return None;
+            }
+            let end = (start + self.chunk).min(self.total);
+            match self
+                .cursor
+                .compare_exchange_weak(start, end, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return Some((start, end)),
+                Err(seen) => start = seen,
+            }
         }
-        Some((start, (start + self.chunk).min(self.total)))
     }
 
-    /// Remaining order values (approximate under concurrency).
+    /// Remaining order values (exact: the cursor never exceeds `total`).
     pub fn remaining(&self) -> u64 {
         self.total.saturating_sub(self.cursor.load(Ordering::Relaxed))
     }
@@ -109,6 +124,29 @@ mod tests {
         assert_eq!(q.remaining(), 20);
         q.next_chunk();
         assert_eq!(q.remaining(), 10);
+    }
+
+    #[test]
+    fn exhausted_queue_cursor_stays_clamped() {
+        // Polling an exhausted queue must not advance the cursor (the old
+        // unconditional fetch_add kept growing it, so a long-lived queue
+        // could in principle wrap u64 and hand out the range again).
+        let q = ChunkQueue::new(25, 10);
+        while q.next_chunk().is_some() {}
+        for _ in 0..1000 {
+            assert_eq!(q.next_chunk(), None);
+            assert_eq!(q.remaining(), 0);
+        }
+        assert_eq!(q.cursor.load(std::sync::atomic::Ordering::Relaxed), 25);
+    }
+
+    #[test]
+    fn final_chunk_is_clamped_to_total() {
+        let q = ChunkQueue::new(25, 10);
+        assert_eq!(q.next_chunk(), Some((0, 10)));
+        assert_eq!(q.next_chunk(), Some((10, 20)));
+        assert_eq!(q.next_chunk(), Some((20, 25)));
+        assert_eq!(q.next_chunk(), None);
     }
 
     #[test]

@@ -34,6 +34,20 @@
 //! so adding a curve (or a sharded/remote mapper) is a single-layer
 //! change.
 //!
+//! ## The d-dimensional layer
+//!
+//! The paper defines curves over "two **or higher** dimensional" spaces;
+//! [`CurveMapperNd`] is the d-dimensional face of the engine:
+//! `order_nd(&[u32]) ⇄ coords_nd(u64, &mut [u32])` over a
+//! [`DomainNd::HyperRect`], with batched variants and streaming
+//! [`SegmentsNd`] cursors. An adapter makes **every** 2-D
+//! [`CurveMapper`] a `CurveMapperNd` with `dims() == 2`, so d-aware
+//! consumers (the d-dim grid index, `Coordinator::par_fold_nd`, the Nd
+//! metrics, the CLI's `--dims`) handle planes, rectangles and hypercubes
+//! through one interface. Native d-dim curves (d-way-interleaved Z-order
+//! and Gray-code, the Butz/Lawder d-dim Hilbert automaton, the d-dim
+//! Peano serpentine) live in [`crate::curves::ndim`].
+//!
 //! ```
 //! use sfc_mine::curves::engine::CurveMapper;
 //! use sfc_mine::curves::CurveKind;
@@ -285,6 +299,349 @@ pub fn collect_rect<C: SpaceFillingCurve>(rows: u32, cols: u32) -> Vec<(u32, u32
     });
     out
 }
+
+// ---------------------------------------------------------------------------
+// The d-dimensional layer
+// ---------------------------------------------------------------------------
+
+/// The domain a [`CurveMapperNd`] is bijective on — the d-dimensional
+/// counterpart of [`Domain`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DomainNd {
+    /// The unbounded product space `(u32)^d` (blanket-adapted plane
+    /// mappers); no finite order span.
+    Space {
+        /// Number of dimensions.
+        dims: usize,
+    },
+    /// An axis-aligned box `[0, shape[0]) × … × [0, shape[d−1])` with the
+    /// *contiguous* order-value range `0 .. Π shape[a]`.
+    HyperRect {
+        /// Per-axis extents.
+        shape: Vec<u32>,
+    },
+    /// A sparse cell set inside the `2^level`-sided hypercube; order
+    /// values span `0 .. 2^(d·level)` non-contiguously.
+    SparseCube {
+        /// Number of dimensions.
+        dims: usize,
+        /// Cube level (side `2^level`).
+        level: u32,
+        /// Number of cells actually in the domain.
+        cells: u64,
+    },
+}
+
+impl DomainNd {
+    /// Number of dimensions `d`.
+    pub fn dims(&self) -> usize {
+        match self {
+            DomainNd::Space { dims } => *dims,
+            DomainNd::HyperRect { shape } => shape.len(),
+            DomainNd::SparseCube { dims, .. } => *dims,
+        }
+    }
+
+    /// The contiguous order-value span `[0, span)` that
+    /// [`CurveMapperNd::segments_nd`] ranges over, or `None` for the
+    /// unbounded space.
+    pub fn order_span(&self) -> Option<u64> {
+        match self {
+            DomainNd::Space { .. } => None,
+            DomainNd::HyperRect { shape } => {
+                let mut span = 1u64;
+                for &s in shape {
+                    span = span
+                        .checked_mul(s as u64)
+                        .expect("hyperrect order span overflows u64");
+                }
+                Some(span)
+            }
+            DomainNd::SparseCube { dims, level, .. } => Some(
+                1u64.checked_shl(*dims as u32 * level)
+                    .expect("sparse cube order span overflows u64"),
+            ),
+        }
+    }
+
+    /// Number of cells in the domain (`None` for the unbounded space).
+    pub fn cell_count(&self) -> Option<u64> {
+        match self {
+            DomainNd::Space { .. } => None,
+            DomainNd::HyperRect { .. } => self.order_span(),
+            DomainNd::SparseCube { cells, .. } => Some(*cells),
+        }
+    }
+
+    /// Is the point inside the domain's bounding box?
+    pub fn contains(&self, p: &[u32]) -> bool {
+        if p.len() != self.dims() {
+            return false;
+        }
+        match self {
+            DomainNd::Space { .. } => true,
+            DomainNd::HyperRect { shape } => p.iter().zip(shape).all(|(&c, &s)| c < s),
+            DomainNd::SparseCube { level, .. } => {
+                p.iter().all(|&c| (c as u64) < (1u64 << level))
+            }
+        }
+    }
+}
+
+/// Streaming cursor over the points of one contiguous order-value range of
+/// a d-dimensional mapper, in curve order (returned by
+/// [`CurveMapperNd::segments_nd`]).
+///
+/// Not a std `Iterator`: [`SegmentsNd::next_point`] *lends* a `&[u32]`
+/// view of an internal buffer, so a traversal costs one point buffer
+/// total instead of one `Vec` per cell.
+pub struct SegmentsNd<'a>(SegNdInner<'a>);
+
+enum SegNdInner<'a> {
+    /// Batched decode of a contiguous order range through
+    /// [`CurveMapperNd::coords_batch_nd`], [`BATCH`] values at a time.
+    Batched {
+        mapper: &'a dyn CurveMapperNd,
+        dims: usize,
+        next: u64,
+        end: u64,
+        buf: Vec<u32>,
+        /// Next point offset in `buf`, in units of `dims`.
+        pos: usize,
+    },
+    /// Adapter over a 2-D [`Segments`] iterator.
+    Pairs { it: Segments<'a>, buf: [u32; 2] },
+}
+
+impl<'a> SegmentsNd<'a> {
+    /// Cursor that pulls [`BATCH`]-sized consecutive chunks through the
+    /// mapper's batched inverse conversion. The caller clamps `range` to
+    /// the domain.
+    pub fn batched(mapper: &'a dyn CurveMapperNd, range: Range<u64>) -> Self {
+        let dims = mapper.dims();
+        SegmentsNd(SegNdInner::Batched {
+            mapper,
+            dims,
+            next: range.start,
+            end: range.end.max(range.start),
+            buf: Vec::new(),
+            pos: 0,
+        })
+    }
+
+    /// Cursor over a 2-D segment iterator (the blanket adapter's path).
+    pub fn pairs(it: Segments<'a>) -> Self {
+        SegmentsNd(SegNdInner::Pairs { it, buf: [0; 2] })
+    }
+
+    /// Next point in curve order, or `None` once the range is exhausted.
+    pub fn next_point(&mut self) -> Option<&[u32]> {
+        match &mut self.0 {
+            SegNdInner::Batched { mapper, dims, next, end, buf, pos } => {
+                if *pos * *dims >= buf.len() {
+                    if *next >= *end {
+                        return None;
+                    }
+                    let take = (*end - *next).min(BATCH as u64);
+                    let orders: Vec<u64> = (*next..*next + take).collect();
+                    buf.clear();
+                    mapper.coords_batch_nd(&orders, buf);
+                    *next += take;
+                    *pos = 0;
+                }
+                let s = *pos * *dims;
+                *pos += 1;
+                Some(&buf[s..s + *dims])
+            }
+            SegNdInner::Pairs { it, buf } => {
+                let (i, j) = it.next()?;
+                buf[0] = i;
+                buf[1] = j;
+                Some(&buf[..])
+            }
+        }
+    }
+
+    /// Drain the cursor, invoking `body` on every point.
+    pub fn for_each(mut self, mut body: impl FnMut(&[u32])) {
+        while let Some(p) = self.next_point() {
+            body(p);
+        }
+    }
+}
+
+/// An **object-safe** bijective order mapping `C(p₀,…,p_{d−1}) ⇄ c` over
+/// a d-dimensional grid — the paper's §2 abstraction generalized from
+/// "two" to "two or higher dimensional" spaces (Haverkort
+/// arXiv:1211.0175; Holzmüller arXiv:1710.06384).
+///
+/// Every 2-D [`CurveMapper`] in the engine implements this trait with
+/// `dims() == 2` (the adapter macro below covers each mapper type and
+/// `dyn CurveMapper` itself), so d-aware consumers take
+/// `&dyn CurveMapperNd` and work with planes, rectangles and hypercubes
+/// alike. Native d-dim curves live in [`crate::curves::ndim`]. Method
+/// names carry the `_nd` suffix (plus [`CurveMapperNd::dims`]) so the
+/// two traits never collide on types implementing both.
+pub trait CurveMapperNd: Send + Sync {
+    /// Curve name for labels and reports.
+    fn name_nd(&self) -> &'static str;
+
+    /// Number of dimensions `d`.
+    fn dims(&self) -> usize;
+
+    /// The domain this mapper is bijective on.
+    fn domain_nd(&self) -> DomainNd;
+
+    /// The contiguous order-value span `[0, span)` segments range over
+    /// (`None` for unbounded domains). Must stay cheap: schedulers call
+    /// it on the hot path.
+    fn order_span_nd(&self) -> Option<u64> {
+        self.domain_nd().order_span()
+    }
+
+    /// Order value of a point (`p.len() == dims()`).
+    fn order_nd(&self, p: &[u32]) -> u64;
+
+    /// Point of an order value, written into `out`
+    /// (`out.len() == dims()`).
+    fn coords_nd(&self, c: u64, out: &mut [u32]);
+
+    /// Batched forward conversion over a flattened point buffer
+    /// (`points.len()` a multiple of `dims()`, `dims()` coordinates per
+    /// point); appends one order value per point.
+    fn order_batch_nd(&self, points: &[u32], out: &mut Vec<u64>) {
+        let d = self.dims();
+        debug_assert_eq!(points.len() % d, 0);
+        out.reserve(points.len() / d);
+        for p in points.chunks_exact(d) {
+            out.push(self.order_nd(p));
+        }
+    }
+
+    /// Batched inverse conversion; appends `dims()` coordinates per order
+    /// value to the flattened `out`. Native implementations detect
+    /// consecutive runs (via [`split_consecutive_runs`]) and resume the
+    /// automaton instead of re-descending per value.
+    fn coords_batch_nd(&self, orders: &[u64], out: &mut Vec<u32>) {
+        let d = self.dims();
+        let start = out.len();
+        out.resize(start + orders.len() * d, 0);
+        for (idx, &c) in orders.iter().enumerate() {
+            let s = start + idx * d;
+            self.coords_nd(c, &mut out[s..s + d]);
+        }
+    }
+
+    /// Stream the points whose order values fall in `range` (clamped to
+    /// the domain), in curve order — the d-dim curve segment the
+    /// coordinator schedules across workers.
+    fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_>;
+}
+
+/// Run `body` over every point of the mapper's (finite) domain in curve
+/// order.
+///
+/// # Panics
+/// Panics if the mapper's domain is unbounded.
+pub fn for_each_nd(mapper: &dyn CurveMapperNd, body: impl FnMut(&[u32])) {
+    let span = mapper
+        .order_span_nd()
+        .expect("for_each_nd requires a finite-domain mapper");
+    mapper.segments_nd(0..span).for_each(body);
+}
+
+/// Materialise the full traversal path of a finite-domain d-dim mapper as
+/// a flattened coordinate buffer (`dims()` entries per point) — the Nd
+/// counterpart of [`crate::curves::CurveKind::enumerate`], consumed by
+/// the metrics layer and the CLI locality table.
+pub fn collect_nd(mapper: &dyn CurveMapperNd) -> Vec<u32> {
+    let mut out = Vec::new();
+    for_each_nd(mapper, |p| out.extend_from_slice(p));
+    out
+}
+
+/// Implements [`CurveMapperNd`] for a 2-D [`CurveMapper`] type by
+/// delegation (`dims() == 2`), routing the batched paths through the 2-D
+/// batched conversions (so e.g. the Hilbert Figure-5 run stepping stays
+/// active).
+///
+/// A macro applied to every mapper type rather than a blanket
+/// `impl<M: CurveMapper> CurveMapperNd for M`: trait coherence performs
+/// no negative reasoning, so a blanket impl would conflict with the
+/// native d-dim implementations in [`crate::curves::ndim`] even though
+/// those types never implement `CurveMapper`.
+macro_rules! adapt_curve_mapper_2d {
+    ($({$($gen:tt)*})? $ty:ty) => {
+        impl $(<$($gen)*>)? CurveMapperNd for $ty {
+            fn name_nd(&self) -> &'static str {
+                CurveMapper::name(self)
+            }
+
+            fn dims(&self) -> usize {
+                2
+            }
+
+            fn domain_nd(&self) -> DomainNd {
+                match CurveMapper::domain(self) {
+                    Domain::Plane => DomainNd::Space { dims: 2 },
+                    Domain::Rect { rows, cols } => {
+                        DomainNd::HyperRect { shape: vec![rows, cols] }
+                    }
+                    Domain::Sparse { level, cells } => {
+                        DomainNd::SparseCube { dims: 2, level, cells }
+                    }
+                }
+            }
+
+            fn order_span_nd(&self) -> Option<u64> {
+                CurveMapper::order_span(self)
+            }
+
+            fn order_nd(&self, p: &[u32]) -> u64 {
+                debug_assert_eq!(p.len(), 2);
+                CurveMapper::order(self, p[0], p[1])
+            }
+
+            fn coords_nd(&self, c: u64, out: &mut [u32]) {
+                debug_assert_eq!(out.len(), 2);
+                let (i, j) = CurveMapper::coords(self, c);
+                out[0] = i;
+                out[1] = j;
+            }
+
+            fn order_batch_nd(&self, points: &[u32], out: &mut Vec<u64>) {
+                debug_assert_eq!(points.len() % 2, 0);
+                let pairs: Vec<(u32, u32)> =
+                    points.chunks_exact(2).map(|p| (p[0], p[1])).collect();
+                CurveMapper::order_batch(self, &pairs, out);
+            }
+
+            fn coords_batch_nd(&self, orders: &[u64], out: &mut Vec<u32>) {
+                let mut pairs = Vec::with_capacity(orders.len());
+                CurveMapper::coords_batch(self, orders, &mut pairs);
+                out.reserve(pairs.len() * 2);
+                for (i, j) in pairs {
+                    out.push(i);
+                    out.push(j);
+                }
+            }
+
+            fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
+                SegmentsNd::pairs(CurveMapper::segments(self, range))
+            }
+        }
+    };
+}
+
+// Every 2-D mapper in the engine *is* a `CurveMapperNd` with
+// `dims() == 2` — including `dyn CurveMapper` itself, so plane mappers
+// handed around as trait objects keep the Nd face too.
+adapt_curve_mapper_2d!({C: SpaceFillingCurve + Send + Sync + 'static} StaticCurve<C>);
+adapt_curve_mapper_2d!(HilbertSquare);
+adapt_curve_mapper_2d!(RectMapper);
+adapt_curve_mapper_2d!(CanonicRect);
+adapt_curve_mapper_2d!({R: Region + Send + Sync} FgfMapper<R>);
+adapt_curve_mapper_2d!(dyn CurveMapper);
 
 // ---------------------------------------------------------------------------
 // StaticCurve: the blanket adapter
@@ -802,6 +1159,41 @@ mod tests {
         assert_eq!(s.cell_count(), Some(10));
         assert!(s.contains(7, 7));
         assert!(!s.contains(8, 0));
+    }
+
+    #[test]
+    fn domain_nd_accounting() {
+        assert_eq!(DomainNd::Space { dims: 3 }.order_span(), None);
+        assert_eq!(DomainNd::Space { dims: 3 }.dims(), 3);
+        let r = DomainNd::HyperRect { shape: vec![3, 5, 2] };
+        assert_eq!(r.dims(), 3);
+        assert_eq!(r.order_span(), Some(30));
+        assert_eq!(r.cell_count(), Some(30));
+        assert!(r.contains(&[2, 4, 1]));
+        assert!(!r.contains(&[3, 0, 0]));
+        assert!(!r.contains(&[0, 0]));
+        let s = DomainNd::SparseCube { dims: 3, level: 2, cells: 11 };
+        assert_eq!(s.order_span(), Some(64));
+        assert_eq!(s.cell_count(), Some(11));
+        assert!(s.contains(&[3, 3, 3]));
+        assert!(!s.contains(&[4, 0, 0]));
+    }
+
+    #[test]
+    fn blanket_adapter_wraps_sparse_and_plane_domains() {
+        let m = CurveKind::Hilbert.mapper();
+        assert_eq!(CurveMapperNd::dims(m), 2);
+        assert_eq!(m.domain_nd(), DomainNd::Space { dims: 2 });
+        let fgf = FgfMapper::new(4, UpperTriangle);
+        assert_eq!(
+            fgf.domain_nd(),
+            DomainNd::SparseCube { dims: 2, level: 4, cells: 120 }
+        );
+        assert_eq!(fgf.order_span_nd(), Some(256));
+        let mut nd = Vec::new();
+        fgf.segments_nd(0..256).for_each(|p| nd.push((p[0], p[1])));
+        let via_2d: Vec<(u32, u32)> = fgf.segments(0..256).collect();
+        assert_eq!(nd, via_2d);
     }
 
     #[test]

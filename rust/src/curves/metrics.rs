@@ -92,6 +92,58 @@ pub fn locality_score(path: &[(u32, u32)], window: usize) -> f64 {
     (mean_window_working_set(&hi, window) + mean_window_working_set(&hj, window)) / 2.0
 }
 
+/// Step statistics of a **d-dimensional** traversal path, given as the
+/// flattened coordinate buffer produced by
+/// [`engine::collect_nd`](crate::curves::engine::collect_nd) (`dims`
+/// entries per point). Manhattan step length over all axes; 1.0 average
+/// for a perfect space-filling curve in any dimension.
+pub fn step_stats_nd(path: &[u32], dims: usize) -> StepStats {
+    assert!(dims >= 1, "dims must be ≥ 1");
+    assert_eq!(path.len() % dims, 0, "path length must be a multiple of dims");
+    let points = path.len() / dims;
+    let mut histogram = HashMap::new();
+    let mut total = 0u64;
+    let mut max = 0u64;
+    for t in 1..points {
+        let prev = &path[(t - 1) * dims..t * dims];
+        let cur = &path[t * dims..(t + 1) * dims];
+        let d: u64 = prev
+            .iter()
+            .zip(cur)
+            .map(|(&x, &y)| (y as i64 - x as i64).unsigned_abs())
+            .sum();
+        *histogram.entry(d).or_insert(0) += 1;
+        total += d;
+        max = max.max(d);
+    }
+    let steps = points.saturating_sub(1) as u64;
+    StepStats {
+        avg: if steps == 0 { 0.0 } else { total as f64 / steps as f64 },
+        max,
+        histogram,
+        steps,
+    }
+}
+
+/// Per-axis coordinate history of a flattened d-dimensional path — the
+/// Nd counterpart of [`histories`].
+pub fn history_axis(path: &[u32], dims: usize, axis: usize) -> Vec<u32> {
+    assert!(axis < dims);
+    path.iter().skip(axis).step_by(dims).copied().collect()
+}
+
+/// Average over all axes of [`mean_window_working_set`] — the
+/// single-number locality score for d-dimensional traversals.
+pub fn locality_score_nd(path: &[u32], dims: usize, window: usize) -> f64 {
+    assert!(dims >= 1, "dims must be ≥ 1");
+    assert_eq!(path.len() % dims, 0, "path length must be a multiple of dims");
+    let mut acc = 0.0;
+    for axis in 0..dims {
+        acc += mean_window_working_set(&history_axis(path, dims, axis), window);
+    }
+    acc / dims as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +226,40 @@ mod tests {
         let (hi, _) = histories(&path);
         // Falls back to global distinct count.
         assert_eq!(mean_window_working_set(&hi, 10), 1.0);
+    }
+
+    #[test]
+    fn step_stats_nd_matches_2d_on_pairs() {
+        let pairs = CurveKind::ZOrder.enumerate(8);
+        let flat: Vec<u32> = pairs.iter().flat_map(|&(i, j)| [i, j]).collect();
+        let s2 = step_stats(&pairs);
+        let sn = step_stats_nd(&flat, 2);
+        assert_eq!(s2.avg, sn.avg);
+        assert_eq!(s2.max, sn.max);
+        assert_eq!(s2.steps, sn.steps);
+        assert_eq!(s2.histogram, sn.histogram);
+    }
+
+    #[test]
+    fn hilbert_nd_average_step_is_unit() {
+        use crate::curves::engine::collect_nd;
+        use crate::curves::ndim::HilbertNd;
+        for dims in [2usize, 3, 4] {
+            let m = HilbertNd::new(dims, 3);
+            let path = collect_nd(&m);
+            let s = step_stats_nd(&path, dims);
+            assert_eq!(s.avg, 1.0, "d={dims}");
+            assert_eq!(s.max, 1, "d={dims}");
+        }
+    }
+
+    #[test]
+    fn locality_score_nd_orders_curves_in_3d() {
+        use crate::curves::engine::collect_nd;
+        let h = CurveKind::Hilbert.nd_mapper(3, 3);
+        let c = CurveKind::Canonic.nd_mapper(3, 3);
+        let hp = collect_nd(h.as_ref());
+        let cp = collect_nd(c.as_ref());
+        assert!(locality_score_nd(&hp, 3, 64) < locality_score_nd(&cp, 3, 64));
     }
 }

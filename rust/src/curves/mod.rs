@@ -29,6 +29,13 @@
 //! let h = CurveKind::Hilbert.rect_mapper(6, 10);
 //! let span = h.domain().order_span().unwrap();
 //! assert_eq!(h.segments(0..span).count(), 60);
+//!
+//! // d-dimensional mapper: true d-dim curves over hypercubes.
+//! use sfc_mine::curves::engine::CurveMapperNd;
+//! let h3 = CurveKind::Hilbert.nd_mapper(3, 4); // 16×16×16
+//! let mut p = [0u32; 3];
+//! h3.coords_nd(h3.order_nd(&[1, 2, 3]), &mut p);
+//! assert_eq!(p, [1, 2, 3]);
 //! ```
 //!
 //! ## Curve implementations
@@ -45,6 +52,17 @@
 //! | Hilbert, arbitrary n×m | [`fur`] | overlay grid (§6.1) | backs [`engine::RectMapper::fur`] |
 //! | Hilbert, general regions | [`fgf`] | jump-over (§6.2) | [`engine::FgfMapper`] |
 //! | nano-programs | [`nano`] | pre-computed 4×4 tiles in u64 (§6.3) | (FUR internals) |
+//! | canonic, d-dim | [`ndim`] | mixed-radix closed form | [`ndim::CanonicNd`] |
+//! | Z-order ℤ_d | [`ndim`] | d-way bit interleaving | [`ndim::ZOrderNd`] |
+//! | Gray-code 𝒢_d | [`ndim`] | Gray rank of interleaved word | [`ndim::GrayNd`] |
+//! | Hilbert ℋ_d | [`ndim`] | Butz/Lawder Gray-code automaton | [`ndim::HilbertNd`] |
+//! | Peano 𝒫_d | [`ndim`] | d-dim 3-adic serpentine | [`ndim::PeanoNd`] |
+//!
+//! The d-dimensional mappers speak [`engine::CurveMapperNd`]
+//! (`order_nd`/`coords_nd` over coordinate slices); an adapter makes
+//! every 2-D [`engine::CurveMapper`] a `CurveMapperNd` with
+//! `dims() == 2`, and the d = 2 specializations of the native Nd curves
+//! agree bit-for-bit with the 2-D implementations above.
 
 pub mod canonic;
 pub mod engine;
@@ -55,6 +73,7 @@ pub mod hilbert;
 pub mod lindenmayer;
 pub mod metrics;
 pub mod nano;
+pub mod ndim;
 pub mod nonrecursive;
 pub mod peano;
 pub mod zorder;
@@ -251,6 +270,26 @@ impl CurveKind {
             CurveKind::Peano => Box::new(engine::RectMapper::from_curve::<peano::Peano>(
                 rows, cols,
             )),
+        }
+    }
+
+    /// A native d-dimensional mapper over this curve's natural hypercube
+    /// at refinement `level`: side `2^level` for the 2-adic curves (and
+    /// canonic, for comparability), `3^level` for Peano.
+    ///
+    /// For `dims == 2` the native Nd curves agree with the classic 2-D
+    /// implementations (Hilbert and Peano bit-for-bit, including the
+    /// Hilbert even/odd-level parity rule).
+    pub fn nd_mapper(self, dims: usize, level: u32) -> Box<dyn engine::CurveMapperNd> {
+        match self {
+            CurveKind::Canonic => {
+                assert!(level <= 31, "level {level} exceeds u32 cube sides");
+                Box::new(ndim::CanonicNd::cube(dims, 1u32 << level))
+            }
+            CurveKind::ZOrder => Box::new(ndim::ZOrderNd::new(dims, level)),
+            CurveKind::Gray => Box::new(ndim::GrayNd::new(dims, level)),
+            CurveKind::Hilbert => Box::new(ndim::HilbertNd::new(dims, level)),
+            CurveKind::Peano => Box::new(ndim::PeanoNd::new(dims, level)),
         }
     }
 

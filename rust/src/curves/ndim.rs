@@ -1,0 +1,923 @@
+//! Native d-dimensional space-filling curves — the paper's §2 mapping
+//! over "two **or higher** dimensional" spaces, following Haverkort's
+//! extradimensional construction (arXiv:1211.0175) and the Gray-code
+//! automaton formulation of Butz/Lawder (see also Holzmüller,
+//! arXiv:1710.06384, for the neighbor-finding motivation).
+//!
+//! Every curve here is a fixed-level mapper over the hypercube
+//! `[0, side)^d` implementing the engine's object-safe
+//! [`CurveMapperNd`] interface:
+//!
+//! | Mapper | Construction | Side | Locality |
+//! |---|---|---|---|
+//! | [`CanonicNd`] | mixed-radix row-major (closed form) | any box | row jumps |
+//! | [`ZOrderNd`] | d-way bit interleaving (§2.2 generalized) | `2^level` | power-of-two jumps |
+//! | [`GrayNd`] | Gray rank of the interleaved word | `2^level` | one axis moves ±2^k per step |
+//! | [`HilbertNd`] | Butz/Lawder Gray-code automaton (§3 generalized) | `2^level` | unit steps |
+//! | [`PeanoNd`] | 3-adic serpentine with per-axis reflections | `3^level` | unit steps |
+//!
+//! Axis conventions match the 2-D curves exactly: axis 0 is the paper's
+//! `i` (the **high** bit of each interleaved digit), axis 1 is `j`, and
+//! the d = 2 specializations agree **bit-for-bit** with
+//! [`ZOrder`](super::zorder::ZOrder), [`GrayCode`](super::gray::GrayCode),
+//! the [`Hilbert`](super::hilbert::Hilbert) Mealy automaton (including
+//! its even/odd-level parity rule) and [`Peano`](super::peano::Peano) —
+//! enforced by the `tests/ndim.rs` property suite.
+//!
+//! Pick a mapper by kind via [`CurveKind::nd_mapper`](super::CurveKind::nd_mapper):
+//!
+//! ```
+//! use sfc_mine::curves::engine::CurveMapperNd;
+//! use sfc_mine::curves::CurveKind;
+//!
+//! let h = CurveKind::Hilbert.nd_mapper(3, 4); // 16×16×16 cube
+//! let c = h.order_nd(&[3, 9, 14]);
+//! let mut p = [0u32; 3];
+//! h.coords_nd(c, &mut p);
+//! assert_eq!(p, [3, 9, 14]);
+//! ```
+
+use super::engine::{split_consecutive_runs, CurveMapperNd, DomainNd, SegmentsNd};
+use super::gray::{gray, gray_inv};
+use std::ops::Range;
+
+/// Shared constructor validation for the 2-adic cube mappers: `d`
+/// dimensions at `level` bits per axis, order values in `u64`.
+fn check_cube(dims: usize, level: u32) -> u32 {
+    assert!(
+        (1..=16).contains(&dims),
+        "dims {dims} outside the supported 1..=16"
+    );
+    assert!(level >= 1, "level must be ≥ 1");
+    assert!(level <= 31, "level {level} exceeds u32 cube sides");
+    assert!(
+        dims as u32 * level <= 63,
+        "dims·level = {} exceeds 63 (order values must fit u64)",
+        dims as u32 * level
+    );
+    dims as u32
+}
+
+/// Interleave the low `level` bits of each coordinate into a
+/// `dims·level`-bit word, axis 0 highest within each d-bit digit
+/// (matching the 2-D convention where the `i` bit is the digit's high
+/// bit).
+#[inline]
+fn interleave(p: &[u32], level: u32) -> u64 {
+    let mut h = 0u64;
+    let mut l = level;
+    while l > 0 {
+        l -= 1;
+        for &c in p {
+            h = (h << 1) | ((c >> l) & 1) as u64;
+        }
+    }
+    h
+}
+
+/// Inverse of [`interleave`]: scatter a `dims·level`-bit word back into
+/// `out` coordinates.
+#[inline]
+fn deinterleave(h: u64, dims: u32, level: u32, out: &mut [u32]) {
+    for o in out.iter_mut() {
+        *o = 0;
+    }
+    for l in 0..level {
+        let grp = h >> (l * dims);
+        for (a, o) in out.iter_mut().enumerate() {
+            *o |= (((grp >> (dims as usize - 1 - a)) & 1) as u32) << l;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CanonicNd
+// ---------------------------------------------------------------------------
+
+/// Mixed-radix row-major order over an arbitrary d-dimensional box — the
+/// nested-loop baseline as an Nd mapper, in closed form. The last axis
+/// varies fastest, matching the 2-D `𝒩(i,j) = i·cols + j`.
+#[derive(Clone, Debug)]
+pub struct CanonicNd {
+    shape: Vec<u32>,
+    span: u64,
+}
+
+impl CanonicNd {
+    /// Mapper over the box `[0, shape[0]) × … × [0, shape[d−1])`.
+    pub fn new(shape: Vec<u32>) -> Self {
+        assert!(!shape.is_empty(), "shape must have ≥ 1 axis");
+        let mut span = 1u64;
+        for &s in &shape {
+            assert!(s >= 1, "every axis extent must be ≥ 1");
+            span = span
+                .checked_mul(s as u64)
+                .expect("box order span overflows u64");
+        }
+        CanonicNd { shape, span }
+    }
+
+    /// Mapper over the `side^dims` hypercube.
+    pub fn cube(dims: usize, side: u32) -> Self {
+        assert!(dims >= 1, "dims must be ≥ 1");
+        Self::new(vec![side; dims])
+    }
+
+    /// Per-axis extents.
+    pub fn shape(&self) -> &[u32] {
+        &self.shape
+    }
+}
+
+impl CurveMapperNd for CanonicNd {
+    fn name_nd(&self) -> &'static str {
+        "canonic"
+    }
+
+    fn dims(&self) -> usize {
+        self.shape.len()
+    }
+
+    fn domain_nd(&self) -> DomainNd {
+        DomainNd::HyperRect { shape: self.shape.clone() }
+    }
+
+    fn order_span_nd(&self) -> Option<u64> {
+        Some(self.span)
+    }
+
+    #[inline]
+    fn order_nd(&self, p: &[u32]) -> u64 {
+        debug_assert_eq!(p.len(), self.shape.len());
+        let mut h = 0u64;
+        for (&c, &s) in p.iter().zip(&self.shape) {
+            debug_assert!(c < s);
+            h = h * s as u64 + c as u64;
+        }
+        h
+    }
+
+    #[inline]
+    fn coords_nd(&self, c: u64, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.shape.len());
+        let mut rest = c;
+        for a in (0..self.shape.len()).rev() {
+            let s = self.shape[a] as u64;
+            out[a] = (rest % s) as u32;
+            rest /= s;
+        }
+    }
+
+    fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
+        SegmentsNd::batched(self, clamp_range(range, self.span))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ZOrderNd
+// ---------------------------------------------------------------------------
+
+/// The d-dimensional Z-order curve: d-way bit interleaving (§2.2
+/// generalized).
+#[derive(Copy, Clone, Debug)]
+pub struct ZOrderNd {
+    dims: u32,
+    level: u32,
+}
+
+impl ZOrderNd {
+    /// Mapper over the `(2^level)^dims` hypercube (`dims·level ≤ 63`).
+    pub fn new(dims: usize, level: u32) -> Self {
+        let dims = check_cube(dims, level);
+        ZOrderNd { dims, level }
+    }
+
+    /// Cube side `2^level`.
+    pub fn side(&self) -> u32 {
+        1u32 << self.level
+    }
+
+    /// Bits per axis.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    fn span(&self) -> u64 {
+        1u64 << (self.dims * self.level)
+    }
+}
+
+impl CurveMapperNd for ZOrderNd {
+    fn name_nd(&self) -> &'static str {
+        "zorder"
+    }
+
+    fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    fn domain_nd(&self) -> DomainNd {
+        DomainNd::HyperRect { shape: vec![self.side(); self.dims as usize] }
+    }
+
+    fn order_span_nd(&self) -> Option<u64> {
+        Some(self.span())
+    }
+
+    #[inline]
+    fn order_nd(&self, p: &[u32]) -> u64 {
+        debug_assert_eq!(p.len(), self.dims as usize);
+        interleave(p, self.level)
+    }
+
+    #[inline]
+    fn coords_nd(&self, c: u64, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.dims as usize);
+        deinterleave(c, self.dims, self.level, out);
+    }
+
+    fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
+        SegmentsNd::batched(self, clamp_range(range, self.span()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GrayNd
+// ---------------------------------------------------------------------------
+
+/// The d-dimensional Gray-code curve: the order value is the Gray-code
+/// rank of the d-way interleaved word, so consecutive order values flip
+/// exactly one bit — one coordinate moves by a power of two, the others
+/// stay put (the Faloutsos–Roseman locality guarantee in d dimensions).
+#[derive(Copy, Clone, Debug)]
+pub struct GrayNd {
+    dims: u32,
+    level: u32,
+}
+
+impl GrayNd {
+    /// Mapper over the `(2^level)^dims` hypercube (`dims·level ≤ 63`).
+    pub fn new(dims: usize, level: u32) -> Self {
+        let dims = check_cube(dims, level);
+        GrayNd { dims, level }
+    }
+
+    /// Cube side `2^level`.
+    pub fn side(&self) -> u32 {
+        1u32 << self.level
+    }
+
+    fn span(&self) -> u64 {
+        1u64 << (self.dims * self.level)
+    }
+}
+
+impl CurveMapperNd for GrayNd {
+    fn name_nd(&self) -> &'static str {
+        "gray"
+    }
+
+    fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    fn domain_nd(&self) -> DomainNd {
+        DomainNd::HyperRect { shape: vec![self.side(); self.dims as usize] }
+    }
+
+    fn order_span_nd(&self) -> Option<u64> {
+        Some(self.span())
+    }
+
+    #[inline]
+    fn order_nd(&self, p: &[u32]) -> u64 {
+        debug_assert_eq!(p.len(), self.dims as usize);
+        gray_inv(interleave(p, self.level))
+    }
+
+    #[inline]
+    fn coords_nd(&self, c: u64, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.dims as usize);
+        deinterleave(gray(c), self.dims, self.level, out);
+    }
+
+    fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
+        SegmentsNd::batched(self, clamp_range(range, self.span()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HilbertNd
+// ---------------------------------------------------------------------------
+
+/// The d-dimensional Hilbert curve as the Butz/Lawder Gray-code automaton
+/// — the §3 Mealy construction generalized: each step consumes one d-bit
+/// coordinate digit, transforms it through the current orientation
+/// (an XOR with the subcube entry vertex plus an intra-word rotation) and
+/// emits one d-adic output digit; the orientation update plays the role
+/// of the 2-D automaton's state transition.
+///
+/// The start orientation follows the 2-D parity rule (`U` for even
+/// levels, `D` for odd), which makes the d = 2 specialization agree
+/// **bit-for-bit** with [`Hilbert::order_at_level`] at every level — the
+/// property-test suite enforces this.
+///
+/// [`Hilbert::order_at_level`]: super::hilbert::Hilbert::order_at_level
+#[derive(Copy, Clone, Debug)]
+pub struct HilbertNd {
+    dims: u32,
+    level: u32,
+}
+
+impl HilbertNd {
+    /// Mapper over the `(2^level)^dims` hypercube (`dims·level ≤ 63`).
+    pub fn new(dims: usize, level: u32) -> Self {
+        let dims = check_cube(dims, level);
+        HilbertNd { dims, level }
+    }
+
+    /// Cube side `2^level`.
+    pub fn side(&self) -> u32 {
+        1u32 << self.level
+    }
+
+    /// Bits per axis.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    fn span(&self) -> u64 {
+        1u64 << (self.dims * self.level)
+    }
+
+    #[inline]
+    fn mask(&self) -> u64 {
+        (1u64 << self.dims) - 1
+    }
+
+    /// Rotate the low `n` bits of `x` right by `r`.
+    #[inline]
+    fn rotr(x: u64, r: u32, n: u32) -> u64 {
+        let r = r % n;
+        if r == 0 {
+            x
+        } else {
+            ((x >> r) | (x << (n - r))) & ((1u64 << n) - 1)
+        }
+    }
+
+    /// Rotate the low `n` bits of `x` left by `r`.
+    #[inline]
+    fn rotl(x: u64, r: u32, n: u32) -> u64 {
+        Self::rotr(x, n - (r % n), n)
+    }
+
+    /// Entry vertex of subcube `w` along the order (Hamilton's `e(w)`):
+    /// the Gray code of the largest even number below `w`.
+    #[inline]
+    fn entry(w: u64) -> u64 {
+        if w == 0 {
+            0
+        } else {
+            let v = 2 * ((w - 1) / 2);
+            v ^ (v >> 1)
+        }
+    }
+
+    /// Intra-subcube direction `d(w)`: the axis along which the curve
+    /// traverses subcube `w`, from the Gray-code change positions.
+    #[inline]
+    fn dir(w: u64, n: u32) -> u32 {
+        if w == 0 {
+            0
+        } else if w % 2 == 0 {
+            (w - 1).trailing_ones() % n
+        } else {
+            w.trailing_ones() % n
+        }
+    }
+
+    /// Start orientation `(entry, direction)`: the 2-D parity rule
+    /// (`U` ⇔ direction 1 at even levels, `D` ⇔ direction 0 at odd)
+    /// generalized to d axes.
+    #[inline]
+    fn start(&self) -> (u64, u32) {
+        (0, if self.level % 2 == 0 { 1 % self.dims } else { 0 })
+    }
+
+    /// ℋ_d(p): forward conversion at the mapper's fixed level.
+    pub fn order_point(&self, p: &[u32]) -> u64 {
+        let n = self.dims;
+        debug_assert_eq!(p.len(), n as usize);
+        let (mut e, mut d) = self.start();
+        let mut h = 0u64;
+        let mut i = self.level;
+        while i > 0 {
+            i -= 1;
+            // The d-bit coordinate digit: bit k carries axis k's bit i.
+            let mut l = 0u64;
+            for (k, &c) in p.iter().enumerate() {
+                l |= (((c >> i) & 1) as u64) << k;
+            }
+            let w = gray_inv(Self::rotr(l ^ e, d + 1, n));
+            h = (h << n) | w;
+            e ^= Self::rotl(Self::entry(w), d + 1, n);
+            d = (d + Self::dir(w, n) + 1) % n;
+        }
+        h
+    }
+
+    /// ℋ_d⁻¹(h): inverse conversion, writing `dims` coordinates.
+    pub fn coords_point(&self, h: u64, out: &mut [u32]) {
+        let n = self.dims;
+        debug_assert_eq!(out.len(), n as usize);
+        let (mut e, mut d) = self.start();
+        for o in out.iter_mut() {
+            *o = 0;
+        }
+        let mut i = self.level;
+        while i > 0 {
+            i -= 1;
+            let w = (h >> (i * n)) & self.mask();
+            let l = Self::rotl(gray(w), d + 1, n) ^ e;
+            for (k, o) in out.iter_mut().enumerate() {
+                *o |= (((l >> k) & 1) as u32) << i;
+            }
+            e ^= Self::rotl(Self::entry(w), d + 1, n);
+            d = (d + Self::dir(w, n) + 1) % n;
+        }
+    }
+
+    /// Decode one consecutive ascending run with a per-digit orientation
+    /// stack: `h → h+1` only changes the digits at and below the carry,
+    /// so the automaton resumes from the highest changed digit instead of
+    /// re-descending — amortised `O(1)` digits per step, the d-dim
+    /// analogue of the Figure-5 stepper.
+    fn decode_run(&self, run: &[u64], out: &mut Vec<u32>) {
+        let n = self.dims;
+        let m = self.level;
+        // stack[t] = orientation before digit index t (t = 0 is the most
+        // significant digit).
+        let mut estack = vec![0u64; m as usize + 1];
+        let mut dstack = vec![0u32; m as usize + 1];
+        let (e0, d0) = self.start();
+        estack[0] = e0;
+        dstack[0] = d0;
+        let mut p = vec![0u32; n as usize];
+        let mut prev: Option<u64> = None;
+        for &h in run {
+            let t0 = match prev {
+                None => 0,
+                Some(ph) => {
+                    let hb = 63 - (ph ^ h).leading_zeros();
+                    let changed = hb / n; // digit index from the LSB end
+                    if changed >= m {
+                        // Carry beyond the top digit: the run walked past
+                        // the span (or into ignored high bits). Redo the
+                        // full descent — matches the scalar path, which
+                        // also ignores digits above the level.
+                        0
+                    } else {
+                        m - 1 - changed
+                    }
+                }
+            };
+            // Digits t0..m drive coordinate bits (m−1−t0)..0: clear them.
+            let keep: u32 = !(((1u64 << (m - t0)) - 1) as u32);
+            for c in p.iter_mut() {
+                *c &= keep;
+            }
+            let mut e = estack[t0 as usize];
+            let mut d = dstack[t0 as usize];
+            for t in t0..m {
+                let i = m - 1 - t;
+                let w = (h >> (i * n)) & self.mask();
+                let l = Self::rotl(gray(w), d + 1, n) ^ e;
+                for (k, c) in p.iter_mut().enumerate() {
+                    *c |= (((l >> k) & 1) as u32) << i;
+                }
+                e ^= Self::rotl(Self::entry(w), d + 1, n);
+                d = (d + Self::dir(w, n) + 1) % n;
+                estack[t as usize + 1] = e;
+                dstack[t as usize + 1] = d;
+            }
+            out.extend_from_slice(&p);
+            prev = Some(h);
+        }
+    }
+}
+
+impl CurveMapperNd for HilbertNd {
+    fn name_nd(&self) -> &'static str {
+        "hilbert"
+    }
+
+    fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    fn domain_nd(&self) -> DomainNd {
+        DomainNd::HyperRect { shape: vec![self.side(); self.dims as usize] }
+    }
+
+    fn order_span_nd(&self) -> Option<u64> {
+        Some(self.span())
+    }
+
+    #[inline]
+    fn order_nd(&self, p: &[u32]) -> u64 {
+        self.order_point(p)
+    }
+
+    #[inline]
+    fn coords_nd(&self, c: u64, out: &mut [u32]) {
+        self.coords_point(c, out);
+    }
+
+    fn coords_batch_nd(&self, orders: &[u64], out: &mut Vec<u32>) {
+        out.reserve(orders.len() * self.dims as usize);
+        split_consecutive_runs(orders, |run| self.decode_run(run, out));
+    }
+
+    fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
+        SegmentsNd::batched(self, clamp_range(range, self.span()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PeanoNd
+// ---------------------------------------------------------------------------
+
+/// The d-dimensional Peano curve: 3-adic serpentine with per-axis
+/// reflection flips. Within each `3^d` block the cells follow the
+/// reflected mixed-radix count (axis d−1 most significant, a digit
+/// reversed whenever the sum of more-significant local digits is odd),
+/// and an axis's flip toggles whenever the other axes' global digits sum
+/// to an odd number — the exact d-dim extension of the 2-D rule in
+/// [`Peano`](super::peano::Peano), to which the d = 2 case reduces.
+#[derive(Copy, Clone, Debug)]
+pub struct PeanoNd {
+    dims: u32,
+    level: u32,
+    side: u32,
+}
+
+impl PeanoNd {
+    /// Mapper over the `(3^level)^dims` hypercube (`dims·level ≤ 39`, so
+    /// `3^(dims·level)` fits `u64`).
+    pub fn new(dims: usize, level: u32) -> Self {
+        assert!(
+            (1..=13).contains(&dims),
+            "dims {dims} outside the supported 1..=13"
+        );
+        let dims = dims as u32;
+        assert!(level >= 1, "level must be ≥ 1");
+        assert!(level <= 20, "level {level} exceeds u32 coordinates (3^20)");
+        assert!(
+            dims * level <= 39,
+            "dims·level = {} exceeds 39 (order values must fit u64)",
+            dims * level
+        );
+        PeanoNd { dims, level, side: 3u32.pow(level) }
+    }
+
+    /// Cube side `3^level`.
+    pub fn side(&self) -> u32 {
+        self.side
+    }
+
+    fn span(&self) -> u64 {
+        3u64.pow(self.dims * self.level)
+    }
+
+    /// 𝒫_d(p): forward conversion.
+    pub fn order_point(&self, p: &[u32]) -> u64 {
+        let n = self.dims as usize;
+        debug_assert_eq!(p.len(), n);
+        let mut flip = vec![false; n];
+        let mut rem: Vec<u32> = p.to_vec();
+        let mut g = vec![0u32; n];
+        let base = 3u64.pow(self.dims);
+        let mut pw = self.side / 3; // 3^(level−1); level ≥ 1
+        let mut h = 0u64;
+        loop {
+            // pw ≥ 1 throughout: the loop breaks before dividing it below 1.
+            let mut digit_sum = 0u32;
+            for a in 0..n {
+                g[a] = rem[a] / pw;
+                rem[a] %= pw;
+                digit_sum += g[a];
+            }
+            // Within-block snake position: axis n−1 most significant; a
+            // digit is reversed iff the sum of more-significant *local*
+            // digits is odd.
+            let mut pos = 0u64;
+            let mut msum = 0u32;
+            for a in (0..n).rev() {
+                let t = if flip[a] { 2 - g[a] } else { g[a] };
+                let da = if msum % 2 == 0 { t } else { 2 - t };
+                pos = pos * 3 + da as u64;
+                msum += t;
+            }
+            h = h * base + pos;
+            // An axis's flip toggles on the parity of the *other* axes'
+            // global digits.
+            for a in 0..n {
+                if (digit_sum - g[a]) % 2 == 1 {
+                    flip[a] = !flip[a];
+                }
+            }
+            if pw <= 1 {
+                break;
+            }
+            pw /= 3;
+        }
+        h
+    }
+
+    /// 𝒫_d⁻¹(h): inverse conversion.
+    pub fn coords_point(&self, h: u64, out: &mut [u32]) {
+        let n = self.dims as usize;
+        debug_assert_eq!(out.len(), n);
+        let base = 3u64.pow(self.dims);
+        // Extract the level base-3^d digits, most significant first.
+        let mut digits = vec![0u64; self.level as usize];
+        let mut rest = h;
+        for l in (0..self.level as usize).rev() {
+            digits[l] = rest % base;
+            rest /= base;
+        }
+        debug_assert_eq!(rest, 0, "order value exceeds 3^(dims·level)");
+        let mut flip = vec![false; n];
+        let mut raw = vec![0u32; n];
+        let mut g = vec![0u32; n];
+        for o in out.iter_mut() {
+            *o = 0;
+        }
+        for &pos in &digits {
+            let mut x = pos;
+            for r in raw.iter_mut() {
+                *r = (x % 3) as u32;
+                x /= 3;
+            }
+            // Un-snake most-significant axis first, then un-flip.
+            let mut msum = 0u32;
+            let mut gsum = 0u32;
+            for a in (0..n).rev() {
+                let t = if msum % 2 == 0 { raw[a] } else { 2 - raw[a] };
+                msum += t;
+                g[a] = if flip[a] { 2 - t } else { t };
+                gsum += g[a];
+            }
+            for a in 0..n {
+                out[a] = out[a] * 3 + g[a];
+            }
+            for a in 0..n {
+                if (gsum - g[a]) % 2 == 1 {
+                    flip[a] = !flip[a];
+                }
+            }
+        }
+    }
+}
+
+impl CurveMapperNd for PeanoNd {
+    fn name_nd(&self) -> &'static str {
+        "peano"
+    }
+
+    fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    fn domain_nd(&self) -> DomainNd {
+        DomainNd::HyperRect { shape: vec![self.side; self.dims as usize] }
+    }
+
+    fn order_span_nd(&self) -> Option<u64> {
+        Some(self.span())
+    }
+
+    #[inline]
+    fn order_nd(&self, p: &[u32]) -> u64 {
+        self.order_point(p)
+    }
+
+    #[inline]
+    fn coords_nd(&self, c: u64, out: &mut [u32]) {
+        self.coords_point(c, out);
+    }
+
+    fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
+        SegmentsNd::batched(self, clamp_range(range, self.span()))
+    }
+}
+
+/// Clamp an order range to `[0, span)` without inverting it.
+fn clamp_range(range: Range<u64>, span: u64) -> Range<u64> {
+    let start = range.start.min(span);
+    let end = range.end.min(span).max(start);
+    start..end
+}
+
+/// Argsort of flattened `dims`-coordinate points (all `< 2^level`) along
+/// their d-dimensional Hilbert rank: `order[pos]` is the input index of
+/// the `pos`-th point in curve order. Conversion goes through the Nd
+/// batched path (one automaton amortised over the whole set); the sort
+/// is stable, so ties keep the input order. Shared by the d-dim grid
+/// index's cell ranking and the k-means point sharding.
+pub fn hilbert_argsort(flat: &[u32], dims: usize, level: u32) -> Vec<u32> {
+    if flat.is_empty() {
+        return Vec::new();
+    }
+    assert_eq!(flat.len() % dims, 0, "flat length must be a multiple of dims");
+    let mapper = HilbertNd::new(dims, level);
+    let mut hs = Vec::with_capacity(flat.len() / dims);
+    mapper.order_batch_nd(flat, &mut hs);
+    let mut order: Vec<u32> = (0..hs.len() as u32).collect();
+    order.sort_by_key(|&idx| hs[idx as usize]);
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::engine::{collect_nd, for_each_nd};
+    use crate::curves::hilbert::Hilbert;
+    use crate::curves::peano::Peano;
+    use crate::curves::zorder::ZOrder;
+    use crate::curves::{CurveKind, SpaceFillingCurve};
+    use std::collections::HashSet;
+
+    fn roundtrip_exhaustive(m: &dyn CurveMapperNd) {
+        let span = m.order_span_nd().unwrap();
+        let d = m.dims();
+        let mut p = vec![0u32; d];
+        let mut seen = HashSet::new();
+        for c in 0..span {
+            m.coords_nd(c, &mut p);
+            assert!(m.domain_nd().contains(&p), "{:?} outside domain", p);
+            assert_eq!(m.order_nd(&p), c, "roundtrip at c={c}");
+            assert!(seen.insert(p.clone()), "duplicate point {:?}", p);
+        }
+        assert_eq!(seen.len() as u64, span);
+    }
+
+    #[test]
+    fn all_kinds_roundtrip_d3() {
+        for kind in CurveKind::ALL {
+            let m = kind.nd_mapper(3, 2);
+            roundtrip_exhaustive(m.as_ref());
+        }
+    }
+
+    #[test]
+    fn hilbert_nd_d2_matches_mealy_automaton() {
+        for level in 1..=5u32 {
+            let m = HilbertNd::new(2, level);
+            let side = m.side();
+            for i in 0..side {
+                for j in 0..side {
+                    assert_eq!(
+                        m.order_point(&[i, j]),
+                        Hilbert::order_at_level(i, j, level),
+                        "L={level} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zorder_gray_peano_d2_match_2d_curves() {
+        let z = ZOrderNd::new(2, 4);
+        let g = GrayNd::new(2, 4);
+        for i in 0..16u32 {
+            for j in 0..16u32 {
+                assert_eq!(z.order_nd(&[i, j]), ZOrder::order(i, j));
+                assert_eq!(
+                    g.order_nd(&[i, j]),
+                    crate::curves::gray::GrayCode::order(i, j)
+                );
+            }
+        }
+        let p = PeanoNd::new(2, 2);
+        for i in 0..9u32 {
+            for j in 0..9u32 {
+                assert_eq!(p.order_nd(&[i, j]), Peano::order_at_level(i, j, 2));
+            }
+        }
+    }
+
+    #[test]
+    fn hilbert_and_peano_nd_have_unit_steps() {
+        for dims in [2usize, 3, 4] {
+            let m = HilbertNd::new(dims, 2);
+            let path = collect_nd(&m);
+            let points = path.len() / dims;
+            for t in 1..points {
+                let step: u64 = (0..dims)
+                    .map(|a| {
+                        (path[t * dims + a] as i64 - path[(t - 1) * dims + a] as i64).unsigned_abs()
+                    })
+                    .sum();
+                assert_eq!(step, 1, "hilbert d={dims} t={t}");
+            }
+        }
+        let m = PeanoNd::new(3, 1);
+        let path = collect_nd(&m);
+        for t in 1..path.len() / 3 {
+            let step: u64 = (0..3)
+                .map(|a| (path[t * 3 + a] as i64 - path[(t - 1) * 3 + a] as i64).unsigned_abs())
+                .sum();
+            assert_eq!(step, 1, "peano t={t}");
+        }
+    }
+
+    #[test]
+    fn gray_nd_steps_flip_one_axis_by_power_of_two() {
+        let m = GrayNd::new(3, 3);
+        let mut prev = vec![0u32; 3];
+        let mut cur = vec![0u32; 3];
+        m.coords_nd(0, &mut prev);
+        for c in 1..m.order_span_nd().unwrap() {
+            m.coords_nd(c, &mut cur);
+            let moved: Vec<u64> = prev
+                .iter()
+                .zip(&cur)
+                .map(|(&a, &b)| (b as i64 - a as i64).unsigned_abs())
+                .filter(|&d| d != 0)
+                .collect();
+            assert_eq!(moved.len(), 1, "c={c}");
+            assert!(moved[0].is_power_of_two(), "c={c} moved {}", moved[0]);
+            std::mem::swap(&mut prev, &mut cur);
+        }
+    }
+
+    #[test]
+    fn hilbert_nd_batched_matches_scalar() {
+        let m = HilbertNd::new(3, 3);
+        let span = m.order_span_nd().unwrap();
+        let mut orders: Vec<u64> = (0..span).collect();
+        orders.extend([5, 17, 400, 401, 402, 3, 2, 1, 0]);
+        // Consecutive runs that cross the span boundary (and sit entirely
+        // above it) must fall back to the full descent, matching the
+        // scalar path's digit truncation instead of underflowing.
+        orders.extend([span - 2, span - 1, span, span + 1, span + 2]);
+        orders.extend([3 * span - 1, 3 * span, 3 * span + 1]);
+        let mut batched = Vec::new();
+        m.coords_batch_nd(&orders, &mut batched);
+        let mut scalar = Vec::new();
+        let mut p = [0u32; 3];
+        for &c in &orders {
+            m.coords_nd(c, &mut p);
+            scalar.extend_from_slice(&p);
+        }
+        assert_eq!(batched, scalar);
+    }
+
+    #[test]
+    fn canonic_nd_is_row_major() {
+        let m = CanonicNd::new(vec![2, 3, 4]);
+        assert_eq!(m.order_nd(&[0, 0, 0]), 0);
+        assert_eq!(m.order_nd(&[0, 0, 3]), 3);
+        assert_eq!(m.order_nd(&[0, 1, 0]), 4);
+        assert_eq!(m.order_nd(&[1, 0, 0]), 12);
+        roundtrip_exhaustive(&m);
+    }
+
+    #[test]
+    fn segments_nd_match_scalar_decode() {
+        for kind in CurveKind::ALL {
+            let m = kind.nd_mapper(3, 2);
+            let span = m.order_span_nd().unwrap();
+            let mut got = Vec::new();
+            m.segments_nd(7..span + 50).for_each(|p| got.extend_from_slice(p));
+            let mut want = Vec::new();
+            let mut p = vec![0u32; 3];
+            for c in 7..span {
+                m.coords_nd(c, &mut p);
+                want.extend_from_slice(&p);
+            }
+            assert_eq!(got, want, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn for_each_nd_covers_cube_once() {
+        let m = ZOrderNd::new(4, 2);
+        let mut count = 0u64;
+        let mut seen = HashSet::new();
+        for_each_nd(&m, |p| {
+            count += 1;
+            assert!(seen.insert(p.to_vec()));
+        });
+        assert_eq!(count, 1 << 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 63")]
+    fn cube_constructor_rejects_u64_overflow() {
+        let _ = ZOrderNd::new(16, 4);
+    }
+}

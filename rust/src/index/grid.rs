@@ -1,11 +1,18 @@
-//! Uniform grid index over the first two dimensions of a point set.
+//! Uniform grid index over the first two dimensions of a point set —
+//! the **2-D projection baseline**.
 //!
-//! The similarity-join substrate: points are bucketed into square cells of
-//! side `eps` (over dims 0 and 1). Any join pair within distance `eps` in
-//! the *full* space is also within `eps` in the 2-d projection, so the
-//! candidate set "all pairs from cells within Chebyshev distance 1" is
-//! conservative (no false dismissals) — the same role the hierarchical
-//! index of [20] plays for the paper's FGF join.
+//! The original similarity-join substrate: points are bucketed into
+//! square cells of side `eps` (over dims 0 and 1). Any join pair within
+//! distance `eps` in the *full* space is also within `eps` in the 2-d
+//! projection, so the candidate set "all pairs from cells within
+//! Chebyshev distance 1" is conservative (no false dismissals) — the
+//! same role the hierarchical index of [20] plays for the paper's FGF
+//! join. It is, however, *loose* for d ≥ 3: points far apart in the
+//! unindexed dimensions share cells. The full-dimensional
+//! [`GridIndexNd`](super::GridIndexNd) tightens the candidate set with
+//! every indexed dimension and is what the join drivers use; this index
+//! remains as the measured baseline
+//! ([`join_grid_projected`](crate::apps::simjoin::join_grid_projected)).
 //!
 //! [`GridIndex::hilbert_cell_ranks`] numbers the non-empty cells along
 //! their spatial Hilbert order through the engine's batched conversion,

@@ -1,5 +1,12 @@
 //! Index substrates for the similarity join (paper §7).
+//!
+//! [`GridIndex`] is the legacy 2-D projection index (cells over dims
+//! 0–1 only — conservative but loose for d ≥ 3); [`GridIndexNd`] buckets
+//! over the full dimensionality and ranks its cells along the true d-dim
+//! Hilbert curve.
 
 pub mod grid;
+pub mod ndgrid;
 
 pub use grid::GridIndex;
+pub use ndgrid::{CellNd, GridIndexNd};

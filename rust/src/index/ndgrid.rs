@@ -1,0 +1,296 @@
+//! d-dimensional uniform grid index over a point set.
+//!
+//! The full-dimensional similarity-join substrate: points are bucketed
+//! into hypercubic cells of side `eps` over the first `dims` dimensions.
+//! Any join pair within distance `eps` in the full space lies in cells
+//! within Chebyshev distance 1 **in every indexed dimension**, so the
+//! candidate set tightens with each dimension indexed — unlike the 2-D
+//! [`GridIndex`](super::GridIndex), which projects onto dims 0–1 and lets
+//! points that are far apart in the remaining dimensions share cells,
+//! inflating join candidate sets for d ≥ 3.
+//!
+//! [`GridIndexNd::hilbert_cell_ranks`] numbers the non-empty cells along
+//! their **d-dimensional** Hilbert order through the engine's Nd batched
+//! conversion ([`crate::curves::ndim::HilbertNd`]), which is what
+//! transfers true d-dim curve
+//! locality onto index-driven workloads (the similarity join's cell-pair
+//! grid, k-means sharding).
+
+use crate::apps::Matrix;
+use crate::curves::ndim::hilbert_argsort;
+use std::collections::HashMap;
+
+/// A d-dimensional grid cell coordinate (0-based after offsetting).
+pub type CellNd = Vec<u32>;
+
+/// d-dimensional uniform grid index.
+#[derive(Clone, Debug)]
+pub struct GridIndexNd {
+    /// Cell side length (= join radius).
+    pub eps: f32,
+    /// Number of indexed dimensions (a prefix of the point dimensions).
+    pub dims: usize,
+    /// Minimum corner of the bounding box over the indexed dimensions.
+    pub origin: Vec<f32>,
+    /// Grid extent in cells per indexed axis.
+    pub extent: Vec<u32>,
+    /// Non-empty cells with their point lists, sorted by cell coordinate
+    /// (lexicographic).
+    cells: Vec<(CellNd, Vec<u32>)>,
+}
+
+impl GridIndexNd {
+    /// Build the index for join radius `eps` (> 0) over all dimensions of
+    /// `points`.
+    pub fn build(points: &Matrix, eps: f32) -> Self {
+        Self::build_dims(points, eps, points.cols)
+    }
+
+    /// Build the index over the first `dims` dimensions only
+    /// (`1 ≤ dims ≤ points.cols`). Projecting onto a dimension prefix
+    /// keeps the candidate set conservative (no false dismissals) while
+    /// bounding the `3^dims` neighbor enumeration of the join drivers.
+    pub fn build_dims(points: &Matrix, eps: f32, dims: usize) -> Self {
+        assert!(eps > 0.0, "eps must be positive");
+        assert!(
+            dims >= 1 && dims <= points.cols,
+            "dims {dims} outside 1..={}",
+            points.cols
+        );
+        let n = points.rows;
+        if n == 0 {
+            return GridIndexNd {
+                eps,
+                dims,
+                origin: vec![0.0; dims],
+                extent: vec![0; dims],
+                cells: Vec::new(),
+            };
+        }
+        let mut origin = vec![f32::INFINITY; dims];
+        let mut maxv = vec![f32::NEG_INFINITY; dims];
+        for p in 0..n {
+            for a in 0..dims {
+                let v = points.at(p, a);
+                origin[a] = origin[a].min(v);
+                maxv[a] = maxv[a].max(v);
+            }
+        }
+        let to_cell = |v: f32, lo: f32| -> u32 { ((v - lo) / eps).floor() as u32 };
+        let extent: Vec<u32> = (0..dims)
+            .map(|a| to_cell(maxv[a], origin[a]) + 1)
+            .collect();
+        let mut map: HashMap<CellNd, Vec<u32>> = HashMap::new();
+        let mut key = vec![0u32; dims];
+        for p in 0..n {
+            for (a, k) in key.iter_mut().enumerate() {
+                *k = to_cell(points.at(p, a), origin[a]);
+            }
+            map.entry(key.clone()).or_default().push(p as u32);
+        }
+        let mut cells: Vec<(CellNd, Vec<u32>)> = map.into_iter().collect();
+        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        GridIndexNd { eps, dims, origin, extent, cells }
+    }
+
+    /// Number of non-empty cells.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True if the index holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Non-empty cells, sorted by coordinate.
+    pub fn cells(&self) -> &[(CellNd, Vec<u32>)] {
+        &self.cells
+    }
+
+    /// Points of the cell at `coord`, if non-empty.
+    pub fn cell_points(&self, coord: &[u32]) -> Option<&[u32]> {
+        self.cells
+            .binary_search_by(|(c, _)| c.as_slice().cmp(coord))
+            .ok()
+            .map(|idx| self.cells[idx].1.as_slice())
+    }
+
+    /// Are two cells within Chebyshev distance 1 in every dimension
+    /// (i.e. a candidate pair)?
+    pub fn neighbors(a: &[u32], b: &[u32]) -> bool {
+        a.iter().zip(b).all(|(&x, &y)| x.abs_diff(y) <= 1)
+    }
+
+    /// Number the non-empty cells along their spatial **d-dimensional**
+    /// Hilbert order.
+    ///
+    /// Returns `(order, rank)`: `order[pos]` is the cells-index of the
+    /// `pos`-th cell in Hilbert order, and `rank[idx]` is the Hilbert
+    /// position of cells-index `idx` (mutually inverse permutations).
+    /// Cell coordinates convert through the engine's Nd batched path
+    /// ([`crate::curves::ndim::hilbert_argsort`]), amortising the
+    /// automaton across the whole index.
+    ///
+    /// The curve runs over the first `min(dims, 16)` axes at a level
+    /// capped so `dims·level ≤ 63`; oversized extents are quantized to
+    /// the coarser cube (ties keep the coordinate sort order, which the
+    /// stable sort preserves).
+    pub fn hilbert_cell_ranks(&self) -> (Vec<u32>, Vec<u32>) {
+        if self.cells.is_empty() {
+            return (Vec::new(), Vec::new());
+        }
+        let cd = self.dims.min(16);
+        let maxc = self
+            .cells
+            .iter()
+            .flat_map(|(c, _)| c[..cd].iter().copied())
+            .max()
+            .unwrap_or(0);
+        let needed = (32 - maxc.leading_zeros()).max(1);
+        let allowed = (63 / cd as u32).clamp(1, 31);
+        let level = needed.min(allowed);
+        let shift = needed - level;
+        let mut flat = Vec::with_capacity(self.cells.len() * cd);
+        for (c, _) in &self.cells {
+            for &v in &c[..cd] {
+                flat.push(v >> shift);
+            }
+        }
+        let order = hilbert_argsort(&flat, cd, level);
+        let mut rank = vec![0u32; self.cells.len()];
+        for (pos, &idx) in order.iter().enumerate() {
+            rank[idx as usize] = pos as u32;
+        }
+        (order, rank)
+    }
+
+    /// Average points per non-empty cell.
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.cells.is_empty() {
+            0.0
+        } else {
+            self.cells.iter().map(|(_, v)| v.len() as f64).sum::<f64>() / self.cells.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_points_correctly_in_3d() {
+        let m = Matrix::from_fn(4, 3, |i, j| {
+            [[0.1, 0.1, 0.1], [0.2, 0.15, 0.3], [2.5, 0.1, 0.1], [0.1, 0.1, 2.5]][i][j]
+        });
+        let g = GridIndexNd::build(&m, 1.0);
+        assert_eq!(g.dims, 3);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.cell_points(&[0, 0, 0]).unwrap(), &[0, 1]);
+        assert_eq!(g.cell_points(&[2, 0, 0]).unwrap(), &[2]);
+        assert_eq!(g.cell_points(&[0, 0, 2]).unwrap(), &[3]);
+        assert_eq!(g.extent, vec![3, 1, 3]);
+    }
+
+    #[test]
+    fn every_point_in_exactly_one_cell() {
+        let m = Matrix::random(500, 5, 3, -10.0, 10.0);
+        let g = GridIndexNd::build(&m, 0.7);
+        let total: usize = g.cells().iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 500);
+        let mut seen = std::collections::HashSet::new();
+        for (_, v) in g.cells() {
+            for &p in v {
+                assert!(seen.insert(p));
+            }
+        }
+    }
+
+    #[test]
+    fn close_pairs_are_in_neighbor_cells_full_dim() {
+        let m = Matrix::random(300, 3, 11, 0.0, 5.0);
+        let eps = 0.5f32;
+        let g = GridIndexNd::build(&m, eps);
+        let cell_of = |p: usize| -> Vec<u32> {
+            (0..3)
+                .map(|a| ((m.at(p, a) - g.origin[a]) / eps).floor() as u32)
+                .collect()
+        };
+        for a in 0..300 {
+            for b in (a + 1)..300 {
+                let d: f32 = (0..3)
+                    .map(|k| (m.at(a, k) - m.at(b, k)).powi(2))
+                    .sum::<f32>()
+                    .sqrt();
+                if d <= eps {
+                    assert!(
+                        GridIndexNd::neighbors(&cell_of(a), &cell_of(b)),
+                        "close pair ({a},{b}) in non-neighbor cells"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dims_prefix_matches_2d_index() {
+        // A 2-dim prefix index buckets exactly like the legacy GridIndex.
+        use crate::index::GridIndex;
+        let m = Matrix::random(200, 4, 9, 0.0, 8.0);
+        let g2 = GridIndex::build(&m, 0.9);
+        let gn = GridIndexNd::build_dims(&m, 0.9, 2);
+        assert_eq!(g2.len(), gn.len());
+        for ((c2, pts2), (cn, ptsn)) in g2.cells().iter().zip(gn.cells()) {
+            assert_eq!(vec![c2.0, c2.1], *cn);
+            assert_eq!(pts2, ptsn);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let m = Matrix::zeros(0, 3);
+        let g = GridIndexNd::build(&m, 1.0);
+        assert!(g.is_empty());
+        assert_eq!(g.mean_occupancy(), 0.0);
+        assert_eq!(g.hilbert_cell_ranks(), (Vec::new(), Vec::new()));
+    }
+
+    #[test]
+    fn hilbert_ranks_are_inverse_permutations_3d() {
+        let m = Matrix::random(300, 3, 5, 0.0, 8.0);
+        let g = GridIndexNd::build(&m, 0.9);
+        let (order, rank) = g.hilbert_cell_ranks();
+        assert_eq!(order.len(), g.len());
+        assert_eq!(rank.len(), g.len());
+        for (pos, &idx) in order.iter().enumerate() {
+            assert_eq!(rank[idx as usize] as usize, pos);
+        }
+        // d-dim Hilbert order: non-decreasing order values along `order`
+        // (strict when no quantization collapses cells; extents here are
+        // small, so no clamping and the values are strictly increasing).
+        let maxc = g
+            .cells()
+            .iter()
+            .flat_map(|(c, _)| c.iter().copied())
+            .max()
+            .unwrap();
+        let level = (32 - maxc.leading_zeros()).max(1);
+        use crate::curves::engine::CurveMapperNd;
+        use crate::curves::ndim::HilbertNd;
+        let h = HilbertNd::new(3, level);
+        for w in order.windows(2) {
+            let a = &g.cells()[w[0] as usize].0;
+            let b = &g.cells()[w[1] as usize].0;
+            assert!(h.order_nd(a) < h.order_nd(b));
+        }
+    }
+
+    #[test]
+    fn neighbors_relation() {
+        assert!(GridIndexNd::neighbors(&[3, 3, 3], &[4, 2, 3]));
+        assert!(GridIndexNd::neighbors(&[3, 3, 3], &[3, 3, 3]));
+        assert!(!GridIndexNd::neighbors(&[3, 3, 3], &[5, 3, 3]));
+        assert!(!GridIndexNd::neighbors(&[3, 3, 0], &[3, 3, 2]));
+    }
+}

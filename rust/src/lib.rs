@@ -16,20 +16,28 @@
 //!   constant-overhead generator), Gray-code, Peano, FUR-Hilbert loops
 //!   over arbitrary `n×m` grids, FGF-Hilbert jump-over for general
 //!   regions, and nano-programs. Pick a mapper with
-//!   [`curves::CurveKind::mapper`] (full plane) or
+//!   [`curves::CurveKind::mapper`] (full plane),
 //!   [`curves::CurveKind::rect_mapper`] (any rectangle, contiguous order
-//!   values); batched `order_batch`/`coords_batch` amortise automaton
-//!   state across runs.
+//!   values) or [`curves::CurveKind::nd_mapper`] (**d-dimensional**
+//!   hypercubes — [`curves::ndim`] holds the native d-dim Z-order,
+//!   Gray-code, Butz/Lawder Hilbert and Peano curves, and an adapter
+//!   makes every 2-D mapper a [`CurveMapperNd`] with
+//!   `dims() == 2`); batched `order_batch`/`coords_batch` (and their
+//!   `_nd` twins) amortise automaton state across runs.
 //! * [`coordinator`] — the MIMD runtime: [`coordinator::Coordinator::par_fold`]
 //!   schedules **contiguous curve segments** of any finite-domain mapper
-//!   across a worker pool, preserving locality per worker.
+//!   across a worker pool, preserving locality per worker;
+//!   [`coordinator::Coordinator::par_fold_nd`] does the same for
+//!   d-dimensional domains through the identical chunk queue.
 //! * [`apps`] — the paper's §7 application suite: matrix multiplication,
-//!   Cholesky decomposition, Floyd–Warshall, k-Means, and the
+//!   Cholesky decomposition, Floyd–Warshall, k-Means (with d-dim Hilbert
+//!   point sharding via [`apps::kmeans::hilbert_point_order`]), and the
 //!   ε-similarity join, each in canonic, cache-conscious (tiled) and
 //!   cache-oblivious (engine-curve) variants.
-//! * [`index`] — the uniform grid index substrate for the similarity
-//!   join; numbers its cells along the Hilbert curve via the engine's
-//!   batched conversion.
+//! * [`index`] — the grid index substrates for the similarity join: the
+//!   legacy 2-D projection [`index::GridIndex`] and the full-dimensional
+//!   [`index::GridIndexNd`], which numbers its cells along the true
+//!   d-dim Hilbert curve via the engine's Nd batched conversion.
 //! * [`cachesim`] — the cache-hierarchy simulator used to regenerate the
 //!   paper's Figure 1(e) (LRU / set-associative / multi-level + TLB).
 //! * [`runtime`] — the PJRT engine: loads AOT-compiled JAX/Pallas
@@ -60,6 +68,13 @@
 //! let rect = CurveKind::Hilbert.rect_mapper(3, 5);
 //! let span = rect.domain().order_span().unwrap();
 //! assert_eq!(rect.segments(0..span).count(), 15);
+//!
+//! // And the same abstraction in d dimensions (true d-dim Hilbert):
+//! use sfc_mine::curves::engine::CurveMapperNd;
+//! let cube = CurveKind::Hilbert.nd_mapper(3, 5); // 32×32×32
+//! let mut p = [0u32; 3];
+//! cube.coords_nd(cube.order_nd(&[7, 21, 30]), &mut p);
+//! assert_eq!(p, [7, 21, 30]);
 //! ```
 
 pub mod apps;
@@ -70,7 +85,7 @@ pub mod index;
 pub mod runtime;
 pub mod util;
 
-pub use curves::engine::CurveMapper;
+pub use curves::engine::{CurveMapper, CurveMapperNd};
 pub use curves::nonrecursive::HilbertIter;
 pub use curves::SpaceFillingCurve;
 

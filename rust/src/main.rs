@@ -3,22 +3,32 @@
 //! ```text
 //! sfc-mine info                         # platform + artifact status
 //! sfc-mine fig1  [--n 256]              # regenerate Figure 1(e)
-//! sfc-mine curves [--n 64]              # locality comparison table
+//! sfc-mine curves [--n 64]              # 2-D locality comparison table
+//! sfc-mine curves --dims 3 [--level 3]  # d-dim locality comparison table
 //! sfc-mine matmul [--n 512 --tile 32 --curve hilbert]  # §7 matmul variants
-//! sfc-mine kmeans [--n 40960 ...]       # parallel k-means loop
-//! sfc-mine simjoin [--n 20000 --eps 1]  # §7 similarity join variants
+//! sfc-mine kmeans [--n 40960 --shard hilbert]  # parallel k-means loop
+//! sfc-mine simjoin [--n 20000 --eps 1 --index-dims 3]  # §7 join variants
 //! ```
 //!
 //! All curve dispatch goes through the engine ([`CurveKind::mapper`] /
-//! [`CurveKind::rect_mapper`]); `--curve` accepts any
-//! `canonic|zorder|gray|hilbert|peano`.
+//! [`CurveKind::rect_mapper`] / [`CurveKind::nd_mapper`]); `--curve`
+//! accepts any `canonic|zorder|gray|hilbert|peano`, and `--dims d`
+//! switches the locality table to the true d-dimensional curves. The
+//! similarity join indexes the full dimensionality (capped via
+//! `--index-dims`) and reports the legacy 2-D projection baseline next
+//! to it; `kmeans --shard hilbert` pre-sorts points along their d-dim
+//! Hilbert rank so worker shards are spatially compact.
 
-use sfc_mine::apps::kmeans::{init_centroids, make_blobs, KMeans};
+use sfc_mine::apps::kmeans::{hilbert_point_order, init_centroids, make_blobs, permute_rows, KMeans};
 use sfc_mine::apps::matmul::{flops, matmul_curve, matmul_tiled, matmul_transposed};
 use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
-use sfc_mine::apps::simjoin::{join_fgf_hilbert, join_grid_nested, make_clustered};
+use sfc_mine::apps::simjoin::{
+    join_fgf_hilbert_dims, join_grid_nested_dims, join_grid_projected, make_clustered,
+    DEFAULT_INDEX_DIMS,
+};
 use sfc_mine::apps::Matrix;
 use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
+use sfc_mine::curves::engine::{collect_nd, CurveMapperNd};
 use sfc_mine::curves::{metrics, CurveKind};
 use sfc_mine::runtime::{artifact, Engine};
 use sfc_mine::util::cli::Args;
@@ -94,6 +104,10 @@ fn fig1(args: &Args) {
 }
 
 fn curves(args: &Args) {
+    let dims: usize = args.get("dims", 2);
+    if dims > 2 {
+        return curves_nd(args, dims);
+    }
     let n: u32 = args.get("n", 64);
     let w: usize = args.get("window", 64);
     let mut t = Table::new(vec!["curve", "avg step", "max step", "locality score"]);
@@ -108,6 +122,47 @@ fn curves(args: &Args) {
         ]);
     }
     println!("curve locality on {n}x{n} (window {w}):");
+    print!("{}", t.render());
+}
+
+/// d-dimensional locality table: true d-dim curves over their natural
+/// hypercubes (side `2^level`; Peano `3^level`). The level is clamped
+/// *per curve* — before any mapper is constructed, since the
+/// constructors assert their domain fits `u64` — so every row stays
+/// inside the table's cell budget (`2^22` cells for the 2-adic curves,
+/// `3^12` for Peano).
+fn curves_nd(args: &Args, dims: usize) {
+    if dims > 13 {
+        eprintln!("--dims {dims} unsupported (3..=13; the d-dim Peano caps at 13 dimensions)");
+        std::process::exit(2);
+    }
+    let level: u32 = args.get("level", 3);
+    let w: usize = args.get("window", 64);
+    let mut t =
+        Table::new(vec!["curve", "side", "cells", "avg step", "max step", "locality score"]);
+    for kind in CurveKind::ALL {
+        let max_lvl = match kind {
+            CurveKind::Peano => (12 / dims as u32).max(1),
+            _ => (22 / dims as u32).max(1),
+        };
+        let lvl = level.clamp(1, max_lvl);
+        let mapper = kind.nd_mapper(dims, lvl);
+        let side = match mapper.domain_nd() {
+            sfc_mine::curves::engine::DomainNd::HyperRect { shape } => shape[0],
+            _ => 0,
+        };
+        let path = collect_nd(mapper.as_ref());
+        let s = metrics::step_stats_nd(&path, dims);
+        t.row(vec![
+            kind.name().to_string(),
+            side.to_string(),
+            (path.len() / dims).to_string(),
+            format!("{:.3}", s.avg),
+            s.max.to_string(),
+            format!("{:.2}", metrics::locality_score_nd(&path, dims, w)),
+        ]);
+    }
+    println!("curve locality in {dims}-d at level {level} (window {w}):");
     print!("{}", t.render());
 }
 
@@ -151,12 +206,23 @@ fn kmeans_cmd(args: &Args) {
     let d: usize = args.get("d", 16);
     let iters: usize = args.get("iters", 10);
     let threads: usize = args.get("threads", 0);
+    let shard = args.get_str("shard", "hilbert");
     let (points, _) = make_blobs(n, k, d, 0.6, 42);
+    let points = match shard.as_str() {
+        // Pre-sort along the d-dim Hilbert rank: the coordinator's
+        // contiguous point shards become spatially compact blobs.
+        "hilbert" => permute_rows(&points, &hilbert_point_order(&points)),
+        "input" => points,
+        other => {
+            eprintln!("unknown shard order '{other}' (hilbert|input)");
+            std::process::exit(2);
+        }
+    };
     let centroids = init_centroids(&points, k, 7);
     let mut km = KMeans { points, centroids };
     let coord = Coordinator::new(threads);
     println!(
-        "k-means n={n} k={k} d={d}, {} workers (Hilbert-blocked assignment)",
+        "k-means n={n} k={k} d={d}, {} workers (Hilbert-blocked assignment, {shard} shards)",
         coord.threads()
     );
     for it in 0..iters {
@@ -175,21 +241,54 @@ fn simjoin_cmd(args: &Args) {
     let n: usize = args.get("n", 20_000);
     let eps: f32 = args.get("eps", 1.0);
     let d: usize = args.get("d", 8);
+    let index_dims: usize = args.get("index-dims", d.clamp(1, DEFAULT_INDEX_DIMS));
+    let index_dims = index_dims.clamp(1, d);
     let points = make_clustered(n, d, 40, 0.8, 7);
+
+    // Baseline: the legacy 2-D projection index (cells over dims 0–1).
     let t0 = Instant::now();
-    let (pairs_grid, sg) = join_grid_nested(&points, eps);
+    let (pairs_2d, s2) = join_grid_projected(&points, eps);
+    let proj_dt = t0.elapsed();
+
+    // Full-dimensional grid index, canonic cell-pair order.
+    let t0 = Instant::now();
+    let (pairs_grid, sg) = join_grid_nested_dims(&points, eps, index_dims);
     let grid_dt = t0.elapsed();
+
+    // Full-dimensional grid index, FGF-Hilbert jump-over order.
     let t0 = Instant::now();
-    let (pairs_fgf, sf) = join_fgf_hilbert(&points, eps);
+    let (pairs_fgf, sf) = join_fgf_hilbert_dims(&points, eps, index_dims);
     let fgf_dt = t0.elapsed();
-    assert_eq!(pairs_grid.len(), pairs_fgf.len());
+
+    assert_eq!(pairs_2d.len(), pairs_grid.len(), "identical result pair sets");
+    assert_eq!(pairs_grid.len(), pairs_fgf.len(), "identical result pair sets");
     println!(
-        "simjoin n={n} eps={eps}: {} pairs | grid {:.1} ms ({} cmp) | fgf-hilbert {:.1} ms ({} cmp, {} jumps)",
-        pairs_fgf.len(),
-        grid_dt.as_secs_f64() * 1e3,
-        sg.comparisons,
-        fgf_dt.as_secs_f64() * 1e3,
-        sf.comparisons,
-        sf.fgf.map(|f| f.jumps).unwrap_or(0),
+        "simjoin n={n} d={d} eps={eps}: {} pairs (all variants identical)",
+        pairs_fgf.len()
     );
+    let mut t =
+        Table::new(vec!["variant", "index dims", "ms", "cell pairs", "comparisons", "jumps"]);
+    for (name, dims, dt, s) in [
+        ("grid-2d-projection", 2, proj_dt, &s2),
+        ("grid-nd", index_dims, grid_dt, &sg),
+        ("fgf-hilbert-nd", index_dims, fgf_dt, &sf),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            dims.to_string(),
+            format!("{:.1}", dt.as_secs_f64() * 1e3),
+            s.cell_pairs.to_string(),
+            s.comparisons.to_string(),
+            s.fgf.map(|f| f.jumps).unwrap_or(0).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    if index_dims > 2 {
+        println!(
+            "d-dim pruning: {} distance computations vs {} with the 2-D projection ({:.2}x fewer)",
+            sg.comparisons,
+            s2.comparisons,
+            s2.comparisons as f64 / sg.comparisons.max(1) as f64,
+        );
+    }
 }

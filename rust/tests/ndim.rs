@@ -1,0 +1,231 @@
+//! d-dimensional layer property tests (ISSUE 2): round-trips for every
+//! `CurveKind` at d ∈ {2, 3, 4}, bit-for-bit agreement of the Nd Hilbert
+//! with the 2-D Mealy automaton, unit-step locality in d dimensions,
+//! batched/scalar agreement for the Nd conversion paths, and the blanket
+//! 2-D adapter.
+
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::curves::engine::{collect_nd, for_each_nd, CurveMapper, CurveMapperNd, DomainNd};
+use sfc_mine::curves::hilbert::Hilbert;
+use sfc_mine::curves::metrics::step_stats_nd;
+use sfc_mine::curves::ndim::HilbertNd;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::util::check::forall_seeded;
+use sfc_mine::util::rng::Rng;
+
+/// A level that keeps every kind's cube small enough for exhaustive
+/// sweeps at dimension `d` (Peano's side is `3^level`).
+fn sweep_level(kind: CurveKind, dims: usize) -> u32 {
+    match (kind, dims) {
+        (CurveKind::Peano, 2) => 2, // 81 cells
+        (CurveKind::Peano, _) => 1, // 27 / 81 cells
+        (_, 2) => 4,                // 256 cells
+        (_, 3) => 3,                // 512 cells
+        _ => 2,                     // 65536 cells at d=4
+    }
+}
+
+#[test]
+fn prop_roundtrip_all_kinds_d234() {
+    for kind in CurveKind::ALL {
+        for dims in [2usize, 3, 4] {
+            let level = sweep_level(kind, dims);
+            let mapper = kind.nd_mapper(dims, level);
+            let span = mapper.order_span_nd().expect("finite cube");
+            let mut p = vec![0u32; dims];
+            let mut seen = std::collections::HashSet::new();
+            for c in 0..span {
+                mapper.coords_nd(c, &mut p);
+                assert!(
+                    mapper.domain_nd().contains(&p),
+                    "{} d={dims} c={c}: point {:?} outside cube",
+                    kind.name(),
+                    p
+                );
+                assert_eq!(
+                    mapper.order_nd(&p),
+                    c,
+                    "{} d={dims}: coords_nd(order_nd) != id at c={c}",
+                    kind.name()
+                );
+                assert!(seen.insert(p.clone()), "{} d={dims}: duplicate {:?}", kind.name(), p);
+            }
+            assert_eq!(seen.len() as u64, span, "{} d={dims}: not a bijection", kind.name());
+        }
+    }
+}
+
+#[test]
+fn prop_roundtrip_random_points_at_deep_levels() {
+    // Random probes at levels too deep for exhaustive sweeps.
+    for (dims, level) in [(2usize, 16u32), (3, 10), (4, 8), (5, 6), (6, 6)] {
+        for kind in [CurveKind::ZOrder, CurveKind::Gray, CurveKind::Hilbert] {
+            let mapper = kind.nd_mapper(dims, level);
+            let side = 1u64 << level;
+            let name = format!("nd-roundtrip-{}-d{dims}", kind.name());
+            forall_seeded::<(u32, u32)>(&name, 0xD1A5, 64, |&(a, b)| {
+                let mut rng = Rng::new(((a as u64) << 32) ^ b as u64 ^ 0x9E37);
+                let p: Vec<u32> = (0..dims).map(|_| rng.below(side) as u32).collect();
+                let c = mapper.order_nd(&p);
+                let mut q = vec![0u32; dims];
+                mapper.coords_nd(c, &mut q);
+                c < mapper.order_span_nd().unwrap() && q == p
+            });
+        }
+    }
+}
+
+#[test]
+fn nd_hilbert_d2_is_bitforbit_the_mealy_automaton() {
+    // Exhaustive at small levels (both parities)…
+    for level in 1..=6u32 {
+        let m = HilbertNd::new(2, level);
+        let side = 1u32 << level;
+        for i in 0..side {
+            for j in 0..side {
+                let want = Hilbert::order_at_level(i, j, level);
+                assert_eq!(m.order_nd(&[i, j]), want, "L={level} ({i},{j})");
+                let mut p = [0u32; 2];
+                m.coords_nd(want, &mut p);
+                assert_eq!(p, [i, j], "L={level} h={want}");
+            }
+        }
+    }
+    // …and random probes at deep levels.
+    for level in [9u32, 14, 20, 31] {
+        let m = HilbertNd::new(2, level);
+        let side = 1u64 << level;
+        forall_seeded::<(u32, u32)>(&format!("nd-hilbert-mealy-L{level}"), 7, 64, |&(a, b)| {
+            let mut rng = Rng::new(((a as u64) << 32) ^ b as u64);
+            let (i, j) = (rng.below(side) as u32, rng.below(side) as u32);
+            m.order_nd(&[i, j]) == Hilbert::order_at_level(i, j, level)
+        });
+    }
+}
+
+#[test]
+fn nd_hilbert_unit_steps_d234() {
+    for dims in [2usize, 3, 4] {
+        let level = if dims == 4 { 2 } else { 3 };
+        let m = HilbertNd::new(dims, level);
+        let path = collect_nd(&m);
+        let s = step_stats_nd(&path, dims);
+        assert_eq!(s.avg, 1.0, "d={dims}: Hilbert must have unit average step");
+        assert_eq!(s.max, 1, "d={dims}: Hilbert must have unit max step");
+        assert_eq!(s.steps, (1u64 << (dims as u32 * level)) - 1);
+    }
+}
+
+#[test]
+fn prop_nd_batched_conversions_match_scalar() {
+    for kind in CurveKind::ALL {
+        for dims in [2usize, 3] {
+            let level = sweep_level(kind, dims);
+            let mapper = kind.nd_mapper(dims, level);
+            let span = mapper.order_span_nd().unwrap();
+            let name = format!("nd-batch-{}-d{dims}", kind.name());
+            forall_seeded::<(u32, u32)>(&name, 23, 32, |&(a, b)| {
+                let mut rng = Rng::new(((a as u64) << 32) ^ b as u64 ^ 0xBA7C);
+                // Mix consecutive runs (the resume fast path) with jumps.
+                let mut orders: Vec<u64> = Vec::new();
+                while orders.len() < 150 {
+                    let start = rng.below(span);
+                    let len = 1 + rng.below(40);
+                    for c in start..(start + len).min(span) {
+                        orders.push(c);
+                    }
+                }
+                let mut batched = Vec::new();
+                mapper.coords_batch_nd(&orders, &mut batched);
+                let mut scalar = Vec::new();
+                let mut p = vec![0u32; dims];
+                for &c in &orders {
+                    mapper.coords_nd(c, &mut p);
+                    scalar.extend_from_slice(&p);
+                }
+                if batched != scalar {
+                    return false;
+                }
+                // Forward batch over the decoded points.
+                let mut fwd = Vec::new();
+                mapper.order_batch_nd(&scalar, &mut fwd);
+                fwd == orders
+            });
+        }
+    }
+}
+
+#[test]
+fn blanket_adapter_makes_2d_mappers_nd() {
+    // A plane mapper is a CurveMapperNd with dims() == 2 whose Nd methods
+    // agree with the 2-D ones.
+    let sq = sfc_mine::curves::engine::HilbertSquare::new(5);
+    assert_eq!(CurveMapperNd::dims(&sq), 2);
+    assert_eq!(sq.name_nd(), CurveMapper::name(&sq));
+    assert_eq!(
+        sq.domain_nd(),
+        DomainNd::HyperRect { shape: vec![32, 32] }
+    );
+    assert_eq!(sq.order_span_nd(), CurveMapper::order_span(&sq));
+    for (i, j) in [(0u32, 0u32), (3, 7), (31, 31), (16, 5)] {
+        let c = CurveMapper::order(&sq, i, j);
+        assert_eq!(sq.order_nd(&[i, j]), c);
+        let mut p = [0u32; 2];
+        sq.coords_nd(c, &mut p);
+        assert_eq!(p, [i, j]);
+    }
+    // segments_nd mirrors segments.
+    let via_2d: Vec<(u32, u32)> = CurveMapper::segments(&sq, 100..160).collect();
+    let mut via_nd: Vec<(u32, u32)> = Vec::new();
+    sq.segments_nd(100..160).for_each(|p| via_nd.push((p[0], p[1])));
+    assert_eq!(via_2d, via_nd);
+    // Batched paths route through the 2-D batched conversions.
+    let orders: Vec<u64> = (0..256u64).chain([40, 9, 1000]).collect();
+    let mut flat = Vec::new();
+    sq.coords_batch_nd(&orders, &mut flat);
+    let mut pairs = Vec::new();
+    CurveMapper::coords_batch(&sq, &orders, &mut pairs);
+    let flat_want: Vec<u32> = pairs.iter().flat_map(|&(i, j)| [i, j]).collect();
+    assert_eq!(flat, flat_want);
+}
+
+#[test]
+fn par_fold_nd_matches_serial_for_native_and_adapted_mappers() {
+    let coord = Coordinator::new(4);
+    // Native 3-dim Hilbert cube.
+    let cube = HilbertNd::new(3, 3);
+    let (par_sum, _) = coord.par_fold_nd(
+        &cube,
+        || 0u64,
+        |acc, p| *acc += p[0] as u64 * 1_000_003 + p[1] as u64 * 1009 + p[2] as u64,
+        |a, b| a + b,
+    );
+    let mut serial = 0u64;
+    for_each_nd(&cube, |p| {
+        serial += p[0] as u64 * 1_000_003 + p[1] as u64 * 1009 + p[2] as u64;
+    });
+    assert_eq!(par_sum, serial);
+    // Blanket-adapted rectangle mapper (FUR overlay under the hood).
+    // par_fold_nd takes `&dyn CurveMapperNd`, so the adapter kicks in at
+    // the coercion from the concrete (Sized) 2-D mapper.
+    let rect = sfc_mine::curves::engine::RectMapper::fur(9, 21);
+    let (nd_sum, _) = coord.par_fold_nd(
+        &rect,
+        || 0u64,
+        |acc, p| *acc += p[0] as u64 * 1009 + p[1] as u64,
+        |a, b| a + b,
+    );
+    let (sum_2d, _) = coord.par_fold(
+        &rect,
+        || 0u64,
+        |acc, i, j| *acc += i as u64 * 1009 + j as u64,
+        |a, b| a + b,
+    );
+    assert_eq!(nd_sum, sum_2d);
+}
+
+#[test]
+fn nd_mapper_rejects_domains_that_overflow_u64() {
+    assert!(std::panic::catch_unwind(|| CurveKind::Hilbert.nd_mapper(8, 8)).is_err());
+    assert!(std::panic::catch_unwind(|| CurveKind::Peano.nd_mapper(5, 8)).is_err());
+}
