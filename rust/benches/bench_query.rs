@@ -1,0 +1,198 @@
+//! Range-query bench (ISSUE 3): window→range decomposition and
+//! `SfcIndex` query latency for Hilbert vs Z-order vs canonic at
+//! d ∈ {2, 3}, against the full-scan baseline. Emits JSON
+//! (`reports/bench_query.json`) for the perf trajectory.
+//!
+//! Expected shape: Hilbert's clustering property yields the fewest
+//! ranges-per-window (strictly below Z-order — the ISSUE 3 acceptance
+//! check, asserted here), and decomposition + binary search beats the
+//! full scan by orders of magnitude at low selectivity.
+
+use sfc_mine::apps::simjoin::make_clustered;
+use sfc_mine::curves::engine::{CurveMapperNd, WindowNd};
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::SfcIndex;
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::rng::Rng;
+use sfc_mine::util::table::Table;
+
+fn write_json(bench: &Bench, path: &str) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (idx, m) in bench.results().iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {}, \"mad_ns\": {}, \"elements\": {}}}",
+            m.name,
+            m.median.as_nanos(),
+            m.mad.as_nanos(),
+            m.elements.unwrap_or(0)
+        ));
+    }
+    s.push_str("\n]\n");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s)
+}
+
+/// Random inclusive cell windows at `frac` of the cube side.
+fn random_windows(count: usize, dims: usize, side: u32, frac: f64, seed: u64) -> Vec<WindowNd> {
+    let mut rng = Rng::new(seed);
+    let half = ((side as f64 * frac) as u32).max(1);
+    (0..count)
+        .map(|_| {
+            let lo: Vec<u32> = (0..dims)
+                .map(|_| rng.below(side.saturating_sub(half) as u64 + 1) as u32)
+                .collect();
+            let hi: Vec<u32> = lo.iter().map(|&l| (l + half).min(side - 1)).collect();
+            WindowNd::new(lo, hi)
+        })
+        .collect()
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n_points: usize = if fast { 4_000 } else { 40_000 };
+    let n_windows: usize = if fast { 48 } else { 256 };
+    let mut bench = Bench::new();
+
+    // --- window→range decomposition: ranges-per-window + latency --------
+    let mut table = Table::new(vec![
+        "dims",
+        "curve",
+        "level",
+        "mean ranges/window",
+        "decompose µs/window",
+    ]);
+    let mut level8_means: Vec<(CurveKind, f64)> = Vec::new();
+    for dims in [2usize, 3] {
+        let level = 8u32;
+        let side = 1u32 << level;
+        let windows = random_windows(n_windows, dims, side, 0.08, 7 + dims as u64);
+        for kind in [CurveKind::Hilbert, CurveKind::ZOrder, CurveKind::Canonic] {
+            let mapper = kind.nd_mapper(dims, level);
+            let total_ranges: u64 = windows
+                .iter()
+                .map(|w| mapper.decompose_nd(w).len() as u64)
+                .sum();
+            let mean = total_ranges as f64 / windows.len() as f64;
+            let m = bench.throughput(
+                &format!("query/decompose/{}/d{dims}", kind.name()),
+                windows.len() as u64,
+                || {
+                    let mut acc = 0usize;
+                    for w in &windows {
+                        acc += mapper.decompose_nd(w).len();
+                    }
+                    acc
+                },
+            );
+            table.row(vec![
+                dims.to_string(),
+                kind.name().to_string(),
+                level.to_string(),
+                format!("{mean:.1}"),
+                format!("{:.2}", m.median.as_nanos() as f64 / 1e3 / windows.len() as f64),
+            ]);
+            if dims == 2 {
+                level8_means.push((kind, mean));
+            }
+        }
+    }
+    println!("\nwindow decomposition (mean over {n_windows} random windows):");
+    print!("{}", table.render());
+
+    // The ISSUE 3 acceptance check, enforced at bench time: Hilbert's
+    // clustering property must beat Z-order on 2-D level-8 windows.
+    let hilbert = level8_means
+        .iter()
+        .find(|(k, _)| *k == CurveKind::Hilbert)
+        .unwrap()
+        .1;
+    let zorder = level8_means
+        .iter()
+        .find(|(k, _)| *k == CurveKind::ZOrder)
+        .unwrap()
+        .1;
+    assert!(
+        hilbert < zorder,
+        "clustering property violated: hilbert {hilbert:.1} ranges/window vs zorder {zorder:.1}"
+    );
+    println!(
+        "clustering property (d=2, level 8): hilbert {hilbert:.1} vs zorder {zorder:.1} \
+         ranges/window ({:.2}x fewer)\n",
+        zorder / hilbert
+    );
+
+    // --- SfcIndex window queries vs full scan ---------------------------
+    let mut qtable = Table::new(vec!["dims", "variant", "µs/query", "speedup vs scan"]);
+    for dims in [2usize, 3] {
+        let points = make_clustered(n_points, dims, 40, 0.8, 11);
+        let (min, max) = sfc_mine::index::axis_bounds(&points, dims).unwrap();
+        let mut rng = Rng::new(23);
+        let queries: Vec<(Vec<f32>, Vec<f32>)> = (0..n_windows)
+            .map(|_| {
+                let p = rng.below(n_points as u64) as usize;
+                let lo: Vec<f32> = (0..dims)
+                    .map(|a| points.at(p, a) - 0.05 * (max[a] - min[a]))
+                    .collect();
+                let hi: Vec<f32> = (0..dims)
+                    .map(|a| points.at(p, a) + 0.05 * (max[a] - min[a]))
+                    .collect();
+                (lo, hi)
+            })
+            .collect();
+        let m_scan = bench.throughput(&format!("query/scan/d{dims}"), n_windows as u64, || {
+            let mut acc = 0usize;
+            for (lo, hi) in &queries {
+                for p in 0..points.rows {
+                    let row = points.row(p);
+                    if row
+                        .iter()
+                        .zip(lo.iter().zip(hi))
+                        .all(|(&v, (&l, &h))| (l..=h).contains(&v))
+                    {
+                        acc += 1;
+                    }
+                }
+            }
+            acc
+        });
+        qtable.row(vec![
+            dims.to_string(),
+            "full-scan".to_string(),
+            format!("{:.2}", m_scan.median.as_nanos() as f64 / 1e3 / n_windows as f64),
+            "1.0x".to_string(),
+        ]);
+        for kind in [CurveKind::Hilbert, CurveKind::ZOrder, CurveKind::Canonic] {
+            let index = SfcIndex::build_with(&points, 8, kind);
+            let m = bench.throughput(
+                &format!("query/window/{}/d{dims}", kind.name()),
+                n_windows as u64,
+                || {
+                    let mut acc = 0usize;
+                    for (lo, hi) in &queries {
+                        acc += index.query_window(lo, hi).len();
+                    }
+                    acc
+                },
+            );
+            qtable.row(vec![
+                dims.to_string(),
+                format!("sfc-index/{}", kind.name()),
+                format!("{:.2}", m.median.as_nanos() as f64 / 1e3 / n_windows as f64),
+                format!(
+                    "{:.1}x",
+                    m_scan.median.as_secs_f64() / m.median.as_secs_f64()
+                ),
+            ]);
+        }
+    }
+    println!("\nwindow queries over {n_points} clustered points:");
+    print!("{}", qtable.render());
+
+    write_json(&bench, "reports/bench_query.json").expect("write bench JSON");
+    println!("\nwrote reports/bench_query.json");
+}

@@ -20,7 +20,13 @@
 //!   candidate cell-pair matrix becomes a sorted [`HilbertSet`] region,
 //!   and whole non-candidate quadrants are jumped over while point data
 //!   is accessed in a locality-preserving order (the paper's
-//!   similarity-join design).
+//!   similarity-join design);
+//! * [`join_sfc`] — the **default** driver: cells keyed by their d-dim
+//!   Hilbert value in a sorted column, and each cell's candidate
+//!   neighbors found by **decomposing its ±1 cell window into contiguous
+//!   key ranges** ([`CurveMapperNd::decompose_nd`]) and binary-searching
+//!   each range — the query subsystem replacing the `3^d` per-cell
+//!   odometer walk of the nested driver (which stays as a baseline).
 //!
 //! All variants return the same pair set. Note the finer full-dim cells
 //! mean *more* (but far cheaper) candidate cell pairs than the
@@ -28,9 +34,10 @@
 //! number of actual distance computations.
 
 use super::Matrix;
-use crate::curves::engine::FgfMapper;
+use crate::curves::engine::{CurveMapperNd, FgfMapper, WindowNd};
 use crate::curves::fgf::{FgfStats, HilbertSet};
 use crate::curves::hilbert::Hilbert;
+use crate::curves::ndim::{argsort_stable, HilbertNd};
 use crate::index::{CellNd, GridIndex, GridIndexNd};
 
 /// Default cap on indexed dimensions for the d-dim join variants: the
@@ -58,6 +65,8 @@ pub struct JoinStats {
     pub results: u64,
     /// Candidate cell pairs visited (index variants).
     pub cell_pairs: u64,
+    /// Decomposed key ranges probed ([`join_sfc`] only).
+    pub ranges: u64,
     /// FGF traversal stats (Hilbert variant only).
     pub fgf: Option<FgfStats>,
 }
@@ -275,6 +284,99 @@ pub fn join_fgf_hilbert_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pai
     (out, stats)
 }
 
+/// d-dim grid-index join driven by **window→range decomposition** over
+/// the cells' Hilbert key column (indexing capped at
+/// [`DEFAULT_INDEX_DIMS`] dimensions) — the query-subsystem default
+/// path.
+pub fn join_sfc(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
+    join_sfc_dims(points, eps, default_index_dims(points))
+}
+
+/// [`join_sfc`] with an explicit indexed-dimension count.
+///
+/// Every non-empty cell gets its d-dim Hilbert key (quantized like
+/// [`GridIndexNd::hilbert_cell_ranks`] when the extents outgrow the
+/// `dims·level ≤ 63` cube); the keys live in one sorted column. A cell's
+/// candidate neighbors are then the cells whose keys fall in the
+/// decomposition of its ±1 window — a handful of contiguous ranges, each
+/// one binary search — instead of `3^dims` point lookups. Quantization
+/// can collapse distinct cells onto one key, so every range hit is
+/// exact-filtered with the full-precision Chebyshev test before the
+/// point lists are compared; pairs dedupe by sorted key position.
+pub fn join_sfc_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, JoinStats) {
+    let index = GridIndexNd::build_dims(points, eps, dims);
+    let eps2 = eps * eps;
+    let mut out = Vec::new();
+    let mut stats = JoinStats::default();
+    let cells = index.cells();
+    if cells.is_empty() {
+        return (out, stats);
+    }
+    let d = index.dims;
+
+    // Key the cells along the d-dim Hilbert curve (same quantization
+    // policy as hilbert_cell_ranks: curve over the first ≤ 16 axes at a
+    // level capped so dims·level ≤ 63, oversized extents right-shifted
+    // onto the coarser cube).
+    let cd = d.min(16);
+    let maxc = cells
+        .iter()
+        .flat_map(|(c, _)| c[..cd].iter().copied())
+        .max()
+        .unwrap_or(0);
+    let needed = (32 - maxc.leading_zeros()).max(1);
+    let allowed = (63 / cd as u32).clamp(1, 31);
+    let level = needed.min(allowed);
+    let shift = needed - level;
+    let mapper = HilbertNd::new(cd, level);
+    let mut flat = Vec::with_capacity(cells.len() * cd);
+    for (c, _) in cells {
+        for &v in &c[..cd] {
+            flat.push(v >> shift);
+        }
+    }
+    let mut cell_keys = Vec::with_capacity(cells.len());
+    mapper.order_batch_nd(&flat, &mut cell_keys);
+    let order = argsort_stable(&cell_keys);
+    let keys: Vec<u64> = order.iter().map(|&idx| cell_keys[idx as usize]).collect();
+
+    // Per-cell ε-window decomposition: the ±1 neighborhood of a cell,
+    // mapped into the (possibly coarser) key cube, becomes a few
+    // contiguous key ranges; only positions ≥ the cell's own keep each
+    // unordered pair once.
+    let side_max = (1u32 << level) - 1;
+    let mut lo = vec![0u32; cd];
+    let mut hi = vec![0u32; cd];
+    for (pos_a, &oa) in order.iter().enumerate() {
+        let ia = oa as usize;
+        let (ca, la) = &cells[ia];
+        for a in 0..cd {
+            lo[a] = (ca[a].saturating_sub(1)) >> shift;
+            hi[a] = (ca[a].saturating_add(1) >> shift).min(side_max);
+        }
+        let ranges = mapper.decompose_nd(&WindowNd::new(lo.clone(), hi.clone()));
+        stats.ranges += ranges.len() as u64;
+        for r in &ranges {
+            let mut pos = keys.partition_point(|&k| k < r.start);
+            while pos < keys.len() && keys[pos] < r.end {
+                if pos >= pos_a {
+                    let ib = order[pos] as usize;
+                    let (cb, lb) = &cells[ib];
+                    // Exact neighbor test on the *unshifted* coordinates
+                    // (the key cube may be coarser), plus the projected
+                    // axes beyond the curve's 16-axis cap.
+                    if GridIndexNd::neighbors(ca, cb) {
+                        stats.cell_pairs += 1;
+                        join_lists(points, la, lb, ia == ib, eps2, &mut out, &mut stats);
+                    }
+                }
+                pos += 1;
+            }
+        }
+    }
+    (out, stats)
+}
+
 /// Clustered synthetic workload: points drawn around `clusters` seeds (the
 /// shape that makes index joins shine).
 pub fn make_clustered(n: usize, d: usize, clusters: usize, spread: f32, seed: u64) -> Matrix {
@@ -305,10 +407,45 @@ mod tests {
             let (b, _) = join_grid_nested(&points, eps);
             let (c, _) = join_fgf_hilbert(&points, eps);
             let (p, _) = join_grid_projected(&points, eps);
+            let (s, _) = join_sfc(&points, eps);
             assert_eq!(normalize(a.clone()), normalize(b), "grid eps={eps}");
             assert_eq!(normalize(a.clone()), normalize(c), "fgf eps={eps}");
+            assert_eq!(normalize(a.clone()), normalize(s), "sfc eps={eps}");
             assert_eq!(normalize(a), normalize(p), "projected eps={eps}");
         }
+    }
+
+    #[test]
+    fn sfc_join_matches_nested_candidates_exactly() {
+        // The ISSUE 3 acceptance shape: identical result sets AND an
+        // identical candidate structure — the decomposed-window driver
+        // must visit exactly the neighbor cell pairs the 3^d odometer
+        // does, just found through ranges instead of point lookups.
+        let points = make_clustered(900, 3, 40, 0.8, 19);
+        for eps in [0.6f32, 1.2] {
+            let (pn, sn) = join_grid_nested_dims(&points, eps, 3);
+            let (ps, ss) = join_sfc_dims(&points, eps, 3);
+            assert_eq!(normalize(pn), normalize(ps), "eps={eps}");
+            assert_eq!(sn.cell_pairs, ss.cell_pairs, "eps={eps}");
+            assert_eq!(sn.comparisons, ss.comparisons, "eps={eps}");
+            assert!(ss.ranges > 0, "decomposition must actually run");
+        }
+    }
+
+    #[test]
+    fn sfc_join_survives_key_quantization() {
+        // d=4 with tiny eps over a wide extent forces the Hilbert key
+        // cube below the cell resolution (dims·level ≤ 63), so distinct
+        // cells share keys; the exact Chebyshev filter must keep the
+        // result set identical to brute force.
+        let base = make_clustered(200, 4, 12, 0.5, 23);
+        // Tail rows duplicate head rows so the tiny eps still finds pairs.
+        let points = Matrix::from_fn(250, 4, |i, j| base.at(i % 200, j));
+        let eps = 0.002f32;
+        let (brute, _) = join_bruteforce(&points, eps);
+        let (pairs, _) = join_sfc_dims(&points, eps, 4);
+        assert!(!brute.is_empty(), "duplicates must produce pairs");
+        assert_eq!(normalize(brute), normalize(pairs));
     }
 
     #[test]

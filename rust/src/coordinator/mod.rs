@@ -39,6 +39,7 @@ use crate::apps::kmeans::{Assignment, KMeans};
 use crate::apps::Matrix;
 use crate::curves::engine::{self, CurveMapper, CurveMapperNd, HilbertSquare};
 use crate::curves::CurveKind;
+use crate::index::SfcIndex;
 use metrics::WorkerMetrics;
 use scheduler::ChunkQueue;
 
@@ -215,6 +216,53 @@ impl Coordinator {
     {
         let mapper = HilbertSquare::new(level);
         self.par_fold(&mapper, init, body, merge)
+    }
+
+    /// Answer a batch of window queries against an [`SfcIndex`] in
+    /// parallel: query indices are handed out through the same dynamic
+    /// [`ChunkQueue`] the curve-segment schedulers use, so stragglers
+    /// (large windows) rebalance across workers. Results come back in
+    /// input order, each entry the ids [`SfcIndex::query_window`] would
+    /// return.
+    pub fn par_query(
+        &self,
+        index: &SfcIndex,
+        windows: &[(Vec<f32>, Vec<f32>)],
+    ) -> Vec<Vec<u32>> {
+        if windows.is_empty() {
+            return Vec::new();
+        }
+        // Queries are coarse work items: hand out small chunks so large
+        // windows don't serialize the tail.
+        let chunk = (windows.len() as u64).div_ceil(self.threads as u64 * 4).max(1);
+        let queue = ChunkQueue::new(windows.len() as u64, chunk);
+        let mut out: Vec<Vec<u32>> = vec![Vec::new(); windows.len()];
+        let mut shards: Vec<Vec<(usize, Vec<u32>)>> = Vec::with_capacity(self.threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.threads);
+            for _ in 0..self.threads {
+                let queue = &queue;
+                handles.push(scope.spawn(move || {
+                    let mut local: Vec<(usize, Vec<u32>)> = Vec::new();
+                    while let Some((start, end)) = queue.next_chunk() {
+                        for q in start..end {
+                            let (lo, hi) = &windows[q as usize];
+                            local.push((q as usize, index.query_window(lo, hi)));
+                        }
+                    }
+                    local
+                }));
+            }
+            for h in handles {
+                shards.push(h.join().expect("worker panicked"));
+            }
+        });
+        for shard in shards {
+            for (q, ids) in shard {
+                out[q] = ids;
+            }
+        }
+        out
     }
 
     /// Parallel map over an index range `[0, n)`: contiguous shards, one
@@ -449,6 +497,39 @@ mod tests {
             |a, b| a + b,
         );
         assert_eq!(nd_sum, sum_2d);
+    }
+
+    #[test]
+    fn par_query_matches_serial_windows() {
+        let points = Matrix::random(600, 3, 9, 0.0, 50.0);
+        let index = SfcIndex::build(&points, 6);
+        let mut rng = crate::util::rng::Rng::new(77);
+        let windows: Vec<(Vec<f32>, Vec<f32>)> = (0..40)
+            .map(|_| {
+                let lo: Vec<f32> = (0..3).map(|_| rng.f32() * 40.0).collect();
+                let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 15.0).collect();
+                (lo, hi)
+            })
+            .collect();
+        for threads in [1usize, 3, 8] {
+            let coord = Coordinator::new(threads);
+            let par = coord.par_query(&index, &windows);
+            assert_eq!(par.len(), windows.len(), "threads={threads}");
+            for (got, (lo, hi)) in par.iter().zip(&windows) {
+                let mut want = index.query_window(lo, hi);
+                let mut got = got.clone();
+                want.sort_unstable();
+                got.sort_unstable();
+                assert_eq!(got, want, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_query_empty_batch_is_empty() {
+        let points = Matrix::random(10, 2, 1, 0.0, 1.0);
+        let index = SfcIndex::build(&points, 4);
+        assert!(Coordinator::new(2).par_query(&index, &[]).is_empty());
     }
 
     #[test]

@@ -71,6 +71,22 @@ impl SpaceFillingCurve for CanonicFixed {
             }
         }
     }
+
+    /// Closed-form window decomposition: one run per window row (the
+    /// radix-tree pruner does not apply — aligned square blocks are not
+    /// contiguous in row-major order).
+    fn decompose_window(window: &crate::curves::engine::Window) -> Vec<std::ops::Range<u64>> {
+        assert!(
+            window.hi.0 < (1 << 31) && window.hi.1 < (1 << 31),
+            "plane windows support coordinates below 2^31"
+        );
+        let mut out = Vec::with_capacity((window.hi.0 - window.lo.0 + 1) as usize);
+        for i in window.lo.0..=window.hi.0 {
+            let base = (i as u64) << 32;
+            out.push(base + window.lo.1 as u64..base + window.hi.1 as u64 + 1);
+        }
+        out
+    }
 }
 
 #[cfg(test)]

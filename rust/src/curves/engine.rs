@@ -29,6 +29,18 @@
 //! Figure-5 stepper, and forward conversion hoists the effective-level /
 //! parity computation out of the per-element loop.
 //!
+//! The **query side** of the engine is window→range decomposition:
+//! [`CurveMapper::decompose`] (and [`CurveMapperNd::decompose_nd`]) turn
+//! an inclusive cell [`Window`] into the sorted, disjoint, maximal
+//! contiguous order-value ranges covering exactly the window — descend
+//! the curve's digit tree, prune subtrees disjoint from the window, emit
+//! a fully-inside subtree's contiguous span, recurse on straddle
+//! ([`decompose_radix_2d`] generically; [`decompose_hilbert_2d`] /
+//! [`decompose_zorder_2d`] natively from the state automata). A point
+//! set sorted by curve order then answers the window with one binary
+//! search per range, and [`coarsen_ranges`] trades false-positive
+//! candidates for fewer ranges.
+//!
 //! Everything here is object-safe on purpose: the coordinator, the §7
 //! applications, the grid index and the CLI all take `&dyn CurveMapper`,
 //! so adding a curve (or a sharded/remote mapper) is a single-layer
@@ -90,6 +102,217 @@ pub(crate) fn split_consecutive_runs(orders: &[u64], mut on_run: impl FnMut(&[u6
         on_run(&orders[idx..end]);
         idx = end;
     }
+}
+
+// ---------------------------------------------------------------------------
+// Windows and range decomposition plumbing
+// ---------------------------------------------------------------------------
+
+/// An axis-aligned, **inclusive** window of grid cells in 2-D: every cell
+/// `(i, j)` with `lo.0 ≤ i ≤ hi.0` and `lo.1 ≤ j ≤ hi.1`.
+///
+/// The query side of the engine: [`CurveMapper::decompose`] turns a
+/// window into the contiguous order-value ranges a sorted point set can
+/// binary-search (the paper's "search structures" application).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Window {
+    /// Inclusive lower corner `(i, j)`.
+    pub lo: (u32, u32),
+    /// Inclusive upper corner `(i, j)`.
+    pub hi: (u32, u32),
+}
+
+impl Window {
+    /// Window from inclusive corners (`lo ≤ hi` per axis).
+    pub fn new(lo: (u32, u32), hi: (u32, u32)) -> Self {
+        assert!(lo.0 <= hi.0 && lo.1 <= hi.1, "window lo must be ≤ hi per axis");
+        Window { lo, hi }
+    }
+
+    /// Is the cell inside the window?
+    #[inline]
+    pub fn contains(&self, i: u32, j: u32) -> bool {
+        (self.lo.0..=self.hi.0).contains(&i) && (self.lo.1..=self.hi.1).contains(&j)
+    }
+
+    /// Number of cells in the window.
+    pub fn cell_count(&self) -> u64 {
+        (self.hi.0 as u64 - self.lo.0 as u64 + 1) * (self.hi.1 as u64 - self.lo.1 as u64 + 1)
+    }
+}
+
+/// An axis-aligned, **inclusive** window of grid cells in d dimensions —
+/// the d-dim counterpart of [`Window`], consumed by
+/// [`CurveMapperNd::decompose_nd`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WindowNd {
+    /// Inclusive lower corner.
+    pub lo: Vec<u32>,
+    /// Inclusive upper corner.
+    pub hi: Vec<u32>,
+}
+
+impl WindowNd {
+    /// Window from inclusive corners (`lo ≤ hi` per axis, equal lengths).
+    pub fn new(lo: Vec<u32>, hi: Vec<u32>) -> Self {
+        assert_eq!(lo.len(), hi.len(), "window corners must have equal dims");
+        assert!(
+            lo.iter().zip(&hi).all(|(a, b)| a <= b),
+            "window lo must be ≤ hi per axis"
+        );
+        WindowNd { lo, hi }
+    }
+
+    /// Number of dimensions.
+    pub fn dims(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// Is the point inside the window?
+    #[inline]
+    pub fn contains(&self, p: &[u32]) -> bool {
+        p.len() == self.dims()
+            && p.iter()
+                .zip(self.lo.iter().zip(&self.hi))
+                .all(|(&c, (&l, &h))| (l..=h).contains(&c))
+    }
+
+    /// Number of cells in the window.
+    pub fn cell_count(&self) -> u64 {
+        self.lo
+            .iter()
+            .zip(&self.hi)
+            .map(|(&l, &h)| h as u64 - l as u64 + 1)
+            .fold(1u64, |acc, e| {
+                acc.checked_mul(e).expect("window cell count overflows u64")
+            })
+    }
+}
+
+/// Append `[start, end)` to a range list kept in curve order, merging
+/// with the previous range when adjacent — the shared emitter of every
+/// decomposer that visits subtrees in curve order.
+#[inline]
+pub(crate) fn push_merge_range(out: &mut Vec<Range<u64>>, start: u64, end: u64) {
+    if let Some(last) = out.last_mut() {
+        if last.end == start {
+            last.end = end;
+            return;
+        }
+    }
+    out.push(start..end);
+}
+
+/// Sort a range list by start and merge adjacent/overlapping entries —
+/// the post-pass for decomposers that emit subtrees out of curve order
+/// (the generic radix pruner recurses children in box order).
+pub(crate) fn sort_merge_ranges(mut ranges: Vec<Range<u64>>) -> Vec<Range<u64>> {
+    ranges.sort_by_key(|r| r.start);
+    let mut out: Vec<Range<u64>> = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        match out.last_mut() {
+            Some(last) if r.start <= last.end => last.end = last.end.max(r.end),
+            _ => out.push(r),
+        }
+    }
+    out
+}
+
+/// Coarsen a sorted, disjoint range list down to at most `max_ranges`
+/// entries by merging across the smallest gaps first (`0` = no cap).
+///
+/// This is the seek/false-positive trade-off knob of the query layer:
+/// every original range stays covered (a window query loses no true
+/// hits), while the gap cells swallowed by a merge become false-positive
+/// candidates for the exact filter.
+pub fn coarsen_ranges(ranges: &mut Vec<Range<u64>>, max_ranges: usize) {
+    if max_ranges == 0 || ranges.len() <= max_ranges {
+        return;
+    }
+    let mut gaps: Vec<u64> = ranges.windows(2).map(|w| w[1].start - w[0].end).collect();
+    gaps.sort_unstable();
+    let need = ranges.len() - max_ranges;
+    let threshold = gaps[need - 1];
+    let mut out: Vec<Range<u64>> = Vec::with_capacity(max_ranges);
+    let mut merged = 0usize;
+    for r in ranges.drain(..) {
+        match out.last_mut() {
+            Some(last) if merged < need && r.start - last.end <= threshold => {
+                last.end = r.end;
+                merged += 1;
+            }
+            _ => out.push(r),
+        }
+    }
+    *ranges = out;
+}
+
+/// Clamp a 2-D window to a mapper's domain bounding box; `None` when the
+/// clamped window is empty. Plane domains additionally cap coordinates at
+/// `2^31 − 1` so every decomposer's order arithmetic stays inside `u64`.
+fn clamp_window_2d(w: &Window, domain: &Domain) -> Option<Window> {
+    let cap = |hi: (u32, u32), max0: u64, max1: u64| -> Option<Window> {
+        if (w.lo.0 as u64) > max0 || (w.lo.1 as u64) > max1 {
+            return None;
+        }
+        Some(Window {
+            lo: w.lo,
+            hi: ((hi.0 as u64).min(max0) as u32, (hi.1 as u64).min(max1) as u32),
+        })
+    };
+    match *domain {
+        Domain::Plane => {
+            let max = (1u64 << 31) - 1;
+            assert!(
+                w.hi.0 as u64 <= max && w.hi.1 as u64 <= max,
+                "plane windows support coordinates below 2^31"
+            );
+            Some(*w)
+        }
+        Domain::Rect { rows, cols } => {
+            if rows == 0 || cols == 0 {
+                return None;
+            }
+            cap(w.hi, rows as u64 - 1, cols as u64 - 1)
+        }
+        Domain::Sparse { level, .. } => {
+            let side = (1u64 << level) - 1;
+            cap(w.hi, side, side)
+        }
+    }
+}
+
+/// Clamp a d-dim window to a mapper's domain bounding box; `None` when
+/// empty after clamping.
+fn clamp_window_nd(w: &WindowNd, domain: &DomainNd) -> Option<WindowNd> {
+    assert_eq!(w.dims(), domain.dims(), "window dims must match the mapper");
+    let max_of = |a: usize| -> u64 {
+        match domain {
+            DomainNd::Space { .. } => (1u64 << 31) - 1,
+            DomainNd::HyperRect { shape } => shape[a] as u64 - 1,
+            DomainNd::SparseCube { level, .. } => (1u64 << level) - 1,
+        }
+    };
+    if let DomainNd::HyperRect { shape } = domain {
+        if shape.iter().any(|&s| s == 0) {
+            return None;
+        }
+    }
+    if let DomainNd::Space { .. } = domain {
+        assert!(
+            w.hi.iter().all(|&h| (h as u64) < (1u64 << 31)),
+            "unbounded-space windows support coordinates below 2^31"
+        );
+    }
+    let mut hi = Vec::with_capacity(w.dims());
+    for (a, (&l, &h)) in w.lo.iter().zip(&w.hi).enumerate() {
+        let m = max_of(a);
+        if l as u64 > m {
+            return None;
+        }
+        hi.push((h as u64).min(m) as u32);
+    }
+    Some(WindowNd { lo: w.lo.clone(), hi })
 }
 
 // ---------------------------------------------------------------------------
@@ -266,6 +489,46 @@ pub trait CurveMapper: Send + Sync {
     /// the domain), in curve order — the contiguous *curve segment* the
     /// coordinator schedules across workers.
     fn segments(&self, range: Range<u64>) -> Segments<'_>;
+
+    /// Decompose an inclusive cell [`Window`] (clamped to the domain)
+    /// into **sorted, disjoint, maximal** contiguous order-value ranges
+    /// whose decoded cells are exactly the window's cell set — the
+    /// query-side inverse of [`CurveMapper::segments`]: a point set
+    /// sorted by this mapper's order answers the window with one binary
+    /// search per range.
+    ///
+    /// The default is the dense scan (one `order` per window cell, then
+    /// sort + merge) — correct for every bijective mapper but `O(area)`.
+    /// Curves with a radix-tree structure override it with the
+    /// logarithmic-depth orthant pruner ([`decompose_radix_2d`]) or a
+    /// native automaton descent ([`decompose_hilbert_2d`]); pass the
+    /// result through [`coarsen_ranges`] to trade false positives for
+    /// fewer ranges.
+    fn decompose(&self, window: &Window) -> Vec<Range<u64>> {
+        let w = match clamp_window_2d(window, &self.domain()) {
+            Some(w) => w,
+            None => return Vec::new(),
+        };
+        let cells = w.cell_count();
+        assert!(
+            cells <= (1 << 28),
+            "window too large ({cells} cells) for the generic scan decomposition"
+        );
+        let mut pairs = Vec::with_capacity(cells as usize);
+        for i in w.lo.0..=w.hi.0 {
+            for j in w.lo.1..=w.hi.1 {
+                pairs.push((i, j));
+            }
+        }
+        let mut orders = Vec::with_capacity(pairs.len());
+        self.order_batch(&pairs, &mut orders);
+        orders.sort_unstable();
+        let mut out = Vec::new();
+        for c in orders {
+            push_merge_range(&mut out, c, c + 1);
+        }
+        out
+    }
 }
 
 /// Run `body` over every cell of the mapper's (finite) domain in curve
@@ -297,6 +560,194 @@ pub fn collect_rect<C: SpaceFillingCurve>(rows: u32, cols: u32) -> Vec<(u32, u32
             out.push((i, j));
         }
     });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Window decomposers (2-D)
+// ---------------------------------------------------------------------------
+
+/// Generic radix-tree window decomposer for any self-similar
+/// [`SpaceFillingCurve`] over the plane: descend the curve's digit tree
+/// as a cell-space orthant recursion — prune subtrees disjoint from the
+/// window, emit a whole subtree's contiguous order span when its cell box
+/// is fully inside, recurse on straddle — in logarithmic depth, like the
+/// paper's Mealy automaton conversions.
+///
+/// Correctness requires only that every aligned `RADIX^m` box occupies
+/// one contiguous order range (true for Hilbert, Z-order, Gray and
+/// Peano; *not* for the row-major canonic order, which overrides
+/// [`SpaceFillingCurve::decompose_window`] with its closed form). The
+/// emitted span of a fully-inside box is recovered from one `order`
+/// call on its corner, rounded down to the subtree size — the "correct
+/// if slower" fallback next to the native automaton descents below.
+pub fn decompose_radix_2d<C: SpaceFillingCurve>(window: &Window) -> Vec<Range<u64>> {
+    let w = match clamp_window_2d(window, &Domain::Plane) {
+        Some(w) => w,
+        None => return Vec::new(),
+    };
+    let radix = C::RADIX as u64;
+    let need = w.hi.0.max(w.hi.1) as u64 + 1;
+    let mut side = 1u64;
+    while side < need {
+        side *= radix;
+    }
+    let mut out = Vec::new();
+    // Recursion over aligned boxes: `bside` is the box side, corners in
+    // u64 to dodge u32 overflow at the cover grid's edge.
+    fn rec<C: SpaceFillingCurve>(
+        w: &Window,
+        radix: u64,
+        i0: u64,
+        j0: u64,
+        bside: u64,
+        out: &mut Vec<Range<u64>>,
+    ) {
+        let (lo, hi) = (w.lo, w.hi);
+        if i0 > hi.0 as u64
+            || i0 + bside - 1 < lo.0 as u64
+            || j0 > hi.1 as u64
+            || j0 + bside - 1 < lo.1 as u64
+        {
+            return;
+        }
+        if lo.0 as u64 <= i0
+            && i0 + bside - 1 <= hi.0 as u64
+            && lo.1 as u64 <= j0
+            && j0 + bside - 1 <= hi.1 as u64
+        {
+            let size = bside * bside;
+            let c0 = C::order(i0 as u32, j0 as u32);
+            let base = c0 - c0 % size;
+            out.push(base..base + size);
+            return;
+        }
+        let child = bside / radix;
+        for ci in 0..radix {
+            for cj in 0..radix {
+                rec::<C>(w, radix, i0 + ci * child, j0 + cj * child, child, out);
+            }
+        }
+    }
+    rec::<C>(&w, radix, 0, 0, side, &mut out);
+    sort_merge_ranges(out)
+}
+
+/// Native Hilbert window decomposer at a fixed `level` (start state by
+/// the §3 parity rule, so it matches both [`HilbertSquare`] and the
+/// variable-resolution plane values at `level =`
+/// [`Hilbert::effective_level`]): the Mealy automaton's inverse table
+/// drives the descent, mapping each order digit directly to its
+/// quadrant, so classifying a subtree costs `O(1)` — no per-node `order`
+/// call — and subtrees are visited in curve order, merging adjacent runs
+/// on the fly.
+pub fn decompose_hilbert_2d(level: u32, window: &Window) -> Vec<Range<u64>> {
+    use super::hilbert::{INV, STATE_D, STATE_U};
+    assert!(level <= 32, "level {level} exceeds 32");
+    let side = 1u64 << level;
+    let lo = window.lo;
+    let hi = (
+        (window.hi.0 as u64).min(side - 1) as u32,
+        (window.hi.1 as u64).min(side - 1) as u32,
+    );
+    if lo.0 as u64 >= side || lo.1 as u64 >= side {
+        return Vec::new();
+    }
+    let w = Window { lo, hi };
+    let mut out = Vec::new();
+    fn rec(
+        w: &Window,
+        lsize: u32,
+        i0: u64,
+        j0: u64,
+        h0: u64,
+        state: u8,
+        out: &mut Vec<Range<u64>>,
+    ) {
+        let bside = 1u64 << lsize;
+        if i0 > w.hi.0 as u64
+            || i0 + bside - 1 < w.lo.0 as u64
+            || j0 > w.hi.1 as u64
+            || j0 + bside - 1 < w.lo.1 as u64
+        {
+            return;
+        }
+        // The lsize ≤ 31 guard keeps the root span of a level-32 descent
+        // (which exceeds u64) out of the emission path: a window capped
+        // below 2^31 per axis never covers that root, so it always
+        // recurses into its only surviving quadrant.
+        if lsize <= 31
+            && w.lo.0 as u64 <= i0
+            && i0 + bside - 1 <= w.hi.0 as u64
+            && w.lo.1 as u64 <= j0
+            && j0 + bside - 1 <= w.hi.1 as u64
+        {
+            push_merge_range(out, h0, h0 + (1u64 << (2 * lsize)));
+            return;
+        }
+        let half = bside >> 1;
+        let csize = 1u64 << (2 * (lsize - 1));
+        for digit in 0..4u64 {
+            let (ib, jb, next) = INV[state as usize][digit as usize];
+            rec(
+                w,
+                lsize - 1,
+                i0 + ib as u64 * half,
+                j0 + jb as u64 * half,
+                h0 + digit * csize,
+                next,
+                out,
+            );
+        }
+    }
+    let s0 = if level % 2 == 0 { STATE_U } else { STATE_D };
+    rec(&w, level, 0, 0, 0, s0, &mut out);
+    out
+}
+
+/// Native Z-order window decomposer at a fixed `level`: each order digit
+/// `(i_bit << 1) | j_bit` names its quadrant directly (the degenerate
+/// single-state automaton), so the descent needs no tables at all and
+/// emits in curve order.
+pub fn decompose_zorder_2d(level: u32, window: &Window) -> Vec<Range<u64>> {
+    assert!(level <= 32, "level {level} exceeds 32");
+    let side = 1u64 << level;
+    let lo = window.lo;
+    let hi = (
+        (window.hi.0 as u64).min(side - 1) as u32,
+        (window.hi.1 as u64).min(side - 1) as u32,
+    );
+    if lo.0 as u64 >= side || lo.1 as u64 >= side {
+        return Vec::new();
+    }
+    let w = Window { lo, hi };
+    let mut out = Vec::new();
+    fn rec(w: &Window, lsize: u32, i0: u64, j0: u64, h0: u64, out: &mut Vec<Range<u64>>) {
+        let bside = 1u64 << lsize;
+        if i0 > w.hi.0 as u64
+            || i0 + bside - 1 < w.lo.0 as u64
+            || j0 > w.hi.1 as u64
+            || j0 + bside - 1 < w.lo.1 as u64
+        {
+            return;
+        }
+        if lsize <= 31
+            && w.lo.0 as u64 <= i0
+            && i0 + bside - 1 <= w.hi.0 as u64
+            && w.lo.1 as u64 <= j0
+            && j0 + bside - 1 <= w.hi.1 as u64
+        {
+            push_merge_range(out, h0, h0 + (1u64 << (2 * lsize)));
+            return;
+        }
+        let half = bside >> 1;
+        let csize = 1u64 << (2 * (lsize - 1));
+        for digit in 0..4u64 {
+            let (ib, jb) = (digit >> 1, digit & 1);
+            rec(w, lsize - 1, i0 + ib * half, j0 + jb * half, h0 + digit * csize, out);
+        }
+    }
+    rec(&w, level, 0, 0, 0, &mut out);
     out
 }
 
@@ -536,6 +987,136 @@ pub trait CurveMapperNd: Send + Sync {
     /// the domain), in curve order — the d-dim curve segment the
     /// coordinator schedules across workers.
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_>;
+
+    /// Decompose an inclusive cell [`WindowNd`] (clamped to the domain)
+    /// into **sorted, disjoint, maximal** contiguous order-value ranges
+    /// covering exactly the window's cell set — the d-dimensional face
+    /// of [`CurveMapper::decompose`], and what
+    /// [`SfcIndex`](crate::index::SfcIndex) binary-searches per range.
+    ///
+    /// The default is the dense odometer scan (correct for any bijective
+    /// mapper, `O(volume)`); radix-tree curves override it with the
+    /// orthant pruner ([`decompose_radix_nd`]) or a native automaton
+    /// descent.
+    fn decompose_nd(&self, window: &WindowNd) -> Vec<Range<u64>> {
+        let w = match clamp_window_nd(window, &self.domain_nd()) {
+            Some(w) => w,
+            None => return Vec::new(),
+        };
+        let cells = w.cell_count();
+        assert!(
+            cells <= (1 << 28),
+            "window too large ({cells} cells) for the generic scan decomposition"
+        );
+        let d = self.dims();
+        let mut flat = Vec::with_capacity(cells as usize * d);
+        let mut p = w.lo.clone();
+        loop {
+            flat.extend_from_slice(&p);
+            let mut a = 0;
+            while a < d {
+                if p[a] < w.hi[a] {
+                    p[a] += 1;
+                    break;
+                }
+                p[a] = w.lo[a];
+                a += 1;
+            }
+            if a == d {
+                break;
+            }
+        }
+        let mut orders = Vec::with_capacity(cells as usize);
+        self.order_batch_nd(&flat, &mut orders);
+        orders.sort_unstable();
+        let mut out = Vec::new();
+        for c in orders {
+            push_merge_range(&mut out, c, c + 1);
+        }
+        out
+    }
+}
+
+/// Generic radix-tree window decomposer for a d-dimensional cube mapper:
+/// the orthant recursion of [`decompose_radix_2d`] over `radix^level`
+/// hypercubes, classifying aligned boxes geometrically and recovering a
+/// fully-inside box's contiguous span from one `order_nd` call on its
+/// corner. Valid for every self-similar cube curve (aligned `radix^m`
+/// orthants occupy contiguous order ranges) — the fallback behind the
+/// Gray-code and Peano Nd mappers; Hilbert and Z-order use their native
+/// automaton descents instead.
+pub fn decompose_radix_nd(
+    mapper: &dyn CurveMapperNd,
+    radix: u32,
+    level: u32,
+    window: &WindowNd,
+) -> Vec<Range<u64>> {
+    let w = match clamp_window_nd(window, &mapper.domain_nd()) {
+        Some(w) => w,
+        None => return Vec::new(),
+    };
+    let d = mapper.dims();
+    let side = (radix as u64).pow(level);
+    struct Ctx<'a> {
+        mapper: &'a dyn CurveMapperNd,
+        radix: u64,
+        d: usize,
+        w: WindowNd,
+        out: Vec<Range<u64>>,
+        probe: Vec<u32>,
+    }
+    fn rec(ctx: &mut Ctx<'_>, corner: &[u64], bside: u64) {
+        for a in 0..ctx.d {
+            if corner[a] > ctx.w.hi[a] as u64 || corner[a] + bside - 1 < ctx.w.lo[a] as u64 {
+                return;
+            }
+        }
+        let inside = (0..ctx.d).all(|a| {
+            ctx.w.lo[a] as u64 <= corner[a] && corner[a] + bside - 1 <= ctx.w.hi[a] as u64
+        });
+        if inside {
+            let size = bside.pow(ctx.d as u32);
+            for (a, c) in ctx.probe.iter_mut().enumerate() {
+                *c = corner[a] as u32;
+            }
+            let c0 = ctx.mapper.order_nd(&ctx.probe);
+            let base = c0 - c0 % size;
+            ctx.out.push(base..base + size);
+            return;
+        }
+        let child = bside / ctx.radix;
+        let mut idx = vec![0u64; ctx.d];
+        let mut cc = vec![0u64; ctx.d];
+        loop {
+            for a in 0..ctx.d {
+                cc[a] = corner[a] + idx[a] * child;
+            }
+            rec(ctx, &cc, child);
+            let mut a = 0;
+            while a < ctx.d {
+                if idx[a] < ctx.radix - 1 {
+                    idx[a] += 1;
+                    break;
+                }
+                idx[a] = 0;
+                a += 1;
+            }
+            if a == ctx.d {
+                break;
+            }
+        }
+    }
+    let mut ctx = Ctx {
+        mapper,
+        radix: radix as u64,
+        d,
+        w,
+        out: Vec::new(),
+        probe: vec![0u32; d],
+    };
+    let corner = vec![0u64; d];
+    rec(&mut ctx, &corner, side);
+    sort_merge_ranges(ctx.out)
 }
 
 /// Run `body` over every point of the mapper's (finite) domain in curve
@@ -629,6 +1210,17 @@ macro_rules! adapt_curve_mapper_2d {
             fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
                 SegmentsNd::pairs(CurveMapper::segments(self, range))
             }
+
+            fn decompose_nd(&self, window: &WindowNd) -> Vec<Range<u64>> {
+                assert_eq!(window.dims(), 2, "2-D mapper takes 2-dim windows");
+                CurveMapper::decompose(
+                    self,
+                    &Window {
+                        lo: (window.lo[0], window.lo[1]),
+                        hi: (window.hi[0], window.hi[1]),
+                    },
+                )
+            }
         }
     };
 }
@@ -709,6 +1301,10 @@ impl<C: SpaceFillingCurve + Send + Sync + 'static> CurveMapper for StaticCurve<C
 
     fn segments(&self, range: Range<u64>) -> Segments<'_> {
         Segments::from_iter_dyn(PlaneSegments::<C>::new(range))
+    }
+
+    fn decompose(&self, window: &Window) -> Vec<Range<u64>> {
+        C::decompose_window(window)
     }
 }
 
@@ -847,6 +1443,10 @@ impl CurveMapper for HilbertSquare {
         let start = range.start.min(total);
         let end = range.end.min(total).max(start);
         Segments::from_iter_dyn(HilbertIter::range(self.level, start, end))
+    }
+
+    fn decompose(&self, window: &Window) -> Vec<Range<u64>> {
+        decompose_hilbert_2d(self.level, window)
     }
 }
 
@@ -1000,6 +1600,22 @@ impl CurveMapper for CanonicRect {
             (start..end).map(move |c| ((c / cols) as u32, (c % cols) as u32)),
         )
     }
+
+    fn decompose(&self, window: &Window) -> Vec<Range<u64>> {
+        // Row-major closed form: one run per window row, runs merging
+        // into a single range when the window spans full rows.
+        let w = match clamp_window_2d(window, &self.domain()) {
+            Some(w) => w,
+            None => return Vec::new(),
+        };
+        let cols = self.cols as u64;
+        let mut out = Vec::with_capacity((w.hi.0 - w.lo.0 + 1) as usize);
+        for i in w.lo.0..=w.hi.0 {
+            let base = i as u64 * cols;
+            push_merge_range(&mut out, base + w.lo.1 as u64, base + w.hi.1 as u64 + 1);
+        }
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1096,6 +1712,14 @@ impl<R: Region + Send + Sync> CurveMapper for FgfMapper<R> {
         let mut cells = Vec::new();
         self.traverse_range(range.start, range.end, |i, j, _h| cells.push((i, j)));
         Segments::from_vec(cells)
+    }
+
+    fn decompose(&self, window: &Window) -> Vec<Range<u64>> {
+        // Order values are true Hilbert values at the cover level, so the
+        // window decomposes exactly like a Hilbert square; cells outside
+        // the region stay false-positive candidates for the caller's
+        // exact filter, the same contract as the sparse domain itself.
+        decompose_hilbert_2d(self.level, window)
     }
 }
 
@@ -1333,5 +1957,146 @@ mod tests {
         let mut count = 0u64;
         for_each(&r, |_, _| count += 1);
         assert_eq!(count, 28);
+    }
+
+    #[test]
+    fn window_accounting() {
+        let w = Window::new((2, 3), (5, 3));
+        assert_eq!(w.cell_count(), 4);
+        assert!(w.contains(2, 3) && w.contains(5, 3));
+        assert!(!w.contains(1, 3) && !w.contains(3, 4));
+        let wn = WindowNd::new(vec![0, 1, 2], vec![3, 1, 4]);
+        assert_eq!(wn.dims(), 3);
+        assert_eq!(wn.cell_count(), 12);
+        assert!(wn.contains(&[2, 1, 3]));
+        assert!(!wn.contains(&[2, 0, 3]));
+        assert!(!wn.contains(&[2, 1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "lo must be ≤ hi")]
+    fn window_rejects_inverted_corners() {
+        let _ = Window::new((5, 0), (4, 9));
+    }
+
+    #[test]
+    fn coarsen_merges_smallest_gaps_first() {
+        // Gaps: 1 (after 0..4), 10 (after 5..6), 2 (after 16..20).
+        let mut r = vec![0..4, 5..6, 16..20, 22..30];
+        coarsen_ranges(&mut r, 3);
+        assert_eq!(r, vec![0..6, 16..20, 22..30]);
+        let mut r = vec![0..4, 5..6, 16..20, 22..30];
+        coarsen_ranges(&mut r, 2);
+        assert_eq!(r, vec![0..6, 16..30]);
+        let mut r = vec![0..4, 5..6, 16..20, 22..30];
+        coarsen_ranges(&mut r, 1);
+        assert_eq!(r, vec![0..30]);
+        // No-ops: zero cap and already under the cap.
+        let mut r = vec![0..4, 5..6];
+        coarsen_ranges(&mut r, 0);
+        assert_eq!(r.len(), 2);
+        coarsen_ranges(&mut r, 5);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn hilbert_square_decompose_matches_default_scan() {
+        // The native Mealy descent against the trait's dense-scan
+        // default (forced through a mapper without the override).
+        let sq = HilbertSquare::new(5);
+        let r = RectMapper::from_path(
+            "hilbert-scan",
+            32,
+            32,
+            sq.segments(0..1024).collect(),
+        );
+        for w in [
+            Window::new((0, 0), (31, 31)),
+            Window::new((3, 7), (19, 11)),
+            Window::new((16, 16), (16, 16)),
+            Window::new((0, 30), (5, 31)),
+        ] {
+            assert_eq!(sq.decompose(&w), r.decompose(&w), "{w:?}");
+        }
+        // Full grid is one range; windows beyond the domain clamp.
+        assert_eq!(sq.decompose(&Window::new((0, 0), (31, 31))), vec![0..1024]);
+        assert_eq!(
+            sq.decompose(&Window::new((0, 0), (500, 500))),
+            vec![0..1024]
+        );
+        assert!(sq.decompose(&Window::new((32, 0), (40, 31))).is_empty());
+    }
+
+    #[test]
+    fn plane_hilbert_decompose_matches_fixed_level() {
+        // Variable-resolution plane values == fixed-level values on the
+        // covered square, so the two descents must agree wherever the
+        // window fits the square.
+        let plane = CurveKind::Hilbert.mapper();
+        let sq = HilbertSquare::new(4);
+        for w in [
+            Window::new((0, 0), (15, 15)),
+            Window::new((2, 5), (9, 14)),
+            Window::new((7, 0), (7, 0)),
+        ] {
+            assert_eq!(plane.decompose(&w), sq.decompose(&w), "{w:?}");
+        }
+    }
+
+    #[test]
+    fn canonic_rect_decompose_closed_form() {
+        let c = CanonicRect::new(6, 10);
+        // Interior window: one run per row.
+        assert_eq!(
+            c.decompose(&Window::new((1, 2), (3, 4))),
+            vec![12..15, 22..25, 32..35]
+        );
+        // Full-width windows merge into a single range.
+        assert_eq!(c.decompose(&Window::new((2, 0), (4, 9))), vec![20..50]);
+    }
+
+    #[test]
+    fn fgf_decompose_ranges_cover_traversed_region_cells() {
+        // The load-bearing claim: the order values fgf_hilbert_loop
+        // emits are the same fixed-level Hilbert values the decomposer
+        // ranges over, so a range decomposition selects exactly the
+        // traversed region cells inside the window.
+        let m = FgfMapper::new(4, UpperTriangle);
+        let w = Window::new((2, 3), (9, 12));
+        let ranges = m.decompose(&w);
+        let in_ranges = |h: u64| ranges.iter().any(|r| r.contains(&h));
+        let mut want = 0u64;
+        let mut got = 0u64;
+        m.traverse(|i, j, h| {
+            if w.contains(i, j) {
+                want += 1;
+            }
+            if in_ranges(h) {
+                got += 1;
+                assert!(w.contains(i, j), "range hit ({i},{j}) outside window");
+            }
+        });
+        assert!(want > 0, "window must intersect the region");
+        assert_eq!(got, want, "ranges must select exactly the in-window region cells");
+    }
+
+    #[test]
+    fn decomposed_ranges_cover_windows_exactly() {
+        // Exhaustive small-grid check for the three 2-D descents.
+        for kind in CurveKind::ALL {
+            let m = kind.mapper();
+            let w = Window::new((1, 2), (6, 4));
+            let mut got = std::collections::HashSet::new();
+            for r in m.decompose(&w) {
+                for c in r {
+                    let p = m.coords(c);
+                    assert!(got.insert(p), "{}: duplicate {p:?}", kind.name());
+                }
+            }
+            assert_eq!(got.len() as u64, w.cell_count(), "{}", kind.name());
+            for (i, j) in got {
+                assert!(w.contains(i, j), "{}", kind.name());
+            }
+        }
     }
 }

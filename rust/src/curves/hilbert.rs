@@ -185,6 +185,19 @@ impl SpaceFillingCurve for Hilbert {
         }
     }
 
+    /// Native window decomposition: the Mealy-automaton descent at the
+    /// window's effective (even) level — parity consistency makes the
+    /// fixed-level subtree spans equal the variable-resolution plane
+    /// values, so the emitted ranges are valid plane order ranges.
+    fn decompose_window(window: &crate::curves::engine::Window) -> Vec<std::ops::Range<u64>> {
+        assert!(
+            window.hi.0 < (1 << 31) && window.hi.1 < (1 << 31),
+            "plane windows support coordinates below 2^31"
+        );
+        let level = Self::effective_level(window.hi.0, window.hi.1);
+        crate::curves::engine::decompose_hilbert_2d(level, window)
+    }
+
     /// Batched ℋ⁻¹(h): consecutive order-value runs are stepped with the
     /// Figure-5 `O(1)` update (one automaton inversion per run) instead
     /// of one `O(log h)` inversion per value.

@@ -14,8 +14,26 @@
 //! ## The engine is the entry point
 //!
 //! Every consumer above this layer — the coordinator, the §7 apps, the
-//! grid index, the CLI — dispatches through the object-safe
-//! [`engine::CurveMapper`] interface. Pick a mapper via [`CurveKind`]:
+//! indexes, the CLI — dispatches through the object-safe
+//! [`engine::CurveMapper`] interface. The layer stack:
+//!
+//! ```text
+//!   apps / CLI / coordinator / index::{GridIndex*, SfcIndex}
+//!        │ order ⇄ coords │ segments │ decompose(window)→ranges
+//!   ┌────┴────────────────┴──────────┴───────────────────────────┐
+//!   │ engine: CurveMapper (2-D) · CurveMapperNd (d-dim)          │
+//!   │   batched conversions · curve segments · window decomposer │
+//!   └────┬───────────────────────────────────────────────────────┘
+//!   curve toolkit: Z/Gray/Hilbert/Peano automata · FUR · FGF · ndim
+//! ```
+//!
+//! The *decomposer* box is the query side: [`engine::CurveMapper::decompose`]
+//! / [`engine::CurveMapperNd::decompose_nd`] turn a cell window into
+//! sorted, disjoint, maximal contiguous order-value ranges (native
+//! automaton descents for Hilbert/Z-order, the generic radix-tree
+//! orthant pruner elsewhere), which is what lets an order-sorted point
+//! set answer spatial queries with binary searches. Pick a mapper via
+//! [`CurveKind`]:
 //!
 //! ```
 //! use sfc_mine::curves::engine::CurveMapper;
@@ -144,6 +162,25 @@ pub trait SpaceFillingCurve {
     /// Default: the scalar loop.
     fn coords_batch_static(orders: &[u64], out: &mut Vec<(u32, u32)>) {
         out.extend(orders.iter().map(|&c| Self::coords(c)));
+    }
+
+    /// Decompose an inclusive cell window of the plane into sorted,
+    /// disjoint, maximal contiguous runs of this curve's order values
+    /// (the query-side primitive behind [`engine::CurveMapper::decompose`];
+    /// window coordinates must stay below `2^31` so order spans fit
+    /// `u64`).
+    ///
+    /// The default is the generic radix-tree orthant pruner
+    /// ([`engine::decompose_radix_2d`]), valid for every self-similar
+    /// curve (aligned `RADIX^m` blocks occupy contiguous order ranges).
+    /// Hilbert and Z-order override it with their native automaton
+    /// descents; the canonic order (whose aligned blocks are *not*
+    /// contiguous) overrides it with the row-major closed form.
+    fn decompose_window(window: &engine::Window) -> Vec<std::ops::Range<u64>>
+    where
+        Self: Sized,
+    {
+        engine::decompose_radix_2d::<Self>(window)
     }
 
     /// Enumerate the `n×n` grid in curve order via repeated `coords`.

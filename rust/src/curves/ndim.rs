@@ -37,7 +37,10 @@
 //! assert_eq!(p, [3, 9, 14]);
 //! ```
 
-use super::engine::{split_consecutive_runs, CurveMapperNd, DomainNd, SegmentsNd};
+use super::engine::{
+    decompose_radix_nd, push_merge_range, split_consecutive_runs, CurveMapperNd, DomainNd,
+    SegmentsNd, WindowNd,
+};
 use super::gray::{gray, gray_inv};
 use std::ops::Range;
 
@@ -171,6 +174,53 @@ impl CurveMapperNd for CanonicNd {
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span))
     }
+
+    fn decompose_nd(&self, window: &WindowNd) -> Vec<Range<u64>> {
+        // Mixed-radix closed form: one run per fixed prefix of the
+        // leading axes (the last axis is the contiguous one); prefixes
+        // iterate in row-major order, so full-width runs merge on the
+        // fly.
+        let d = self.shape.len();
+        assert_eq!(window.dims(), d, "window dims must match the mapper");
+        let lo = window.lo.clone();
+        let mut hi = Vec::with_capacity(d);
+        for a in 0..d {
+            if lo[a] >= self.shape[a] {
+                return Vec::new();
+            }
+            hi.push(window.hi[a].min(self.shape[a] - 1));
+        }
+        let mut strides = vec![1u64; d];
+        for a in (0..d.saturating_sub(1)).rev() {
+            strides[a] = strides[a + 1] * self.shape[a + 1] as u64;
+        }
+        let mut out = Vec::new();
+        let mut idx: Vec<u32> = lo[..d - 1].to_vec();
+        loop {
+            let base: u64 = idx
+                .iter()
+                .zip(&strides)
+                .map(|(&c, &s)| c as u64 * s)
+                .sum();
+            push_merge_range(&mut out, base + lo[d - 1] as u64, base + hi[d - 1] as u64 + 1);
+            // Row-major odometer over the leading axes (last one fastest),
+            // so bases strictly increase.
+            let mut a = d.wrapping_sub(2);
+            loop {
+                if a == usize::MAX {
+                    return out;
+                }
+                if idx[a] < hi[a] {
+                    idx[a] += 1;
+                    for b in a + 1..d - 1 {
+                        idx[b] = lo[b];
+                    }
+                    break;
+                }
+                a = a.wrapping_sub(1);
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -239,6 +289,51 @@ impl CurveMapperNd for ZOrderNd {
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
     }
+
+    fn decompose_nd(&self, window: &WindowNd) -> Vec<Range<u64>> {
+        // Native orthant descent: each order digit's bits name the child
+        // orthant directly (the degenerate single-state automaton), so
+        // classification is pure bit arithmetic and subtrees are visited
+        // in curve order (adjacent runs merge on the fly).
+        let n = self.dims;
+        let w = match clamp_cube_window(window, n as usize, self.side()) {
+            Some(w) => w,
+            None => return Vec::new(),
+        };
+        fn rec(
+            m: &ZOrderNd,
+            w: &WindowNd,
+            depth: u32,
+            corner: &mut [u32],
+            h0: u64,
+            out: &mut Vec<Range<u64>>,
+        ) {
+            let n = m.dims;
+            let lsize = m.level - depth;
+            let bside = 1u64 << lsize;
+            match classify_box(w, corner, bside) {
+                BoxClass::Disjoint => {}
+                BoxClass::Inside => push_merge_range(out, h0, h0 + (1u64 << (lsize * n))),
+                BoxClass::Straddle => {
+                    let half = (bside >> 1) as u32;
+                    let csize = 1u64 << ((lsize - 1) * n);
+                    for digit in 0..(1u64 << n) {
+                        for (a, c) in corner.iter_mut().enumerate() {
+                            *c += ((digit >> (n as usize - 1 - a)) & 1) as u32 * half;
+                        }
+                        rec(m, w, depth + 1, corner, h0 + digit * csize, out);
+                        for (a, c) in corner.iter_mut().enumerate() {
+                            *c -= ((digit >> (n as usize - 1 - a)) & 1) as u32 * half;
+                        }
+                    }
+                }
+            }
+        }
+        let mut corner = vec![0u32; n as usize];
+        let mut out = Vec::new();
+        rec(self, &w, 0, &mut corner, 0, &mut out);
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -303,6 +398,14 @@ impl CurveMapperNd for GrayNd {
 
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
+    }
+
+    fn decompose_nd(&self, window: &WindowNd) -> Vec<Range<u64>> {
+        // Correct generic fallback: the radix-2 orthant pruner with
+        // `order_nd`-probed span recovery (aligned subcubes are
+        // order-contiguous because the Gray rank's high bits are fixed
+        // by the subcube prefix while its low bits stay bijective).
+        decompose_radix_nd(self, 2, self.level, window)
     }
 }
 
@@ -542,6 +645,58 @@ impl CurveMapperNd for HilbertNd {
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
     }
+
+    fn decompose_nd(&self, window: &WindowNd) -> Vec<Range<u64>> {
+        // Native automaton descent: the orientation update (entry-vertex
+        // XOR + intra-word rotation) is carried down the digit tree, so
+        // each child orthant is located in O(d) bit ops — no per-node
+        // inverse conversion — and subtrees are visited in curve order
+        // (adjacent runs merge on the fly), the d-dim generalization of
+        // the 2-D Mealy descent.
+        let n = self.dims;
+        let w = match clamp_cube_window(window, n as usize, self.side()) {
+            Some(w) => w,
+            None => return Vec::new(),
+        };
+        fn rec(
+            m: &HilbertNd,
+            w: &WindowNd,
+            depth: u32,
+            corner: &mut [u32],
+            h0: u64,
+            orient: (u64, u32),
+            out: &mut Vec<Range<u64>>,
+        ) {
+            let n = m.dims;
+            let (e, d) = orient;
+            let lsize = m.level - depth;
+            let bside = 1u64 << lsize;
+            match classify_box(w, corner, bside) {
+                BoxClass::Disjoint => {}
+                BoxClass::Inside => push_merge_range(out, h0, h0 + (1u64 << (lsize * n))),
+                BoxClass::Straddle => {
+                    let half = (bside >> 1) as u32;
+                    let csize = 1u64 << ((lsize - 1) * n);
+                    for digit in 0..(1u64 << n) {
+                        let l = HilbertNd::rotl(gray(digit), d + 1, n) ^ e;
+                        for (a, c) in corner.iter_mut().enumerate() {
+                            *c += ((l >> a) & 1) as u32 * half;
+                        }
+                        let e2 = e ^ HilbertNd::rotl(HilbertNd::entry(digit), d + 1, n);
+                        let d2 = (d + HilbertNd::dir(digit, n) + 1) % n;
+                        rec(m, w, depth + 1, corner, h0 + digit * csize, (e2, d2), out);
+                        for (a, c) in corner.iter_mut().enumerate() {
+                            *c -= ((l >> a) & 1) as u32 * half;
+                        }
+                    }
+                }
+            }
+        }
+        let mut corner = vec![0u32; n as usize];
+        let mut out = Vec::new();
+        rec(self, &w, 0, &mut corner, 0, self.start(), &mut out);
+        out
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -711,6 +866,14 @@ impl CurveMapperNd for PeanoNd {
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
     }
+
+    fn decompose_nd(&self, window: &WindowNd) -> Vec<Range<u64>> {
+        // Correct generic fallback: the radix-3 orthant pruner — aligned
+        // 3^m blocks are order-contiguous because the serpentine automaton
+        // is self-similar (fixed prefix digits pin the flip state, the
+        // remaining digits sweep the whole block).
+        decompose_radix_nd(self, 3, self.level, window)
+    }
 }
 
 /// Clamp an order range to `[0, span)` without inverting it.
@@ -720,23 +883,83 @@ fn clamp_range(range: Range<u64>, span: u64) -> Range<u64> {
     start..end
 }
 
-/// Argsort of flattened `dims`-coordinate points (all `< 2^level`) along
-/// their d-dimensional Hilbert rank: `order[pos]` is the input index of
-/// the `pos`-th point in curve order. Conversion goes through the Nd
+/// Box-vs-window classification for the native orthant descents.
+enum BoxClass {
+    /// No window cell in the box: prune.
+    Disjoint,
+    /// The box is fully inside the window: emit its whole order span.
+    Inside,
+    /// Partial overlap: recurse into child orthants.
+    Straddle,
+}
+
+/// Classify the aligned box `[corner, corner + bside)` against `w`
+/// (boxes of side 1 are never `Straddle`, which is what terminates the
+/// descents).
+fn classify_box(w: &WindowNd, corner: &[u32], bside: u64) -> BoxClass {
+    let mut inside = true;
+    for (a, &c) in corner.iter().enumerate() {
+        let c = c as u64;
+        if c > w.hi[a] as u64 || c + bside - 1 < w.lo[a] as u64 {
+            return BoxClass::Disjoint;
+        }
+        inside &= w.lo[a] as u64 <= c && c + bside - 1 <= w.hi[a] as u64;
+    }
+    if inside {
+        BoxClass::Inside
+    } else {
+        BoxClass::Straddle
+    }
+}
+
+/// Clamp a window to the `side^dims` cube; `None` when empty after the
+/// clamp.
+fn clamp_cube_window(w: &WindowNd, dims: usize, side: u32) -> Option<WindowNd> {
+    assert_eq!(w.dims(), dims, "window dims must match the mapper");
+    let mut hi = Vec::with_capacity(dims);
+    for a in 0..dims {
+        if w.lo[a] >= side {
+            return None;
+        }
+        hi.push(w.hi[a].min(side - 1));
+    }
+    Some(WindowNd { lo: w.lo.clone(), hi })
+}
+
+/// Stable argsort of a key column: `order[pos]` is the input index of
+/// the `pos`-th smallest key (ties keep the input order). The shared
+/// back half of every curve-rank permutation.
+pub(crate) fn argsort_stable(keys: &[u64]) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..keys.len() as u32).collect();
+    order.sort_by_key(|&idx| keys[idx as usize]);
+    order
+}
+
+/// Argsort of flattened `mapper.dims()`-coordinate points along their
+/// order under any d-dimensional curve: `order[pos]` is the input index
+/// of the `pos`-th point in curve order. Conversion goes through the Nd
 /// batched path (one automaton amortised over the whole set); the sort
-/// is stable, so ties keep the input order. Shared by the d-dim grid
-/// index's cell ranking and the k-means point sharding.
+/// is stable, so ties keep the input order.
+pub fn sfc_argsort(flat: &[u32], mapper: &dyn CurveMapperNd) -> Vec<u32> {
+    if flat.is_empty() {
+        return Vec::new();
+    }
+    let dims = mapper.dims();
+    assert_eq!(flat.len() % dims, 0, "flat length must be a multiple of dims");
+    let mut hs = Vec::with_capacity(flat.len() / dims);
+    mapper.order_batch_nd(flat, &mut hs);
+    argsort_stable(&hs)
+}
+
+/// [`sfc_argsort`] along the d-dimensional Hilbert curve (all
+/// coordinates `< 2^level`). Shared by the d-dim grid index's cell
+/// ranking, the k-means point sharding and the
+/// [`SfcIndex`](crate::index::SfcIndex) build.
 pub fn hilbert_argsort(flat: &[u32], dims: usize, level: u32) -> Vec<u32> {
     if flat.is_empty() {
         return Vec::new();
     }
-    assert_eq!(flat.len() % dims, 0, "flat length must be a multiple of dims");
-    let mapper = HilbertNd::new(dims, level);
-    let mut hs = Vec::with_capacity(flat.len() / dims);
-    mapper.order_batch_nd(flat, &mut hs);
-    let mut order: Vec<u32> = (0..hs.len() as u32).collect();
-    order.sort_by_key(|&idx| hs[idx as usize]);
-    order
+    sfc_argsort(flat, &HilbertNd::new(dims, level))
 }
 
 #[cfg(test)]
@@ -919,5 +1142,100 @@ mod tests {
     #[should_panic(expected = "exceeds 63")]
     fn cube_constructor_rejects_u64_overflow() {
         let _ = ZOrderNd::new(16, 4);
+    }
+
+    #[test]
+    fn native_descents_match_generic_pruner() {
+        // The automaton-driven Hilbert/Z-order descents must emit exactly
+        // what the order_nd-probed radix pruner emits (same subtree
+        // structure, cheaper classification).
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(13);
+        for dims in [2usize, 3, 4] {
+            let level = if dims == 4 { 3 } else { 4 };
+            let h = HilbertNd::new(dims, level);
+            let z = ZOrderNd::new(dims, level);
+            let side = h.side() as u64;
+            for _ in 0..15 {
+                let mut lo = Vec::new();
+                let mut hi = Vec::new();
+                for _ in 0..dims {
+                    let a = rng.below(side) as u32;
+                    let b = rng.below(side) as u32;
+                    lo.push(a.min(b));
+                    hi.push(a.max(b));
+                }
+                let w = WindowNd::new(lo, hi);
+                assert_eq!(
+                    h.decompose_nd(&w),
+                    decompose_radix_nd(&h, 2, level, &w),
+                    "hilbert d={dims}"
+                );
+                assert_eq!(
+                    z.decompose_nd(&w),
+                    decompose_radix_nd(&z, 2, level, &w),
+                    "zorder d={dims}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hilbert_nd_d2_decompose_matches_2d_mealy_descent() {
+        // The Butz/Lawder descent at d = 2 must agree range-for-range
+        // with the 2-D Mealy-automaton descent (same curve, same
+        // subtree spans).
+        use crate::curves::engine::{decompose_hilbert_2d, Window};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(29);
+        for level in [1u32, 2, 3, 5, 8] {
+            let m = HilbertNd::new(2, level);
+            let side = m.side() as u64;
+            for _ in 0..10 {
+                let (a, b) = (rng.below(side) as u32, rng.below(side) as u32);
+                let (c, e) = (rng.below(side) as u32, rng.below(side) as u32);
+                let wn = WindowNd::new(vec![a.min(b), c.min(e)], vec![a.max(b), c.max(e)]);
+                let w2 = Window::new((a.min(b), c.min(e)), (a.max(b), c.max(e)));
+                assert_eq!(
+                    m.decompose_nd(&wn),
+                    decompose_hilbert_2d(level, &w2),
+                    "level={level}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn canonic_nd_decompose_closed_form() {
+        let m = CanonicNd::new(vec![4, 5, 6]);
+        // Full box: one range.
+        let full = WindowNd::new(vec![0, 0, 0], vec![3, 4, 5]);
+        assert_eq!(m.decompose_nd(&full), vec![0..120]);
+        // Last-axis-full windows merge across the second axis.
+        let w = WindowNd::new(vec![1, 1, 0], vec![1, 3, 5]);
+        assert_eq!(m.decompose_nd(&w), vec![36..54]);
+        // Interior window: one run per (axis0, axis1) prefix.
+        let w = WindowNd::new(vec![0, 1, 2], vec![1, 2, 3]);
+        assert_eq!(m.decompose_nd(&w), vec![8..10, 14..16, 38..40, 44..46]);
+        // Clamping and empty windows.
+        let w = WindowNd::new(vec![0, 0, 0], vec![9, 9, 9]);
+        assert_eq!(m.decompose_nd(&w), vec![0..120]);
+        let w = WindowNd::new(vec![4, 0, 0], vec![9, 9, 9]);
+        assert!(m.decompose_nd(&w).is_empty());
+    }
+
+    #[test]
+    fn sfc_argsort_generalizes_hilbert_argsort() {
+        let flat: Vec<u32> = vec![3, 1, 0, 0, 2, 2, 1, 3, 3, 3, 0, 1];
+        let h = hilbert_argsort(&flat, 2, 2);
+        let via_generic = sfc_argsort(&flat, &HilbertNd::new(2, 2));
+        assert_eq!(h, via_generic);
+        let z = sfc_argsort(&flat, &ZOrderNd::new(2, 2));
+        let zm = ZOrderNd::new(2, 2);
+        for w in z.windows(2) {
+            let a = &flat[w[0] as usize * 2..w[0] as usize * 2 + 2];
+            let b = &flat[w[1] as usize * 2..w[1] as usize * 2 + 2];
+            assert!(zm.order_nd(a) <= zm.order_nd(b));
+        }
     }
 }

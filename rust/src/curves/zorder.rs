@@ -53,6 +53,18 @@ impl SpaceFillingCurve for ZOrder {
     fn coords(c: u64) -> (u32, u32) {
         (compact(c >> 1), compact(c))
     }
+
+    /// Native window decomposition: the table-free quadrant descent
+    /// (each order digit names its quadrant directly) at the smallest
+    /// level covering the window.
+    fn decompose_window(window: &crate::curves::engine::Window) -> Vec<std::ops::Range<u64>> {
+        assert!(
+            window.hi.0 < (1 << 31) && window.hi.1 < (1 << 31),
+            "plane windows support coordinates below 2^31"
+        );
+        let level = 32 - (window.hi.0 | window.hi.1).leading_zeros();
+        crate::curves::engine::decompose_zorder_2d(level, window)
+    }
 }
 
 #[cfg(test)]

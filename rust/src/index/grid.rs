@@ -41,39 +41,35 @@ pub struct GridIndex {
 
 impl GridIndex {
     /// Build the index for join radius `eps` (> 0) over `points` (`n×d`,
-    /// `d ≥ 2`).
+    /// `d ≥ 2`) — the shared [`axis_bounds`](super::axis_bounds) scan +
+    /// [`bucket_cells`](super::bucket_cells) core, projected onto the
+    /// first two dimensions.
     pub fn build(points: &Matrix, eps: f32) -> Self {
         assert!(eps > 0.0, "eps must be positive");
         assert!(points.cols >= 2, "grid index needs ≥ 2 dimensions");
-        let n = points.rows;
-        let (mut min0, mut min1) = (f32::INFINITY, f32::INFINITY);
-        let (mut max0, mut max1) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
-        for p in 0..n {
-            min0 = min0.min(points.at(p, 0));
-            max0 = max0.max(points.at(p, 0));
-            min1 = min1.min(points.at(p, 1));
-            max1 = max1.max(points.at(p, 1));
-        }
-        if n == 0 {
-            return GridIndex {
-                eps,
-                origin: (0.0, 0.0),
-                extent: (0, 0),
-                cells: Vec::new(),
-            };
-        }
+        let (min, max) = match super::axis_bounds(points, 2) {
+            Some(b) => b,
+            None => {
+                return GridIndex {
+                    eps,
+                    origin: (0.0, 0.0),
+                    extent: (0, 0),
+                    cells: Vec::new(),
+                }
+            }
+        };
         let to_cell = |v: f32, lo: f32| -> u32 { ((v - lo) / eps).floor() as u32 };
-        let extent = (to_cell(max0, min0) + 1, to_cell(max1, min1) + 1);
-        let mut map: std::collections::HashMap<Cell, Vec<u32>> = std::collections::HashMap::new();
-        for p in 0..n {
-            let c = (to_cell(points.at(p, 0), min0), to_cell(points.at(p, 1), min1));
-            map.entry(c).or_default().push(p as u32);
-        }
-        let mut cells: Vec<(Cell, Vec<u32>)> = map.into_iter().collect();
-        cells.sort_by_key(|&(c, _)| c);
+        let extent = (to_cell(max[0], min[0]) + 1, to_cell(max[1], min[1]) + 1);
+        // Lexicographic CellNd order equals the tuple sort order, so the
+        // shared bucketing hands back cells already sorted for this
+        // index's binary searches.
+        let cells = super::bucket_cells(points, eps, &min, 2)
+            .into_iter()
+            .map(|(c, v)| ((c[0], c[1]), v))
+            .collect();
         GridIndex {
             eps,
-            origin: (min0, min1),
+            origin: (min[0], min[1]),
             extent,
             cells,
         }

@@ -1,12 +1,78 @@
-//! Index substrates for the similarity join (paper §7).
+//! Index substrates for the mining applications (paper §7): three ways
+//! to organize a point set for spatial queries and joins.
 //!
-//! [`GridIndex`] is the legacy 2-D projection index (cells over dims
-//! 0–1 only — conservative but loose for d ≥ 3); [`GridIndexNd`] buckets
-//! over the full dimensionality and ranks its cells along the true d-dim
-//! Hilbert curve.
+//! | Index | Structure | Answers | Pick it when |
+//! |---|---|---|---|
+//! | [`GridIndex`] | 2-D projection cells (dims 0–1) | join candidates | legacy baseline; measured against, not built on |
+//! | [`GridIndexNd`] | full-dim `eps`-cells, sorted lexicographically | join candidates, cell lookups | the workload is an ε-join: cell side = ε makes neighbors a 3^d stencil |
+//! | [`SfcIndex`] | points sorted by d-dim curve order, keys in a sorted column | [`SfcIndex::query_point`] / [`SfcIndex::query_window`] / [`SfcIndex::query_knn`] | ad-hoc spatial queries: a window becomes a few contiguous key ranges ([`CurveMapperNd::decompose_nd`](crate::curves::engine::CurveMapperNd::decompose_nd)), each one binary search |
+//!
+//! The grid indexes bucket points into cells (side = join radius) and
+//! keep the non-empty cells sorted; the SFC index instead *permutes the
+//! points themselves* into curve order, so range queries read contiguous
+//! memory — the paper's first-listed application of space-filling curves
+//! (search structures), with the clustering property deciding how few
+//! ranges a window costs (fewest for Hilbert).
+//!
+//! All three builders share the per-axis bounding-box scan and the
+//! cell-bucketing machinery below instead of re-implementing them.
 
 pub mod grid;
 pub mod ndgrid;
+pub mod sfc;
 
 pub use grid::GridIndex;
 pub use ndgrid::{CellNd, GridIndexNd};
+pub use sfc::{QueryStats, SfcIndex};
+
+use crate::apps::Matrix;
+
+/// Per-axis bounding box of the first `dims` columns of a point set:
+/// `(min, max)` per axis, or `None` for an empty set — the shared
+/// min/max scan of every index builder.
+pub fn axis_bounds(points: &Matrix, dims: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+    assert!(
+        dims >= 1 && dims <= points.cols,
+        "dims {dims} outside 1..={}",
+        points.cols
+    );
+    if points.rows == 0 {
+        return None;
+    }
+    let mut min = vec![f32::INFINITY; dims];
+    let mut max = vec![f32::NEG_INFINITY; dims];
+    for p in 0..points.rows {
+        for a in 0..dims {
+            let v = points.at(p, a);
+            min[a] = min[a].min(v);
+            max[a] = max[a].max(v);
+        }
+    }
+    Some((min, max))
+}
+
+/// Bucket points into `eps`-sided hypercubic cells over the first `dims`
+/// columns (cell coordinates offset by `origin`), returning the
+/// non-empty cells with their point lists, sorted lexicographically by
+/// cell coordinate — the shared build core of [`GridIndex`] and
+/// [`GridIndexNd`].
+pub fn bucket_cells(
+    points: &Matrix,
+    eps: f32,
+    origin: &[f32],
+    dims: usize,
+) -> Vec<(CellNd, Vec<u32>)> {
+    assert!(eps > 0.0, "eps must be positive");
+    assert_eq!(origin.len(), dims);
+    let mut map: std::collections::HashMap<CellNd, Vec<u32>> = std::collections::HashMap::new();
+    let mut key = vec![0u32; dims];
+    for p in 0..points.rows {
+        for (a, k) in key.iter_mut().enumerate() {
+            *k = ((points.at(p, a) - origin[a]) / eps).floor() as u32;
+        }
+        map.entry(key.clone()).or_default().push(p as u32);
+    }
+    let mut cells: Vec<(CellNd, Vec<u32>)> = map.into_iter().collect();
+    cells.sort_by(|a, b| a.0.cmp(&b.0));
+    cells
+}

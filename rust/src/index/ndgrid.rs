@@ -18,7 +18,6 @@
 
 use crate::apps::Matrix;
 use crate::curves::ndim::hilbert_argsort;
-use std::collections::HashMap;
 
 /// A d-dimensional grid cell coordinate (0-based after offsetting).
 pub type CellNd = Vec<u32>;
@@ -50,46 +49,27 @@ impl GridIndexNd {
     /// (`1 ≤ dims ≤ points.cols`). Projecting onto a dimension prefix
     /// keeps the candidate set conservative (no false dismissals) while
     /// bounding the `3^dims` neighbor enumeration of the join drivers.
+    /// The min/max scan and cell bucketing are the shared
+    /// [`axis_bounds`](super::axis_bounds) / [`bucket_cells`](super::bucket_cells)
+    /// machinery.
     pub fn build_dims(points: &Matrix, eps: f32, dims: usize) -> Self {
         assert!(eps > 0.0, "eps must be positive");
-        assert!(
-            dims >= 1 && dims <= points.cols,
-            "dims {dims} outside 1..={}",
-            points.cols
-        );
-        let n = points.rows;
-        if n == 0 {
-            return GridIndexNd {
-                eps,
-                dims,
-                origin: vec![0.0; dims],
-                extent: vec![0; dims],
-                cells: Vec::new(),
-            };
-        }
-        let mut origin = vec![f32::INFINITY; dims];
-        let mut maxv = vec![f32::NEG_INFINITY; dims];
-        for p in 0..n {
-            for a in 0..dims {
-                let v = points.at(p, a);
-                origin[a] = origin[a].min(v);
-                maxv[a] = maxv[a].max(v);
+        let (origin, maxv) = match super::axis_bounds(points, dims) {
+            Some(b) => b,
+            None => {
+                return GridIndexNd {
+                    eps,
+                    dims,
+                    origin: vec![0.0; dims],
+                    extent: vec![0; dims],
+                    cells: Vec::new(),
+                }
             }
-        }
-        let to_cell = |v: f32, lo: f32| -> u32 { ((v - lo) / eps).floor() as u32 };
+        };
         let extent: Vec<u32> = (0..dims)
-            .map(|a| to_cell(maxv[a], origin[a]) + 1)
+            .map(|a| ((maxv[a] - origin[a]) / eps).floor() as u32 + 1)
             .collect();
-        let mut map: HashMap<CellNd, Vec<u32>> = HashMap::new();
-        let mut key = vec![0u32; dims];
-        for p in 0..n {
-            for (a, k) in key.iter_mut().enumerate() {
-                *k = to_cell(points.at(p, a), origin[a]);
-            }
-            map.entry(key.clone()).or_default().push(p as u32);
-        }
-        let mut cells: Vec<(CellNd, Vec<u32>)> = map.into_iter().collect();
-        cells.sort_by(|a, b| a.0.cmp(&b.0));
+        let cells = super::bucket_cells(points, eps, &origin, dims);
         GridIndexNd { eps, dims, origin, extent, cells }
     }
 

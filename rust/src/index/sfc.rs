@@ -1,0 +1,509 @@
+//! Order-sorted space-filling-curve index — the paper's first-listed
+//! application (search structures), as a queryable structure.
+//!
+//! [`SfcIndex`] quantizes each point onto a `side^d` grid, permutes the
+//! rows into their d-dimensional curve order
+//! ([`sfc_argsort`](crate::curves::ndim::sfc_argsort), Hilbert by
+//! default) and keeps the curve keys in a sorted column. Queries then
+//! work on contiguous memory:
+//!
+//! * [`SfcIndex::query_window`] — decompose the window into contiguous
+//!   key ranges ([`CurveMapperNd::decompose_nd`]), binary-search each
+//!   range, exact-filter the candidates against the float window. The
+//!   clustering property governs the cost: the better the curve keeps
+//!   neighborhoods contiguous, the fewer ranges (and seeks) per window —
+//!   fewest for Hilbert.
+//! * [`SfcIndex::query_point`] — one key lookup plus an equality filter.
+//! * [`SfcIndex::query_knn`] — expanding-window search with a bounded
+//!   max-heap: grow a centered window until the k-th best distance is
+//!   covered by the window radius (an L∞ window of radius `r` contains
+//!   every point within Euclidean distance `r`).
+//!
+//! Coarsening ([`coarsen_ranges`]) trades false-positive candidates for
+//! fewer ranges via the `max_ranges` knob on
+//! [`SfcIndex::query_window_stats`].
+
+use crate::apps::Matrix;
+use crate::curves::engine::{coarsen_ranges, CurveMapperNd, DomainNd, WindowNd};
+use crate::curves::ndim::argsort_stable;
+use crate::curves::CurveKind;
+use std::collections::BinaryHeap;
+
+/// Statistics of one window query.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct QueryStats {
+    /// Contiguous key ranges after decomposition (and coarsening).
+    pub ranges: usize,
+    /// Candidate points scanned across all ranges.
+    pub candidates: u64,
+    /// Points surviving the exact float filter.
+    pub results: u64,
+}
+
+impl QueryStats {
+    /// Fraction of candidates surviving the exact filter (1.0 when the
+    /// decomposition produced no false positives).
+    pub fn filter_ratio(&self) -> f64 {
+        if self.candidates == 0 {
+            1.0
+        } else {
+            self.results as f64 / self.candidates as f64
+        }
+    }
+}
+
+/// A k-nearest-neighbor candidate in the query's max-heap (ordered by
+/// distance, ties by id, via total order on the floats).
+#[derive(Copy, Clone, Debug)]
+struct Neighbor {
+    dist: f32,
+    id: u32,
+}
+
+impl PartialEq for Neighbor {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Neighbor {}
+
+impl PartialOrd for Neighbor {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Neighbor {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.dist
+            .total_cmp(&other.dist)
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// Order-sorted curve index over an `n×d` point set.
+pub struct SfcIndex {
+    kind: CurveKind,
+    level: u32,
+    dims: usize,
+    /// Quantization cells per axis (the curve cube's side).
+    side: u32,
+    /// Per-axis minimum of the data (the quantization origin).
+    origin: Vec<f32>,
+    /// Per-axis quantization cell width (`0` for degenerate axes).
+    cell: Vec<f32>,
+    /// The d-dim curve the keys live on.
+    mapper: Box<dyn CurveMapperNd>,
+    /// Sorted curve keys, one per point (the search column).
+    keys: Vec<u64>,
+    /// Key position → original row id (the curve-order permutation).
+    ids: Vec<u32>,
+    /// Point rows permuted into curve order (candidate scans read
+    /// contiguous memory).
+    points: Matrix,
+}
+
+impl SfcIndex {
+    /// Build a d-dimensional **Hilbert** index over all columns of
+    /// `points` at `2^level` quantization cells per axis.
+    pub fn build(points: &Matrix, level: u32) -> Self {
+        Self::build_with(points, level, CurveKind::Hilbert)
+    }
+
+    /// [`SfcIndex::build`] with an explicit curve (Z-order and canonic
+    /// are the measured baselines; Hilbert wins on ranges-per-window).
+    pub fn build_with(points: &Matrix, level: u32, kind: CurveKind) -> Self {
+        let dims = points.cols;
+        assert!(dims >= 1, "points must have at least one column");
+        assert!(
+            dims <= if kind == CurveKind::Peano { 13 } else { 16 },
+            "dims {dims} exceeds the curve's supported dimensionality"
+        );
+        // Clamp the refinement so the order span fits u64 (the same caps
+        // the Nd mappers enforce).
+        let max_level = match kind {
+            CurveKind::Peano => (39 / dims as u32).min(20),
+            _ => (63 / dims as u32).min(31),
+        };
+        let level = level.clamp(1, max_level.max(1));
+        let mapper = kind.nd_mapper(dims, level);
+        let side = match mapper.domain_nd() {
+            DomainNd::HyperRect { shape } => shape[0],
+            _ => unreachable!("nd_mapper domains are hyperrects"),
+        };
+        let (origin, cell) = match super::axis_bounds(points, dims) {
+            Some((min, max)) => {
+                let cell = (0..dims)
+                    .map(|a| (max[a] - min[a]) / side as f32)
+                    .collect();
+                (min, cell)
+            }
+            None => (vec![0.0; dims], vec![0.0; dims]),
+        };
+        let mut index = SfcIndex {
+            kind,
+            level,
+            dims,
+            side,
+            origin,
+            cell,
+            mapper,
+            keys: Vec::new(),
+            ids: Vec::new(),
+            points: Matrix::zeros(0, dims),
+        };
+        if points.rows == 0 {
+            return index;
+        }
+        // Quantize every row, convert through the batched Nd path, and
+        // permute rows into curve order (stable argsort keeps ties in
+        // input order).
+        let mut flat = Vec::with_capacity(points.rows * dims);
+        for p in 0..points.rows {
+            for (a, &v) in points.row(p).iter().enumerate() {
+                flat.push(index.cell_of(v, a));
+            }
+        }
+        let mut keys = Vec::with_capacity(points.rows);
+        index.mapper.order_batch_nd(&flat, &mut keys);
+        let order = argsort_stable(&keys);
+        index.keys = order.iter().map(|&idx| keys[idx as usize]).collect();
+        index.points = Matrix::from_fn(points.rows, dims, |p, a| {
+            points.at(order[p] as usize, a)
+        });
+        index.ids = order;
+        index
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when the index holds no points.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The curve the keys live on.
+    pub fn curve(&self) -> CurveKind {
+        self.kind
+    }
+
+    /// Quantization level actually used (may be clamped below the
+    /// requested one so the order span fits `u64`).
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Indexed dimensions (all point columns).
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Quantized cell coordinate of value `v` on axis `a` (monotone in
+    /// `v` and clamped to the grid, which is what keeps window
+    /// decomposition conservative: a point inside a float window always
+    /// lands inside the quantized window).
+    #[inline]
+    fn cell_of(&self, v: f32, a: usize) -> u32 {
+        let c = self.cell[a];
+        if c <= 0.0 {
+            return 0;
+        }
+        let q = ((v - self.origin[a]) / c).floor();
+        if q < 0.0 {
+            0
+        } else if q >= self.side as f32 {
+            self.side - 1
+        } else {
+            q as u32
+        }
+    }
+
+    /// First key position with `keys[pos] >= key`.
+    #[inline]
+    fn lower_bound(&self, key: u64) -> usize {
+        self.keys.partition_point(|&k| k < key)
+    }
+
+    /// All points exactly equal to `q` (`q.len() == dims`): one key
+    /// lookup on the quantized cell plus an equality filter over the
+    /// (contiguous) key run.
+    pub fn query_point(&self, q: &[f32]) -> Vec<u32> {
+        assert_eq!(q.len(), self.dims, "query dims must match the index");
+        if self.is_empty() {
+            return Vec::new();
+        }
+        let cell: Vec<u32> = q.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
+        let key = self.mapper.order_nd(&cell);
+        let mut out = Vec::new();
+        let mut pos = self.lower_bound(key);
+        while pos < self.keys.len() && self.keys[pos] == key {
+            if self.points.row(pos).iter().zip(q).all(|(&a, &b)| a == b) {
+                out.push(self.ids[pos]);
+            }
+            pos += 1;
+        }
+        out
+    }
+
+    /// Ids of all points inside the closed float window `[lo, hi]`.
+    pub fn query_window(&self, lo: &[f32], hi: &[f32]) -> Vec<u32> {
+        self.query_window_stats(lo, hi, 0).0
+    }
+
+    /// [`SfcIndex::query_window`] with query statistics and a
+    /// `max_ranges` coarsening cap (`0` = exact decomposition): merging
+    /// nearest ranges trades false-positive candidates for fewer binary
+    /// searches, never losing a true hit.
+    pub fn query_window_stats(
+        &self,
+        lo: &[f32],
+        hi: &[f32],
+        max_ranges: usize,
+    ) -> (Vec<u32>, QueryStats) {
+        let (positions, stats) = self.window_positions(lo, hi, max_ranges);
+        (positions.into_iter().map(|pos| self.ids[pos]).collect(), stats)
+    }
+
+    /// Shared window-query core: sorted key positions (not ids) of the
+    /// exact hits, so callers that need the permuted rows (kNN) skip the
+    /// id indirection.
+    fn window_positions(
+        &self,
+        lo: &[f32],
+        hi: &[f32],
+        max_ranges: usize,
+    ) -> (Vec<usize>, QueryStats) {
+        assert_eq!(lo.len(), self.dims, "query dims must match the index");
+        assert_eq!(hi.len(), self.dims, "query dims must match the index");
+        assert!(
+            lo.iter().zip(hi).all(|(a, b)| a <= b),
+            "window lo must be ≤ hi per axis"
+        );
+        let mut stats = QueryStats::default();
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return (out, stats);
+        }
+        let clo: Vec<u32> = lo.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
+        let chi: Vec<u32> = hi.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
+        let mut ranges = self.mapper.decompose_nd(&WindowNd::new(clo, chi));
+        coarsen_ranges(&mut ranges, max_ranges);
+        stats.ranges = ranges.len();
+        for r in &ranges {
+            let mut pos = self.lower_bound(r.start);
+            while pos < self.keys.len() && self.keys[pos] < r.end {
+                stats.candidates += 1;
+                let row = self.points.row(pos);
+                if row
+                    .iter()
+                    .zip(lo.iter().zip(hi))
+                    .all(|(&v, (&l, &h))| (l..=h).contains(&v))
+                {
+                    out.push(pos);
+                    stats.results += 1;
+                }
+                pos += 1;
+            }
+        }
+        (out, stats)
+    }
+
+    /// The `k` nearest neighbors of `q` by Euclidean distance, sorted
+    /// ascending as `(id, distance)` (fewer than `k` when the index is
+    /// smaller). Expanding-window search: a centered L∞ window of radius
+    /// `r` is complete for any answer distance `≤ r`, so the window
+    /// doubles until the heap's k-th distance is covered (or the data's
+    /// bounding box is).
+    pub fn query_knn(&self, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        assert_eq!(q.len(), self.dims, "query dims must match the index");
+        if self.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        // Start at one quantization cell; degenerate (single-cell) data
+        // still needs a positive radius to make progress.
+        let mut r = self.cell.iter().cloned().fold(0.0f32, f32::max);
+        if r <= 0.0 {
+            r = 1e-6;
+        }
+        let mut lo = vec![0.0f32; self.dims];
+        let mut hi = vec![0.0f32; self.dims];
+        loop {
+            for a in 0..self.dims {
+                lo[a] = q[a] - r;
+                hi[a] = q[a] + r;
+            }
+            let mut heap: BinaryHeap<Neighbor> = BinaryHeap::with_capacity(k + 1);
+            for pos in self.window_positions(&lo, &hi, 0).0 {
+                let row = self.points.row(pos);
+                let dist2: f32 = row.iter().zip(q).map(|(&a, &b)| (a - b) * (a - b)).sum();
+                heap.push(Neighbor { dist: dist2.sqrt(), id: self.ids[pos] });
+                if heap.len() > k {
+                    heap.pop();
+                }
+            }
+            let covers = (0..self.dims).all(|a| {
+                lo[a] <= self.origin[a]
+                    && hi[a] >= self.origin[a] + self.cell[a] * self.side as f32
+            });
+            let done = heap.len() == k && heap.peek().map(|n| n.dist <= r).unwrap_or(false);
+            if covers || done {
+                let mut best = heap.into_vec();
+                best.sort();
+                return best.into_iter().map(|n| (n.id, n.dist)).collect();
+            }
+            r *= 2.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn brute_window(points: &Matrix, lo: &[f32], hi: &[f32]) -> Vec<u32> {
+        (0..points.rows as u32)
+            .filter(|&p| {
+                points
+                    .row(p as usize)
+                    .iter()
+                    .zip(lo.iter().zip(hi))
+                    .all(|(&v, (&l, &h))| (l..=h).contains(&v))
+            })
+            .collect()
+    }
+
+    fn sorted(mut v: Vec<u32>) -> Vec<u32> {
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn window_matches_brute_force() {
+        let points = Matrix::random(500, 3, 11, 0.0, 100.0);
+        let index = SfcIndex::build(&points, 6);
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let lo: Vec<f32> = (0..3).map(|_| rng.f32() * 90.0).collect();
+            let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 30.0).collect();
+            let got = index.query_window(&lo, &hi);
+            assert_eq!(sorted(got), sorted(brute_window(&points, &lo, &hi)));
+        }
+    }
+
+    #[test]
+    fn window_matches_brute_force_for_every_curve() {
+        let points = Matrix::random(300, 2, 3, -5.0, 5.0);
+        for kind in CurveKind::ALL {
+            let index = SfcIndex::build_with(&points, 5, kind);
+            let mut rng = Rng::new(7);
+            for _ in 0..25 {
+                let lo: Vec<f32> = (0..2).map(|_| rng.f32() * 8.0 - 5.0).collect();
+                let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 4.0).collect();
+                let got = index.query_window(&lo, &hi);
+                assert_eq!(
+                    sorted(got),
+                    sorted(brute_window(&points, &lo, &hi)),
+                    "{}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coarsening_never_loses_hits() {
+        let points = Matrix::random(400, 2, 13, 0.0, 50.0);
+        let index = SfcIndex::build(&points, 7);
+        let mut rng = Rng::new(17);
+        for _ in 0..30 {
+            let lo: Vec<f32> = (0..2).map(|_| rng.f32() * 40.0).collect();
+            let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 15.0).collect();
+            let (exact, se) = index.query_window_stats(&lo, &hi, 0);
+            for cap in [1usize, 2, 4, 8] {
+                let (coarse, sc) = index.query_window_stats(&lo, &hi, cap);
+                assert_eq!(sorted(exact.clone()), sorted(coarse), "cap={cap}");
+                assert!(sc.ranges <= cap.max(1));
+                assert!(sc.candidates >= se.candidates);
+            }
+        }
+    }
+
+    #[test]
+    fn point_query_finds_exact_rows() {
+        let points = Matrix::random(200, 4, 23, 0.0, 10.0);
+        let index = SfcIndex::build(&points, 5);
+        for p in [0usize, 17, 99, 199] {
+            let q: Vec<f32> = points.row(p).to_vec();
+            let got = index.query_point(&q);
+            assert!(got.contains(&(p as u32)), "row {p} not found");
+            for &id in &got {
+                assert_eq!(points.row(id as usize), &q[..]);
+            }
+        }
+        assert!(index.query_point(&[1e9, 1e9, 1e9, 1e9]).is_empty());
+    }
+
+    #[test]
+    fn knn_matches_brute_force() {
+        let points = Matrix::random(300, 3, 29, 0.0, 20.0);
+        let index = SfcIndex::build(&points, 5);
+        let mut rng = Rng::new(31);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..3).map(|_| rng.f32() * 30.0 - 5.0).collect();
+            let k = 1 + rng.below(10) as usize;
+            let got = index.query_knn(&q, k);
+            let mut brute: Vec<(u32, f32)> = (0..points.rows as u32)
+                .map(|p| {
+                    let d2: f32 = points
+                        .row(p as usize)
+                        .iter()
+                        .zip(&q)
+                        .map(|(&a, &b)| (a - b) * (a - b))
+                        .sum();
+                    (p, d2.sqrt())
+                })
+                .collect();
+            brute.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            assert_eq!(got.len(), k);
+            for (g, w) in got.iter().zip(&brute) {
+                assert!((g.1 - w.1).abs() < 1e-5, "distance mismatch {g:?} vs {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let empty = Matrix::zeros(0, 3);
+        let index = SfcIndex::build(&empty, 6);
+        assert!(index.is_empty());
+        assert!(index.query_window(&[0.0; 3], &[1.0; 3]).is_empty());
+        assert!(index.query_knn(&[0.0; 3], 3).is_empty());
+        // All points identical: every query degenerates to cell 0.
+        let same = Matrix::from_fn(10, 2, |_, _| 4.2);
+        let index = SfcIndex::build(&same, 6);
+        assert_eq!(index.query_window(&[4.0, 4.0], &[5.0, 5.0]).len(), 10);
+        assert_eq!(index.query_point(&[4.2, 4.2]).len(), 10);
+        assert_eq!(index.query_knn(&[0.0, 0.0], 3).len(), 3);
+    }
+
+    #[test]
+    fn knn_with_k_larger_than_index() {
+        let points = Matrix::random(5, 2, 41, 0.0, 1.0);
+        let index = SfcIndex::build(&points, 4);
+        let got = index.query_knn(&[0.5, 0.5], 20);
+        assert_eq!(got.len(), 5);
+    }
+
+    #[test]
+    fn level_is_clamped_to_u64_span() {
+        let points = Matrix::random(50, 8, 43, 0.0, 1.0);
+        let index = SfcIndex::build(&points, 31);
+        assert!(index.level() * 8 <= 63);
+        assert!(!index.query_window(&[0.0; 8], &[1.0; 8]).is_empty());
+    }
+}

@@ -34,10 +34,13 @@
 //!   point sharding via [`apps::kmeans::hilbert_point_order`]), and the
 //!   ε-similarity join, each in canonic, cache-conscious (tiled) and
 //!   cache-oblivious (engine-curve) variants.
-//! * [`index`] — the grid index substrates for the similarity join: the
-//!   legacy 2-D projection [`index::GridIndex`] and the full-dimensional
-//!   [`index::GridIndexNd`], which numbers its cells along the true
-//!   d-dim Hilbert curve via the engine's Nd batched conversion.
+//! * [`index`] — the index substrates: the legacy 2-D projection
+//!   [`index::GridIndex`], the full-dimensional [`index::GridIndexNd`]
+//!   (cells ranked along the true d-dim Hilbert curve), and the
+//!   order-sorted [`index::SfcIndex`] serving point/window/kNN queries
+//!   by decomposing each window into contiguous curve ranges
+//!   ([`CurveMapperNd::decompose_nd`]) and binary-searching its sorted
+//!   key column — the paper's "search structures" application.
 //! * [`cachesim`] — the cache-hierarchy simulator used to regenerate the
 //!   paper's Figure 1(e) (LRU / set-associative / multi-level + TLB).
 //! * [`runtime`] — the PJRT engine: loads AOT-compiled JAX/Pallas

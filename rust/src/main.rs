@@ -8,6 +8,8 @@
 //! sfc-mine matmul [--n 512 --tile 32 --curve hilbert]  # §7 matmul variants
 //! sfc-mine kmeans [--n 40960 --shard hilbert]  # parallel k-means loop
 //! sfc-mine simjoin [--n 20000 --eps 1 --index-dims 3]  # §7 join variants
+//! sfc-mine query [--mode point|window|knn --curve hilbert --dims 2
+//!                 --level 8 --max-ranges 0]   # SfcIndex query subsystem
 //! ```
 //!
 //! All curve dispatch goes through the engine ([`CurveKind::mapper`] /
@@ -15,23 +17,29 @@
 //! accepts any `canonic|zorder|gray|hilbert|peano`, and `--dims d`
 //! switches the locality table to the true d-dimensional curves. The
 //! similarity join indexes the full dimensionality (capped via
-//! `--index-dims`) and reports the legacy 2-D projection baseline next
-//! to it; `kmeans --shard hilbert` pre-sorts points along their d-dim
-//! Hilbert rank so worker shards are spatially compact.
+//! `--index-dims`), drives its default path through the window→range
+//! decomposition (`join_sfc`) and reports the legacy baselines next to
+//! it; `kmeans --shard hilbert` pre-sorts points along their d-dim
+//! Hilbert rank so worker shards are spatially compact. The `query`
+//! command builds an order-sorted `SfcIndex` and reports
+//! ranges-per-query, selectivity and the exact-filter ratio against a
+//! full-scan baseline, per curve.
 
 use sfc_mine::apps::kmeans::{hilbert_point_order, init_centroids, make_blobs, permute_rows, KMeans};
 use sfc_mine::apps::matmul::{flops, matmul_curve, matmul_tiled, matmul_transposed};
 use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
 use sfc_mine::apps::simjoin::{
-    join_fgf_hilbert_dims, join_grid_nested_dims, join_grid_projected, make_clustered,
-    DEFAULT_INDEX_DIMS,
+    join_fgf_hilbert_dims, join_grid_nested_dims, join_grid_projected, join_sfc_dims,
+    make_clustered, DEFAULT_INDEX_DIMS,
 };
 use sfc_mine::apps::Matrix;
 use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
 use sfc_mine::curves::engine::{collect_nd, CurveMapperNd};
 use sfc_mine::curves::{metrics, CurveKind};
+use sfc_mine::index::SfcIndex;
 use sfc_mine::runtime::{artifact, Engine};
 use sfc_mine::util::cli::Args;
+use sfc_mine::util::rng::Rng;
 use sfc_mine::util::table::Table;
 use std::time::Instant;
 
@@ -44,12 +52,13 @@ fn main() {
         Some("matmul") => matmul_cmd(&args),
         Some("kmeans") => kmeans_cmd(&args),
         Some("simjoin") => simjoin_cmd(&args),
+        Some("query") => query_cmd(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
             }
             eprintln!(
-                "usage: sfc-mine <info|fig1|curves|matmul|kmeans|simjoin> [--key value]…\n\
+                "usage: sfc-mine <info|fig1|curves|matmul|kmeans|simjoin|query> [--key value]…\n\
                  see README.md for options"
             );
             std::process::exit(2);
@@ -260,15 +269,30 @@ fn simjoin_cmd(args: &Args) {
     let (pairs_fgf, sf) = join_fgf_hilbert_dims(&points, eps, index_dims);
     let fgf_dt = t0.elapsed();
 
+    // The default path: per-cell ε-window decomposition over the sorted
+    // Hilbert key column (the query subsystem driving the join).
+    let t0 = Instant::now();
+    let (pairs_sfc, ss) = join_sfc_dims(&points, eps, index_dims);
+    let sfc_dt = t0.elapsed();
+
     assert_eq!(pairs_2d.len(), pairs_grid.len(), "identical result pair sets");
     assert_eq!(pairs_grid.len(), pairs_fgf.len(), "identical result pair sets");
+    assert_eq!(pairs_fgf.len(), pairs_sfc.len(), "identical result pair sets");
     println!(
         "simjoin n={n} d={d} eps={eps}: {} pairs (all variants identical)",
-        pairs_fgf.len()
+        pairs_sfc.len()
     );
-    let mut t =
-        Table::new(vec!["variant", "index dims", "ms", "cell pairs", "comparisons", "jumps"]);
+    let mut t = Table::new(vec![
+        "variant",
+        "index dims",
+        "ms",
+        "cell pairs",
+        "comparisons",
+        "ranges",
+        "jumps",
+    ]);
     for (name, dims, dt, s) in [
+        ("sfc-window-nd (default)", index_dims, sfc_dt, &ss),
         ("grid-2d-projection", 2, proj_dt, &s2),
         ("grid-nd", index_dims, grid_dt, &sg),
         ("fgf-hilbert-nd", index_dims, fgf_dt, &sf),
@@ -279,6 +303,7 @@ fn simjoin_cmd(args: &Args) {
             format!("{:.1}", dt.as_secs_f64() * 1e3),
             s.cell_pairs.to_string(),
             s.comparisons.to_string(),
+            s.ranges.to_string(),
             s.fgf.map(|f| f.jumps).unwrap_or(0).to_string(),
         ]);
     }
@@ -290,5 +315,214 @@ fn simjoin_cmd(args: &Args) {
             s2.comparisons,
             s2.comparisons as f64 / sg.comparisons.max(1) as f64,
         );
+    }
+}
+
+/// The `query` subcommand: build an order-sorted [`SfcIndex`] over a
+/// clustered synthetic workload and report per-curve query statistics —
+/// ranges-per-query (the clustering property made measurable),
+/// selectivity, the exact-filter ratio, and a decomposition-vs-scan
+/// comparison.
+fn query_cmd(args: &Args) {
+    let n: usize = args.get("n", 20_000);
+    let d: usize = args.get("dims", 2);
+    let level: u32 = args.get("level", 8);
+    let queries: usize = args.get("queries", 200).max(1);
+    let max_ranges: usize = args.get("max-ranges", 0);
+    let k: usize = args.get("k", 10);
+    let frac: f32 = args.get("window-frac", 0.05);
+    let threads: usize = args.get("threads", 0);
+    let mode = args.get_str("mode", "window");
+    let curve: CurveKind = match args.get_str("curve", "hilbert").parse() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let points = make_clustered(n, d, 40, 0.8, 7);
+    let (min, max) =
+        sfc_mine::index::axis_bounds(&points, d).expect("workload is non-empty");
+    let mut rng = Rng::new(1234);
+    match mode.as_str() {
+        "window" => {
+            // Centered on random data rows so selectivity stays non-trivial.
+            let windows: Vec<(Vec<f32>, Vec<f32>)> = (0..queries)
+                .map(|_| {
+                    let p = rng.below_usize(n);
+                    let lo: Vec<f32> = (0..d)
+                        .map(|a| points.at(p, a) - frac * (max[a] - min[a]))
+                        .collect();
+                    let hi: Vec<f32> = (0..d)
+                        .map(|a| points.at(p, a) + frac * (max[a] - min[a]))
+                        .collect();
+                    (lo, hi)
+                })
+                .collect();
+            // Full-scan baseline: one pass over all rows per query.
+            let t0 = Instant::now();
+            let mut scan_results = 0u64;
+            for (lo, hi) in &windows {
+                for p in 0..n {
+                    let row = points.row(p);
+                    if row
+                        .iter()
+                        .zip(lo.iter().zip(hi))
+                        .all(|(&v, (&l, &h))| (l..=h).contains(&v))
+                    {
+                        scan_results += 1;
+                    }
+                }
+            }
+            let scan_dt = t0.elapsed();
+            let mut t = Table::new(vec![
+                "variant",
+                "build ms",
+                "ms/query",
+                "ranges/query",
+                "cands/query",
+                "filter %",
+                "selectivity %",
+            ]);
+            let mut curves = vec![CurveKind::Hilbert, CurveKind::ZOrder, CurveKind::Canonic];
+            if !curves.contains(&curve) {
+                curves.insert(0, curve);
+            }
+            // Kept for par_query below, so the chosen curve's index is
+            // not built twice.
+            let mut chosen_index: Option<SfcIndex> = None;
+            for kind in curves {
+                let t0 = Instant::now();
+                let index = SfcIndex::build_with(&points, level, kind);
+                let build_dt = t0.elapsed();
+                let t0 = Instant::now();
+                let (mut ranges, mut cands, mut results) = (0u64, 0u64, 0u64);
+                for (lo, hi) in &windows {
+                    let (_, s) = index.query_window_stats(lo, hi, max_ranges);
+                    ranges += s.ranges as u64;
+                    cands += s.candidates;
+                    results += s.results;
+                }
+                let dt = t0.elapsed();
+                assert_eq!(results, scan_results, "index results must equal the scan");
+                t.row(vec![
+                    format!("sfc-index/{}", kind.name()),
+                    format!("{:.1}", build_dt.as_secs_f64() * 1e3),
+                    format!("{:.3}", dt.as_secs_f64() * 1e3 / queries as f64),
+                    format!("{:.1}", ranges as f64 / queries as f64),
+                    format!("{:.1}", cands as f64 / queries as f64),
+                    format!("{:.1}", 100.0 * results as f64 / cands.max(1) as f64),
+                    format!("{:.2}", 100.0 * results as f64 / (n as u64 * queries as u64) as f64),
+                ]);
+                if kind == curve {
+                    chosen_index = Some(index);
+                }
+            }
+            t.row(vec![
+                "full-scan".to_string(),
+                "-".to_string(),
+                format!("{:.3}", scan_dt.as_secs_f64() * 1e3 / queries as f64),
+                "-".to_string(),
+                n.to_string(),
+                format!("{:.1}", 100.0 * scan_results as f64 / (n as u64 * queries as u64) as f64),
+                format!("{:.2}", 100.0 * scan_results as f64 / (n as u64 * queries as u64) as f64),
+            ]);
+            println!(
+                "window queries: n={n} d={d} level={level} queries={queries} \
+                 window-frac={frac} max-ranges={max_ranges}"
+            );
+            print!("{}", t.render());
+            if threads > 0 {
+                let index = chosen_index.expect("chosen curve is always in the table");
+                let coord = Coordinator::new(threads);
+                let t0 = Instant::now();
+                let out = coord.par_query(&index, &windows);
+                let dt = t0.elapsed();
+                let total: usize = out.iter().map(Vec::len).sum();
+                println!(
+                    "par_query [{}]: {} workers, {:.3} ms/query ({total} results)",
+                    curve.name(),
+                    coord.threads(),
+                    dt.as_secs_f64() * 1e3 / queries as f64,
+                );
+            }
+        }
+        "point" => {
+            let index = SfcIndex::build_with(&points, level, curve);
+            let ids: Vec<usize> = (0..queries).map(|_| rng.below_usize(n)).collect();
+            let t0 = Instant::now();
+            let mut found = 0u64;
+            for &p in &ids {
+                found += index.query_point(points.row(p)).len() as u64;
+            }
+            let dt = t0.elapsed();
+            let t0 = Instant::now();
+            let mut scan_found = 0u64;
+            for &p in &ids {
+                let q = points.row(p);
+                scan_found += (0..n).filter(|&r| points.row(r) == q).count() as u64;
+            }
+            let scan_dt = t0.elapsed();
+            assert_eq!(found, scan_found, "point hits must equal the scan");
+            println!(
+                "point queries [{}]: n={n} d={d} level={level} queries={queries}: \
+                 {found} hits, {:.4} ms/query (scan {:.3} ms/query)",
+                curve.name(),
+                dt.as_secs_f64() * 1e3 / queries as f64,
+                scan_dt.as_secs_f64() * 1e3 / queries as f64,
+            );
+        }
+        "knn" => {
+            let index = SfcIndex::build_with(&points, level, curve);
+            let centers: Vec<Vec<f32>> = (0..queries)
+                .map(|_| {
+                    let p = rng.below_usize(n);
+                    (0..d)
+                        .map(|a| points.at(p, a) + (rng.f32() - 0.5) * (max[a] - min[a]) * 0.1)
+                        .collect()
+                })
+                .collect();
+            let t0 = Instant::now();
+            let mut dist_sum = 0f64;
+            for q in &centers {
+                for (_, dist) in index.query_knn(q, k) {
+                    dist_sum += dist as f64;
+                }
+            }
+            let dt = t0.elapsed();
+            let t0 = Instant::now();
+            let mut scan_sum = 0f64;
+            for q in &centers {
+                let mut best: Vec<f32> = (0..n)
+                    .map(|p| {
+                        points
+                            .row(p)
+                            .iter()
+                            .zip(q)
+                            .map(|(&a, &b)| (a - b) * (a - b))
+                            .sum::<f32>()
+                            .sqrt()
+                    })
+                    .collect();
+                best.sort_by(f32::total_cmp);
+                scan_sum += best.iter().take(k).map(|&x| x as f64).sum::<f64>();
+            }
+            let scan_dt = t0.elapsed();
+            assert!(
+                (dist_sum - scan_sum).abs() < 1e-3 * scan_sum.abs().max(1.0),
+                "kNN distances must match the scan ({dist_sum} vs {scan_sum})"
+            );
+            println!(
+                "kNN queries [{}]: n={n} d={d} level={level} k={k} queries={queries}: \
+                 {:.3} ms/query (scan {:.3} ms/query)",
+                curve.name(),
+                dt.as_secs_f64() * 1e3 / queries as f64,
+                scan_dt.as_secs_f64() * 1e3 / queries as f64,
+            );
+        }
+        other => {
+            eprintln!("unknown query mode '{other}' (point|window|knn)");
+            std::process::exit(2);
+        }
     }
 }

@@ -1,0 +1,345 @@
+//! Property tests for the range-query subsystem (ISSUE 3): window→range
+//! decomposition across every curve and dimension, the order-sorted
+//! `SfcIndex` against brute force, coarsening soundness, and the
+//! clustering-property acceptance check (Hilbert emits strictly fewer
+//! ranges than Z-order on random 2-D windows at level 8).
+
+use sfc_mine::apps::simjoin::{join_grid_nested_dims, join_sfc_dims, make_clustered, normalize};
+use sfc_mine::apps::Matrix;
+use sfc_mine::curves::engine::{coarsen_ranges, CurveMapper, CurveMapperNd, Window, WindowNd};
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::SfcIndex;
+use sfc_mine::util::rng::Rng;
+use std::collections::HashSet;
+use std::ops::Range;
+
+/// Random inclusive window inside `[0, side)^d`.
+fn random_window_nd(rng: &mut Rng, side: u32, d: usize) -> WindowNd {
+    let mut lo = Vec::with_capacity(d);
+    let mut hi = Vec::with_capacity(d);
+    for _ in 0..d {
+        let a = rng.below(side as u64) as u32;
+        let b = rng.below(side as u64) as u32;
+        lo.push(a.min(b));
+        hi.push(a.max(b));
+    }
+    WindowNd::new(lo, hi)
+}
+
+/// Every cell of the window, as a set of coordinate vectors.
+fn window_cell_set(w: &WindowNd) -> HashSet<Vec<u32>> {
+    let d = w.dims();
+    let mut out = HashSet::new();
+    let mut p = w.lo.clone();
+    loop {
+        out.insert(p.clone());
+        let mut a = 0;
+        while a < d {
+            if p[a] < w.hi[a] {
+                p[a] += 1;
+                break;
+            }
+            p[a] = w.lo[a];
+            a += 1;
+        }
+        if a == d {
+            break;
+        }
+    }
+    out
+}
+
+/// Assert the ranges are sorted, disjoint and non-adjacent (maximal).
+fn assert_sorted_disjoint(ranges: &[Range<u64>], label: &str) {
+    for r in ranges {
+        assert!(r.start < r.end, "{label}: empty range {r:?}");
+    }
+    for pair in ranges.windows(2) {
+        assert!(
+            pair[0].end < pair[1].start,
+            "{label}: ranges {:?} and {:?} overlap or touch (not maximal)",
+            pair[0],
+            pair[1]
+        );
+    }
+}
+
+/// Full exactness check: sorted, disjoint, decoded cells == window set.
+fn assert_exact_nd(mapper: &dyn CurveMapperNd, w: &WindowNd, label: &str) {
+    let ranges = mapper.decompose_nd(w);
+    assert_sorted_disjoint(&ranges, label);
+    let d = mapper.dims();
+    let mut decoded = HashSet::new();
+    let mut buf = Vec::new();
+    for r in &ranges {
+        let orders: Vec<u64> = (r.start..r.end).collect();
+        buf.clear();
+        mapper.coords_batch_nd(&orders, &mut buf);
+        for p in buf.chunks_exact(d) {
+            assert!(
+                decoded.insert(p.to_vec()),
+                "{label}: duplicate cell {p:?} across ranges"
+            );
+        }
+    }
+    assert_eq!(
+        decoded,
+        window_cell_set(w),
+        "{label}: decoded cells differ from the window set"
+    );
+}
+
+#[test]
+fn decompose_is_exact_for_every_kind_and_dim() {
+    let mut rng = Rng::new(42);
+    for kind in CurveKind::ALL {
+        for d in [2usize, 3, 4] {
+            let level = match kind {
+                CurveKind::Peano => 2,
+                _ => {
+                    if d == 2 {
+                        4
+                    } else if d == 3 {
+                        3
+                    } else {
+                        2
+                    }
+                }
+            };
+            let mapper = kind.nd_mapper(d, level);
+            let side = match mapper.domain_nd() {
+                sfc_mine::curves::engine::DomainNd::HyperRect { shape } => shape[0],
+                _ => unreachable!(),
+            };
+            for t in 0..12 {
+                let w = random_window_nd(&mut rng, side, d);
+                assert_exact_nd(mapper.as_ref(), &w, &format!("{} d={d} t={t}", kind.name()));
+            }
+            // Degenerate shapes: a single cell and the full cube.
+            let cell = WindowNd::new(vec![side - 1; d], vec![side - 1; d]);
+            assert_exact_nd(mapper.as_ref(), &cell, &format!("{} d={d} cell", kind.name()));
+            let full = WindowNd::new(vec![0; d], vec![side - 1; d]);
+            let ranges = mapper.decompose_nd(&full);
+            assert_eq!(ranges.len(), 1, "{} d={d}: full cube is one range", kind.name());
+            assert_eq!(ranges[0], 0..mapper.order_span_nd().unwrap());
+        }
+    }
+}
+
+#[test]
+fn plane_mappers_decompose_exactly() {
+    // The 2-D trait path: StaticCurve overrides (Hilbert/Z-order native
+    // descents, canonic closed form) and the generic radix fallback
+    // (Gray, Peano), all over variable-resolution plane order values.
+    let mut rng = Rng::new(7);
+    for kind in CurveKind::ALL {
+        let m = kind.mapper();
+        for t in 0..10 {
+            let (a, b) = (rng.below(300) as u32, rng.below(300) as u32);
+            let (c, e) = (rng.below(300) as u32, rng.below(300) as u32);
+            let w = Window::new((a.min(b), c.min(e)), (a.max(b), c.max(e)));
+            let ranges = m.decompose(&w);
+            assert_sorted_disjoint(&ranges, kind.name());
+            let mut decoded = HashSet::new();
+            let mut buf = Vec::new();
+            for r in &ranges {
+                let orders: Vec<u64> = (r.start..r.end).collect();
+                buf.clear();
+                m.coords_batch(&orders, &mut buf);
+                for &p in &buf {
+                    assert!(decoded.insert(p), "{} t={t}: duplicate {p:?}", kind.name());
+                }
+            }
+            let mut want = HashSet::new();
+            for i in w.lo.0..=w.hi.0 {
+                for j in w.lo.1..=w.hi.1 {
+                    want.insert((i, j));
+                }
+            }
+            assert_eq!(decoded, want, "{} t={t}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn rect_and_square_mappers_decompose_exactly() {
+    // Finite-domain mappers: the fixed-level Hilbert square (native
+    // descent), the FUR rectangle (default scan) and canonic rect
+    // (closed form); windows clamp to the domain.
+    let mut rng = Rng::new(11);
+    for kind in [CurveKind::Hilbert, CurveKind::ZOrder, CurveKind::Canonic] {
+        let m = kind.rect_mapper(32, 32);
+        for _ in 0..8 {
+            let (a, b) = (rng.below(40) as u32, rng.below(40) as u32);
+            let (c, e) = (rng.below(40) as u32, rng.below(40) as u32);
+            let w = Window::new((a.min(b), c.min(e)), (a.max(b), c.max(e)));
+            let ranges = m.decompose(&w);
+            assert_sorted_disjoint(&ranges, kind.name());
+            let mut count = 0u64;
+            for r in &ranges {
+                for cdx in r.clone() {
+                    let (i, j) = m.coords(cdx);
+                    assert!(
+                        w.contains(i, j) && i < 32 && j < 32,
+                        "{}: decoded ({i},{j}) outside window",
+                        kind.name()
+                    );
+                    count += 1;
+                }
+            }
+            let wi = (w.hi.0.min(31) + 1).saturating_sub(w.lo.0.min(32)) as u64;
+            let wj = (w.hi.1.min(31) + 1).saturating_sub(w.lo.1.min(32)) as u64;
+            assert_eq!(count, wi * wj, "{}: clamped cell count", kind.name());
+        }
+    }
+}
+
+#[test]
+fn adapter_routes_nd_windows_to_2d_decompose() {
+    let m = CurveKind::Hilbert.rect_mapper(16, 16);
+    let w2 = Window::new((3, 2), (9, 13));
+    let wn = WindowNd::new(vec![3, 2], vec![9, 13]);
+    assert_eq!(m.decompose(&w2), m.decompose_nd(&wn));
+}
+
+#[test]
+fn hilbert_clusters_better_than_zorder_at_level8() {
+    // The acceptance criterion: on random 2-D windows at level 8, the
+    // mean ranges-per-window is strictly lower for Hilbert than for
+    // Z-order (Netay's clustering property, measured).
+    let h = CurveKind::Hilbert.nd_mapper(2, 8);
+    let z = CurveKind::ZOrder.nd_mapper(2, 8);
+    let mut rng = Rng::new(4242);
+    let (mut hr, mut zr) = (0u64, 0u64);
+    for t in 0..200 {
+        let w = random_window_nd(&mut rng, 256, 2);
+        let hd = h.decompose_nd(&w);
+        let zd = z.decompose_nd(&w);
+        assert_sorted_disjoint(&hd, &format!("hilbert t={t}"));
+        assert_sorted_disjoint(&zd, &format!("zorder t={t}"));
+        // Identical coverage, different fragmentation.
+        let cells: u64 = w.cell_count();
+        assert_eq!(hd.iter().map(|r| r.end - r.start).sum::<u64>(), cells);
+        assert_eq!(zd.iter().map(|r| r.end - r.start).sum::<u64>(), cells);
+        hr += hd.len() as u64;
+        zr += zd.len() as u64;
+    }
+    assert!(
+        hr < zr,
+        "clustering property: hilbert mean ranges ({}) must beat zorder ({})",
+        hr as f64 / 200.0,
+        zr as f64 / 200.0
+    );
+}
+
+#[test]
+fn coarsening_caps_ranges_and_keeps_coverage() {
+    let m = CurveKind::Hilbert.nd_mapper(2, 8);
+    let mut rng = Rng::new(99);
+    for _ in 0..40 {
+        let w = random_window_nd(&mut rng, 256, 2);
+        let exact = m.decompose_nd(&w);
+        for cap in [1usize, 3, 7, 16] {
+            let mut coarse = exact.clone();
+            coarsen_ranges(&mut coarse, cap);
+            assert!(coarse.len() <= cap, "cap={cap}: {} ranges", coarse.len());
+            assert_sorted_disjoint(&coarse, "coarsened");
+            // Every exact range stays covered: no true hit can be lost.
+            let mut ci = 0;
+            for r in &exact {
+                while ci < coarse.len() && coarse[ci].end < r.end {
+                    ci += 1;
+                }
+                assert!(
+                    ci < coarse.len() && coarse[ci].start <= r.start && r.end <= coarse[ci].end,
+                    "cap={cap}: exact range {r:?} lost"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sfc_index_matches_brute_force_on_random_data() {
+    let mut rng = Rng::new(2024);
+    for d in [2usize, 3, 4] {
+        let points = Matrix::random(400, d, d as u64 + 1, -20.0, 20.0);
+        let index = SfcIndex::build(&points, 6);
+        for _ in 0..30 {
+            let lo: Vec<f32> = (0..d).map(|_| rng.f32() * 35.0 - 20.0).collect();
+            let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 12.0).collect();
+            let mut got = index.query_window(&lo, &hi);
+            got.sort_unstable();
+            let mut want: Vec<u32> = (0..points.rows as u32)
+                .filter(|&p| {
+                    points
+                        .row(p as usize)
+                        .iter()
+                        .zip(lo.iter().zip(&hi))
+                        .all(|(&v, (&l, &h))| (l..=h).contains(&v))
+                })
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want, "window d={d}");
+        }
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..d).map(|_| rng.f32() * 50.0 - 25.0).collect();
+            let k = 1 + rng.below(8) as usize;
+            let got = index.query_knn(&q, k);
+            let mut brute: Vec<(u32, f32)> = (0..points.rows as u32)
+                .map(|p| {
+                    let d2: f32 = points
+                        .row(p as usize)
+                        .iter()
+                        .zip(&q)
+                        .map(|(&a, &b)| (a - b) * (a - b))
+                        .sum();
+                    (p, d2.sqrt())
+                })
+                .collect();
+            brute.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            assert_eq!(got.len(), k, "knn d={d}");
+            for (g, w) in got.iter().zip(&brute) {
+                assert!(
+                    (g.1 - w.1).abs() <= 1e-5 * w.1.max(1.0),
+                    "knn d={d}: distance {g:?} vs {w:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn max_ranges_never_loses_a_true_hit() {
+    let points = Matrix::random(600, 3, 5, 0.0, 64.0);
+    let index = SfcIndex::build(&points, 7);
+    let mut rng = Rng::new(55);
+    for _ in 0..25 {
+        let lo: Vec<f32> = (0..3).map(|_| rng.f32() * 50.0).collect();
+        let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 20.0).collect();
+        let (mut exact, stats_exact) = index.query_window_stats(&lo, &hi, 0);
+        exact.sort_unstable();
+        for cap in [1usize, 2, 5, 10] {
+            let (mut coarse, stats) = index.query_window_stats(&lo, &hi, cap);
+            coarse.sort_unstable();
+            assert_eq!(exact, coarse, "cap={cap}: result set changed");
+            assert!(stats.ranges <= cap);
+            assert!(stats.candidates >= stats_exact.candidates);
+            assert_eq!(stats.results, stats_exact.results);
+        }
+    }
+}
+
+#[test]
+fn join_sfc_identical_to_nested_on_test_corpus() {
+    // The acceptance criterion: join_sfc returns result sets identical
+    // to join_grid_nested on the test corpus.
+    let points = make_clustered(1500, 3, 50, 0.9, 31);
+    for eps in [0.7f32, 1.3] {
+        let (pn, sn) = join_grid_nested_dims(&points, eps, 3);
+        let (ps, ss) = join_sfc_dims(&points, eps, 3);
+        assert_eq!(normalize(pn), normalize(ps), "eps={eps}");
+        assert_eq!(sn.comparisons, ss.comparisons, "same candidate structure");
+        assert!(ss.ranges > 0);
+    }
+}
