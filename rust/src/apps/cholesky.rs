@@ -12,10 +12,24 @@
 //!   cache-oblivious with jump-over.
 //!
 //! The unblocked [`cholesky_unblocked`] is the correctness reference.
+//!
+//! The cache-oblivious pair lives on the curve-tiled storage of
+//! [`crate::linalg`]: [`cholesky_tiles`] is a **left-looking** tile
+//! factorization of a [`TiledMatrix`] (task `(i, j)` subtracts
+//! `Σ_{k<j} L_{ik}·L_{jk}ᵀ`, then factors or triangular-solves), and
+//! [`par_cholesky_tiles`] runs the same tasks through the
+//! [`Coordinator::par_linalg`] dependency graph — `(i, j)` waits on
+//! `(i, k)`, `(j, k)` for `k < j` and on the diagonal `(j, j)` — with
+//! tile curve ranks as scheduling priorities. Each tile's value is
+//! produced by exactly one task with a fixed inner summation order, so
+//! the parallel result is **bitwise identical** to the sequential one
+//! for any worker count and any valid execution order.
 
 use super::Matrix;
+use crate::coordinator::{Coordinator, TaskGraph};
 use crate::curves::engine::FgfMapper;
 use crate::curves::fgf::{Intersect, LowerTriangleIncl, MinBounds};
+use crate::linalg::tiled::{TileCells, TileMeta, TiledMatrix};
 use crate::{Error, Result};
 
 /// Traversal order of the trailing-update block grid.
@@ -181,6 +195,188 @@ fn trailing_update(
     }
 }
 
+/// Left-looking Cholesky on curve-tiled storage (paper §7, the
+/// dependency-constrained traversal): tiles of the lower triangle are
+/// finalized one task at a time, each reading only already-final tiles.
+/// `O(n³/3)` flops; the curve-tiled layout keeps every task's working
+/// set (its tile plus one panel pair) contiguous.
+///
+/// On return the lower triangle of `a` holds `L` and the strict upper
+/// triangle is zeroed, exactly like [`cholesky_unblocked`]. Errors on a
+/// non-positive-definite input.
+///
+/// # Panics
+/// Panics if `a` is not square.
+pub fn cholesky_tiles(a: &mut TiledMatrix) -> Result<()> {
+    assert_eq!(a.rows(), a.cols(), "Cholesky needs a square matrix");
+    let nb = a.tile_rows();
+    let meta = a.meta();
+    let tile_len = a.tile_len();
+    let cells = TileCells::new(&mut a.data, tile_len);
+    for j in 0..nb {
+        for i in j..nb {
+            // SAFETY: single-threaded; each task writes one tile and
+            // reads tiles finalized by earlier iterations.
+            unsafe { chol_task(&cells, &meta, i, j)? };
+        }
+    }
+    zero_upper_tiles(a);
+    Ok(())
+}
+
+/// Parallel [`cholesky_tiles`]: the left-looking task DAG — `(i, j)`
+/// after `(i, k)`, `(j, k)` for `k < j` and after the diagonal `(j, j)`
+/// — executed by [`Coordinator::par_linalg`] with tile curve ranks as
+/// priorities. Bitwise equal to the sequential kernel (each tile value
+/// is produced by one task with a fixed summation order).
+pub fn par_cholesky_tiles(coord: &Coordinator, a: &mut TiledMatrix) -> Result<()> {
+    assert_eq!(a.rows(), a.cols(), "Cholesky needs a square matrix");
+    let nb = a.tile_rows();
+    // Task per lower-triangle tile, created in column-major order.
+    let mut task_of = vec![u32::MAX; nb * nb];
+    let mut tasks: Vec<(usize, usize)> = Vec::with_capacity(nb * (nb + 1) / 2);
+    for j in 0..nb {
+        for i in j..nb {
+            task_of[i * nb + j] = tasks.len() as u32;
+            tasks.push((i, j));
+        }
+    }
+    let mut graph = TaskGraph::new(tasks.len());
+    for (tid, &(i, j)) in tasks.iter().enumerate() {
+        let tid = tid as u32;
+        graph.set_priority(tid, a.slot(i, j) as u64);
+        for k in 0..j {
+            graph.add_dep(task_of[i * nb + k], tid);
+            if i != j {
+                graph.add_dep(task_of[j * nb + k], tid);
+            }
+        }
+        if i != j {
+            graph.add_dep(task_of[j * nb + j], tid);
+        }
+    }
+    let meta = a.meta();
+    let tile_len = a.tile_len();
+    let error: std::sync::Mutex<Option<Error>> = std::sync::Mutex::new(None);
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let cells = TileCells::new(&mut a.data, tile_len);
+    coord.par_linalg(&graph, |tid| {
+        if failed.load(std::sync::atomic::Ordering::Relaxed) {
+            return; // a predecessor hit a non-PD pivot: drain cheaply
+        }
+        let (i, j) = tasks[tid as usize];
+        // SAFETY: the task graph serializes every conflicting tile
+        // access (writes to (i,j); reads of (i,k), (j,k), (j,j) are of
+        // finalized tiles).
+        if let Err(e) = unsafe { chol_task(&cells, &meta, i, j) } {
+            failed.store(true, std::sync::atomic::Ordering::Relaxed);
+            *error.lock().expect("error slot poisoned") = Some(e);
+        }
+    });
+    if let Some(e) = error.into_inner().expect("error slot poisoned") {
+        return Err(e);
+    }
+    zero_upper_tiles(a);
+    Ok(())
+}
+
+/// One left-looking tile task: subtract the panel products, then factor
+/// (diagonal) or triangular-solve (below-diagonal).
+///
+/// # Safety
+/// Caller must guarantee (by sequencing or the task graph) that no other
+/// task concurrently touches tile `(i, j)` and none writes the tiles
+/// read here.
+unsafe fn chol_task(cells: &TileCells<'_>, meta: &TileMeta, i: usize, j: usize) -> Result<()> {
+    let t = meta.tile;
+    let out = cells.tile_mut(meta.slot(i, j));
+    let ri = meta.tile_rows_at(i);
+    let rj = meta.tile_cols_at(j);
+    for k in 0..j {
+        let rk = meta.tile_cols_at(k);
+        let xik = cells.tile(meta.slot(i, k));
+        let yjk = cells.tile(meta.slot(j, k));
+        gemm_nt_sub(out, xik, yjk, t, ri, rj, rk);
+    }
+    if i == j {
+        factor_tile(out, t, ri)
+    } else {
+        let ljj = cells.tile(meta.slot(j, j));
+        trsm_tile(out, ljj, t, ri, rj);
+        Ok(())
+    }
+}
+
+/// `out[..ri, ..rj] -= x[..ri, ..rk] · y[..rj, ..rk]ᵀ` on `t`-padded
+/// tile spans (the left-looking panel product).
+fn gemm_nt_sub(out: &mut [f32], x: &[f32], y: &[f32], t: usize, ri: usize, rj: usize, rk: usize) {
+    for r in 0..ri {
+        for c in 0..rj {
+            let mut acc = 0.0f32;
+            for s in 0..rk {
+                acc += x[r * t + s] * y[c * t + s];
+            }
+            out[r * t + c] -= acc;
+        }
+    }
+}
+
+/// Unblocked Cholesky of the leading `r × r` corner of a `t`-padded
+/// diagonal tile; zeroes the tile's strict upper triangle like
+/// [`cholesky_unblocked`].
+fn factor_tile(d: &mut [f32], t: usize, r: usize) -> Result<()> {
+    for j in 0..r {
+        let mut diag = d[j * t + j];
+        for k in 0..j {
+            let v = d[j * t + k];
+            diag -= v * v;
+        }
+        if diag <= 0.0 {
+            return Err(Error::Numerical(format!(
+                "matrix not positive definite at tile pivot {j} (d={diag})"
+            )));
+        }
+        let ljj = diag.sqrt();
+        d[j * t + j] = ljj;
+        for i in j + 1..r {
+            let mut v = d[i * t + j];
+            for k in 0..j {
+                v -= d[i * t + k] * d[j * t + k];
+            }
+            d[i * t + j] = v / ljj;
+        }
+        for i in 0..j {
+            d[i * t + j] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Solve `X · Lᵀ = B` in place of `x` (`x` is `ri × rj`, `l` the factored
+/// `rj × rj` diagonal tile), forward substitution along each row.
+fn trsm_tile(x: &mut [f32], l: &[f32], t: usize, ri: usize, rj: usize) {
+    for r in 0..ri {
+        for c in 0..rj {
+            let mut v = x[r * t + c];
+            for s in 0..c {
+                v -= x[r * t + s] * l[c * t + s];
+            }
+            x[r * t + c] = v / l[c * t + c];
+        }
+    }
+}
+
+/// Zero every strict-upper-triangle tile (the in-tile upper of diagonal
+/// tiles is already zeroed by [`factor_tile`]).
+fn zero_upper_tiles(a: &mut TiledMatrix) {
+    for bi in 0..a.tile_rows() {
+        for bj in bi + 1..a.tile_cols() {
+            let slot = a.slot(bi, bj);
+            a.tile_mut(slot).fill(0.0);
+        }
+    }
+}
+
 /// Build a well-conditioned SPD test matrix `M·Mᵀ + n·I`.
 pub fn random_spd(n: usize, seed: u64) -> Matrix {
     let m = Matrix::random(n, n, seed, -1.0, 1.0);
@@ -240,6 +436,52 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn tiles_factorization_matches_unblocked() {
+        use crate::curves::CurveKind;
+        for (n, t) in [(16usize, 4usize), (30, 8), (13, 5), (8, 16)] {
+            let a = random_spd(n, 11);
+            let mut reference = a.clone();
+            cholesky_unblocked(&mut reference).unwrap();
+            for kind in CurveKind::ALL {
+                let mut tiled = TiledMatrix::from_matrix(&a, t, kind);
+                cholesky_tiles(&mut tiled).unwrap();
+                let l = tiled.to_matrix();
+                let d = l.max_abs_diff(&reference);
+                assert!(d < 1e-3, "{} n={n} t={t}: diff {d}", kind.name());
+                assert!(residual(&l, &a) < 1e-3 * n as f32);
+                for i in 0..n {
+                    for j in i + 1..n {
+                        assert_eq!(l.at(i, j), 0.0, "upper not zeroed at ({i},{j})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_cholesky_tiles_is_bitwise_sequential() {
+        let a = random_spd(37, 3);
+        let mut seq = TiledMatrix::from_matrix(&a, 8, crate::curves::CurveKind::Hilbert);
+        cholesky_tiles(&mut seq).unwrap();
+        for threads in [1usize, 3, 8] {
+            let coord = Coordinator::new(threads);
+            let mut par = TiledMatrix::from_matrix(&a, 8, crate::curves::CurveKind::Hilbert);
+            par_cholesky_tiles(&coord, &mut par).unwrap();
+            assert_eq!(seq.data, par.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiles_non_pd_detected() {
+        let bad = Matrix::from_fn(6, 6, |i, j| if i == j { -1.0 } else { 0.0 });
+        let mut t1 = TiledMatrix::from_matrix(&bad, 2, crate::curves::CurveKind::Hilbert);
+        assert!(cholesky_tiles(&mut t1).is_err());
+        let mut t2 = TiledMatrix::from_matrix(&bad, 2, crate::curves::CurveKind::Hilbert);
+        let coord = Coordinator::new(4);
+        assert!(par_cholesky_tiles(&coord, &mut t2).is_err());
     }
 
     #[test]

@@ -13,10 +13,27 @@
 //!   j-block)` grid in curve order with canonic interiors (the practical
 //!   hot-path variant);
 //! * [`floyd_tiled`] — canonic block order (the cache-conscious baseline).
+//! * [`floyd_tiles`] / [`par_floyd_tiles`] — curve-tiled storage: the
+//!   distance matrix lives in curve-ordered [`TiledMatrix`] layout and
+//!   each pivot round updates the tile grid as a **wavefront** of
+//!   independent tasks (pivot row `k` and column `k` are fixed points of
+//!   round `k` for non-negative weights, so they are snapshotted once
+//!   and every tile task reads only the snapshots). Round results are
+//!   **bitwise identical** to [`floyd_canonic`], sequential or parallel.
+//!
+//! Unlike matmul and Cholesky, the per-pivot sweep touches every cell
+//! exactly once per round — it is bandwidth-bound, so the tiled layout
+//! is *miss-neutral* for the sequential kernel (the simulator shows
+//! curve-tiled ≈ canonic here). What the wavefront buys is the parallel
+//! structure: `n` rounds of `⌈n/t⌉²` fully independent tile tasks whose
+//! per-worker working sets are contiguous curve segments, while exact
+//! equality with the canonic pivot order is preserved.
 
 use super::Matrix;
+use crate::coordinator::{Coordinator, TaskGraph};
 use crate::curves::engine::CurveMapper as _;
 use crate::curves::CurveKind;
+use crate::linalg::tiled::{TileCells, TiledMatrix};
 
 /// Value used for "no edge". Additions saturate below f32::MAX.
 pub const INF: f32 = 1.0e30;
@@ -121,6 +138,101 @@ pub fn floyd_tiled(d: &mut Matrix, t: usize) {
     }
 }
 
+/// Floyd–Warshall on curve-tiled storage (paper §7): `n` pivot rounds,
+/// each a wavefront of independent tile updates in curve order. Pivot
+/// row/column `k` are snapshotted per round (they are fixed points of
+/// round `k` under non-negative weights), which is what makes every tile
+/// task of the round independent. `O(n³)` relaxations; bitwise equal to
+/// [`floyd_canonic`].
+///
+/// # Panics
+/// Panics if `d` is not square.
+pub fn floyd_tiles(d: &mut TiledMatrix) {
+    assert_eq!(d.rows(), d.cols(), "Floyd–Warshall needs a square matrix");
+    let n = d.rows();
+    let t = d.tile_size();
+    for k in 0..n {
+        let (rowk, colk) = snapshot_pivot(d, k);
+        for slot in 0..d.num_tiles() {
+            let (bi, bj) = d.tile_coords(slot);
+            let (ri, rj) = (d.tile_rows_at(bi), d.tile_cols_at(bj));
+            floyd_tile_update(
+                d.tile_mut(slot),
+                &rowk[bj * t..bj * t + rj],
+                &colk[bi * t..bi * t + ri],
+                t,
+            );
+        }
+    }
+}
+
+/// Parallel [`floyd_tiles`]: the per-round wavefront fanned across the
+/// worker pool by [`Coordinator::par_linalg`] (an edgeless graph per
+/// round — tile curve ranks order the hand-out). Bitwise equal to the
+/// sequential kernel and to [`floyd_canonic`] for any worker count.
+pub fn par_floyd_tiles(coord: &Coordinator, d: &mut TiledMatrix) {
+    assert_eq!(d.rows(), d.cols(), "Floyd–Warshall needs a square matrix");
+    let n = d.rows();
+    let t = d.tile_size();
+    let tile_len = d.tile_len();
+    let meta = d.meta();
+    let tiles: Vec<(usize, usize)> = (0..d.num_tiles()).map(|s| d.tile_coords(s)).collect();
+    // Independent tasks; slot index == curve rank == priority. One graph
+    // reused across all rounds.
+    let graph = TaskGraph::new(tiles.len());
+    for k in 0..n {
+        let (rowk, colk) = snapshot_pivot(d, k);
+        let cells = TileCells::new(&mut d.data, tile_len);
+        coord.par_linalg(&graph, |task| {
+            let (bi, bj) = tiles[task as usize];
+            // SAFETY: each round's tasks write disjoint tiles and read
+            // only the round's snapshots.
+            let tile = unsafe { cells.tile_mut(task as usize) };
+            let (ri, rj) = (meta.tile_rows_at(bi), meta.tile_cols_at(bj));
+            floyd_tile_update(tile, &rowk[bj * t..bj * t + rj], &colk[bi * t..bi * t + ri], t);
+        });
+    }
+}
+
+/// Copy pivot row `k` and column `k` out of the tiled layout (the
+/// round's read-only working set, two cache-resident `n`-vectors).
+fn snapshot_pivot(d: &TiledMatrix, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let t = d.tile_size();
+    let (kb, ko) = (k / t, k % t);
+    let mut rowk = vec![0.0f32; d.cols()];
+    for bj in 0..d.tile_cols() {
+        let tile = d.tile(d.slot(kb, bj));
+        for c in 0..d.tile_cols_at(bj) {
+            rowk[bj * t + c] = tile[ko * t + c];
+        }
+    }
+    let mut colk = vec![0.0f32; d.rows()];
+    for bi in 0..d.tile_rows() {
+        let tile = d.tile(d.slot(bi, kb));
+        for r in 0..d.tile_rows_at(bi) {
+            colk[bi * t + r] = tile[r * t + ko];
+        }
+    }
+    (rowk, colk)
+}
+
+/// Relax one tile against the round's pivot snapshots; `rowk`/`colk`
+/// are the tile-local windows of the snapshot vectors (lengths = the
+/// tile's actual column/row extents).
+fn floyd_tile_update(tile: &mut [f32], rowk: &[f32], colk: &[f32], t: usize) {
+    for (r, &dik) in colk.iter().enumerate() {
+        if dik >= INF {
+            continue;
+        }
+        for (c, &dkj) in rowk.iter().enumerate() {
+            let cand = dik + dkj;
+            if cand < tile[r * t + c] {
+                tile[r * t + c] = cand;
+            }
+        }
+    }
+}
+
 #[inline]
 fn block_update(d: &mut Matrix, k: usize, i0: usize, j0: usize, t: usize) {
     let n = d.rows;
@@ -167,6 +279,41 @@ mod tests {
                 floyd_curve_blocked(&mut h, 8, kind);
                 assert_eq!(a.data, h.data, "{} blocked n={n}", kind.name());
             }
+        }
+    }
+
+    #[test]
+    fn tiles_bitwise_equal_canonic() {
+        for (n, t) in [(17usize, 4usize), (32, 8), (9, 16), (20, 7)] {
+            let g = random_graph(n, 0.25, 5);
+            let mut reference = g.clone();
+            floyd_canonic(&mut reference);
+            for kind in CurveKind::ALL {
+                let mut tiled = TiledMatrix::from_matrix(&g, t, kind);
+                floyd_tiles(&mut tiled);
+                assert_eq!(
+                    tiled.to_matrix().data,
+                    reference.data,
+                    "{} n={n} t={t}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_floyd_tiles_is_bitwise_sequential() {
+        let g = random_graph(41, 0.2, 13);
+        let mut reference = g.clone();
+        floyd_canonic(&mut reference);
+        let mut seq = TiledMatrix::from_matrix(&g, 8, CurveKind::Hilbert);
+        floyd_tiles(&mut seq);
+        assert_eq!(seq.to_matrix().data, reference.data);
+        for threads in [1usize, 3, 8] {
+            let coord = Coordinator::new(threads);
+            let mut par = TiledMatrix::from_matrix(&g, 8, CurveKind::Hilbert);
+            par_floyd_tiles(&coord, &mut par);
+            assert_eq!(seq.data, par.data, "threads={threads}");
         }
     }
 

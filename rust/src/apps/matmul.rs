@@ -11,12 +11,22 @@
 //!   grid is traversed in any engine curve order (the rect mapper handles
 //!   any shape), giving locality at every scale simultaneously.
 //!   [`matmul_hilbert`] is the Hilbert instantiation.
+//! * [`matmul_tiles`] / [`par_matmul_tiles`] — cache-oblivious **storage
+//!   and traversal**: both operands live in curve-ordered
+//!   [`TiledMatrix`] layout and the `(i-block, j-block)` output-tile
+//!   task space is walked (or scheduled) in curve order, the full §6–§7
+//!   recursion argument. The parallel driver runs one task per output
+//!   tile through [`Coordinator::par_linalg`]; accumulation over `k`
+//!   happens entirely inside the owning task, so parallel results are
+//!   **bitwise identical** to [`matmul_tiles`].
 //!
 //! All variants produce identical results (up to f32 summation order).
 
 use super::Matrix;
+use crate::coordinator::{Coordinator, TaskGraph};
 use crate::curves::engine;
 use crate::curves::CurveKind;
+use crate::linalg::tiled::{TileCells, TiledMatrix};
 
 /// Micro-kernel: `a_block += b_row ⋅ c` for one scalar `b`, vectorizable.
 #[inline(always)]
@@ -120,6 +130,71 @@ pub fn matmul_hilbert(b: &Matrix, c: &Matrix, t: usize) -> Matrix {
     matmul_curve(b, c, t, CurveKind::Hilbert)
 }
 
+/// Cache-oblivious storage *and* traversal (paper §6–§7): multiply two
+/// curve-tiled matrices, `A = B · C`, visiting the output tiles in curve
+/// order — which, because [`TiledMatrix`] slots *are* curve ranks, is
+/// also ascending storage order of `A`.
+///
+/// `O(n·k·m)` flops like every dense variant; the point is the miss
+/// count — see [`crate::linalg::sim`] for the simulated L1/L2 comparison
+/// against the canonic loop.
+///
+/// # Panics
+/// Panics on mismatched inner dimensions or tile sizes.
+pub fn matmul_tiles(b: &TiledMatrix, c: &TiledMatrix) -> TiledMatrix {
+    assert_eq!(b.cols(), c.rows(), "inner dimensions must agree");
+    assert_eq!(b.tile_size(), c.tile_size(), "operand tile sizes must agree");
+    let mut a = TiledMatrix::zeros(b.rows(), c.cols(), b.tile_size(), b.kind());
+    for slot in 0..a.num_tiles() {
+        let (bi, bj) = a.tile_coords(slot);
+        compute_output_tile(b, c, a.tile_mut(slot), bi, bj);
+    }
+    a
+}
+
+/// Parallel [`matmul_tiles`]: one task per output tile, scheduled by
+/// [`Coordinator::par_linalg`] with tile curve order as the priority.
+/// Tasks are independent (each accumulates its own tile over the full
+/// `k` range), so the result is **bitwise equal** to the sequential
+/// kernel for any worker count.
+pub fn par_matmul_tiles(coord: &Coordinator, b: &TiledMatrix, c: &TiledMatrix) -> TiledMatrix {
+    assert_eq!(b.cols(), c.rows(), "inner dimensions must agree");
+    assert_eq!(b.tile_size(), c.tile_size(), "operand tile sizes must agree");
+    let mut a = TiledMatrix::zeros(b.rows(), c.cols(), b.tile_size(), b.kind());
+    let tiles: Vec<(usize, usize)> = (0..a.num_tiles()).map(|s| a.tile_coords(s)).collect();
+    let tile_len = a.tile_len();
+    // Slot index == curve rank, so default priorities already schedule
+    // ready tasks in curve order.
+    let graph = TaskGraph::new(tiles.len());
+    let cells = TileCells::new(&mut a.data, tile_len);
+    coord.par_linalg(&graph, |task| {
+        let (bi, bj) = tiles[task as usize];
+        // SAFETY: every task writes exactly its own output slot; B and C
+        // are only read.
+        let out = unsafe { cells.tile_mut(task as usize) };
+        compute_output_tile(b, c, out, bi, bj);
+    });
+    a
+}
+
+/// One output tile: `out += Σ_k B(bi, k) · C(k, bj)`, `k` ascending
+/// (the fixed summation order both drivers share).
+fn compute_output_tile(b: &TiledMatrix, c: &TiledMatrix, out: &mut [f32], bi: usize, bj: usize) {
+    let t = b.tile_size();
+    let ri = b.tile_rows_at(bi);
+    let rj = c.tile_cols_at(bj);
+    for bk in 0..b.tile_cols() {
+        let rk = b.tile_cols_at(bk);
+        let bt = b.tile(b.slot(bi, bk));
+        let ct = c.tile(c.slot(bk, bj));
+        for r in 0..ri {
+            for s in 0..rk {
+                axpy(&mut out[r * t..r * t + rj], bt[r * t + s], &ct[s * t..s * t + rj]);
+            }
+        }
+    }
+}
+
 /// `A[i0.., j0..] += B[i0.., k0..] · C[k0.., j0..]` over one `t`-block.
 #[inline]
 fn block_update(a: &mut Matrix, b: &Matrix, c: &Matrix, i0: usize, k0: usize, j0: usize, t: usize) {
@@ -194,6 +269,39 @@ mod tests {
     #[test]
     fn flops_count() {
         assert_eq!(flops(2, 3, 4), 48);
+    }
+
+    #[test]
+    fn tiled_matmul_matches_naive() {
+        for (n, k, m, t) in [(9, 7, 11, 4), (16, 16, 16, 8), (5, 5, 5, 8), (1, 3, 2, 4)] {
+            let b = Matrix::random(n, k, 1, -1.0, 1.0);
+            let c = Matrix::random(k, m, 2, -1.0, 1.0);
+            let reference = matmul_naive(&b, &c);
+            for kind in CurveKind::ALL {
+                let bt = TiledMatrix::from_matrix(&b, t, kind);
+                let ct = TiledMatrix::from_matrix(&c, t, kind);
+                let a = matmul_tiles(&bt, &ct).to_matrix();
+                assert!(
+                    a.max_abs_diff(&reference) < 1e-4 * k as f32,
+                    "{} n={n} k={k} m={m} t={t}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn par_matmul_tiles_is_bitwise_sequential() {
+        let b = Matrix::random(33, 20, 4, -1.0, 1.0);
+        let c = Matrix::random(20, 27, 5, -1.0, 1.0);
+        let bt = TiledMatrix::from_matrix(&b, 8, CurveKind::Hilbert);
+        let ct = TiledMatrix::from_matrix(&c, 8, CurveKind::Hilbert);
+        let seq = matmul_tiles(&bt, &ct);
+        for threads in [1usize, 3, 8] {
+            let coord = Coordinator::new(threads);
+            let par = par_matmul_tiles(&coord, &bt, &ct);
+            assert_eq!(seq.data, par.data, "threads={threads}");
+        }
     }
 
     #[test]

@@ -1,16 +1,27 @@
 //! The paper's §7 application suite, each in canonic (nested-loop),
 //! cache-conscious (tiled) and cache-oblivious (Hilbert) variants:
 //!
-//! * [`matmul`] — matrix multiplication (the paper's §1 running example).
-//! * [`cholesky`] — Cholesky decomposition (dependency-constrained
-//!   traversal).
-//! * [`floyd`] — Floyd–Warshall transitive closure.
+//! * [`matmul`] — matrix multiplication (the paper's §1 running
+//!   example), from the naive loops up to curve-tiled storage
+//!   ([`matmul::matmul_tiles`] / [`matmul::par_matmul_tiles`]).
+//! * [`cholesky`] — Cholesky decomposition (the paper's
+//!   dependency-constrained traversal): right-looking blocked baselines
+//!   plus the left-looking tile DAG on curve-tiled storage
+//!   ([`cholesky::cholesky_tiles`] / [`cholesky::par_cholesky_tiles`]).
+//! * [`floyd`] — Floyd–Warshall transitive closure; per-pivot curve
+//!   traversals plus the tiled-storage wavefront
+//!   ([`floyd::floyd_tiles`] / [`floyd::par_floyd_tiles`]).
 //! * [`kmeans`] — k-Means clustering (the coordinator parallelises this
 //!   one; [`crate::runtime`] can offload its inner kernel to PJRT).
 //! * [`simjoin`] — ε-similarity join over a grid index, driven by the
 //!   FGF-Hilbert jump-over loop.
 //! * [`pairloop`] — the abstract "process all object pairs" loop of
 //!   Figure 1, instrumented against the cache simulator.
+//!
+//! The three dense kernels share the [`Matrix`] row-major container for
+//! their baselines and [`crate::linalg::TiledMatrix`] for the
+//! curve-tiled variants; [`crate::linalg::sim`] replays every variant
+//! against the cache hierarchy for the miss-count evidence.
 
 pub mod cholesky;
 pub mod floyd;

@@ -44,6 +44,77 @@ impl MemSink for CountingSink {
     }
 }
 
+/// A registry of labeled, disjoint address ranges ("regions") in the
+/// simulated address space — the provenance layer raw-address traces
+/// lack: tagging each matrix (or tile buffer) as a region lets the
+/// hierarchy attribute every miss to the structure that caused it
+/// (see [`RegionHierarchy`](super::hierarchy::RegionHierarchy)).
+#[derive(Default, Clone, Debug)]
+pub struct Regions {
+    /// `(base, end, label)` spans, in registration order.
+    spans: Vec<(u64, u64, String)>,
+}
+
+impl Regions {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Label the `bytes`-long range at `base`; returns the region id.
+    /// Ranges must not overlap an existing region.
+    pub fn add(&mut self, label: &str, base: u64, bytes: u64) -> usize {
+        let end = base + bytes;
+        for (b, e, l) in &self.spans {
+            assert!(end <= *b || base >= *e, "region '{label}' overlaps '{l}'");
+        }
+        self.spans.push((base, end, label.to_string()));
+        self.spans.len() - 1
+    }
+
+    /// Convenience: allocate an `n × elem`-byte array from `space` and
+    /// label it in one step; returns `(region id, base address)`.
+    pub fn alloc_labeled(
+        &mut self,
+        space: &mut AddressSpace,
+        label: &str,
+        n: u64,
+        elem: u32,
+    ) -> (usize, u64) {
+        let base = space.alloc_array(n, elem);
+        (self.add(label, base, n * elem as u64), base)
+    }
+
+    /// Region id containing `addr`, if any (linear scan — registries hold
+    /// a handful of matrices, not thousands).
+    #[inline]
+    pub fn find(&self, addr: u64) -> Option<usize> {
+        self.spans
+            .iter()
+            .position(|&(b, e, _)| (b..e).contains(&addr))
+    }
+
+    /// Label of a region id.
+    pub fn label(&self, id: usize) -> &str {
+        &self.spans[id].2
+    }
+
+    /// Labels in registration order.
+    pub fn labels(&self) -> impl Iterator<Item = &str> {
+        self.spans.iter().map(|(_, _, l)| l.as_str())
+    }
+
+    /// Number of registered regions.
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// True when no regions are registered.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+}
+
 /// Helper for laying out disjoint virtual arrays in the simulated address
 /// space (so different matrices never alias).
 #[derive(Default, Clone, Debug)]
@@ -93,6 +164,31 @@ mod tests {
         assert!(y >= x + 800);
         assert_eq!(x % 64, 0);
         assert_eq!(y % 64, 0);
+    }
+
+    #[test]
+    fn regions_find_and_label() {
+        let mut space = AddressSpace::new();
+        let mut regions = Regions::new();
+        let (a_id, a_base) = regions.alloc_labeled(&mut space, "A", 100, 4);
+        let (b_id, b_base) = regions.alloc_labeled(&mut space, "B", 10, 8);
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions.label(a_id), "A");
+        assert_eq!(regions.label(b_id), "B");
+        assert_eq!(regions.find(a_base), Some(a_id));
+        assert_eq!(regions.find(a_base + 399), Some(a_id));
+        assert_eq!(regions.find(b_base + 1), Some(b_id));
+        assert_eq!(regions.find(0), None, "below every region");
+        let labels: Vec<&str> = regions.labels().collect();
+        assert_eq!(labels, ["A", "B"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlaps")]
+    fn overlapping_regions_rejected() {
+        let mut r = Regions::new();
+        r.add("x", 100, 50);
+        r.add("y", 120, 10);
     }
 
     #[test]

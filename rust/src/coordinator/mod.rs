@@ -15,7 +15,12 @@
 //! **d-dimensional** domains: any finite [`CurveMapperNd`] (a native
 //! hypercube curve or a blanket-adapted 2-D mapper) is cut into the same
 //! contiguous [`ChunkQueue`] segments, with the worker body receiving
-//! `&[u32]` points.
+//! `&[u32]` points. For task spaces that are *not* one contiguous order
+//! range — the blocked linear-algebra kernels of [`crate::linalg`] —
+//! [`Coordinator::par_linalg`] executes a [`TaskGraph`] whose ready queue
+//! is ordered by tile curve order, so dependency-constrained work (matmul
+//! output tiles, left-looking Cholesky panels, Floyd–Warshall wavefront
+//! rounds) keeps the same locality-preserving hand-out.
 //!
 //! * [`scheduler`] — curve-segment scheduling (static ranges + dynamic
 //!   chunk queue).
@@ -42,6 +47,8 @@ use crate::curves::CurveKind;
 use crate::index::SfcIndex;
 use metrics::WorkerMetrics;
 use scheduler::ChunkQueue;
+
+pub use scheduler::TaskGraph;
 
 /// The coordinator: owns a worker count and dispatches Hilbert-ordered
 /// work across scoped threads.
@@ -197,6 +204,132 @@ impl Coordinator {
             });
         }
         (merged.expect("at least one worker"), metrics)
+    }
+
+    /// Execute a [`TaskGraph`] across the worker pool — the
+    /// **dependency-aware** companion to [`Coordinator::par_fold`] for
+    /// task spaces that are not a single contiguous order range (blocked
+    /// linear algebra: per-output-tile matmul accumulation, left-looking
+    /// Cholesky panels, Floyd–Warshall wavefront rounds).
+    ///
+    /// Workers pull the ready task with the **lowest priority value**
+    /// (linalg kernels set priorities to tile curve order values, so
+    /// execution stays spatially clustered whenever the DAG admits it),
+    /// run `body(task)`, then unlock dependents. The graph itself is not
+    /// consumed — in-degrees are copied per run, so one graph can drive
+    /// many rounds.
+    ///
+    /// `body` observes every predecessor's writes: the unlock handshake
+    /// goes through a mutex, so tasks ordered by an edge are also ordered
+    /// by happens-before. Disjoint tasks may run concurrently — sharing
+    /// mutable state across *unordered* tasks is the caller's contract
+    /// (the linalg kernels hand each task exclusive tiles).
+    ///
+    /// # Panics
+    /// Panics if the graph has a cycle (or unreachable in-degrees): the
+    /// run would otherwise deadlock with work remaining. A panic inside
+    /// `body` is caught, sibling workers are drained, and the panic is
+    /// then propagated to the caller (never a hang).
+    pub fn par_linalg(&self, graph: &TaskGraph, body: impl Fn(u32) + Sync) -> Vec<WorkerMetrics> {
+        let total = graph.tasks() as u64;
+        if total == 0 {
+            return Vec::new();
+        }
+        struct State {
+            /// Min-heap of ready `(priority, task)` pairs.
+            ready: std::collections::BinaryHeap<std::cmp::Reverse<(u64, u32)>>,
+            indegree: Vec<u32>,
+            running: u32,
+            done: u64,
+            /// Set when a task body panicked: drain every worker so the
+            /// panic can propagate through the join instead of leaving
+            /// waiters parked on the condvar forever.
+            aborted: bool,
+        }
+        let mut ready = std::collections::BinaryHeap::new();
+        let indegree = graph.indegrees().to_vec();
+        for (task, &deg) in indegree.iter().enumerate() {
+            if deg == 0 {
+                ready.push(std::cmp::Reverse((graph.priority(task as u32), task as u32)));
+            }
+        }
+        let state =
+            std::sync::Mutex::new(State { ready, indegree, running: 0, done: 0, aborted: false });
+        let cv = std::sync::Condvar::new();
+        let mut out: Vec<WorkerMetrics> = Vec::with_capacity(self.threads);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(self.threads);
+            for worker_id in 0..self.threads {
+                let state = &state;
+                let cv = &cv;
+                let body = &body;
+                handles.push(scope.spawn(move || {
+                    let mut m = WorkerMetrics::new(worker_id);
+                    let mut guard = state.lock().expect("scheduler state poisoned");
+                    loop {
+                        if guard.done == total || guard.aborted {
+                            break;
+                        }
+                        if let Some(std::cmp::Reverse((_, task))) = guard.ready.pop() {
+                            guard.running += 1;
+                            drop(guard);
+                            let t0 = std::time::Instant::now();
+                            // Catch task panics so sibling workers can be
+                            // drained before the panic propagates through
+                            // the scope join (otherwise they would wait on
+                            // the condvar forever).
+                            let outcome = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| body(task)),
+                            );
+                            m.record_chunk(1, t0.elapsed());
+                            guard = state.lock().expect("scheduler state poisoned");
+                            guard.running -= 1;
+                            if let Err(payload) = outcome {
+                                guard.aborted = true;
+                                cv.notify_all();
+                                drop(guard);
+                                std::panic::resume_unwind(payload);
+                            }
+                            guard.done += 1;
+                            let mut unlocked = false;
+                            for &dep in graph.dependents(task) {
+                                let deg = &mut guard.indegree[dep as usize];
+                                *deg -= 1;
+                                if *deg == 0 {
+                                    guard
+                                        .ready
+                                        .push(std::cmp::Reverse((graph.priority(dep), dep)));
+                                    unlocked = true;
+                                }
+                            }
+                            if unlocked || guard.done == total {
+                                cv.notify_all();
+                            }
+                        } else {
+                            assert!(
+                                guard.running > 0,
+                                "par_linalg: task graph has a cycle \
+                                 ({} of {total} tasks unreachable)",
+                                total - guard.done
+                            );
+                            guard = cv.wait(guard).expect("scheduler state poisoned");
+                            // Loop re-checks done/aborted before popping.
+                        }
+                    }
+                    drop(guard);
+                    m
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(m) => out.push(m),
+                    // Re-raise the task's own payload so callers (and
+                    // #[should_panic] tests) see the original message.
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+        });
+        out
     }
 
     /// [`Coordinator::par_fold`] over the `2^level × 2^level` Hilbert
@@ -497,6 +630,94 @@ mod tests {
             |a, b| a + b,
         );
         assert_eq!(nd_sum, sum_2d);
+    }
+
+    #[test]
+    fn par_linalg_runs_every_task_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let coord = Coordinator::new(4);
+        let ran: Vec<AtomicU32> = (0..50).map(|_| AtomicU32::new(0)).collect();
+        let graph = TaskGraph::new(50);
+        let metrics = coord.par_linalg(&graph, |t| {
+            ran[t as usize].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(ran.iter().all(|r| r.load(Ordering::Relaxed) == 1));
+        let tasks: u64 = metrics.iter().map(|m| m.items).sum();
+        assert_eq!(tasks, 50);
+    }
+
+    #[test]
+    fn par_linalg_respects_dependency_edges() {
+        use std::sync::Mutex;
+        // A diamond + chain: every edge must be observed in order.
+        let mut graph = TaskGraph::new(6);
+        let edges = [(0u32, 1u32), (0, 2), (1, 3), (2, 3), (3, 4), (4, 5)];
+        for &(b, a) in &edges {
+            graph.add_dep(b, a);
+        }
+        for threads in [1usize, 4] {
+            let coord = Coordinator::new(threads);
+            let order = Mutex::new(Vec::new());
+            coord.par_linalg(&graph, |t| order.lock().unwrap().push(t));
+            let order = order.into_inner().unwrap();
+            assert_eq!(order.len(), 6);
+            let pos = |t: u32| order.iter().position(|&x| x == t).unwrap();
+            for &(b, a) in &edges {
+                assert!(pos(b) < pos(a), "edge {b}->{a} violated in {order:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_linalg_single_thread_follows_priorities() {
+        use std::sync::Mutex;
+        let coord = Coordinator { threads: 1, chunk: 1 };
+        let mut graph = TaskGraph::new(4);
+        // Reverse priorities: task 3 first, then 2, 1, 0.
+        for t in 0..4u32 {
+            graph.set_priority(t, 10 - t as u64);
+        }
+        let order = Mutex::new(Vec::new());
+        coord.par_linalg(&graph, |t| order.lock().unwrap().push(t));
+        assert_eq!(order.into_inner().unwrap(), vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn par_linalg_graph_is_reusable() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let mut graph = TaskGraph::new(8);
+        for t in 1..8u32 {
+            graph.add_dep(t - 1, t);
+        }
+        let coord = Coordinator::new(3);
+        let count = AtomicU64::new(0);
+        for _ in 0..3 {
+            coord.par_linalg(&graph, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn par_linalg_task_panic_propagates_instead_of_hanging() {
+        // Regression: a panicking task body must drain the waiting
+        // workers and re-raise, not leave them parked on the condvar.
+        let coord = Coordinator::new(4);
+        let graph = TaskGraph::new(32);
+        coord.par_linalg(&graph, |t| {
+            if t == 7 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn par_linalg_empty_graph_is_noop() {
+        let coord = Coordinator::new(2);
+        let metrics = coord.par_linalg(&TaskGraph::new(0), |_| unreachable!());
+        assert!(metrics.is_empty());
     }
 
     #[test]

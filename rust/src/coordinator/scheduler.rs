@@ -56,6 +56,83 @@ impl ChunkQueue {
     }
 }
 
+/// A dependency graph over numbered tasks, scheduled by
+/// [`Coordinator::par_linalg`](crate::coordinator::Coordinator::par_linalg).
+///
+/// Each task carries a **priority** (lower runs first among ready tasks);
+/// the linear-algebra kernels set it to the task's tile **curve order
+/// value**, so whenever several tasks are runnable the scheduler picks the
+/// one whose working set is spatially closest to recently-finished work —
+/// the locality-preserving hand-out of [`ChunkQueue`], generalized to
+/// DAG-constrained task spaces (left-looking Cholesky panels, wavefront
+/// rounds).
+///
+/// Edges are added with [`TaskGraph::add_dep`]; a task becomes ready when
+/// every predecessor has finished. Graphs are reusable: the executor
+/// copies the in-degree vector per run.
+#[derive(Clone, Debug)]
+pub struct TaskGraph {
+    priority: Vec<u64>,
+    dependents: Vec<Vec<u32>>,
+    indegree: Vec<u32>,
+    edges: u64,
+}
+
+impl TaskGraph {
+    /// Graph of `tasks` initially-independent tasks, priorities defaulting
+    /// to the task index (so tasks created in curve order run in curve
+    /// order).
+    pub fn new(tasks: usize) -> Self {
+        assert!(tasks <= u32::MAX as usize, "task ids are u32");
+        TaskGraph {
+            priority: (0..tasks as u64).collect(),
+            dependents: vec![Vec::new(); tasks],
+            indegree: vec![0; tasks],
+            edges: 0,
+        }
+    }
+
+    /// Number of tasks.
+    pub fn tasks(&self) -> usize {
+        self.priority.len()
+    }
+
+    /// Number of dependency edges.
+    pub fn edges(&self) -> u64 {
+        self.edges
+    }
+
+    /// Set a task's scheduling priority (lower runs first among ready
+    /// tasks); linalg kernels pass the tile's curve order value.
+    pub fn set_priority(&mut self, task: u32, priority: u64) {
+        self.priority[task as usize] = priority;
+    }
+
+    /// Scheduling priority of a task.
+    pub fn priority(&self, task: u32) -> u64 {
+        self.priority[task as usize]
+    }
+
+    /// Declare that `after` may only run once `before` has finished.
+    /// Duplicate edges are permitted (counted consistently on both sides).
+    pub fn add_dep(&mut self, before: u32, after: u32) {
+        assert_ne!(before, after, "a task cannot depend on itself");
+        self.dependents[before as usize].push(after);
+        self.indegree[after as usize] += 1;
+        self.edges += 1;
+    }
+
+    /// Tasks unlocked by `task` finishing.
+    pub(crate) fn dependents(&self, task: u32) -> &[u32] {
+        &self.dependents[task as usize]
+    }
+
+    /// Initial in-degree of every task (copied per run by the executor).
+    pub(crate) fn indegrees(&self) -> &[u32] {
+        &self.indegree
+    }
+}
+
 /// Static partition of `[0, total)` into `parts` near-equal contiguous
 /// ranges (the zero-coordination alternative to [`ChunkQueue`]).
 pub fn static_ranges(total: u64, parts: usize) -> Vec<(u64, u64)> {
@@ -147,6 +224,29 @@ mod tests {
         assert_eq!(q.next_chunk(), Some((10, 20)));
         assert_eq!(q.next_chunk(), Some((20, 25)));
         assert_eq!(q.next_chunk(), None);
+    }
+
+    #[test]
+    fn task_graph_counts_edges_and_degrees() {
+        let mut g = TaskGraph::new(4);
+        assert_eq!(g.tasks(), 4);
+        assert_eq!(g.edges(), 0);
+        g.add_dep(0, 2);
+        g.add_dep(1, 2);
+        g.add_dep(2, 3);
+        assert_eq!(g.edges(), 3);
+        assert_eq!(g.indegrees(), &[0, 0, 2, 1]);
+        assert_eq!(g.dependents(0), &[2]);
+        assert_eq!(g.dependents(2), &[3]);
+        g.set_priority(3, 99);
+        assert_eq!(g.priority(3), 99);
+        assert_eq!(g.priority(1), 1, "default priority is the task index");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot depend on itself")]
+    fn task_graph_rejects_self_edges() {
+        TaskGraph::new(2).add_dep(1, 1);
     }
 
     #[test]

@@ -34,6 +34,13 @@
 //!   point sharding via [`apps::kmeans::hilbert_point_order`]), and the
 //!   ε-similarity join, each in canonic, cache-conscious (tiled) and
 //!   cache-oblivious (engine-curve) variants.
+//! * [`linalg`] — cache-oblivious linear algebra (§6–§7):
+//!   [`linalg::TiledMatrix`] stores `tile × tile` blocks contiguously in
+//!   curve order; the matmul/Cholesky/Floyd kernels run on it
+//!   sequentially or as dependency graphs through
+//!   [`coordinator::Coordinator::par_linalg`] (bitwise equal either
+//!   way), and [`linalg::sim`] replays each variant's access stream
+//!   through the cache simulator for per-matrix L1/L2 miss reports.
 //! * [`index`] — the index substrates: the legacy 2-D projection
 //!   [`index::GridIndex`], the full-dimensional [`index::GridIndexNd`]
 //!   (cells ranked along the true d-dim Hilbert curve), and the
@@ -80,11 +87,14 @@
 //! assert_eq!(p, [7, 21, 30]);
 //! ```
 
+#![warn(missing_docs)]
+
 pub mod apps;
 pub mod cachesim;
 pub mod coordinator;
 pub mod curves;
 pub mod index;
+pub mod linalg;
 pub mod runtime;
 pub mod util;
 

@@ -1,0 +1,41 @@
+//! Cache-oblivious linear algebra on curve-ordered tiled storage
+//! (paper §6–§7).
+//!
+//! Sections 6–7 of the paper argue that recursing along a space-filling
+//! curve makes matrix multiplication, Cholesky decomposition and
+//! Floyd–Warshall **cache-oblivious**: good at every cache scale at
+//! once, with no tuning knob. This subsystem makes that claim concrete
+//! in three layers:
+//!
+//! 1. **Storage** — [`TiledMatrix`]: `tile × tile` blocks laid out
+//!    contiguously in curve order (any [`CurveKind`] via the engine's
+//!    rect mappers; non-power-of-two sides ride the FUR/canonic-rect
+//!    machinery). Conversion to/from the row-major
+//!    [`Matrix`](crate::apps::Matrix) is exact.
+//! 2. **Kernels** — the §7 apps rewritten on top of it:
+//!    [`matmul_tiles`](crate::apps::matmul::matmul_tiles) (output tiles
+//!    in curve order),
+//!    [`cholesky_tiles`](crate::apps::cholesky::cholesky_tiles)
+//!    (left-looking tile tasks) and
+//!    [`floyd_tiles`](crate::apps::floyd::floyd_tiles) (per-pivot
+//!    wavefront), each with a parallel driver
+//!    (`par_*`) scheduled by
+//!    [`Coordinator::par_linalg`](crate::coordinator::Coordinator::par_linalg)
+//!    over a dependency [`TaskGraph`](crate::coordinator::TaskGraph)
+//!    whose priorities are tile curve ranks — and each **bitwise equal**
+//!    to its sequential twin.
+//! 3. **Measurement** — [`sim`]: every variant's memory stream replayed
+//!    through the [`cachesim`](crate::cachesim) hierarchy with
+//!    per-matrix region attribution, emitting deterministic
+//!    L1/L2-misses-per-flop reports (canonic vs tiled vs curve-tiled).
+//!
+//! The CLI front end is `sfc-mine linalg
+//! --app matmul|cholesky|floyd --curve … --tile … --threads …
+//! --simulate-cache`; `benches/bench_linalg.rs` tracks both wallclock
+//! and the simulated miss counts over time.
+
+pub mod sim;
+pub mod tiled;
+
+pub use sim::{simulate, simulate_with, LinalgApp, MissReport, SimVariant};
+pub use tiled::TiledMatrix;

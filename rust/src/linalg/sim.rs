@@ -1,0 +1,623 @@
+//! Cache-simulated miss reports for the linear-algebra kernels — the
+//! measurement side of the paper's §6–§7 claim that curve-recursive
+//! traversals are cache-oblivious.
+//!
+//! Each kernel variant's **memory access stream** is replayed, element
+//! by element, through a [`RegionHierarchy`] (multi-level set-associative
+//! LRU with per-matrix region attribution), producing deterministic,
+//! exactly reproducible miss counts:
+//!
+//! * [`SimVariant::Canonic`] — the textbook nested loops over row-major
+//!   storage (the paper's §1 baseline).
+//! * [`SimVariant::Tiled`] — cache-conscious blocking over row-major
+//!   storage (tuned to one block size).
+//! * [`SimVariant::CurveTiled`] — the [`TiledMatrix`] layout: tiles
+//!   contiguous in curve order, visited in the same order the real
+//!   kernels ([`matmul_tiles`](crate::apps::matmul::matmul_tiles),
+//!   [`cholesky_tiles`](crate::apps::cholesky::cholesky_tiles),
+//!   [`floyd_tiles`](crate::apps::floyd::floyd_tiles)) execute.
+//!
+//! The matmul and Cholesky streams mirror the actual kernel loops one
+//! touch per element access — those kernels are data-independent, so
+//! the replay is exact. The Floyd–Warshall kernels additionally skip a
+//! row when `d[i][k] ≥ INF` (a data-dependent shortcut); the streams
+//! here model the **dense** (skip-free) sweep, applied uniformly to
+//! every variant, so Floyd's absolute counts are a dense upper bound
+//! while the variant-vs-variant comparison stays meaningful.
+
+use super::tiled::TiledMatrix;
+use crate::cachesim::{
+    AddressSpace, CacheStats, HierarchyConfig, LevelConfig, MemSink, RegionHierarchy, RegionStats,
+    Regions,
+};
+use crate::cachesim::setassoc::Policy;
+use crate::curves::CurveKind;
+use crate::Error;
+
+/// Which §7 kernel to simulate.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum LinalgApp {
+    /// Matrix multiplication `A = B · C` (§1 running example).
+    Matmul,
+    /// Cholesky decomposition `A = L·Lᵀ`.
+    Cholesky,
+    /// Floyd–Warshall transitive closure.
+    Floyd,
+}
+
+impl LinalgApp {
+    /// Stable lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            LinalgApp::Matmul => "matmul",
+            LinalgApp::Cholesky => "cholesky",
+            LinalgApp::Floyd => "floyd",
+        }
+    }
+
+    /// Nominal flop count at size `n` (the misses-per-flop denominator).
+    pub fn flops(self, n: usize) -> u64 {
+        let n = n as u64;
+        match self {
+            LinalgApp::Matmul => 2 * n * n * n,
+            LinalgApp::Cholesky => n * n * n / 3,
+            LinalgApp::Floyd => 2 * n * n * n,
+        }
+    }
+}
+
+impl std::str::FromStr for LinalgApp {
+    type Err = Error;
+
+    fn from_str(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "matmul" => Ok(LinalgApp::Matmul),
+            "cholesky" => Ok(LinalgApp::Cholesky),
+            "floyd" => Ok(LinalgApp::Floyd),
+            other => Err(Error::InvalidArgument(format!(
+                "unknown linalg app '{other}' (matmul|cholesky|floyd)"
+            ))),
+        }
+    }
+}
+
+/// Storage/traversal variant of a kernel.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SimVariant {
+    /// Textbook nested loops, row-major storage.
+    Canonic,
+    /// Cache-conscious fixed-size blocking, row-major storage.
+    Tiled,
+    /// Curve-ordered tiled storage and task order (cache-oblivious).
+    CurveTiled,
+}
+
+impl SimVariant {
+    /// All variants, report order.
+    pub const ALL: [SimVariant; 3] = [SimVariant::Canonic, SimVariant::Tiled, SimVariant::CurveTiled];
+
+    /// Stable report label.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimVariant::Canonic => "canonic",
+            SimVariant::Tiled => "tiled",
+            SimVariant::CurveTiled => "curve-tiled",
+        }
+    }
+}
+
+/// The miss accounting of one simulated kernel run.
+#[derive(Clone, Debug)]
+pub struct MissReport {
+    /// Kernel name (`matmul` / `cholesky` / `floyd`).
+    pub app: &'static str,
+    /// Variant label (`canonic` / `tiled` / `curve-tiled`).
+    pub variant: &'static str,
+    /// Tile curve for the curve-tiled variant.
+    pub curve: Option<&'static str>,
+    /// Problem size (square `n × n`).
+    pub n: usize,
+    /// Tile / block size (0 for the canonic variant).
+    pub tile: usize,
+    /// Nominal flop count.
+    pub flops: u64,
+    /// Per-level aggregate stats, fastest level first.
+    pub levels: Vec<CacheStats>,
+    /// Per-region `(label, stats)` attribution (the matrices by name).
+    pub regions: Vec<(String, RegionStats)>,
+}
+
+impl MissReport {
+    /// Sum of L1 and L2 misses (the acceptance metric: the §6 recursion
+    /// argument predicts wins at *every* level simultaneously).
+    pub fn l12_misses(&self) -> u64 {
+        self.levels.iter().take(2).map(|l| l.misses).sum()
+    }
+
+    /// Misses of cache level `k` per thousand flops.
+    pub fn misses_per_kflop(&self, level: usize) -> f64 {
+        match self.levels.get(level) {
+            Some(l) => l.misses as f64 * 1e3 / self.flops.max(1) as f64,
+            None => 0.0,
+        }
+    }
+}
+
+/// The hierarchy the linalg reports default to: 32 KiB/8-way L1 plus
+/// 256 KiB/8-way L2, 64-byte lines, no TLB — two simultaneously active
+/// levels (the §1 setting) while keeping full-stream simulation of
+/// `n = 512` kernels (hundreds of millions of touches) fast.
+pub fn linalg_config() -> HierarchyConfig {
+    HierarchyConfig {
+        levels: vec![
+            LevelConfig { sets: 64, ways: 8, line: 64, policy: Policy::Lru },
+            LevelConfig { sets: 512, ways: 8, line: 64, policy: Policy::Lru },
+        ],
+        tlb_entries: 0,
+        page_size: 4096,
+    }
+}
+
+/// Simulate one `app` variant at size `n` under [`linalg_config`].
+pub fn simulate(
+    app: LinalgApp,
+    variant: SimVariant,
+    n: usize,
+    tile: usize,
+    kind: CurveKind,
+) -> MissReport {
+    simulate_with(app, variant, n, tile, kind, &linalg_config())
+}
+
+/// Simulate one `app` variant at size `n` against an explicit hierarchy
+/// configuration.
+pub fn simulate_with(
+    app: LinalgApp,
+    variant: SimVariant,
+    n: usize,
+    tile: usize,
+    kind: CurveKind,
+    cfg: &HierarchyConfig,
+) -> MissReport {
+    assert!(n > 0, "empty problems have no access stream");
+    assert!(tile > 0, "tile size must be ≥ 1");
+    let mut space = AddressSpace::new();
+    let mut regions = Regions::new();
+    let elems = (n * n) as u64;
+    let sink = match app {
+        LinalgApp::Matmul => {
+            let (_, a) = regions.alloc_labeled(&mut space, "A", elems, 4);
+            let (_, b) = regions.alloc_labeled(&mut space, "B", elems, 4);
+            let (_, c) = regions.alloc_labeled(&mut space, "C", elems, 4);
+            let mut sink = RegionHierarchy::new(cfg, regions);
+            match variant {
+                SimVariant::Canonic => trace_matmul_canonic(n, a, b, c, &mut sink),
+                SimVariant::Tiled => trace_matmul_tiled(n, tile, a, b, c, &mut sink),
+                SimVariant::CurveTiled => trace_matmul_curve(n, tile, kind, a, b, c, &mut sink),
+            }
+            sink
+        }
+        LinalgApp::Cholesky => {
+            let (_, a) = regions.alloc_labeled(&mut space, "A", elems, 4);
+            let mut sink = RegionHierarchy::new(cfg, regions);
+            match variant {
+                SimVariant::Canonic => trace_cholesky_canonic(n, a, &mut sink),
+                SimVariant::Tiled => trace_cholesky_tiled(n, tile, a, &mut sink),
+                SimVariant::CurveTiled => trace_cholesky_curve(n, tile, kind, a, &mut sink),
+            }
+            sink
+        }
+        LinalgApp::Floyd => {
+            let (_, d) = regions.alloc_labeled(&mut space, "D", elems, 4);
+            let (_, s) = regions.alloc_labeled(&mut space, "snapshot", 2 * n as u64, 4);
+            let mut sink = RegionHierarchy::new(cfg, regions);
+            match variant {
+                SimVariant::Canonic => trace_floyd_canonic(n, d, &mut sink),
+                SimVariant::Tiled => trace_floyd_tiled(n, tile, d, &mut sink),
+                SimVariant::CurveTiled => trace_floyd_curve(n, tile, kind, d, s, &mut sink),
+            }
+            sink
+        }
+    };
+    let levels = sink.hierarchy.level_stats();
+    let regions = sink
+        .region_stats()
+        .map(|(l, s)| (l.to_string(), s.clone()))
+        .collect();
+    MissReport {
+        app: app.name(),
+        variant: variant.name(),
+        curve: (variant == SimVariant::CurveTiled).then(|| kind.name()),
+        n,
+        tile: if variant == SimVariant::Canonic { 0 } else { tile },
+        flops: app.flops(n),
+        levels,
+        regions,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Address helpers
+// ---------------------------------------------------------------------------
+
+/// Row-major element address.
+#[inline]
+fn rm(base: u64, n: usize, i: usize, j: usize) -> u64 {
+    base + ((i * n + j) * 4) as u64
+}
+
+/// Tiled-layout addressing: element `(r, c)` of tile `(bi, bj)` at the
+/// slot the curve assigns. Borrows a shared placement — all simulated
+/// matrices of one run are square and same-tiled, so a single layout
+/// (whose payload stays untouched) serves every base address.
+struct TiledAddr<'a> {
+    base: u64,
+    layout: &'a TiledMatrix,
+}
+
+impl TiledAddr<'_> {
+    #[inline]
+    fn addr(&self, bi: usize, bj: usize, r: usize, c: usize) -> u64 {
+        let t = self.layout.tile_size();
+        self.base + ((self.layout.slot(bi, bj) * t * t + r * t + c) * 4) as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matmul streams (mirror matmul_naive / matmul_tiled / matmul_tiles)
+// ---------------------------------------------------------------------------
+
+fn trace_matmul_canonic(n: usize, a: u64, b: u64, c: u64, sink: &mut impl MemSink) {
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                sink.touch(rm(b, n, i, k), 4);
+                sink.touch(rm(c, n, k, j), 4);
+            }
+            sink.touch(rm(a, n, i, j), 4);
+        }
+    }
+}
+
+fn trace_matmul_tiled(n: usize, t: usize, a: u64, b: u64, c: u64, sink: &mut impl MemSink) {
+    for i0 in (0..n).step_by(t) {
+        for k0 in (0..n).step_by(t) {
+            for j0 in (0..n).step_by(t) {
+                let (i1, k1, j1) = ((i0 + t).min(n), (k0 + t).min(n), (j0 + t).min(n));
+                for i in i0..i1 {
+                    for k in k0..k1 {
+                        sink.touch(rm(b, n, i, k), 4);
+                        for j in j0..j1 {
+                            sink.touch(rm(c, n, k, j), 4);
+                            sink.touch(rm(a, n, i, j), 4);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn trace_matmul_curve(
+    n: usize,
+    t: usize,
+    kind: CurveKind,
+    a: u64,
+    b: u64,
+    c: u64,
+    sink: &mut impl MemSink,
+) {
+    let layout = TiledMatrix::zeros(n, n, t, kind);
+    let layout = &layout;
+    let at = TiledAddr { base: a, layout };
+    let bt = TiledAddr { base: b, layout };
+    let ct = TiledAddr { base: c, layout };
+    for slot in 0..layout.num_tiles() {
+        let (bi, bj) = layout.tile_coords(slot);
+        let (ri, rj) = (layout.tile_rows_at(bi), layout.tile_cols_at(bj));
+        for bk in 0..layout.tile_cols() {
+            let rk = layout.tile_cols_at(bk);
+            for r in 0..ri {
+                for s in 0..rk {
+                    sink.touch(bt.addr(bi, bk, r, s), 4);
+                    for cc in 0..rj {
+                        sink.touch(ct.addr(bk, bj, s, cc), 4);
+                        sink.touch(at.addr(bi, bj, r, cc), 4);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cholesky streams (mirror cholesky_unblocked / cholesky_blocked /
+// cholesky_tiles)
+// ---------------------------------------------------------------------------
+
+fn trace_cholesky_canonic(n: usize, a: u64, sink: &mut impl MemSink) {
+    for j in 0..n {
+        for k in 0..j {
+            sink.touch(rm(a, n, j, k), 4);
+        }
+        sink.touch(rm(a, n, j, j), 4);
+        for i in j + 1..n {
+            for k in 0..j {
+                sink.touch(rm(a, n, i, k), 4);
+                sink.touch(rm(a, n, j, k), 4);
+            }
+            sink.touch(rm(a, n, i, j), 4);
+        }
+    }
+}
+
+fn trace_cholesky_tiled(n: usize, t: usize, a: u64, sink: &mut impl MemSink) {
+    let nb = n.div_ceil(t);
+    let ext = |b: usize| (b * t, (b * t + t).min(n));
+    for kb in 0..nb {
+        let (k0, k1) = ext(kb);
+        // factor_diag
+        for j in k0..k1 {
+            for k in k0..j {
+                sink.touch(rm(a, n, j, k), 4);
+            }
+            sink.touch(rm(a, n, j, j), 4);
+            for i in j + 1..k1 {
+                for k in k0..j {
+                    sink.touch(rm(a, n, i, k), 4);
+                    sink.touch(rm(a, n, j, k), 4);
+                }
+                sink.touch(rm(a, n, i, j), 4);
+            }
+        }
+        // panel_solve rows below
+        for ib in kb + 1..nb {
+            let (i0, i1) = ext(ib);
+            for i in i0..i1 {
+                for j in k0..k1 {
+                    for k in k0..j {
+                        sink.touch(rm(a, n, i, k), 4);
+                        sink.touch(rm(a, n, j, k), 4);
+                    }
+                    sink.touch(rm(a, n, j, j), 4);
+                    sink.touch(rm(a, n, i, j), 4);
+                }
+            }
+        }
+        // trailing updates, canonic block order
+        for ib in kb + 1..nb {
+            let (i0, i1) = ext(ib);
+            for jb in kb + 1..=ib {
+                let (j0, j1) = ext(jb);
+                for i in i0..i1 {
+                    for j in j0..j1.min(i + 1) {
+                        for k in k0..k1 {
+                            sink.touch(rm(a, n, i, k), 4);
+                            sink.touch(rm(a, n, j, k), 4);
+                        }
+                        sink.touch(rm(a, n, i, j), 4);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn trace_cholesky_curve(n: usize, t: usize, kind: CurveKind, a: u64, sink: &mut impl MemSink) {
+    let layout = TiledMatrix::zeros(n, n, t, kind);
+    let layout = &layout;
+    let at = TiledAddr { base: a, layout };
+    let nb = layout.tile_rows();
+    for j in 0..nb {
+        for i in j..nb {
+            let (ri, rj) = (layout.tile_rows_at(i), layout.tile_cols_at(j));
+            for k in 0..j {
+                let rk = layout.tile_cols_at(k);
+                for r in 0..ri {
+                    for c in 0..rj {
+                        for s in 0..rk {
+                            sink.touch(at.addr(i, k, r, s), 4);
+                            sink.touch(at.addr(j, k, c, s), 4);
+                        }
+                        sink.touch(at.addr(i, j, r, c), 4);
+                    }
+                }
+            }
+            if i == j {
+                // factor_tile
+                for jj in 0..ri {
+                    for k in 0..jj {
+                        sink.touch(at.addr(i, j, jj, k), 4);
+                    }
+                    sink.touch(at.addr(i, j, jj, jj), 4);
+                    for ii in jj + 1..ri {
+                        for k in 0..jj {
+                            sink.touch(at.addr(i, j, ii, k), 4);
+                            sink.touch(at.addr(i, j, jj, k), 4);
+                        }
+                        sink.touch(at.addr(i, j, ii, jj), 4);
+                    }
+                }
+            } else {
+                // trsm_tile against the diagonal tile
+                for r in 0..ri {
+                    for c in 0..rj {
+                        for s in 0..c {
+                            sink.touch(at.addr(i, j, r, s), 4);
+                            sink.touch(at.addr(j, j, c, s), 4);
+                        }
+                        sink.touch(at.addr(j, j, c, c), 4);
+                        sink.touch(at.addr(i, j, r, c), 4);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Floyd streams (mirror floyd_canonic / floyd_tiled / floyd_tiles, minus
+// the data-dependent `dik >= INF` row skip: the dense sweep is modeled,
+// uniformly for every variant — see the module docs)
+// ---------------------------------------------------------------------------
+
+fn trace_floyd_canonic(n: usize, d: u64, sink: &mut impl MemSink) {
+    for k in 0..n {
+        for i in 0..n {
+            sink.touch(rm(d, n, i, k), 4);
+            for j in 0..n {
+                sink.touch(rm(d, n, k, j), 4);
+                sink.touch(rm(d, n, i, j), 4);
+            }
+        }
+    }
+}
+
+fn trace_floyd_tiled(n: usize, t: usize, d: u64, sink: &mut impl MemSink) {
+    let nb = n.div_ceil(t);
+    for k in 0..n {
+        for bi in 0..nb {
+            for bj in 0..nb {
+                let (i0, i1) = (bi * t, (bi * t + t).min(n));
+                let (j0, j1) = (bj * t, (bj * t + t).min(n));
+                for i in i0..i1 {
+                    sink.touch(rm(d, n, i, k), 4);
+                    for j in j0..j1 {
+                        sink.touch(rm(d, n, k, j), 4);
+                        sink.touch(rm(d, n, i, j), 4);
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn trace_floyd_curve(
+    n: usize,
+    t: usize,
+    kind: CurveKind,
+    d: u64,
+    snap: u64,
+    sink: &mut impl MemSink,
+) {
+    let layout = TiledMatrix::zeros(n, n, t, kind);
+    let layout = &layout;
+    let dt = TiledAddr { base: d, layout };
+    let rowk = snap; // n f32s
+    let colk = snap + 4 * n as u64; // n f32s
+    for k in 0..n {
+        let (kb, ko) = (k / t, k % t);
+        // snapshot row k / col k
+        for bj in 0..layout.tile_cols() {
+            for c in 0..layout.tile_cols_at(bj) {
+                sink.touch(dt.addr(kb, bj, ko, c), 4);
+                sink.touch(rowk + ((bj * t + c) * 4) as u64, 4);
+            }
+        }
+        for bi in 0..layout.tile_rows() {
+            for r in 0..layout.tile_rows_at(bi) {
+                sink.touch(dt.addr(bi, kb, r, ko), 4);
+                sink.touch(colk + ((bi * t + r) * 4) as u64, 4);
+            }
+        }
+        // wavefront of tile tasks in curve order
+        for slot in 0..layout.num_tiles() {
+            let (bi, bj) = layout.tile_coords(slot);
+            for r in 0..layout.tile_rows_at(bi) {
+                sink.touch(colk + ((bi * t + r) * 4) as u64, 4);
+                for c in 0..layout.tile_cols_at(bj) {
+                    sink.touch(rowk + ((bj * t + c) * 4) as u64, 4);
+                    sink.touch(dt.addr(bi, bj, r, c), 4);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::CountingSink;
+
+    #[test]
+    fn app_and_variant_labels() {
+        assert_eq!("matmul".parse::<LinalgApp>().unwrap(), LinalgApp::Matmul);
+        assert!("qr".parse::<LinalgApp>().is_err());
+        assert_eq!(LinalgApp::Floyd.name(), "floyd");
+        assert_eq!(SimVariant::CurveTiled.name(), "curve-tiled");
+        assert_eq!(LinalgApp::Matmul.flops(8), 1024);
+    }
+
+    #[test]
+    fn matmul_streams_have_expected_touch_counts() {
+        // canonic: n³ touches of B and C each, n² of A.
+        let n = 12;
+        let mut count = CountingSink::default();
+        trace_matmul_canonic(n, 0, 1 << 20, 2 << 20, &mut count);
+        assert_eq!(count.count as usize, 2 * n * n * n + n * n);
+        // curve-tiled: one B touch per (i,k) pair per j-tile (n³/t) plus
+        // C and A touches per inner element (2n³).
+        let t = 4;
+        let mut curve = CountingSink::default();
+        trace_matmul_curve(n, t, CurveKind::Hilbert, 0, 1 << 20, 2 << 20, &mut curve);
+        assert_eq!(curve.count as usize, n * n * n / t + 2 * n * n * n);
+    }
+
+    #[test]
+    fn curve_tiled_matmul_beats_canonic_in_tiny_caches() {
+        // The acceptance inequality at test scale: n=64 working sets
+        // (16 KiB per matrix) against the tiny L1-512B/L2-4KiB config.
+        let cfg = HierarchyConfig::tiny();
+        let canonic =
+            simulate_with(LinalgApp::Matmul, SimVariant::Canonic, 64, 8, CurveKind::Hilbert, &cfg);
+        let curve = simulate_with(
+            LinalgApp::Matmul,
+            SimVariant::CurveTiled,
+            64,
+            8,
+            CurveKind::Hilbert,
+            &cfg,
+        );
+        assert!(
+            curve.l12_misses() < canonic.l12_misses(),
+            "curve-tiled {} !< canonic {}",
+            curve.l12_misses(),
+            canonic.l12_misses()
+        );
+        assert_eq!(curve.curve, Some("hilbert"));
+        assert_eq!(canonic.curve, None);
+        assert!(canonic.misses_per_kflop(0) > curve.misses_per_kflop(0));
+    }
+
+    #[test]
+    fn reports_attribute_regions() {
+        let r = simulate_with(
+            LinalgApp::Matmul,
+            SimVariant::Canonic,
+            16,
+            4,
+            CurveKind::Hilbert,
+            &HierarchyConfig::tiny(),
+        );
+        let labels: Vec<&str> = r.regions.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, ["A", "B", "C"]);
+        let total: u64 = r.regions.iter().map(|(_, s)| s.accesses).sum();
+        assert_eq!(total, r.levels[0].accesses, "every access attributed");
+        // The b-column walk makes C the miss hot spot in canonic order.
+        let c_misses = r.regions[2].1.level_misses[0];
+        let b_misses = r.regions[1].1.level_misses[0];
+        assert!(c_misses > b_misses, "C {c_misses} !> B {b_misses}");
+    }
+
+    #[test]
+    fn cholesky_and_floyd_streams_run() {
+        let cfg = HierarchyConfig::tiny();
+        for app in [LinalgApp::Cholesky, LinalgApp::Floyd] {
+            for variant in SimVariant::ALL {
+                let r = simulate_with(app, variant, 24, 8, CurveKind::Hilbert, &cfg);
+                assert!(r.levels[0].accesses > 0, "{} {}", app.name(), variant.name());
+                assert!(r.l12_misses() > 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,399 @@
+//! Curve-ordered tiled matrix storage (paper §6–§7).
+//!
+//! A [`TiledMatrix`] splits an `rows × cols` matrix into `tile × tile`
+//! blocks and stores the blocks **contiguously in curve order**: block
+//! `(bi, bj)` lives at slot `C(bi, bj)` of the flat buffer, where `C` is
+//! any engine rect mapper ([`CurveKind::rect_mapper`] — FUR-Hilbert on
+//! arbitrary shapes, the Figure-5 square on powers of two, closed-form
+//! canonic as the baseline). Two effects compound:
+//!
+//! 1. **Within a tile**, all `tile²` elements are one contiguous span —
+//!    a working set the innermost kernel never leaves.
+//! 2. **Across tiles**, blocks that are close on the curve are close in
+//!    memory, so a kernel that *traverses* tile tasks in curve order
+//!    (see [`crate::apps::matmul::matmul_tiles`]) touches a physically
+//!    clustered neighborhood at every cache level simultaneously — the
+//!    cache-oblivious layout the paper's §6 recursion argument predicts.
+//!
+//! Edge tiles (non-multiple sizes) are zero-padded to full `tile × tile`
+//! spans; kernels iterate the *actual* extents
+//! ([`TiledMatrix::tile_rows_at`] / [`TiledMatrix::tile_cols_at`]).
+
+use crate::apps::Matrix;
+use crate::curves::CurveKind;
+
+/// A dense `f32` matrix stored as curve-ordered `tile × tile` blocks.
+///
+/// See the [module docs](self) for the layout rationale. Conversion to
+/// and from the row-major [`Matrix`] is exact ([`TiledMatrix::from_matrix`]
+/// / [`TiledMatrix::to_matrix`]).
+#[derive(Clone, Debug)]
+pub struct TiledMatrix {
+    rows: usize,
+    cols: usize,
+    tile: usize,
+    tile_rows: usize,
+    tile_cols: usize,
+    kind: CurveKind,
+    /// Tile-grid row-major `(bi · tile_cols + bj)` → curve slot.
+    slots: Vec<u32>,
+    /// Curve slot → tile-grid coordinates.
+    tiles: Vec<(u32, u32)>,
+    /// `tile_rows · tile_cols · tile²` entries; slot `s` owns
+    /// `data[s · tile² .. (s+1) · tile²]`, row-major within the tile.
+    pub data: Vec<f32>,
+}
+
+impl TiledMatrix {
+    /// Zero matrix in curve-tiled layout.
+    ///
+    /// # Panics
+    /// Panics on an empty shape, a zero tile size, or a tile grid larger
+    /// than `u32` slots.
+    pub fn zeros(rows: usize, cols: usize, tile: usize, kind: CurveKind) -> Self {
+        assert!(rows > 0 && cols > 0, "empty matrices have no tiling");
+        assert!(tile > 0, "tile size must be ≥ 1");
+        let tile_rows = rows.div_ceil(tile);
+        let tile_cols = cols.div_ceil(tile);
+        assert!(
+            tile_rows as u64 * tile_cols as u64 <= u32::MAX as u64,
+            "tile grid exceeds u32 slots"
+        );
+        let mapper = kind.rect_mapper(tile_rows as u32, tile_cols as u32);
+        let span = mapper.order_span().expect("rect mappers are finite");
+        let mut slots = vec![0u32; tile_rows * tile_cols];
+        let mut tiles = Vec::with_capacity(span as usize);
+        for (slot, (bi, bj)) in mapper.segments(0..span).enumerate() {
+            slots[bi as usize * tile_cols + bj as usize] = slot as u32;
+            tiles.push((bi, bj));
+        }
+        debug_assert_eq!(tiles.len(), tile_rows * tile_cols);
+        TiledMatrix {
+            rows,
+            cols,
+            tile,
+            tile_rows,
+            tile_cols,
+            kind,
+            slots,
+            tiles,
+            data: vec![0.0; tile_rows * tile_cols * tile * tile],
+        }
+    }
+
+    /// Convert a row-major [`Matrix`] into curve-tiled layout (exact;
+    /// edge tiles zero-padded).
+    pub fn from_matrix(m: &Matrix, tile: usize, kind: CurveKind) -> Self {
+        let mut out = Self::zeros(m.rows, m.cols, tile, kind);
+        for bi in 0..out.tile_rows {
+            for bj in 0..out.tile_cols {
+                let slot = out.slot(bi, bj);
+                let (ri, rj) = (out.tile_rows_at(bi), out.tile_cols_at(bj));
+                let base = slot * tile * tile;
+                for r in 0..ri {
+                    let src = (bi * tile + r) * m.cols + bj * tile;
+                    out.data[base + r * tile..base + r * tile + rj]
+                        .copy_from_slice(&m.data[src..src + rj]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Convert back to a row-major [`Matrix`] (exact).
+    pub fn to_matrix(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let tile = self.tile;
+        for bi in 0..self.tile_rows {
+            for bj in 0..self.tile_cols {
+                let base = self.slot(bi, bj) * tile * tile;
+                let (ri, rj) = (self.tile_rows_at(bi), self.tile_cols_at(bj));
+                for r in 0..ri {
+                    let dst = (bi * tile + r) * self.cols + bj * tile;
+                    m.data[dst..dst + rj]
+                        .copy_from_slice(&self.data[base + r * tile..base + r * tile + rj]);
+                }
+            }
+        }
+        m
+    }
+
+    /// Matrix rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Matrix columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Tile side length.
+    pub fn tile_size(&self) -> usize {
+        self.tile
+    }
+
+    /// Elements per tile span (`tile²`, including padding).
+    pub fn tile_len(&self) -> usize {
+        self.tile * self.tile
+    }
+
+    /// Number of tile rows (`⌈rows / tile⌉`).
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows
+    }
+
+    /// Number of tile columns (`⌈cols / tile⌉`).
+    pub fn tile_cols(&self) -> usize {
+        self.tile_cols
+    }
+
+    /// Total number of tiles.
+    pub fn num_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// The curve ordering the tiles are laid out in.
+    pub fn kind(&self) -> CurveKind {
+        self.kind
+    }
+
+    /// Actual row count of tile row `bi` (< `tile` on the bottom edge).
+    #[inline]
+    pub fn tile_rows_at(&self, bi: usize) -> usize {
+        self.tile.min(self.rows - bi * self.tile)
+    }
+
+    /// Actual column count of tile column `bj` (< `tile` on the right
+    /// edge).
+    #[inline]
+    pub fn tile_cols_at(&self, bj: usize) -> usize {
+        self.tile.min(self.cols - bj * self.tile)
+    }
+
+    /// Curve slot of tile `(bi, bj)` — its rank in the storage order.
+    #[inline]
+    pub fn slot(&self, bi: usize, bj: usize) -> usize {
+        self.slots[bi * self.tile_cols + bj] as usize
+    }
+
+    /// Tile-grid coordinates of a curve slot (inverse of
+    /// [`TiledMatrix::slot`]).
+    #[inline]
+    pub fn tile_coords(&self, slot: usize) -> (usize, usize) {
+        let (bi, bj) = self.tiles[slot];
+        (bi as usize, bj as usize)
+    }
+
+    /// The `tile²` span of one slot.
+    #[inline]
+    pub fn tile(&self, slot: usize) -> &[f32] {
+        let len = self.tile_len();
+        &self.data[slot * len..(slot + 1) * len]
+    }
+
+    /// Mutable span of one slot.
+    #[inline]
+    pub fn tile_mut(&mut self, slot: usize) -> &mut [f32] {
+        let len = self.tile_len();
+        &mut self.data[slot * len..(slot + 1) * len]
+    }
+
+    /// Element accessor (slow path — tests and spot checks; kernels work
+    /// on whole tile spans).
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        let (bi, bj) = (i / self.tile, j / self.tile);
+        self.tile(self.slot(bi, bj))[(i % self.tile) * self.tile + j % self.tile]
+    }
+
+    /// Copy of the tile-placement metadata without the payload — what a
+    /// parallel kernel needs alongside a [`TileCells`] view.
+    pub(crate) fn meta(&self) -> TileMeta {
+        TileMeta {
+            rows: self.rows,
+            cols: self.cols,
+            tile: self.tile,
+            tile_cols: self.tile_cols,
+            slots: self.slots.clone(),
+        }
+    }
+}
+
+/// Placement metadata of a [`TiledMatrix`] (shape, tile grid, slot
+/// table) detached from the payload, so task bodies can resolve slots
+/// and extents while a [`TileCells`] view owns the data borrow.
+#[derive(Clone, Debug)]
+pub(crate) struct TileMeta {
+    pub rows: usize,
+    pub cols: usize,
+    pub tile: usize,
+    tile_cols: usize,
+    slots: Vec<u32>,
+}
+
+impl TileMeta {
+    /// Curve slot of tile `(bi, bj)` (see [`TiledMatrix::slot`]).
+    #[inline]
+    pub fn slot(&self, bi: usize, bj: usize) -> usize {
+        self.slots[bi * self.tile_cols + bj] as usize
+    }
+
+    /// Actual row count of tile row `bi`.
+    #[inline]
+    pub fn tile_rows_at(&self, bi: usize) -> usize {
+        self.tile.min(self.rows - bi * self.tile)
+    }
+
+    /// Actual column count of tile column `bj`.
+    #[inline]
+    pub fn tile_cols_at(&self, bj: usize) -> usize {
+        self.tile.min(self.cols - bj * self.tile)
+    }
+}
+
+/// Shared mutable view of a [`TiledMatrix`]'s payload for
+/// dependency-scheduled tile tasks
+/// ([`Coordinator::par_linalg`](crate::coordinator::Coordinator::par_linalg)).
+///
+/// The scheduler's task graph — not the borrow checker — serializes
+/// conflicting tile accesses, so the accessors are `unsafe`:
+///
+/// # Safety contract
+/// While a task holds `tile_mut(s)`, no concurrently-runnable task may
+/// call `tile(s)` or `tile_mut(s)` for the same slot. The linalg kernels
+/// uphold this structurally: a task writes only its own tile and reads
+/// only tiles whose final value was produced by a predecessor in the
+/// [`TaskGraph`](crate::coordinator::TaskGraph).
+pub(crate) struct TileCells<'a> {
+    ptr: *mut f32,
+    len: usize,
+    tile_len: usize,
+    _data: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: the raw pointer is only dereferenced through the unsafe
+// accessors, whose disjointness contract (above) makes the shared view
+// data-race free.
+unsafe impl Send for TileCells<'_> {}
+unsafe impl Sync for TileCells<'_> {}
+
+impl<'a> TileCells<'a> {
+    /// View over a tiled payload; the borrow of `data` lives as long as
+    /// the view, so the owning [`TiledMatrix`] stays frozen meanwhile.
+    pub(crate) fn new(data: &'a mut [f32], tile_len: usize) -> Self {
+        debug_assert_eq!(data.len() % tile_len, 0);
+        TileCells {
+            ptr: data.as_mut_ptr(),
+            len: data.len(),
+            tile_len,
+            _data: std::marker::PhantomData,
+        }
+    }
+
+    /// Exclusive span of one slot.
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent access to this slot (see the
+    /// type-level contract).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub(crate) unsafe fn tile_mut(&self, slot: usize) -> &mut [f32] {
+        debug_assert!((slot + 1) * self.tile_len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(slot * self.tile_len), self.tile_len)
+    }
+
+    /// Shared span of one slot.
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent *write* to this slot (see the
+    /// type-level contract).
+    #[inline]
+    pub(crate) unsafe fn tile(&self, slot: usize) -> &[f32] {
+        debug_assert!((slot + 1) * self.tile_len <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(slot * self.tile_len), self.tile_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_is_exact() {
+        for (rows, cols, tile) in [(7, 13, 4), (16, 16, 5), (1, 9, 3), (33, 20, 8), (5, 5, 64)] {
+            let m = Matrix::random(rows, cols, 3, -1.0, 1.0);
+            for kind in CurveKind::ALL {
+                let tm = TiledMatrix::from_matrix(&m, tile, kind);
+                assert_eq!(tm.to_matrix(), m, "{} {rows}x{cols} t={tile}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn slots_are_a_curve_permutation() {
+        let tm = TiledMatrix::zeros(40, 24, 8, CurveKind::Hilbert);
+        assert_eq!(tm.tile_rows(), 5);
+        assert_eq!(tm.tile_cols(), 3);
+        assert_eq!(tm.num_tiles(), 15);
+        let mut seen = vec![false; 15];
+        for bi in 0..5 {
+            for bj in 0..3 {
+                let s = tm.slot(bi, bj);
+                assert!(!seen[s], "slot {s} reused");
+                seen[s] = true;
+                assert_eq!(tm.tile_coords(s), (bi, bj));
+            }
+        }
+        // Slot order IS the mapper's curve order.
+        let mapper = CurveKind::Hilbert.rect_mapper(5, 3);
+        for (slot, (bi, bj)) in mapper.segments(0..15).enumerate() {
+            assert_eq!(tm.slot(bi as usize, bj as usize), slot);
+        }
+    }
+
+    #[test]
+    fn edge_tiles_are_zero_padded() {
+        let m = Matrix::from_fn(5, 5, |_, _| 1.0);
+        let tm = TiledMatrix::from_matrix(&m, 4, CurveKind::Hilbert);
+        assert_eq!(tm.tile_rows_at(1), 1);
+        assert_eq!(tm.tile_cols_at(1), 1);
+        let corner = tm.tile(tm.slot(1, 1));
+        assert_eq!(corner.iter().filter(|&&x| x != 0.0).count(), 1);
+        assert_eq!(corner[0], 1.0);
+    }
+
+    #[test]
+    fn at_matches_row_major() {
+        let m = Matrix::from_fn(9, 7, |i, j| (i * 100 + j) as f32);
+        let tm = TiledMatrix::from_matrix(&m, 4, CurveKind::ZOrder);
+        for i in 0..9 {
+            for j in 0..7 {
+                assert_eq!(tm.at(i, j), m.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn tile_cells_views_are_disjoint() {
+        let mut tm = TiledMatrix::zeros(8, 8, 4, CurveKind::Hilbert);
+        let len = tm.tile_len();
+        let cells = TileCells::new(&mut tm.data, len);
+        // SAFETY: slots 0 and 1 are distinct, single-threaded here.
+        unsafe {
+            cells.tile_mut(0)[0] = 1.0;
+            cells.tile_mut(1)[0] = 2.0;
+            assert_eq!(cells.tile(0)[0], 1.0);
+            assert_eq!(cells.tile(1)[0], 2.0);
+        }
+        assert_eq!(tm.data[0], 1.0);
+        assert_eq!(tm.data[len], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile size")]
+    fn zero_tile_rejected() {
+        TiledMatrix::zeros(4, 4, 0, CurveKind::Hilbert);
+    }
+}

@@ -1,0 +1,189 @@
+//! Property suite for the cache-oblivious linalg subsystem (ISSUE 4):
+//! `TiledMatrix` round-trips exactly (any shape, any curve), the
+//! curve-tiled matmul/Cholesky/Floyd kernels agree with the sequential
+//! row-major baselines for every `CurveKind`, the parallel drivers are
+//! bitwise equal to their sequential twins, and the simulated miss
+//! counts favor curve-tiled storage (the acceptance inequality at test
+//! scale; `benches/bench_linalg.rs` asserts it at `n = 512`).
+
+use sfc_mine::apps::cholesky::{
+    cholesky_tiles, cholesky_unblocked, par_cholesky_tiles, random_spd, residual,
+};
+use sfc_mine::apps::floyd::{floyd_canonic, floyd_tiles, par_floyd_tiles, random_graph};
+use sfc_mine::apps::matmul::{matmul_naive, matmul_tiles, par_matmul_tiles};
+use sfc_mine::apps::Matrix;
+use sfc_mine::cachesim::HierarchyConfig;
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::linalg::{simulate_with, LinalgApp, SimVariant, TiledMatrix};
+
+#[test]
+fn tiled_roundtrip_every_shape_and_curve() {
+    for (rows, cols, tile) in [
+        (7usize, 13usize, 4usize),
+        (16, 16, 5),
+        (1, 9, 3),
+        (33, 20, 8),
+        (40, 40, 40),
+        (5, 5, 64),
+        (31, 2, 3),
+    ] {
+        let m = Matrix::random(rows, cols, 3, -1.0, 1.0);
+        for kind in CurveKind::ALL {
+            let tm = TiledMatrix::from_matrix(&m, tile, kind);
+            assert_eq!(
+                tm.to_matrix(),
+                m,
+                "{} roundtrip {rows}x{cols} t={tile}",
+                kind.name()
+            );
+            // Element accessor agrees with the row-major original.
+            for i in [0, rows / 2, rows - 1] {
+                for j in [0, cols / 2, cols - 1] {
+                    assert_eq!(tm.at(i, j), m.at(i, j));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn curve_tiled_matmul_matches_naive_for_every_kind() {
+    for (n, k, m, t) in [(19usize, 11usize, 23usize, 4usize), (32, 32, 32, 8), (9, 5, 3, 16)] {
+        let b = Matrix::random(n, k, 4, -1.0, 1.0);
+        let c = Matrix::random(k, m, 5, -1.0, 1.0);
+        let reference = matmul_naive(&b, &c);
+        for kind in CurveKind::ALL {
+            let bt = TiledMatrix::from_matrix(&b, t, kind);
+            let ct = TiledMatrix::from_matrix(&c, t, kind);
+            let a = matmul_tiles(&bt, &ct).to_matrix();
+            assert!(
+                a.max_abs_diff(&reference) < 1e-3,
+                "{} n={n} k={k} m={m} t={t}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn curve_tiled_cholesky_matches_unblocked_for_every_kind() {
+    for (n, t) in [(30usize, 8usize), (16, 4), (13, 5)] {
+        let a = random_spd(n, 11);
+        let mut reference = a.clone();
+        cholesky_unblocked(&mut reference).unwrap();
+        for kind in CurveKind::ALL {
+            let mut tiled = TiledMatrix::from_matrix(&a, t, kind);
+            cholesky_tiles(&mut tiled).unwrap();
+            let l = tiled.to_matrix();
+            assert!(
+                l.max_abs_diff(&reference) < 1e-3,
+                "{} n={n} t={t}",
+                kind.name()
+            );
+            assert!(residual(&l, &a) < 1e-3 * n as f32, "{} residual", kind.name());
+        }
+    }
+}
+
+#[test]
+fn curve_tiled_floyd_is_bitwise_canonic_for_every_kind() {
+    for (n, t) in [(32usize, 8usize), (17, 4), (20, 7)] {
+        let g = random_graph(n, 0.25, 5);
+        let mut reference = g.clone();
+        floyd_canonic(&mut reference);
+        for kind in CurveKind::ALL {
+            let mut tiled = TiledMatrix::from_matrix(&g, t, kind);
+            floyd_tiles(&mut tiled);
+            assert_eq!(
+                tiled.to_matrix().data,
+                reference.data,
+                "{} n={n} t={t}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_kernels_are_bitwise_sequential() {
+    let threads = [1usize, 2, 5, 8];
+
+    // Matmul: non-square, non-multiple-of-tile.
+    let b = Matrix::random(41, 29, 6, -1.0, 1.0);
+    let c = Matrix::random(29, 35, 7, -1.0, 1.0);
+    let bt = TiledMatrix::from_matrix(&b, 8, CurveKind::Hilbert);
+    let ct = TiledMatrix::from_matrix(&c, 8, CurveKind::Hilbert);
+    let mm_seq = matmul_tiles(&bt, &ct);
+    for &w in &threads {
+        let coord = Coordinator::new(w);
+        assert_eq!(
+            mm_seq.data,
+            par_matmul_tiles(&coord, &bt, &ct).data,
+            "matmul threads={w}"
+        );
+    }
+
+    // Cholesky: the dependency DAG must reproduce the sequential bits.
+    let spd = random_spd(45, 9);
+    let mut ch_seq = TiledMatrix::from_matrix(&spd, 8, CurveKind::Hilbert);
+    cholesky_tiles(&mut ch_seq).unwrap();
+    for &w in &threads {
+        let coord = Coordinator::new(w);
+        let mut par = TiledMatrix::from_matrix(&spd, 8, CurveKind::Hilbert);
+        par_cholesky_tiles(&coord, &mut par).unwrap();
+        assert_eq!(ch_seq.data, par.data, "cholesky threads={w}");
+    }
+
+    // Floyd: wavefront rounds.
+    let g = random_graph(37, 0.2, 3);
+    let mut fl_seq = TiledMatrix::from_matrix(&g, 8, CurveKind::Hilbert);
+    floyd_tiles(&mut fl_seq);
+    for &w in &threads {
+        let coord = Coordinator::new(w);
+        let mut par = TiledMatrix::from_matrix(&g, 8, CurveKind::Hilbert);
+        par_floyd_tiles(&coord, &mut par);
+        assert_eq!(fl_seq.data, par.data, "floyd threads={w}");
+    }
+}
+
+#[test]
+fn parallel_kernels_accept_every_curve_kind() {
+    let coord = Coordinator::new(4);
+    let b = Matrix::random(20, 20, 8, -1.0, 1.0);
+    let c = Matrix::random(20, 20, 9, -1.0, 1.0);
+    let reference = matmul_naive(&b, &c);
+    for kind in CurveKind::ALL {
+        let bt = TiledMatrix::from_matrix(&b, 4, kind);
+        let ct = TiledMatrix::from_matrix(&c, 4, kind);
+        let a = par_matmul_tiles(&coord, &bt, &ct).to_matrix();
+        assert!(a.max_abs_diff(&reference) < 1e-3, "{}", kind.name());
+    }
+}
+
+#[test]
+fn curve_tiled_misses_beat_canonic_at_test_scale() {
+    // The ISSUE 4 acceptance inequality, scaled to the tiny hierarchy
+    // (L1 512 B, L2 4 KiB) so it runs in a debug-build test: n=64
+    // matrices (16 KiB each) overflow both levels, and curve-tiled
+    // storage must take strictly fewer combined L1+L2 misses than the
+    // canonic row-major loops. bench_linalg.rs asserts the same
+    // inequality at n=512 under the laptop-class L1/L2 geometry.
+    // Floyd is deliberately absent: its per-pivot wavefront touches
+    // every cell exactly once per round, so the sweep is bandwidth-bound
+    // and the layout is miss-neutral (see apps/floyd.rs docs) — the
+    // tiled win there is the independent parallel wavefront, not the
+    // sequential miss count.
+    let cfg = HierarchyConfig::tiny();
+    for app in [LinalgApp::Matmul, LinalgApp::Cholesky] {
+        let canonic = simulate_with(app, SimVariant::Canonic, 64, 8, CurveKind::Hilbert, &cfg);
+        let curve = simulate_with(app, SimVariant::CurveTiled, 64, 8, CurveKind::Hilbert, &cfg);
+        assert!(
+            curve.l12_misses() < canonic.l12_misses(),
+            "{}: curve-tiled {} !< canonic {}",
+            app.name(),
+            curve.l12_misses(),
+            canonic.l12_misses()
+        );
+    }
+}
