@@ -1,0 +1,170 @@
+//! Store bench (ISSUE 5): ingest throughput, window-query latency vs a
+//! full `SfcIndex` rebuild, and sharded batched-query thread scaling.
+//! Emits JSON (`reports/bench_store.json`) for the perf trajectory.
+//!
+//! Expected shape: ingest is amortized `O(log n)` per row (write buffer
+//! + geometric tier merges), store queries land in the same ballpark as
+//! `SfcIndex` queries *without* paying the rebuild, and batched window
+//! queries over one snapshot scale monotonically 1→4 workers (the
+//! acceptance check, asserted when the host has ≥ 4 cores).
+
+use sfc_mine::apps::simjoin::make_clustered;
+use sfc_mine::apps::Matrix;
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::{SfcIndex, SfcStore, StoreConfig};
+use sfc_mine::util::bench::Bench;
+use sfc_mine::util::rng::Rng;
+use sfc_mine::util::table::Table;
+
+fn write_json(bench: &Bench, path: &str) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (idx, m) in bench.results().iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {}, \"mad_ns\": {}, \"elements\": {}}}",
+            m.name,
+            m.median.as_nanos(),
+            m.mad.as_nanos(),
+            m.elements.unwrap_or(0)
+        ));
+    }
+    s.push_str("\n]\n");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s)
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n: usize = if fast { 4_000 } else { 40_000 };
+    let n_windows: usize = if fast { 48 } else { 256 };
+    let d = 3usize;
+    let level = 8u32;
+    let batch = 512usize;
+    let mut bench = Bench::new();
+    let points = make_clustered(n, d, 40, 0.8, 7);
+
+    // --- ingest throughput ----------------------------------------------
+    let cfg = StoreConfig::default();
+    let (bounds_lo, bounds_hi) =
+        sfc_mine::index::axis_bounds(&points, d).expect("workload is non-empty");
+    let m_ingest = bench.throughput("store/ingest/batched", n as u64, || {
+        let store = SfcStore::new(d, level, CurveKind::Hilbert, bounds_lo.clone(), &bounds_hi, cfg);
+        let mut p = 0usize;
+        while p < n {
+            let end = (p + batch).min(n);
+            let rows = Matrix::from_fn(end - p, d, |i, j| points.at(p + i, j));
+            store.insert_batch(&rows);
+            p = end;
+        }
+        store
+    });
+    let m_rebuild = bench.throughput("index/full-rebuild", n as u64, || {
+        SfcIndex::build_with(&points, level, CurveKind::Hilbert)
+    });
+
+    // --- query latency: mutated store vs fresh index --------------------
+    // A store that lived: bulk load, delete a slice, absorb more, compact.
+    let store = SfcStore::from_points(&points, level, CurveKind::Hilbert, cfg);
+    for p in 0..n / 10 {
+        store.delete(p as u32, points.row(p));
+    }
+    let extra = make_clustered(n / 10, d, 40, 0.8, 99);
+    store.insert_batch(&extra);
+    store.compact();
+    let (live_ids, live_rows) = store.collect_live(&store.snapshot());
+    let index = SfcIndex::build_with(&live_rows, level, CurveKind::Hilbert);
+
+    let mut rng = Rng::new(1234);
+    let windows: Vec<(Vec<f32>, Vec<f32>)> = (0..n_windows)
+        .map(|_| {
+            let p = rng.below_usize(live_rows.rows);
+            let lo: Vec<f32> = (0..d).map(|a| live_rows.at(p, a) - 3.0).collect();
+            let hi: Vec<f32> = (0..d).map(|a| live_rows.at(p, a) + 3.0).collect();
+            (lo, hi)
+        })
+        .collect();
+    // Sanity: identical result rows before timing anything.
+    let snap = store.snapshot();
+    for (lo, hi) in &windows {
+        let mut got = store.query_window_on(&snap, lo, hi);
+        let mut want: Vec<u32> =
+            index.query_window(lo, hi).iter().map(|&i| live_ids[i as usize]).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "store and rebuilt index must agree");
+    }
+    let m_store_q = bench.throughput("store/query/window", n_windows as u64, || {
+        let mut acc = 0usize;
+        for (lo, hi) in &windows {
+            acc += store.query_window_on(&snap, lo, hi).len();
+        }
+        acc
+    });
+    let m_index_q = bench.throughput("index/query/window", n_windows as u64, || {
+        let mut acc = 0usize;
+        for (lo, hi) in &windows {
+            acc += index.query_window(lo, hi).len();
+        }
+        acc
+    });
+
+    let mut t = Table::new(vec!["measure", "median", "per element"]);
+    for (name, m, unit) in [
+        ("store batched ingest", &m_ingest, "pt"),
+        ("SfcIndex full rebuild", &m_rebuild, "pt"),
+        ("store window query (post-churn)", &m_store_q, "query"),
+        ("SfcIndex window query", &m_index_q, "query"),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2} ms", m.median.as_secs_f64() * 1e3),
+            format!(
+                "{:.2} µs/{unit}",
+                m.median.as_nanos() as f64 / 1e3 / m.elements.unwrap_or(1) as f64
+            ),
+        ]);
+    }
+    println!("\nstore vs index at n={n} d={d} level={level}:");
+    print!("{}", t.render());
+
+    // --- sharded batched-query thread scaling ---------------------------
+    let mut st = Table::new(vec!["threads", "ms/batch", "ms/query", "speedup vs x1"]);
+    let mut medians = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let coord = Coordinator::new(threads);
+        let m = bench.throughput(&format!("store/par_query/x{threads}"), n_windows as u64, || {
+            coord.par_query_store(&store, &windows)
+        });
+        medians.push((threads, m.median));
+        st.row(vec![
+            threads.to_string(),
+            format!("{:.2}", m.median.as_secs_f64() * 1e3),
+            format!("{:.3}", m.median.as_secs_f64() * 1e3 / n_windows as f64),
+            format!("{:.2}x", medians[0].1.as_secs_f64() / m.median.as_secs_f64()),
+        ]);
+    }
+    println!("\nsharded batched window queries, one snapshot, {n_windows} windows:");
+    print!("{}", st.render());
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    if cores >= 4 && !fast {
+        // The acceptance shape: batched snapshot queries scale 1 -> 4
+        // workers (5% headroom for scheduler noise).
+        let t1 = medians[0].1.as_secs_f64();
+        let t4 = medians[2].1.as_secs_f64();
+        assert!(
+            t4 < t1 * 1.05,
+            "batched store queries must scale 1->4 threads: x1 {t1:.4}s vs x4 {t4:.4}s"
+        );
+        println!("scaling acceptance: x4 beats x1 ({:.2}x)", t1 / t4);
+    } else {
+        println!("scaling acceptance skipped ({cores} cores, fast={fast})");
+    }
+
+    write_json(&bench, "reports/bench_store.json").expect("write bench JSON");
+    println!("\nwrote reports/bench_store.json");
+}

@@ -12,9 +12,15 @@
 //!   traversals plus the tiled-storage wavefront
 //!   ([`floyd::floyd_tiles`] / [`floyd::par_floyd_tiles`]).
 //! * [`kmeans`] — k-Means clustering (the coordinator parallelises this
-//!   one; [`crate::runtime`] can offload its inner kernel to PJRT).
+//!   one; [`crate::runtime`] can offload its inner kernel to PJRT), plus
+//!   the **streaming-ingest** path [`kmeans::StreamingKMeans`]: batches
+//!   are assigned as they arrive and live queryable in the mutable
+//!   [`SfcStore`](crate::index::SfcStore), with curve-ordered parallel
+//!   Lloyd refinement.
 //! * [`simjoin`] — ε-similarity join over a grid index, driven by the
-//!   FGF-Hilbert jump-over loop.
+//!   FGF-Hilbert jump-over loop, the window-decomposition sorted-key
+//!   path ([`simjoin::join_sfc`]) and the serving-layer store driver
+//!   ([`simjoin::join_store`]).
 //! * [`pairloop`] — the abstract "process all object pairs" loop of
 //!   Figure 1, instrumented against the cache simulator.
 //!

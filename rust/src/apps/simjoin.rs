@@ -26,7 +26,12 @@
 //!   neighbors found by **decomposing its ±1 cell window into contiguous
 //!   key ranges** ([`CurveMapperNd::decompose_nd`]) and binary-searching
 //!   each range — the query subsystem replacing the `3^d` per-cell
-//!   odometer walk of the nested driver (which stays as a baseline).
+//!   odometer walk of the nested driver (which stays as a baseline);
+//! * [`join_store`] — the **serving-layer** driver: the points live in a
+//!   mutable [`SfcStore`](crate::index::SfcStore) and every point's ±ε
+//!   window goes through the store's query planner (decompose once →
+//!   shard-routed range probes → snapshot read) — the exact path a live
+//!   ingest-while-querying deployment uses, driven here over a batch.
 //!
 //! All variants return the same pair set. Note the finer full-dim cells
 //! mean *more* (but far cheaper) candidate cell pairs than the
@@ -65,7 +70,7 @@ pub struct JoinStats {
     pub results: u64,
     /// Candidate cell pairs visited (index variants).
     pub cell_pairs: u64,
-    /// Decomposed key ranges probed ([`join_sfc`] only).
+    /// Decomposed key ranges probed ([`join_sfc`] and [`join_store`]).
     pub ranges: u64,
     /// FGF traversal stats (Hilbert variant only).
     pub fgf: Option<FgfStats>,
@@ -377,6 +382,81 @@ pub fn join_sfc_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, Join
     (out, stats)
 }
 
+/// ε-join served by the **mutable [`SfcStore`]** (indexing capped at
+/// [`DEFAULT_INDEX_DIMS`] dimensions) — the serving-layer driver.
+pub fn join_store(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
+    join_store_dims(points, eps, default_index_dims(points))
+}
+
+/// [`join_store`] with an explicit indexed-dimension count.
+///
+/// Builds an [`SfcStore`] over the first `dims` columns (cell width ≈
+/// `eps`: the level is chosen so one quantization cell spans about one
+/// join radius), takes **one snapshot**, and answers each point's
+/// ±ε window through the planner (decompose → shard-routed range probes)
+/// — the same query path a live serving deployment would use, driven
+/// here over a static batch. Every window hit with a larger id gets the
+/// exact full-dimensional distance test, so the pair set equals the
+/// other drivers'; `ranges` aggregates the planner's decompositions and
+/// `cell_pairs` stays 0 (this driver has no cell-pair structure).
+pub fn join_store_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, JoinStats) {
+    assert!(eps > 0.0, "eps must be positive");
+    assert!(dims >= 1 && dims <= points.cols, "dims outside 1..=cols");
+    let mut out = Vec::new();
+    let mut stats = JoinStats::default();
+    if points.rows == 0 {
+        return (out, stats);
+    }
+    let eps2 = eps * eps;
+    // Index the dimension prefix (like the grid variants); distances are
+    // always full-dimensional.
+    let prefix = Matrix::from_fn(points.rows, dims, |i, j| points.at(i, j));
+    // Pick the level so one cell ≈ eps: windows then decompose into a
+    // handful of ranges instead of thousands of sub-cell fragments.
+    let extent = match crate::index::axis_bounds(&prefix, dims) {
+        Some((lo, hi)) => lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| h - l)
+            .fold(0.0f32, f32::max),
+        None => 0.0,
+    };
+    let level = if extent > eps {
+        (extent / eps).log2().ceil() as u32
+    } else {
+        1
+    };
+    let store = crate::index::SfcStore::from_points(
+        &prefix,
+        level,
+        crate::curves::CurveKind::Hilbert,
+        crate::index::StoreConfig::default(),
+    );
+    let snap = store.snapshot();
+    let mut lo = vec![0.0f32; dims];
+    let mut hi = vec![0.0f32; dims];
+    for p in 0..points.rows {
+        for a in 0..dims {
+            lo[a] = prefix.at(p, a) - eps;
+            hi[a] = prefix.at(p, a) + eps;
+        }
+        let (ids, s) = store.query_window_stats_on(&snap, &lo, &hi, 0);
+        stats.ranges += s.ranges as u64;
+        for id in ids {
+            // Store ids are insertion order == row indices; keep each
+            // unordered pair once from its smaller endpoint.
+            if id as usize > p {
+                stats.comparisons += 1;
+                if sq_dist(points.row(p), points.row(id as usize)) <= eps2 {
+                    out.push((p as u32, id));
+                    stats.results += 1;
+                }
+            }
+        }
+    }
+    (out, stats)
+}
+
 /// Clustered synthetic workload: points drawn around `clusters` seeds (the
 /// shape that makes index joins shine).
 pub fn make_clustered(n: usize, d: usize, clusters: usize, spread: f32, seed: u64) -> Matrix {
@@ -408,10 +488,29 @@ mod tests {
             let (c, _) = join_fgf_hilbert(&points, eps);
             let (p, _) = join_grid_projected(&points, eps);
             let (s, _) = join_sfc(&points, eps);
+            let (st, _) = join_store(&points, eps);
             assert_eq!(normalize(a.clone()), normalize(b), "grid eps={eps}");
             assert_eq!(normalize(a.clone()), normalize(c), "fgf eps={eps}");
             assert_eq!(normalize(a.clone()), normalize(s), "sfc eps={eps}");
+            assert_eq!(normalize(a.clone()), normalize(st), "store eps={eps}");
             assert_eq!(normalize(a), normalize(p), "projected eps={eps}");
+        }
+    }
+
+    #[test]
+    fn store_join_matches_brute_force_and_decomposes() {
+        let points = make_clustered(600, 3, 25, 0.8, 29);
+        for eps in [0.6f32, 1.4] {
+            let (brute, bs) = join_bruteforce(&points, eps);
+            let (pairs, ss) = join_store_dims(&points, eps, 3);
+            assert_eq!(normalize(brute), normalize(pairs), "eps={eps}");
+            assert!(ss.ranges > 0, "planner must actually decompose windows");
+            assert!(
+                ss.comparisons * 2 < bs.comparisons,
+                "store windows must prune: {} vs brute {}",
+                ss.comparisons,
+                bs.comparisons
+            );
         }
     }
 

@@ -22,6 +22,14 @@
 //! output tiles, left-looking Cholesky panels, Floyd–Warshall wavefront
 //! rounds) keeps the same locality-preserving hand-out.
 //!
+//! For batched serving work the same chunk queue generalizes to
+//! [`Coordinator::par_map`] (dynamic map over an item slice, results in
+//! input order): [`Coordinator::par_query`] fans window batches over an
+//! [`SfcIndex`], [`Coordinator::par_query_store`] over one consistent
+//! [`SfcStore`] snapshot, and the store's planner routes a *single*
+//! window's decomposed ranges to per-shard probe tasks through it
+//! ([`SfcStore::par_query_window`]).
+//!
 //! * [`scheduler`] — curve-segment scheduling (static ranges + dynamic
 //!   chunk queue).
 //! * [`pool`] — a long-lived worker pool (std threads; the vendored crate
@@ -44,7 +52,7 @@ use crate::apps::kmeans::{Assignment, KMeans};
 use crate::apps::Matrix;
 use crate::curves::engine::{self, CurveMapper, CurveMapperNd, HilbertSquare};
 use crate::curves::CurveKind;
-use crate::index::SfcIndex;
+use crate::index::{SfcIndex, SfcStore};
 use metrics::WorkerMetrics;
 use scheduler::ChunkQueue;
 
@@ -351,36 +359,36 @@ impl Coordinator {
         self.par_fold(&mapper, init, body, merge)
     }
 
-    /// Answer a batch of window queries against an [`SfcIndex`] in
-    /// parallel: query indices are handed out through the same dynamic
-    /// [`ChunkQueue`] the curve-segment schedulers use, so stragglers
-    /// (large windows) rebalance across workers. Results come back in
-    /// input order, each entry the ids [`SfcIndex::query_window`] would
-    /// return.
-    pub fn par_query(
-        &self,
-        index: &SfcIndex,
-        windows: &[(Vec<f32>, Vec<f32>)],
-    ) -> Vec<Vec<u32>> {
-        if windows.is_empty() {
+    /// Parallel map over an item slice: items are handed out through the
+    /// same dynamic [`ChunkQueue`] the curve-segment schedulers use, so
+    /// stragglers (expensive items) rebalance across workers. Results
+    /// come back in input order — the generalized batching core behind
+    /// [`Coordinator::par_query`], [`Coordinator::par_query_store`] and
+    /// the store's per-shard probe fan-out
+    /// ([`SfcStore::par_query_window`]).
+    pub fn par_map<T, R>(&self, items: &[T], body: impl Fn(usize, &T) -> R + Sync) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+    {
+        if items.is_empty() {
             return Vec::new();
         }
-        // Queries are coarse work items: hand out small chunks so large
-        // windows don't serialize the tail.
-        let chunk = (windows.len() as u64).div_ceil(self.threads as u64 * 4).max(1);
-        let queue = ChunkQueue::new(windows.len() as u64, chunk);
-        let mut out: Vec<Vec<u32>> = vec![Vec::new(); windows.len()];
-        let mut shards: Vec<Vec<(usize, Vec<u32>)>> = Vec::with_capacity(self.threads);
+        // Items are coarse work units: hand out small chunks so expensive
+        // items don't serialize the tail.
+        let chunk = (items.len() as u64).div_ceil(self.threads as u64 * 4).max(1);
+        let queue = ChunkQueue::new(items.len() as u64, chunk);
+        let mut shards: Vec<Vec<(usize, R)>> = Vec::with_capacity(self.threads);
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(self.threads);
             for _ in 0..self.threads {
                 let queue = &queue;
+                let body = &body;
                 handles.push(scope.spawn(move || {
-                    let mut local: Vec<(usize, Vec<u32>)> = Vec::new();
+                    let mut local: Vec<(usize, R)> = Vec::new();
                     while let Some((start, end)) = queue.next_chunk() {
-                        for q in start..end {
-                            let (lo, hi) = &windows[q as usize];
-                            local.push((q as usize, index.query_window(lo, hi)));
+                        for i in start..end {
+                            local.push((i as usize, body(i as usize, &items[i as usize])));
                         }
                     }
                     local
@@ -390,12 +398,39 @@ impl Coordinator {
                 shards.push(h.join().expect("worker panicked"));
             }
         });
+        let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
         for shard in shards {
-            for (q, ids) in shard {
-                out[q] = ids;
+            for (i, r) in shard {
+                out[i] = Some(r);
             }
         }
-        out
+        out.into_iter().map(|r| r.expect("queue covers every item")).collect()
+    }
+
+    /// Answer a batch of window queries against an [`SfcIndex`] in
+    /// parallel ([`Coordinator::par_map`] over the windows). Results
+    /// come back in input order, each entry the ids
+    /// [`SfcIndex::query_window`] would return.
+    pub fn par_query(
+        &self,
+        index: &SfcIndex,
+        windows: &[(Vec<f32>, Vec<f32>)],
+    ) -> Vec<Vec<u32>> {
+        self.par_map(windows, |_, (lo, hi)| index.query_window(lo, hi))
+    }
+
+    /// Answer a batch of window queries against an [`SfcStore`] in
+    /// parallel, all on **one snapshot** (a consistent epoch: the whole
+    /// batch sees exactly the store state at the call, however long the
+    /// fan-out runs and whatever ingest lands meanwhile). Results come
+    /// back in input order.
+    pub fn par_query_store(
+        &self,
+        store: &SfcStore,
+        windows: &[(Vec<f32>, Vec<f32>)],
+    ) -> Vec<Vec<u32>> {
+        let snap = store.snapshot();
+        self.par_map(windows, |_, (lo, hi)| store.query_window_on(&snap, lo, hi))
     }
 
     /// Parallel map over an index range `[0, n)`: contiguous shards, one
@@ -751,6 +786,48 @@ mod tests {
         let points = Matrix::random(10, 2, 1, 0.0, 1.0);
         let index = SfcIndex::build(&points, 4);
         assert!(Coordinator::new(2).par_query(&index, &[]).is_empty());
+    }
+
+    #[test]
+    fn par_map_preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        for threads in [1usize, 3, 8] {
+            let coord = Coordinator::new(threads);
+            let out = coord.par_map(&items, |i, &x| {
+                assert_eq!(i as u64, x);
+                x * 3 + 1
+            });
+            assert_eq!(out.len(), items.len(), "threads={threads}");
+            for (i, &r) in out.iter().enumerate() {
+                assert_eq!(r, i as u64 * 3 + 1, "threads={threads}");
+            }
+        }
+        let empty: [u64; 0] = [];
+        assert!(Coordinator::new(4).par_map(&empty, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn par_query_store_matches_serial_snapshot_queries() {
+        use crate::index::StoreConfig;
+        let points = Matrix::random(600, 3, 9, 0.0, 50.0);
+        let store = SfcStore::from_points(&points, 6, CurveKind::Hilbert, StoreConfig::default());
+        let mut rng = crate::util::rng::Rng::new(77);
+        let windows: Vec<(Vec<f32>, Vec<f32>)> = (0..30)
+            .map(|_| {
+                let lo: Vec<f32> = (0..3).map(|_| rng.f32() * 40.0).collect();
+                let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 15.0).collect();
+                (lo, hi)
+            })
+            .collect();
+        let snap = store.snapshot();
+        for threads in [1usize, 4] {
+            let coord = Coordinator::new(threads);
+            let par = coord.par_query_store(&store, &windows);
+            for (got, (lo, hi)) in par.iter().zip(&windows) {
+                let want = store.query_window_on(&snap, lo, hi);
+                assert_eq!(*got, want, "threads={threads}");
+            }
+        }
     }
 
     #[test]

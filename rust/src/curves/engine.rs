@@ -247,6 +247,39 @@ pub fn coarsen_ranges(ranges: &mut Vec<Range<u64>>, max_ranges: usize) {
     *ranges = out;
 }
 
+/// Split a sorted, disjoint range list at a set of fenceposts, tagging
+/// each piece with the slot it falls into — the serving layer's
+/// shard-routing primitive ([`crate::index::SfcStore`]'s planner cuts a
+/// window's decomposition at the curve-order shard boundaries so every
+/// piece routes to exactly one shard).
+///
+/// `bounds` has `S + 1` non-decreasing entries delimiting `S` contiguous
+/// slots `[bounds[s], bounds[s+1])`; range parts outside
+/// `[bounds[0], bounds[S])` are clamped away. Output pieces stay in
+/// curve order, are disjoint, and cover exactly the clamped input cells.
+pub fn split_ranges_at(ranges: &[Range<u64>], bounds: &[u64]) -> Vec<(usize, Range<u64>)> {
+    assert!(bounds.len() >= 2, "need at least one slot (two fenceposts)");
+    assert!(
+        bounds.windows(2).all(|w| w[0] <= w[1]),
+        "fenceposts must be non-decreasing"
+    );
+    let slots = bounds.len() - 1;
+    let mut out = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let mut start = r.start.max(bounds[0]);
+        let end = r.end.min(bounds[slots]);
+        while start < end {
+            // Slot of `start`: last fencepost ≤ start (empty slots with
+            // equal fenceposts are skipped by the partition point).
+            let slot = bounds[1..slots].partition_point(|&b| b <= start);
+            let piece_end = end.min(bounds[slot + 1]);
+            out.push((slot, start..piece_end));
+            start = piece_end;
+        }
+    }
+    out
+}
+
 /// Clamp a 2-D window to a mapper's domain bounding box; `None` when the
 /// clamped window is empty. Plane domains additionally cap coordinates at
 /// `2^31 − 1` so every decomposer's order arithmetic stays inside `u64`.
@@ -1997,6 +2030,39 @@ mod tests {
         assert_eq!(r.len(), 2);
         coarsen_ranges(&mut r, 5);
         assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn split_ranges_at_routes_every_cell_once() {
+        let bounds = [0u64, 10, 20, 20, 35, 64];
+        let ranges = vec![2..5, 8..23, 30..40, 60..64];
+        let pieces = split_ranges_at(&ranges, &bounds);
+        // Pieces stay in curve order and partition the input cells.
+        let mut cells = Vec::new();
+        for (slot, r) in &pieces {
+            assert!(r.start < r.end, "no empty pieces");
+            assert!(bounds[*slot] <= r.start && r.end <= bounds[slot + 1]);
+            cells.extend(r.clone());
+        }
+        let want: Vec<u64> = ranges.iter().flat_map(|r| r.clone()).collect();
+        assert_eq!(cells, want);
+        // The empty slot (20..20) receives nothing.
+        assert!(pieces.iter().all(|(s, _)| *s != 2));
+        // A range crossing two fenceposts splits into three pieces.
+        let crossing: Vec<_> =
+            pieces.iter().filter(|(_, r)| ranges[1].contains(&r.start)).collect();
+        assert_eq!(crossing.len(), 3);
+        assert_eq!(crossing[0], &(0usize, 8..10));
+        assert_eq!(crossing[1], &(1usize, 10..20));
+        assert_eq!(crossing[2], &(3usize, 20..23));
+    }
+
+    #[test]
+    fn split_ranges_at_clamps_outside_parts() {
+        let pieces = split_ranges_at(&[0..100], &[10, 20, 30]);
+        assert_eq!(pieces, vec![(0usize, 10..20), (1usize, 20..30)]);
+        assert!(split_ranges_at(&[], &[0, 5]).is_empty());
+        assert!(split_ranges_at(&[7..9], &[0, 0]).is_empty());
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Shared expanding-window k-nearest-neighbor driver.
+//!
+//! Both [`SfcIndex`](super::SfcIndex) and [`SfcStore`](super::SfcStore)
+//! answer kNN the same way: a centered L∞ window of radius `r` is
+//! complete for any answer distance `≤ r`, so the window doubles until
+//! the heap's k-th distance is covered (or the data's bounding box is).
+//! The window-probe itself is the structure-specific part, injected as a
+//! closure; the radius schedule, heap bookkeeping and termination rule
+//! live here once.
+
+use std::collections::BinaryHeap;
+
+/// A kNN candidate in the query's max-heap (ordered by distance, ties by
+/// id, via total order on the floats).
+#[derive(Copy, Clone, Debug)]
+pub(crate) struct Neighbor {
+    pub dist: f32,
+    pub id: u32,
+}
+
+impl PartialEq for Neighbor {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for Neighbor {}
+
+impl PartialOrd for Neighbor {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Neighbor {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.dist
+            .total_cmp(&other.dist)
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// The `k` nearest neighbors of `q` by Euclidean distance, sorted
+/// ascending as `(id, distance)`.
+///
+/// `for_window(lo, hi, emit)` must call `emit(id, row)` for every point
+/// whose coordinates lie inside the closed float window `[lo, hi]` —
+/// exactly once per live point. `cover_lo`/`cover_hi` bound the data
+/// (once the window covers them the scan was exhaustive), and `start_r`
+/// seeds the radius (callers pass the largest quantization cell width;
+/// `0` is bumped to a small positive epsilon so degenerate data still
+/// makes progress).
+pub(crate) fn expanding_knn(
+    q: &[f32],
+    k: usize,
+    start_r: f32,
+    cover_lo: &[f32],
+    cover_hi: &[f32],
+    mut for_window: impl FnMut(&[f32], &[f32], &mut dyn FnMut(u32, &[f32])),
+) -> Vec<(u32, f32)> {
+    if k == 0 {
+        return Vec::new();
+    }
+    let dims = q.len();
+    let mut r = start_r;
+    if r <= 0.0 {
+        r = 1e-6;
+    }
+    let mut lo = vec![0.0f32; dims];
+    let mut hi = vec![0.0f32; dims];
+    loop {
+        for a in 0..dims {
+            lo[a] = q[a] - r;
+            hi[a] = q[a] + r;
+        }
+        let mut heap: BinaryHeap<Neighbor> = BinaryHeap::with_capacity(k + 1);
+        for_window(&lo, &hi, &mut |id, row| {
+            let dist2: f32 = row.iter().zip(q).map(|(&a, &b)| (a - b) * (a - b)).sum();
+            heap.push(Neighbor { dist: dist2.sqrt(), id });
+            if heap.len() > k {
+                heap.pop();
+            }
+        });
+        let covers = (0..dims).all(|a| lo[a] <= cover_lo[a] && hi[a] >= cover_hi[a]);
+        let done = heap.len() == k && heap.peek().map(|n| n.dist <= r).unwrap_or(false);
+        if covers || done {
+            let mut best = heap.into_vec();
+            best.sort();
+            return best.into_iter().map(|n| (n.id, n.dist)).collect();
+        }
+        r *= 2.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_true_neighbors_on_a_line() {
+        let points: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let got = expanding_knn(&[7.2], 3, 1.0, &[0.0], &[19.0], |lo, hi, emit| {
+            for (id, &x) in points.iter().enumerate() {
+                if x >= lo[0] && x <= hi[0] {
+                    emit(id as u32, std::slice::from_ref(&x));
+                }
+            }
+        });
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].0, 7);
+        assert!((got[0].1 - 0.2).abs() < 1e-6);
+        assert_eq!(got[1].0, 8);
+        assert_eq!(got[2].0, 6);
+    }
+
+    #[test]
+    fn fewer_points_than_k_terminates_via_cover() {
+        let got = expanding_knn(&[100.0], 5, 0.0, &[0.0], &[1.0], |lo, hi, emit| {
+            if lo[0] <= 0.5 && hi[0] >= 0.5 {
+                emit(0, &[0.5]);
+            }
+        });
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 0);
+    }
+
+    #[test]
+    fn k_zero_is_empty() {
+        assert!(expanding_knn(&[0.0], 0, 1.0, &[0.0], &[1.0], |_, _, _| ()).is_empty());
+    }
+}

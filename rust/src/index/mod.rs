@@ -1,29 +1,39 @@
-//! Index substrates for the mining applications (paper §7): three ways
+//! Index substrates for the mining applications (paper §7): four ways
 //! to organize a point set for spatial queries and joins.
 //!
 //! | Index | Structure | Answers | Pick it when |
 //! |---|---|---|---|
 //! | [`GridIndex`] | 2-D projection cells (dims 0–1) | join candidates | legacy baseline; measured against, not built on |
 //! | [`GridIndexNd`] | full-dim `eps`-cells, sorted lexicographically | join candidates, cell lookups | the workload is an ε-join: cell side = ε makes neighbors a 3^d stencil |
-//! | [`SfcIndex`] | points sorted by d-dim curve order, keys in a sorted column | [`SfcIndex::query_point`] / [`SfcIndex::query_window`] / [`SfcIndex::query_knn`] | ad-hoc spatial queries: a window becomes a few contiguous key ranges ([`CurveMapperNd::decompose_nd`](crate::curves::engine::CurveMapperNd::decompose_nd)), each one binary search |
+//! | [`SfcIndex`] | points sorted by d-dim curve order, keys in a sorted column | [`SfcIndex::query_point`] / [`SfcIndex::query_window`] / [`SfcIndex::query_knn`] | ad-hoc spatial queries over an immutable point set: a window becomes a few contiguous key ranges ([`CurveMapperNd::decompose_nd`](crate::curves::engine::CurveMapperNd::decompose_nd)), each one binary search |
+//! | [`SfcStore`] | curve-order **shards** of key-sorted LSM segments | the same query surface, plus [`SfcStore::insert`] / [`SfcStore::delete`] / [`SfcStore::compact`] under concurrent snapshot reads | the serving workload: continuous ingest and deletes while queries run ([`store`] module docs) |
 //!
 //! The grid indexes bucket points into cells (side = join radius) and
 //! keep the non-empty cells sorted; the SFC index instead *permutes the
 //! points themselves* into curve order, so range queries read contiguous
 //! memory — the paper's first-listed application of space-filling curves
 //! (search structures), with the clustering property deciding how few
-//! ranges a window costs (fewest for Hilbert).
+//! ranges a window costs (fewest for Hilbert). The store stacks the same
+//! sorted-segment machinery into a mutable, sharded serving layer;
+//! `SfcIndex` is literally its single-shard, single-segment special
+//! case.
 //!
-//! All three builders share the per-axis bounding-box scan and the
+//! Everything float→cell goes through one [`quantize::Quantizer`] (the
+//! monotone clamped map that keeps window decomposition conservative),
+//! and all builders share the per-axis bounding-box scan and the
 //! cell-bucketing machinery below instead of re-implementing them.
 
 pub mod grid;
+pub(crate) mod knn;
 pub mod ndgrid;
+pub mod quantize;
 pub mod sfc;
+pub mod store;
 
 pub use grid::GridIndex;
 pub use ndgrid::{CellNd, GridIndexNd};
 pub use sfc::{QueryStats, SfcIndex};
+pub use store::{SfcStore, Snapshot, StoreConfig};
 
 use crate::apps::Matrix;
 
@@ -55,21 +65,21 @@ pub fn axis_bounds(points: &Matrix, dims: usize) -> Option<(Vec<f32>, Vec<f32>)>
 /// columns (cell coordinates offset by `origin`), returning the
 /// non-empty cells with their point lists, sorted lexicographically by
 /// cell coordinate — the shared build core of [`GridIndex`] and
-/// [`GridIndexNd`].
+/// [`GridIndexNd`], quantizing through the shared
+/// [`quantize::Quantizer`] (uniform-`eps` flavor).
 pub fn bucket_cells(
     points: &Matrix,
     eps: f32,
     origin: &[f32],
     dims: usize,
 ) -> Vec<(CellNd, Vec<u32>)> {
-    assert!(eps > 0.0, "eps must be positive");
     assert_eq!(origin.len(), dims);
+    let quant = quantize::Quantizer::uniform(origin.to_vec(), eps);
     let mut map: std::collections::HashMap<CellNd, Vec<u32>> = std::collections::HashMap::new();
-    let mut key = vec![0u32; dims];
+    let mut key = Vec::with_capacity(dims);
     for p in 0..points.rows {
-        for (a, k) in key.iter_mut().enumerate() {
-            *k = ((points.at(p, a) - origin[a]) / eps).floor() as u32;
-        }
+        key.clear();
+        quant.cells_into(&points.row(p)[..dims], &mut key);
         map.entry(key.clone()).or_default().push(p as u32);
     }
     let mut cells: Vec<(CellNd, Vec<u32>)> = map.into_iter().collect();

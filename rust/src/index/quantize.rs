@@ -1,0 +1,245 @@
+//! Shared float→cell quantization and curve-key encoding.
+//!
+//! Every index in this crate maps float coordinates onto integer grid
+//! cells before touching a curve: [`SfcIndex`](super::SfcIndex) and
+//! [`SfcStore`](super::SfcStore) quantize each axis to `side` cells over
+//! a bounding box, the grid indexes ([`GridIndex`](super::GridIndex),
+//! [`GridIndexNd`](super::GridIndexNd)) use fixed `eps`-wide cells over
+//! an open extent. [`Quantizer`] is the one implementation of that map —
+//! point quantization, window quantization and key encoding all go
+//! through the same [`Quantizer::cell_of`], so a point query's equality
+//! check and a window query's corner quantization can never drift apart.
+//!
+//! The map is **monotone per axis and clamped**, which is the property
+//! that keeps window decomposition conservative: a point inside a float
+//! window always lands inside the quantized window, so the exact float
+//! filter after the range probe never loses a true hit.
+
+use crate::apps::Matrix;
+use crate::curves::engine::{CurveMapperNd, WindowNd};
+use crate::curves::CurveKind;
+
+/// Float→cell quantization map over the first `dims` axes: axis `a`
+/// maps `v ↦ clamp(⌊(v − origin[a]) / cell[a]⌋, 0, side − 1)`.
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    dims: usize,
+    /// Cells per axis (clamp bound). `u32::MAX` means "unbounded" (the
+    /// grid indexes' eps-cells over an open extent).
+    side: u32,
+    origin: Vec<f32>,
+    cell: Vec<f32>,
+}
+
+impl Quantizer {
+    /// Quantizer over the box `[origin, max]` with `side` cells per axis
+    /// (cell width `(max − origin) / side`; degenerate axes get width 0
+    /// and map everything to cell 0).
+    pub fn from_bounds(origin: Vec<f32>, max: &[f32], side: u32) -> Self {
+        assert_eq!(origin.len(), max.len(), "bounds dims must match");
+        assert!(side >= 1, "side must be positive");
+        let cell = origin
+            .iter()
+            .zip(max)
+            .map(|(&lo, &hi)| (hi - lo) / side as f32)
+            .collect();
+        Quantizer { dims: origin.len(), side, origin, cell }
+    }
+
+    /// Quantizer over the bounding box of the first `dims` columns of
+    /// `points` ([`axis_bounds`](super::axis_bounds)); an empty point set
+    /// yields the degenerate all-zero map.
+    pub fn from_points(points: &Matrix, dims: usize, side: u32) -> Self {
+        match super::axis_bounds(points, dims) {
+            Some((min, max)) => Self::from_bounds(min, &max, side),
+            None => Self::degenerate(dims, side),
+        }
+    }
+
+    /// The all-zero map (every value lands in cell 0 on every axis).
+    pub fn degenerate(dims: usize, side: u32) -> Self {
+        Quantizer { dims, side, origin: vec![0.0; dims], cell: vec![0.0; dims] }
+    }
+
+    /// Fixed-width cells of side `eps` from `origin`, unbounded extent —
+    /// the grid-index flavor ([`bucket_cells`](super::bucket_cells)).
+    pub fn uniform(origin: Vec<f32>, eps: f32) -> Self {
+        assert!(eps > 0.0, "eps must be positive");
+        let dims = origin.len();
+        Quantizer { dims, side: u32::MAX, origin, cell: vec![eps; dims] }
+    }
+
+    /// Number of quantized axes.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Cells per axis.
+    pub fn side(&self) -> u32 {
+        self.side
+    }
+
+    /// Per-axis origin (minimum corner of the quantization box).
+    pub fn origin(&self) -> &[f32] {
+        &self.origin
+    }
+
+    /// Per-axis cell widths (`0` on degenerate axes).
+    pub fn cell_widths(&self) -> &[f32] {
+        &self.cell
+    }
+
+    /// Largest cell width across axes (the kNN search's starting
+    /// radius).
+    pub fn max_cell_width(&self) -> f32 {
+        self.cell.iter().cloned().fold(0.0f32, f32::max)
+    }
+
+    /// Quantized cell coordinate of value `v` on axis `a` — monotone in
+    /// `v` and clamped to `[0, side)`.
+    #[inline]
+    pub fn cell_of(&self, v: f32, a: usize) -> u32 {
+        let c = self.cell[a];
+        if c <= 0.0 {
+            return 0;
+        }
+        let q = ((v - self.origin[a]) / c).floor();
+        if q < 0.0 {
+            0
+        } else if q >= self.side as f32 {
+            self.side - 1
+        } else {
+            q as u32
+        }
+    }
+
+    /// Append the cell coordinates of point `p` (`p.len() == dims`) to a
+    /// flat coordinate buffer (the shape [`CurveMapperNd::order_batch_nd`]
+    /// consumes).
+    #[inline]
+    pub fn cells_into(&self, p: &[f32], out: &mut Vec<u32>) {
+        debug_assert_eq!(p.len(), self.dims);
+        for (a, &v) in p.iter().enumerate() {
+            out.push(self.cell_of(v, a));
+        }
+    }
+
+    /// Curve key of point `p` under `mapper` (one quantize + encode).
+    pub fn key_of(&self, mapper: &dyn CurveMapperNd, p: &[f32]) -> u64 {
+        let mut cells = Vec::with_capacity(self.dims);
+        self.cells_into(p, &mut cells);
+        mapper.order_nd(&cells)
+    }
+
+    /// Quantize a closed float window `[lo, hi]` into an inclusive cell
+    /// window (same per-axis map as the points, hence conservative).
+    pub fn window(&self, lo: &[f32], hi: &[f32]) -> WindowNd {
+        assert_eq!(lo.len(), self.dims, "window dims must match");
+        assert_eq!(hi.len(), self.dims, "window dims must match");
+        assert!(
+            lo.iter().zip(hi).all(|(a, b)| a <= b),
+            "window lo must be ≤ hi per axis"
+        );
+        let clo: Vec<u32> = lo.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
+        let chi: Vec<u32> = hi.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
+        WindowNd::new(clo, chi)
+    }
+}
+
+/// Exact float containment test of a row in a closed window — the one
+/// implementation of the post-decomposition filter.
+#[inline]
+pub fn window_contains(lo: &[f32], hi: &[f32], row: &[f32]) -> bool {
+    row.iter()
+        .zip(lo.iter().zip(hi))
+        .all(|(&v, (&l, &h))| (l..=h).contains(&v))
+}
+
+/// Quantization level actually usable for `kind` at `dims` dimensions:
+/// the requested level clamped so the curve's order span fits `u64`
+/// (shared by [`SfcIndex`](super::SfcIndex) and
+/// [`SfcStore`](super::SfcStore) so both quantize identically).
+pub fn clamped_level(kind: CurveKind, dims: usize, level: u32) -> u32 {
+    let max_level = match kind {
+        CurveKind::Peano => (39 / dims as u32).min(20),
+        _ => (63 / dims as u32).min(31),
+    };
+    level.clamp(1, max_level.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_of_is_monotone_and_clamped() {
+        let q = Quantizer::from_bounds(vec![0.0, -1.0], &[10.0, 1.0], 8);
+        assert_eq!(q.cell_of(-5.0, 0), 0);
+        assert_eq!(q.cell_of(0.0, 0), 0);
+        assert_eq!(q.cell_of(9.999, 0), 7);
+        assert_eq!(q.cell_of(10.0, 0), 7);
+        assert_eq!(q.cell_of(1e9, 0), 7);
+        let mut last = 0;
+        for i in 0..100 {
+            let c = q.cell_of(i as f32 * 0.1, 0);
+            assert!(c >= last, "monotone");
+            last = c;
+        }
+    }
+
+    #[test]
+    fn degenerate_axis_maps_to_zero() {
+        let q = Quantizer::from_bounds(vec![3.0], &[3.0], 16);
+        assert_eq!(q.cell_of(3.0, 0), 0);
+        assert_eq!(q.cell_of(-100.0, 0), 0);
+        assert_eq!(q.cell_of(100.0, 0), 0);
+    }
+
+    #[test]
+    fn uniform_matches_grid_bucketing_formula() {
+        let q = Quantizer::uniform(vec![0.5, 0.5], 0.25);
+        // Same cells as ((v - origin)/eps).floor().
+        assert_eq!(q.cell_of(0.5, 0), 0);
+        assert_eq!(q.cell_of(0.76, 0), 1);
+        assert_eq!(q.cell_of(3.0, 1), 10);
+    }
+
+    #[test]
+    fn window_quantization_is_conservative() {
+        // Any point inside the float window must land inside the
+        // quantized window (same monotone map on both sides).
+        let q = Quantizer::from_bounds(vec![0.0], &[100.0], 64);
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..200 {
+            let lo = rng.f32() * 90.0;
+            let hi = lo + rng.f32() * 10.0;
+            let w = q.window(&[lo], &[hi]);
+            for _ in 0..20 {
+                let v = lo + rng.f32() * (hi - lo);
+                let c = q.cell_of(v, 0);
+                assert!(w.lo[0] <= c && c <= w.hi[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn clamped_level_fits_u64_span() {
+        for kind in CurveKind::ALL {
+            for dims in 1..=13usize {
+                let lvl = clamped_level(kind, dims, 31);
+                if kind == CurveKind::Peano {
+                    assert!(dims as u32 * lvl <= 39, "{} d={dims}", kind.name());
+                } else {
+                    assert!(dims as u32 * lvl <= 63, "{} d={dims}", kind.name());
+                }
+                assert!(lvl >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn window_contains_matches_range_semantics() {
+        assert!(window_contains(&[0.0, 0.0], &[1.0, 1.0], &[1.0, 0.0]));
+        assert!(!window_contains(&[0.0, 0.0], &[1.0, 1.0], &[1.0001, 0.5]));
+    }
+}

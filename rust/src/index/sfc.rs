@@ -1,11 +1,10 @@
 //! Order-sorted space-filling-curve index — the paper's first-listed
 //! application (search structures), as a queryable structure.
 //!
-//! [`SfcIndex`] quantizes each point onto a `side^d` grid, permutes the
-//! rows into their d-dimensional curve order
-//! ([`sfc_argsort`](crate::curves::ndim::sfc_argsort), Hilbert by
-//! default) and keeps the curve keys in a sorted column. Queries then
-//! work on contiguous memory:
+//! [`SfcIndex`] quantizes each point onto a `side^d` grid through the
+//! shared [`Quantizer`](super::quantize::Quantizer), permutes the rows
+//! into their d-dimensional curve order and keeps the curve keys in a
+//! sorted column. Queries then work on contiguous memory:
 //!
 //! * [`SfcIndex::query_window`] — decompose the window into contiguous
 //!   key ranges ([`CurveMapperNd::decompose_nd`]), binary-search each
@@ -15,34 +14,53 @@
 //!   fewest for Hilbert.
 //! * [`SfcIndex::query_point`] — one key lookup plus an equality filter.
 //! * [`SfcIndex::query_knn`] — expanding-window search with a bounded
-//!   max-heap: grow a centered window until the k-th best distance is
-//!   covered by the window radius (an L∞ window of radius `r` contains
-//!   every point within Euclidean distance `r`).
+//!   max-heap ([`knn`](super::knn)): grow a centered window until the
+//!   k-th best distance is covered by the window radius.
 //!
 //! Coarsening ([`coarsen_ranges`]) trades false-positive candidates for
 //! fewer ranges via the `max_ranges` knob on
 //! [`SfcIndex::query_window_stats`].
+//!
+//! Since the serving layer landed, `SfcIndex` is deliberately **thin**:
+//! it is the single-shard, single-segment, immutable special case of the
+//! machinery behind [`SfcStore`](super::SfcStore) — storage and range
+//! probing live in [`store::segment`](super::store::segment), the
+//! float→cell map in [`quantize`](super::quantize), and the kNN driver
+//! in [`knn`](super::knn). The mutable store shares every one of those
+//! pieces, so index and store can never drift apart.
 
 use crate::apps::Matrix;
-use crate::curves::engine::{coarsen_ranges, CurveMapperNd, DomainNd, WindowNd};
-use crate::curves::ndim::argsort_stable;
+use crate::curves::engine::{coarsen_ranges, CurveMapperNd, DomainNd};
 use crate::curves::CurveKind;
-use std::collections::BinaryHeap;
+use crate::index::knn::expanding_knn;
+use crate::index::quantize::{clamped_level, window_contains, Quantizer};
+use crate::index::store::segment::Segment;
 
-/// Statistics of one window query.
+/// Statistics of one window query (shared by [`SfcIndex`] and
+/// [`SfcStore`](super::SfcStore) — the store additionally fills the
+/// sharding counters).
 #[derive(Copy, Clone, Debug, Default)]
 pub struct QueryStats {
     /// Contiguous key ranges after decomposition (and coarsening).
     pub ranges: usize,
-    /// Candidate points scanned across all ranges.
+    /// Candidate entries scanned across all ranges (for the store this
+    /// includes tombstones and superseded versions).
     pub candidates: u64,
-    /// Points surviving the exact float filter.
+    /// Points surviving visibility resolution and the exact float
+    /// filter.
     pub results: u64,
+    /// Shards the planner routed ranges to (always 1 for the
+    /// single-shard [`SfcIndex`]).
+    pub shards_touched: usize,
+    /// Segments probed across those shards (always ≤ 1 for the
+    /// single-segment [`SfcIndex`]).
+    pub segments_probed: usize,
 }
 
 impl QueryStats {
-    /// Fraction of candidates surviving the exact filter (1.0 when the
-    /// decomposition produced no false positives).
+    /// Fraction of candidates surviving the exact filter. Guarded for
+    /// zero-candidate queries: an empty candidate set has no false
+    /// positives, so the ratio is defined as `1.0` (never `NaN`).
     pub fn filter_ratio(&self) -> f64 {
         if self.candidates == 0 {
             1.0
@@ -52,56 +70,17 @@ impl QueryStats {
     }
 }
 
-/// A k-nearest-neighbor candidate in the query's max-heap (ordered by
-/// distance, ties by id, via total order on the floats).
-#[derive(Copy, Clone, Debug)]
-struct Neighbor {
-    dist: f32,
-    id: u32,
-}
-
-impl PartialEq for Neighbor {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == std::cmp::Ordering::Equal
-    }
-}
-
-impl Eq for Neighbor {}
-
-impl PartialOrd for Neighbor {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Neighbor {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.dist
-            .total_cmp(&other.dist)
-            .then(self.id.cmp(&other.id))
-    }
-}
-
-/// Order-sorted curve index over an `n×d` point set.
+/// Order-sorted curve index over an `n×d` point set: one sorted
+/// [`Segment`] behind the shared quantize/probe/knn machinery.
 pub struct SfcIndex {
     kind: CurveKind,
     level: u32,
-    dims: usize,
-    /// Quantization cells per axis (the curve cube's side).
-    side: u32,
-    /// Per-axis minimum of the data (the quantization origin).
-    origin: Vec<f32>,
-    /// Per-axis quantization cell width (`0` for degenerate axes).
-    cell: Vec<f32>,
+    /// Shared float→cell map (quantization origin/widths/side).
+    quant: Quantizer,
     /// The d-dim curve the keys live on.
     mapper: Box<dyn CurveMapperNd>,
-    /// Sorted curve keys, one per point (the search column).
-    keys: Vec<u64>,
-    /// Key position → original row id (the curve-order permutation).
-    ids: Vec<u32>,
-    /// Point rows permuted into curve order (candidate scans read
-    /// contiguous memory).
-    points: Matrix,
+    /// The single sorted segment: keys, ids and permuted rows.
+    seg: Segment,
 }
 
 impl SfcIndex {
@@ -120,70 +99,31 @@ impl SfcIndex {
             dims <= if kind == CurveKind::Peano { 13 } else { 16 },
             "dims {dims} exceeds the curve's supported dimensionality"
         );
-        // Clamp the refinement so the order span fits u64 (the same caps
-        // the Nd mappers enforce).
-        let max_level = match kind {
-            CurveKind::Peano => (39 / dims as u32).min(20),
-            _ => (63 / dims as u32).min(31),
-        };
-        let level = level.clamp(1, max_level.max(1));
+        // Clamp the refinement so the order span fits u64 (the same
+        // shared rule the store uses).
+        let level = clamped_level(kind, dims, level);
         let mapper = kind.nd_mapper(dims, level);
         let side = match mapper.domain_nd() {
             DomainNd::HyperRect { shape } => shape[0],
             _ => unreachable!("nd_mapper domains are hyperrects"),
         };
-        let (origin, cell) = match super::axis_bounds(points, dims) {
-            Some((min, max)) => {
-                let cell = (0..dims)
-                    .map(|a| (max[a] - min[a]) / side as f32)
-                    .collect();
-                (min, cell)
-            }
-            None => (vec![0.0; dims], vec![0.0; dims]),
-        };
-        let mut index = SfcIndex {
-            kind,
-            level,
-            dims,
-            side,
-            origin,
-            cell,
-            mapper,
-            keys: Vec::new(),
-            ids: Vec::new(),
-            points: Matrix::zeros(0, dims),
-        };
-        if points.rows == 0 {
-            return index;
-        }
-        // Quantize every row, convert through the batched Nd path, and
-        // permute rows into curve order (stable argsort keeps ties in
-        // input order).
-        let mut flat = Vec::with_capacity(points.rows * dims);
-        for p in 0..points.rows {
-            for (a, &v) in points.row(p).iter().enumerate() {
-                flat.push(index.cell_of(v, a));
-            }
-        }
-        let mut keys = Vec::with_capacity(points.rows);
-        index.mapper.order_batch_nd(&flat, &mut keys);
-        let order = argsort_stable(&keys);
-        index.keys = order.iter().map(|&idx| keys[idx as usize]).collect();
-        index.points = Matrix::from_fn(points.rows, dims, |p, a| {
-            points.at(order[p] as usize, a)
-        });
-        index.ids = order;
-        index
+        let quant = Quantizer::from_points(points, dims, side);
+        // One unsorted run over all rows, then the stable key sort —
+        // exactly a store shard's flush, minus the LSM bookkeeping.
+        let ids: Vec<u32> = (0..points.rows as u32).collect();
+        let seg = Segment::from_rows(mapper.as_ref(), &quant, ids, points.clone(), false, 0)
+            .into_sorted();
+        SfcIndex { kind, level, quant, mapper, seg }
     }
 
     /// Number of indexed points.
     pub fn len(&self) -> usize {
-        self.keys.len()
+        self.seg.rows()
     }
 
     /// True when the index holds no points.
     pub fn is_empty(&self) -> bool {
-        self.keys.is_empty()
+        self.seg.rows() == 0
     }
 
     /// The curve the keys live on.
@@ -199,53 +139,24 @@ impl SfcIndex {
 
     /// Indexed dimensions (all point columns).
     pub fn dims(&self) -> usize {
-        self.dims
-    }
-
-    /// Quantized cell coordinate of value `v` on axis `a` (monotone in
-    /// `v` and clamped to the grid, which is what keeps window
-    /// decomposition conservative: a point inside a float window always
-    /// lands inside the quantized window).
-    #[inline]
-    fn cell_of(&self, v: f32, a: usize) -> u32 {
-        let c = self.cell[a];
-        if c <= 0.0 {
-            return 0;
-        }
-        let q = ((v - self.origin[a]) / c).floor();
-        if q < 0.0 {
-            0
-        } else if q >= self.side as f32 {
-            self.side - 1
-        } else {
-            q as u32
-        }
-    }
-
-    /// First key position with `keys[pos] >= key`.
-    #[inline]
-    fn lower_bound(&self, key: u64) -> usize {
-        self.keys.partition_point(|&k| k < key)
+        self.quant.dims()
     }
 
     /// All points exactly equal to `q` (`q.len() == dims`): one key
     /// lookup on the quantized cell plus an equality filter over the
     /// (contiguous) key run.
     pub fn query_point(&self, q: &[f32]) -> Vec<u32> {
-        assert_eq!(q.len(), self.dims, "query dims must match the index");
+        assert_eq!(q.len(), self.dims(), "query dims must match the index");
         if self.is_empty() {
             return Vec::new();
         }
-        let cell: Vec<u32> = q.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
-        let key = self.mapper.order_nd(&cell);
+        let key = self.quant.key_of(self.mapper.as_ref(), q);
         let mut out = Vec::new();
-        let mut pos = self.lower_bound(key);
-        while pos < self.keys.len() && self.keys[pos] == key {
-            if self.points.row(pos).iter().zip(q).all(|(&a, &b)| a == b) {
-                out.push(self.ids[pos]);
+        self.seg.probe_ranges(&[key..key + 1], |pos| {
+            if self.seg.row(pos) == q {
+                out.push(self.seg.ids[pos]);
             }
-            pos += 1;
-        }
+        });
         out
     }
 
@@ -265,7 +176,7 @@ impl SfcIndex {
         max_ranges: usize,
     ) -> (Vec<u32>, QueryStats) {
         let (positions, stats) = self.window_positions(lo, hi, max_ranges);
-        (positions.into_iter().map(|pos| self.ids[pos]).collect(), stats)
+        (positions.into_iter().map(|pos| self.seg.ids[pos]).collect(), stats)
     }
 
     /// Shared window-query core: sorted key positions (not ids) of the
@@ -277,86 +188,57 @@ impl SfcIndex {
         hi: &[f32],
         max_ranges: usize,
     ) -> (Vec<usize>, QueryStats) {
-        assert_eq!(lo.len(), self.dims, "query dims must match the index");
-        assert_eq!(hi.len(), self.dims, "query dims must match the index");
-        assert!(
-            lo.iter().zip(hi).all(|(a, b)| a <= b),
-            "window lo must be ≤ hi per axis"
-        );
+        assert_eq!(lo.len(), self.dims(), "query dims must match the index");
+        assert_eq!(hi.len(), self.dims(), "query dims must match the index");
         let mut stats = QueryStats::default();
         let mut out = Vec::new();
         if self.is_empty() {
             return (out, stats);
         }
-        let clo: Vec<u32> = lo.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
-        let chi: Vec<u32> = hi.iter().enumerate().map(|(a, &v)| self.cell_of(v, a)).collect();
-        let mut ranges = self.mapper.decompose_nd(&WindowNd::new(clo, chi));
+        let mut ranges = self.mapper.decompose_nd(&self.quant.window(lo, hi));
         coarsen_ranges(&mut ranges, max_ranges);
         stats.ranges = ranges.len();
-        for r in &ranges {
-            let mut pos = self.lower_bound(r.start);
-            while pos < self.keys.len() && self.keys[pos] < r.end {
-                stats.candidates += 1;
-                let row = self.points.row(pos);
-                if row
-                    .iter()
-                    .zip(lo.iter().zip(hi))
-                    .all(|(&v, (&l, &h))| (l..=h).contains(&v))
-                {
-                    out.push(pos);
-                    stats.results += 1;
-                }
-                pos += 1;
+        stats.shards_touched = 1;
+        stats.segments_probed = 1;
+        self.seg.probe_ranges(&ranges, |pos| {
+            stats.candidates += 1;
+            if window_contains(lo, hi, self.seg.row(pos)) {
+                out.push(pos);
+                stats.results += 1;
             }
-        }
+        });
         (out, stats)
     }
 
     /// The `k` nearest neighbors of `q` by Euclidean distance, sorted
     /// ascending as `(id, distance)` (fewer than `k` when the index is
-    /// smaller). Expanding-window search: a centered L∞ window of radius
-    /// `r` is complete for any answer distance `≤ r`, so the window
-    /// doubles until the heap's k-th distance is covered (or the data's
-    /// bounding box is).
+    /// smaller) — the shared expanding-window search over window
+    /// queries.
     pub fn query_knn(&self, q: &[f32], k: usize) -> Vec<(u32, f32)> {
-        assert_eq!(q.len(), self.dims, "query dims must match the index");
-        if self.is_empty() || k == 0 {
+        assert_eq!(q.len(), self.dims(), "query dims must match the index");
+        if self.is_empty() {
             return Vec::new();
         }
-        // Start at one quantization cell; degenerate (single-cell) data
-        // still needs a positive radius to make progress.
-        let mut r = self.cell.iter().cloned().fold(0.0f32, f32::max);
-        if r <= 0.0 {
-            r = 1e-6;
-        }
-        let mut lo = vec![0.0f32; self.dims];
-        let mut hi = vec![0.0f32; self.dims];
-        loop {
-            for a in 0..self.dims {
-                lo[a] = q[a] - r;
-                hi[a] = q[a] + r;
-            }
-            let mut heap: BinaryHeap<Neighbor> = BinaryHeap::with_capacity(k + 1);
-            for pos in self.window_positions(&lo, &hi, 0).0 {
-                let row = self.points.row(pos);
-                let dist2: f32 = row.iter().zip(q).map(|(&a, &b)| (a - b) * (a - b)).sum();
-                heap.push(Neighbor { dist: dist2.sqrt(), id: self.ids[pos] });
-                if heap.len() > k {
-                    heap.pop();
+        let side = self.quant.side() as f32;
+        let cover_hi: Vec<f32> = self
+            .quant
+            .origin()
+            .iter()
+            .zip(self.quant.cell_widths())
+            .map(|(&o, &c)| o + c * side)
+            .collect();
+        expanding_knn(
+            q,
+            k,
+            self.quant.max_cell_width(),
+            self.quant.origin(),
+            &cover_hi,
+            |lo, hi, emit| {
+                for pos in self.window_positions(lo, hi, 0).0 {
+                    emit(self.seg.ids[pos], self.seg.row(pos));
                 }
-            }
-            let covers = (0..self.dims).all(|a| {
-                lo[a] <= self.origin[a]
-                    && hi[a] >= self.origin[a] + self.cell[a] * self.side as f32
-            });
-            let done = heap.len() == k && heap.peek().map(|n| n.dist <= r).unwrap_or(false);
-            if covers || done {
-                let mut best = heap.into_vec();
-                best.sort();
-                return best.into_iter().map(|n| (n.id, n.dist)).collect();
-            }
-            r *= 2.0;
-        }
+            },
+        )
     }
 }
 
@@ -367,13 +249,7 @@ mod tests {
 
     fn brute_window(points: &Matrix, lo: &[f32], hi: &[f32]) -> Vec<u32> {
         (0..points.rows as u32)
-            .filter(|&p| {
-                points
-                    .row(p as usize)
-                    .iter()
-                    .zip(lo.iter().zip(hi))
-                    .all(|(&v, (&l, &h))| (l..=h).contains(&v))
-            })
+            .filter(|&p| window_contains(lo, hi, points.row(p as usize)))
             .collect()
     }
 
@@ -505,5 +381,36 @@ mod tests {
         let index = SfcIndex::build(&points, 31);
         assert!(index.level() * 8 <= 63);
         assert!(!index.query_window(&[0.0; 8], &[1.0; 8]).is_empty());
+    }
+
+    #[test]
+    fn filter_ratio_guards_zero_candidates() {
+        // The zero-candidate guard: a miss returns 1.0, never NaN.
+        let stats = QueryStats::default();
+        assert_eq!(stats.filter_ratio(), 1.0);
+        assert!(!stats.filter_ratio().is_nan());
+        // End to end: a window far outside the data produces zero
+        // candidates and a well-defined ratio.
+        let points = Matrix::random(50, 2, 51, 0.0, 1.0);
+        let index = SfcIndex::build(&points, 5);
+        let (hits, s) = index.query_window_stats(&[500.0, 500.0], &[501.0, 501.0], 0);
+        assert!(hits.is_empty());
+        if s.candidates == 0 {
+            assert_eq!(s.filter_ratio(), 1.0);
+        }
+        assert!(!s.filter_ratio().is_nan());
+        // Non-trivial queries report ratios in (0, 1].
+        let (_, s) = index.query_window_stats(&[0.0, 0.0], &[1.0, 1.0], 0);
+        assert!(s.filter_ratio() > 0.0 && s.filter_ratio() <= 1.0);
+        assert_eq!(s.shards_touched, 1);
+        assert_eq!(s.segments_probed, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "lo must be ≤ hi")]
+    fn stats_window_asserts_on_inverted_corners() {
+        let points = Matrix::random(10, 2, 1, 0.0, 1.0);
+        let index = SfcIndex::build(&points, 4);
+        let _ = index.query_window(&[1.0, 0.0], &[0.0, 1.0]);
     }
 }

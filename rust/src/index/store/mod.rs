@@ -1,0 +1,840 @@
+//! `SfcStore` — a sharded, **mutable**, concurrently-readable SFC store.
+//!
+//! The serving-layer composition of the query subsystem: points live in
+//! curve-key-sorted segments ([`segment`]) stacked per shard in an
+//! LSM-flavored hierarchy ([`shard`]: unsorted write buffer → sorted
+//! runs in geometric size tiers; deletes are tombstones; `compact()`
+//! does the full merge), the curve key space is split into contiguous
+//! **curve-order shards** (equi-depth from the build sample,
+//! rebalanceable), and every query is planned by [`planner`]: decompose
+//! the window once, cut the ranges at the shard fenceposts, probe
+//! exactly the shards the window intersects.
+//!
+//! ## Epoch/snapshot reads
+//!
+//! Readers never block on ingest: a query grabs an [`Arc<Snapshot>`]
+//! (the published segment lists of every shard) and runs entirely on
+//! immutable data — writers build new segment lists off to the side and
+//! swap the published `Arc` under a briefly-held mutex. A snapshot taken
+//! before a batch of inserts never sees them (snapshot isolation), and
+//! compaction swaps merged segments in without disturbing in-flight
+//! queries, which keep their old `Arc`s alive until they finish.
+//!
+//! ## Visibility
+//!
+//! Every mutation carries a global sequence number; an entry is visible
+//! when it holds the **maximum sequence for its id** among the entries a
+//! query's ranges reach, and that winner is not a tombstone. Inserts and
+//! the tombstone that deletes them share a curve key (deletes pass the
+//! inserted point), so a range that sees one always sees the other.
+//! Results are exact for the same reason [`SfcIndex`] is: candidates
+//! pass the shared float filter ([`quantize::window_contains`]) before
+//! they are returned.
+
+pub(crate) mod segment;
+pub mod planner;
+pub(crate) mod shard;
+
+use crate::apps::Matrix;
+use crate::curves::engine::{CurveMapperNd, DomainNd};
+use crate::curves::CurveKind;
+use crate::index::knn::expanding_knn;
+use crate::index::quantize::{clamped_level, window_contains, Quantizer};
+use crate::index::QueryStats;
+use planner::{plan_window, QueryPlan, ShardProbe};
+use segment::Segment;
+use shard::ShardState;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Tuning knobs of an [`SfcStore`].
+#[derive(Copy, Clone, Debug)]
+pub struct StoreConfig {
+    /// Contiguous curve-order shards (each an independent segment
+    /// stack). Default 8.
+    pub shards: usize,
+    /// Write-buffer row budget per shard before a flush. Default 256.
+    pub buffer_rows: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { shards: 8, buffer_rows: 256 }
+    }
+}
+
+/// An immutable read epoch: the published segment lists of every shard
+/// plus the shard fenceposts they were routed under. Queries planned
+/// against a snapshot see exactly the mutations sequenced before it —
+/// never writes that landed after ([`SfcStore::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Shard fenceposts on the curve-order axis (`shards + 1` entries).
+    bounds: Vec<u64>,
+    /// Per-shard segment lists (runs then write-buffer mini-runs).
+    shards: Vec<Arc<Vec<Arc<Segment>>>>,
+    /// Running bounding box of every row ever written (inserts and
+    /// tombstones; never shrinks — the kNN cover test needs a box that
+    /// contains every live point).
+    data_lo: Vec<f32>,
+    data_hi: Vec<f32>,
+    /// Total entries across all segments (tombstones included).
+    entries: u64,
+}
+
+impl Snapshot {
+    /// Total entries (tombstones and superseded versions included).
+    pub fn entries(&self) -> u64 {
+        self.entries
+    }
+
+    /// Shard fenceposts on the curve-order axis.
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Entries per shard (tombstones included).
+    pub fn shard_entry_counts(&self) -> Vec<usize> {
+        self.shards
+            .iter()
+            .map(|segs| segs.iter().map(|s| s.rows()).sum())
+            .collect()
+    }
+
+    /// Segments per shard.
+    pub fn shard_segment_counts(&self) -> Vec<usize> {
+        self.shards.iter().map(|segs| segs.len()).collect()
+    }
+
+    fn recount(&mut self) {
+        self.entries = self
+            .shards
+            .iter()
+            .flat_map(|segs| segs.iter())
+            .map(|s| s.rows() as u64)
+            .sum();
+    }
+}
+
+/// A visible candidate during resolution: the winning entry for an id.
+#[derive(Copy, Clone)]
+struct Hit {
+    seq: u64,
+    tomb: bool,
+    shard: u32,
+    seg: u32,
+    pos: u32,
+}
+
+/// Shard index owning `key` under the fenceposts `bounds`.
+fn shard_of(bounds: &[u64], key: u64) -> usize {
+    let slots = bounds.len() - 1;
+    bounds[1..slots].partition_point(|&b| b <= key)
+}
+
+/// Sharded, mutable, concurrently-readable SFC store over `n×d` float
+/// rows (see the [module docs](self) for the segment/shard/epoch
+/// design).
+pub struct SfcStore {
+    kind: CurveKind,
+    level: u32,
+    dims: usize,
+    quant: Quantizer,
+    mapper: Box<dyn CurveMapperNd>,
+    span: u64,
+    buffer_rows: usize,
+    /// Shard fenceposts; writers hold the read half across routing +
+    /// append so a rebalance (write half) can never re-cut the key space
+    /// under a half-routed batch.
+    routing: RwLock<Vec<u64>>,
+    /// Per-shard writer locks over the mutable segment stacks.
+    shards: Vec<Mutex<ShardState>>,
+    /// The published read epoch (see [`Snapshot`]).
+    published: Mutex<Arc<Snapshot>>,
+    next_seq: AtomicU64,
+    next_id: AtomicU32,
+}
+
+impl SfcStore {
+    /// Store over `dims`-column rows quantized to `2^level` cells per
+    /// axis across the box `[origin, max]`, with equal-width shard
+    /// fenceposts. Points outside the box clamp to the edge cells (the
+    /// same conservative map queries use), so the store accepts any row.
+    pub fn new(
+        dims: usize,
+        level: u32,
+        kind: CurveKind,
+        origin: Vec<f32>,
+        max: &[f32],
+        cfg: StoreConfig,
+    ) -> Self {
+        assert!(dims >= 1, "store needs at least one dimension");
+        assert!(cfg.shards >= 1, "store needs at least one shard");
+        let level = clamped_level(kind, dims, level);
+        let mapper = kind.nd_mapper(dims, level);
+        let side = match mapper.domain_nd() {
+            DomainNd::HyperRect { shape } => shape[0],
+            _ => unreachable!("nd_mapper domains are hyperrects"),
+        };
+        let span = mapper.order_span_nd().expect("nd_mapper spans are finite");
+        let quant = Quantizer::from_bounds(origin, max, side);
+        // Equal-width fenceposts (the empty-sample equi-depth fallback);
+        // `from_points` replaces these with data-driven ones.
+        let shards = cfg.shards.min(span.max(1) as usize);
+        let bounds = equi_depth_bounds(&[], shards, span);
+        let snapshot = Snapshot {
+            bounds: bounds.clone(),
+            shards: (0..shards).map(|_| Arc::new(Vec::new())).collect(),
+            data_lo: vec![f32::INFINITY; dims],
+            data_hi: vec![f32::NEG_INFINITY; dims],
+            entries: 0,
+        };
+        SfcStore {
+            kind,
+            level,
+            dims,
+            quant,
+            mapper,
+            span,
+            buffer_rows: cfg.buffer_rows.max(1),
+            routing: RwLock::new(bounds),
+            shards: (0..shards).map(|_| Mutex::new(ShardState::default())).collect(),
+            published: Mutex::new(Arc::new(snapshot)),
+            next_seq: AtomicU64::new(1),
+            next_id: AtomicU32::new(0),
+        }
+    }
+
+    /// Build a store from an initial point set: quantization bounds from
+    /// the data, **equi-depth** shard fenceposts from the points' curve
+    /// keys, then a bulk ingest (ids `0..rows`).
+    pub fn from_points(points: &Matrix, level: u32, kind: CurveKind, cfg: StoreConfig) -> Self {
+        let dims = points.cols;
+        let (origin, max) = match crate::index::axis_bounds(points, dims.max(1)) {
+            Some(b) => b,
+            None => (vec![0.0; dims], vec![0.0; dims]),
+        };
+        let store = Self::new(dims, level, kind, origin, &max, cfg);
+        if points.rows > 0 {
+            // Equi-depth fenceposts from the full key sample.
+            let mut flat = Vec::with_capacity(points.rows * dims);
+            for p in 0..points.rows {
+                store.quant.cells_into(points.row(p), &mut flat);
+            }
+            let mut keys = Vec::with_capacity(points.rows);
+            store.mapper.order_batch_nd(&flat, &mut keys);
+            keys.sort_unstable();
+            let bounds = equi_depth_bounds(&keys, store.shards.len(), store.span);
+            *store.routing.write().expect("store lock poisoned") = bounds.clone();
+            {
+                let mut g = store.published.lock().expect("store lock poisoned");
+                let mut snap = (**g).clone();
+                snap.bounds = bounds;
+                *g = Arc::new(snap);
+            }
+            store.insert_batch(points);
+        }
+        store
+    }
+
+    /// The curve the keys live on.
+    pub fn curve(&self) -> CurveKind {
+        self.kind
+    }
+
+    /// Quantization level actually used (clamped like
+    /// [`SfcIndex`](crate::index::SfcIndex)).
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Row dimensionality.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Number of curve-order shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The store's quantizer (shared float→cell map).
+    pub fn quantizer(&self) -> &Quantizer {
+        &self.quant
+    }
+
+    // ------------------------------------------------------------------
+    // Mutation
+    // ------------------------------------------------------------------
+
+    /// Insert one row, returning its assigned id.
+    pub fn insert(&self, point: &[f32]) -> u32 {
+        assert_eq!(point.len(), self.dims, "row dims must match the store");
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let m = Matrix { rows: 1, cols: self.dims, data: point.to_vec() };
+        self.apply(vec![id], m, false);
+        id
+    }
+
+    /// Insert a batch of rows; ids are assigned sequentially and the
+    /// first one is returned.
+    pub fn insert_batch(&self, rows: &Matrix) -> u32 {
+        assert_eq!(rows.cols, self.dims, "row dims must match the store");
+        let n = rows.rows as u32;
+        let first = self.next_id.fetch_add(n, Ordering::Relaxed);
+        if n == 0 {
+            return first;
+        }
+        self.apply((first..first + n).collect(), rows.clone(), false);
+        first
+    }
+
+    /// Delete the point `id` by writing a tombstone. `point` must be the
+    /// row that was inserted under `id` — the tombstone takes its curve
+    /// key from it, which is what guarantees any range probe that can
+    /// see the insert also sees the delete.
+    pub fn delete(&self, id: u32, point: &[f32]) {
+        assert_eq!(point.len(), self.dims, "row dims must match the store");
+        let m = Matrix { rows: 1, cols: self.dims, data: point.to_vec() };
+        self.apply(vec![id], m, true);
+    }
+
+    /// Route a batch to shards and append per-shard mini-runs, then
+    /// publish the new epoch.
+    fn apply(&self, ids: Vec<u32>, points: Matrix, tomb: bool) {
+        let n = points.rows;
+        let seq0 = self.next_seq.fetch_add(n as u64, Ordering::Relaxed);
+        // Hold routing (read) across the whole append so a concurrent
+        // rebalance cannot re-cut the key space under this batch.
+        let routing = self.routing.read().expect("store lock poisoned");
+        let mut flat = Vec::with_capacity(n * self.dims);
+        for p in 0..n {
+            self.quant.cells_into(points.row(p), &mut flat);
+        }
+        let mut keys = Vec::with_capacity(n);
+        self.mapper.order_batch_nd(&flat, &mut keys);
+        // Partition rows by shard (preserving order, so per-shard seqs
+        // stay ascending).
+        let mut groups: HashMap<usize, (Vec<u32>, Matrix, Vec<u64>)> = HashMap::new();
+        for p in 0..n {
+            let s = shard_of(&routing, keys[p]);
+            let g = groups
+                .entry(s)
+                .or_insert_with(|| (Vec::new(), Matrix::zeros(0, self.dims), Vec::new()));
+            g.0.push(ids[p]);
+            g.1.data.extend_from_slice(points.row(p));
+            g.1.rows += 1;
+            g.2.push(seq0 + p as u64);
+        }
+        let mut touched: Vec<usize> = groups.keys().copied().collect();
+        touched.sort_unstable();
+        for s in touched {
+            let (gids, grows, gseqs) = groups.remove(&s).expect("key from keys()");
+            let mut seg =
+                Segment::from_rows(self.mapper.as_ref(), &self.quant, gids, grows, tomb, 0);
+            seg.seqs = gseqs;
+            // Publish while the shard writer lock is still held (lock
+            // order shard → published, same as rebalance): releasing it
+            // first would let a faster sibling writer publish a newer
+            // list that this one then clobbers with a stale epoch.
+            let mut state = self.shards[s].lock().expect("store lock poisoned");
+            state.append(seg, self.buffer_rows, self.dims);
+            self.publish_shard(s, state.segments(), Some(&points));
+        }
+    }
+
+    /// Swap shard `s`'s segment list into the published epoch (and grow
+    /// the data bounding box by `batch`, if any). The entry count
+    /// updates by delta — only the replaced shard's segments are
+    /// walked, not the whole store.
+    fn publish_shard(&self, s: usize, segs: Vec<Arc<Segment>>, batch: Option<&Matrix>) {
+        let mut g = self.published.lock().expect("store lock poisoned");
+        let mut snap = (**g).clone();
+        let old: u64 = snap.shards[s].iter().map(|seg| seg.rows() as u64).sum();
+        let new: u64 = segs.iter().map(|seg| seg.rows() as u64).sum();
+        snap.shards[s] = Arc::new(segs);
+        snap.entries = snap.entries - old + new;
+        if let Some(batch) = batch {
+            for p in 0..batch.rows {
+                for (a, &v) in batch.row(p).iter().enumerate() {
+                    snap.data_lo[a] = snap.data_lo[a].min(v);
+                    snap.data_hi[a] = snap.data_hi[a].max(v);
+                }
+            }
+        }
+        *g = Arc::new(snap);
+    }
+
+    /// Flush every shard's write buffer into sorted runs.
+    pub fn flush(&self) {
+        let _routing = self.routing.read().expect("store lock poisoned");
+        for s in 0..self.shards.len() {
+            let mut state = self.shards[s].lock().expect("store lock poisoned");
+            state.flush(self.dims);
+            self.publish_shard(s, state.segments(), None);
+        }
+    }
+
+    /// Fully compact every shard: one sorted, tombstone-free run each.
+    /// In-flight queries keep their pre-compaction snapshots alive and
+    /// are unaffected.
+    pub fn compact(&self) {
+        let _routing = self.routing.read().expect("store lock poisoned");
+        for s in 0..self.shards.len() {
+            let mut state = self.shards[s].lock().expect("store lock poisoned");
+            state.compact(self.dims);
+            self.publish_shard(s, state.segments(), None);
+        }
+    }
+
+    /// Re-cut the shard fenceposts **equi-depth** over the live keys and
+    /// redistribute every entry. Exclusive with writers (takes the
+    /// routing write lock); readers keep their old snapshots.
+    pub fn rebalance(&self) {
+        let mut routing = self.routing.write().expect("store lock poisoned");
+        let mut guards: Vec<_> = self
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("store lock poisoned"))
+            .collect();
+        // Full-merge everything into one resolved, tombstone-free run.
+        let all: Vec<Arc<Segment>> = guards.iter().flat_map(|g| g.segments()).collect();
+        let refs: Vec<&Segment> = all.iter().map(|s| s.as_ref()).collect();
+        let merged = Segment::merge(&refs, true, self.dims);
+        let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
+        // Cut the merged run at the new fenceposts.
+        let mut per_shard: Vec<Vec<Arc<Segment>>> = Vec::with_capacity(self.shards.len());
+        let mut start = 0usize;
+        for s in 0..self.shards.len() {
+            let end = merged.keys.partition_point(|&k| k < bounds[s + 1]);
+            if end > start {
+                let slice = Segment {
+                    keys: merged.keys[start..end].to_vec(),
+                    ids: merged.ids[start..end].to_vec(),
+                    seqs: merged.seqs[start..end].to_vec(),
+                    tombs: merged.tombs[start..end].to_vec(),
+                    points: Matrix {
+                        rows: end - start,
+                        cols: self.dims,
+                        data: merged.points.data[start * self.dims..end * self.dims].to_vec(),
+                    },
+                    sorted: true,
+                };
+                per_shard.push(vec![Arc::new(slice)]);
+            } else {
+                per_shard.push(Vec::new());
+            }
+            start = end;
+        }
+        for (g, segs) in guards.iter_mut().zip(&per_shard) {
+            g.minis.clear();
+            g.mini_rows = 0;
+            g.runs = segs.clone();
+        }
+        *routing = bounds.clone();
+        let mut g = self.published.lock().expect("store lock poisoned");
+        let mut snap = (**g).clone();
+        snap.bounds = bounds;
+        snap.shards = per_shard.into_iter().map(Arc::new).collect();
+        snap.recount();
+        *g = Arc::new(snap);
+    }
+
+    // ------------------------------------------------------------------
+    // Reads
+    // ------------------------------------------------------------------
+
+    /// The current read epoch. All `*_on` queries against it see exactly
+    /// the state at this call — later mutations are invisible.
+    pub fn snapshot(&self) -> Arc<Snapshot> {
+        Arc::clone(&self.published.lock().expect("store lock poisoned"))
+    }
+
+    /// Live point count (resolves visibility; `O(entries)`).
+    pub fn len(&self) -> usize {
+        self.collect_live(&self.snapshot()).0.len()
+    }
+
+    /// True when no live points exist.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Plan a window query against a snapshot (decompose once, coarsen,
+    /// route to shards).
+    pub fn plan_window(
+        &self,
+        snap: &Snapshot,
+        lo: &[f32],
+        hi: &[f32],
+        max_ranges: usize,
+    ) -> QueryPlan {
+        plan_window(self.mapper.as_ref(), &self.quant, &snap.bounds, lo, hi, max_ranges)
+    }
+
+    /// Probe one shard's segment stack, resolving per-id winners within
+    /// the shard. Returns `(winners, candidates, segments_probed)`.
+    fn probe_shard(snap: &Snapshot, probe: &ShardProbe) -> (Vec<(u32, Hit)>, u64, usize) {
+        let segs = &snap.shards[probe.shard];
+        let mut best: HashMap<u32, Hit> = HashMap::new();
+        let mut candidates = 0u64;
+        for (si, seg) in segs.iter().enumerate() {
+            seg.probe_ranges(&probe.ranges, |pos| {
+                candidates += 1;
+                let hit = Hit {
+                    seq: seg.seqs[pos],
+                    tomb: seg.tombs[pos],
+                    shard: probe.shard as u32,
+                    seg: si as u32,
+                    pos: pos as u32,
+                };
+                best.entry(seg.ids[pos])
+                    .and_modify(|b| {
+                        if hit.seq > b.seq {
+                            *b = hit;
+                        }
+                    })
+                    .or_insert(hit);
+            });
+        }
+        (best.into_iter().collect(), candidates, segs.len())
+    }
+
+    /// Merge per-shard winners (max seq per id across shards), drop
+    /// tombstoned ids, and return the survivors sorted in curve order
+    /// (shard, key, id).
+    fn resolve(snap: &Snapshot, shard_hits: Vec<Vec<(u32, Hit)>>) -> Vec<(u32, Hit)> {
+        let mut best: HashMap<u32, Hit> = HashMap::new();
+        for hits in shard_hits {
+            for (id, hit) in hits {
+                best.entry(id)
+                    .and_modify(|b| {
+                        if hit.seq > b.seq {
+                            *b = hit;
+                        }
+                    })
+                    .or_insert(hit);
+            }
+        }
+        let mut live: Vec<(u32, Hit)> = best.into_iter().filter(|(_, h)| !h.tomb).collect();
+        live.sort_unstable_by_key(|&(id, h)| {
+            let seg = &snap.shards[h.shard as usize][h.seg as usize];
+            (h.shard, seg.keys[h.pos as usize], id)
+        });
+        live
+    }
+
+    /// Shared tail of every window plan execution: fold the per-shard
+    /// probe outputs into the stats, resolve visibility across shards,
+    /// and exact-filter the winners. Returns live ids in curve order.
+    fn finish_plan(
+        snap: &Snapshot,
+        plan: &QueryPlan,
+        shard_hits: Vec<(Vec<(u32, Hit)>, u64, usize)>,
+        stats: &mut QueryStats,
+        mut filter: impl FnMut(u32, &[f32]) -> bool,
+    ) -> Vec<u32> {
+        stats.ranges = plan.ranges.len();
+        stats.shards_touched = plan.probes.len();
+        let mut hits = Vec::with_capacity(shard_hits.len());
+        for (h, cands, segs) in shard_hits {
+            stats.candidates += cands;
+            stats.segments_probed += segs;
+            hits.push(h);
+        }
+        let mut out = Vec::new();
+        for (id, h) in Self::resolve(snap, hits) {
+            let seg = &snap.shards[h.shard as usize][h.seg as usize];
+            if filter(id, seg.row(h.pos as usize)) {
+                out.push(id);
+                stats.results += 1;
+            }
+        }
+        out
+    }
+
+    /// Execute a plan against a snapshot serially: probe each shard,
+    /// then [`SfcStore::finish_plan`].
+    fn run_plan(
+        snap: &Snapshot,
+        plan: &QueryPlan,
+        stats: &mut QueryStats,
+        filter: impl FnMut(u32, &[f32]) -> bool,
+    ) -> Vec<u32> {
+        let shard_hits = plan.probes.iter().map(|p| Self::probe_shard(snap, p)).collect();
+        Self::finish_plan(snap, plan, shard_hits, stats, filter)
+    }
+
+    /// Ids of all live points inside the closed float window `[lo, hi]`
+    /// on the given snapshot.
+    pub fn query_window_on(&self, snap: &Snapshot, lo: &[f32], hi: &[f32]) -> Vec<u32> {
+        self.query_window_stats_on(snap, lo, hi, 0).0
+    }
+
+    /// [`SfcStore::query_window_on`] with statistics and a `max_ranges`
+    /// coarsening cap (`0` = exact decomposition).
+    pub fn query_window_stats_on(
+        &self,
+        snap: &Snapshot,
+        lo: &[f32],
+        hi: &[f32],
+        max_ranges: usize,
+    ) -> (Vec<u32>, QueryStats) {
+        let mut stats = QueryStats::default();
+        let plan = self.plan_window(snap, lo, hi, max_ranges);
+        let out = Self::run_plan(snap, &plan, &mut stats, |_, row| window_contains(lo, hi, row));
+        (out, stats)
+    }
+
+    /// Window query on the current epoch.
+    pub fn query_window(&self, lo: &[f32], hi: &[f32]) -> Vec<u32> {
+        self.query_window_on(&self.snapshot(), lo, hi)
+    }
+
+    /// [`SfcStore::query_window`] with statistics.
+    pub fn query_window_stats(
+        &self,
+        lo: &[f32],
+        hi: &[f32],
+        max_ranges: usize,
+    ) -> (Vec<u32>, QueryStats) {
+        self.query_window_stats_on(&self.snapshot(), lo, hi, max_ranges)
+    }
+
+    /// All live points exactly equal to `q` on the given snapshot (one
+    /// key lookup plus the shared equality filter).
+    pub fn query_point_on(&self, snap: &Snapshot, q: &[f32]) -> Vec<u32> {
+        assert_eq!(q.len(), self.dims, "query dims must match the store");
+        let key = self.quant.key_of(self.mapper.as_ref(), q);
+        let plan = planner::plan_ranges(vec![key..key + 1], &snap.bounds);
+        let mut stats = QueryStats::default();
+        Self::run_plan(snap, &plan, &mut stats, |_, row| row == q)
+    }
+
+    /// Point query on the current epoch.
+    pub fn query_point(&self, q: &[f32]) -> Vec<u32> {
+        self.query_point_on(&self.snapshot(), q)
+    }
+
+    /// The `k` nearest live neighbors of `q` by Euclidean distance,
+    /// sorted ascending as `(id, distance)` — the shared
+    /// expanding-window search over snapshot window queries.
+    pub fn query_knn_on(&self, snap: &Snapshot, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        assert_eq!(q.len(), self.dims, "query dims must match the store");
+        if snap.entries == 0 || k == 0 {
+            return Vec::new();
+        }
+        expanding_knn(
+            q,
+            k,
+            self.quant.max_cell_width(),
+            &snap.data_lo,
+            &snap.data_hi,
+            |lo, hi, emit| {
+                let plan = self.plan_window(snap, lo, hi, 0);
+                let mut stats = QueryStats::default();
+                Self::run_plan(snap, &plan, &mut stats, |id, row| {
+                    if window_contains(lo, hi, row) {
+                        emit(id, row);
+                    }
+                    false
+                });
+            },
+        )
+    }
+
+    /// kNN query on the current epoch.
+    pub fn query_knn(&self, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        self.query_knn_on(&self.snapshot(), q, k)
+    }
+
+    /// Window query with the **per-shard probes fanned across the
+    /// coordinator's workers** ([`Coordinator::par_map`] over the plan's
+    /// probe list): each worker binary-searches one shard's segment
+    /// stack, and the per-shard winners merge on the calling thread —
+    /// the serving path for large windows on many-shard stores.
+    pub fn par_query_window(
+        &self,
+        coord: &crate::coordinator::Coordinator,
+        lo: &[f32],
+        hi: &[f32],
+        max_ranges: usize,
+    ) -> (Vec<u32>, QueryStats) {
+        let snap = self.snapshot();
+        let mut stats = QueryStats::default();
+        let plan = self.plan_window(&snap, lo, hi, max_ranges);
+        let shard_hits = coord.par_map(&plan.probes, |_, probe| Self::probe_shard(&snap, probe));
+        let out = Self::finish_plan(&snap, &plan, shard_hits, &mut stats, |_, row| {
+            window_contains(lo, hi, row)
+        });
+        (out, stats)
+    }
+
+    /// Materialize the live point set of a snapshot in **curve order**:
+    /// `(ids, rows)` with `rows.row(i)` the point of `ids[i]`. This is
+    /// the store's full-scan face — the streaming k-means refinement
+    /// feeds its coordinator shards from it, and the parity tests
+    /// rebuild a fresh [`SfcIndex`](crate::index::SfcIndex) over it.
+    pub fn collect_live(&self, snap: &Snapshot) -> (Vec<u32>, Matrix) {
+        let mut best: HashMap<u32, Hit> = HashMap::new();
+        for (s, segs) in snap.shards.iter().enumerate() {
+            for (si, seg) in segs.iter().enumerate() {
+                for pos in 0..seg.rows() {
+                    let hit = Hit {
+                        seq: seg.seqs[pos],
+                        tomb: seg.tombs[pos],
+                        shard: s as u32,
+                        seg: si as u32,
+                        pos: pos as u32,
+                    };
+                    best.entry(seg.ids[pos])
+                        .and_modify(|b| {
+                            if hit.seq > b.seq {
+                                *b = hit;
+                            }
+                        })
+                        .or_insert(hit);
+                }
+            }
+        }
+        let mut live: Vec<(u64, u32, Hit)> = best
+            .into_iter()
+            .filter(|(_, h)| !h.tomb)
+            .map(|(id, h)| {
+                let seg = &snap.shards[h.shard as usize][h.seg as usize];
+                (seg.keys[h.pos as usize], id, h)
+            })
+            .collect();
+        // (key, id) is the curve order; the shard index is implied by
+        // the key, so a global key sort crosses shards correctly.
+        live.sort_unstable_by_key(|&(key, id, _)| (key, id));
+        let mut ids = Vec::with_capacity(live.len());
+        let mut rows = Matrix::zeros(0, self.dims);
+        for (_, id, h) in live {
+            ids.push(id);
+            let seg = &snap.shards[h.shard as usize][h.seg as usize];
+            rows.data.extend_from_slice(seg.row(h.pos as usize));
+            rows.rows += 1;
+        }
+        (ids, rows)
+    }
+}
+
+/// Equi-depth fenceposts over a **sorted** key sample: `shards + 1`
+/// non-decreasing bounds from 0 to `span`, cutting the sample into
+/// near-equal slices (empty shards are legal when keys repeat).
+fn equi_depth_bounds(sorted_keys: &[u64], shards: usize, span: u64) -> Vec<u64> {
+    if sorted_keys.is_empty() {
+        // Nothing to sample: fall back to equal-width fenceposts.
+        let s = shards as u64;
+        return (0..=s).map(|j| j * (span / s) + j.min(span % s)).collect();
+    }
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0);
+    for j in 1..shards {
+        let q = sorted_keys[(j * sorted_keys.len()) / shards];
+        bounds.push(q.max(*bounds.last().expect("non-empty")));
+    }
+    bounds.push(span);
+    // Fenceposts must not exceed span (keys are < span by construction,
+    // but stay defensive).
+    for b in bounds.iter_mut() {
+        *b = (*b).min(span);
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::simjoin::make_clustered;
+
+    #[test]
+    fn equi_depth_bounds_are_monotone_and_cover() {
+        let keys: Vec<u64> = (0..100).map(|i| i * i % 4096).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        let b = equi_depth_bounds(&sorted, 8, 4096);
+        assert_eq!(b.len(), 9);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[8], 4096);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn insert_query_roundtrip_with_sharding() {
+        let points = make_clustered(500, 2, 10, 1.0, 3);
+        let store = SfcStore::from_points(&points, 6, CurveKind::Hilbert, StoreConfig::default());
+        assert_eq!(store.len(), 500);
+        // Every point findable by exact lookup under its assigned id
+        // (ids are 0..n in insert order).
+        for p in [0usize, 123, 499] {
+            let got = store.query_point(points.row(p));
+            assert!(got.contains(&(p as u32)), "row {p}");
+        }
+    }
+
+    #[test]
+    fn delete_then_compact_removes_rows() {
+        let points = make_clustered(200, 3, 5, 0.8, 9);
+        let store = SfcStore::from_points(&points, 5, CurveKind::Hilbert, StoreConfig::default());
+        for p in 0..100usize {
+            store.delete(p as u32, points.row(p));
+        }
+        assert_eq!(store.len(), 100);
+        let before: u64 = store.snapshot().entries();
+        store.compact();
+        let after = store.snapshot().entries();
+        assert!(after < before, "compaction must shrink entries ({before} -> {after})");
+        assert_eq!(store.len(), 100);
+        for p in 0..100usize {
+            assert!(store.query_point(points.row(p)).iter().all(|&id| id != p as u32));
+        }
+    }
+
+    #[test]
+    fn rebalance_preserves_the_live_set() {
+        let points = make_clustered(400, 2, 40, 2.0, 21);
+        let store = SfcStore::from_points(
+            &points,
+            6,
+            CurveKind::Hilbert,
+            StoreConfig { shards: 4, buffer_rows: 64 },
+        );
+        for p in 0..50usize {
+            store.delete(p as u32, points.row(p));
+        }
+        let (ids_before, rows_before) = store.collect_live(&store.snapshot());
+        assert_eq!(ids_before.len(), 350);
+        store.rebalance();
+        let (ids_after, rows_after) = store.collect_live(&store.snapshot());
+        assert_eq!(ids_before, ids_after);
+        assert_eq!(rows_before.data, rows_after.data);
+        // After rebalancing no tombstones remain and no shard hoards
+        // more than half the entries (equi-depth, up to key ties).
+        let snap = store.snapshot();
+        assert_eq!(snap.entries(), 350);
+        let depths = snap.shard_entry_counts();
+        assert!(*depths.iter().max().unwrap() <= 175, "equi-depth shards, got {depths:?}");
+    }
+
+    #[test]
+    fn snapshot_does_not_see_later_writes() {
+        let store = SfcStore::new(
+            2,
+            5,
+            CurveKind::Hilbert,
+            vec![0.0, 0.0],
+            &[10.0, 10.0],
+            StoreConfig::default(),
+        );
+        store.insert(&[1.0, 1.0]);
+        let snap = store.snapshot();
+        let id2 = store.insert(&[2.0, 2.0]);
+        assert_eq!(store.query_window(&[0.0, 0.0], &[5.0, 5.0]).len(), 2);
+        let old = store.query_window_on(&snap, &[0.0, 0.0], &[5.0, 5.0]);
+        assert_eq!(old.len(), 1, "snapshot must not see the later insert");
+        assert!(!old.contains(&id2));
+    }
+}

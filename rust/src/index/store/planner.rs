@@ -1,0 +1,128 @@
+//! The range-routed query planner: decompose once, cut at shard
+//! boundaries, route each piece to exactly the shard owning it.
+//!
+//! A window query against the sharded store is planned in three steps:
+//! the float window quantizes through the shared
+//! [`Quantizer`](crate::index::quantize::Quantizer), decomposes into
+//! contiguous curve ranges (once, whatever the shard count), optionally
+//! coarsens under the `max_ranges` cap, and the resulting range list is
+//! split at the store's shard fenceposts
+//! ([`split_ranges_at`](crate::curves::engine::split_ranges_at)) into
+//! per-shard probe lists. Ranges and shard boundaries live on the same
+//! curve-order axis, so the split is exact: every decomposed cell goes
+//! to exactly one shard, and shards outside the window are never
+//! touched.
+
+use crate::curves::engine::{coarsen_ranges, split_ranges_at, CurveMapperNd};
+use crate::index::quantize::Quantizer;
+use std::ops::Range;
+
+/// The probe list of one shard: which contiguous key ranges to
+/// binary-search in that shard's segment stack.
+#[derive(Clone, Debug)]
+pub struct ShardProbe {
+    /// Shard index (into the store's shard list).
+    pub shard: usize,
+    /// Sorted, disjoint key ranges, each fully inside the shard.
+    pub ranges: Vec<Range<u64>>,
+}
+
+/// A planned window query: the global decomposition plus its routing.
+#[derive(Clone, Debug, Default)]
+pub struct QueryPlan {
+    /// Global decomposition (after coarsening), in curve order.
+    pub ranges: Vec<Range<u64>>,
+    /// Per-shard probe lists, only for shards the window intersects.
+    pub probes: Vec<ShardProbe>,
+}
+
+impl QueryPlan {
+    /// Number of shards the plan touches.
+    pub fn shards_touched(&self) -> usize {
+        self.probes.len()
+    }
+}
+
+/// Plan a window query: quantize + decompose the float window, coarsen
+/// to `max_ranges` (0 = exact), split at the shard fenceposts `bounds`
+/// (length `shards + 1`).
+pub fn plan_window(
+    mapper: &dyn CurveMapperNd,
+    quant: &Quantizer,
+    bounds: &[u64],
+    lo: &[f32],
+    hi: &[f32],
+    max_ranges: usize,
+) -> QueryPlan {
+    let mut ranges = mapper.decompose_nd(&quant.window(lo, hi));
+    coarsen_ranges(&mut ranges, max_ranges);
+    plan_ranges(ranges, bounds)
+}
+
+/// Route an already-decomposed range list (sorted, disjoint) to shards.
+pub fn plan_ranges(ranges: Vec<Range<u64>>, bounds: &[u64]) -> QueryPlan {
+    let mut probes: Vec<ShardProbe> = Vec::new();
+    for (shard, piece) in split_ranges_at(&ranges, bounds) {
+        match probes.last_mut() {
+            Some(p) if p.shard == shard => p.ranges.push(piece),
+            _ => probes.push(ShardProbe { shard, ranges: vec![piece] }),
+        }
+    }
+    QueryPlan { ranges, probes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::CurveKind;
+
+    #[test]
+    fn plan_covers_decomposition_exactly() {
+        let mapper = CurveKind::Hilbert.nd_mapper(2, 6); // 64×64, span 4096
+        let quant = Quantizer::from_bounds(vec![0.0, 0.0], &[64.0, 64.0], 64);
+        let bounds = [0u64, 1024, 2048, 3072, 4096];
+        let plan = plan_window(mapper.as_ref(), &quant, &bounds, &[10.0, 10.0], &[40.0, 40.0], 0);
+        assert!(!plan.probes.is_empty());
+        let global: u64 = plan.ranges.iter().map(|r| r.end - r.start).sum();
+        let routed: u64 = plan
+            .probes
+            .iter()
+            .flat_map(|p| p.ranges.iter())
+            .map(|r| r.end - r.start)
+            .sum();
+        assert_eq!(global, routed, "every decomposed cell routes to one shard");
+        for p in &plan.probes {
+            for r in &p.ranges {
+                assert!(bounds[p.shard] <= r.start && r.end <= bounds[p.shard + 1]);
+            }
+        }
+        // Probes come out in shard order, one entry per touched shard.
+        let shards: Vec<usize> = plan.probes.iter().map(|p| p.shard).collect();
+        let mut dedup = shards.clone();
+        dedup.dedup();
+        assert_eq!(shards, dedup);
+    }
+
+    #[test]
+    fn tiny_window_touches_one_shard() {
+        let mapper = CurveKind::Hilbert.nd_mapper(2, 6);
+        let quant = Quantizer::from_bounds(vec![0.0, 0.0], &[64.0, 64.0], 64);
+        let bounds = [0u64, 2048, 4096];
+        let plan =
+            plan_window(mapper.as_ref(), &quant, &bounds, &[3.0, 3.0], &[3.5, 3.5], 0);
+        assert_eq!(plan.shards_touched(), 1);
+    }
+
+    #[test]
+    fn coarsening_caps_the_global_range_count() {
+        let mapper = CurveKind::ZOrder.nd_mapper(2, 7);
+        let quant = Quantizer::from_bounds(vec![0.0, 0.0], &[128.0, 128.0], 128);
+        let bounds = [0u64, 16384];
+        let exact =
+            plan_window(mapper.as_ref(), &quant, &bounds, &[5.0, 60.0], &[70.0, 100.0], 0);
+        let capped =
+            plan_window(mapper.as_ref(), &quant, &bounds, &[5.0, 60.0], &[70.0, 100.0], 4);
+        assert!(exact.ranges.len() > 4, "workload must actually fragment");
+        assert!(capped.ranges.len() <= 4);
+    }
+}

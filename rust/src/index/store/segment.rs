@@ -1,0 +1,273 @@
+//! Curve-key-sorted segments — the storage unit shared by
+//! [`SfcIndex`](crate::index::SfcIndex) (one sorted segment) and
+//! [`SfcStore`](super::SfcStore) (a stack of them per shard).
+//!
+//! A segment holds parallel columns: curve `keys`, caller `ids`,
+//! per-entry `seqs` (global mutation order), tombstone flags and the
+//! point rows themselves. Sorted segments answer range probes with a
+//! binary search + walk; unsorted segments (the store's write-buffer
+//! mini-runs) scan linearly, binary-searching the *range list* per
+//! entry instead. [`Segment::merge`] is the LSM compaction step: it
+//! keeps, per `(key, id)`, only the newest entry, optionally dropping
+//! tombstones when the merge reaches the bottom of a shard's stack.
+
+use crate::apps::kmeans::permute_rows;
+use crate::apps::Matrix;
+use crate::curves::engine::CurveMapperNd;
+use crate::curves::ndim::argsort_stable;
+use crate::index::quantize::Quantizer;
+use std::ops::Range;
+
+/// One run of entries: parallel key/id/seq/tombstone columns plus the
+/// point rows, sorted by key or raw append order.
+#[derive(Clone, Debug)]
+pub(crate) struct Segment {
+    /// Curve keys, one per entry (sorted iff `sorted`).
+    pub keys: Vec<u64>,
+    /// Caller-visible point ids.
+    pub ids: Vec<u32>,
+    /// Global mutation sequence numbers (visibility: max seq per id wins).
+    pub seqs: Vec<u64>,
+    /// Tombstone flags (a tombstone cancels older same-id entries).
+    pub tombs: Vec<bool>,
+    /// Point rows, parallel to the columns.
+    pub points: Matrix,
+    /// Whether `keys` is non-decreasing (binary-searchable).
+    pub sorted: bool,
+}
+
+impl Segment {
+    /// Entry count (tombstones included).
+    pub fn rows(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Point row of an entry.
+    #[inline]
+    pub fn row(&self, pos: usize) -> &[f32] {
+        self.points.row(pos)
+    }
+
+    /// Build an **unsorted** run from a batch of rows: entry `i` gets
+    /// `ids[i]`, seq `seq0 + i`, tombstone flag `tomb`, and its curve key
+    /// through the shared quantizer + batched Nd conversion.
+    pub fn from_rows(
+        mapper: &dyn CurveMapperNd,
+        quant: &Quantizer,
+        ids: Vec<u32>,
+        points: Matrix,
+        tomb: bool,
+        seq0: u64,
+    ) -> Segment {
+        assert_eq!(ids.len(), points.rows, "one id per row");
+        assert_eq!(points.cols, quant.dims(), "row dims must match the quantizer");
+        let mut flat = Vec::with_capacity(points.rows * points.cols);
+        for p in 0..points.rows {
+            quant.cells_into(points.row(p), &mut flat);
+        }
+        let mut keys = Vec::with_capacity(points.rows);
+        mapper.order_batch_nd(&flat, &mut keys);
+        let n = points.rows;
+        Segment {
+            keys,
+            seqs: (seq0..seq0 + n as u64).collect(),
+            tombs: vec![tomb; n],
+            ids,
+            points,
+            sorted: n <= 1,
+        }
+    }
+
+    /// Sort the entries by key (stable: equal keys keep append = seq
+    /// order), consuming `self`.
+    pub fn into_sorted(self) -> Segment {
+        if self.sorted {
+            return Segment { sorted: true, ..self };
+        }
+        let order = argsort_stable(&self.keys);
+        let permute_u64 = |v: &[u64]| order.iter().map(|&i| v[i as usize]).collect::<Vec<_>>();
+        Segment {
+            keys: permute_u64(&self.keys),
+            seqs: permute_u64(&self.seqs),
+            ids: order.iter().map(|&i| self.ids[i as usize]).collect(),
+            tombs: order.iter().map(|&i| self.tombs[i as usize]).collect(),
+            points: permute_rows(&self.points, &order),
+            sorted: true,
+        }
+    }
+
+    /// Merge several runs into one **sorted** segment, keeping per id
+    /// only the newest (max-seq) entry among the merged parts — the
+    /// same visibility rule queries apply at read time, so compaction
+    /// never changes what a query returns. With `drop_tombs` (legal
+    /// only when nothing older than the merged set remains — a full
+    /// shard compaction) surviving tombstones are discarded too.
+    pub fn merge(parts: &[&Segment], drop_tombs: bool, dims: usize) -> Segment {
+        let total: usize = parts.iter().map(|s| s.rows()).sum();
+        // Concatenate (segment, pos) handles and sort by (key, seq, id) —
+        // seq ties cannot happen across live entries (seqs are globally
+        // unique), so the order is total.
+        let mut handles: Vec<(u64, u64, u32, usize, usize)> = Vec::with_capacity(total);
+        for (si, s) in parts.iter().enumerate() {
+            for pos in 0..s.rows() {
+                handles.push((s.keys[pos], s.seqs[pos], s.ids[pos], si, pos));
+            }
+        }
+        handles.sort_unstable_by_key(|&(k, seq, id, _, _)| (k, seq, id));
+        // Pass 1: the global max-seq winner per id (ids never span keys
+        // under the store's discipline — fresh id per insert, deletes
+        // carry the inserted row — but resolving globally keeps the
+        // merge faithful to the read-time rule regardless).
+        let mut winner = std::collections::HashMap::<u32, usize>::with_capacity(total);
+        for (idx, h) in handles.iter().enumerate() {
+            match winner.entry(h.2) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    if h.1 > handles[*e.get()].1 {
+                        e.insert(idx);
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(idx);
+                }
+            }
+        }
+        // Pass 2: emit winners in key order.
+        let mut out = Segment {
+            keys: Vec::with_capacity(total),
+            ids: Vec::with_capacity(total),
+            seqs: Vec::with_capacity(total),
+            tombs: Vec::with_capacity(total),
+            points: Matrix::zeros(0, dims),
+            sorted: true,
+        };
+        for (idx, &(k, seq, id, si, pos)) in handles.iter().enumerate() {
+            if winner[&id] != idx {
+                continue;
+            }
+            let tomb = parts[si].tombs[pos];
+            if tomb && drop_tombs {
+                continue;
+            }
+            out.keys.push(k);
+            out.seqs.push(seq);
+            out.ids.push(id);
+            out.tombs.push(tomb);
+            out.points.data.extend_from_slice(parts[si].row(pos));
+            out.points.rows += 1;
+        }
+        out
+    }
+
+    /// First position with `keys[pos] >= key` (sorted segments only).
+    #[inline]
+    pub fn lower_bound(&self, key: u64) -> usize {
+        debug_assert!(self.sorted);
+        self.keys.partition_point(|&k| k < key)
+    }
+
+    /// Visit every entry whose key falls in one of the sorted, disjoint
+    /// `ranges`, in position order. Sorted segments binary-search each
+    /// range and walk; unsorted ones scan linearly, binary-searching the
+    /// range list per entry.
+    pub fn probe_ranges(&self, ranges: &[Range<u64>], mut f: impl FnMut(usize)) {
+        if self.sorted {
+            for r in ranges {
+                let mut pos = self.lower_bound(r.start);
+                while pos < self.keys.len() && self.keys[pos] < r.end {
+                    f(pos);
+                    pos += 1;
+                }
+            }
+        } else {
+            for (pos, &k) in self.keys.iter().enumerate() {
+                let idx = ranges.partition_point(|r| r.end <= k);
+                if idx < ranges.len() && ranges[idx].start <= k {
+                    f(pos);
+                }
+            }
+        }
+    }
+
+    /// Live (non-tombstone) entry count — an upper bound on visible
+    /// points (older superseded entries still count until compaction).
+    pub fn live_upper_bound(&self) -> usize {
+        self.tombs.iter().filter(|&&t| !t).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::CurveKind;
+    use crate::index::quantize::Quantizer;
+
+    fn seg(entries: &[(f32, f32, u32, u64, bool)]) -> Segment {
+        // Build a 2-D level-4 Hilbert segment from (x, y, id, seq, tomb).
+        let mapper = CurveKind::Hilbert.nd_mapper(2, 4);
+        let quant = Quantizer::from_bounds(vec![0.0, 0.0], &[16.0, 16.0], 16);
+        let points = Matrix::from_fn(entries.len(), 2, |i, j| {
+            if j == 0 {
+                entries[i].0
+            } else {
+                entries[i].1
+            }
+        });
+        let ids = entries.iter().map(|e| e.2).collect();
+        let mut s = Segment::from_rows(mapper.as_ref(), &quant, ids, points, false, 0);
+        for (i, e) in entries.iter().enumerate() {
+            s.seqs[i] = e.3;
+            s.tombs[i] = e.4;
+        }
+        s
+    }
+
+    #[test]
+    fn sorted_probe_matches_linear_probe() {
+        let entries: Vec<(f32, f32, u32, u64, bool)> = (0..40)
+            .map(|i| (((i * 7) % 16) as f32, ((i * 3) % 16) as f32, i as u32, i as u64, false))
+            .collect();
+        let unsorted = seg(&entries);
+        let sorted = unsorted.clone().into_sorted();
+        assert!(sorted.keys.windows(2).all(|w| w[0] <= w[1]));
+        let ranges = vec![0..10u64, 30..80, 200..256];
+        let mut a: Vec<u32> = Vec::new();
+        sorted.probe_ranges(&ranges, |pos| a.push(sorted.ids[pos]));
+        let mut b: Vec<u32> = Vec::new();
+        unsorted.probe_ranges(&ranges, |pos| b.push(unsorted.ids[pos]));
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_resolves_newest_entry_per_id() {
+        // id 1: inserted (seq 1), deleted (seq 5) → tombstone wins.
+        // id 2: inserted (seq 2), re-inserted elsewhere (seq 7) → new row.
+        let old = seg(&[(1.0, 1.0, 1, 1, false), (2.0, 2.0, 2, 2, false)]).into_sorted();
+        let new = seg(&[(1.0, 1.0, 1, 5, true), (9.0, 9.0, 2, 7, false)]).into_sorted();
+        let merged = Segment::merge(&[&old, &new], false, 2);
+        assert!(merged.sorted);
+        // id 1 survives only as the tombstone; id 2 as the new row.
+        let id1: Vec<usize> = (0..merged.rows()).filter(|&p| merged.ids[p] == 1).collect();
+        assert_eq!(id1.len(), 1);
+        assert!(merged.tombs[id1[0]]);
+        let id2: Vec<usize> = (0..merged.rows()).filter(|&p| merged.ids[p] == 2).collect();
+        assert_eq!(id2.len(), 1);
+        assert_eq!(merged.row(id2[0]), &[9.0, 9.0]);
+        // Full compaction drops the tombstone too.
+        let compacted = Segment::merge(&[&old, &new], true, 2);
+        assert!(compacted.tombs.iter().all(|&t| !t));
+        assert_eq!(compacted.rows(), 1);
+        assert_eq!(compacted.ids[0], 2);
+    }
+
+    #[test]
+    fn merge_of_disjoint_runs_keeps_everything_sorted() {
+        let a = seg(&[(0.0, 0.0, 10, 1, false), (5.0, 5.0, 11, 2, false)]).into_sorted();
+        let b = seg(&[(3.0, 3.0, 12, 3, false), (15.0, 15.0, 13, 4, false)]).into_sorted();
+        let m = Segment::merge(&[&a, &b], true, 2);
+        assert_eq!(m.rows(), 4);
+        assert!(m.keys.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(m.live_upper_bound(), 4);
+    }
+}

@@ -1,0 +1,166 @@
+//! Per-shard segment stacks: the LSM policy layer.
+//!
+//! Each shard owns an independent stack — a small unsorted **write
+//! buffer** (append-order mini-runs) in front of **sorted runs** kept in
+//! geometric size tiers. Appends land in the buffer; once it exceeds the
+//! configured row budget it flushes into a sorted run, and runs whose
+//! sizes come within a factor of two merge upward
+//! ([`Segment::merge`]), so a shard holds `O(log n)` runs and ingest
+//! stays amortized `O(log n)` per row. Tombstones survive every partial
+//! merge (an older run may still hold the entry they cancel) and are
+//! dropped only when a merge reaches the bottom of the stack —
+//! [`ShardState::compact`], the full merge.
+
+use super::segment::Segment;
+use std::sync::Arc;
+
+/// Mutable state of one shard (guarded by the store's per-shard writer
+/// mutex; readers never see it — they get [`Arc`] snapshots of the
+/// segment list).
+#[derive(Debug, Default)]
+pub(crate) struct ShardState {
+    /// Unsorted write-buffer mini-runs, oldest → newest.
+    pub minis: Vec<Arc<Segment>>,
+    /// Sorted runs, oldest → newest (sizes strictly decreasing by at
+    /// least 2× toward the newest, after tiering).
+    pub runs: Vec<Arc<Segment>>,
+    /// Total rows currently buffered in `minis`.
+    pub mini_rows: usize,
+}
+
+impl ShardState {
+    /// All segments for a reader snapshot (runs then buffer).
+    pub fn segments(&self) -> Vec<Arc<Segment>> {
+        self.runs.iter().chain(&self.minis).cloned().collect()
+    }
+
+    /// Total entries (tombstones included).
+    pub fn rows(&self) -> usize {
+        self.runs.iter().map(|s| s.rows()).sum::<usize>() + self.mini_rows
+    }
+
+    /// Append a mini-run to the write buffer, flushing + tiering when
+    /// the buffer exceeds `buffer_rows`.
+    pub fn append(&mut self, seg: Segment, buffer_rows: usize, dims: usize) {
+        self.mini_rows += seg.rows();
+        self.minis.push(Arc::new(seg));
+        if self.mini_rows > buffer_rows {
+            self.flush(dims);
+        }
+    }
+
+    /// Merge the write buffer into one sorted run (tombstones kept) and
+    /// re-tier the run stack.
+    pub fn flush(&mut self, dims: usize) {
+        if !self.minis.is_empty() {
+            let parts: Vec<&Segment> = self.minis.iter().map(|s| s.as_ref()).collect();
+            let run = Segment::merge(&parts, false, dims);
+            self.minis.clear();
+            self.mini_rows = 0;
+            if run.rows() > 0 {
+                self.runs.push(Arc::new(run));
+            }
+        }
+        self.tier(dims);
+    }
+
+    /// Size-tiered merging: while the second-newest run is no more than
+    /// twice the newest, merge the two. Tombstones drop only when the
+    /// merge consumes the whole stack (nothing older left to cancel).
+    fn tier(&mut self, dims: usize) {
+        while self.runs.len() >= 2 {
+            let newest = self.runs[self.runs.len() - 1].rows();
+            let older = self.runs[self.runs.len() - 2].rows();
+            if older > newest * 2 {
+                break;
+            }
+            let bottom = self.runs.len() == 2 && self.minis.is_empty();
+            let b = self.runs.pop().expect("len checked");
+            let a = self.runs.pop().expect("len checked");
+            let merged = Segment::merge(&[a.as_ref(), b.as_ref()], bottom, dims);
+            if merged.rows() > 0 {
+                self.runs.push(Arc::new(merged));
+            }
+        }
+    }
+
+    /// Full compaction: merge buffer and every run into one sorted
+    /// segment, dropping tombstones and superseded entries.
+    pub fn compact(&mut self, dims: usize) {
+        if self.minis.is_empty() && self.runs.len() <= 1 {
+            // Still rewrite a lone run if it carries tombstones.
+            if let Some(run) = self.runs.first() {
+                if run.tombs.iter().any(|&t| t) {
+                    let merged = Segment::merge(&[run.as_ref()], true, dims);
+                    self.runs.clear();
+                    if merged.rows() > 0 {
+                        self.runs.push(Arc::new(merged));
+                    }
+                }
+            }
+            return;
+        }
+        let parts: Vec<Arc<Segment>> = self.segments();
+        let refs: Vec<&Segment> = parts.iter().map(|s| s.as_ref()).collect();
+        let merged = Segment::merge(&refs, true, dims);
+        self.minis.clear();
+        self.mini_rows = 0;
+        self.runs.clear();
+        if merged.rows() > 0 {
+            self.runs.push(Arc::new(merged));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::Matrix;
+    use crate::curves::CurveKind;
+    use crate::index::quantize::Quantizer;
+
+    fn mini(ids: std::ops::Range<u32>, seq0: u64, tomb: bool) -> Segment {
+        let mapper = CurveKind::Hilbert.nd_mapper(2, 5);
+        let quant = Quantizer::from_bounds(vec![0.0, 0.0], &[32.0, 32.0], 32);
+        let idv: Vec<u32> = ids.clone().collect();
+        let points = Matrix::from_fn(idv.len(), 2, |i, j| {
+            ((ids.start as usize + i * (j + 3)) % 32) as f32
+        });
+        Segment::from_rows(mapper.as_ref(), &quant, idv, points, tomb, seq0)
+    }
+
+    #[test]
+    fn buffer_flushes_at_capacity_and_tiers_geometrically() {
+        let mut st = ShardState::default();
+        let mut seq = 0u64;
+        for batch in 0..40u32 {
+            let seg = mini(batch * 8..batch * 8 + 8, seq, false);
+            seq += 8;
+            st.append(seg, 16, 2);
+        }
+        assert_eq!(st.rows(), 320);
+        assert!(st.mini_rows <= 16, "buffer stays within budget after flushes");
+        // Geometric tiers: every older run is > 2× the next newer one.
+        for w in st.runs.windows(2) {
+            assert!(w[0].rows() > 2 * w[1].rows(), "tier invariant");
+        }
+        assert!(st.runs.len() <= 10, "log-many runs, got {}", st.runs.len());
+    }
+
+    #[test]
+    fn compact_collapses_to_one_tombstone_free_run() {
+        let mut st = ShardState::default();
+        st.append(mini(0..50, 0, false), 1024, 2);
+        st.append(mini(0..20, 50, true), 1024, 2); // delete ids 0..20
+        st.compact(2);
+        assert_eq!(st.runs.len(), 1);
+        assert_eq!(st.mini_rows, 0);
+        let run = &st.runs[0];
+        assert!(run.tombs.iter().all(|&t| !t));
+        assert_eq!(run.rows(), 30);
+        // Compacting an already-clean single run is a no-op.
+        let before = Arc::as_ptr(&st.runs[0]);
+        st.compact(2);
+        assert_eq!(Arc::as_ptr(&st.runs[0]), before);
+    }
+}

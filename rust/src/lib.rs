@@ -43,11 +43,18 @@
 //!   through the cache simulator for per-matrix L1/L2 miss reports.
 //! * [`index`] — the index substrates: the legacy 2-D projection
 //!   [`index::GridIndex`], the full-dimensional [`index::GridIndexNd`]
-//!   (cells ranked along the true d-dim Hilbert curve), and the
+//!   (cells ranked along the true d-dim Hilbert curve), the
 //!   order-sorted [`index::SfcIndex`] serving point/window/kNN queries
 //!   by decomposing each window into contiguous curve ranges
 //!   ([`CurveMapperNd::decompose_nd`]) and binary-searching its sorted
-//!   key column — the paper's "search structures" application.
+//!   key column — the paper's "search structures" application — and the
+//!   **serving layer** built from the same pieces: [`index::SfcStore`],
+//!   a sharded, mutable store of curve-key-sorted LSM segments with
+//!   lock-free-for-readers snapshot queries, a range-routed query
+//!   planner (decompose once, cut at the curve-order shard fenceposts)
+//!   and equi-depth shard rebalancing. One shared
+//!   [`index::quantize::Quantizer`] keeps every float→cell map
+//!   identical across all of them.
 //! * [`cachesim`] — the cache-hierarchy simulator used to regenerate the
 //!   paper's Figure 1(e) (LRU / set-associative / multi-level + TLB).
 //! * [`runtime`] — the PJRT engine: loads AOT-compiled JAX/Pallas

@@ -12,6 +12,8 @@
 //! sfc-mine simjoin [--n 20000 --eps 1 --index-dims 3]  # §7 join variants
 //! sfc-mine query [--mode point|window|knn --curve hilbert --dims 2
 //!                 --level 8 --max-ranges 0]   # SfcIndex query subsystem
+//! sfc-mine store [--n 20000 --dims 3 --shards 8 --ops 20000
+//!                 --threads 0]   # sharded mutable store: mixed workload
 //! ```
 //!
 //! All curve dispatch goes through the engine ([`CurveKind::mapper`] /
@@ -25,14 +27,18 @@
 //! Hilbert rank so worker shards are spatially compact. The `query`
 //! command builds an order-sorted `SfcIndex` and reports
 //! ranges-per-query, selectivity and the exact-filter ratio against a
-//! full-scan baseline, per curve.
+//! full-scan baseline, per curve. The `store` command drives the
+//! sharded, mutable `SfcStore` through a bulk ingest plus a mixed
+//! insert/delete/query phase, asserts recall 1.0 against a freshly
+//! rebuilt `SfcIndex` on the live set, and reports snapshot-query
+//! thread scaling.
 
 use sfc_mine::apps::kmeans::{hilbert_point_order, init_centroids, make_blobs, permute_rows, KMeans};
 use sfc_mine::apps::matmul::{flops, matmul_curve, matmul_tiled, matmul_transposed};
 use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
 use sfc_mine::apps::simjoin::{
     join_fgf_hilbert_dims, join_grid_nested_dims, join_grid_projected, join_sfc_dims,
-    make_clustered, DEFAULT_INDEX_DIMS,
+    join_store_dims, make_clustered, DEFAULT_INDEX_DIMS,
 };
 use sfc_mine::apps::Matrix;
 use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
@@ -56,12 +62,13 @@ fn main() {
         Some("kmeans") => kmeans_cmd(&args),
         Some("simjoin") => simjoin_cmd(&args),
         Some("query") => query_cmd(&args),
+        Some("store") => store_cmd(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
             }
             eprintln!(
-                "usage: sfc-mine <info|fig1|curves|matmul|linalg|kmeans|simjoin|query> \
+                "usage: sfc-mine <info|fig1|curves|matmul|linalg|kmeans|simjoin|query|store> \
                  [--key value]…\n\
                  see README.md for options"
             );
@@ -453,9 +460,16 @@ fn simjoin_cmd(args: &Args) {
     let (pairs_sfc, ss) = join_sfc_dims(&points, eps, index_dims);
     let sfc_dt = t0.elapsed();
 
+    // The serving-layer path: the points live in a mutable SfcStore and
+    // every ±ε window routes through the query planner on one snapshot.
+    let t0 = Instant::now();
+    let (pairs_store, sst) = join_store_dims(&points, eps, index_dims);
+    let store_dt = t0.elapsed();
+
     assert_eq!(pairs_2d.len(), pairs_grid.len(), "identical result pair sets");
     assert_eq!(pairs_grid.len(), pairs_fgf.len(), "identical result pair sets");
     assert_eq!(pairs_fgf.len(), pairs_sfc.len(), "identical result pair sets");
+    assert_eq!(pairs_sfc.len(), pairs_store.len(), "identical result pair sets");
     println!(
         "simjoin n={n} d={d} eps={eps}: {} pairs (all variants identical)",
         pairs_sfc.len()
@@ -471,6 +485,7 @@ fn simjoin_cmd(args: &Args) {
     ]);
     for (name, dims, dt, s) in [
         ("sfc-window-nd (default)", index_dims, sfc_dt, &ss),
+        ("sfc-store (serving)", index_dims, store_dt, &sst),
         ("grid-2d-projection", 2, proj_dt, &s2),
         ("grid-nd", index_dims, grid_dt, &sg),
         ("fgf-hilbert-nd", index_dims, fgf_dt, &sf),
@@ -703,4 +718,215 @@ fn query_cmd(args: &Args) {
             std::process::exit(2);
         }
     }
+}
+
+/// The `store` subcommand: drive the sharded, mutable [`SfcStore`]
+/// through (1) a bulk ingest, (2) a mixed insert/delete/query workload
+/// on snapshot reads, (3) a full compaction, then (4) verify **recall
+/// 1.0** against a freshly rebuilt `SfcIndex` over the live set and
+/// report batched snapshot-query scaling across worker counts.
+fn store_cmd(args: &Args) {
+    use sfc_mine::index::{SfcStore, StoreConfig};
+
+    let n: usize = args.get("n", 20_000);
+    let d: usize = args.get("dims", 3);
+    let level: u32 = args.get("level", 8);
+    let shards: usize = args.get("shards", 8);
+    let batch: usize = args.get("batch", 512).max(1);
+    let buffer: usize = args.get("buffer-rows", 256);
+    let ops: usize = args.get("ops", 20_000);
+    let delete_frac: f32 = args.get("delete-frac", 0.2);
+    let query_frac: f32 = args.get("query-frac", 0.3);
+    let frac: f32 = args.get("window-frac", 0.05);
+    let queries: usize = args.get("queries", 200).max(1);
+    let threads: usize = args.get("threads", 0);
+    let curve: CurveKind = match args.get_str("curve", "hilbert").parse() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let points = make_clustered(n, d, 40, 0.8, 7);
+    let (min, max) = sfc_mine::index::axis_bounds(&points, d).expect("workload is non-empty");
+    let mut rng = Rng::new(99);
+    let mut t = Table::new(vec!["phase", "ops", "ms", "ops/s or ms/query", "notes"]);
+
+    // ---- phase 1: bulk ingest ------------------------------------------
+    let cfg = StoreConfig { shards, buffer_rows: buffer };
+    let t0 = Instant::now();
+    let store = SfcStore::from_points(&points, level, curve, cfg);
+    let ingest_dt = t0.elapsed();
+    let snap = store.snapshot();
+    t.row(vec![
+        "bulk ingest".into(),
+        n.to_string(),
+        fmt_ms(ingest_dt),
+        format!("{:.0} pts/s", n as f64 / ingest_dt.as_secs_f64()),
+        format!(
+            "{} shards, {} segments",
+            store.shard_count(),
+            snap.shard_segment_counts().iter().sum::<usize>()
+        ),
+    ]);
+
+    // Live bookkeeping for the mixed phase (deletes need the row).
+    let mut live: Vec<(u32, Vec<f32>)> =
+        (0..n).map(|p| (p as u32, points.row(p).to_vec())).collect();
+    let random_window = |center: &[f32]| {
+        let lo: Vec<f32> = (0..d).map(|a| center[a] - frac * (max[a] - min[a])).collect();
+        let hi: Vec<f32> = (0..d).map(|a| center[a] + frac * (max[a] - min[a])).collect();
+        (lo, hi)
+    };
+
+    // ---- phase 2: mixed insert/delete/query ----------------------------
+    let (mut n_ins, mut n_del, mut n_q) = (0u64, 0u64, 0u64);
+    let mut q_lat: Vec<u64> = Vec::new();
+    let mut agg = sfc_mine::index::QueryStats::default();
+    let mut batch_rows = Matrix::zeros(0, d);
+    let t0 = Instant::now();
+    for _ in 0..ops {
+        let r = rng.f32();
+        if r < delete_frac && !live.is_empty() {
+            let v = rng.below_usize(live.len());
+            let (id, row) = live.swap_remove(v);
+            store.delete(id, &row);
+            n_del += 1;
+        } else if r < delete_frac + query_frac && !live.is_empty() {
+            let c = rng.below_usize(live.len());
+            let (lo, hi) = random_window(&live[c].1.clone());
+            let tq = Instant::now();
+            let (_, s) = store.query_window_stats(&lo, &hi, 0);
+            q_lat.push(tq.elapsed().as_nanos() as u64);
+            agg.ranges += s.ranges;
+            agg.candidates += s.candidates;
+            agg.results += s.results;
+            agg.shards_touched += s.shards_touched;
+            agg.segments_probed += s.segments_probed;
+            n_q += 1;
+        } else {
+            let src = rng.below_usize(n);
+            let row: Vec<f32> = (0..d)
+                .map(|a| points.at(src, a) + (rng.f32() - 0.5) * (max[a] - min[a]) * 0.02)
+                .collect();
+            batch_rows.data.extend_from_slice(&row);
+            batch_rows.rows += 1;
+            if batch_rows.rows >= batch {
+                let first = store.insert_batch(&batch_rows);
+                for i in 0..batch_rows.rows {
+                    live.push((first + i as u32, batch_rows.row(i).to_vec()));
+                }
+                batch_rows = Matrix::zeros(0, d);
+            }
+            n_ins += 1;
+        }
+    }
+    if batch_rows.rows > 0 {
+        let first = store.insert_batch(&batch_rows);
+        for i in 0..batch_rows.rows {
+            live.push((first + i as u32, batch_rows.row(i).to_vec()));
+        }
+    }
+    let mixed_dt = t0.elapsed();
+    q_lat.sort_unstable();
+    let p50 = q_lat.get(q_lat.len() / 2).copied().unwrap_or(0);
+    t.row(vec![
+        "mixed workload".into(),
+        ops.to_string(),
+        fmt_ms(mixed_dt),
+        format!("{:.0} ops/s", ops as f64 / mixed_dt.as_secs_f64()),
+        format!("{n_ins} ins / {n_del} del / {n_q} qry"),
+    ]);
+    if n_q > 0 {
+        t.row(vec![
+            "  window queries".into(),
+            n_q.to_string(),
+            "-".into(),
+            format!("{:.3} ms/query p50", p50 as f64 / 1e6),
+            format!(
+                "{:.1} shards, {:.1} segs, {:.1} ranges/query, filter {:.0}%",
+                agg.shards_touched as f64 / n_q as f64,
+                agg.segments_probed as f64 / n_q as f64,
+                agg.ranges as f64 / n_q as f64,
+                100.0 * agg.filter_ratio(),
+            ),
+        ]);
+    }
+
+    // ---- phase 3: compaction -------------------------------------------
+    let before = store.snapshot().entries();
+    let t0 = Instant::now();
+    store.compact();
+    let compact_dt = t0.elapsed();
+    let after = store.snapshot().entries();
+    t.row(vec![
+        "compact".into(),
+        "-".into(),
+        fmt_ms(compact_dt),
+        "-".into(),
+        format!("{before} -> {after} entries"),
+    ]);
+
+    // ---- phase 4: recall vs a fresh SfcIndex on the live set -----------
+    let snap = store.snapshot();
+    let (live_ids, live_rows) = store.collect_live(&snap);
+    assert_eq!(live_ids.len(), live.len(), "live bookkeeping must agree");
+    if live_rows.rows == 0 {
+        println!("store: every point deleted — nothing to recall-check");
+        print!("{}", t.render());
+        return;
+    }
+    let t0 = Instant::now();
+    let index = SfcIndex::build_with(&live_rows, level, curve);
+    let rebuild_dt = t0.elapsed();
+    let mut matched = 0u64;
+    let mut expected = 0u64;
+    let windows: Vec<(Vec<f32>, Vec<f32>)> = (0..queries)
+        .map(|_| {
+            let c = rng.below_usize(live_rows.rows.max(1));
+            random_window(live_rows.row(c))
+        })
+        .collect();
+    for (lo, hi) in &windows {
+        let mut got = store.query_window_on(&snap, lo, hi);
+        // Index ids are positions into live_rows; map to store ids.
+        let mut want: Vec<u32> =
+            index.query_window(lo, hi).iter().map(|&i| live_ids[i as usize]).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        expected += want.len() as u64;
+        matched += got.iter().filter(|id| want.binary_search(id).is_ok()).count() as u64;
+        assert_eq!(got, want, "store must return exactly the rebuilt index's rows");
+    }
+    t.row(vec![
+        "recall check".into(),
+        queries.to_string(),
+        fmt_ms(rebuild_dt),
+        format!("recall {:.3}", if expected == 0 { 1.0 } else { matched as f64 / expected as f64 }),
+        format!("vs fresh SfcIndex rebuild over {} live pts", live_ids.len()),
+    ]);
+
+    // ---- phase 5: snapshot-query thread scaling ------------------------
+    let thread_sweep: Vec<usize> = if threads > 0 { vec![threads] } else { vec![1, 2, 4, 8] };
+    for tn in thread_sweep {
+        let coord = Coordinator::new(tn);
+        let t0 = Instant::now();
+        let out = coord.par_query_store(&store, &windows);
+        let dt = t0.elapsed();
+        let total: usize = out.iter().map(Vec::len).sum();
+        t.row(vec![
+            format!("par_query_store x{tn}"),
+            windows.len().to_string(),
+            fmt_ms(dt),
+            format!("{:.3} ms/query", dt.as_secs_f64() * 1e3 / windows.len() as f64),
+            format!("{total} results"),
+        ]);
+    }
+
+    println!(
+        "store [{}]: n={n} d={d} level={level} shards={shards} buffer={buffer} \
+         ops={ops} (del {delete_frac} / qry {query_frac})",
+        curve.name()
+    );
+    print!("{}", t.render());
 }

@@ -1,0 +1,399 @@
+//! Store test suite (ISSUE 5): parity with a freshly rebuilt `SfcIndex`
+//! after any tested interleaving of inserts, deletes, compactions and
+//! rebalances — for every `CurveKind` at d ∈ {2, 3} — plus snapshot
+//! isolation and a threaded mixed-workload stress test.
+
+use sfc_mine::apps::Matrix;
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::{SfcIndex, SfcStore, StoreConfig};
+use sfc_mine::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Ground truth: id → row.
+type Alive = BTreeMap<u32, Vec<f32>>;
+
+fn live_matrix(alive: &Alive, d: usize) -> (Vec<u32>, Matrix) {
+    let ids: Vec<u32> = alive.keys().copied().collect();
+    let rows = Matrix::from_fn(ids.len(), d, |i, j| alive[&ids[i]][j]);
+    (ids, rows)
+}
+
+/// Assert all three query faces of `store` equal a fresh `SfcIndex`
+/// over the live set (window/point by id set, kNN by bitwise distance).
+fn assert_parity(
+    store: &SfcStore,
+    alive: &Alive,
+    d: usize,
+    level: u32,
+    kind: CurveKind,
+    rng: &mut Rng,
+    ctx: &str,
+) {
+    let (ids, rows) = live_matrix(alive, d);
+    let index = SfcIndex::build_with(&rows, level, kind);
+    let snap = store.snapshot();
+    // The store's live set must be exactly the ground truth (bitwise).
+    let (sids, srows) = store.collect_live(&snap);
+    assert_eq!(sids.len(), ids.len(), "{ctx}: live count");
+    for (pos, &id) in sids.iter().enumerate() {
+        assert_eq!(
+            srows.row(pos),
+            &alive[&id][..],
+            "{ctx}: live row of id {id} diverged"
+        );
+    }
+    // Window parity.
+    for _ in 0..6 {
+        let lo: Vec<f32> = (0..d).map(|_| rng.f32() * 80.0).collect();
+        let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 30.0).collect();
+        let mut got = store.query_window_on(&snap, &lo, &hi);
+        let mut want: Vec<u32> = index
+            .query_window(&lo, &hi)
+            .iter()
+            .map(|&i| ids[i as usize])
+            .collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "{ctx}: window parity");
+        // Parallel per-shard fan-out returns the same rows.
+        let coord = Coordinator::new(3);
+        let (mut par, stats) = store.par_query_window(&coord, &lo, &hi, 0);
+        par.sort_unstable();
+        assert_eq!(par, want, "{ctx}: par_query_window parity");
+        assert!(stats.shards_touched >= 1 || want.is_empty());
+        assert!(!stats.filter_ratio().is_nan());
+    }
+    // Point parity (an existing row and a missing one).
+    if let Some((&id, row)) = alive.iter().next() {
+        let got = store.query_point_on(&snap, row);
+        assert!(got.contains(&id), "{ctx}: point query lost id {id}");
+        let want: Vec<u32> = index
+            .query_point(row)
+            .iter()
+            .map(|&i| ids[i as usize])
+            .collect();
+        let mut got = got;
+        let mut want = want;
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "{ctx}: point parity");
+    }
+    assert!(store.query_point_on(&snap, &vec![1e9; d]).is_empty());
+    // kNN parity: identical distance sequences, bit for bit (both sides
+    // run the same expanding-window driver and float arithmetic).
+    if !alive.is_empty() {
+        let q: Vec<f32> = (0..d).map(|_| rng.f32() * 100.0).collect();
+        let k = 1 + rng.below(8) as usize;
+        let got = store.query_knn_on(&snap, &q, k);
+        let want = index.query_knn(&q, k);
+        assert_eq!(got.len(), want.len(), "{ctx}: knn count");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(
+                g.1.to_bits(),
+                w.1.to_bits(),
+                "{ctx}: knn distance diverged ({} vs {})",
+                g.1,
+                w.1
+            );
+        }
+    }
+}
+
+/// The acceptance property: scripted interleavings of inserts, deletes,
+/// flushes, compactions and rebalances keep every query face equal to a
+/// from-scratch `SfcIndex` on the live set — for every curve at
+/// d ∈ {2, 3}.
+#[test]
+fn store_matches_fresh_index_after_interleaved_mutations() {
+    for kind in CurveKind::ALL {
+        for d in [2usize, 3] {
+            let level = 6u32;
+            // Tiny buffer so the script exercises flush + tier merges.
+            let store = SfcStore::new(
+                d,
+                level,
+                kind,
+                vec![0.0; d],
+                &vec![100.0; d],
+                StoreConfig { shards: 4, buffer_rows: 32 },
+            );
+            let mut alive: Alive = Alive::new();
+            let mut rng = Rng::new(1000 + d as u64);
+            for step in 0..8 {
+                // A batch of inserts…
+                let n = 20 + rng.below(30) as usize;
+                let rows = Matrix::from_fn(n, d, |_, _| rng.f32() * 100.0);
+                let first = store.insert_batch(&rows);
+                for i in 0..n {
+                    alive.insert(first + i as u32, rows.row(i).to_vec());
+                }
+                // …some deletes…
+                let del = rng.below(10) as usize;
+                for _ in 0..del {
+                    if let Some((&id, row)) = alive.iter().next() {
+                        let row = row.clone();
+                        store.delete(id, &row);
+                        alive.remove(&id);
+                    }
+                }
+                // …and periodic structural maintenance.
+                match step % 4 {
+                    1 => store.flush(),
+                    2 => store.compact(),
+                    3 => store.rebalance(),
+                    _ => {}
+                }
+                assert_parity(
+                    &store,
+                    &alive,
+                    d,
+                    level,
+                    kind,
+                    &mut rng,
+                    &format!("{} d={d} step={step}", kind.name()),
+                );
+            }
+        }
+    }
+}
+
+/// Deleting and re-inserting under fresh ids (the store model) keeps
+/// point queries exact even when old versions share the curve key.
+#[test]
+fn reinsert_after_delete_resolves_to_newest() {
+    let store = SfcStore::new(
+        2,
+        6,
+        CurveKind::Hilbert,
+        vec![0.0, 0.0],
+        &[10.0, 10.0],
+        StoreConfig { shards: 2, buffer_rows: 8 },
+    );
+    let a = store.insert(&[3.0, 4.0]);
+    store.delete(a, &[3.0, 4.0]);
+    let b = store.insert(&[3.0, 4.0]);
+    assert_eq!(store.query_point(&[3.0, 4.0]), vec![b]);
+    store.compact();
+    assert_eq!(store.query_point(&[3.0, 4.0]), vec![b]);
+    assert_eq!(store.len(), 1);
+    // Forcing tombstones through the tier pipeline keeps the result.
+    for i in 0..40u32 {
+        let id = store.insert(&[i as f32 * 0.2, 1.0]);
+        if i % 2 == 0 {
+            store.delete(id, &[i as f32 * 0.2, 1.0]);
+        }
+    }
+    assert_eq!(store.len(), 21);
+    assert_eq!(store.query_point(&[3.0, 4.0]), vec![b]);
+}
+
+/// Snapshot isolation: a query started before a batch of inserts (or a
+/// delete, or a compaction) never sees them.
+#[test]
+fn snapshots_isolate_from_later_mutations() {
+    let points = Matrix::random(300, 2, 5, 0.0, 50.0);
+    let store = SfcStore::from_points(&points, 6, CurveKind::Hilbert, StoreConfig::default());
+    let before = store.snapshot();
+    let window = (vec![0.0f32, 0.0], vec![50.0f32, 50.0]);
+    let seen_before = store.query_window_on(&before, &window.0, &window.1);
+    assert_eq!(seen_before.len(), 300);
+
+    // Insert a batch: old snapshot unchanged, store sees it.
+    let extra = Matrix::random(50, 2, 7, 0.0, 50.0);
+    store.insert_batch(&extra);
+    assert_eq!(store.query_window_on(&before, &window.0, &window.1).len(), 300);
+    assert_eq!(store.query_window(&window.0, &window.1).len(), 350);
+
+    // Delete: old snapshots still see the victim.
+    let mid = store.snapshot();
+    store.delete(0, points.row(0));
+    assert_eq!(store.query_window_on(&before, &window.0, &window.1).len(), 300);
+    assert_eq!(store.query_window_on(&mid, &window.0, &window.1).len(), 350);
+    assert_eq!(store.query_window(&window.0, &window.1).len(), 349);
+
+    // Compaction doesn't disturb live snapshots either.
+    let pre_compact = store.snapshot();
+    store.compact();
+    assert_eq!(
+        store.query_window_on(&pre_compact, &window.0, &window.1).len(),
+        349
+    );
+    assert_eq!(store.query_window(&window.0, &window.1).len(), 349);
+}
+
+/// Threaded stress: interleaved insert/delete/compact/query from
+/// ×{1, 2, 5, 8} threads; afterwards every query face must equal a
+/// freshly rebuilt `SfcIndex` on the live set.
+#[test]
+fn concurrent_mixed_workload_converges_to_index_parity() {
+    for &threads in &[1usize, 2, 5, 8] {
+        let d = 2usize;
+        let level = 6u32;
+        let store = SfcStore::new(
+            d,
+            level,
+            CurveKind::Hilbert,
+            vec![0.0, 0.0],
+            &[100.0, 100.0],
+            StoreConfig { shards: 4, buffer_rows: 64 },
+        );
+        // Pre-populate a victim set for the deleter.
+        let seed_rows = Matrix::random(200, d, 11, 0.0, 100.0);
+        let first = store.insert_batch(&seed_rows);
+        let mut inserted: Vec<(u32, Vec<f32>)> = (0..200)
+            .map(|i| (first + i as u32, seed_rows.row(i).to_vec()))
+            .collect();
+        let deleted: Vec<(u32, Vec<f32>)> = inserted.drain(0..100).collect();
+
+        let writer_logs: Vec<Vec<(u32, Vec<f32>)>> = std::thread::scope(|scope| {
+            let store = &store;
+            // Writers: each inserts its own batches.
+            let mut handles = Vec::new();
+            for w in 0..threads {
+                handles.push(scope.spawn(move || {
+                    let mut rng = Rng::new(500 + w as u64);
+                    let mut log = Vec::new();
+                    for _ in 0..20 {
+                        let n = 1 + rng.below(16) as usize;
+                        let rows = Matrix::from_fn(n, d, |_, _| rng.f32() * 100.0);
+                        let id0 = store.insert_batch(&rows);
+                        for i in 0..n {
+                            log.push((id0 + i as u32, rows.row(i).to_vec()));
+                        }
+                    }
+                    log
+                }));
+            }
+            // Deleter: removes the pre-populated victims.
+            let victims = deleted.clone();
+            let deleter = scope.spawn(move || {
+                for (id, row) in &victims {
+                    store.delete(*id, row);
+                }
+            });
+            // Compactor: structural churn while everything else runs.
+            let compactor = scope.spawn(move || {
+                for i in 0..6 {
+                    match i % 3 {
+                        0 => store.flush(),
+                        1 => store.compact(),
+                        _ => store.rebalance(),
+                    }
+                }
+            });
+            // Readers: snapshot queries must stay internally sane.
+            let reader = scope.spawn(move || {
+                let mut rng = Rng::new(9999);
+                for _ in 0..30 {
+                    let lo: Vec<f32> = (0..d).map(|_| rng.f32() * 80.0).collect();
+                    let hi: Vec<f32> = lo.iter().map(|&l| l + 15.0).collect();
+                    let ids = store.query_window(&lo, &hi);
+                    let mut dedup = ids.clone();
+                    dedup.sort_unstable();
+                    dedup.dedup();
+                    assert_eq!(dedup.len(), ids.len(), "duplicate ids in a query result");
+                }
+            });
+            let mut logs = Vec::new();
+            for h in handles {
+                logs.push(h.join().expect("writer panicked"));
+            }
+            deleter.join().expect("deleter panicked");
+            compactor.join().expect("compactor panicked");
+            reader.join().expect("reader panicked");
+            logs
+        });
+
+        // Ground truth: survivors + everything the writers inserted.
+        let mut alive: Alive = inserted.into_iter().collect();
+        for log in writer_logs {
+            for (id, row) in log {
+                alive.insert(id, row);
+            }
+        }
+        let mut rng = Rng::new(42);
+        assert_parity(
+            &store,
+            &alive,
+            d,
+            level,
+            CurveKind::Hilbert,
+            &mut rng,
+            &format!("threads={threads}"),
+        );
+    }
+}
+
+/// The store's query stats expose the serving shape: shards touched,
+/// segments probed, and a NaN-free filter ratio on zero-candidate
+/// queries.
+#[test]
+fn store_stats_report_sharding_and_guard_zero_candidates() {
+    let points = sfc_mine::apps::simjoin::make_clustered(2000, 2, 30, 1.0, 13);
+    let store = SfcStore::from_points(
+        &points,
+        7,
+        CurveKind::Hilbert,
+        StoreConfig { shards: 8, buffer_rows: 128 },
+    );
+    // A broad window crosses shards; stats say so.
+    let (ids, stats) = store.query_window_stats(&[0.0, 0.0], &[100.0, 100.0], 0);
+    assert!(!ids.is_empty());
+    assert!(stats.shards_touched > 1, "broad window must cross shards");
+    assert!(stats.segments_probed >= stats.shards_touched);
+    assert!(stats.ranges >= 1);
+    assert!(stats.filter_ratio() > 0.0);
+    // A window far outside the data: no results, and the filter ratio
+    // stays NaN-free (1.0 when the clamped window held no candidates,
+    // 0.0 when edge-cell candidates were all filtered out).
+    let (ids, stats) = store.query_window_stats(&[-500.0, -500.0], &[-400.0, -400.0], 0);
+    assert!(ids.is_empty());
+    assert_eq!(stats.results, 0);
+    assert!(!stats.filter_ratio().is_nan());
+    if stats.candidates == 0 {
+        assert_eq!(stats.filter_ratio(), 1.0);
+    } else {
+        assert_eq!(stats.filter_ratio(), 0.0);
+    }
+    // The guard itself, directly: zero candidates ⇒ ratio 1.0.
+    let zero = sfc_mine::index::QueryStats::default();
+    assert_eq!(zero.filter_ratio(), 1.0);
+    // Coarsening caps the global range count.
+    let (exact, se) = store.query_window_stats(&[10.0, 10.0], &[60.0, 60.0], 0);
+    let (coarse, sc) = store.query_window_stats(&[10.0, 10.0], &[60.0, 60.0], 3);
+    assert!(sc.ranges <= 3);
+    assert!(sc.candidates >= se.candidates);
+    let mut a = exact;
+    let mut b = coarse;
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "coarsening must not change results");
+}
+
+/// Batched snapshot queries through the coordinator agree with the
+/// serial path at every thread count.
+#[test]
+fn batched_store_queries_scale_without_changing_results() {
+    let points = sfc_mine::apps::simjoin::make_clustered(3000, 3, 40, 0.8, 17);
+    let store = SfcStore::from_points(&points, 7, CurveKind::Hilbert, StoreConfig::default());
+    let mut rng = Rng::new(23);
+    let windows: Vec<(Vec<f32>, Vec<f32>)> = (0..60)
+        .map(|_| {
+            let p = rng.below_usize(points.rows);
+            let lo: Vec<f32> = (0..3).map(|a| points.at(p, a) - 3.0).collect();
+            let hi: Vec<f32> = (0..3).map(|a| points.at(p, a) + 3.0).collect();
+            (lo, hi)
+        })
+        .collect();
+    let snap = store.snapshot();
+    let serial: Vec<Vec<u32>> = windows
+        .iter()
+        .map(|(lo, hi)| store.query_window_on(&snap, lo, hi))
+        .collect();
+    for threads in [1usize, 2, 4, 8] {
+        let coord = Coordinator::new(threads);
+        let par = coord.par_query_store(&store, &windows);
+        assert_eq!(par, serial, "threads={threads}");
+    }
+}
