@@ -1,0 +1,208 @@
+//! Key-pipeline bench (ISSUE 6): scalar digit loops vs the bit-parallel
+//! fast paths (`curves::fastkey` mask ladders and Hilbert transition
+//! LUTs), the block quantize+key pipeline vs the per-row legacy shape,
+//! and end-to-end ingest before/after. Emits `reports/bench_keys.json`
+//! so the keys/sec trajectory is recorded.
+//!
+//! Every fast-path measurement first asserts its keys are **bit-for-bit**
+//! equal to the scalar reference on the same input — a speedup over
+//! different answers would be worthless.
+//!
+//! Targets (acceptance): ≥ 5× batched Z-order keys/sec at d ∈ {2, 3}
+//! (10× aspiration), > 1.5× batched Hilbert, measured ingest win.
+
+use sfc_mine::apps::kmeans::permute_rows;
+use sfc_mine::apps::Matrix;
+use sfc_mine::curves::engine::CurveMapperNd;
+use sfc_mine::curves::ndim::{GrayNd, HilbertNd, ZOrderNd};
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::quantize::{clamped_level, Quantizer};
+use sfc_mine::index::SfcIndex;
+use sfc_mine::util::bench::{Bench, Measurement};
+use sfc_mine::util::rng::Rng;
+use sfc_mine::util::table::Table;
+
+fn write_json(bench: &Bench, path: &str) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (idx, m) in bench.results().iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {}, \"mad_ns\": {}, \"elements\": {}}}",
+            m.name,
+            m.median.as_nanos(),
+            m.mad.as_nanos(),
+            m.elements.unwrap_or(0)
+        ));
+    }
+    s.push_str("\n]\n");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s)
+}
+
+fn per_elem(m: &Measurement) -> f64 {
+    m.median.as_nanos() as f64 / m.elements.unwrap_or(1) as f64
+}
+
+/// Random flattened points over the `2^level` cube.
+fn cube_points(rng: &mut Rng, n: usize, dims: usize, level: u32) -> Vec<u32> {
+    let side = 1u64 << level;
+    (0..n * dims).map(|_| rng.below(side) as u32).collect()
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n: usize = if fast { 1 << 13 } else { 1 << 18 };
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(2026);
+
+    // --- scalar vs batched-fast keys/sec per curve × d ---------------------
+    // (dims, level) pairs matching the index workloads; level is the
+    // u64-max-ish refinement each d actually runs at.
+    let configs = [(2usize, 16u32), (3, 10), (4, 8), (6, 8)];
+    let mut tab = Table::new(vec![
+        "curve",
+        "dims",
+        "level",
+        "scalar ns/key",
+        "batched ns/key",
+        "speedup",
+    ]);
+    for &(dims, level) in &configs {
+        let flat = cube_points(&mut rng, n, dims, level);
+        let count = n as u64;
+
+        // Each entry: (name, mapper as &dyn, scalar keying closure).
+        let zo = ZOrderNd::new(dims, level);
+        let gr = GrayNd::new(dims, level);
+        let hi = HilbertNd::new(dims, level);
+        let entries: [(&str, &dyn CurveMapperNd, Box<dyn Fn(&[u32]) -> u64 + '_>); 3] = [
+            ("zorder", &zo, Box::new(|p: &[u32]| zo.order_nd(p))),
+            ("gray", &gr, Box::new(|p: &[u32]| gr.order_nd(p))),
+            // order_nd is the LUT for Hilbert; order_point is the
+            // preserved scalar automaton.
+            ("hilbert", &hi, Box::new(|p: &[u32]| hi.order_point(p))),
+        ];
+        for (name, mapper, scalar) in &entries {
+            let m_scalar = bench.throughput(&format!("keys/{name}/d{dims}/scalar"), count, || {
+                let mut acc = 0u64;
+                for p in flat.chunks_exact(dims) {
+                    acc = acc.wrapping_add(scalar(p));
+                }
+                acc
+            });
+            let mut keys: Vec<u64> = Vec::with_capacity(n);
+            let m_batch = bench.throughput(&format!("keys/{name}/d{dims}/batched"), count, || {
+                keys.clear();
+                mapper.order_batch_nd(&flat, &mut keys);
+                keys.len()
+            });
+            // Bit-for-bit check on this exact input (acceptance).
+            keys.clear();
+            mapper.order_batch_nd(&flat, &mut keys);
+            for (i, p) in flat.chunks_exact(dims).enumerate() {
+                assert_eq!(keys[i], scalar(p), "{name} d={dims} fast != scalar at {p:?}");
+            }
+            tab.row(vec![
+                name.to_string(),
+                dims.to_string(),
+                level.to_string(),
+                format!("{:.2}", per_elem(&m_scalar)),
+                format!("{:.2}", per_elem(&m_batch)),
+                format!("{:.2}x", per_elem(&m_scalar) / per_elem(&m_batch)),
+            ]);
+        }
+    }
+    println!("\n== keys/sec: scalar digit loops vs fastkey batched ({n} pts) ==");
+    println!("   targets: zorder d2/d3 ≥ 5x (10x aspiration), hilbert > 1.5x");
+    print!("{}", tab.render());
+
+    // --- quantize + key: per-row legacy shape vs block pipeline ------------
+    let dims = 3usize;
+    let level = clamped_level(CurveKind::Hilbert, dims, 10);
+    let rows = n;
+    let data: Vec<f32> = (0..rows * dims).map(|_| rng.f32() * 1000.0).collect();
+    let points = Matrix { rows, cols: dims, data };
+    let quant = Quantizer::from_points(&points, dims, 1u32 << level);
+    let hil = HilbertNd::new(dims, level);
+    let m_legacy = bench.throughput("pipeline/legacy_per_row", rows as u64, || {
+        // The pre-fastkey shape: fresh flat buffer, per-row Vec growth,
+        // per-point scalar keying.
+        let mut flat = Vec::with_capacity(rows * dims);
+        for r in 0..rows {
+            quant.cells_into(points.row(r), &mut flat);
+        }
+        let mut keys = Vec::with_capacity(rows);
+        for p in flat.chunks_exact(dims) {
+            keys.push(hil.order_point(p));
+        }
+        keys.len()
+    });
+    let mut flat: Vec<u32> = Vec::new();
+    let mut keys: Vec<u64> = Vec::new();
+    let m_block = bench.throughput("pipeline/block_fast", rows as u64, || {
+        flat.clear();
+        keys.clear();
+        quant.cells_block(&points, &mut flat);
+        hil.order_batch_nd(&flat, &mut keys);
+        keys.len()
+    });
+    // Equality of the two pipelines on this input.
+    {
+        let mut lflat = Vec::new();
+        for r in 0..rows {
+            quant.cells_into(points.row(r), &mut lflat);
+        }
+        flat.clear();
+        quant.cells_block(&points, &mut flat);
+        assert_eq!(flat, lflat, "block quantize != per-row quantize");
+        keys.clear();
+        hil.order_batch_nd(&flat, &mut keys);
+        for (i, p) in flat.chunks_exact(dims).enumerate() {
+            assert_eq!(keys[i], hil.order_point(p), "pipeline keys diverge");
+        }
+    }
+    println!(
+        "\n== quantize+key d={dims}: legacy {:.2} ns/row vs block {:.2} ns/row ({:.2}x) ==",
+        per_elem(&m_legacy),
+        per_elem(&m_block),
+        per_elem(&m_legacy) / per_elem(&m_block)
+    );
+
+    // --- store ingest: legacy-emulated build vs the fast build -------------
+    let ingest_rows = if fast { 1 << 12 } else { 1 << 16 };
+    let idata: Vec<f32> = (0..ingest_rows * dims).map(|_| rng.f32() * 50.0).collect();
+    let ipoints = Matrix { rows: ingest_rows, cols: dims, data: idata };
+    let m_ingest_old = bench.throughput("ingest/legacy_emulated", ingest_rows as u64, || {
+        // What SfcIndex::build did before this pipeline: per-row
+        // quantize, per-point scalar keys, stable sort, row permute.
+        let q = Quantizer::from_points(&ipoints, dims, 1u32 << level);
+        let mut flat = Vec::with_capacity(ingest_rows * dims);
+        for r in 0..ingest_rows {
+            q.cells_into(ipoints.row(r), &mut flat);
+        }
+        let mut keys = Vec::with_capacity(ingest_rows);
+        for p in flat.chunks_exact(dims) {
+            keys.push(hil.order_point(p));
+        }
+        let mut order: Vec<u32> = (0..ingest_rows as u32).collect();
+        order.sort_by_key(|&i| keys[i as usize]);
+        permute_rows(&ipoints, &order).rows
+    });
+    let m_ingest_new = bench.throughput("ingest/sfcindex_build", ingest_rows as u64, || {
+        SfcIndex::build_with(&ipoints, level, CurveKind::Hilbert).len()
+    });
+    println!(
+        "\n== ingest d={dims}: legacy {:.2} ns/row vs fast build {:.2} ns/row ({:.2}x) ==",
+        per_elem(&m_ingest_old),
+        per_elem(&m_ingest_new),
+        per_elem(&m_ingest_old) / per_elem(&m_ingest_new)
+    );
+
+    bench.write_csv("reports/bench_keys.csv").unwrap();
+    write_json(&bench, "reports/bench_keys.json").unwrap();
+    println!("\nreports: reports/bench_keys.{{csv,json}}");
+}

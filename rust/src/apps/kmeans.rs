@@ -264,19 +264,25 @@ pub fn hilbert_point_order(points: &Matrix) -> Vec<u32> {
             hi[a] = hi[a].max(v);
         }
     }
-    let mut flat = Vec::with_capacity(n * d);
-    for p in 0..n {
-        for a in 0..d {
-            let range = hi[a] - lo[a];
-            let q = if range > 0.0 {
-                (((points.at(p, a) - lo[a]) / range) * (bins - 1) as f32).round() as u32
-            } else {
-                0
-            };
-            flat.push(q.min(bins - 1));
+    // Block quantization: per-axis range and degeneracy hoisted out of
+    // the point loop (the float expression itself is unchanged — same
+    // bins bit for bit), flat buffer from the engine's scratch pool.
+    let degenerate: Vec<bool> = (0..d).map(|a| hi[a] - lo[a] <= 0.0).collect();
+    engine::with_cells_scratch(|flat| {
+        flat.resize(n * d, 0);
+        for (p, row) in flat.chunks_exact_mut(d).enumerate() {
+            for (a, slot) in row.iter_mut().enumerate() {
+                let q = if degenerate[a] {
+                    0
+                } else {
+                    let range = hi[a] - lo[a];
+                    (((points.at(p, a) - lo[a]) / range) * (bins - 1) as f32).round() as u32
+                };
+                *slot = q.min(bins - 1);
+            }
         }
-    }
-    hilbert_argsort(&flat, d, level)
+        hilbert_argsort(flat, d, level)
+    })
 }
 
 /// Reorder matrix rows by `order` (a permutation of `0..m.rows`).

@@ -39,6 +39,7 @@
 //! number of actual distance computations.
 
 use super::Matrix;
+use crate::curves::engine;
 use crate::curves::engine::{CurveMapperNd, FgfMapper, WindowNd};
 use crate::curves::fgf::{FgfStats, HilbertSet};
 use crate::curves::hilbert::Hilbert;
@@ -334,14 +335,16 @@ pub fn join_sfc_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, Join
     let level = needed.min(allowed);
     let shift = needed - level;
     let mapper = HilbertNd::new(cd, level);
-    let mut flat = Vec::with_capacity(cells.len() * cd);
-    for (c, _) in cells {
-        for &v in &c[..cd] {
-            flat.push(v >> shift);
-        }
-    }
     let mut cell_keys = Vec::with_capacity(cells.len());
-    mapper.order_batch_nd(&flat, &mut cell_keys);
+    engine::with_cells_scratch(|flat| {
+        flat.reserve(cells.len() * cd);
+        for (c, _) in cells {
+            for &v in &c[..cd] {
+                flat.push(v >> shift);
+            }
+        }
+        mapper.order_batch_nd(flat, &mut cell_keys);
+    });
     let order = argsort_stable(&cell_keys);
     let keys: Vec<u64> = order.iter().map(|&idx| cell_keys[idx as usize]).collect();
 

@@ -954,6 +954,56 @@ impl<'a> SegmentsNd<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Batch scratch pools
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CELLS_SCRATCH: std::cell::Cell<Vec<u32>> = const { std::cell::Cell::new(Vec::new()) };
+    static KEYS_SCRATCH: std::cell::Cell<Vec<u64>> = const { std::cell::Cell::new(Vec::new()) };
+    static PAIRS_SCRATCH: std::cell::Cell<Vec<(u32, u32)>> =
+        const { std::cell::Cell::new(Vec::new()) };
+}
+
+/// Run `f` with a reusable thread-local cell buffer (cleared, capacity
+/// retained across calls) — keeps batched keying allocation-free in
+/// steady state. Callers fill the buffer with flattened coordinates and
+/// hand it to [`CurveMapperNd::order_batch_nd`]; the buffer must not
+/// escape `f`. Re-entrant calls are safe (the inner call simply gets a
+/// fresh buffer).
+pub fn with_cells_scratch<R>(f: impl FnOnce(&mut Vec<u32>) -> R) -> R {
+    CELLS_SCRATCH.with(|c| {
+        let mut buf = c.take();
+        buf.clear();
+        let r = f(&mut buf);
+        c.set(buf);
+        r
+    })
+}
+
+/// Companion of [`with_cells_scratch`] for order-value buffers.
+pub fn with_keys_scratch<R>(f: impl FnOnce(&mut Vec<u64>) -> R) -> R {
+    KEYS_SCRATCH.with(|c| {
+        let mut buf = c.take();
+        buf.clear();
+        let r = f(&mut buf);
+        c.set(buf);
+        r
+    })
+}
+
+/// Pair buffer for the 2-D adapter's batched paths (private: only the
+/// `adapt_curve_mapper_2d!` expansions use it).
+fn with_pairs_scratch<R>(f: impl FnOnce(&mut Vec<(u32, u32)>) -> R) -> R {
+    PAIRS_SCRATCH.with(|c| {
+        let mut buf = c.take();
+        buf.clear();
+        let r = f(&mut buf);
+        c.set(buf);
+        r
+    })
+}
+
 /// An **object-safe** bijective order mapping `C(p₀,…,p_{d−1}) ⇄ c` over
 /// a d-dimensional grid — the paper's §2 abstraction generalized from
 /// "two" to "two or higher dimensional" spaces (Haverkort
@@ -1016,6 +1066,16 @@ pub trait CurveMapperNd: Send + Sync {
         }
     }
 
+    /// Which conversion substrate the batched paths run on — fast-path
+    /// introspection for tests and reports (see
+    /// [`fastkey`](crate::curves::fastkey)). The default — inherited by
+    /// the 2-D adapters — reports the scalar digit loop; the native Nd
+    /// mappers with mask-ladder or LUT batch overrides report those, and
+    /// `tests/fastkey.rs` asserts they actually do (no silent fallback).
+    fn key_path_nd(&self) -> crate::curves::fastkey::KeyPath {
+        crate::curves::fastkey::KeyPath::ScalarDigits
+    }
+
     /// Stream the points whose order values fall in `range` (clamped to
     /// the domain), in curve order — the d-dim curve segment the
     /// coordinator schedules across workers.
@@ -1042,31 +1102,38 @@ pub trait CurveMapperNd: Send + Sync {
             "window too large ({cells} cells) for the generic scan decomposition"
         );
         let d = self.dims();
-        let mut flat = Vec::with_capacity(cells as usize * d);
-        let mut p = w.lo.clone();
-        loop {
-            flat.extend_from_slice(&p);
-            let mut a = 0;
-            while a < d {
-                if p[a] < w.hi[a] {
-                    p[a] += 1;
+        // The flattened odometer scan and its keys live in the
+        // thread-local scratch pools: repeated decompositions are
+        // allocation-free in steady state.
+        with_cells_scratch(|flat| {
+            flat.reserve(cells as usize * d);
+            let mut p = w.lo.clone();
+            loop {
+                flat.extend_from_slice(&p);
+                let mut a = 0;
+                while a < d {
+                    if p[a] < w.hi[a] {
+                        p[a] += 1;
+                        break;
+                    }
+                    p[a] = w.lo[a];
+                    a += 1;
+                }
+                if a == d {
                     break;
                 }
-                p[a] = w.lo[a];
-                a += 1;
             }
-            if a == d {
-                break;
-            }
-        }
-        let mut orders = Vec::with_capacity(cells as usize);
-        self.order_batch_nd(&flat, &mut orders);
-        orders.sort_unstable();
-        let mut out = Vec::new();
-        for c in orders {
-            push_merge_range(&mut out, c, c + 1);
-        }
-        out
+            with_keys_scratch(|orders| {
+                orders.reserve(cells as usize);
+                self.order_batch_nd(flat, orders);
+                orders.sort_unstable();
+                let mut out = Vec::new();
+                for &c in orders.iter() {
+                    push_merge_range(&mut out, c, c + 1);
+                }
+                out
+            })
+        })
     }
 }
 
@@ -1225,19 +1292,22 @@ macro_rules! adapt_curve_mapper_2d {
 
             fn order_batch_nd(&self, points: &[u32], out: &mut Vec<u64>) {
                 debug_assert_eq!(points.len() % 2, 0);
-                let pairs: Vec<(u32, u32)> =
-                    points.chunks_exact(2).map(|p| (p[0], p[1])).collect();
-                CurveMapper::order_batch(self, &pairs, out);
+                with_pairs_scratch(|pairs| {
+                    pairs.extend(points.chunks_exact(2).map(|p| (p[0], p[1])));
+                    CurveMapper::order_batch(self, pairs, out);
+                });
             }
 
             fn coords_batch_nd(&self, orders: &[u64], out: &mut Vec<u32>) {
-                let mut pairs = Vec::with_capacity(orders.len());
-                CurveMapper::coords_batch(self, orders, &mut pairs);
-                out.reserve(pairs.len() * 2);
-                for (i, j) in pairs {
-                    out.push(i);
-                    out.push(j);
-                }
+                with_pairs_scratch(|pairs| {
+                    pairs.reserve(orders.len());
+                    CurveMapper::coords_batch(self, orders, pairs);
+                    out.reserve(pairs.len() * 2);
+                    for &(i, j) in pairs.iter() {
+                        out.push(i);
+                        out.push(j);
+                    }
+                });
             }
 
             fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {

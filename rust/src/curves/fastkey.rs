@@ -1,0 +1,621 @@
+//! Bit-parallel key pipeline: branchless d-way interleaving and
+//! table-driven Hilbert state stepping.
+//!
+//! Every hot path in the crate (the [`SfcIndex`](crate::index::SfcIndex)
+//! build, [`SfcStore`](crate::index::SfcStore) ingest, the streaming
+//! k-means sharding and the simjoin cell keying) funnels through
+//! [`CurveMapperNd::order_batch_nd`], so the per-key cost of the curve
+//! conversions is the floor under the whole system. This module replaces
+//! the bit-at-a-time digit loops with two branchless substrates, wired in
+//! transparently under the batched entry points of
+//! [`ZOrderNd`](super::ndim::ZOrderNd), [`GrayNd`](super::ndim::GrayNd)
+//! and [`HilbertNd`](super::ndim::HilbertNd):
+//!
+//! ## 1. The d-way magic-mask ladder ([`MaskLadder`])
+//!
+//! The 2-D `spread`/`compact` pair in [`super::zorder`] (the classic
+//! `_part1by1`/`_unpart1by1` construction, software `PDEP`/`PEXT`) is the
+//! stride-2 case of a general scheme: to scatter the low `level` bits of
+//! a coordinate to stride `d`, repeatedly split each block of bits in
+//! half and shift the upper half left until every bit sits in its own
+//! d-wide slot.  With block size `b` (halving from
+//! `2^⌈log₂ level⌉` down to 2) one step is
+//!
+//! ```text
+//! x = (x | (x << b·(d−1))) & mask_b      mask_b = Σⱼ (2^b − 1) << j·b·d
+//! ```
+//!
+//! i.e. ⌈log₂ level⌉ shift-or-mask steps per coordinate instead of
+//! `level` data-dependent loop iterations — and no branches, so the
+//! compiler auto-vectorizes the per-point loop. The inverse ladder runs
+//! the same steps mirrored (`>>` instead of `<<`, masks in reverse).
+//! A full d-point interleave is then `d` spreads OR-ed at offsets
+//! `d−1−a` (axis 0 occupies the **high** bit of each d-bit digit,
+//! matching the scalar `interleave` in [`super::ndim`] bit for bit).
+//!
+//! ## 2. The Hilbert transition LUT ([`HilbertLut`])
+//!
+//! The Butz/Lawder automaton in [`HilbertNd`](super::ndim::HilbertNd)
+//! carries an orientation `(entry vertex e, direction d)` across digits
+//! and spends two rotations, a Gray rank and two trailing-ones counts per
+//! digit. Both the transformation and the orientation update depend only
+//! on `(e, d)` and the current digit, so the whole step is precomputable:
+//! with states `s = e·n + d` (n = dims),
+//!
+//! ```text
+//! fwd[s, ℓ] = (w, s′)      w  = gray⁻¹(rotr(ℓ ⊕ e, d+1))
+//! inv[s, w] = (ℓ, s′)      ℓ  = rotl(gray(w), d+1) ⊕ e
+//!                          s′ from  e ⊕= rotl(entry(w), d+1),
+//!                                   d  = (d + dir(w) + 1) mod n
+//! ```
+//!
+//! — one array lookup per d-bit digit, in either direction. This is the
+//! paper's §3 Mealy-automaton idea (precomputed state-transition tables
+//! instead of recomputed geometry) generalized to d dimensions; at d = 2
+//! the states collapse onto the four `U/D/A/C` patterns of
+//! [`super::hilbert::TRANS`] and the module additionally composes the
+//! digit table into a **byte-at-a-time** table over `state × 256` that
+//! consumes four digit pairs per lookup.
+//!
+//! Tables are built lazily, once per process per dimension count
+//! ([`hilbert_lut`]), because they depend only on `dims` — the level
+//! enters solely through the parity start state ([`HilbertLut::start_state`]).
+//!
+//! ## Path selection
+//!
+//! | curve | dims | path ([`KeyPath`]) |
+//! |---|---|---|
+//! | Z-order / Gray | 1..=8 | [`KeyPath::MaskLadder`] |
+//! | Hilbert | 2 | [`KeyPath::HilbertByteLut`] |
+//! | Hilbert | 1, 3..=8 | [`KeyPath::HilbertLut`] |
+//! | any | > 8 | [`KeyPath::ScalarDigits`] (the digit loops) |
+//!
+//! Above eight dimensions the level is at most 7 (`dims·level ≤ 63`), so
+//! the digit loops are short and the LUT footprint (`n·2^n` states) stops
+//! paying for itself; the scalar loops remain the reference semantics and
+//! the fallback. [`CurveMapperNd::key_path_nd`] reports the selected path
+//! so tests can assert the fast paths are actually live (see
+//! `tests/fastkey.rs`).
+//!
+//! Provenance: the stride-2 ladder constants follow the `_part1by1`
+//! exemplar in SNIPPETS.md; the automaton tabulation follows the paper's
+//! §3 transition tables (Fig 3) and Hamilton/Lawder's `entry`/`dir`
+//! formulation as implemented in [`super::ndim`]. Equivalence with the
+//! scalar loops is enforced bit for bit by `tests/fastkey.rs` over every
+//! `CurveKind`, d ∈ {2, 3, 4, 6} and levels including the `u64` maximum.
+//!
+//! [`CurveMapperNd::order_batch_nd`]: super::engine::CurveMapperNd::order_batch_nd
+//! [`CurveMapperNd::key_path_nd`]: super::engine::CurveMapperNd::key_path_nd
+
+use super::gray::{gray, gray_inv};
+use super::ndim::HilbertNd;
+use std::sync::OnceLock;
+
+/// Largest dimension count the mask ladder is used for; above this the
+/// scalar digit loops run (they are at most 7 iterations there, since
+/// `dims·level ≤ 63`).
+pub const MAX_LADDER_DIMS: usize = 8;
+
+/// Largest dimension count a Hilbert transition LUT is built for.
+pub const MAX_HILBERT_LUT_DIMS: usize = 8;
+
+/// Which conversion substrate a mapper's batched paths run on.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum KeyPath {
+    /// Branchless magic-mask interleave/deinterleave ([`MaskLadder`]).
+    MaskLadder,
+    /// Hilbert digit-at-a-time transition LUT ([`HilbertLut`]).
+    HilbertLut,
+    /// Hilbert byte-at-a-time LUT (d = 2 only): four digit pairs per
+    /// lookup.
+    HilbertByteLut,
+    /// The scalar bit-at-a-time digit loops (reference semantics).
+    ScalarDigits,
+}
+
+impl KeyPath {
+    /// Short label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            KeyPath::MaskLadder => "mask-ladder",
+            KeyPath::HilbertLut => "hilbert-lut",
+            KeyPath::HilbertByteLut => "hilbert-byte-lut",
+            KeyPath::ScalarDigits => "scalar",
+        }
+    }
+
+    /// True for every path except the scalar fallback.
+    pub fn is_fast(self) -> bool {
+        self != KeyPath::ScalarDigits
+    }
+}
+
+/// Path selected for plain d-way interleaving (Z-order and Gray).
+pub fn interleave_path(dims: usize) -> KeyPath {
+    if (1..=MAX_LADDER_DIMS).contains(&dims) {
+        KeyPath::MaskLadder
+    } else {
+        KeyPath::ScalarDigits
+    }
+}
+
+/// Path selected for the Hilbert automaton at `dims` dimensions.
+pub fn hilbert_path(dims: usize) -> KeyPath {
+    match dims {
+        2 => KeyPath::HilbertByteLut,
+        d if (1..=MAX_HILBERT_LUT_DIMS).contains(&d) => KeyPath::HilbertLut,
+        _ => KeyPath::ScalarDigits,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MaskLadder
+// ---------------------------------------------------------------------------
+
+/// Precomputed shift/mask ladder spreading the low `level` bits of a
+/// coordinate to stride `dims` (and back) — the d-way generalization of
+/// [`super::zorder::spread`]/[`super::zorder::compact`].
+///
+/// Construction is a handful of integer ops (at most five steps, since
+/// `level ≤ 31`), so callers build one per batch and hoist it out of the
+/// per-point loop; no allocation, no global state.
+#[derive(Copy, Clone, Debug)]
+pub struct MaskLadder {
+    dims: u32,
+    level: u32,
+    len: usize,
+    shifts: [u32; 5],
+    masks: [u64; 5],
+    /// Bits at positions `j·dims` — the final spread layout.
+    stride_mask: u64,
+}
+
+impl MaskLadder {
+    /// Ladder for `dims ≥ 1` coordinates of `level ∈ [1, 31]` bits with
+    /// `dims·level ≤ 64`.
+    pub fn new(dims: usize, level: u32) -> MaskLadder {
+        assert!(dims >= 1, "dims must be ≥ 1");
+        assert!((1..=31).contains(&level), "level {level} outside [1, 31]");
+        assert!(
+            dims as u32 * level <= 64,
+            "dims·level = {} exceeds 64 bits",
+            dims as u32 * level
+        );
+        let d = dims as u32;
+        let mut shifts = [0u32; 5];
+        let mut masks = [0u64; 5];
+        let mut len = 0;
+        let mut b = level.next_power_of_two();
+        while b > 1 {
+            b >>= 1;
+            shifts[len] = b * (d - 1);
+            let mut mask = 0u64;
+            let mut pos = 0u32;
+            while pos < 64 {
+                mask |= ((1u64 << b) - 1) << pos;
+                pos += b * d;
+            }
+            masks[len] = mask;
+            len += 1;
+        }
+        let stride_mask = if len > 0 { masks[len - 1] } else { 1 };
+        MaskLadder { dims: d, level, len, shifts, masks, stride_mask }
+    }
+
+    /// Dimensions the ladder interleaves.
+    pub fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    /// Bits per coordinate.
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Scatter the low `level` bits of `x` to stride `dims` (bit `i` of
+    /// `x` lands at bit `i·dims`) — software `PDEP(x, stride_mask)`.
+    #[inline]
+    pub fn spread(&self, x: u32) -> u64 {
+        let mut x = (x as u64) & ((1u64 << self.level) - 1);
+        for i in 0..self.len {
+            x = (x | (x << self.shifts[i])) & self.masks[i];
+        }
+        x
+    }
+
+    /// Inverse of [`MaskLadder::spread`]: gather the bits at stride
+    /// `dims` back into a dense coordinate — software `PEXT`.
+    #[inline]
+    pub fn compact(&self, x: u64) -> u32 {
+        let mut x = x & self.stride_mask;
+        let mut i = self.len;
+        while i > 0 {
+            i -= 1;
+            let mask = if i > 0 { self.masks[i - 1] } else { !0u64 };
+            x = (x | (x >> self.shifts[i])) & mask;
+        }
+        (x & ((1u64 << self.level) - 1)) as u32
+    }
+
+    /// d-way interleave with axis 0 in the **high** bit of each digit —
+    /// bit-for-bit the scalar `interleave` of [`super::ndim`] (the
+    /// Z-order/Gray word layout).
+    #[inline]
+    pub fn interleave(&self, p: &[u32]) -> u64 {
+        debug_assert_eq!(p.len(), self.dims as usize);
+        let top = self.dims - 1;
+        let mut h = 0u64;
+        for (a, &c) in p.iter().enumerate() {
+            h |= self.spread(c) << (top - a as u32);
+        }
+        h
+    }
+
+    /// d-way interleave with axis 0 in the **low** bit of each digit —
+    /// the digit layout the Hilbert automaton consumes (`ℓ` bit `k` is
+    /// axis `k`).
+    #[inline]
+    pub fn interleave_rev(&self, p: &[u32]) -> u64 {
+        debug_assert_eq!(p.len(), self.dims as usize);
+        let mut h = 0u64;
+        for (a, &c) in p.iter().enumerate() {
+            h |= self.spread(c) << a as u32;
+        }
+        h
+    }
+
+    /// Inverse of [`MaskLadder::interleave`].
+    #[inline]
+    pub fn deinterleave(&self, h: u64, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.dims as usize);
+        let top = self.dims - 1;
+        for (a, o) in out.iter_mut().enumerate() {
+            *o = self.compact(h >> (top - a as u32));
+        }
+    }
+
+    /// Inverse of [`MaskLadder::interleave_rev`].
+    #[inline]
+    pub fn deinterleave_rev(&self, h: u64, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.dims as usize);
+        for (a, o) in out.iter_mut().enumerate() {
+            *o = self.compact(h >> a as u32);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HilbertLut
+// ---------------------------------------------------------------------------
+
+/// Precomputed Butz/Lawder transition tables for the d-dimensional
+/// Hilbert automaton: one lookup per d-bit digit over states
+/// `s = e·n + d` (entry vertex × direction), plus a byte-at-a-time
+/// composition at d = 2. Built once per process per `dims` via
+/// [`hilbert_lut`]; the level only picks the start state.
+pub struct HilbertLut {
+    dims: u32,
+    /// `fwd[s << n | ℓ] = w | s′ << 8` — coordinate digit to order digit.
+    fwd: Vec<u32>,
+    /// `inv[s << n | w] = ℓ | s′ << 8` — order digit to coordinate digit.
+    inv: Vec<u32>,
+    /// d = 2 only: `byte_fwd[s << 8 | zbyte] = hbyte | s′ << 8` over four
+    /// digit pairs per step (empty otherwise).
+    byte_fwd: Vec<u16>,
+    /// d = 2 only: inverse byte table (empty otherwise).
+    byte_inv: Vec<u16>,
+}
+
+impl HilbertLut {
+    /// Tabulate the automaton of [`HilbertNd`] at `dims ∈ [1, 8]`.
+    fn build(dims: usize) -> HilbertLut {
+        assert!(
+            (1..=MAX_HILBERT_LUT_DIMS).contains(&dims),
+            "no LUT beyond {MAX_HILBERT_LUT_DIMS} dims"
+        );
+        let n = dims as u32;
+        let digits = 1usize << n;
+        let nstates = dims << n;
+        let mut fwd = vec![0u32; nstates << n];
+        let mut inv = vec![0u32; nstates << n];
+        for e in 0..digits as u64 {
+            for d in 0..n {
+                let s = e as usize * dims + d as usize;
+                let s2_of = |w: u64| {
+                    let e2 = e ^ HilbertNd::rotl(HilbertNd::entry(w), d + 1, n);
+                    let d2 = (d + HilbertNd::dir(w, n) + 1) % n;
+                    (e2 as usize * dims + d2 as usize) as u32
+                };
+                for l in 0..digits as u64 {
+                    let w = gray_inv(HilbertNd::rotr(l ^ e, d + 1, n)) & (digits as u64 - 1);
+                    fwd[(s << n) | l as usize] = w as u32 | (s2_of(w) << 8);
+                }
+                for w in 0..digits as u64 {
+                    let l = HilbertNd::rotl(gray(w), d + 1, n) ^ e;
+                    inv[(s << n) | w as usize] = l as u32 | (s2_of(w) << 8);
+                }
+            }
+        }
+        // d = 2: compose four digit steps into one byte step.
+        let (byte_fwd, byte_inv) = if dims == 2 {
+            let mut bf = vec![0u16; nstates << 8];
+            let mut bi = vec![0u16; nstates << 8];
+            for s0 in 0..nstates {
+                for byte in 0..256usize {
+                    let (mut s, mut out) = (s0, 0u16);
+                    for k in [3usize, 2, 1, 0] {
+                        let l = (byte >> (2 * k)) & 3;
+                        let p = fwd[(s << 2) | l];
+                        out = (out << 2) | (p & 0xFF) as u16;
+                        s = (p >> 8) as usize;
+                    }
+                    bf[(s0 << 8) | byte] = out | ((s as u16) << 8);
+                    let (mut s, mut out) = (s0, 0u16);
+                    for k in [3usize, 2, 1, 0] {
+                        let w = (byte >> (2 * k)) & 3;
+                        let p = inv[(s << 2) | w];
+                        out = (out << 2) | (p & 0xFF) as u16;
+                        s = (p >> 8) as usize;
+                    }
+                    bi[(s0 << 8) | byte] = out | ((s as u16) << 8);
+                }
+            }
+            (bf, bi)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        HilbertLut { dims: n, fwd, inv, byte_fwd, byte_inv }
+    }
+
+    /// Dimensions the tables cover.
+    pub fn dims(&self) -> usize {
+        self.dims as usize
+    }
+
+    /// Start state for a `level`-digit conversion — the parity rule of
+    /// [`HilbertNd`] (`e = 0`, direction `1 mod dims` at even levels,
+    /// `0` at odd), encoded as `e·dims + d`.
+    #[inline]
+    pub fn start_state(&self, level: u32) -> usize {
+        if level % 2 == 0 {
+            (1 % self.dims) as usize
+        } else {
+            0
+        }
+    }
+
+    /// ℋ_d of a coordinate word in `interleave_rev` layout (axis `k` at
+    /// digit bit `k`): one table lookup per digit, byte-at-a-time at
+    /// d = 2.
+    #[inline]
+    pub fn order_word(&self, z: u64, level: u32) -> u64 {
+        self.order_word_from(z, level, self.start_state(level))
+    }
+
+    /// [`HilbertLut::order_word`] from an explicit start state (hoisted
+    /// by batch loops).
+    #[inline]
+    pub fn order_word_from(&self, z: u64, level: u32, s0: usize) -> u64 {
+        let n = self.dims;
+        let mut s = s0;
+        let mut h = 0u64;
+        let mut i = level;
+        if n == 2 {
+            while i % 4 != 0 {
+                i -= 1;
+                let l = ((z >> (2 * i)) & 3) as usize;
+                let p = self.fwd[(s << 2) | l];
+                h = (h << 2) | (p & 0xFF) as u64;
+                s = (p >> 8) as usize;
+            }
+            while i > 0 {
+                i -= 4;
+                let byte = ((z >> (2 * i)) & 0xFF) as usize;
+                let p = self.byte_fwd[(s << 8) | byte];
+                h = (h << 8) | (p & 0xFF) as u64;
+                s = (p >> 8) as usize;
+            }
+        } else {
+            let mask = (1u64 << n) - 1;
+            while i > 0 {
+                i -= 1;
+                let l = ((z >> (i * n)) & mask) as usize;
+                let p = self.fwd[(s << n) | l];
+                h = (h << n) | (p & 0xFF) as u64;
+                s = (p >> 8) as usize;
+            }
+        }
+        h
+    }
+
+    /// ℋ_d⁻¹ of an order value, as a coordinate word in
+    /// `interleave_rev` layout (feed through
+    /// [`MaskLadder::deinterleave_rev`] for the coordinates).
+    #[inline]
+    pub fn coords_word(&self, h: u64, level: u32) -> u64 {
+        let n = self.dims;
+        let mut s = self.start_state(level);
+        let mut z = 0u64;
+        let mut i = level;
+        if n == 2 {
+            while i % 4 != 0 {
+                i -= 1;
+                let w = ((h >> (2 * i)) & 3) as usize;
+                let p = self.inv[(s << 2) | w];
+                z |= ((p & 0xFF) as u64) << (2 * i);
+                s = (p >> 8) as usize;
+            }
+            while i > 0 {
+                i -= 4;
+                let byte = ((h >> (2 * i)) & 0xFF) as usize;
+                let p = self.byte_inv[(s << 8) | byte];
+                z |= ((p & 0xFF) as u64) << (2 * i);
+                s = (p >> 8) as usize;
+            }
+        } else {
+            let mask = (1u64 << n) - 1;
+            while i > 0 {
+                i -= 1;
+                let w = ((h >> (i * n)) & mask) as usize;
+                let p = self.inv[(s << n) | w];
+                z |= ((p & 0xFF) as u64) << (i * n);
+                s = (p >> 8) as usize;
+            }
+        }
+        z
+    }
+
+    /// One forward digit step: `(order digit, next state)` — exposed for
+    /// steppers that interleave table lookups with other per-digit work.
+    #[inline]
+    pub fn fwd_step(&self, s: usize, l: u64) -> (u64, usize) {
+        let p = self.fwd[(s << self.dims) | l as usize];
+        ((p & 0xFF) as u64, (p >> 8) as usize)
+    }
+
+    /// One inverse digit step: `(coordinate digit ℓ, next state)` — the
+    /// state stepping the decomposition descent and the run decoder use.
+    #[inline]
+    pub fn inv_step(&self, s: usize, w: u64) -> (u64, usize) {
+        let p = self.inv[(s << self.dims) | w as usize];
+        ((p & 0xFF) as u64, (p >> 8) as usize)
+    }
+}
+
+/// The process-wide [`HilbertLut`] for `dims`, built on first use
+/// (`None` beyond [`MAX_HILBERT_LUT_DIMS`]). The tables depend only on
+/// the dimension count, so every mapper, descent and store shard shares
+/// one copy.
+pub fn hilbert_lut(dims: usize) -> Option<&'static HilbertLut> {
+    const NONE: OnceLock<HilbertLut> = OnceLock::new();
+    static LUTS: [OnceLock<HilbertLut>; MAX_HILBERT_LUT_DIMS + 1] =
+        [NONE; MAX_HILBERT_LUT_DIMS + 1];
+    if (1..=MAX_HILBERT_LUT_DIMS).contains(&dims) {
+        Some(LUTS[dims].get_or_init(|| HilbertLut::build(dims)))
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Bit-at-a-time reference interleave (the ndim layout).
+    fn slow_interleave(p: &[u32], level: u32) -> u64 {
+        let mut h = 0u64;
+        let mut l = level;
+        while l > 0 {
+            l -= 1;
+            for &c in p {
+                h = (h << 1) | ((c >> l) & 1) as u64;
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn ladder_matches_slow_interleave_all_dims() {
+        let mut rng = Rng::new(7);
+        for dims in 1..=8usize {
+            let max_level = (63 / dims as u32).min(31);
+            for level in [1, 2, 3, max_level] {
+                let lad = MaskLadder::new(dims, level);
+                let side = 1u64 << level;
+                for _ in 0..40 {
+                    let p: Vec<u32> = (0..dims).map(|_| rng.below(side) as u32).collect();
+                    let want = slow_interleave(&p, level);
+                    assert_eq!(lad.interleave(&p), want, "d={dims} L={level} p={p:?}");
+                    let mut back = vec![0u32; dims];
+                    lad.deinterleave(want, &mut back);
+                    assert_eq!(back, p, "d={dims} L={level}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rev_layout_is_digit_reversal() {
+        let lad = MaskLadder::new(3, 4);
+        let p = [0b1010u32, 0b0110, 0b0011];
+        let fwd = lad.interleave(&p);
+        let rev = lad.interleave_rev(&p);
+        for i in 0..4 {
+            let df = (fwd >> (3 * i)) & 7;
+            let dr = (rev >> (3 * i)) & 7;
+            let flipped = ((df & 1) << 2) | (df & 2) | ((df >> 2) & 1);
+            assert_eq!(dr, flipped, "digit {i}");
+        }
+        let mut back = [0u32; 3];
+        lad.deinterleave_rev(rev, &mut back);
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn spread_matches_2d_magic_masks() {
+        // The stride-2 ladder must agree with the classic _part1by1
+        // constants in curves::zorder.
+        let lad = MaskLadder::new(2, 31);
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let x = rng.below(1 << 31) as u32;
+            assert_eq!(lad.spread(x), crate::curves::zorder::spread(x));
+            assert_eq!(lad.compact(lad.spread(x)), x);
+        }
+    }
+
+    #[test]
+    fn lut_roundtrips_and_matches_scalar() {
+        let mut rng = Rng::new(11);
+        for dims in 1..=8usize {
+            let lut = hilbert_lut(dims).unwrap();
+            let max_level = (63 / dims as u32).min(31);
+            for level in [1, 2, max_level] {
+                let lad = MaskLadder::new(dims, level);
+                let m = HilbertNd::new(dims, level);
+                let side = 1u64 << level;
+                for _ in 0..30 {
+                    let p: Vec<u32> = (0..dims).map(|_| rng.below(side) as u32).collect();
+                    let want = m.order_point(&p);
+                    let got = lut.order_word(lad.interleave_rev(&p), level);
+                    assert_eq!(got, want, "d={dims} L={level} p={p:?}");
+                    let mut back = vec![0u32; dims];
+                    lad.deinterleave_rev(lut.coords_word(want, level), &mut back);
+                    assert_eq!(back, p, "d={dims} L={level}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_table_composes_digit_table() {
+        let lut = hilbert_lut(2).unwrap();
+        for s0 in 0..8usize {
+            for byte in 0..256u64 {
+                let (mut s, mut out) = (s0, 0u64);
+                for k in [3u32, 2, 1, 0] {
+                    let (w, s2) = lut.fwd_step(s, (byte >> (2 * k)) & 3);
+                    out = (out << 2) | w;
+                    s = s2;
+                }
+                let p = lut.byte_fwd[(s0 << 8) | byte as usize];
+                assert_eq!((p & 0xFF) as u64, out, "s={s0} byte={byte}");
+                assert_eq!((p >> 8) as usize, s, "s={s0} byte={byte}");
+            }
+        }
+    }
+
+    #[test]
+    fn path_selection_table() {
+        assert_eq!(interleave_path(2), KeyPath::MaskLadder);
+        assert_eq!(interleave_path(8), KeyPath::MaskLadder);
+        assert_eq!(interleave_path(9), KeyPath::ScalarDigits);
+        assert_eq!(hilbert_path(2), KeyPath::HilbertByteLut);
+        assert_eq!(hilbert_path(3), KeyPath::HilbertLut);
+        assert_eq!(hilbert_path(8), KeyPath::HilbertLut);
+        assert_eq!(hilbert_path(9), KeyPath::ScalarDigits);
+        assert!(KeyPath::MaskLadder.is_fast());
+        assert!(!KeyPath::ScalarDigits.is_fast());
+    }
+}

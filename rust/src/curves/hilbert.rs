@@ -23,7 +23,9 @@
 //! therefore consistent across all resolutions `L ≥ L(i,j)`.
 
 use super::engine::{split_consecutive_runs, BATCH};
+use super::fastkey;
 use super::nonrecursive::HilbertIter;
+use super::zorder;
 use super::SpaceFillingCurve;
 
 /// Automaton states, indexed `U=0, D=1, A=2, C=3`.
@@ -170,8 +172,12 @@ impl SpaceFillingCurve for Hilbert {
 
     /// Batched ℋ(i,j): hoists the effective-level/parity computation out
     /// of the element loop, once per [`BATCH`]-value chunk (sound by the
-    /// §3 parity rule: any even level ≥ the effective level agrees).
+    /// §3 parity rule: any even level ≥ the effective level agrees), and
+    /// steps the automaton byte-at-a-time through the precomputed
+    /// [`fastkey`] transition table — four bit pairs per lookup instead
+    /// of one Mealy transition per bit pair.
     fn order_batch_static(pairs: &[(u32, u32)], out: &mut Vec<u64>) {
+        let lut = fastkey::hilbert_lut(2).expect("d = 2 Hilbert LUT always exists");
         for chunk in pairs.chunks(BATCH) {
             let mut m = 0u32;
             for &(i, j) in chunk {
@@ -179,8 +185,11 @@ impl SpaceFillingCurve for Hilbert {
             }
             let bits = 32 - m.leading_zeros();
             let level = (bits + 1) & !1; // round up to even
+            let s0 = lut.start_state(level);
             for &(i, j) in chunk {
-                out.push(Self::order_at_level(i, j, level));
+                // interleave_rev layout: axis 0 (i) at each digit's low bit.
+                let z = zorder::spread(i) | (zorder::spread(j) << 1);
+                out.push(lut.order_word_from(z, level, s0));
             }
         }
     }

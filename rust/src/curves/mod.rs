@@ -84,6 +84,7 @@
 
 pub mod canonic;
 pub mod engine;
+pub mod fastkey;
 pub mod fgf;
 pub mod fur;
 pub mod gray;

@@ -41,6 +41,7 @@ use super::engine::{
     decompose_radix_nd, push_merge_range, split_consecutive_runs, CurveMapperNd, DomainNd,
     SegmentsNd, WindowNd,
 };
+use super::fastkey::{self, hilbert_lut, KeyPath, MaskLadder, MAX_LADDER_DIMS};
 use super::gray::{gray, gray_inv};
 use std::ops::Range;
 
@@ -286,6 +287,46 @@ impl CurveMapperNd for ZOrderNd {
         deinterleave(c, self.dims, self.level, out);
     }
 
+    fn order_batch_nd(&self, points: &[u32], out: &mut Vec<u64>) {
+        // Fast path: one mask ladder hoisted over the whole batch, a
+        // branchless spread-and-OR per point (curves::fastkey).
+        let d = self.dims as usize;
+        debug_assert_eq!(points.len() % d, 0);
+        out.reserve(points.len() / d);
+        if d <= MAX_LADDER_DIMS {
+            let lad = MaskLadder::new(d, self.level);
+            for p in points.chunks_exact(d) {
+                out.push(lad.interleave(p));
+            }
+        } else {
+            for p in points.chunks_exact(d) {
+                out.push(interleave(p, self.level));
+            }
+        }
+    }
+
+    fn coords_batch_nd(&self, orders: &[u64], out: &mut Vec<u32>) {
+        let d = self.dims as usize;
+        let start = out.len();
+        out.resize(start + orders.len() * d, 0);
+        if d <= MAX_LADDER_DIMS {
+            let lad = MaskLadder::new(d, self.level);
+            for (idx, &c) in orders.iter().enumerate() {
+                let s = start + idx * d;
+                lad.deinterleave(c, &mut out[s..s + d]);
+            }
+        } else {
+            for (idx, &c) in orders.iter().enumerate() {
+                let s = start + idx * d;
+                deinterleave(c, self.dims, self.level, &mut out[s..s + d]);
+            }
+        }
+    }
+
+    fn key_path_nd(&self) -> KeyPath {
+        fastkey::interleave_path(self.dims as usize)
+    }
+
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
     }
@@ -396,6 +437,46 @@ impl CurveMapperNd for GrayNd {
         deinterleave(gray(c), self.dims, self.level, out);
     }
 
+    fn order_batch_nd(&self, points: &[u32], out: &mut Vec<u64>) {
+        // Gray rank of the mask-ladder interleave: the rank prefix-XOR is
+        // already branchless, so the ladder makes the whole key so.
+        let d = self.dims as usize;
+        debug_assert_eq!(points.len() % d, 0);
+        out.reserve(points.len() / d);
+        if d <= MAX_LADDER_DIMS {
+            let lad = MaskLadder::new(d, self.level);
+            for p in points.chunks_exact(d) {
+                out.push(gray_inv(lad.interleave(p)));
+            }
+        } else {
+            for p in points.chunks_exact(d) {
+                out.push(gray_inv(interleave(p, self.level)));
+            }
+        }
+    }
+
+    fn coords_batch_nd(&self, orders: &[u64], out: &mut Vec<u32>) {
+        let d = self.dims as usize;
+        let start = out.len();
+        out.resize(start + orders.len() * d, 0);
+        if d <= MAX_LADDER_DIMS {
+            let lad = MaskLadder::new(d, self.level);
+            for (idx, &c) in orders.iter().enumerate() {
+                let s = start + idx * d;
+                lad.deinterleave(gray(c), &mut out[s..s + d]);
+            }
+        } else {
+            for (idx, &c) in orders.iter().enumerate() {
+                let s = start + idx * d;
+                deinterleave(gray(c), self.dims, self.level, &mut out[s..s + d]);
+            }
+        }
+    }
+
+    fn key_path_nd(&self) -> KeyPath {
+        fastkey::interleave_path(self.dims as usize)
+    }
+
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
     }
@@ -460,7 +541,7 @@ impl HilbertNd {
 
     /// Rotate the low `n` bits of `x` right by `r`.
     #[inline]
-    fn rotr(x: u64, r: u32, n: u32) -> u64 {
+    pub(crate) fn rotr(x: u64, r: u32, n: u32) -> u64 {
         let r = r % n;
         if r == 0 {
             x
@@ -471,14 +552,14 @@ impl HilbertNd {
 
     /// Rotate the low `n` bits of `x` left by `r`.
     #[inline]
-    fn rotl(x: u64, r: u32, n: u32) -> u64 {
+    pub(crate) fn rotl(x: u64, r: u32, n: u32) -> u64 {
         Self::rotr(x, n - (r % n), n)
     }
 
     /// Entry vertex of subcube `w` along the order (Hamilton's `e(w)`):
     /// the Gray code of the largest even number below `w`.
     #[inline]
-    fn entry(w: u64) -> u64 {
+    pub(crate) fn entry(w: u64) -> u64 {
         if w == 0 {
             0
         } else {
@@ -490,7 +571,7 @@ impl HilbertNd {
     /// Intra-subcube direction `d(w)`: the axis along which the curve
     /// traverses subcube `w`, from the Gray-code change positions.
     #[inline]
-    fn dir(w: u64, n: u32) -> u32 {
+    pub(crate) fn dir(w: u64, n: u32) -> u32 {
         if w == 0 {
             0
         } else if w % 2 == 0 {
@@ -506,6 +587,36 @@ impl HilbertNd {
     #[inline]
     fn start(&self) -> (u64, u32) {
         (0, if self.level % 2 == 0 { 1 % self.dims } else { 0 })
+    }
+
+    /// Start orientation as a packed automaton state `s = e·n + d` — the
+    /// encoding the [`fastkey::HilbertLut`] transition tables index by.
+    #[inline]
+    fn packed_start(&self) -> usize {
+        let (e, d) = self.start();
+        e as usize * self.dims as usize + d as usize
+    }
+
+    /// One inverse automaton step from a packed state: the scalar twin of
+    /// [`fastkey::HilbertLut::inv_step`], used where no LUT exists
+    /// (d > 8) and as the reference the tables are tabulated from.
+    #[inline]
+    fn inv_step_scalar(s: usize, w: u64, n: u32) -> (u64, usize) {
+        let e = (s / n as usize) as u64;
+        let d = (s % n as usize) as u32;
+        let l = Self::rotl(gray(w), d + 1, n) ^ e;
+        let e2 = e ^ Self::rotl(Self::entry(w), d + 1, n);
+        let d2 = (d + Self::dir(w, n) + 1) % n;
+        (l, e2 as usize * n as usize + d2 as usize)
+    }
+
+    /// Inverse digit step through the LUT when one exists, else scalar.
+    #[inline]
+    fn inv_step(&self, lut: Option<&fastkey::HilbertLut>, s: usize, w: u64) -> (u64, usize) {
+        match lut {
+            Some(t) => t.inv_step(s, w),
+            None => Self::inv_step_scalar(s, w, self.dims),
+        }
     }
 
     /// ℋ_d(p): forward conversion at the mapper's fixed level.
@@ -556,16 +667,14 @@ impl HilbertNd {
     /// so the automaton resumes from the highest changed digit instead of
     /// re-descending — amortised `O(1)` digits per step, the d-dim
     /// analogue of the Figure-5 stepper.
-    fn decode_run(&self, run: &[u64], out: &mut Vec<u32>) {
+    fn decode_run(&self, lut: Option<&fastkey::HilbertLut>, run: &[u64], out: &mut Vec<u32>) {
         let n = self.dims;
         let m = self.level;
-        // stack[t] = orientation before digit index t (t = 0 is the most
-        // significant digit).
-        let mut estack = vec![0u64; m as usize + 1];
-        let mut dstack = vec![0u32; m as usize + 1];
-        let (e0, d0) = self.start();
-        estack[0] = e0;
-        dstack[0] = d0;
+        // stack[t] = packed orientation state before digit index t (t = 0
+        // is the most significant digit); per-digit stepping goes through
+        // the fastkey transition LUT when one exists for this d.
+        let mut sstack = vec![0usize; m as usize + 1];
+        sstack[0] = self.packed_start();
         let mut p = vec![0u32; n as usize];
         let mut prev: Option<u64> = None;
         for &h in run {
@@ -590,19 +699,16 @@ impl HilbertNd {
             for c in p.iter_mut() {
                 *c &= keep;
             }
-            let mut e = estack[t0 as usize];
-            let mut d = dstack[t0 as usize];
+            let mut s = sstack[t0 as usize];
             for t in t0..m {
                 let i = m - 1 - t;
                 let w = (h >> (i * n)) & self.mask();
-                let l = Self::rotl(gray(w), d + 1, n) ^ e;
+                let (l, s2) = self.inv_step(lut, s, w);
                 for (k, c) in p.iter_mut().enumerate() {
                     *c |= (((l >> k) & 1) as u32) << i;
                 }
-                e ^= Self::rotl(Self::entry(w), d + 1, n);
-                d = (d + Self::dir(w, n) + 1) % n;
-                estack[t as usize + 1] = e;
-                dstack[t as usize + 1] = d;
+                s = s2;
+                sstack[t as usize + 1] = s;
             }
             out.extend_from_slice(&p);
             prev = Some(h);
@@ -629,17 +735,59 @@ impl CurveMapperNd for HilbertNd {
 
     #[inline]
     fn order_nd(&self, p: &[u32]) -> u64 {
-        self.order_point(p)
+        // Table-stepped even for single points: the ladder build is a
+        // handful of ops and the LUT is process-global, so this beats the
+        // per-digit rotations. `order_point` stays the scalar reference.
+        match hilbert_lut(self.dims as usize) {
+            Some(lut) => {
+                let lad = MaskLadder::new(self.dims as usize, self.level);
+                lut.order_word(lad.interleave_rev(p), self.level)
+            }
+            None => self.order_point(p),
+        }
     }
 
     #[inline]
     fn coords_nd(&self, c: u64, out: &mut [u32]) {
-        self.coords_point(c, out);
+        match hilbert_lut(self.dims as usize) {
+            Some(lut) => {
+                let lad = MaskLadder::new(self.dims as usize, self.level);
+                lad.deinterleave_rev(lut.coords_word(c, self.level), out);
+            }
+            None => self.coords_point(c, out),
+        }
+    }
+
+    fn order_batch_nd(&self, points: &[u32], out: &mut Vec<u64>) {
+        let d = self.dims as usize;
+        debug_assert_eq!(points.len() % d, 0);
+        out.reserve(points.len() / d);
+        match hilbert_lut(d) {
+            Some(lut) => {
+                // Ladder and start state hoisted out of the point loop;
+                // byte-at-a-time stepping kicks in automatically at d = 2.
+                let lad = MaskLadder::new(d, self.level);
+                let s0 = lut.start_state(self.level);
+                for p in points.chunks_exact(d) {
+                    out.push(lut.order_word_from(lad.interleave_rev(p), self.level, s0));
+                }
+            }
+            None => {
+                for p in points.chunks_exact(d) {
+                    out.push(self.order_point(p));
+                }
+            }
+        }
     }
 
     fn coords_batch_nd(&self, orders: &[u64], out: &mut Vec<u32>) {
         out.reserve(orders.len() * self.dims as usize);
-        split_consecutive_runs(orders, |run| self.decode_run(run, out));
+        let lut = hilbert_lut(self.dims as usize);
+        split_consecutive_runs(orders, |run| self.decode_run(lut, run, out));
+    }
+
+    fn key_path_nd(&self) -> KeyPath {
+        fastkey::hilbert_path(self.dims as usize)
     }
 
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
@@ -660,15 +808,15 @@ impl CurveMapperNd for HilbertNd {
         };
         fn rec(
             m: &HilbertNd,
+            lut: Option<&fastkey::HilbertLut>,
             w: &WindowNd,
             depth: u32,
             corner: &mut [u32],
             h0: u64,
-            orient: (u64, u32),
+            s: usize,
             out: &mut Vec<Range<u64>>,
         ) {
             let n = m.dims;
-            let (e, d) = orient;
             let lsize = m.level - depth;
             let bside = 1u64 << lsize;
             match classify_box(w, corner, bside) {
@@ -678,13 +826,13 @@ impl CurveMapperNd for HilbertNd {
                     let half = (bside >> 1) as u32;
                     let csize = 1u64 << ((lsize - 1) * n);
                     for digit in 0..(1u64 << n) {
-                        let l = HilbertNd::rotl(gray(digit), d + 1, n) ^ e;
+                        // Child corner bits and next orientation in one
+                        // table lookup (scalar automaton step above d = 8).
+                        let (l, s2) = m.inv_step(lut, s, digit);
                         for (a, c) in corner.iter_mut().enumerate() {
                             *c += ((l >> a) & 1) as u32 * half;
                         }
-                        let e2 = e ^ HilbertNd::rotl(HilbertNd::entry(digit), d + 1, n);
-                        let d2 = (d + HilbertNd::dir(digit, n) + 1) % n;
-                        rec(m, w, depth + 1, corner, h0 + digit * csize, (e2, d2), out);
+                        rec(m, lut, w, depth + 1, corner, h0 + digit * csize, s2, out);
                         for (a, c) in corner.iter_mut().enumerate() {
                             *c -= ((l >> a) & 1) as u32 * half;
                         }
@@ -692,9 +840,10 @@ impl CurveMapperNd for HilbertNd {
                 }
             }
         }
+        let lut = hilbert_lut(n as usize);
         let mut corner = vec![0u32; n as usize];
         let mut out = Vec::new();
-        rec(self, &w, 0, &mut corner, 0, self.start(), &mut out);
+        rec(self, lut, &w, 0, &mut corner, 0, self.packed_start(), &mut out);
         out
     }
 }

@@ -3,7 +3,11 @@
 //! `ℤ(i,j)` interleaves the bits of `i` and `j`:
 //! `c = ⟨i_L j_L … i_1 j_1 i_0 j_0⟩`. The paper notes hardware support via
 //! BMI2 `PDEP`/`PEXT`; the portable magic-mask expansion below compiles to a
-//! handful of shift/mask ops and is the standard software equivalent.
+//! handful of shift/mask ops and is the standard software equivalent (the
+//! `_part1by1`/`_unpart1by1` construction). [`spread`]/[`compact`] are the
+//! stride-2 special case of the d-way mask ladder in
+//! [`fastkey`](super::fastkey), which generalizes the same construction to
+//! arbitrary dimension counts for the batched Nd key paths.
 
 use super::SpaceFillingCurve;
 

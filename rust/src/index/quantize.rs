@@ -95,22 +95,35 @@ impl Quantizer {
         self.cell.iter().cloned().fold(0.0f32, f32::max)
     }
 
-    /// Quantized cell coordinate of value `v` on axis `a` — monotone in
-    /// `v` and clamped to `[0, side)`.
+    /// The one per-value quantization formula, shared by [`Self::cell_of`]
+    /// and the block path [`Self::cells_block`] so scalar and block
+    /// quantization are identical by construction. NaN is clamped to cell
+    /// 0 **explicitly** (a NaN quotient fails every ordered comparison,
+    /// so it would otherwise fall through the clamp branches to an
+    /// `as`-cast — deterministic in Rust, but only by saturating-cast
+    /// fine print; adversarial inputs deserve a documented rule).
     #[inline]
-    pub fn cell_of(&self, v: f32, a: usize) -> u32 {
-        let c = self.cell[a];
-        if c <= 0.0 {
+    fn cell_value(v: f32, origin: f32, cell: f32, side: u32) -> u32 {
+        if cell <= 0.0 {
             return 0;
         }
-        let q = ((v - self.origin[a]) / c).floor();
-        if q < 0.0 {
+        let q = ((v - origin) / cell).floor();
+        if q.is_nan() || q < 0.0 {
             0
-        } else if q >= self.side as f32 {
-            self.side - 1
+        } else if q >= side as f32 {
+            side - 1
         } else {
             q as u32
         }
+    }
+
+    /// Quantized cell coordinate of value `v` on axis `a` — monotone in
+    /// `v` and clamped to `[0, side)`. Non-finite inputs clamp like any
+    /// out-of-range value: `−∞` and **NaN** to cell 0, `+∞` to
+    /// `side − 1`.
+    #[inline]
+    pub fn cell_of(&self, v: f32, a: usize) -> u32 {
+        Self::cell_value(v, self.origin[a], self.cell[a], self.side)
     }
 
     /// Append the cell coordinates of point `p` (`p.len() == dims`) to a
@@ -124,11 +137,48 @@ impl Quantizer {
         }
     }
 
-    /// Curve key of point `p` under `mapper` (one quantize + encode).
+    /// Block-mode quantization: convert the first `dims` columns of every
+    /// row of `points` into a flat cell buffer (`dims` entries per row),
+    /// replacing `out`'s contents. One bounds-check-free pass with the
+    /// per-axis origin/width slices hoisted — the front half of the
+    /// batched key pipeline (`cells_block` → `order_batch_nd`), feeding
+    /// the curve mapper whole blocks without per-point `Vec` growth.
+    /// Identical cell-for-cell to [`Self::cells_into`] row by row.
+    pub fn cells_block(&self, points: &Matrix, out: &mut Vec<u32>) {
+        let d = self.dims;
+        assert!(points.cols >= d, "points must have ≥ dims columns");
+        out.clear();
+        out.resize(points.rows * d, 0);
+        let origin = &self.origin[..d];
+        let cell = &self.cell[..d];
+        let side = self.side;
+        if points.cols == d {
+            // Contiguous case: lockstep chunk walk, no row indexing.
+            for (orow, prow) in out.chunks_exact_mut(d).zip(points.data.chunks_exact(d)) {
+                for a in 0..d {
+                    orow[a] = Self::cell_value(prow[a], origin[a], cell[a], side);
+                }
+            }
+        } else {
+            for (r, orow) in out.chunks_exact_mut(d).enumerate() {
+                let prow = &points.row(r)[..d];
+                for a in 0..d {
+                    orow[a] = Self::cell_value(prow[a], origin[a], cell[a], side);
+                }
+            }
+        }
+    }
+
+    /// Curve key of point `p` under `mapper` (one quantize + encode,
+    /// allocation-free).
     pub fn key_of(&self, mapper: &dyn CurveMapperNd, p: &[f32]) -> u64 {
-        let mut cells = Vec::with_capacity(self.dims);
-        self.cells_into(p, &mut cells);
-        mapper.order_nd(&cells)
+        debug_assert_eq!(p.len(), self.dims);
+        let mut cells = [0u32; 16];
+        debug_assert!(self.dims <= 16, "curve mappers cap at 16 dims");
+        for (a, &v) in p.iter().enumerate() {
+            cells[a] = self.cell_of(v, a);
+        }
+        mapper.order_nd(&cells[..self.dims])
     }
 
     /// Quantize a closed float window `[lo, hi]` into an inclusive cell
@@ -185,6 +235,44 @@ mod tests {
             assert!(c >= last, "monotone");
             last = c;
         }
+    }
+
+    #[test]
+    fn non_finite_inputs_clamp_deterministically() {
+        let q = Quantizer::from_bounds(vec![0.0], &[10.0], 8);
+        // Documented rule: NaN and −∞ land in cell 0, +∞ in side−1.
+        assert_eq!(q.cell_of(f32::NAN, 0), 0);
+        assert_eq!(q.cell_of(f32::NEG_INFINITY, 0), 0);
+        assert_eq!(q.cell_of(f32::INFINITY, 0), 7);
+        // Degenerate axes swallow NaN too.
+        let dq = Quantizer::degenerate(1, 8);
+        assert_eq!(dq.cell_of(f32::NAN, 0), 0);
+    }
+
+    #[test]
+    fn cells_block_matches_cells_into() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let dims = 3;
+        let rows = 64;
+        let mut data = Vec::with_capacity(rows * dims);
+        for i in 0..rows * dims {
+            // Sprinkle adversarial values through ordinary ones.
+            data.push(match i % 11 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                _ => rng.f32() * 40.0 - 10.0,
+            });
+        }
+        let m = Matrix { rows, cols: dims, data };
+        let q = Quantizer::from_bounds(vec![0.0; dims], &[20.0, 30.0, 10.0], 32);
+        let mut block = Vec::new();
+        q.cells_block(&m, &mut block);
+        let mut scalar = Vec::new();
+        for r in 0..rows {
+            q.cells_into(m.row(r), &mut scalar);
+        }
+        assert_eq!(block, scalar);
     }
 
     #[test]

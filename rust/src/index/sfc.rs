@@ -142,6 +142,12 @@ impl SfcIndex {
         self.quant.dims()
     }
 
+    /// Which key-conversion substrate the build keyed its rows on —
+    /// fast-path introspection (see [`crate::curves::fastkey`]).
+    pub fn key_path(&self) -> crate::curves::fastkey::KeyPath {
+        self.mapper.key_path_nd()
+    }
+
     /// All points exactly equal to `q` (`q.len() == dims`): one key
     /// lookup on the quantized cell plus an equality filter over the
     /// (contiguous) key run.

@@ -36,7 +36,8 @@ pub mod planner;
 pub(crate) mod shard;
 
 use crate::apps::Matrix;
-use crate::curves::engine::{CurveMapperNd, DomainNd};
+use crate::curves::engine::{with_cells_scratch, CurveMapperNd, DomainNd};
+use crate::curves::fastkey::KeyPath;
 use crate::curves::CurveKind;
 use crate::index::knn::expanding_knn;
 use crate::index::quantize::{clamped_level, window_contains, Quantizer};
@@ -217,13 +218,13 @@ impl SfcStore {
         };
         let store = Self::new(dims, level, kind, origin, &max, cfg);
         if points.rows > 0 {
-            // Equi-depth fenceposts from the full key sample.
-            let mut flat = Vec::with_capacity(points.rows * dims);
-            for p in 0..points.rows {
-                store.quant.cells_into(points.row(p), &mut flat);
-            }
+            // Equi-depth fenceposts from the full key sample, through the
+            // block quantize + batched-key fast path.
             let mut keys = Vec::with_capacity(points.rows);
-            store.mapper.order_batch_nd(&flat, &mut keys);
+            with_cells_scratch(|flat| {
+                store.quant.cells_block(points, flat);
+                store.mapper.order_batch_nd(flat, &mut keys);
+            });
             keys.sort_unstable();
             let bounds = equi_depth_bounds(&keys, store.shards.len(), store.span);
             *store.routing.write().expect("store lock poisoned") = bounds.clone();
@@ -262,6 +263,12 @@ impl SfcStore {
     /// The store's quantizer (shared float→cell map).
     pub fn quantizer(&self) -> &Quantizer {
         &self.quant
+    }
+
+    /// Which key-conversion substrate ingest batches run on — fast-path
+    /// introspection (see [`crate::curves::fastkey`]).
+    pub fn key_path(&self) -> KeyPath {
+        self.mapper.key_path_nd()
     }
 
     // ------------------------------------------------------------------
@@ -308,12 +315,11 @@ impl SfcStore {
         // Hold routing (read) across the whole append so a concurrent
         // rebalance cannot re-cut the key space under this batch.
         let routing = self.routing.read().expect("store lock poisoned");
-        let mut flat = Vec::with_capacity(n * self.dims);
-        for p in 0..n {
-            self.quant.cells_into(points.row(p), &mut flat);
-        }
         let mut keys = Vec::with_capacity(n);
-        self.mapper.order_batch_nd(&flat, &mut keys);
+        with_cells_scratch(|flat| {
+            self.quant.cells_block(&points, flat);
+            self.mapper.order_batch_nd(flat, &mut keys);
+        });
         // Partition rows by shard (preserving order, so per-shard seqs
         // stay ascending).
         let mut groups: HashMap<usize, (Vec<u32>, Matrix, Vec<u64>)> = HashMap::new();

@@ -13,7 +13,7 @@
 
 use crate::apps::kmeans::permute_rows;
 use crate::apps::Matrix;
-use crate::curves::engine::CurveMapperNd;
+use crate::curves::engine::{with_cells_scratch, CurveMapperNd};
 use crate::curves::ndim::argsort_stable;
 use crate::index::quantize::Quantizer;
 use std::ops::Range;
@@ -61,12 +61,14 @@ impl Segment {
     ) -> Segment {
         assert_eq!(ids.len(), points.rows, "one id per row");
         assert_eq!(points.cols, quant.dims(), "row dims must match the quantizer");
-        let mut flat = Vec::with_capacity(points.rows * points.cols);
-        for p in 0..points.rows {
-            quant.cells_into(points.row(p), &mut flat);
-        }
+        // Block-quantize into the thread-local scratch, then key the whole
+        // block through the mapper's batched fast path — the ingest
+        // pipeline allocates nothing beyond the key column itself.
         let mut keys = Vec::with_capacity(points.rows);
-        mapper.order_batch_nd(&flat, &mut keys);
+        with_cells_scratch(|flat| {
+            quant.cells_block(&points, flat);
+            mapper.order_batch_nd(flat, &mut keys);
+        });
         let n = points.rows;
         Segment {
             keys,
