@@ -8,7 +8,9 @@
 //! check, asserted here), and decomposition + binary search beats the
 //! full scan by orders of magnitude at low selectivity.
 
-use sfc_mine::apps::simjoin::make_clustered;
+use sfc_mine::apps::simjoin::{
+    join_sfc_decompose_dims, join_sfc_dims, make_clustered, normalize,
+};
 use sfc_mine::curves::engine::{CurveMapperNd, WindowNd};
 use sfc_mine::curves::CurveKind;
 use sfc_mine::index::SfcIndex;
@@ -195,4 +197,160 @@ fn main() {
 
     write_json(&bench, "reports/bench_query.json").expect("write bench JSON");
     println!("\nwrote reports/bench_query.json");
+
+    // --- neighbor jumps vs per-cell window decomposition (ISSUE 7) ------
+    // Both kNN drivers and both simjoin drivers must return bit-for-bit
+    // identical results; the neighbor paths must issue strictly fewer
+    // key probes. Asserted here so a regression fails the bench run.
+    struct NeighborRec {
+        name: String,
+        median_ns: u128,
+        key_probes: u64,
+    }
+    let mut recs: Vec<NeighborRec> = Vec::new();
+    let knn_k = 8usize;
+    let mut ktable = Table::new(vec!["dims", "kNN driver", "µs/query", "key probes/query"]);
+    for dims in [2usize, 3] {
+        let points = make_clustered(n_points, dims, 40, 0.8, 17);
+        let index = SfcIndex::build_with(&points, 6, CurveKind::Hilbert);
+        assert!(index.neighbor_path().is_fast(), "Hilbert must walk the automaton");
+        let mut rng = Rng::new(31 + dims as u64);
+        let queries: Vec<Vec<f32>> = (0..n_windows)
+            .map(|_| {
+                let p = rng.below(n_points as u64) as usize;
+                points.row(p).iter().map(|&v| v + 0.3).collect()
+            })
+            .collect();
+        let (mut fp, mut lp) = (0u64, 0u64);
+        let mut frontier_hits = Vec::with_capacity(queries.len());
+        for q in &queries {
+            let (h, s) = index.query_knn_stats(q, knn_k);
+            fp += s.key_probes;
+            frontier_hits.push(h);
+        }
+        for (q, fh) in queries.iter().zip(&frontier_hits) {
+            let (h, s) = index.query_knn_legacy_stats(q, knn_k);
+            lp += s.key_probes;
+            assert_eq!(&h, fh, "frontier kNN must equal the legacy driver bit for bit");
+        }
+        assert!(
+            fp < lp,
+            "frontier kNN must probe strictly less: {fp} vs legacy {lp} (d={dims})"
+        );
+        let m_f = bench.throughput(
+            &format!("neighbor/knn-frontier/d{dims}"),
+            n_windows as u64,
+            || {
+                let mut acc = 0usize;
+                for q in &queries {
+                    acc += index.query_knn(q, knn_k).len();
+                }
+                acc
+            },
+        );
+        let m_l = bench.throughput(
+            &format!("neighbor/knn-legacy/d{dims}"),
+            n_windows as u64,
+            || {
+                let mut acc = 0usize;
+                for q in &queries {
+                    acc += index.query_knn_legacy(q, knn_k).len();
+                }
+                acc
+            },
+        );
+        let per_q = |ns: u128| ns as f64 / 1e3 / n_windows as f64;
+        ktable.row(vec![
+            dims.to_string(),
+            "frontier (neighbor jumps)".to_string(),
+            format!("{:.2}", per_q(m_f.median.as_nanos())),
+            format!("{:.1}", fp as f64 / n_windows as f64),
+        ]);
+        ktable.row(vec![
+            dims.to_string(),
+            "legacy (expanding window)".to_string(),
+            format!("{:.2}", per_q(m_l.median.as_nanos())),
+            format!("{:.1}", lp as f64 / n_windows as f64),
+        ]);
+        recs.push(NeighborRec {
+            name: format!("neighbor/knn-frontier/d{dims}"),
+            median_ns: m_f.median.as_nanos(),
+            key_probes: fp,
+        });
+        recs.push(NeighborRec {
+            name: format!("neighbor/knn-legacy/d{dims}"),
+            median_ns: m_l.median.as_nanos(),
+            key_probes: lp,
+        });
+    }
+    println!("\nfrontier kNN vs legacy expanding window (k={knn_k}, {n_windows} queries):");
+    print!("{}", ktable.render());
+
+    let n_join: usize = if fast { 1_500 } else { 8_000 };
+    let mut jtable = Table::new(vec!["dims", "simjoin driver", "ms", "key probes", "pairs"]);
+    for dims in [2usize, 3] {
+        let jp = make_clustered(n_join, dims, 30, 0.8, 29);
+        let eps = 0.8f32;
+        let (pj, sj) = join_sfc_dims(&jp, eps, dims);
+        let (pd, sd) = join_sfc_decompose_dims(&jp, eps, dims);
+        assert_eq!(
+            normalize(pj.clone()),
+            normalize(pd),
+            "jump join must equal decomposition bit for bit (d={dims})"
+        );
+        assert_eq!(sj.comparisons, sd.comparisons, "identical candidate structure");
+        assert!(
+            sj.key_probes < sd.key_probes,
+            "jump join must probe strictly less: {} vs {} (d={dims})",
+            sj.key_probes,
+            sd.key_probes
+        );
+        let m_j = bench.run(&format!("neighbor/join-jump/d{dims}"), || {
+            join_sfc_dims(&jp, eps, dims).0.len()
+        });
+        let m_d = bench.run(&format!("neighbor/join-decompose/d{dims}"), || {
+            join_sfc_decompose_dims(&jp, eps, dims).0.len()
+        });
+        jtable.row(vec![
+            dims.to_string(),
+            "stencil jumps".to_string(),
+            format!("{:.2}", m_j.median.as_nanos() as f64 / 1e6),
+            sj.key_probes.to_string(),
+            pj.len().to_string(),
+        ]);
+        jtable.row(vec![
+            dims.to_string(),
+            "window decompose".to_string(),
+            format!("{:.2}", m_d.median.as_nanos() as f64 / 1e6),
+            sd.key_probes.to_string(),
+            pj.len().to_string(),
+        ]);
+        recs.push(NeighborRec {
+            name: format!("neighbor/join-jump/d{dims}"),
+            median_ns: m_j.median.as_nanos(),
+            key_probes: sj.key_probes,
+        });
+        recs.push(NeighborRec {
+            name: format!("neighbor/join-decompose/d{dims}"),
+            median_ns: m_d.median.as_nanos(),
+            key_probes: sd.key_probes,
+        });
+    }
+    println!("\nsimjoin: stencil jumps vs window decomposition ({n_join} points, eps 0.8):");
+    print!("{}", jtable.render());
+
+    let mut s = String::from("[\n");
+    for (idx, r) in recs.iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {}, \"key_probes\": {}}}",
+            r.name, r.median_ns, r.key_probes
+        ));
+    }
+    s.push_str("\n]\n");
+    std::fs::create_dir_all("reports").expect("create reports dir");
+    std::fs::write("reports/bench_neighbor.json", s).expect("write neighbor bench JSON");
+    println!("\nwrote reports/bench_neighbor.json");
 }

@@ -23,15 +23,20 @@
 //!   similarity-join design);
 //! * [`join_sfc`] — the **default** driver: cells keyed by their d-dim
 //!   Hilbert value in a sorted column, and each cell's candidate
-//!   neighbors found by **decomposing its ±1 cell window into contiguous
-//!   key ranges** ([`CurveMapperNd::decompose_nd`]) and binary-searching
-//!   each range — the query subsystem replacing the `3^d` per-cell
-//!   odometer walk of the nested driver (which stays as a baseline);
+//!   neighbors reached by **stencil key jumps** — the constant-time
+//!   neighbor operator ([`crate::curves::neighbor`]) emits the
+//!   Chebyshev-stencil keys directly, merged runs are binary-searched,
+//!   and no window is ever decomposed ([`join_sfc_decompose_dims`] keeps
+//!   the retired per-cell window-decomposition loop as the parity and
+//!   probe-count baseline, and the `3^d` odometer of the nested driver
+//!   remains below both);
 //! * [`join_store`] — the **serving-layer** driver: the points live in a
-//!   mutable [`SfcStore`](crate::index::SfcStore) and every point's ±ε
-//!   window goes through the store's query planner (decompose once →
-//!   shard-routed range probes → snapshot read) — the exact path a live
-//!   ingest-while-querying deployment uses, driven here over a batch.
+//!   mutable [`SfcStore`](crate::index::SfcStore) and each occupied
+//!   cell's point group probes the snapshot with one **shard-routed
+//!   stencil key plan** (neighbor keys → merged runs → planner routing
+//!   across the shard fenceposts) instead of one window decomposition
+//!   per point ([`join_store_decompose_dims`] keeps the per-point
+//!   decomposition path as the baseline).
 //!
 //! All variants return the same pair set. Note the finer full-dim cells
 //! mean *more* (but far cheaper) candidate cell pairs than the
@@ -44,6 +49,8 @@ use crate::curves::engine::{CurveMapperNd, FgfMapper, WindowNd};
 use crate::curves::fgf::{FgfStats, HilbertSet};
 use crate::curves::hilbert::Hilbert;
 use crate::curves::ndim::{argsort_stable, HilbertNd};
+use crate::curves::neighbor::NeighborFinder;
+use crate::index::quantize::window_contains;
 use crate::index::{CellNd, GridIndex, GridIndexNd};
 
 /// Default cap on indexed dimensions for the d-dim join variants: the
@@ -71,8 +78,13 @@ pub struct JoinStats {
     pub results: u64,
     /// Candidate cell pairs visited (index variants).
     pub cell_pairs: u64,
-    /// Decomposed key ranges probed ([`join_sfc`] and [`join_store`]).
+    /// Key ranges probed ([`join_sfc`] and [`join_store`]): decomposed
+    /// window ranges on the decompose paths, merged stencil runs on the
+    /// jump paths.
     pub ranges: u64,
+    /// Binary searches issued on sorted key columns — the cost the
+    /// stencil-jump drivers cut relative to window decomposition.
+    pub key_probes: u64,
     /// FGF traversal stats (Hilbert variant only).
     pub fgf: Option<FgfStats>,
 }
@@ -303,13 +315,35 @@ pub fn join_sfc(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
 /// Every non-empty cell gets its d-dim Hilbert key (quantized like
 /// [`GridIndexNd::hilbert_cell_ranks`] when the extents outgrow the
 /// `dims·level ≤ 63` cube); the keys live in one sorted column. A cell's
-/// candidate neighbors are then the cells whose keys fall in the
-/// decomposition of its ±1 window — a handful of contiguous ranges, each
-/// one binary search — instead of `3^dims` point lookups. Quantization
-/// can collapse distinct cells onto one key, so every range hit is
-/// exact-filtered with the full-precision Chebyshev test before the
-/// point lists are compared; pairs dedupe by sorted key position.
+/// candidate neighbors are then found by **stencil key jumps**: the
+/// constant-time neighbor operator
+/// ([`NeighborFinder`](crate::curves::neighbor::NeighborFinder))
+/// produces the `3^d − 1` Chebyshev-stencil keys directly on the key
+/// space, the keys above the cell's own merge into unit-cell runs, and
+/// each run is one binary search — no window is ever decomposed, and
+/// ranges entirely below the cell (which the decomposition path probes
+/// and then discards by position) are never touched. Quantization can
+/// collapse distinct cells onto one key, so every hit is exact-filtered
+/// with the full-precision Chebyshev test before the point lists are
+/// compared; pairs dedupe by sorted key position. Candidate cell pairs
+/// and distance computations are **identical** to
+/// [`join_sfc_decompose_dims`] (and the nested `3^d` odometer) — only
+/// the probe count drops. Beyond 8 curve axes the jump path falls back
+/// to decomposition.
 pub fn join_sfc_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, JoinStats) {
+    join_sfc_impl(points, eps, dims, true)
+}
+
+/// The retired per-cell **window-decomposition** driver, kept as the
+/// parity and probe-count baseline for the stencil-jump path: each
+/// cell's ±1 window decomposes into contiguous key ranges
+/// ([`CurveMapperNd::decompose_nd`]), every range is binary-searched,
+/// and hits below the cell's own sorted position are discarded.
+pub fn join_sfc_decompose_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, JoinStats) {
+    join_sfc_impl(points, eps, dims, false)
+}
+
+fn join_sfc_impl(points: &Matrix, eps: f32, dims: usize, jump: bool) -> (Vec<Pair>, JoinStats) {
     let index = GridIndexNd::build_dims(points, eps, dims);
     let eps2 = eps * eps;
     let mut out = Vec::new();
@@ -348,11 +382,78 @@ pub fn join_sfc_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, Join
     let order = argsort_stable(&cell_keys);
     let keys: Vec<u64> = order.iter().map(|&idx| cell_keys[idx as usize]).collect();
 
+    let side_max = (1u32 << level) - 1;
+    if jump && cd <= 8 {
+        // Stencil-jump probe loop: the cell's own key run starts at its
+        // sorted position (no search at all), and only stencil keys
+        // *above* it are probed — lower keys were handled when their own
+        // cells anchored the scan.
+        let finder = NeighborFinder::new(&mapper);
+        let mut lo_off = vec![0i32; cd];
+        let mut hi_off = vec![0i32; cd];
+        let mut skeys: Vec<u64> = Vec::new();
+        for (pos_a, &oa) in order.iter().enumerate() {
+            let ia = oa as usize;
+            let (ca, la) = &cells[ia];
+            let ka = keys[pos_a];
+            let mut pos = pos_a;
+            while pos < keys.len() && keys[pos] == ka {
+                let ib = order[pos] as usize;
+                let (cb, lb) = &cells[ib];
+                // Exact neighbor test on the *unshifted* coordinates (the
+                // key cube may be coarser), plus the projected axes
+                // beyond the curve's 16-axis cap — same filter as the
+                // decomposition path.
+                if GridIndexNd::neighbors(ca, cb) {
+                    stats.cell_pairs += 1;
+                    join_lists(points, la, lb, ia == ib, eps2, &mut out, &mut stats);
+                }
+                pos += 1;
+            }
+            // ±1 in unshifted cells maps to {−1, 0}/{0, +1} offsets on
+            // the (possibly coarser) key cube.
+            for a in 0..cd {
+                let c = (ca[a] >> shift) as i32;
+                lo_off[a] = ((ca[a].saturating_sub(1)) >> shift) as i32 - c;
+                hi_off[a] = (((ca[a].saturating_add(1)) >> shift).min(side_max)) as i32 - c;
+            }
+            skeys.clear();
+            finder.stencil_keys(ka, &lo_off, &hi_off, false, &mut skeys);
+            skeys.sort_unstable();
+            let mut i = 0usize;
+            while i < skeys.len() {
+                if skeys[i] <= ka {
+                    i += 1;
+                    continue;
+                }
+                let s = skeys[i];
+                let mut e = s + 1;
+                i += 1;
+                while i < skeys.len() && skeys[i] == e {
+                    e += 1;
+                    i += 1;
+                }
+                stats.ranges += 1;
+                stats.key_probes += 1;
+                let mut pos = keys.partition_point(|&k| k < s);
+                while pos < keys.len() && keys[pos] < e {
+                    let ib = order[pos] as usize;
+                    let (cb, lb) = &cells[ib];
+                    if GridIndexNd::neighbors(ca, cb) {
+                        stats.cell_pairs += 1;
+                        join_lists(points, la, lb, ia == ib, eps2, &mut out, &mut stats);
+                    }
+                    pos += 1;
+                }
+            }
+        }
+        return (out, stats);
+    }
+
     // Per-cell ε-window decomposition: the ±1 neighborhood of a cell,
     // mapped into the (possibly coarser) key cube, becomes a few
     // contiguous key ranges; only positions ≥ the cell's own keep each
     // unordered pair once.
-    let side_max = (1u32 << level) - 1;
     let mut lo = vec![0u32; cd];
     let mut hi = vec![0u32; cd];
     for (pos_a, &oa) in order.iter().enumerate() {
@@ -364,6 +465,7 @@ pub fn join_sfc_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, Join
         }
         let ranges = mapper.decompose_nd(&WindowNd::new(lo.clone(), hi.clone()));
         stats.ranges += ranges.len() as u64;
+        stats.key_probes += ranges.len() as u64;
         for r in &ranges {
             let mut pos = keys.partition_point(|&k| k < r.start);
             while pos < keys.len() && keys[pos] < r.end {
@@ -395,14 +497,36 @@ pub fn join_store(points: &Matrix, eps: f32) -> (Vec<Pair>, JoinStats) {
 ///
 /// Builds an [`SfcStore`] over the first `dims` columns (cell width ≈
 /// `eps`: the level is chosen so one quantization cell spans about one
-/// join radius), takes **one snapshot**, and answers each point's
-/// ±ε window through the planner (decompose → shard-routed range probes)
-/// — the same query path a live serving deployment would use, driven
-/// here over a static batch. Every window hit with a larger id gets the
-/// exact full-dimensional distance test, so the pair set equals the
-/// other drivers'; `ranges` aggregates the planner's decompositions and
-/// `cell_pairs` stays 0 (this driver has no cell-pair structure).
+/// join radius), takes **one snapshot**, and probes it with **grouped
+/// stencil key jumps**: the rows sharing a quantized cell form one
+/// group, the group's union ±ε window maps to per-axis cell offsets,
+/// the neighbor operator
+/// ([`NeighborFinder`](crate::curves::neighbor::NeighborFinder)) emits
+/// the stencil keys directly on the key space, and the planner routes
+/// the merged key runs across the shard fenceposts
+/// ([`plan_keys`](crate::index::store::planner::plan_keys)) — one
+/// shard-routed probe per occupied cell instead of one window
+/// decomposition per point. Every probed id then passes the same
+/// per-point float window filter and full-dimensional distance test the
+/// decomposition driver applies, so distance computations and the pair
+/// set are **identical** to [`join_store_decompose_dims`]; on clustered
+/// data the probe count drops by the points-per-cell factor. Beyond 8
+/// indexed dimensions the jump path falls back to decomposition.
 pub fn join_store_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, JoinStats) {
+    join_store_impl(points, eps, dims, true)
+}
+
+/// The retired per-point **window-decomposition** store driver, kept as
+/// the parity and probe-count baseline for the stencil-jump path: every
+/// point's ±ε window goes through the planner (decompose → shard-routed
+/// range probes → snapshot read) individually — the exact path a live
+/// ingest-while-querying deployment would use, driven over a static
+/// batch.
+pub fn join_store_decompose_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, JoinStats) {
+    join_store_impl(points, eps, dims, false)
+}
+
+fn join_store_impl(points: &Matrix, eps: f32, dims: usize, jump: bool) -> (Vec<Pair>, JoinStats) {
     assert!(eps > 0.0, "eps must be positive");
     assert!(dims >= 1 && dims <= points.cols, "dims outside 1..=cols");
     let mut out = Vec::new();
@@ -436,6 +560,83 @@ pub fn join_store_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, Jo
         crate::index::StoreConfig::default(),
     );
     let snap = store.snapshot();
+    if jump && dims <= 8 {
+        // Group rows by their quantized cell key: one stencil probe per
+        // occupied cell serves every member of the group.
+        let quant = store.quantizer();
+        let mapper = store.mapper_nd();
+        let finder = NeighborFinder::new(mapper);
+        let mut keys = Vec::with_capacity(prefix.rows);
+        engine::with_cells_scratch(|flat| {
+            quant.cells_block(&prefix, flat);
+            mapper.order_batch_nd(flat, &mut keys);
+        });
+        let order = argsort_stable(&keys);
+        let mut cc = vec![0u32; dims];
+        let mut lo_off = vec![0i32; dims];
+        let mut hi_off = vec![0i32; dims];
+        let mut skeys: Vec<u64> = Vec::new();
+        let mut lo = vec![0.0f32; dims];
+        let mut hi = vec![0.0f32; dims];
+        let mut g = 0usize;
+        while g < order.len() {
+            let kc = keys[order[g] as usize];
+            let mut gend = g + 1;
+            while gend < order.len() && keys[order[gend] as usize] == kc {
+                gend += 1;
+            }
+            // Union ±ε window of the group's members → per-axis cell
+            // offsets from the group's cell. Offsets may exceed ±1 (the
+            // cell width is ≤ eps); the stencil walker composes steps.
+            for a in 0..dims {
+                lo[a] = f32::INFINITY;
+                hi[a] = f32::NEG_INFINITY;
+            }
+            for &op in &order[g..gend] {
+                let row = prefix.row(op as usize);
+                for a in 0..dims {
+                    lo[a] = lo[a].min(row[a] - eps);
+                    hi[a] = hi[a].max(row[a] + eps);
+                }
+            }
+            mapper.coords_nd(kc, &mut cc);
+            for a in 0..dims {
+                lo_off[a] = quant.cell_of(lo[a], a) as i32 - cc[a] as i32;
+                hi_off[a] = quant.cell_of(hi[a], a) as i32 - cc[a] as i32;
+            }
+            skeys.clear();
+            finder.stencil_keys(kc, &lo_off, &hi_off, true, &mut skeys);
+            skeys.sort_unstable();
+            let mut qstats = crate::index::QueryStats::default();
+            let ids = store.query_keys_on(&snap, &skeys, &mut qstats);
+            stats.ranges += qstats.ranges as u64;
+            stats.key_probes += qstats.key_probes;
+            // Each member re-applies the per-point float window filter,
+            // so the surviving candidate set (and the comparison count)
+            // is exactly the decomposition driver's.
+            for &op in &order[g..gend] {
+                let p = op as usize;
+                let row = prefix.row(p);
+                for a in 0..dims {
+                    lo[a] = row[a] - eps;
+                    hi[a] = row[a] + eps;
+                }
+                for &id in &ids {
+                    // Store ids are insertion order == row indices; keep
+                    // each unordered pair once from its smaller endpoint.
+                    if id as usize > p && window_contains(&lo, &hi, prefix.row(id as usize)) {
+                        stats.comparisons += 1;
+                        if sq_dist(points.row(p), points.row(id as usize)) <= eps2 {
+                            out.push((p as u32, id));
+                            stats.results += 1;
+                        }
+                    }
+                }
+            }
+            g = gend;
+        }
+        return (out, stats);
+    }
     let mut lo = vec![0.0f32; dims];
     let mut hi = vec![0.0f32; dims];
     for p in 0..points.rows {
@@ -445,6 +646,7 @@ pub fn join_store_dims(points: &Matrix, eps: f32, dims: usize) -> (Vec<Pair>, Jo
         }
         let (ids, s) = store.query_window_stats_on(&snap, &lo, &hi, 0);
         stats.ranges += s.ranges as u64;
+        stats.key_probes += s.key_probes;
         for id in ids {
             // Store ids are insertion order == row indices; keep each
             // unordered pair once from its smaller endpoint.
@@ -531,6 +733,39 @@ mod tests {
             assert_eq!(sn.cell_pairs, ss.cell_pairs, "eps={eps}");
             assert_eq!(sn.comparisons, ss.comparisons, "eps={eps}");
             assert!(ss.ranges > 0, "decomposition must actually run");
+        }
+    }
+
+    #[test]
+    fn jump_joins_match_decompose_with_fewer_probes() {
+        // The stencil-jump drivers must reproduce the decomposition
+        // drivers' candidate structure exactly — identical pair sets,
+        // identical distance computations — while issuing strictly fewer
+        // binary searches on the key columns.
+        let points = make_clustered(700, 3, 30, 0.8, 37);
+        for eps in [0.7f32, 1.3] {
+            let (pj, sj) = join_sfc_dims(&points, eps, 3);
+            let (pd, sd) = join_sfc_decompose_dims(&points, eps, 3);
+            assert_eq!(normalize(pj), normalize(pd), "sfc eps={eps}");
+            assert_eq!(sj.cell_pairs, sd.cell_pairs, "sfc eps={eps}");
+            assert_eq!(sj.comparisons, sd.comparisons, "sfc eps={eps}");
+            assert!(
+                sj.key_probes < sd.key_probes,
+                "sfc jump {} vs decompose {} (eps={eps})",
+                sj.key_probes,
+                sd.key_probes
+            );
+
+            let (qj, tj) = join_store_dims(&points, eps, 3);
+            let (qd, td) = join_store_decompose_dims(&points, eps, 3);
+            assert_eq!(normalize(qj), normalize(qd), "store eps={eps}");
+            assert_eq!(tj.comparisons, td.comparisons, "store eps={eps}");
+            assert!(
+                tj.key_probes < td.key_probes,
+                "store jump {} vs decompose {} (eps={eps})",
+                tj.key_probes,
+                td.key_probes
+            );
         }
     }
 

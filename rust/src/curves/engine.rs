@@ -1076,6 +1076,17 @@ pub trait CurveMapperNd: Send + Sync {
         crate::curves::fastkey::KeyPath::ScalarDigits
     }
 
+    /// What the neighbor operator ([`crate::curves::neighbor`]) can
+    /// exploit about this mapper's key structure. The default — inherited
+    /// by the 2-D adapters and any custom mapper — advertises no
+    /// structure, selecting the decode–increment–encode fallback; the
+    /// native Nd mappers override it with their closed-form contexts
+    /// (Hilbert automaton, interleave carry, mixed radix), and
+    /// `tests/neighbor.rs` asserts those paths actually engage for d ≤ 8.
+    fn neighbor_ctx_nd(&self) -> crate::curves::neighbor::NeighborCtx {
+        crate::curves::neighbor::NeighborCtx::Roundtrip
+    }
+
     /// Stream the points whose order values fall in `range` (clamped to
     /// the domain), in curve order — the d-dim curve segment the
     /// coordinator schedules across workers.

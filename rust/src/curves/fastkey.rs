@@ -77,6 +77,13 @@
 //! so tests can assert the fast paths are actually live (see
 //! `tests/fastkey.rs`).
 //!
+//! The neighbor operator ([`super::neighbor`]) rides the same substrates
+//! with its own path table ([`super::neighbor::NeighborPath`]): the
+//! Hilbert walk steps these transition tables from a per-depth state
+//! stack ([`HilbertLut::coords_word_states`] seeds it), and the
+//! Z-order/Gray closed forms are masked carries on the ladder's
+//! interleaved words.
+//!
 //! Provenance: the stride-2 ladder constants follow the `_part1by1`
 //! exemplar in SNIPPETS.md; the automaton tabulation follows the paper's
 //! §3 transition tables (Fig 3) and Hamilton/Lawder's `entry`/`dir`
@@ -461,6 +468,35 @@ impl HilbertLut {
                 z |= ((p & 0xFF) as u64) << (i * n);
                 s = (p >> 8) as usize;
             }
+        }
+        z
+    }
+
+    /// [`HilbertLut::coords_word`] that additionally records the packed
+    /// state **before** each top-down digit into `states[0..=level]`
+    /// (`states[0]` = the start state, depth 0 = most significant digit).
+    /// This seeds the neighbor walker of [`super::neighbor`]: a ±1 step
+    /// re-encodes only the digits at and below its carry, resuming the
+    /// automaton from the stacked state at that depth. Digit-at-a-time
+    /// (no byte composition) because every intermediate state is needed.
+    #[inline]
+    pub fn coords_word_states(&self, h: u64, level: u32, states: &mut [usize]) -> u64 {
+        let n = self.dims;
+        debug_assert!(states.len() > level as usize);
+        let mask = (1u64 << n) - 1;
+        let mut s = self.start_state(level);
+        states[0] = s;
+        let mut z = 0u64;
+        let mut j = 0usize;
+        let mut i = level;
+        while i > 0 {
+            i -= 1;
+            let w = (h >> (i * n)) & mask;
+            let (l, s2) = self.inv_step(s, w);
+            z |= l << (i * n);
+            s = s2;
+            j += 1;
+            states[j] = s;
         }
         z
     }

@@ -144,6 +144,20 @@ impl Hilbert {
         let digits = bits.div_ceil(2);
         (digits + 1) & !1
     }
+
+    /// Face neighbor of order value `h` within the fixed `2^level` square
+    /// (axis 0 = `i`, axis 1 = `j`; `None` at the grid edge — no wrap),
+    /// computed by the automaton walk of [`crate::curves::neighbor`]
+    /// rather than a decode–increment–encode roundtrip. The d = 2
+    /// specialization of [`HilbertNd`](super::ndim::HilbertNd) agrees
+    /// bit-for-bit with [`Hilbert::order_at_level`], so this is the
+    /// constant-time neighbor on the classic 2-D keys. Build a
+    /// [`NeighborFinder`](crate::curves::neighbor::NeighborFinder) over
+    /// `HilbertNd::new(2, level)` directly to amortise setup over a walk.
+    pub fn neighbor_at_level(h: u64, level: u32, axis: usize, dir: i32) -> Option<u64> {
+        let m = super::ndim::HilbertNd::new(2, level);
+        crate::curves::neighbor::NeighborFinder::new(&m).neighbor_key(h, axis, dir)
+    }
 }
 
 impl SpaceFillingCurve for Hilbert {
@@ -369,5 +383,31 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 64);
+    }
+
+    #[test]
+    fn neighbor_at_level_matches_mealy_roundtrip() {
+        for level in [2u32, 3, 5] {
+            let side = 1u64 << level;
+            for i in 0..side as u32 {
+                for j in 0..side as u32 {
+                    let h = Hilbert::order_at_level(i, j, level);
+                    for (axis, dir, ni, nj) in [
+                        (0, -1, i.wrapping_sub(1), j),
+                        (0, 1, i + 1, j),
+                        (1, -1, i, j.wrapping_sub(1)),
+                        (1, 1, i, j + 1),
+                    ] {
+                        let want = (ni < side as u32 && nj < side as u32)
+                            .then(|| Hilbert::order_at_level(ni, nj, level));
+                        assert_eq!(
+                            Hilbert::neighbor_at_level(h, level, axis, dir),
+                            want,
+                            "level={level} ({i},{j}) axis={axis} dir={dir}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

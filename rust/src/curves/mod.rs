@@ -93,6 +93,7 @@ pub mod lindenmayer;
 pub mod metrics;
 pub mod nano;
 pub mod ndim;
+pub mod neighbor;
 pub mod nonrecursive;
 pub mod peano;
 pub mod zorder;

@@ -43,6 +43,7 @@ use super::engine::{
 };
 use super::fastkey::{self, hilbert_lut, KeyPath, MaskLadder, MAX_LADDER_DIMS};
 use super::gray::{gray, gray_inv};
+use super::neighbor::NeighborCtx;
 use std::ops::Range;
 
 /// Shared constructor validation for the 2-adic cube mappers: `d`
@@ -170,6 +171,10 @@ impl CurveMapperNd for CanonicNd {
             out[a] = (rest % s) as u32;
             rest /= s;
         }
+    }
+
+    fn neighbor_ctx_nd(&self) -> NeighborCtx {
+        NeighborCtx::MixedRadix { shape: self.shape.clone() }
     }
 
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
@@ -327,6 +332,10 @@ impl CurveMapperNd for ZOrderNd {
         fastkey::interleave_path(self.dims as usize)
     }
 
+    fn neighbor_ctx_nd(&self) -> NeighborCtx {
+        NeighborCtx::Interleave { level: self.level, gray: false }
+    }
+
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
     }
@@ -477,6 +486,10 @@ impl CurveMapperNd for GrayNd {
         fastkey::interleave_path(self.dims as usize)
     }
 
+    fn neighbor_ctx_nd(&self) -> NeighborCtx {
+        NeighborCtx::Interleave { level: self.level, gray: true }
+    }
+
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {
         SegmentsNd::batched(self, clamp_range(range, self.span()))
     }
@@ -592,7 +605,7 @@ impl HilbertNd {
     /// Start orientation as a packed automaton state `s = e·n + d` — the
     /// encoding the [`fastkey::HilbertLut`] transition tables index by.
     #[inline]
-    fn packed_start(&self) -> usize {
+    pub(crate) fn packed_start(&self) -> usize {
         let (e, d) = self.start();
         e as usize * self.dims as usize + d as usize
     }
@@ -601,13 +614,26 @@ impl HilbertNd {
     /// [`fastkey::HilbertLut::inv_step`], used where no LUT exists
     /// (d > 8) and as the reference the tables are tabulated from.
     #[inline]
-    fn inv_step_scalar(s: usize, w: u64, n: u32) -> (u64, usize) {
+    pub(crate) fn inv_step_scalar(s: usize, w: u64, n: u32) -> (u64, usize) {
         let e = (s / n as usize) as u64;
         let d = (s % n as usize) as u32;
         let l = Self::rotl(gray(w), d + 1, n) ^ e;
         let e2 = e ^ Self::rotl(Self::entry(w), d + 1, n);
         let d2 = (d + Self::dir(w, n) + 1) % n;
         (l, e2 as usize * n as usize + d2 as usize)
+    }
+
+    /// One forward automaton step from a packed state: the scalar twin of
+    /// [`fastkey::HilbertLut::fwd_step`], used by the neighbor walker
+    /// where no LUT exists (d > 8).
+    #[inline]
+    pub(crate) fn fwd_step_scalar(s: usize, l: u64, n: u32) -> (u64, usize) {
+        let e = (s / n as usize) as u64;
+        let d = (s % n as usize) as u32;
+        let w = gray_inv(Self::rotr(l ^ e, d + 1, n)) & ((1u64 << n) - 1);
+        let e2 = e ^ Self::rotl(Self::entry(w), d + 1, n);
+        let d2 = (d + Self::dir(w, n) + 1) % n;
+        (w, e2 as usize * n as usize + d2 as usize)
     }
 
     /// Inverse digit step through the LUT when one exists, else scalar.
@@ -788,6 +814,10 @@ impl CurveMapperNd for HilbertNd {
 
     fn key_path_nd(&self) -> KeyPath {
         fastkey::hilbert_path(self.dims as usize)
+    }
+
+    fn neighbor_ctx_nd(&self) -> NeighborCtx {
+        NeighborCtx::Hilbert { level: self.level }
     }
 
     fn segments_nd(&self, range: Range<u64>) -> SegmentsNd<'_> {

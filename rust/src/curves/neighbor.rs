@@ -1,0 +1,728 @@
+//! Constant-time neighbor-finding on curve keys (Holzmüller,
+//! "Efficient Neighbor-Finding on Space-Filling Curves", arXiv:1710.06384).
+//!
+//! A cell's geometric face neighbor differs from it by ±1 along one axis.
+//! The classic way to reach it from a curve key is the full roundtrip —
+//! decode the key to coordinates, increment, re-encode — which costs a
+//! whole automaton descent per probe. This module computes the neighbor
+//! **directly in curve-index space**:
+//!
+//! * **Hilbert** ([`NeighborPath::AutomatonWalk`]): a ±1 step along axis
+//!   `a` flips a suffix of that axis's coordinate bits (the binary carry
+//!   chain). In the orientation automaton that means only the digits at
+//!   and below the carry's depth change, so the walker keeps a per-depth
+//!   stack of packed `(entry, direction)` states (the same
+//!   [`HilbertLut`](super::fastkey::HilbertLut) states PR 6 tabulated),
+//!   ascends to the lowest common ancestor digit, splices the new
+//!   coordinate column in, and re-encodes just the changed suffix:
+//!
+//!   ```text
+//!     depth 0   w₀                         w₀          states[0] = start
+//!     depth 1     w₁              ──►        w₁        states[1]
+//!     depth 2       w₂   (carry t=1)           w₂'  ◄─ re-encode from
+//!     depth 3         w₃                         w₃' ◄─ states[2] down
+//!   ```
+//!
+//!   A carry of length `t` touches `t+1` digits; over a sequential walk
+//!   the expected carry length is `Σ 2⁻ⁱ < 2`, so a step is amortized
+//!   O(1) digit transitions — each one a single LUT lookup for d ≤ 8.
+//!
+//! * **Z-order / Gray** ([`NeighborPath::BitArithmetic`]): axis `a`'s
+//!   bits sit at stride-`d` positions of the interleaved word, so ±1 is
+//!   one masked carry: fill the foreign bits with ones, add the axis's
+//!   least-significant mask bit, and the carry ripples only through that
+//!   axis's column. Gray keys first map to the interleaved word via
+//!   `gray(key)` (the Gray rank's inverse) and back with `gray_inv`.
+//!
+//! * **Canonic** ([`NeighborPath::MixedRadix`]): the row-major order is a
+//!   mixed-radix numeral, so a neighbor is `key ± stride[a]` plus an
+//!   overflow check on the axis digit.
+//!
+//! * **Anything else** ([`NeighborPath::CoordsRoundtrip`]): the
+//!   decode–increment–encode fallback, kept as the reference semantics
+//!   every fast path must match bit-for-bit (`tests/neighbor.rs`).
+//!
+//! Grid-edge neighbors are `None` — the operator never wraps around the
+//! cube. [`NeighborFinder::stencil_keys`] composes steps into the
+//! `3^d − 1` Chebyshev stencil (and wider boxes) by depth-first
+//! step-and-undo, which the similarity join feeds straight into sorted
+//! key-column probes instead of decomposing a ±ε window per cell.
+
+use super::engine::{CurveMapperNd, DomainNd};
+use super::fastkey::{hilbert_lut, HilbertLut, MaskLadder, MAX_LADDER_DIMS};
+use super::gray::{gray, gray_inv};
+use super::ndim::HilbertNd;
+
+/// How a [`NeighborFinder`] reaches a neighbor key — the neighbor-side
+/// mirror of [`KeyPath`](super::fastkey::KeyPath), with the same
+/// introspection contract: tests assert the fast path engaged and no
+/// silent roundtrip fallback occurred for d ≤ 8.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum NeighborPath {
+    /// Hilbert state-stack walk over the packed automaton states.
+    AutomatonWalk,
+    /// Closed-form masked carry on the interleaved word (Z-order/Gray).
+    BitArithmetic,
+    /// Mixed-radix stride add/subtract (canonic row-major).
+    MixedRadix,
+    /// Decode → ±1 → re-encode through the mapper (reference fallback).
+    CoordsRoundtrip,
+}
+
+impl NeighborPath {
+    /// Short label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            NeighborPath::AutomatonWalk => "automaton-walk",
+            NeighborPath::BitArithmetic => "bit-arithmetic",
+            NeighborPath::MixedRadix => "mixed-radix",
+            NeighborPath::CoordsRoundtrip => "coords-roundtrip",
+        }
+    }
+
+    /// True for every path except the roundtrip fallback.
+    pub fn is_fast(self) -> bool {
+        self != NeighborPath::CoordsRoundtrip
+    }
+}
+
+/// What a mapper tells the [`NeighborFinder`] about its key structure —
+/// returned by [`CurveMapperNd::neighbor_ctx_nd`]. The default is
+/// [`NeighborCtx::Roundtrip`]; the native Nd mappers override it with
+/// their closed-form descriptions.
+#[derive(Clone, Debug)]
+pub enum NeighborCtx {
+    /// Butz/Lawder Hilbert automaton over the `2^level` cube.
+    Hilbert {
+        /// Bits per axis.
+        level: u32,
+    },
+    /// Plain d-way interleaving (axis 0 in the high digit bit); `gray`
+    /// adds the Gray-rank transform around the interleaved word.
+    Interleave {
+        /// Bits per axis.
+        level: u32,
+        /// Key is the Gray rank of the interleaved word.
+        gray: bool,
+    },
+    /// Mixed-radix row-major order over an axis-aligned box.
+    MixedRadix {
+        /// Per-axis extents.
+        shape: Vec<u32>,
+    },
+    /// No structural shortcut — use the coords roundtrip.
+    Roundtrip,
+}
+
+// ---------------------------------------------------------------------------
+// Hilbert state-stack walker
+// ---------------------------------------------------------------------------
+
+/// Fixed per-mapper data for the Hilbert walk.
+struct HilbertWalk {
+    dims: u32,
+    level: u32,
+    lut: Option<&'static HilbertLut>,
+    /// Packed start state `e·n + d` for this level's parity.
+    start: usize,
+    /// Column extract/splice ladder (`None` beyond [`MAX_LADDER_DIMS`],
+    /// where the ≤ 7-digit loops are cheap anyway).
+    lad: Option<MaskLadder>,
+}
+
+/// Mutable walk state: the key, its coordinate word (`interleave_rev`
+/// layout: axis `k` at digit bit `k`), and the packed automaton state
+/// *before* each top-down digit — `states[0]` is the start state,
+/// `states[j]` the state entering depth-`j` digit (depth 0 = most
+/// significant).
+struct HilbertCursor {
+    key: u64,
+    z: u64,
+    states: Vec<usize>,
+}
+
+impl HilbertWalk {
+    fn new(dims: u32, level: u32) -> Self {
+        let lut = hilbert_lut(dims as usize);
+        let start = match lut {
+            Some(t) => t.start_state(level),
+            None => HilbertNd::new(dims as usize, level).packed_start(),
+        };
+        let lad = if (dims as usize) <= MAX_LADDER_DIMS {
+            Some(MaskLadder::new(dims as usize, level))
+        } else {
+            None
+        };
+        HilbertWalk { dims, level, lut, start, lad }
+    }
+
+    #[inline]
+    fn inv_step(&self, s: usize, w: u64) -> (u64, usize) {
+        match self.lut {
+            Some(t) => t.inv_step(s, w),
+            None => HilbertNd::inv_step_scalar(s, w, self.dims),
+        }
+    }
+
+    #[inline]
+    fn fwd_step(&self, s: usize, l: u64) -> (u64, usize) {
+        match self.lut {
+            Some(t) => t.fwd_step(s, l),
+            None => HilbertNd::fwd_step_scalar(s, l, self.dims),
+        }
+    }
+
+    /// Decode `key` once: coordinate word + the full state stack.
+    fn cursor(&self, key: u64) -> HilbertCursor {
+        let m = self.level;
+        let mut states = vec![0usize; m as usize + 1];
+        let z = match self.lut {
+            Some(t) => t.coords_word_states(key, m, &mut states),
+            None => {
+                let n = self.dims;
+                let mask = (1u64 << n) - 1;
+                states[0] = self.start;
+                let mut s = self.start;
+                let mut z = 0u64;
+                let mut j = 0usize;
+                let mut i = m;
+                while i > 0 {
+                    i -= 1;
+                    let w = (key >> (i * n)) & mask;
+                    let (l, s2) = self.inv_step(s, w);
+                    z |= l << (i * n);
+                    s = s2;
+                    j += 1;
+                    states[j] = s;
+                }
+                z
+            }
+        };
+        HilbertCursor { key, z, states }
+    }
+
+    /// Axis `a`'s coordinate out of the `interleave_rev` word.
+    #[inline]
+    fn coord(&self, z: u64, axis: u32) -> u32 {
+        match &self.lad {
+            Some(lad) => lad.compact(z >> axis),
+            None => {
+                let mut c = 0u32;
+                for i in 0..self.level {
+                    c |= (((z >> (i * self.dims + axis)) & 1) as u32) << i;
+                }
+                c
+            }
+        }
+    }
+
+    /// Replace axis `a`'s coordinate column in `z` with `c`.
+    #[inline]
+    fn splice(&self, z: u64, axis: u32, c: u32) -> u64 {
+        match &self.lad {
+            Some(lad) => {
+                let col = lad.spread(!0u32) << axis;
+                (z & !col) | (lad.spread(c) << axis)
+            }
+            None => {
+                let mut out = z;
+                for i in 0..self.level {
+                    let pos = i * self.dims + axis;
+                    out = (out & !(1u64 << pos)) | ((((c >> i) & 1) as u64) << pos);
+                }
+                out
+            }
+        }
+    }
+
+    /// ±1 along `axis`; `false` (cursor unchanged) at the grid edge.
+    /// Re-encodes only the digits at and below the carry depth.
+    fn step(&self, cur: &mut HilbertCursor, axis: u32, dir: i32) -> bool {
+        let n = self.dims;
+        let m = self.level;
+        let c = self.coord(cur.z, axis);
+        // Carry length t: lowest coordinate bit the step leaves alone is
+        // t; bits 0..=t all flip.
+        let (nc, t) = if dir > 0 {
+            if c == ((1u64 << m) - 1) as u32 {
+                return false;
+            }
+            (c + 1, c.trailing_ones())
+        } else {
+            if c == 0 {
+                return false;
+            }
+            (c - 1, c.trailing_zeros())
+        };
+        cur.z = self.splice(cur.z, axis, nc);
+        // Digits above depth j0 kept the same coordinate bits on every
+        // axis, so their order digits and states are unchanged; resume
+        // the automaton from the stacked state at the carry depth.
+        let j0 = (m - 1 - t) as usize;
+        let mask = (1u64 << n) - 1;
+        let mut s = cur.states[j0];
+        let mut key = cur.key;
+        for j in j0..m as usize {
+            let i = (m as usize - 1 - j) as u32;
+            let l = (cur.z >> (i * n)) & mask;
+            let (w, s2) = self.fwd_step(s, l);
+            key = (key & !(mask << (i * n))) | (w << (i * n));
+            cur.states[j + 1] = s2;
+            s = s2;
+        }
+        cur.key = key;
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closed-form steppers
+// ---------------------------------------------------------------------------
+
+/// Masked-carry stepper on the interleaved word (Z-order, and Gray via
+/// the rank transform).
+struct InterleaveStep {
+    dims: u32,
+    level: u32,
+    gray: bool,
+    /// `axis_masks[a]`: the `level` bits of axis `a`'s column
+    /// (positions `j·dims + (dims−1−a)`).
+    axis_masks: Vec<u64>,
+}
+
+impl InterleaveStep {
+    fn new(dims: u32, level: u32, gray: bool) -> Self {
+        let axis_masks = (0..dims)
+            .map(|a| {
+                let lsb = 1u64 << (dims - 1 - a);
+                (0..level).fold(0u64, |m, j| m | (lsb << (j * dims)))
+            })
+            .collect();
+        InterleaveStep { dims, level, gray, axis_masks }
+    }
+
+    #[inline]
+    fn step_key(&self, key: u64, axis: u32, dir: i32) -> Option<u64> {
+        let z = if self.gray { gray(key) } else { key };
+        let m = self.axis_masks[axis as usize];
+        let lsb = 1u64 << (self.dims - 1 - axis);
+        let full = if self.dims * self.level == 64 {
+            !0u64
+        } else {
+            (1u64 << (self.dims * self.level)) - 1
+        };
+        let z2 = if dir > 0 {
+            if z & m == m {
+                return None; // axis coordinate is 2^level − 1
+            }
+            // Fill the foreign bit positions with ones so the +lsb carry
+            // ripples straight through them to the next axis bit.
+            ((z | (full & !m)).wrapping_add(lsb) & m) | (z & !m)
+        } else {
+            if z & m == 0 {
+                return None; // axis coordinate is 0
+            }
+            // Isolated column minus lsb borrows through the zero gaps.
+            ((z & m).wrapping_sub(lsb) & m) | (z & !m)
+        };
+        Some(if self.gray { gray_inv(z2) & full } else { z2 })
+    }
+}
+
+/// Stride stepper on the canonic mixed-radix numeral.
+struct MixedRadixStep {
+    shape: Vec<u32>,
+    strides: Vec<u64>,
+}
+
+impl MixedRadixStep {
+    fn new(shape: Vec<u32>) -> Self {
+        let d = shape.len();
+        let mut strides = vec![1u64; d];
+        for a in (0..d.saturating_sub(1)).rev() {
+            strides[a] = strides[a + 1] * shape[a + 1] as u64;
+        }
+        MixedRadixStep { shape, strides }
+    }
+
+    #[inline]
+    fn step_key(&self, key: u64, axis: u32, dir: i32) -> Option<u64> {
+        let a = axis as usize;
+        let digit = (key / self.strides[a]) % self.shape[a] as u64;
+        if dir > 0 {
+            if digit + 1 >= self.shape[a] as u64 {
+                return None;
+            }
+            Some(key + self.strides[a])
+        } else {
+            if digit == 0 {
+                return None;
+            }
+            Some(key - self.strides[a])
+        }
+    }
+}
+
+/// Decode–increment–encode fallback (the reference semantics).
+struct RoundtripStep {
+    /// Per-axis exclusive upper bounds; `None` for unbounded domains.
+    shape: Option<Vec<u32>>,
+}
+
+// ---------------------------------------------------------------------------
+// NeighborFinder
+// ---------------------------------------------------------------------------
+
+enum Engine {
+    Hilbert(HilbertWalk),
+    Interleave(InterleaveStep),
+    MixedRadix(MixedRadixStep),
+    Roundtrip(RoundtripStep),
+}
+
+/// Cursor over a cell key for repeated neighbor steps — the stateful
+/// handle [`NeighborFinder::stencil_keys`] walks depth-first. Stateless
+/// engines carry just the key; the Hilbert walk carries its coordinate
+/// word and state stack.
+enum Cursor {
+    Hilbert(HilbertCursor),
+    Key(u64),
+}
+
+/// Neighbor-rank operator over one [`CurveMapperNd`]: geometric face
+/// neighbors computed directly on curve keys, selecting the fastest
+/// structural path the mapper advertises (see the module docs and
+/// [`NeighborPath`]).
+pub struct NeighborFinder<'m> {
+    mapper: &'m dyn CurveMapperNd,
+    dims: usize,
+    engine: Engine,
+}
+
+impl<'m> NeighborFinder<'m> {
+    /// Build the operator for `mapper`, selecting the path from
+    /// [`CurveMapperNd::neighbor_ctx_nd`].
+    pub fn new(mapper: &'m dyn CurveMapperNd) -> Self {
+        let dims = mapper.dims();
+        let engine = match mapper.neighbor_ctx_nd() {
+            NeighborCtx::Hilbert { level } => {
+                Engine::Hilbert(HilbertWalk::new(dims as u32, level))
+            }
+            NeighborCtx::Interleave { level, gray } => {
+                Engine::Interleave(InterleaveStep::new(dims as u32, level, gray))
+            }
+            NeighborCtx::MixedRadix { shape } => {
+                Engine::MixedRadix(MixedRadixStep::new(shape))
+            }
+            NeighborCtx::Roundtrip => {
+                let shape = match mapper.domain_nd() {
+                    DomainNd::HyperRect { shape } => Some(shape),
+                    DomainNd::Space { .. } => None,
+                    DomainNd::SparseCube { level, dims, .. } => {
+                        Some(vec![1u32 << level; dims])
+                    }
+                };
+                Engine::Roundtrip(RoundtripStep { shape })
+            }
+        };
+        NeighborFinder { mapper, dims, engine }
+    }
+
+    /// Number of dimensions.
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Which computation path neighbor keys take.
+    pub fn path(&self) -> NeighborPath {
+        match self.engine {
+            Engine::Hilbert(_) => NeighborPath::AutomatonWalk,
+            Engine::Interleave(_) => NeighborPath::BitArithmetic,
+            Engine::MixedRadix(_) => NeighborPath::MixedRadix,
+            Engine::Roundtrip(_) => NeighborPath::CoordsRoundtrip,
+        }
+    }
+
+    #[inline]
+    fn roundtrip_step(&self, rt: &RoundtripStep, key: u64, axis: usize, dir: i32) -> Option<u64> {
+        let mut p = vec![0u32; self.dims];
+        self.mapper.coords_nd(key, &mut p);
+        let c = p[axis];
+        if dir > 0 {
+            let hi = rt.shape.as_ref().map_or(u32::MAX, |s| s[axis] - 1);
+            if c >= hi {
+                return None;
+            }
+            p[axis] = c + 1;
+        } else {
+            if c == 0 {
+                return None;
+            }
+            p[axis] = c - 1;
+        }
+        Some(self.mapper.order_nd(&p))
+    }
+
+    /// Key of the face neighbor one cell along `axis` in direction
+    /// `dir` (±1), or `None` at the grid edge — never a wraparound.
+    pub fn neighbor_key(&self, key: u64, axis: usize, dir: i32) -> Option<u64> {
+        debug_assert!(axis < self.dims && (dir == 1 || dir == -1));
+        match &self.engine {
+            Engine::Hilbert(w) => {
+                let mut cur = w.cursor(key);
+                w.step(&mut cur, axis as u32, dir).then_some(cur.key)
+            }
+            Engine::Interleave(s) => s.step_key(key, axis as u32, dir),
+            Engine::MixedRadix(s) => s.step_key(key, axis as u32, dir),
+            Engine::Roundtrip(rt) => self.roundtrip_step(rt, key, axis, dir),
+        }
+    }
+
+    #[inline]
+    fn make_cursor(&self, key: u64) -> Cursor {
+        match &self.engine {
+            Engine::Hilbert(w) => Cursor::Hilbert(w.cursor(key)),
+            _ => Cursor::Key(key),
+        }
+    }
+
+    #[inline]
+    fn cursor_key(&self, cur: &Cursor) -> u64 {
+        match cur {
+            Cursor::Hilbert(c) => c.key,
+            Cursor::Key(k) => *k,
+        }
+    }
+
+    /// ±1 along `axis`; `false` leaves the cursor unchanged (grid edge).
+    /// A successful step is exactly undone by the opposite step.
+    #[inline]
+    fn cursor_step(&self, cur: &mut Cursor, axis: usize, dir: i32) -> bool {
+        match (&self.engine, cur) {
+            (Engine::Hilbert(w), Cursor::Hilbert(c)) => w.step(c, axis as u32, dir),
+            (Engine::Interleave(s), Cursor::Key(k)) => match s.step_key(*k, axis as u32, dir) {
+                Some(nk) => {
+                    *k = nk;
+                    true
+                }
+                None => false,
+            },
+            (Engine::MixedRadix(s), Cursor::Key(k)) => match s.step_key(*k, axis as u32, dir) {
+                Some(nk) => {
+                    *k = nk;
+                    true
+                }
+                None => false,
+            },
+            (Engine::Roundtrip(rt), Cursor::Key(k)) => {
+                match self.roundtrip_step(rt, *k, axis, dir) {
+                    Some(nk) => {
+                        *k = nk;
+                        true
+                    }
+                    None => false,
+                }
+            }
+            _ => unreachable!("cursor kind matches engine kind"),
+        }
+    }
+
+    /// All `2d` face neighbors of `key`, written as
+    /// `out[2a] = axis a, −1` and `out[2a+1] = axis a, +1` (`None` at
+    /// grid edges). One key decode is shared across all probes on the
+    /// automaton-walk path.
+    pub fn neighbors_keys(&self, key: u64, out: &mut Vec<Option<u64>>) {
+        out.clear();
+        out.reserve(2 * self.dims);
+        let mut cur = self.make_cursor(key);
+        for axis in 0..self.dims {
+            for dir in [-1i32, 1] {
+                if self.cursor_step(&mut cur, axis, dir) {
+                    out.push(Some(self.cursor_key(&cur)));
+                    let undone = self.cursor_step(&mut cur, axis, -dir);
+                    debug_assert!(undone, "inverse of a successful step cannot hit an edge");
+                } else {
+                    out.push(None);
+                }
+            }
+        }
+    }
+
+    /// Keys of every cell at per-axis offsets `lo_off[a] ..= hi_off[a]`
+    /// from `key` (offsets need not be within ±1: wider boxes compose
+    /// steps), skipping cells beyond the grid edge; `include_center`
+    /// controls whether the zero-offset cell itself is emitted. Appends
+    /// to `out` in depth-first order (callers sort when they need runs).
+    pub fn stencil_keys(
+        &self,
+        key: u64,
+        lo_off: &[i32],
+        hi_off: &[i32],
+        include_center: bool,
+        out: &mut Vec<u64>,
+    ) {
+        debug_assert_eq!(lo_off.len(), self.dims);
+        debug_assert_eq!(hi_off.len(), self.dims);
+        debug_assert!(lo_off.iter().all(|&o| o <= 0));
+        debug_assert!(hi_off.iter().all(|&o| o >= 0));
+        let mut cur = self.make_cursor(key);
+        self.stencil_rec(&mut cur, 0, lo_off, hi_off, include_center, true, out);
+    }
+
+    /// The `3^d − 1` Chebyshev stencil: every cell within one step per
+    /// axis, excluding the center — the join's candidate cell set.
+    pub fn chebyshev_keys(&self, key: u64, out: &mut Vec<u64>) {
+        let lo = vec![-1i32; self.dims];
+        let hi = vec![1i32; self.dims];
+        self.stencil_keys(key, &lo, &hi, false, out);
+    }
+
+    fn stencil_rec(
+        &self,
+        cur: &mut Cursor,
+        axis: usize,
+        lo_off: &[i32],
+        hi_off: &[i32],
+        include_center: bool,
+        is_center: bool,
+        out: &mut Vec<u64>,
+    ) {
+        if axis == self.dims {
+            if include_center || !is_center {
+                out.push(self.cursor_key(cur));
+            }
+            return;
+        }
+        // Offset 0 first, then walk each direction with undo — the
+        // cursor returns to the axis origin after both sweeps.
+        self.stencil_rec(cur, axis + 1, lo_off, hi_off, include_center, is_center, out);
+        for (dir, span) in [(-1i32, -lo_off[axis]), (1, hi_off[axis])] {
+            let mut done = 0;
+            for _ in 0..span {
+                if !self.cursor_step(cur, axis, dir) {
+                    break; // grid edge: farther offsets are off-grid too
+                }
+                done += 1;
+                self.stencil_rec(cur, axis + 1, lo_off, hi_off, include_center, false, out);
+            }
+            for _ in 0..done {
+                let undone = self.cursor_step(cur, axis, -dir);
+                debug_assert!(undone);
+            }
+        }
+    }
+}
+
+/// Convenience one-shot: the face neighbor of `key` under `mapper`
+/// (builds a throwaway [`NeighborFinder`]; hoist one out of loops).
+pub fn neighbor_key(mapper: &dyn CurveMapperNd, key: u64, axis: usize, dir: i32) -> Option<u64> {
+    NeighborFinder::new(mapper).neighbor_key(key, axis, dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curves::ndim::{CanonicNd, GrayNd, HilbertNd, ZOrderNd};
+
+    /// Reference: decode, ±1, re-encode, with edge checks from the
+    /// domain shape.
+    fn roundtrip_ref(
+        m: &dyn CurveMapperNd,
+        key: u64,
+        axis: usize,
+        dir: i32,
+    ) -> Option<u64> {
+        let d = m.dims();
+        let shape = match m.domain_nd() {
+            DomainNd::HyperRect { shape } => shape,
+            _ => panic!("test mappers are rects"),
+        };
+        let mut p = vec![0u32; d];
+        m.coords_nd(key, &mut p);
+        let c = p[axis] as i64 + dir as i64;
+        if c < 0 || c >= shape[axis] as i64 {
+            return None;
+        }
+        p[axis] = c as u32;
+        Some(m.order_nd(&p))
+    }
+
+    #[test]
+    fn hilbert_walk_matches_roundtrip_small_exhaustive() {
+        for (dims, level) in [(2usize, 3u32), (2, 4), (3, 2), (3, 3), (4, 2)] {
+            let m = HilbertNd::new(dims, level);
+            let span = 1u64 << (dims as u32 * level);
+            let f = NeighborFinder::new(&m);
+            assert_eq!(f.path(), NeighborPath::AutomatonWalk);
+            for key in 0..span {
+                for axis in 0..dims {
+                    for dir in [-1, 1] {
+                        assert_eq!(
+                            f.neighbor_key(key, axis, dir),
+                            roundtrip_ref(&m, key, axis, dir),
+                            "d={dims} m={level} key={key} axis={axis} dir={dir}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn closed_forms_match_roundtrip() {
+        let z = ZOrderNd::new(3, 4);
+        let g = GrayNd::new(3, 4);
+        let c = CanonicNd::new(vec![5, 3, 7]);
+        for (m, path) in [
+            (&z as &dyn CurveMapperNd, NeighborPath::BitArithmetic),
+            (&g as &dyn CurveMapperNd, NeighborPath::BitArithmetic),
+            (&c as &dyn CurveMapperNd, NeighborPath::MixedRadix),
+        ] {
+            let f = NeighborFinder::new(m);
+            assert_eq!(f.path(), path, "{}", m.name_nd());
+            let span = m.order_span_nd().unwrap();
+            for key in 0..span {
+                for axis in 0..3 {
+                    for dir in [-1, 1] {
+                        assert_eq!(
+                            f.neighbor_key(key, axis, dir),
+                            roundtrip_ref(m, key, axis, dir),
+                            "{} key={key} axis={axis} dir={dir}",
+                            m.name_nd()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_face_neighbors_share_one_decode() {
+        let m = HilbertNd::new(3, 4);
+        let f = NeighborFinder::new(&m);
+        let mut out = Vec::new();
+        for key in [0u64, 1, 100, 4095] {
+            f.neighbors_keys(key, &mut out);
+            assert_eq!(out.len(), 6);
+            for axis in 0..3 {
+                assert_eq!(out[2 * axis], roundtrip_ref(&m, key, axis, -1));
+                assert_eq!(out[2 * axis + 1], roundtrip_ref(&m, key, axis, 1));
+            }
+        }
+    }
+
+    #[test]
+    fn chebyshev_stencil_has_full_count_in_the_interior() {
+        let m = HilbertNd::new(3, 3);
+        let f = NeighborFinder::new(&m);
+        // An interior cell: all coordinates strictly inside the grid.
+        let key = m.order_point(&[3, 4, 2]);
+        let mut out = Vec::new();
+        f.chebyshev_keys(key, &mut out);
+        assert_eq!(out.len(), 26);
+        out.sort_unstable();
+        out.dedup();
+        assert_eq!(out.len(), 26, "stencil keys must be distinct");
+        assert!(!out.contains(&key), "center excluded");
+    }
+}

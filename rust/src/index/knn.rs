@@ -1,14 +1,44 @@
-//! Shared expanding-window k-nearest-neighbor driver.
+//! Shared k-nearest-neighbor drivers: the expanding-window search and
+//! the curve-native frontier search.
 //!
 //! Both [`SfcIndex`](super::SfcIndex) and [`SfcStore`](super::SfcStore)
-//! answer kNN the same way: a centered L∞ window of radius `r` is
-//! complete for any answer distance `≤ r`, so the window doubles until
-//! the heap's k-th distance is covered (or the data's bounding box is).
-//! The window-probe itself is the structure-specific part, injected as a
-//! closure; the radius schedule, heap bookkeeping and termination rule
-//! live here once.
+//! answer kNN with [`expanding_knn`]: a centered L∞ window of radius `r`
+//! is complete for any answer distance `≤ r`, so the window doubles
+//! until the heap's k-th distance is covered (or the data's bounding box
+//! is). The window-probe itself is the structure-specific part, injected
+//! as a closure; the radius schedule, heap bookkeeping, per-id dedup and
+//! termination rule live here once. Because the driver dedups by id,
+//! window closures are free to probe only the *delta* of each expansion
+//! shell (the ranges not covered by earlier shells — see
+//! [`subtract_ranges`]) and to skip their exact float filter: a point
+//! emitted from a covered cell but outside the current float window is
+//! merely a far candidate the heap ignores, while every point **not**
+//! emitted by the final shell lies outside the final window and is
+//! therefore strictly farther than the answer radius.
+//!
+//! [`frontier_knn`] is the curve-native alternative for the sorted
+//! single-segment index (Holzmüller arXiv:1710.06384): instead of
+//! decomposing ever-larger windows it walks the curve's orthant tree
+//! directly on the sorted key column — pop the cell/subtree with the
+//! smallest box distance from a frontier heap, scan it if it is a single
+//! cell, jump to its face neighbors via
+//! [`NeighborFinder`](crate::curves::neighbor::NeighborFinder), and
+//! split it one radix digit otherwise. Empty orthants are never probed
+//! (subtree splits enumerate only occupied children; neighbor jumps cost
+//! one binary search and push nothing when the cell is empty), and the
+//! best-first order gives the same exactness guarantee as the expanding
+//! window: when the next frontier box is farther than the current k-th
+//! distance, no unscanned point can enter the answer. Distances use the
+//! identical float expression, so results are bit-for-bit equal to the
+//! expanding-window driver's.
 
-use std::collections::BinaryHeap;
+use crate::curves::engine::CurveMapperNd;
+use crate::curves::neighbor::NeighborFinder;
+use crate::index::quantize::Quantizer;
+use crate::index::sfc::QueryStats;
+use crate::index::store::segment::Segment;
+use std::collections::{BinaryHeap, HashSet};
+use std::ops::Range;
 
 /// A kNN candidate in the query's max-heap (ordered by distance, ties by
 /// id, via total order on the floats).
@@ -43,13 +73,16 @@ impl Ord for Neighbor {
 /// The `k` nearest neighbors of `q` by Euclidean distance, sorted
 /// ascending as `(id, distance)`.
 ///
-/// `for_window(lo, hi, emit)` must call `emit(id, row)` for every point
-/// whose coordinates lie inside the closed float window `[lo, hi]` —
-/// exactly once per live point. `cover_lo`/`cover_hi` bound the data
-/// (once the window covers them the scan was exhaustive), and `start_r`
-/// seeds the radius (callers pass the largest quantization cell width;
-/// `0` is bumped to a small positive epsilon so degenerate data still
-/// makes progress).
+/// `for_window(lo, hi, emit)` must call `emit(id, row)` at least once for
+/// every live point inside the closed float window `[lo, hi]` that it
+/// has not emitted on an earlier (smaller) window — the driver keeps one
+/// heap across the whole radius schedule and dedups by id, so re-emits
+/// are ignored and emitting *extra* points outside the window (e.g. from
+/// delta-probed curve ranges, skipping the float filter) is harmless.
+/// `cover_lo`/`cover_hi` bound the data (once the window covers them the
+/// scan was exhaustive), and `start_r` seeds the radius (callers pass
+/// the largest quantization cell width; `0` is bumped to a small
+/// positive epsilon so degenerate data still makes progress).
 pub(crate) fn expanding_knn(
     q: &[f32],
     k: usize,
@@ -68,13 +101,17 @@ pub(crate) fn expanding_knn(
     }
     let mut lo = vec![0.0f32; dims];
     let mut hi = vec![0.0f32; dims];
+    let mut heap: BinaryHeap<Neighbor> = BinaryHeap::with_capacity(k + 1);
+    let mut seen: HashSet<u32> = HashSet::new();
     loop {
         for a in 0..dims {
             lo[a] = q[a] - r;
             hi[a] = q[a] + r;
         }
-        let mut heap: BinaryHeap<Neighbor> = BinaryHeap::with_capacity(k + 1);
         for_window(&lo, &hi, &mut |id, row| {
+            if !seen.insert(id) {
+                return;
+            }
             let dist2: f32 = row.iter().zip(q).map(|(&a, &b)| (a - b) * (a - b)).sum();
             heap.push(Neighbor { dist: dist2.sqrt(), id });
             if heap.len() > k {
@@ -90,6 +127,263 @@ pub(crate) fn expanding_knn(
         }
         r *= 2.0;
     }
+}
+
+/// Parts of `ranges` not inside `covered` — both inputs sorted and
+/// disjoint, output likewise. The delta an expansion shell actually has
+/// to probe after earlier shells claimed `covered`.
+pub(crate) fn subtract_ranges(ranges: &[Range<u64>], covered: &[Range<u64>]) -> Vec<Range<u64>> {
+    let mut out = Vec::new();
+    let mut ci = 0usize;
+    for r in ranges {
+        let mut s = r.start;
+        let e = r.end;
+        while ci < covered.len() && covered[ci].end <= s {
+            ci += 1;
+        }
+        let mut cj = ci;
+        while s < e {
+            if cj >= covered.len() || covered[cj].start >= e {
+                out.push(s..e);
+                break;
+            }
+            let c = &covered[cj];
+            if c.start > s {
+                out.push(s..c.start);
+            }
+            if c.end >= e {
+                break;
+            }
+            s = c.end;
+            cj += 1;
+        }
+    }
+    out
+}
+
+/// Fold `add` into the sorted disjoint `covered` set, coalescing
+/// touching ranges.
+pub(crate) fn merge_ranges(covered: &mut Vec<Range<u64>>, add: &[Range<u64>]) {
+    if add.is_empty() {
+        return;
+    }
+    covered.extend_from_slice(add);
+    covered.sort_by_key(|r| r.start);
+    let mut out: Vec<Range<u64>> = Vec::with_capacity(covered.len());
+    for r in covered.drain(..) {
+        if let Some(last) = out.last_mut() {
+            if r.start <= last.end {
+                last.end = last.end.max(r.end);
+                continue;
+            }
+        }
+        out.push(r);
+    }
+    *covered = out;
+}
+
+/// A frontier entry: the sorted-key positions `[plo, phi)` of one
+/// aligned curve subtree (or single cell, at `depth == level`), with the
+/// smallest possible distance from the query to its cell box.
+struct FrontierNode {
+    mindist: f32,
+    depth: u32,
+    plo: u32,
+    phi: u32,
+}
+
+impl PartialEq for FrontierNode {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for FrontierNode {}
+
+impl PartialOrd for FrontierNode {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FrontierNode {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: reverse on mindist so the nearest box
+        // pops first; among ties prefer the deeper (smaller) box so the
+        // search descends toward the probe cell before fanning out.
+        other
+            .mindist
+            .total_cmp(&self.mindist)
+            .then(self.depth.cmp(&other.depth))
+            .then(other.plo.cmp(&self.plo))
+    }
+}
+
+/// Exact kNN over a **sorted** segment keyed by a radix-2 cube curve,
+/// best-first over the curve's orthant tree (see the module docs).
+/// Returns the same `(id, distance)` list as [`expanding_knn`] over
+/// window probes, bit for bit; fills `stats.key_probes` (binary searches
+/// on the key column), `ranges` (cells scanned) and `candidates`.
+pub(crate) fn frontier_knn(
+    q: &[f32],
+    k: usize,
+    quant: &Quantizer,
+    mapper: &dyn CurveMapperNd,
+    finder: &NeighborFinder,
+    seg: &Segment,
+    stats: &mut QueryStats,
+) -> Vec<(u32, f32)> {
+    let n = seg.rows();
+    if k == 0 || n == 0 {
+        return Vec::new();
+    }
+    let dims = quant.dims();
+    let side = quant.side();
+    debug_assert!(side.is_power_of_two(), "frontier kNN needs a radix-2 cube curve");
+    let m = side.trailing_zeros();
+    let orig = quant.origin();
+    let widths = quant.cell_widths();
+    let keys = &seg.keys;
+
+    // Smallest distance from q to the cell box [clo, chi] (inclusive
+    // cells). Edge cells extend to infinity — the quantizer clamps
+    // outliers into them, so their preimage is unbounded — and interior
+    // faces get a relative pad against boundary rounding; both only ever
+    // shrink the bound, so the best-first order stays admissible.
+    let mindist_box = |clo: &[u32], chi: &[u32]| -> f32 {
+        let mut d2 = 0f32;
+        for a in 0..dims {
+            let pad = widths[a] * 1e-3;
+            let lo = if clo[a] == 0 {
+                f32::NEG_INFINITY
+            } else {
+                orig[a] + clo[a] as f32 * widths[a] - pad
+            };
+            let hi = if chi[a] >= side - 1 {
+                f32::INFINITY
+            } else {
+                orig[a] + (chi[a] as f32 + 1.0) * widths[a] + pad
+            };
+            let d = if q[a] < lo {
+                lo - q[a]
+            } else if q[a] > hi {
+                q[a] - hi
+            } else {
+                0.0
+            };
+            d2 += d * d;
+        }
+        d2.sqrt()
+    };
+
+    let mut result: BinaryHeap<Neighbor> = BinaryHeap::with_capacity(k + 1);
+    let mut frontier: BinaryHeap<FrontierNode> = BinaryHeap::new();
+    // Single cells ever enqueued (as split children or neighbor jumps):
+    // each cell is scanned at most once, and empty neighbor cells are
+    // remembered so shared faces are probed once, not once per scan.
+    let mut enqueued: HashSet<u64> = HashSet::new();
+    let mut coords = vec![0u32; dims];
+    let mut clo = vec![0u32; dims];
+    let mut chi = vec![0u32; dims];
+    let mut nbuf: Vec<Option<u64>> = Vec::new();
+
+    frontier.push(FrontierNode { mindist: 0.0, depth: 0, plo: 0, phi: n as u32 });
+    while let Some(node) = frontier.pop() {
+        if result.len() == k {
+            let kth = result.peek().map(|t| t.dist).unwrap_or(f32::INFINITY);
+            if node.mindist > kth {
+                break; // every remaining box is farther than the k-th hit
+            }
+        }
+        let (plo, phi) = (node.plo as usize, node.phi as usize);
+        if node.depth == m || keys[plo] == keys[phi - 1] {
+            // Leaf: one occupied cell. Scan its run, then jump to its 2d
+            // face neighbors on the key column.
+            let cell = keys[plo];
+            enqueued.insert(cell);
+            stats.ranges += 1;
+            for pos in plo..phi {
+                stats.candidates += 1;
+                let row = seg.row(pos);
+                let dist2: f32 = row.iter().zip(q).map(|(&a, &b)| (a - b) * (a - b)).sum();
+                result.push(Neighbor { dist: dist2.sqrt(), id: seg.ids[pos] });
+                if result.len() > k {
+                    result.pop();
+                }
+            }
+            finder.neighbors_keys(cell, &mut nbuf);
+            for nk in nbuf.iter().flatten().copied() {
+                if !enqueued.insert(nk) {
+                    continue;
+                }
+                stats.key_probes += 1;
+                let lo = seg.lower_bound(nk);
+                if lo >= n || keys[lo] != nk {
+                    continue; // empty orthant: one probe, no node
+                }
+                let mut hi = lo + 1;
+                while hi < n && keys[hi] == nk {
+                    hi += 1;
+                }
+                mapper.coords_nd(nk, &mut coords);
+                frontier.push(FrontierNode {
+                    mindist: mindist_box(&coords, &coords),
+                    depth: m,
+                    plo: lo as u32,
+                    phi: hi as u32,
+                });
+            }
+        } else {
+            // Split one radix digit: enumerate the occupied children by
+            // walking child boundaries on the sorted key column — empty
+            // orthants are skipped entirely (they cost nothing at all).
+            let child_bits = (m - node.depth - 1) * dims as u32;
+            let child_side = 1u32 << (m - node.depth - 1);
+            let mut pos = plo;
+            while pos < phi {
+                let next = ((keys[pos] >> child_bits) + 1) << child_bits;
+                stats.key_probes += 1;
+                let end = pos + keys[pos..phi].partition_point(|&x| x < next);
+                if keys[pos] == keys[end - 1] {
+                    // Single occupied cell in this child: enqueue as a
+                    // leaf unless a neighbor jump already claimed it.
+                    let cell = keys[pos];
+                    if enqueued.insert(cell) {
+                        mapper.coords_nd(cell, &mut coords);
+                        frontier.push(FrontierNode {
+                            mindist: mindist_box(&coords, &coords),
+                            depth: m,
+                            plo: pos as u32,
+                            phi: end as u32,
+                        });
+                    }
+                } else {
+                    // Aligned child subcube: its cells share their top
+                    // coordinate bits, so mask the first key's coords
+                    // down to the subcube corner.
+                    mapper.coords_nd(keys[pos], &mut coords);
+                    for a in 0..dims {
+                        clo[a] = coords[a] & !(child_side - 1);
+                        chi[a] = clo[a] + child_side - 1;
+                    }
+                    frontier.push(FrontierNode {
+                        mindist: mindist_box(&clo, &chi),
+                        depth: node.depth + 1,
+                        plo: pos as u32,
+                        phi: end as u32,
+                    });
+                }
+                pos = end;
+            }
+        }
+    }
+    stats.shards_touched = 1;
+    stats.segments_probed = 1;
+    let mut best = result.into_vec();
+    best.sort();
+    let out: Vec<(u32, f32)> = best.into_iter().map(|t| (t.id, t.dist)).collect();
+    stats.results = out.len() as u64;
+    out
 }
 
 #[cfg(test)]
@@ -127,5 +421,40 @@ mod tests {
     #[test]
     fn k_zero_is_empty() {
         assert!(expanding_knn(&[0.0], 0, 1.0, &[0.0], &[1.0], |_, _, _| ()).is_empty());
+    }
+
+    #[test]
+    fn duplicate_emits_are_ignored() {
+        // The delta contract: closures may re-emit ids across shells (the
+        // legacy full-window closure does exactly that); the driver keeps
+        // each id once.
+        let got = expanding_knn(&[0.0], 2, 1.0, &[0.0], &[100.0], |_, hi, emit| {
+            emit(1, &[1.0]);
+            emit(1, &[1.0]);
+            if hi[0] >= 50.0 {
+                emit(2, &[50.0]);
+            }
+        });
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 1);
+        assert_eq!(got[1].0, 2);
+    }
+
+    #[test]
+    fn subtract_and_merge_ranges() {
+        let covered = vec![2u64..5, 8..12];
+        assert_eq!(subtract_ranges(&[0..3], &covered), vec![0..2]);
+        assert_eq!(subtract_ranges(&[3..4], &covered), vec![]);
+        assert_eq!(
+            subtract_ranges(&[0..20], &covered),
+            vec![0..2, 5..8, 12..20]
+        );
+        assert_eq!(subtract_ranges(&[4..9, 11..14], &covered), vec![5..8, 12..14]);
+
+        let mut cov = vec![2u64..5];
+        merge_ranges(&mut cov, &[5..7, 10..12]);
+        assert_eq!(cov, vec![2..7, 10..12]);
+        merge_ranges(&mut cov, &[0..1, 6..11]);
+        assert_eq!(cov, vec![0..1, 2..12]);
     }
 }

@@ -31,8 +31,9 @@
 
 use crate::apps::Matrix;
 use crate::curves::engine::{coarsen_ranges, CurveMapperNd, DomainNd};
+use crate::curves::neighbor::{NeighborFinder, NeighborPath};
 use crate::curves::CurveKind;
-use crate::index::knn::expanding_knn;
+use crate::index::knn::{expanding_knn, frontier_knn, merge_ranges, subtract_ranges};
 use crate::index::quantize::{clamped_level, window_contains, Quantizer};
 use crate::index::store::segment::Segment;
 
@@ -55,6 +56,12 @@ pub struct QueryStats {
     /// Segments probed across those shards (always ≤ 1 for the
     /// single-segment [`SfcIndex`]).
     pub segments_probed: usize,
+    /// Binary searches issued on sorted key columns: one per probed
+    /// range (times sorted segments, for the store) plus — in the
+    /// frontier kNN — one per subtree split and one per neighbor jump.
+    /// The headline cost the neighbor operator cuts relative to window
+    /// decomposition.
+    pub key_probes: u64,
 }
 
 impl QueryStats {
@@ -204,6 +211,7 @@ impl SfcIndex {
         let mut ranges = self.mapper.decompose_nd(&self.quant.window(lo, hi));
         coarsen_ranges(&mut ranges, max_ranges);
         stats.ranges = ranges.len();
+        stats.key_probes = ranges.len() as u64;
         stats.shards_touched = 1;
         stats.segments_probed = 1;
         self.seg.probe_ranges(&ranges, |pos| {
@@ -218,13 +226,66 @@ impl SfcIndex {
 
     /// The `k` nearest neighbors of `q` by Euclidean distance, sorted
     /// ascending as `(id, distance)` (fewer than `k` when the index is
-    /// smaller) — the shared expanding-window search over window
-    /// queries.
+    /// smaller). Radix-2 cube curves (Hilbert, Z-order, Gray) run the
+    /// curve-native frontier search ([`frontier_knn`]): best-first over
+    /// occupied orthants with constant-time neighbor jumps, never
+    /// decomposing a window. Other curves fall back to the legacy
+    /// expanding-window driver. Results are bit-for-bit identical either
+    /// way.
     pub fn query_knn(&self, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        self.query_knn_stats(q, k).0
+    }
+
+    /// [`SfcIndex::query_knn`] with query statistics
+    /// ([`QueryStats::key_probes`] counts every binary search the driver
+    /// issued on the key column).
+    pub fn query_knn_stats(&self, q: &[f32], k: usize) -> (Vec<(u32, f32)>, QueryStats) {
+        assert_eq!(q.len(), self.dims(), "query dims must match the index");
+        let mut stats = QueryStats::default();
+        if self.is_empty() {
+            return (Vec::new(), stats);
+        }
+        match self.kind {
+            CurveKind::Hilbert | CurveKind::ZOrder | CurveKind::Gray => {
+                let finder = NeighborFinder::new(self.mapper.as_ref());
+                let out = frontier_knn(
+                    q,
+                    k,
+                    &self.quant,
+                    self.mapper.as_ref(),
+                    &finder,
+                    &self.seg,
+                    &mut stats,
+                );
+                (out, stats)
+            }
+            _ => self.knn_expanding(q, k),
+        }
+    }
+
+    /// The expanding-window kNN driver, kept as the parity baseline for
+    /// the frontier search (and the routing fallback for curves without
+    /// a radix-2 cube key layout). Expansion shells probe only their
+    /// *delta*: ranges covered by earlier, smaller windows are
+    /// subtracted before the binary searches, so no key range is probed
+    /// twice across the radius schedule.
+    pub fn query_knn_legacy(&self, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        self.query_knn_legacy_stats(q, k).0
+    }
+
+    /// [`SfcIndex::query_knn_legacy`] with query statistics.
+    pub fn query_knn_legacy_stats(&self, q: &[f32], k: usize) -> (Vec<(u32, f32)>, QueryStats) {
         assert_eq!(q.len(), self.dims(), "query dims must match the index");
         if self.is_empty() {
-            return Vec::new();
+            return (Vec::new(), QueryStats::default());
         }
+        self.knn_expanding(q, k)
+    }
+
+    fn knn_expanding(&self, q: &[f32], k: usize) -> (Vec<(u32, f32)>, QueryStats) {
+        let mut stats = QueryStats::default();
+        stats.shards_touched = 1;
+        stats.segments_probed = 1;
         let side = self.quant.side() as f32;
         let cover_hi: Vec<f32> = self
             .quant
@@ -233,18 +294,39 @@ impl SfcIndex {
             .zip(self.quant.cell_widths())
             .map(|(&o, &c)| o + c * side)
             .collect();
-        expanding_knn(
+        // Covered delta-probing: emitted candidates skip the float
+        // filter (the shared driver dedups by id and far points never
+        // displace true neighbors), so covered-but-filtered points can't
+        // be lost when the window grows.
+        let mut covered: Vec<std::ops::Range<u64>> = Vec::new();
+        let out = expanding_knn(
             q,
             k,
             self.quant.max_cell_width(),
             self.quant.origin(),
             &cover_hi,
             |lo, hi, emit| {
-                for pos in self.window_positions(lo, hi, 0).0 {
+                let ranges = self.mapper.decompose_nd(&self.quant.window(lo, hi));
+                let delta = subtract_ranges(&ranges, &covered);
+                stats.ranges += delta.len();
+                stats.key_probes += delta.len() as u64;
+                self.seg.probe_ranges(&delta, |pos| {
+                    stats.candidates += 1;
                     emit(self.seg.ids[pos], self.seg.row(pos));
-                }
+                });
+                merge_ranges(&mut covered, &delta);
             },
-        )
+        );
+        stats.results = out.len() as u64;
+        (out, stats)
+    }
+
+    /// Which neighbor-stepping substrate the frontier search walks cells
+    /// with — fast-path introspection mirroring [`SfcIndex::key_path`]
+    /// (see [`crate::curves::neighbor`]). Tests assert no silent
+    /// roundtrip fallback for the native curves at d ≤ 8.
+    pub fn neighbor_path(&self) -> NeighborPath {
+        NeighborFinder::new(self.mapper.as_ref()).path()
     }
 }
 
@@ -356,6 +438,32 @@ mod tests {
                 assert!((g.1 - w.1).abs() < 1e-5, "distance mismatch {g:?} vs {w:?}");
             }
         }
+    }
+
+    #[test]
+    fn frontier_knn_matches_legacy_bit_for_bit() {
+        let points = Matrix::random(400, 3, 77, 0.0, 50.0);
+        for kind in [CurveKind::Hilbert, CurveKind::ZOrder, CurveKind::Gray] {
+            let index = SfcIndex::build_with(&points, 5, kind);
+            assert!(index.neighbor_path().is_fast(), "{}", kind.name());
+            let mut rng = Rng::new(9);
+            for _ in 0..15 {
+                let q: Vec<f32> = (0..3).map(|_| rng.f32() * 60.0 - 5.0).collect();
+                let k = 1 + rng.below(8) as usize;
+                let (fast, fs) = index.query_knn_stats(&q, k);
+                let (slow, ls) = index.query_knn_legacy_stats(&q, k);
+                assert_eq!(fast, slow, "{} k={k} q={q:?}", kind.name());
+                assert!(fs.key_probes > 0 && ls.key_probes > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn window_stats_count_key_probes() {
+        let points = Matrix::random(200, 2, 19, 0.0, 10.0);
+        let index = SfcIndex::build(&points, 5);
+        let (_, s) = index.query_window_stats(&[2.0, 2.0], &[7.0, 7.0], 0);
+        assert_eq!(s.key_probes, s.ranges as u64);
     }
 
     #[test]

@@ -39,13 +39,15 @@ use crate::apps::Matrix;
 use crate::curves::engine::{with_cells_scratch, CurveMapperNd, DomainNd};
 use crate::curves::fastkey::KeyPath;
 use crate::curves::CurveKind;
-use crate::index::knn::expanding_knn;
+use crate::curves::neighbor::{NeighborFinder, NeighborPath};
+use crate::index::knn::{expanding_knn, merge_ranges, subtract_ranges};
 use crate::index::quantize::{clamped_level, window_contains, Quantizer};
 use crate::index::QueryStats;
 use planner::{plan_window, QueryPlan, ShardProbe};
 use segment::Segment;
 use shard::ShardState;
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
@@ -271,6 +273,20 @@ impl SfcStore {
         self.mapper.key_path_nd()
     }
 
+    /// The d-dimensional curve mapper the keys live on — shared with
+    /// callers that build neighbor stencils against the store's key
+    /// space (the jump similarity join).
+    pub fn mapper_nd(&self) -> &dyn CurveMapperNd {
+        self.mapper.as_ref()
+    }
+
+    /// Which neighbor-stepping substrate stencil probes against this
+    /// store walk cells with (see [`crate::curves::neighbor`]) —
+    /// introspection mirroring [`SfcStore::key_path`].
+    pub fn neighbor_path(&self) -> NeighborPath {
+        NeighborFinder::new(self.mapper.as_ref()).path()
+    }
+
     // ------------------------------------------------------------------
     // Mutation
     // ------------------------------------------------------------------
@@ -480,12 +496,16 @@ impl SfcStore {
     }
 
     /// Probe one shard's segment stack, resolving per-id winners within
-    /// the shard. Returns `(winners, candidates, segments_probed)`.
-    fn probe_shard(snap: &Snapshot, probe: &ShardProbe) -> (Vec<(u32, Hit)>, u64, usize) {
+    /// the shard. Returns `(winners, candidates, segments_probed,
+    /// key_probes)` — one key probe per range on each sorted segment,
+    /// one per unsorted mini-run (those are scanned, not searched).
+    fn probe_shard(snap: &Snapshot, probe: &ShardProbe) -> (Vec<(u32, Hit)>, u64, usize, u64) {
         let segs = &snap.shards[probe.shard];
         let mut best: HashMap<u32, Hit> = HashMap::new();
         let mut candidates = 0u64;
+        let mut key_probes = 0u64;
         for (si, seg) in segs.iter().enumerate() {
+            key_probes += if seg.sorted { probe.ranges.len() as u64 } else { 1 };
             seg.probe_ranges(&probe.ranges, |pos| {
                 candidates += 1;
                 let hit = Hit {
@@ -504,7 +524,7 @@ impl SfcStore {
                     .or_insert(hit);
             });
         }
-        (best.into_iter().collect(), candidates, segs.len())
+        (best.into_iter().collect(), candidates, segs.len(), key_probes)
     }
 
     /// Merge per-shard winners (max seq per id across shards), drop
@@ -537,16 +557,19 @@ impl SfcStore {
     fn finish_plan(
         snap: &Snapshot,
         plan: &QueryPlan,
-        shard_hits: Vec<(Vec<(u32, Hit)>, u64, usize)>,
+        shard_hits: Vec<(Vec<(u32, Hit)>, u64, usize, u64)>,
         stats: &mut QueryStats,
         mut filter: impl FnMut(u32, &[f32]) -> bool,
     ) -> Vec<u32> {
-        stats.ranges = plan.ranges.len();
-        stats.shards_touched = plan.probes.len();
+        // Accumulating (not assigning) lets the kNN radius schedule fold
+        // several plan executions into one stats record.
+        stats.ranges += plan.ranges.len();
+        stats.shards_touched += plan.probes.len();
         let mut hits = Vec::with_capacity(shard_hits.len());
-        for (h, cands, segs) in shard_hits {
+        for (h, cands, segs, probes) in shard_hits {
             stats.candidates += cands;
             stats.segments_probed += segs;
+            stats.key_probes += probes;
             hits.push(h);
         }
         let mut out = Vec::new();
@@ -623,31 +646,71 @@ impl SfcStore {
         self.query_point_on(&self.snapshot(), q)
     }
 
+    /// Live ids of the points whose cells are exactly the given
+    /// **sorted, unique** curve keys — the store's key-jump probe. No
+    /// window, no decomposition, no float filter: the keys (typically a
+    /// neighbor stencil from
+    /// [`NeighborFinder`](crate::curves::neighbor::NeighborFinder))
+    /// merge into unit-cell runs, route across the shard fenceposts
+    /// ([`planner::plan_keys`]) and resolve visibility like any window
+    /// probe. Callers apply their own exact predicate to the survivors.
+    /// Visibility is exact per key because an insert and its tombstone
+    /// share a curve key, so one key run sees every version of an id.
+    pub fn query_keys_on(&self, snap: &Snapshot, keys: &[u64], stats: &mut QueryStats) -> Vec<u32> {
+        if keys.is_empty() {
+            return Vec::new();
+        }
+        let plan = planner::plan_keys(keys, &snap.bounds);
+        Self::run_plan(snap, &plan, stats, |_, _| true)
+    }
+
     /// The `k` nearest live neighbors of `q` by Euclidean distance,
     /// sorted ascending as `(id, distance)` — the shared
     /// expanding-window search over snapshot window queries.
     pub fn query_knn_on(&self, snap: &Snapshot, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        self.query_knn_stats_on(snap, q, k).0
+    }
+
+    /// [`SfcStore::query_knn_on`] with query statistics. Expansion
+    /// shells probe only their *delta*: key ranges covered by earlier,
+    /// smaller windows are subtracted before planning, so no range is
+    /// decomposed into probes twice across the radius schedule.
+    /// Candidates from covered cells skip the float filter — the shared
+    /// driver dedups by id and far points never displace true
+    /// neighbors — which is also what makes delta probing exact: a
+    /// covered point outside an early float window is already in the
+    /// driver's heap when the window grows over it.
+    pub fn query_knn_stats_on(
+        &self,
+        snap: &Snapshot,
+        q: &[f32],
+        k: usize,
+    ) -> (Vec<(u32, f32)>, QueryStats) {
         assert_eq!(q.len(), self.dims, "query dims must match the store");
+        let mut stats = QueryStats::default();
         if snap.entries == 0 || k == 0 {
-            return Vec::new();
+            return (Vec::new(), stats);
         }
-        expanding_knn(
+        let mut covered: Vec<Range<u64>> = Vec::new();
+        let out = expanding_knn(
             q,
             k,
             self.quant.max_cell_width(),
             &snap.data_lo,
             &snap.data_hi,
             |lo, hi, emit| {
-                let plan = self.plan_window(snap, lo, hi, 0);
-                let mut stats = QueryStats::default();
+                let ranges = self.mapper.decompose_nd(&self.quant.window(lo, hi));
+                let delta = subtract_ranges(&ranges, &covered);
+                let plan = planner::plan_ranges(delta.clone(), &snap.bounds);
                 Self::run_plan(snap, &plan, &mut stats, |id, row| {
-                    if window_contains(lo, hi, row) {
-                        emit(id, row);
-                    }
+                    emit(id, row);
                     false
                 });
+                merge_ranges(&mut covered, &delta);
             },
-        )
+        );
+        stats.results = out.len() as u64;
+        (out, stats)
     }
 
     /// kNN query on the current epoch.

@@ -59,6 +59,25 @@ pub fn plan_window(
     plan_ranges(ranges, bounds)
 }
 
+/// Plan a **key-jump** probe: a sorted, deduplicated list of curve keys
+/// (e.g. a neighbor stencil from
+/// [`NeighborFinder`](crate::curves::neighbor::NeighborFinder)) is
+/// merged into contiguous unit-cell runs and routed across the shard
+/// fenceposts like any decomposed window. The jump path thereby reuses
+/// the exact routing invariants of the window planner — every stencil
+/// cell probes exactly one shard — without ever decomposing a window.
+pub fn plan_keys(keys: &[u64], bounds: &[u64]) -> QueryPlan {
+    debug_assert!(keys.windows(2).all(|w| w[0] < w[1]), "keys must be sorted and unique");
+    let mut ranges: Vec<Range<u64>> = Vec::new();
+    for &k in keys {
+        match ranges.last_mut() {
+            Some(r) if r.end == k => r.end = k + 1,
+            _ => ranges.push(k..k + 1),
+        }
+    }
+    plan_ranges(ranges, bounds)
+}
+
 /// Route an already-decomposed range list (sorted, disjoint) to shards.
 pub fn plan_ranges(ranges: Vec<Range<u64>>, bounds: &[u64]) -> QueryPlan {
     let mut probes: Vec<ShardProbe> = Vec::new();
@@ -111,6 +130,20 @@ mod tests {
         let plan =
             plan_window(mapper.as_ref(), &quant, &bounds, &[3.0, 3.0], &[3.5, 3.5], 0);
         assert_eq!(plan.shards_touched(), 1);
+    }
+
+    #[test]
+    fn key_plan_merges_runs_and_routes_across_fenceposts() {
+        let bounds = [0u64, 100, 200];
+        let plan = plan_keys(&[3, 4, 5, 99, 100, 101, 150], &bounds);
+        // Consecutive keys collapse into runs...
+        assert_eq!(plan.ranges, vec![3..6, 99..102, 150..151]);
+        // ...and the run straddling the fencepost splits at it.
+        assert_eq!(plan.probes.len(), 2);
+        assert_eq!(plan.probes[0].shard, 0);
+        assert_eq!(plan.probes[0].ranges, vec![3..6, 99..100]);
+        assert_eq!(plan.probes[1].shard, 1);
+        assert_eq!(plan.probes[1].ranges, vec![100..102, 150..151]);
     }
 
     #[test]

@@ -37,8 +37,8 @@ use sfc_mine::apps::kmeans::{hilbert_point_order, init_centroids, make_blobs, pe
 use sfc_mine::apps::matmul::{flops, matmul_curve, matmul_tiled, matmul_transposed};
 use sfc_mine::apps::pairloop::{fig1e_sweep, PairLoopConfig};
 use sfc_mine::apps::simjoin::{
-    join_fgf_hilbert_dims, join_grid_nested_dims, join_grid_projected, join_sfc_dims,
-    join_store_dims, make_clustered, DEFAULT_INDEX_DIMS,
+    join_fgf_hilbert_dims, join_grid_nested_dims, join_grid_projected, join_sfc_decompose_dims,
+    join_sfc_dims, join_store_decompose_dims, join_store_dims, make_clustered, DEFAULT_INDEX_DIMS,
 };
 use sfc_mine::apps::Matrix;
 use sfc_mine::coordinator::{par_kmeans_step, Coordinator};
@@ -454,22 +454,53 @@ fn simjoin_cmd(args: &Args) {
     let (pairs_fgf, sf) = join_fgf_hilbert_dims(&points, eps, index_dims);
     let fgf_dt = t0.elapsed();
 
-    // The default path: per-cell ε-window decomposition over the sorted
-    // Hilbert key column (the query subsystem driving the join).
+    // The default path: stencil key jumps over the sorted Hilbert key
+    // column (the constant-time neighbor operator driving the join).
     let t0 = Instant::now();
     let (pairs_sfc, ss) = join_sfc_dims(&points, eps, index_dims);
     let sfc_dt = t0.elapsed();
 
-    // The serving-layer path: the points live in a mutable SfcStore and
-    // every ±ε window routes through the query planner on one snapshot.
+    // The retired per-cell window-decomposition loop, kept as the
+    // probe-count baseline the jump path is measured against.
+    let t0 = Instant::now();
+    let (pairs_sfc_dec, ssd) = join_sfc_decompose_dims(&points, eps, index_dims);
+    let sfc_dec_dt = t0.elapsed();
+
+    // The serving-layer path: grouped stencil key plans routed across
+    // the store's shard fenceposts on one snapshot.
     let t0 = Instant::now();
     let (pairs_store, sst) = join_store_dims(&points, eps, index_dims);
     let store_dt = t0.elapsed();
+
+    // Its baseline: one window decomposition through the planner per
+    // point.
+    let t0 = Instant::now();
+    let (pairs_store_dec, sstd) = join_store_decompose_dims(&points, eps, index_dims);
+    let store_dec_dt = t0.elapsed();
 
     assert_eq!(pairs_2d.len(), pairs_grid.len(), "identical result pair sets");
     assert_eq!(pairs_grid.len(), pairs_fgf.len(), "identical result pair sets");
     assert_eq!(pairs_fgf.len(), pairs_sfc.len(), "identical result pair sets");
     assert_eq!(pairs_sfc.len(), pairs_store.len(), "identical result pair sets");
+    // Jump-vs-decompose parity: same pairs, same candidate structure,
+    // same distance computations — only the probe count may differ.
+    assert_eq!(pairs_sfc, pairs_sfc_dec, "jump join must equal decomposition bit for bit");
+    assert_eq!(ss.cell_pairs, ssd.cell_pairs, "identical candidate cell pairs");
+    assert_eq!(ss.comparisons, ssd.comparisons, "identical distance computations");
+    assert_eq!(
+        {
+            let mut p = pairs_store.clone();
+            p.sort_unstable();
+            p
+        },
+        {
+            let mut p = pairs_store_dec.clone();
+            p.sort_unstable();
+            p
+        },
+        "store jump join must equal decomposition"
+    );
+    assert_eq!(sst.comparisons, sstd.comparisons, "identical distance computations (store)");
     println!(
         "simjoin n={n} d={d} eps={eps}: {} pairs (all variants identical)",
         pairs_sfc.len()
@@ -481,11 +512,14 @@ fn simjoin_cmd(args: &Args) {
         "cell pairs",
         "comparisons",
         "ranges",
+        "key probes",
         "jumps",
     ]);
     for (name, dims, dt, s) in [
-        ("sfc-window-nd (default)", index_dims, sfc_dt, &ss),
-        ("sfc-store (serving)", index_dims, store_dt, &sst),
+        ("sfc-neighbor-nd (default)", index_dims, sfc_dt, &ss),
+        ("sfc-decompose-nd (baseline)", index_dims, sfc_dec_dt, &ssd),
+        ("sfc-store-neighbor (serving)", index_dims, store_dt, &sst),
+        ("sfc-store-decompose (baseline)", index_dims, store_dec_dt, &sstd),
         ("grid-2d-projection", 2, proj_dt, &s2),
         ("grid-nd", index_dims, grid_dt, &sg),
         ("fgf-hilbert-nd", index_dims, fgf_dt, &sf),
@@ -497,10 +531,31 @@ fn simjoin_cmd(args: &Args) {
             s.cell_pairs.to_string(),
             s.comparisons.to_string(),
             s.ranges.to_string(),
+            s.key_probes.to_string(),
             s.fgf.map(|f| f.jumps).unwrap_or(0).to_string(),
         ]);
     }
     print!("{}", t.render());
+    if index_dims <= 8 {
+        assert!(
+            ss.key_probes < ssd.key_probes,
+            "stencil jumps must probe less than decomposition ({} vs {})",
+            ss.key_probes,
+            ssd.key_probes
+        );
+        assert!(
+            sst.key_probes < sstd.key_probes,
+            "store stencil plans must probe less than per-point decomposition ({} vs {})",
+            sst.key_probes,
+            sstd.key_probes
+        );
+        println!(
+            "neighbor jumps: {:.2}x fewer key probes than decomposition (index), \
+             {:.2}x fewer (store)",
+            ssd.key_probes as f64 / ss.key_probes.max(1) as f64,
+            sstd.key_probes as f64 / sst.key_probes.max(1) as f64,
+        );
+    }
     if index_dims > 2 {
         println!(
             "d-dim pruning: {} distance computations vs {} with the 2-D projection ({:.2}x fewer)",
@@ -677,12 +732,39 @@ fn query_cmd(args: &Args) {
                 .collect();
             let t0 = Instant::now();
             let mut dist_sum = 0f64;
+            let mut probes = 0u64;
+            let mut all_hits = Vec::with_capacity(queries);
             for q in &centers {
-                for (_, dist) in index.query_knn(q, k) {
+                let (hits, s) = index.query_knn_stats(q, k);
+                probes += s.key_probes;
+                for &(_, dist) in &hits {
                     dist_sum += dist as f64;
                 }
+                all_hits.push(hits);
             }
             let dt = t0.elapsed();
+            // The retired expanding-window driver: parity baseline for
+            // the frontier search (bit-for-bit identical results).
+            let t0 = Instant::now();
+            let mut legacy_probes = 0u64;
+            for (q, hits) in centers.iter().zip(&all_hits) {
+                let (legacy, s) = index.query_knn_legacy_stats(q, k);
+                legacy_probes += s.key_probes;
+                assert_eq!(&legacy, hits, "frontier must equal legacy bit for bit");
+            }
+            let legacy_dt = t0.elapsed();
+            println!(
+                "kNN driver [{}]: neighbor path {}, {:.1} key probes/query \
+                 (legacy expanding-window: {:.1})",
+                curve.name(),
+                index.neighbor_path().name(),
+                probes as f64 / queries as f64,
+                legacy_probes as f64 / queries as f64,
+            );
+            println!(
+                "kNN legacy driver: {:.3} ms/query",
+                legacy_dt.as_secs_f64() * 1e3 / queries as f64
+            );
             let t0 = Instant::now();
             let mut scan_sum = 0f64;
             for q in &centers {

@@ -1,0 +1,316 @@
+//! Neighbor-operator property suite (ISSUE 7): the constant-time
+//! neighbor finder must agree **bit for bit** with the
+//! coords-roundtrip reference for every curve and dimensionality, the
+//! Chebyshev stencil must enumerate exactly the `3^d` odometer's
+//! in-grid cells, the frontier kNN must equal both brute force and the
+//! legacy expanding-window driver while probing strictly less, and the
+//! jump similarity join must reproduce the nested-grid pair set.
+
+use sfc_mine::apps::simjoin::{
+    join_grid_nested_dims, join_sfc_decompose_dims, join_sfc_dims, join_store_decompose_dims,
+    join_store_dims, make_clustered, normalize,
+};
+use sfc_mine::apps::Matrix;
+use sfc_mine::curves::engine::{CurveMapperNd, DomainNd};
+use sfc_mine::curves::neighbor::{NeighborFinder, NeighborPath};
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::SfcIndex;
+use sfc_mine::util::rng::Rng;
+
+/// Refinement per dimensionality keeping spans comfortably small (and
+/// Peano's 3^(d·level) in check).
+fn level_for(dims: usize) -> u32 {
+    match dims {
+        2 => 5,
+        3 => 4,
+        4 => 3,
+        _ => 2,
+    }
+}
+
+/// The reference implementation: decode, step the coordinate, re-encode;
+/// `None` when the step leaves the grid.
+fn roundtrip_neighbor(
+    mapper: &dyn CurveMapperNd,
+    shape: &[u32],
+    key: u64,
+    axis: usize,
+    dir: i32,
+) -> Option<u64> {
+    let mut c = vec![0u32; shape.len()];
+    mapper.coords_nd(key, &mut c);
+    if dir > 0 {
+        if c[axis] + 1 >= shape[axis] {
+            return None;
+        }
+        c[axis] += 1;
+    } else {
+        if c[axis] == 0 {
+            return None;
+        }
+        c[axis] -= 1;
+    }
+    Some(mapper.order_nd(&c))
+}
+
+fn shape_of(mapper: &dyn CurveMapperNd) -> Vec<u32> {
+    match mapper.domain_nd() {
+        DomainNd::HyperRect { shape } => shape,
+        _ => panic!("nd_mapper domains are hyperrects"),
+    }
+}
+
+#[test]
+fn neighbor_keys_match_roundtrip_for_every_curve_and_dim() {
+    for kind in CurveKind::ALL {
+        for dims in [2usize, 3, 4, 6] {
+            let level = level_for(dims);
+            let mapper = kind.nd_mapper(dims, level);
+            let shape = shape_of(mapper.as_ref());
+            let finder = NeighborFinder::new(mapper.as_ref());
+            // Native d-dim curves must take a constant-time path at
+            // d ≤ 8 — a silent roundtrip fallback is a regression.
+            let want_fast = match kind {
+                CurveKind::Hilbert => Some(NeighborPath::AutomatonWalk),
+                CurveKind::ZOrder | CurveKind::Gray => Some(NeighborPath::BitArithmetic),
+                CurveKind::Canonic => Some(NeighborPath::MixedRadix),
+                CurveKind::Peano => None, // radix-3: roundtrip is expected
+            };
+            if let Some(path) = want_fast {
+                assert_eq!(finder.path(), path, "{} d={dims}", kind.name());
+                assert!(finder.path().is_fast());
+            }
+            let mut rng = Rng::new(0xA11CE ^ ((dims as u64) << 8) ^ kind as u64);
+            let mut coords = vec![0u32; dims];
+            for case in 0..200 {
+                // Mix random interior cells with boundary-heavy ones:
+                // every third case pins some axes to the grid edges.
+                for (a, c) in coords.iter_mut().enumerate() {
+                    *c = if case % 3 == 0 && rng.below(2) == 0 {
+                        if rng.below(2) == 0 { 0 } else { shape[a] - 1 }
+                    } else {
+                        rng.below(shape[a] as u64) as u32
+                    };
+                }
+                let key = mapper.order_nd(&coords);
+                for axis in 0..dims {
+                    for dir in [-1i32, 1] {
+                        let got = finder.neighbor_key(key, axis, dir);
+                        let want = roundtrip_neighbor(mapper.as_ref(), &shape, key, axis, dir);
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} d={dims} coords={coords:?} axis={axis} dir={dir}",
+                            kind.name()
+                        );
+                    }
+                }
+                // The batched form agrees with the scalar one.
+                let mut nbuf = Vec::new();
+                finder.neighbors_keys(key, &mut nbuf);
+                assert_eq!(nbuf.len(), 2 * dims);
+                for axis in 0..dims {
+                    assert_eq!(nbuf[2 * axis], finder.neighbor_key(key, axis, -1));
+                    assert_eq!(nbuf[2 * axis + 1], finder.neighbor_key(key, axis, 1));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_edge_cells_return_none_not_wrap() {
+    for kind in CurveKind::ALL {
+        for dims in [2usize, 3] {
+            let mapper = kind.nd_mapper(dims, level_for(dims));
+            let shape = shape_of(mapper.as_ref());
+            let finder = NeighborFinder::new(mapper.as_ref());
+            // The all-zeros corner and the all-max corner.
+            let zero = vec![0u32; dims];
+            let maxc: Vec<u32> = shape.iter().map(|&s| s - 1).collect();
+            let kz = mapper.order_nd(&zero);
+            let km = mapper.order_nd(&maxc);
+            for axis in 0..dims {
+                assert_eq!(finder.neighbor_key(kz, axis, -1), None, "{}", kind.name());
+                assert_eq!(finder.neighbor_key(km, axis, 1), None, "{}", kind.name());
+                // Inward steps from the corners stay valid.
+                assert!(finder.neighbor_key(kz, axis, 1).is_some());
+                assert!(finder.neighbor_key(km, axis, -1).is_some());
+            }
+        }
+    }
+}
+
+#[test]
+fn chebyshev_stencil_matches_the_odometer() {
+    for kind in [CurveKind::Hilbert, CurveKind::ZOrder, CurveKind::Gray, CurveKind::Canonic] {
+        for dims in [2usize, 3, 4] {
+            let level = level_for(dims);
+            let mapper = kind.nd_mapper(dims, level);
+            let shape = shape_of(mapper.as_ref());
+            let finder = NeighborFinder::new(mapper.as_ref());
+            let mut rng = Rng::new(0xBEEF ^ dims as u64 ^ ((kind as u64) << 16));
+            let mut coords = vec![0u32; dims];
+            for case in 0..40 {
+                for (a, c) in coords.iter_mut().enumerate() {
+                    *c = if case % 4 == 0 {
+                        if rng.below(2) == 0 { 0 } else { shape[a] - 1 }
+                    } else {
+                        rng.below(shape[a] as u64) as u32
+                    };
+                }
+                let key = mapper.order_nd(&coords);
+                let mut got = Vec::new();
+                finder.chebyshev_keys(key, &mut got);
+                got.sort_unstable();
+                // Reference: the 3^d odometer over in-grid offsets,
+                // center excluded.
+                let mut want = Vec::new();
+                let mut off = vec![-1i64; dims];
+                'odometer: loop {
+                    if off.iter().any(|&o| o != 0) {
+                        let mut n = vec![0u32; dims];
+                        let mut ok = true;
+                        for a in 0..dims {
+                            let v = coords[a] as i64 + off[a];
+                            if v < 0 || v >= shape[a] as i64 {
+                                ok = false;
+                                break;
+                            }
+                            n[a] = v as u32;
+                        }
+                        if ok {
+                            want.push(mapper.order_nd(&n));
+                        }
+                    }
+                    let mut a = 0;
+                    loop {
+                        if a == dims {
+                            break 'odometer;
+                        }
+                        if off[a] < 1 {
+                            off[a] += 1;
+                            break;
+                        }
+                        off[a] = -1;
+                        a += 1;
+                    }
+                }
+                want.sort_unstable();
+                assert_eq!(got, want, "{} d={dims} coords={coords:?}", kind.name());
+                // Interior cells see the full stencil.
+                if coords
+                    .iter()
+                    .zip(&shape)
+                    .all(|(&c, &s)| c > 0 && c + 1 < s)
+                {
+                    assert_eq!(got.len(), 3usize.pow(dims as u32) - 1);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn frontier_knn_matches_brute_force_and_legacy_bit_for_bit() {
+    for kind in [CurveKind::Hilbert, CurveKind::ZOrder, CurveKind::Gray] {
+        for dims in [2usize, 3] {
+            let points = make_clustered(600, dims, 25, 0.9, 101 + dims as u64);
+            let index = SfcIndex::build_with(&points, 6, kind);
+            assert!(index.neighbor_path().is_fast(), "{} d={dims}", kind.name());
+            let mut rng = Rng::new(0xF05 ^ dims as u64);
+            let (mut fast_probes, mut legacy_probes) = (0u64, 0u64);
+            for _ in 0..25 {
+                let q: Vec<f32> =
+                    (0..dims).map(|_| rng.f32() * 120.0 - 10.0).collect();
+                let k = 1 + rng.below(12) as usize;
+                let (fast, fs) = index.query_knn_stats(&q, k);
+                let (legacy, ls) = index.query_knn_legacy_stats(&q, k);
+                assert_eq!(fast, legacy, "{} d={dims} k={k}", kind.name());
+                fast_probes += fs.key_probes;
+                legacy_probes += ls.key_probes;
+                // Brute force with the identical float expression: the
+                // frontier result must match bit for bit, ids and all.
+                let mut brute: Vec<(u32, f32)> = (0..points.rows as u32)
+                    .map(|p| {
+                        let d2: f32 = points
+                            .row(p as usize)
+                            .iter()
+                            .zip(&q)
+                            .map(|(&a, &b)| (a - b) * (a - b))
+                            .sum();
+                        (p, d2.sqrt())
+                    })
+                    .collect();
+                brute.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+                brute.truncate(k);
+                assert_eq!(fast, brute, "{} d={dims} k={k}", kind.name());
+            }
+            // On clustered data the frontier skips the empty orthants
+            // the window decomposition pays for: strictly fewer probes
+            // at identical (bit-for-bit) results.
+            assert!(
+                fast_probes < legacy_probes,
+                "{} d={dims}: frontier {fast_probes} vs legacy {legacy_probes}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn frontier_knn_boundary_and_degenerate_queries() {
+    let points = make_clustered(300, 3, 10, 0.7, 55);
+    let index = SfcIndex::build(&points, 5);
+    // Far outside the data box (edge cells' preimage is unbounded).
+    let far = vec![1e6f32, -1e6, 1e6];
+    let got = index.query_knn(&far, 5);
+    let legacy = index.query_knn_legacy(&far, 5);
+    assert_eq!(got, legacy);
+    assert_eq!(got.len(), 5);
+    // k larger than the index.
+    assert_eq!(index.query_knn(&[0.0; 3], 1000).len(), 300);
+    // All points identical: one occupied cell, every distance equal.
+    let same = Matrix::from_fn(20, 2, |_, _| 1.5);
+    let idx = SfcIndex::build(&same, 6);
+    let got = idx.query_knn(&[1.5, 1.5], 7);
+    assert_eq!(got.len(), 7);
+    assert_eq!(got, idx.query_knn_legacy(&[1.5, 1.5], 7));
+}
+
+#[test]
+fn jump_join_matches_nested_grid_and_decomposition() {
+    let points = make_clustered(800, 3, 35, 0.8, 71);
+    for eps in [0.7f32, 1.4] {
+        let (pn, sn) = join_grid_nested_dims(&points, eps, 3);
+        let (pj, sj) = join_sfc_dims(&points, eps, 3);
+        let (pd, sd) = join_sfc_decompose_dims(&points, eps, 3);
+        assert_eq!(normalize(pn), normalize(pj.clone()), "eps={eps}");
+        assert_eq!(normalize(pj.clone()), normalize(pd), "eps={eps}");
+        // Identical candidate structure across all three drivers...
+        assert_eq!(sn.cell_pairs, sj.cell_pairs);
+        assert_eq!(sn.comparisons, sj.comparisons);
+        assert_eq!(sj.cell_pairs, sd.cell_pairs);
+        assert_eq!(sj.comparisons, sd.comparisons);
+        // ...with the stencil jumps probing strictly less than the
+        // per-cell window decomposition.
+        assert!(
+            sj.key_probes < sd.key_probes,
+            "jump {} vs decompose {} (eps={eps})",
+            sj.key_probes,
+            sd.key_probes
+        );
+        // Store flavor: same pair set, same comparisons, fewer probes.
+        let (qj, tj) = join_store_dims(&points, eps, 3);
+        let (qd, td) = join_store_decompose_dims(&points, eps, 3);
+        assert_eq!(normalize(qj.clone()), normalize(qd), "store eps={eps}");
+        assert_eq!(normalize(qj), normalize(pj), "store vs sfc eps={eps}");
+        assert_eq!(tj.comparisons, td.comparisons);
+        assert!(
+            tj.key_probes < td.key_probes,
+            "store jump {} vs decompose {} (eps={eps})",
+            tj.key_probes,
+            td.key_probes
+        );
+    }
+}
