@@ -1,0 +1,343 @@
+//! Sort/merge-engine bench (ISSUE 8): the comparison argsort vs the
+//! stable LSD radix argsort vs the parallel sample-sort driver on curve
+//! keys, the retired re-sort `Segment::merge` vs the streaming
+//! loser-tree merge, and cold store build + post-churn maintenance
+//! (serial vs parallel compact/rebalance) wall clock. Emits
+//! `reports/bench_sort.json` so the sort keys/sec trajectory is
+//! recorded.
+//!
+//! Every fast path first asserts **bit-for-bit** parity with its
+//! reference on the same input — including tie order on duplicate-heavy
+//! keys — before it is timed; the parallel maintenance paths must leave
+//! the store byte-identical to the serial ones.
+//!
+//! Targets (acceptance): radix argsort ≥ 2× the comparison sort
+//! single-threaded, sample-sort ≥ 4× at 8 threads, on ≥ 1M keys
+//! (thresholds relaxed under `SFC_BENCH_FAST`, where the corpus shrinks
+//! and CI runners have few cores).
+
+use sfc_mine::apps::Matrix;
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::curves::engine::CurveMapperNd;
+use sfc_mine::curves::ndim::HilbertNd;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::quantize::Quantizer;
+use sfc_mine::index::store::segment::Segment;
+use sfc_mine::index::{SfcStore, Snapshot, StoreConfig};
+use sfc_mine::util::bench::{fmt_dur, Bench, Measurement};
+use sfc_mine::util::rng::Rng;
+use sfc_mine::util::sort::{comparison_argsort, radix_argsort, sample_argsort};
+use sfc_mine::util::table::Table;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn write_json(bench: &Bench, path: &str) -> std::io::Result<()> {
+    let mut s = String::from("[\n");
+    for (idx, m) in bench.results().iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{}\", \"median_ns\": {}, \"mad_ns\": {}, \"elements\": {}}}",
+            m.name,
+            m.median.as_nanos(),
+            m.mad.as_nanos(),
+            m.elements.unwrap_or(0)
+        ));
+    }
+    s.push_str("\n]\n");
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s)
+}
+
+fn per_elem(m: &Measurement) -> f64 {
+    m.median.as_nanos() as f64 / m.elements.unwrap_or(1) as f64
+}
+
+/// The retired `Segment::merge`: concatenate handles, globally sort,
+/// resolve winners through a HashMap, emit with growing vectors — kept
+/// here as the legacy baseline the streaming path is measured against.
+fn merge_legacy(parts: &[&Segment], drop_tombs: bool, dims: usize) -> Segment {
+    let total: usize = parts.iter().map(|s| s.rows()).sum();
+    let mut handles: Vec<(u64, u64, u32, usize, usize)> = Vec::with_capacity(total);
+    for (si, s) in parts.iter().enumerate() {
+        for pos in 0..s.rows() {
+            handles.push((s.keys[pos], s.seqs[pos], s.ids[pos], si, pos));
+        }
+    }
+    handles.sort_unstable_by_key(|&(k, seq, id, _, _)| (k, seq, id));
+    let mut winner = HashMap::<u32, usize>::with_capacity(total);
+    for (idx, h) in handles.iter().enumerate() {
+        match winner.entry(h.2) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                if h.1 > handles[*e.get()].1 {
+                    e.insert(idx);
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(idx);
+            }
+        }
+    }
+    let mut out = Segment {
+        keys: Vec::new(),
+        ids: Vec::new(),
+        seqs: Vec::new(),
+        tombs: Vec::new(),
+        points: Matrix::zeros(0, dims),
+        sorted: true,
+    };
+    for (idx, &(k, seq, id, si, pos)) in handles.iter().enumerate() {
+        if winner[&id] != idx {
+            continue;
+        }
+        let tomb = parts[si].tombs[pos];
+        if tomb && drop_tombs {
+            continue;
+        }
+        out.keys.push(k);
+        out.seqs.push(seq);
+        out.ids.push(id);
+        out.tombs.push(tomb);
+        out.points.data.extend_from_slice(parts[si].row(pos));
+        out.points.rows += 1;
+    }
+    out
+}
+
+fn assert_seg_eq(a: &Segment, b: &Segment, ctx: &str) {
+    assert_eq!(a.keys, b.keys, "{ctx}: keys");
+    assert_eq!(a.ids, b.ids, "{ctx}: ids");
+    assert_eq!(a.seqs, b.seqs, "{ctx}: seqs");
+    assert_eq!(a.tombs, b.tombs, "{ctx}: tombs");
+    assert_eq!(a.points.data, b.points.data, "{ctx}: row data");
+}
+
+fn assert_snap_eq(a: &Snapshot, b: &Snapshot, ctx: &str) {
+    assert_eq!(a.bounds(), b.bounds(), "{ctx}: fenceposts");
+    assert_eq!(a.entries(), b.entries(), "{ctx}: entries");
+    let shards = a.bounds().len() - 1;
+    for s in 0..shards {
+        let (sa, sb) = (a.shard_segments(s), b.shard_segments(s));
+        assert_eq!(sa.len(), sb.len(), "{ctx}: shard {s} segment count");
+        for (x, y) in sa.iter().zip(sb) {
+            assert_seg_eq(x, y, &format!("{ctx}: shard {s}"));
+        }
+    }
+}
+
+/// A post-churn store: bulk build, delete every third point, re-insert
+/// a quarter of the rows under fresh ids — deterministic, so two calls
+/// produce byte-identical stores to compare maintenance paths on.
+fn churned_store(points: &Matrix, level: u32, cfg: StoreConfig) -> SfcStore {
+    let store = SfcStore::from_points(points, level, CurveKind::Hilbert, cfg);
+    for p in (0..points.rows).step_by(3) {
+        store.delete(p as u32, points.row(p));
+    }
+    let quarter = points.rows / 4;
+    let extra = Matrix {
+        rows: quarter,
+        cols: points.cols,
+        data: points.data[..quarter * points.cols].to_vec(),
+    };
+    store.insert_batch(&extra);
+    store
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n: usize = if fast { 1 << 16 } else { 1 << 20 };
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(2026);
+
+    // --- argsort: comparison vs radix vs sample-sort -----------------------
+    // Hilbert d=3 level-10 keys of random cube points — the key
+    // distribution every index build and store flush actually sorts.
+    let hil = HilbertNd::new(3, 10);
+    let flat: Vec<u32> = (0..n * 3).map(|_| rng.below(1 << 10) as u32).collect();
+    let mut keys: Vec<u64> = Vec::with_capacity(n);
+    hil.order_batch_nd(&flat, &mut keys);
+
+    // Parity before timing (acceptance): the radix and sample paths must
+    // reproduce the comparison argsort bit-for-bit — on the bench corpus
+    // and on a duplicate-heavy one where tie order is the whole story.
+    let want = comparison_argsort(&keys);
+    assert_eq!(radix_argsort(&keys), want, "radix != comparison on curve keys");
+    let dups: Vec<u64> = (0..n).map(|_| rng.below(16)).collect();
+    let want_dups = comparison_argsort(&dups);
+    assert_eq!(radix_argsort(&dups), want_dups, "radix tie order diverged");
+    for threads in [2usize, 4, 8] {
+        let coord = Coordinator::new(threads);
+        assert_eq!(
+            sample_argsort(&keys, &coord),
+            want,
+            "sample-sort != comparison at {threads} threads"
+        );
+        assert_eq!(
+            sample_argsort(&dups, &coord),
+            want_dups,
+            "sample-sort tie order diverged at {threads} threads"
+        );
+    }
+    println!("sort parity: radix + sample-sort == comparison argsort (bit-for-bit, ties included)");
+
+    let m_cmp = bench.throughput("argsort/comparison/1t", n as u64, || {
+        comparison_argsort(&keys).len()
+    });
+    let m_radix =
+        bench.throughput("argsort/radix/1t", n as u64, || radix_argsort(&keys).len());
+    let mut tab = Table::new(vec!["path", "threads", "ns/key", "Mkeys/s", "vs comparison"]);
+    let row = |tab: &mut Table, name: &str, threads: usize, m: &Measurement, base: &Measurement| {
+        tab.row(vec![
+            name.into(),
+            threads.to_string(),
+            format!("{:.2}", per_elem(m)),
+            format!("{:.2}", 1e3 / per_elem(m)),
+            format!("{:.2}x", per_elem(base) / per_elem(m)),
+        ]);
+    };
+    row(&mut tab, "comparison", 1, &m_cmp, &m_cmp);
+    row(&mut tab, "radix-lsd", 1, &m_radix, &m_cmp);
+    let mut speedup8 = 0.0f64;
+    for threads in [2usize, 4, 8] {
+        let coord = Coordinator::new(threads);
+        let m = bench.throughput(&format!("argsort/sample/{threads}t"), n as u64, || {
+            sample_argsort(&keys, &coord).len()
+        });
+        row(&mut tab, "sample-sort", threads, &m, &m_cmp);
+        if threads == 8 {
+            speedup8 = per_elem(&m_cmp) / per_elem(&m);
+        }
+    }
+    println!("\n== argsort on {n} Hilbert d3 keys ==");
+    print!("{}", tab.render());
+    let radix_speedup = per_elem(&m_cmp) / per_elem(&m_radix);
+    let (radix_min, sample_min) = if fast { (1.2, 1.0) } else { (2.0, 4.0) };
+    assert!(
+        radix_speedup >= radix_min,
+        "radix argsort must be ≥ {radix_min}x the comparison sort, got {radix_speedup:.2}x"
+    );
+    assert!(
+        speedup8 >= sample_min,
+        "sample-sort @8t must be ≥ {sample_min}x the comparison sort, got {speedup8:.2}x"
+    );
+
+    // --- Segment::merge: legacy re-sort vs streaming loser tree ------------
+    let merge_rows: usize = if fast { 1 << 13 } else { 1 << 17 };
+    let runs = 8usize;
+    let per_run = merge_rows / runs;
+    let mapper = CurveKind::Hilbert.nd_mapper(3, 8);
+    let quant = Quantizer::from_bounds(vec![0.0; 3], &[256.0; 3], 1 << 8);
+    let mut parts: Vec<Segment> = Vec::new();
+    let mut seq = 1u64;
+    let mut all_rows = Matrix::zeros(0, 3);
+    for r in 0..runs {
+        let tomb = r == runs - 1; // last run deletes earlier points
+        let (ids, rows) = if tomb {
+            let ids: Vec<u32> = (0..per_run as u32).map(|i| i * 3).collect();
+            let mut rows = Matrix::zeros(0, 3);
+            for &id in &ids {
+                rows.data.extend_from_slice(all_rows.row(id as usize));
+                rows.rows += 1;
+            }
+            (ids, rows)
+        } else {
+            let base = (r * per_run) as u32;
+            let rows = Matrix::from_fn(per_run, 3, |_, _| rng.below(256) as f32);
+            all_rows.data.extend_from_slice(&rows.data);
+            all_rows.rows += rows.rows;
+            ((base..base + per_run as u32).collect(), rows)
+        };
+        let mut s = Segment::from_rows(mapper.as_ref(), &quant, ids, rows, tomb, seq);
+        seq += per_run as u64;
+        if r % 2 == 0 {
+            s = s.into_sorted(); // half sorted runs, half write-buffer minis
+        }
+        parts.push(s);
+    }
+    let refs: Vec<&Segment> = parts.iter().collect();
+    for drop_tombs in [false, true] {
+        assert_seg_eq(
+            &Segment::merge(&refs, drop_tombs, 3),
+            &merge_legacy(&refs, drop_tombs, 3),
+            &format!("streaming merge (drop={drop_tombs})"),
+        );
+    }
+    println!("\nmerge parity: streaming loser-tree merge == legacy re-sort merge (byte-identical)");
+    let m_legacy = bench.throughput("merge/legacy_resort", merge_rows as u64, || {
+        merge_legacy(&refs, true, 3).rows()
+    });
+    let m_stream = bench.throughput("merge/streaming", merge_rows as u64, || {
+        Segment::merge(&refs, true, 3).rows()
+    });
+    println!(
+        "== merge {merge_rows} rows x {runs} runs: legacy {:.1} Mrows/s vs streaming \
+         {:.1} Mrows/s ({:.2}x) ==",
+        1e3 / per_elem(&m_legacy),
+        1e3 / per_elem(&m_stream),
+        per_elem(&m_legacy) / per_elem(&m_stream)
+    );
+
+    // --- store: cold build + post-churn maintenance wall clock -------------
+    let store_n: usize = if fast { 4_000 } else { 50_000 };
+    let level = 8u32;
+    let cfg = StoreConfig { shards: 8, buffer_rows: 256 };
+    let points = Matrix::random(store_n, 3, 11, 0.0, 100.0);
+    bench.throughput("store/cold_build", store_n as u64, || {
+        SfcStore::from_points(&points, level, CurveKind::Hilbert, cfg).snapshot().entries()
+    });
+
+    let serial = churned_store(&points, level, cfg);
+    let entries = serial.snapshot().entries();
+    let t0 = Instant::now();
+    serial.compact();
+    let dt_serial = t0.elapsed();
+    let t0 = Instant::now();
+    serial.rebalance();
+    let dt_serial_reb = t0.elapsed();
+    println!(
+        "\n== post-churn maintenance ({entries} entries, {} shards) ==",
+        serial.shard_count()
+    );
+    println!(
+        "  serial   compact {:>10}  rebalance {:>10}",
+        fmt_dur(dt_serial),
+        fmt_dur(dt_serial_reb)
+    );
+    for threads in [2usize, 8] {
+        let coord = Coordinator::new(threads);
+        let par = churned_store(&points, level, cfg);
+        let t0 = Instant::now();
+        par.par_compact(&coord);
+        let dt = t0.elapsed();
+        assert_snap_eq(&par.snapshot(), &serial_compacted(&points, level, cfg), "par_compact");
+        let t0 = Instant::now();
+        par.par_rebalance(&coord);
+        let dt_reb = t0.elapsed();
+        assert_snap_eq(&par.snapshot(), &serial.snapshot(), &format!("par_rebalance x{threads}"));
+        println!(
+            "  x{threads} par   compact {:>10}  rebalance {:>10}",
+            fmt_dur(dt),
+            fmt_dur(dt_reb)
+        );
+    }
+    println!("maintenance parity: parallel compact/rebalance == serial (any thread count)");
+
+    bench.write_csv("reports/bench_sort.csv").unwrap();
+    write_json(&bench, "reports/bench_sort.json").unwrap();
+    println!("\nreports: reports/bench_sort.{{csv,json}}");
+}
+
+/// The serially-compacted (not yet rebalanced) reference snapshot,
+/// rebuilt fresh so each parallel run compares against the same state.
+fn serial_compacted(
+    points: &Matrix,
+    level: u32,
+    cfg: StoreConfig,
+) -> std::sync::Arc<Snapshot> {
+    let store = churned_store(points, level, cfg);
+    store.compact();
+    store.snapshot()
+}

@@ -407,6 +407,17 @@ impl Coordinator {
         out.into_iter().map(|r| r.expect("queue covers every item")).collect()
     }
 
+    /// Stable argsort of a `u64` key column across this coordinator's
+    /// workers — the sample-sort driver of [`crate::util::sort`]
+    /// (deterministic splitters, [`Coordinator::par_map`]-partitioned
+    /// bucket scatter, per-bucket stable radix sort). The permutation is
+    /// **bit-for-bit identical** to the serial stable sort, ties
+    /// included, for any thread count; small inputs fall back to the
+    /// serial radix path.
+    pub fn par_argsort(&self, keys: &[u64]) -> Vec<u32> {
+        crate::util::sort::sample_argsort(keys, self)
+    }
+
     /// Answer a batch of window queries against an [`SfcIndex`] in
     /// parallel ([`Coordinator::par_map`] over the windows). Results
     /// come back in input order, each entry the ids
@@ -804,6 +815,18 @@ mod tests {
         }
         let empty: [u64; 0] = [];
         assert!(Coordinator::new(4).par_map(&empty, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn par_argsort_matches_serial_stable_sort() {
+        let mut rng = crate::util::rng::Rng::new(4242);
+        let n = (1usize << 16) + 321; // above the parallel cutover
+        let keys: Vec<u64> = (0..n).map(|_| rng.below(64)).collect(); // duplicate-heavy
+        let want = crate::util::sort::comparison_argsort(&keys);
+        for threads in [1usize, 3, 8] {
+            let coord = Coordinator::new(threads);
+            assert_eq!(coord.par_argsort(&keys), want, "threads={threads}");
+        }
     }
 
     #[test]

@@ -1107,18 +1107,20 @@ fn clamp_cube_window(w: &WindowNd, dims: usize, side: u32) -> Option<WindowNd> {
 
 /// Stable argsort of a key column: `order[pos]` is the input index of
 /// the `pos`-th smallest key (ties keep the input order). The shared
-/// back half of every curve-rank permutation.
+/// back half of every curve-rank permutation — routed through the sort
+/// engine ([`crate::util::sort`]), which picks a stable LSD radix sort
+/// or the parallel sample sort by input size and returns bit-for-bit
+/// the comparison sort's permutation either way.
 pub(crate) fn argsort_stable(keys: &[u64]) -> Vec<u32> {
-    let mut order: Vec<u32> = (0..keys.len() as u32).collect();
-    order.sort_by_key(|&idx| keys[idx as usize]);
-    order
+    crate::util::sort::stable_argsort(keys)
 }
 
 /// Argsort of flattened `mapper.dims()`-coordinate points along their
 /// order under any d-dimensional curve: `order[pos]` is the input index
 /// of the `pos`-th point in curve order. Conversion goes through the Nd
 /// batched path (one automaton amortised over the whole set); the sort
-/// is stable, so ties keep the input order.
+/// is the stable radix/sample-sort engine ([`crate::util::sort`]), so
+/// ties keep the input order at any size and thread count.
 pub fn sfc_argsort(flat: &[u32], mapper: &dyn CurveMapperNd) -> Vec<u32> {
     if flat.is_empty() {
         return Vec::new();

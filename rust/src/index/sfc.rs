@@ -155,6 +155,14 @@ impl SfcIndex {
         self.mapper.key_path_nd()
     }
 
+    /// Which sort-engine path ([`crate::util::sort`]) a build of this
+    /// index's size selects on this machine — introspection mirroring
+    /// [`SfcIndex::key_path`], so tests can assert large builds never
+    /// silently fall back to the comparison sort.
+    pub fn sort_path(&self) -> crate::util::sort::SortPath {
+        crate::util::sort::sort_path(self.len(), crate::util::sort::default_threads())
+    }
+
     /// All points exactly equal to `q` (`q.len() == dims`): one key
     /// lookup on the quantized cell plus an equality filter over the
     /// (contiguous) key run.

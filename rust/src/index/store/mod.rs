@@ -31,7 +31,7 @@
 //! pass the shared float filter ([`quantize::window_contains`]) before
 //! they are returned.
 
-pub(crate) mod segment;
+pub mod segment;
 pub mod planner;
 pub(crate) mod shard;
 
@@ -108,6 +108,13 @@ impl Snapshot {
     /// Segments per shard.
     pub fn shard_segment_counts(&self) -> Vec<usize> {
         self.shards.iter().map(|segs| segs.len()).collect()
+    }
+
+    /// One shard's published segment stack (runs then write-buffer
+    /// mini-runs) — the byte-level parity tests compare these across
+    /// the serial and parallel maintenance paths.
+    pub fn shard_segments(&self, shard: usize) -> &[Arc<Segment>] {
+        &self.shards[shard]
     }
 
     fn recount(&mut self) {
@@ -287,6 +294,17 @@ impl SfcStore {
         NeighborFinder::new(self.mapper.as_ref()).path()
     }
 
+    /// Which sort-engine path ([`crate::util::sort`]) a curve-order sort
+    /// of the store's current entry count selects on this machine — the
+    /// sort a rebuild or full compaction of today's data would run.
+    /// Introspection mirroring [`SfcStore::key_path`] and
+    /// [`SfcStore::neighbor_path`], so tests can assert the store never
+    /// silently falls back to the comparison sort at scale.
+    pub fn sort_path(&self) -> crate::util::sort::SortPath {
+        let n = self.snapshot().entries() as usize;
+        crate::util::sort::sort_path(n, crate::util::sort::default_threads())
+    }
+
     // ------------------------------------------------------------------
     // Mutation
     // ------------------------------------------------------------------
@@ -424,31 +442,26 @@ impl SfcStore {
         let all: Vec<Arc<Segment>> = guards.iter().flat_map(|g| g.segments()).collect();
         let refs: Vec<&Segment> = all.iter().map(|s| s.as_ref()).collect();
         let merged = Segment::merge(&refs, true, self.dims);
-        let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
         // Cut the merged run at the new fenceposts.
-        let mut per_shard: Vec<Vec<Arc<Segment>>> = Vec::with_capacity(self.shards.len());
-        let mut start = 0usize;
-        for s in 0..self.shards.len() {
-            let end = merged.keys.partition_point(|&k| k < bounds[s + 1]);
-            if end > start {
-                let slice = Segment {
-                    keys: merged.keys[start..end].to_vec(),
-                    ids: merged.ids[start..end].to_vec(),
-                    seqs: merged.seqs[start..end].to_vec(),
-                    tombs: merged.tombs[start..end].to_vec(),
-                    points: Matrix {
-                        rows: end - start,
-                        cols: self.dims,
-                        data: merged.points.data[start * self.dims..end * self.dims].to_vec(),
-                    },
-                    sorted: true,
-                };
-                per_shard.push(vec![Arc::new(slice)]);
-            } else {
-                per_shard.push(Vec::new());
-            }
-            start = end;
-        }
+        let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
+        let cuts = cut_positions(&merged.keys, &bounds);
+        let per_shard: Vec<Vec<Arc<Segment>>> = (0..self.shards.len())
+            .map(|s| cut_slice(&merged, cuts[s], cuts[s + 1], self.dims))
+            .collect();
+        self.install_rebalanced(&mut routing, &mut guards, bounds, per_shard);
+    }
+
+    /// Swap the rebalanced per-shard runs, fenceposts, and published
+    /// epoch in — the shared tail of [`SfcStore::rebalance`] and
+    /// [`SfcStore::par_rebalance`], so both paths install byte-identical
+    /// state.
+    fn install_rebalanced(
+        &self,
+        routing: &mut Vec<u64>,
+        guards: &mut [std::sync::MutexGuard<'_, ShardState>],
+        bounds: Vec<u64>,
+        per_shard: Vec<Vec<Arc<Segment>>>,
+    ) {
         for (g, segs) in guards.iter_mut().zip(&per_shard) {
             g.minis.clear();
             g.mini_rows = 0;
@@ -461,6 +474,74 @@ impl SfcStore {
         snap.shards = per_shard.into_iter().map(Arc::new).collect();
         snap.recount();
         *g = Arc::new(snap);
+    }
+
+    // ------------------------------------------------------------------
+    // Parallel maintenance
+    // ------------------------------------------------------------------
+
+    /// [`SfcStore::flush`] with the per-shard work fanned across the
+    /// coordinator's workers. Shards are independent under the lock
+    /// discipline — each worker holds exactly one shard's writer lock,
+    /// and the published-epoch mutex is only taken while holding it
+    /// (the same shard → published order every writer uses) — so any
+    /// thread count converges to exactly the serial path's state.
+    pub fn par_flush(&self, coord: &crate::coordinator::Coordinator) {
+        let _routing = self.routing.read().expect("store lock poisoned");
+        let shards: Vec<usize> = (0..self.shards.len()).collect();
+        coord.par_map(&shards, |_, &s| {
+            let mut state = self.shards[s].lock().expect("store lock poisoned");
+            state.flush(self.dims);
+            self.publish_shard(s, state.segments(), None);
+        });
+    }
+
+    /// [`SfcStore::compact`] with the per-shard full merges fanned
+    /// across the coordinator's workers (same lock discipline as
+    /// [`SfcStore::par_flush`]; converges to the serial result for any
+    /// thread count). In-flight queries keep their pre-compaction
+    /// snapshots alive and are unaffected.
+    pub fn par_compact(&self, coord: &crate::coordinator::Coordinator) {
+        let _routing = self.routing.read().expect("store lock poisoned");
+        let shards: Vec<usize> = (0..self.shards.len()).collect();
+        coord.par_map(&shards, |_, &s| {
+            let mut state = self.shards[s].lock().expect("store lock poisoned");
+            state.compact(self.dims);
+            self.publish_shard(s, state.segments(), None);
+        });
+    }
+
+    /// [`SfcStore::rebalance`] with the merge fanned across the
+    /// coordinator's workers: stage 1 full-merges each shard's stack in
+    /// parallel with tombstones **kept** (an entry an old shard holds
+    /// may be cancelled by a tombstone routed to a different shard
+    /// after an earlier rebalance moved the fenceposts), stage 2
+    /// cross-shard-resolves the per-shard runs and drops tombstones,
+    /// and the fencepost cuts copy out in parallel. Staged merging is
+    /// exact: the global max-seq winner per id survives stage 1 in its
+    /// shard, and both stages emit the same total `(key, seq, id)`
+    /// order, so the result is **byte-identical** to the serial
+    /// all-at-once merge for any thread count.
+    pub fn par_rebalance(&self, coord: &crate::coordinator::Coordinator) {
+        let mut routing = self.routing.write().expect("store lock poisoned");
+        let mut guards: Vec<_> = self
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("store lock poisoned"))
+            .collect();
+        let stacks: Vec<Vec<Arc<Segment>>> = guards.iter().map(|g| g.segments()).collect();
+        let shard_runs: Vec<Segment> = coord.par_map(&stacks, |_, stack| {
+            let refs: Vec<&Segment> = stack.iter().map(|s| s.as_ref()).collect();
+            Segment::merge(&refs, false, self.dims)
+        });
+        let refs: Vec<&Segment> = shard_runs.iter().collect();
+        let merged = Segment::merge(&refs, true, self.dims);
+        let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
+        let cuts = cut_positions(&merged.keys, &bounds);
+        let shard_ids: Vec<usize> = (0..self.shards.len()).collect();
+        let per_shard: Vec<Vec<Arc<Segment>>> =
+            coord.par_map(&shard_ids, |_, &s| cut_slice(&merged, cuts[s], cuts[s + 1], self.dims));
+        self.install_rebalanced(&mut routing, &mut guards, bounds, per_shard);
     }
 
     // ------------------------------------------------------------------
@@ -788,6 +869,38 @@ impl SfcStore {
         }
         (ids, rows)
     }
+}
+
+/// Absolute positions where the fenceposts cut a sorted key column:
+/// `bounds.len()` entries, `cuts[s]..cuts[s + 1]` = shard `s`'s slice.
+fn cut_positions(sorted_keys: &[u64], bounds: &[u64]) -> Vec<usize> {
+    let mut cuts = Vec::with_capacity(bounds.len());
+    cuts.push(0);
+    for &b in &bounds[1..] {
+        cuts.push(sorted_keys.partition_point(|&k| k < b));
+    }
+    cuts
+}
+
+/// One shard's post-rebalance segment list: the merged run's
+/// `[start, end)` slice as a single sorted run (empty slice → empty
+/// stack).
+fn cut_slice(merged: &Segment, start: usize, end: usize, dims: usize) -> Vec<Arc<Segment>> {
+    if end <= start {
+        return Vec::new();
+    }
+    vec![Arc::new(Segment {
+        keys: merged.keys[start..end].to_vec(),
+        ids: merged.ids[start..end].to_vec(),
+        seqs: merged.seqs[start..end].to_vec(),
+        tombs: merged.tombs[start..end].to_vec(),
+        points: Matrix {
+            rows: end - start,
+            cols: dims,
+            data: merged.points.data[start * dims..end * dims].to_vec(),
+        },
+        sorted: true,
+    })]
 }
 
 /// Equi-depth fenceposts over a **sorted** key sample: `shards + 1`

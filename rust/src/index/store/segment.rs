@@ -7,21 +7,26 @@
 //! point rows themselves. Sorted segments answer range probes with a
 //! binary search + walk; unsorted segments (the store's write-buffer
 //! mini-runs) scan linearly, binary-searching the *range list* per
-//! entry instead. [`Segment::merge`] is the LSM compaction step: it
-//! keeps, per `(key, id)`, only the newest entry, optionally dropping
-//! tombstones when the merge reaches the bottom of a shard's stack.
+//! entry instead. [`Segment::merge`] is the LSM compaction step: a
+//! streaming k-way loser-tree merge over the parts' `(key, seq, id)`
+//! orders (unsorted mini-runs are radix-argsorted first) that keeps,
+//! per id, only the newest entry, optionally dropping tombstones when
+//! the merge reaches the bottom of a shard's stack. The module is
+//! public so benches and parity tests can drive merges directly; the
+//! store's own locking never hands out a mutable segment.
 
 use crate::apps::kmeans::permute_rows;
 use crate::apps::Matrix;
 use crate::curves::engine::{with_cells_scratch, CurveMapperNd};
 use crate::curves::ndim::argsort_stable;
 use crate::index::quantize::Quantizer;
+use std::collections::HashMap;
 use std::ops::Range;
 
 /// One run of entries: parallel key/id/seq/tombstone columns plus the
 /// point rows, sorted by key or raw append order.
 #[derive(Clone, Debug)]
-pub(crate) struct Segment {
+pub struct Segment {
     /// Curve keys, one per entry (sorted iff `sorted`).
     pub keys: Vec<u64>,
     /// Caller-visible point ids.
@@ -98,64 +103,120 @@ impl Segment {
         }
     }
 
+    /// The `(key, seq, id)` triple of an entry — the total order every
+    /// merge streams in (seqs are globally unique across live entries,
+    /// so the order is total).
+    #[inline]
+    fn triple(&self, pos: usize) -> (u64, u64, u32) {
+        (self.keys[pos], self.seqs[pos], self.ids[pos])
+    }
+
+    /// Cursor order a merge walks this segment in: `None` when the
+    /// entries are already `(key, seq, id)`-sorted in place (the common
+    /// case — sorted runs are built by stable key sorts over
+    /// ascending-seq appends, and merge output is emitted in exactly
+    /// this order), otherwise an index permutation. Unsorted write-buffer
+    /// mini-runs go through the stable radix argsort on their key column
+    /// (ties keep append = ascending-seq order), plus a repair pass that
+    /// only fires on hand-built segments with shuffled seqs.
+    fn merge_order(&self) -> Option<Vec<u32>> {
+        let n = self.rows();
+        if self.sorted {
+            if (1..n).all(|p| self.triple(p - 1) <= self.triple(p)) {
+                return None;
+            }
+            // Adversarial (hand-built) sorted run: fall back to a full
+            // triple sort.
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            order.sort_unstable_by_key(|&p| self.triple(p as usize));
+            return Some(order);
+        }
+        let mut order = crate::util::sort::stable_argsort(&self.keys);
+        // Repair equal-key runs whose (seq, id) came out of order —
+        // impossible for store-built mini-runs (seqs ascend in append
+        // order and the key sort is stable), cheap to verify.
+        let mut i = 0;
+        while i < n {
+            let k = self.keys[order[i] as usize];
+            let mut j = i + 1;
+            while j < n && self.keys[order[j] as usize] == k {
+                j += 1;
+            }
+            let run = &mut order[i..j];
+            let pair = |p: u32| (self.seqs[p as usize], self.ids[p as usize]);
+            if run.windows(2).any(|w| pair(w[0]) > pair(w[1])) {
+                run.sort_unstable_by_key(|&p| pair(p));
+            }
+            i = j;
+        }
+        Some(order)
+    }
+
     /// Merge several runs into one **sorted** segment, keeping per id
     /// only the newest (max-seq) entry among the merged parts — the
     /// same visibility rule queries apply at read time, so compaction
     /// never changes what a query returns. With `drop_tombs` (legal
     /// only when nothing older than the merged set remains — a full
     /// shard compaction) surviving tombstones are discarded too.
+    ///
+    /// Runs **streaming**: already-sorted runs are walked in place, a
+    /// k-way [`LoserTree`] emits entries in global `(key, seq, id)`
+    /// order, and per-id winner resolution is one linear scan into a
+    /// winner table plus one probe per emitted entry — no concatenated
+    /// handle vector, no re-sort of already-sorted inputs, no hashing
+    /// on the emit path for dense id spaces. Output capacity (columns
+    /// *and* `points.data`) is reserved up front.
     pub fn merge(parts: &[&Segment], drop_tombs: bool, dims: usize) -> Segment {
         let total: usize = parts.iter().map(|s| s.rows()).sum();
-        // Concatenate (segment, pos) handles and sort by (key, seq, id) —
-        // seq ties cannot happen across live entries (seqs are globally
-        // unique), so the order is total.
-        let mut handles: Vec<(u64, u64, u32, usize, usize)> = Vec::with_capacity(total);
-        for (si, s) in parts.iter().enumerate() {
-            for pos in 0..s.rows() {
-                handles.push((s.keys[pos], s.seqs[pos], s.ids[pos], si, pos));
+        let orders: Vec<Option<Vec<u32>>> = parts.iter().map(|s| s.merge_order()).collect();
+        // Pass 1 (streaming, any order): the global max-seq winner per
+        // id (ids never span keys under the store's discipline — fresh
+        // id per insert, deletes carry the inserted row — but resolving
+        // globally keeps the merge faithful to the read-time rule
+        // regardless).
+        let mut winners = WinnerTable::build(parts, total);
+        // Pass 2: loser-tree merge in (key, seq, id) order, emitting
+        // each id's winning entry at its sorted position.
+        let mut cursors = vec![0usize; parts.len()];
+        let head = |si: usize, pos_idx: usize| -> Option<(u64, u64, u32)> {
+            if pos_idx >= parts[si].rows() {
+                return None;
             }
-        }
-        handles.sort_unstable_by_key(|&(k, seq, id, _, _)| (k, seq, id));
-        // Pass 1: the global max-seq winner per id (ids never span keys
-        // under the store's discipline — fresh id per insert, deletes
-        // carry the inserted row — but resolving globally keeps the
-        // merge faithful to the read-time rule regardless).
-        let mut winner = std::collections::HashMap::<u32, usize>::with_capacity(total);
-        for (idx, h) in handles.iter().enumerate() {
-            match winner.entry(h.2) {
-                std::collections::hash_map::Entry::Occupied(mut e) => {
-                    if h.1 > handles[*e.get()].1 {
-                        e.insert(idx);
-                    }
-                }
-                std::collections::hash_map::Entry::Vacant(e) => {
-                    e.insert(idx);
-                }
-            }
-        }
-        // Pass 2: emit winners in key order.
+            let pos = match &orders[si] {
+                Some(o) => o[pos_idx] as usize,
+                None => pos_idx,
+            };
+            Some(parts[si].triple(pos))
+        };
+        let leaves: Vec<Option<(u64, u64, u32)>> =
+            (0..parts.len()).map(|si| head(si, 0)).collect();
+        let mut tree = crate::util::sort::LoserTree::new(leaves);
         let mut out = Segment {
             keys: Vec::with_capacity(total),
             ids: Vec::with_capacity(total),
             seqs: Vec::with_capacity(total),
             tombs: Vec::with_capacity(total),
-            points: Matrix::zeros(0, dims),
+            points: Matrix { rows: 0, cols: dims, data: Vec::with_capacity(total * dims) },
             sorted: true,
         };
-        for (idx, &(k, seq, id, si, pos)) in handles.iter().enumerate() {
-            if winner[&id] != idx {
-                continue;
+        while let Some((si, (k, seq, id))) = tree.winner() {
+            let pos = match &orders[si] {
+                Some(o) => o[cursors[si]] as usize,
+                None => cursors[si],
+            };
+            if winners.claim(id, seq) {
+                let tomb = parts[si].tombs[pos];
+                if !(tomb && drop_tombs) {
+                    out.keys.push(k);
+                    out.seqs.push(seq);
+                    out.ids.push(id);
+                    out.tombs.push(tomb);
+                    out.points.data.extend_from_slice(parts[si].row(pos));
+                    out.points.rows += 1;
+                }
             }
-            let tomb = parts[si].tombs[pos];
-            if tomb && drop_tombs {
-                continue;
-            }
-            out.keys.push(k);
-            out.seqs.push(seq);
-            out.ids.push(id);
-            out.tombs.push(tomb);
-            out.points.data.extend_from_slice(parts[si].row(pos));
-            out.points.rows += 1;
+            cursors[si] += 1;
+            tree.replace(si, head(si, cursors[si]));
         }
         out
     }
@@ -194,6 +255,71 @@ impl Segment {
     /// points (older superseded entries still count until compaction).
     pub fn live_upper_bound(&self) -> usize {
         self.tombs.iter().filter(|&&t| !t).count()
+    }
+}
+
+/// Per-id winning sequence numbers for a merge, stored as `seq + 1`
+/// (`0` = absent or already claimed, so the emit pass is one probe and
+/// one store — no double lookup). Ids from the store are dense
+/// (`0..next_id`), so the common case is a flat vector over the id
+/// span; wildly sparse id sets (only reachable by hand-built segments)
+/// fall back to a hash map with identical semantics.
+enum WinnerTable {
+    /// `best[id - base]` = winning seq + 1.
+    Dense { base: u32, best: Vec<u64> },
+    /// Same contract, keyed by id.
+    Sparse(HashMap<u32, u64>),
+}
+
+impl WinnerTable {
+    /// One streaming pass over every part: record the max seq per id.
+    fn build(parts: &[&Segment], total: usize) -> WinnerTable {
+        let (mut lo, mut hi) = (u32::MAX, 0u32);
+        for s in parts {
+            for &id in &s.ids {
+                lo = lo.min(id);
+                hi = hi.max(id);
+            }
+        }
+        if total == 0 {
+            return WinnerTable::Dense { base: 0, best: Vec::new() };
+        }
+        let span = (hi - lo) as usize + 1;
+        if span <= total * 8 + 1024 {
+            let mut best = vec![0u64; span];
+            for s in parts {
+                for (&id, &seq) in s.ids.iter().zip(&s.seqs) {
+                    let slot = &mut best[(id - lo) as usize];
+                    *slot = (*slot).max(seq + 1);
+                }
+            }
+            WinnerTable::Dense { base: lo, best }
+        } else {
+            let mut map = HashMap::with_capacity(total);
+            for s in parts {
+                for (&id, &seq) in s.ids.iter().zip(&s.seqs) {
+                    let slot = map.entry(id).or_insert(0u64);
+                    *slot = (*slot).max(seq + 1);
+                }
+            }
+            WinnerTable::Sparse(map)
+        }
+    }
+
+    /// True iff `(id, seq)` is the winning entry and not yet emitted;
+    /// claims it (the first max-seq entry in stream order wins, exactly
+    /// like the handle-sort path did).
+    fn claim(&mut self, id: u32, seq: u64) -> bool {
+        let slot = match self {
+            WinnerTable::Dense { base, best } => &mut best[(id - *base) as usize],
+            WinnerTable::Sparse(map) => map.get_mut(&id).expect("pass 1 saw every id"),
+        };
+        if *slot == seq + 1 {
+            *slot = 0;
+            true
+        } else {
+            false
+        }
     }
 }
 
@@ -271,5 +397,168 @@ mod tests {
         assert_eq!(m.rows(), 4);
         assert!(m.keys.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(m.live_upper_bound(), 4);
+    }
+
+    /// The retired re-sort merge (concatenated handles, global sort,
+    /// HashMap winners) — kept as the byte-level oracle the streaming
+    /// loser-tree path must reproduce.
+    fn merge_reference(parts: &[&Segment], drop_tombs: bool, dims: usize) -> Segment {
+        let total: usize = parts.iter().map(|s| s.rows()).sum();
+        let mut handles: Vec<(u64, u64, u32, usize, usize)> = Vec::with_capacity(total);
+        for (si, s) in parts.iter().enumerate() {
+            for pos in 0..s.rows() {
+                handles.push((s.keys[pos], s.seqs[pos], s.ids[pos], si, pos));
+            }
+        }
+        handles.sort_unstable_by_key(|&(k, seq, id, _, _)| (k, seq, id));
+        let mut winner = HashMap::<u32, usize>::with_capacity(total);
+        for (idx, h) in handles.iter().enumerate() {
+            match winner.entry(h.2) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    if h.1 > handles[*e.get()].1 {
+                        e.insert(idx);
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(idx);
+                }
+            }
+        }
+        let mut out = Segment {
+            keys: Vec::new(),
+            ids: Vec::new(),
+            seqs: Vec::new(),
+            tombs: Vec::new(),
+            points: Matrix::zeros(0, dims),
+            sorted: true,
+        };
+        for (idx, &(k, seq, id, si, pos)) in handles.iter().enumerate() {
+            if winner[&id] != idx {
+                continue;
+            }
+            let tomb = parts[si].tombs[pos];
+            if tomb && drop_tombs {
+                continue;
+            }
+            out.keys.push(k);
+            out.seqs.push(seq);
+            out.ids.push(id);
+            out.tombs.push(tomb);
+            out.points.data.extend_from_slice(parts[si].row(pos));
+            out.points.rows += 1;
+        }
+        out
+    }
+
+    fn assert_seg_eq(a: &Segment, b: &Segment, ctx: &str) {
+        assert_eq!(a.keys, b.keys, "{ctx}: keys");
+        assert_eq!(a.ids, b.ids, "{ctx}: ids");
+        assert_eq!(a.seqs, b.seqs, "{ctx}: seqs");
+        assert_eq!(a.tombs, b.tombs, "{ctx}: tombs");
+        assert_eq!(a.points.rows, b.points.rows, "{ctx}: rows");
+        assert_eq!(a.points.data, b.points.data, "{ctx}: row data");
+        assert_eq!(a.sorted, b.sorted, "{ctx}: sorted flag");
+    }
+
+    /// ISSUE 8 acceptance: the streaming merge is byte-identical to the
+    /// old re-sort path on scripted insert/delete interleavings for
+    /// every curve × d ∈ {2, 3} — mini-runs and sorted runs, shuffled
+    /// hand-built seqs included, with and without tombstone dropping.
+    #[test]
+    fn streaming_merge_matches_reference_on_scripted_interleavings() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(88);
+        for kind in CurveKind::ALL {
+            for dims in [2usize, 3] {
+                let level = 4u32;
+                let mapper = kind.nd_mapper(dims, level);
+                let quant =
+                    Quantizer::from_bounds(vec![0.0; dims], &vec![16.0; dims], 16);
+                let mut seq = 1u64;
+                let mut inserted: Vec<(u32, Vec<f32>)> = Vec::new();
+                let mut next_id = 0u32;
+                let mut parts: Vec<Segment> = Vec::new();
+                for _ in 0..6 {
+                    // Script a mini-run: inserts, plus deletes of
+                    // previously inserted rows (tombstones carry the
+                    // inserted row, store-style).
+                    let del = !inserted.is_empty() && rng.bool(0.4);
+                    let n = 1 + rng.below_usize(8);
+                    let mut ids = Vec::new();
+                    let mut rows = Matrix::zeros(0, dims);
+                    for _ in 0..n {
+                        if del {
+                            let v = rng.below_usize(inserted.len());
+                            let (id, row) = inserted[v].clone();
+                            ids.push(id);
+                            rows.data.extend_from_slice(&row);
+                        } else {
+                            let row: Vec<f32> =
+                                (0..dims).map(|_| rng.below(16) as f32).collect();
+                            inserted.push((next_id, row.clone()));
+                            ids.push(next_id);
+                            next_id += 1;
+                            rows.data.extend_from_slice(&row);
+                        }
+                        rows.rows += 1;
+                    }
+                    let mut s =
+                        Segment::from_rows(mapper.as_ref(), &quant, ids, rows, del, seq);
+                    seq += n as u64;
+                    if rng.bool(0.3) {
+                        // Adversarial hand-built run: shuffled seqs.
+                        rng.shuffle(&mut s.seqs);
+                    }
+                    if rng.bool(0.5) {
+                        s = s.into_sorted();
+                    }
+                    parts.push(s);
+                }
+                let refs: Vec<&Segment> = parts.iter().collect();
+                for drop_tombs in [false, true] {
+                    let want = merge_reference(&refs, drop_tombs, dims);
+                    let got = Segment::merge(&refs, drop_tombs, dims);
+                    assert_seg_eq(
+                        &got,
+                        &want,
+                        &format!("{} d={dims} drop={drop_tombs}", kind.name()),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Merge-of-merges (the parallel rebalance shape: per-shard merges
+    /// keeping tombstones, then one cross-shard resolve) is
+    /// byte-identical to merging everything at once.
+    #[test]
+    fn staged_merge_composes_exactly() {
+        let mut groups: Vec<Vec<Segment>> = Vec::new();
+        let mut seq = 1u64;
+        for g in 0..3u32 {
+            let mut stack = Vec::new();
+            for r in 0..2u32 {
+                let base = (g * 20 + r * 7) as f32 % 14.0;
+                let s = seg(&[
+                    (base, base, g * 10 + r, seq, false),
+                    (base + 1.0, base, g * 10 + r + 4, seq + 1, r == 1),
+                ]);
+                seq += 2;
+                stack.push(s);
+            }
+            groups.push(stack);
+        }
+        let all: Vec<&Segment> = groups.iter().flatten().collect();
+        let serial = Segment::merge(&all, true, 2);
+        let stage1: Vec<Segment> = groups
+            .iter()
+            .map(|stack| {
+                let refs: Vec<&Segment> = stack.iter().collect();
+                Segment::merge(&refs, false, 2)
+            })
+            .collect();
+        let refs: Vec<&Segment> = stage1.iter().collect();
+        let staged = Segment::merge(&refs, true, 2);
+        assert_seg_eq(&staged, &serial, "staged rebalance merge");
     }
 }

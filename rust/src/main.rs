@@ -804,9 +804,12 @@ fn query_cmd(args: &Args) {
 
 /// The `store` subcommand: drive the sharded, mutable [`SfcStore`]
 /// through (1) a bulk ingest, (2) a mixed insert/delete/query workload
-/// on snapshot reads, (3) a full compaction, then (4) verify **recall
-/// 1.0** against a freshly rebuilt `SfcIndex` over the live set and
-/// report batched snapshot-query scaling across worker counts.
+/// on snapshot reads, (3) a full compaction plus an equi-depth
+/// rebalance — fanned across `--maintenance-threads` workers when set
+/// (`par_compact`/`par_rebalance`, byte-identical to serial) — then
+/// (4) verify **recall 1.0** against a freshly rebuilt `SfcIndex` over
+/// the live set and report batched snapshot-query scaling across
+/// worker counts.
 fn store_cmd(args: &Args) {
     use sfc_mine::index::{SfcStore, StoreConfig};
 
@@ -935,18 +938,43 @@ fn store_cmd(args: &Args) {
         ]);
     }
 
-    // ---- phase 3: compaction -------------------------------------------
+    // ---- phase 3: maintenance (compact + rebalance) --------------------
+    let mtn: usize = args.get("maintenance-threads", 0);
     let before = store.snapshot().entries();
+    let fan_in: usize = store.snapshot().shard_segment_counts().iter().sum();
     let t0 = Instant::now();
-    store.compact();
+    if mtn > 0 {
+        store.par_compact(&Coordinator::new(mtn));
+    } else {
+        store.compact();
+    }
     let compact_dt = t0.elapsed();
     let after = store.snapshot().entries();
     t.row(vec![
-        "compact".into(),
+        if mtn > 0 { format!("compact x{mtn}") } else { "compact".into() },
         "-".into(),
         fmt_ms(compact_dt),
+        format!("{:.0} rows/s", before as f64 / compact_dt.as_secs_f64()),
+        format!(
+            "{before} -> {after} entries, fan-in {fan_in} segs, {} shards{}",
+            store.shard_count(),
+            if mtn > 0 { " in parallel" } else { "" },
+        ),
+    ]);
+    let t0 = Instant::now();
+    if mtn > 0 {
+        store.par_rebalance(&Coordinator::new(mtn));
+    } else {
+        store.rebalance();
+    }
+    let reb_dt = t0.elapsed();
+    let reb_entries = store.snapshot().entries();
+    t.row(vec![
+        if mtn > 0 { format!("rebalance x{mtn}") } else { "rebalance".into() },
         "-".into(),
-        format!("{before} -> {after} entries"),
+        fmt_ms(reb_dt),
+        format!("{:.0} rows/s", reb_entries as f64 / reb_dt.as_secs_f64()),
+        format!("{} shards re-cut equi-depth", store.shard_count()),
     ]);
 
     // ---- phase 4: recall vs a fresh SfcIndex on the live set -----------

@@ -8,4 +8,5 @@ pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod rng;
+pub mod sort;
 pub mod table;

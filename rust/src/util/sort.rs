@@ -1,0 +1,405 @@
+//! The sort engine: stable LSD radix argsort on u64 curve keys, a
+//! parallel sample-sort driver over the [`Coordinator`] workers, and
+//! the k-way [`LoserTree`] the store's streaming segment merge runs on.
+//!
+//! Every data structure in this reproduction is built by putting rows
+//! in curve order — [`SfcIndex`](crate::index::SfcIndex) builds, store
+//! ingest and compaction, grid cell ranking, k-means sharding — so this
+//! module is the shared back half of all of them:
+//! [`crate::curves::ndim::sfc_argsort`] and friends route through
+//! [`stable_argsort`], which picks a substrate by input size and
+//! available parallelism (see [`sort_path`]).
+//!
+//! ## Stability invariant
+//!
+//! Every path returns **bit-for-bit the same permutation** as the
+//! stable comparison argsort ([`comparison_argsort`]): equal keys keep
+//! their input order. For the radix sort this holds by construction
+//! (each counting pass scatters in input order); for the sample sort it
+//! holds because the splitter rule assigns *all* occurrences of a key
+//! to one bucket (`partition_point(splitters, s <= key)`), the
+//! chunk-partitioned scatter preserves input order inside each bucket
+//! (chunks are claimed through the dynamic
+//! [`ChunkQueue`](crate::coordinator) but reassembled in chunk order),
+//! and the per-bucket sort is the stable radix sort — so ties can never
+//! straddle a bucket boundary and no cross-boundary repair is needed at
+//! emit time. The property tests in `tests/sort.rs` assert this across
+//! duplicate-heavy corpora for every path and thread count.
+
+use crate::coordinator::Coordinator;
+
+/// Inputs shorter than this use the plain comparison sort — the radix
+/// passes' histogram setup costs more than sorting a handful of keys.
+pub const RADIX_MIN_KEYS: usize = 128;
+
+/// Inputs shorter than this never fan out across threads: below it the
+/// scatter/merge bookkeeping beats the win from parallel bucket sorts.
+pub const PAR_MIN_KEYS: usize = 1 << 16;
+
+/// Which argsort substrate a key column of a given size runs on —
+/// fast-path introspection mirroring
+/// [`KeyPath`](crate::curves::fastkey::KeyPath) and
+/// [`NeighborPath`](crate::curves::neighbor::NeighborPath).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SortPath {
+    /// `sort_by_key` on the index column (reference semantics; tiny
+    /// inputs only).
+    Comparison,
+    /// Single-threaded stable LSD radix sort, byte at a time.
+    RadixLsd,
+    /// Parallel sample sort: sampled splitters, chunk-partitioned
+    /// bucket scatter, per-bucket stable radix sort.
+    SampleSort,
+}
+
+impl SortPath {
+    /// Short label for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SortPath::Comparison => "comparison",
+            SortPath::RadixLsd => "radix-lsd",
+            SortPath::SampleSort => "sample-sort",
+        }
+    }
+
+    /// True for every path except the comparison fallback.
+    pub fn is_fast(self) -> bool {
+        self != SortPath::Comparison
+    }
+}
+
+/// Path [`stable_argsort_threads`] selects for `n` keys at `threads`
+/// workers. Pure — tests assert selection without sorting anything.
+pub fn sort_path(n: usize, threads: usize) -> SortPath {
+    if n < RADIX_MIN_KEYS {
+        SortPath::Comparison
+    } else if threads > 1 && n >= PAR_MIN_KEYS {
+        SortPath::SampleSort
+    } else {
+        SortPath::RadixLsd
+    }
+}
+
+/// Worker count the auto-selecting [`stable_argsort`] fans out to: one
+/// per available core (cached after the first call).
+pub fn default_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS
+        .get_or_init(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Stable argsort of a key column: `order[pos]` is the input index of
+/// the `pos`-th smallest key (ties keep input order). Auto-selects the
+/// substrate by [`sort_path`] under [`default_threads`]; every choice
+/// returns the identical permutation.
+pub fn stable_argsort(keys: &[u64]) -> Vec<u32> {
+    stable_argsort_threads(keys, default_threads())
+}
+
+/// [`stable_argsort`] with an explicit worker budget (`threads <= 1`
+/// stays serial). The permutation is independent of `threads`.
+pub fn stable_argsort_threads(keys: &[u64], threads: usize) -> Vec<u32> {
+    match sort_path(keys.len(), threads) {
+        SortPath::Comparison => comparison_argsort(keys),
+        SortPath::RadixLsd => radix_argsort(keys),
+        SortPath::SampleSort => sample_argsort(keys, &Coordinator::new(threads)),
+    }
+}
+
+/// The reference substrate: a stable comparison sort on the index
+/// column. Every other path must match it bit-for-bit.
+pub fn comparison_argsort(keys: &[u64]) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..keys.len() as u32).collect();
+    order.sort_by_key(|&idx| keys[idx as usize]);
+    order
+}
+
+/// Stable LSD radix argsort: one shared histogram pass builds all eight
+/// per-byte counts, then a counting-scatter pass per *non-constant*
+/// byte (a byte every key agrees on is skipped — curve keys at modest
+/// `dims·level` leave their high bytes zero, so typical columns take
+/// 3–5 passes, not 8). Keys travel with their indices so every pass
+/// streams sequentially. Stability: scatter walks the input in order.
+pub fn radix_argsort(keys: &[u64]) -> Vec<u32> {
+    let mut k = keys.to_vec();
+    let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+    radix_sort_pairs(&mut k, &mut idx);
+    idx
+}
+
+/// Sort `keys` and carry `idx` along (parallel arrays). The in-place
+/// core shared by [`radix_argsort`] and the sample sort's per-bucket
+/// stage.
+fn radix_sort_pairs(keys: &mut Vec<u64>, idx: &mut Vec<u32>) {
+    let n = keys.len();
+    debug_assert_eq!(n, idx.len());
+    assert!(n <= u32::MAX as usize, "radix argsort indexes with u32");
+    if n <= 1 {
+        return;
+    }
+    // One pass over the column fills all eight byte histograms (8 KiB).
+    let mut hist = [[0u32; 256]; 8];
+    for &k in keys.iter() {
+        for (b, h) in hist.iter_mut().enumerate() {
+            h[((k >> (8 * b)) & 0xFF) as usize] += 1;
+        }
+    }
+    let mut key_tmp = vec![0u64; n];
+    let mut idx_tmp = vec![0u32; n];
+    for (b, h) in hist.iter().enumerate() {
+        if h.iter().any(|&c| c as usize == n) {
+            continue; // constant byte: the pass would be the identity
+        }
+        let mut offs = [0u32; 256];
+        let mut sum = 0u32;
+        for (o, &c) in offs.iter_mut().zip(h.iter()) {
+            *o = sum;
+            sum += c;
+        }
+        for (&k, &ix) in keys.iter().zip(idx.iter()) {
+            let v = ((k >> (8 * b)) & 0xFF) as usize;
+            let dst = offs[v] as usize;
+            offs[v] += 1;
+            key_tmp[dst] = k;
+            idx_tmp[dst] = ix;
+        }
+        std::mem::swap(keys, &mut key_tmp);
+        std::mem::swap(idx, &mut idx_tmp);
+    }
+}
+
+/// Parallel sample-sort argsort over the coordinator's workers:
+///
+/// 1. **Splitters** — a deterministic stride sample of the key column
+///    (16× oversampled), sorted; bucket fences at its quantiles.
+/// 2. **Scatter** — the input is cut into chunks handed out through
+///    [`Coordinator::par_map`]'s dynamic queue; each chunk partitions
+///    its keys into per-bucket index lists (equal keys always land in
+///    the same bucket, so ties never cross a boundary).
+/// 3. **Bucket sort** — one task per bucket concatenates its chunk
+///    lists *in chunk order* (restoring global input order within the
+///    bucket) and runs the stable radix sort on the gathered keys.
+/// 4. **Concatenate** — bucket outputs, in bucket order, are the final
+///    permutation.
+///
+/// Falls back to [`radix_argsort`] below [`PAR_MIN_KEYS`] or at one
+/// worker. The result is bit-for-bit [`comparison_argsort`]'s
+/// permutation for any thread count.
+pub fn sample_argsort(keys: &[u64], coord: &Coordinator) -> Vec<u32> {
+    let n = keys.len();
+    let threads = coord.threads();
+    if threads <= 1 || n < PAR_MIN_KEYS {
+        return radix_argsort(keys);
+    }
+    assert!(n <= u32::MAX as usize, "sample argsort indexes with u32");
+    let buckets = (threads * 4).min(256);
+    let sample_n = (buckets * 16).min(n);
+    let mut sample: Vec<u64> = (0..sample_n).map(|i| keys[i * n / sample_n]).collect();
+    sample.sort_unstable();
+    let splitters: Vec<u64> = (1..buckets).map(|j| sample[j * sample_n / buckets]).collect();
+    // Chunk descriptors in input order; par_map returns per-chunk
+    // results in the same order, which is what keeps the scatter stable.
+    let chunk = n.div_ceil(threads * 4).max(1);
+    let chunks: Vec<(usize, usize)> =
+        (0..n).step_by(chunk).map(|s| (s, (s + chunk).min(n))).collect();
+    let scattered: Vec<Vec<Vec<u32>>> = coord.par_map(&chunks, |_, &(start, end)| {
+        let mut local: Vec<Vec<u32>> = vec![Vec::new(); buckets];
+        for (i, &k) in keys[start..end].iter().enumerate() {
+            let b = splitters.partition_point(|&s| s <= k);
+            local[b].push((start + i) as u32);
+        }
+        local
+    });
+    let bucket_ids: Vec<usize> = (0..buckets).collect();
+    let sorted: Vec<Vec<u32>> = coord.par_map(&bucket_ids, |_, &b| {
+        let mut idx: Vec<u32> = Vec::new();
+        for chunk_out in &scattered {
+            idx.extend_from_slice(&chunk_out[b]);
+        }
+        let mut bkeys: Vec<u64> = idx.iter().map(|&i| keys[i as usize]).collect();
+        radix_sort_pairs(&mut bkeys, &mut idx);
+        idx
+    });
+    let mut out = Vec::with_capacity(n);
+    for b in &sorted {
+        out.extend_from_slice(b);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Loser tree
+// ---------------------------------------------------------------------------
+
+/// Tournament loser tree for k-way streaming merges: holds one current
+/// key per input run (leaf), answers the global minimum in O(1) and
+/// replaces the winning leaf's key in O(log k) — the classic structure
+/// behind [`Segment::merge`](crate::index::store::segment::Segment::merge)'s
+/// streaming path.
+///
+/// ```text
+///            tree[0] ── overall winner (leaf index)
+///               │
+///            tree[1] ── loser of the final
+///            /     \
+///      tree[2]     tree[3] ── losers of the semifinals
+///       /   \       /   \
+///     L0    L1    L2    L3 ── leaves: current key per run (None = done)
+/// ```
+///
+/// Ties break toward the **lower leaf index** (deterministic — the
+/// merge feeds parts in a fixed order), and exhausted leaves (`None`)
+/// always lose.
+pub struct LoserTree<K: Ord + Copy> {
+    /// `tree[0]`: the overall winner's leaf; `tree[1..m]`: the loser
+    /// leaf of each internal match.
+    tree: Vec<u32>,
+    /// Current key per (padded) leaf; `None` = exhausted.
+    keys: Vec<Option<K>>,
+    /// Padded leaf count (power of two).
+    m: usize,
+}
+
+impl<K: Ord + Copy> LoserTree<K> {
+    /// Build over the initial per-run heads (index in the vec = leaf
+    /// index handed back by [`LoserTree::winner`]).
+    pub fn new(leaves: Vec<Option<K>>) -> Self {
+        let k = leaves.len().max(1);
+        let m = k.next_power_of_two();
+        let mut keys = leaves;
+        keys.resize(m, None);
+        // Bottom-up: play every match once, recording winners up and
+        // losers into the nodes.
+        let mut win: Vec<u32> = vec![0; 2 * m];
+        for (p, w) in win.iter_mut().enumerate().skip(m) {
+            *w = (p - m) as u32;
+        }
+        let mut tree = vec![0u32; m];
+        for p in (1..m).rev() {
+            let (a, b) = (win[2 * p], win[2 * p + 1]);
+            let (w, l) = if Self::beats(&keys, a, b) { (a, b) } else { (b, a) };
+            win[p] = w;
+            tree[p] = l;
+        }
+        tree[0] = win[1];
+        LoserTree { tree, keys, m }
+    }
+
+    /// True when leaf `a` beats leaf `b`: smaller `(key, leaf)` wins,
+    /// exhausted leaves always lose.
+    fn beats(keys: &[Option<K>], a: u32, b: u32) -> bool {
+        match (keys[a as usize], keys[b as usize]) {
+            (Some(ka), Some(kb)) => (ka, a) < (kb, b),
+            (Some(_), None) => true,
+            (None, _) => false,
+        }
+    }
+
+    /// The current minimum across all runs as `(leaf, key)`, or `None`
+    /// once every leaf is exhausted.
+    pub fn winner(&self) -> Option<(usize, K)> {
+        let w = self.tree[0] as usize;
+        self.keys[w].map(|k| (w, k))
+    }
+
+    /// Replace `leaf`'s key with the run's next head (`None` =
+    /// exhausted) and replay its path to the root.
+    pub fn replace(&mut self, leaf: usize, key: Option<K>) {
+        self.keys[leaf] = key;
+        let mut winner = leaf as u32;
+        let mut node = (leaf + self.m) / 2;
+        while node >= 1 {
+            let other = self.tree[node];
+            if !Self::beats(&self.keys, winner, other) {
+                self.tree[node] = winner;
+                winner = other;
+            }
+            node /= 2;
+        }
+        self.tree[0] = winner;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn corpora(rng: &mut Rng, n: usize) -> Vec<Vec<u64>> {
+        let mut out = vec![
+            (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>(),
+            (0..n).map(|_| rng.below(8)).collect(),
+            vec![7u64; n],
+        ];
+        let mut sorted: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+        sorted.sort_unstable();
+        out.push(sorted.clone());
+        sorted.reverse();
+        out.push(sorted);
+        out
+    }
+
+    #[test]
+    fn radix_and_sample_match_comparison_bit_for_bit() {
+        let mut rng = Rng::new(8);
+        for n in [0usize, 1, 2, 100, 5000, (1 << 16) + 17] {
+            for keys in corpora(&mut rng, n) {
+                let want = comparison_argsort(&keys);
+                assert_eq!(radix_argsort(&keys), want, "radix n={n}");
+                for t in [1usize, 2, 5, 8] {
+                    let got = sample_argsort(&keys, &Coordinator::new(t));
+                    assert_eq!(got, want, "sample t={t} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn path_selection_is_size_and_thread_aware() {
+        assert_eq!(sort_path(10, 8), SortPath::Comparison);
+        assert_eq!(sort_path(RADIX_MIN_KEYS, 1), SortPath::RadixLsd);
+        assert_eq!(sort_path(PAR_MIN_KEYS - 1, 8), SortPath::RadixLsd);
+        assert_eq!(sort_path(PAR_MIN_KEYS, 8), SortPath::SampleSort);
+        assert_eq!(sort_path(PAR_MIN_KEYS, 1), SortPath::RadixLsd);
+        assert!(!sort_path(10, 8).is_fast());
+        assert!(sort_path(1 << 20, 8).is_fast());
+    }
+
+    #[test]
+    fn loser_tree_merges_sorted_runs() {
+        let mut rng = Rng::new(3);
+        for k in [1usize, 2, 3, 5, 8] {
+            let runs: Vec<Vec<u64>> = (0..k)
+                .map(|_| {
+                    let mut r: Vec<u64> =
+                        (0..rng.below(40)).map(|_| rng.below(100)).collect();
+                    r.sort_unstable();
+                    r
+                })
+                .collect();
+            let mut want: Vec<u64> = runs.iter().flatten().copied().collect();
+            want.sort_unstable();
+            let mut cursors = vec![0usize; k];
+            let heads: Vec<Option<u64>> =
+                runs.iter().map(|r| r.first().copied()).collect();
+            let mut lt = LoserTree::new(heads);
+            let mut got = Vec::new();
+            while let Some((leaf, key)) = lt.winner() {
+                got.push(key);
+                cursors[leaf] += 1;
+                lt.replace(leaf, runs[leaf].get(cursors[leaf]).copied());
+            }
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn loser_tree_handles_empty_and_exhausted() {
+        let mut lt: LoserTree<u64> = LoserTree::new(Vec::new());
+        assert!(lt.winner().is_none());
+        lt = LoserTree::new(vec![Some(5)]);
+        assert_eq!(lt.winner(), Some((0, 5)));
+        lt.replace(0, None);
+        assert!(lt.winner().is_none());
+    }
+}

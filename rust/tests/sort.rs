@@ -1,0 +1,230 @@
+//! Sort/merge-engine test suite (ISSUE 8): duplicate-key (tie)
+//! stability through every public consumer of the engine —
+//! `sfc_argsort`, `SfcIndex::build`, `Segment::merge` — for every
+//! `CurveKind` at d ∈ {2, 3, 4}; `SortPath` introspection asserting no
+//! silent fallback to the comparison sort; and serial-vs-parallel store
+//! maintenance parity, byte for byte, at every tested thread count.
+
+use sfc_mine::apps::Matrix;
+use sfc_mine::coordinator::Coordinator;
+use sfc_mine::curves::engine::CurveMapperNd;
+use sfc_mine::curves::ndim::sfc_argsort;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::quantize::Quantizer;
+use sfc_mine::index::store::segment::Segment;
+use sfc_mine::index::{SfcIndex, SfcStore, Snapshot, StoreConfig};
+use sfc_mine::util::rng::Rng;
+use sfc_mine::util::sort::{
+    comparison_argsort, default_threads, radix_argsort, sample_argsort, sort_path, SortPath,
+    PAR_MIN_KEYS, RADIX_MIN_KEYS,
+};
+
+/// The engine's contract, checked at the `sfc_argsort` entry point every
+/// index build and store flush goes through: bit-for-bit equal to the
+/// stable comparison argsort — ties keep input order — on duplicate-heavy
+/// coordinates for every curve × d ∈ {2, 3, 4}, at sizes selecting each
+/// `SortPath`.
+#[test]
+fn sfc_argsort_keeps_input_order_on_ties_for_every_curve() {
+    let mut rng = Rng::new(7);
+    for kind in CurveKind::ALL {
+        for d in [2usize, 3, 4] {
+            let mapper = kind.nd_mapper(d, 4);
+            for n in [RADIX_MIN_KEYS / 2, 3000] {
+                // Coordinates from a tiny palette: almost every key ties.
+                let flat: Vec<u32> = (0..n * d).map(|_| rng.below(4) as u32).collect();
+                let mut keys = Vec::with_capacity(n);
+                mapper.order_batch_nd(&flat, &mut keys);
+                assert_eq!(
+                    sfc_argsort(&flat, mapper.as_ref()),
+                    comparison_argsort(&keys),
+                    "{} d={d} n={n}: tie order must equal input order",
+                    kind.name()
+                );
+            }
+        }
+    }
+}
+
+/// Radix and sample-sort agree with the comparison argsort — ties
+/// included — above the parallel cutover, for every thread count.
+#[test]
+fn engine_paths_agree_above_parallel_cutover() {
+    let mut rng = Rng::new(13);
+    let n = PAR_MIN_KEYS + 123;
+    let keys: Vec<u64> = (0..n).map(|_| rng.below(32)).collect(); // heavy ties
+    let want = comparison_argsort(&keys);
+    assert_eq!(radix_argsort(&keys), want, "radix tie order");
+    for threads in [1usize, 2, 5, 8] {
+        let coord = Coordinator::new(threads);
+        assert_eq!(sample_argsort(&keys, &coord), want, "sample-sort at {threads} threads");
+        assert_eq!(coord.par_argsort(&keys), want, "par_argsort at {threads} threads");
+    }
+}
+
+/// `SortPath` selection plus the index/store introspection hooks: big
+/// workloads never silently fall back to the comparison sort.
+#[test]
+fn sort_path_hooks_report_no_silent_fallback() {
+    assert_eq!(sort_path(RADIX_MIN_KEYS - 1, 8), SortPath::Comparison);
+    assert_eq!(sort_path(RADIX_MIN_KEYS, 1), SortPath::RadixLsd);
+    assert_eq!(sort_path(PAR_MIN_KEYS, 1), SortPath::RadixLsd);
+    assert_eq!(sort_path(PAR_MIN_KEYS, 2), SortPath::SampleSort);
+    assert!(!SortPath::Comparison.is_fast());
+    assert!(SortPath::RadixLsd.is_fast() && SortPath::SampleSort.is_fast());
+    assert_eq!(SortPath::RadixLsd.name(), "radix-lsd");
+
+    let points = Matrix::random(5000, 3, 3, 0.0, 50.0);
+    let index = SfcIndex::build(&points, 6);
+    assert_eq!(index.sort_path(), sort_path(index.len(), default_threads()));
+    assert!(index.sort_path().is_fast(), "a 5000-row build must take a fast path");
+
+    let store = SfcStore::from_points(&points, 6, CurveKind::Hilbert, StoreConfig::default());
+    assert_eq!(
+        store.sort_path(),
+        sort_path(store.snapshot().entries() as usize, default_threads())
+    );
+    assert!(store.sort_path().is_fast(), "a 5000-entry store must take a fast path");
+}
+
+/// Duplicate rows through a real `SfcIndex::build`: equal keys keep
+/// input order, so the ids a point query returns are exactly the
+/// duplicate positions in insertion order.
+#[test]
+fn index_build_keeps_duplicate_rows_in_input_order() {
+    let mut rng = Rng::new(29);
+    for kind in CurveKind::ALL {
+        for d in [2usize, 3, 4] {
+            // 300 rows drawn from 20 distinct points: every row has many
+            // exact duplicates (equal curve keys).
+            let palette = Matrix::random(20, d, 31, 0.0, 10.0);
+            let picks: Vec<usize> = (0..300).map(|_| rng.below_usize(20)).collect();
+            let points = Matrix::from_fn(300, d, |i, j| palette.at(picks[i], j));
+            let index = SfcIndex::build_with(&points, 5, kind);
+            for p in 0..20 {
+                let q = palette.row(p);
+                let got = index.query_point(q);
+                let want: Vec<u32> = picks
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| v == p)
+                    .map(|(i, _)| i as u32)
+                    .collect();
+                assert_eq!(got, want, "{} d={d}: duplicates out of input order", kind.name());
+            }
+        }
+    }
+}
+
+/// `Segment::merge` on a duplicate-key mini-run: within equal keys the
+/// output is in seq (append) order, for every curve × d ∈ {2, 3, 4}.
+#[test]
+fn merge_keeps_seq_order_on_equal_keys() {
+    let mut rng = Rng::new(37);
+    for kind in CurveKind::ALL {
+        for d in [2usize, 3, 4] {
+            let mapper = kind.nd_mapper(d, 4);
+            let quant = Quantizer::from_bounds(vec![0.0; d], &vec![16.0; d], 16);
+            // 80 rows over 5 distinct points → long equal-key runs.
+            let palette: Vec<Vec<f32>> =
+                (0..5).map(|_| (0..d).map(|_| rng.below(16) as f32).collect()).collect();
+            let mut rows = Matrix::zeros(0, d);
+            for _ in 0..80 {
+                rows.data.extend_from_slice(&palette[rng.below_usize(5)]);
+                rows.rows += 1;
+            }
+            let ids: Vec<u32> = (0..80).collect();
+            let seg = Segment::from_rows(mapper.as_ref(), &quant, ids, rows, false, 1);
+            let merged = Segment::merge(&[&seg], false, d);
+            assert_eq!(merged.rows(), 80);
+            assert!(merged.keys.windows(2).all(|w| w[0] <= w[1]), "sorted by key");
+            for p in 1..merged.rows() {
+                if merged.keys[p - 1] == merged.keys[p] {
+                    assert!(
+                        merged.seqs[p - 1] < merged.seqs[p],
+                        "{} d={d}: equal keys must stay in seq order",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn assert_seg_eq(a: &Segment, b: &Segment, ctx: &str) {
+    assert_eq!(a.keys, b.keys, "{ctx}: keys");
+    assert_eq!(a.ids, b.ids, "{ctx}: ids");
+    assert_eq!(a.seqs, b.seqs, "{ctx}: seqs");
+    assert_eq!(a.tombs, b.tombs, "{ctx}: tombs");
+    assert_eq!(a.points.data, b.points.data, "{ctx}: row data");
+}
+
+fn assert_snap_eq(a: &Snapshot, b: &Snapshot, ctx: &str) {
+    assert_eq!(a.bounds(), b.bounds(), "{ctx}: fenceposts");
+    assert_eq!(a.entries(), b.entries(), "{ctx}: entries");
+    let shards = a.bounds().len() - 1;
+    for s in 0..shards {
+        let (sa, sb) = (a.shard_segments(s), b.shard_segments(s));
+        assert_eq!(sa.len(), sb.len(), "{ctx}: shard {s} segment count");
+        for (x, y) in sa.iter().zip(sb) {
+            assert_seg_eq(x, y, &format!("{ctx}: shard {s}"));
+        }
+    }
+}
+
+/// One deterministic mutation round: a batch of inserts plus deletes of
+/// the round's own first rows (the same script for every store).
+fn mutate(store: &SfcStore, round: u64) {
+    let mut rng = Rng::new(1000 + round);
+    let n = 40 + rng.below(40) as usize;
+    let rows = Matrix::from_fn(n, 2, |_, _| rng.f32() * 100.0);
+    let first = store.insert_batch(&rows);
+    for i in 0..n / 4 {
+        store.delete(first + i as u32, rows.row(i));
+    }
+}
+
+/// The parallel maintenance acceptance: `par_flush` / `par_compact` /
+/// `par_rebalance` leave the store **byte-identical** (fenceposts,
+/// per-shard segment stacks, every column) to the serial paths, for any
+/// thread count.
+#[test]
+fn parallel_maintenance_matches_serial_bit_for_bit() {
+    for threads in [1usize, 2, 5, 8] {
+        let coord = Coordinator::new(threads);
+        let mk = || {
+            SfcStore::new(
+                2,
+                6,
+                CurveKind::Hilbert,
+                vec![0.0, 0.0],
+                &[100.0, 100.0],
+                StoreConfig { shards: 4, buffer_rows: 32 },
+            )
+        };
+        let (serial, par) = (mk(), mk());
+        mutate(&serial, 0);
+        mutate(&par, 0);
+        serial.flush();
+        par.par_flush(&coord);
+        assert_snap_eq(&serial.snapshot(), &par.snapshot(), &format!("flush x{threads}"));
+
+        mutate(&serial, 1);
+        mutate(&par, 1);
+        serial.compact();
+        par.par_compact(&coord);
+        assert_snap_eq(&serial.snapshot(), &par.snapshot(), &format!("compact x{threads}"));
+
+        mutate(&serial, 2);
+        mutate(&par, 2);
+        serial.rebalance();
+        par.par_rebalance(&coord);
+        assert_snap_eq(&serial.snapshot(), &par.snapshot(), &format!("rebalance x{threads}"));
+
+        // And the live sets agree with each other, id for id, row for row.
+        let (ids_a, rows_a) = serial.collect_live(&serial.snapshot());
+        let (ids_b, rows_b) = par.collect_live(&par.snapshot());
+        assert_eq!(ids_a, ids_b, "threads={threads}: live ids");
+        assert_eq!(rows_a.data, rows_b.data, "threads={threads}: live rows");
+    }
+}

@@ -371,6 +371,50 @@ fn store_stats_report_sharding_and_guard_zero_candidates() {
     assert_eq!(a, b, "coarsening must not change results");
 }
 
+/// Parallel maintenance through the query faces: after churn, fanned-out
+/// `par_flush`/`par_compact`/`par_rebalance` leave every query face equal
+/// to a fresh `SfcIndex` on the live set — same acceptance the serial
+/// maintenance paths pass (byte-level serial parity lives in
+/// `tests/sort.rs`).
+#[test]
+fn parallel_maintenance_keeps_query_parity() {
+    let d = 2usize;
+    let level = 6u32;
+    let kind = CurveKind::Hilbert;
+    let store = SfcStore::new(
+        d,
+        level,
+        kind,
+        vec![0.0, 0.0],
+        &[100.0, 100.0],
+        StoreConfig { shards: 4, buffer_rows: 32 },
+    );
+    let mut alive: Alive = Alive::new();
+    let mut rng = Rng::new(77);
+    let coord = Coordinator::new(3);
+    for step in 0..6 {
+        let n = 30 + rng.below(30) as usize;
+        let rows = Matrix::from_fn(n, d, |_, _| rng.f32() * 100.0);
+        let first = store.insert_batch(&rows);
+        for i in 0..n {
+            alive.insert(first + i as u32, rows.row(i).to_vec());
+        }
+        for _ in 0..rng.below(8) {
+            if let Some((&id, row)) = alive.iter().next() {
+                let row = row.clone();
+                store.delete(id, &row);
+                alive.remove(&id);
+            }
+        }
+        match step % 3 {
+            0 => store.par_flush(&coord),
+            1 => store.par_compact(&coord),
+            _ => store.par_rebalance(&coord),
+        }
+        assert_parity(&store, &alive, d, level, kind, &mut rng, &format!("par step={step}"));
+    }
+}
+
 /// Batched snapshot queries through the coordinator agree with the
 /// serial path at every thread count.
 #[test]
