@@ -1,6 +1,8 @@
-//! Store bench (ISSUE 5): ingest throughput, window-query latency vs a
-//! full `SfcIndex` rebuild, and sharded batched-query thread scaling.
-//! Emits JSON (`reports/bench_store.json`) for the perf trajectory.
+//! Store bench (ISSUE 5 + 9): ingest throughput, window-query latency vs
+//! a full `SfcIndex` rebuild, sharded batched-query thread scaling, and
+//! durability costs — ingest-with-fsync vs in-memory, cold-start
+//! `open()` (WAL-heavy vs compacted layout), and post-recovery query
+//! latency. Emits JSON (`reports/bench_store.json`).
 //!
 //! Expected shape: ingest is amortized `O(log n)` per row (write buffer
 //! + geometric tier merges), store queries land in the same ballpark as
@@ -12,7 +14,7 @@ use sfc_mine::apps::simjoin::make_clustered;
 use sfc_mine::apps::Matrix;
 use sfc_mine::coordinator::Coordinator;
 use sfc_mine::curves::CurveKind;
-use sfc_mine::index::{SfcIndex, SfcStore, StoreConfig};
+use sfc_mine::index::{SfcIndex, SfcStore, StoreConfig, SyncPolicy};
 use sfc_mine::util::bench::Bench;
 use sfc_mine::util::rng::Rng;
 use sfc_mine::util::table::Table;
@@ -164,6 +166,119 @@ fn main() {
     } else {
         println!("scaling acceptance skipped ({cores} cores, fast={fast})");
     }
+
+    // --- durability: fsync ingest, cold-start open, recovery queries ----
+    // Smaller n: every durable iteration pays real disk writes + fsyncs.
+    let tmp = std::env::temp_dir().join(format!("sfc-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    let n_dur: usize = if fast { 2_000 } else { 20_000 };
+    let dur_points = Matrix::from_fn(n_dur, d, |i, j| points.at(i % n, j));
+    let ingest_batched = |store: &SfcStore| {
+        let mut p = 0usize;
+        while p < n_dur {
+            let end = (p + batch).min(n_dur);
+            let rows = Matrix::from_fn(end - p, d, |i, j| dur_points.at(p + i, j));
+            store.insert_batch(&rows);
+            p = end;
+        }
+    };
+
+    // Durable ingest with an fsync per WAL batch, against the in-memory
+    // baseline above (same batch size, smaller n — compare per-row cost).
+    let ingest_dir = tmp.join("ingest");
+    let m_dur_ingest = bench.throughput("store/ingest/durable-fsync", n_dur as u64, || {
+        let _ = std::fs::remove_dir_all(&ingest_dir);
+        let store = SfcStore::create(
+            &ingest_dir,
+            d,
+            level,
+            CurveKind::Hilbert,
+            bounds_lo.clone(),
+            &bounds_hi,
+            cfg,
+            SyncPolicy::Always,
+        )
+        .expect("create durable store");
+        ingest_batched(&store);
+        store.close().expect("close durable store");
+    });
+
+    // Cold-start open(): WAL-heavy (huge write buffer, every row replayed
+    // from the log) vs compacted (one sorted run per shard, empty WAL).
+    let wal_dir = tmp.join("wal-heavy");
+    {
+        let store = SfcStore::create(
+            &wal_dir,
+            d,
+            level,
+            CurveKind::Hilbert,
+            bounds_lo.clone(),
+            &bounds_hi,
+            StoreConfig { buffer_rows: usize::MAX, ..cfg },
+            SyncPolicy::EveryN(64),
+        )
+        .expect("create wal-heavy store");
+        ingest_batched(&store);
+        store.close().expect("close wal-heavy store");
+    }
+    let m_open_wal = bench.throughput("store/open/wal-heavy", n_dur as u64, || {
+        SfcStore::open(&wal_dir).expect("open wal-heavy store")
+    });
+
+    let seg_dir = tmp.join("compacted");
+    {
+        let store = SfcStore::create(
+            &seg_dir,
+            d,
+            level,
+            CurveKind::Hilbert,
+            bounds_lo.clone(),
+            &bounds_hi,
+            cfg,
+            SyncPolicy::EveryN(64),
+        )
+        .expect("create compacted store");
+        ingest_batched(&store);
+        store.compact();
+        store.close().expect("close compacted store");
+    }
+    let m_open_seg = bench.throughput("store/open/compacted", n_dur as u64, || {
+        SfcStore::open(&seg_dir).expect("open compacted store")
+    });
+
+    // Post-recovery query latency: a cold-opened store answering the same
+    // windows as the long-lived in-memory store above.
+    let recovered = SfcStore::open(&seg_dir).expect("reopen compacted store");
+    let rsnap = recovered.snapshot();
+    let (rids, _rrows) = recovered.collect_live(&rsnap);
+    assert_eq!(rids.len(), n_dur, "recovery must surface every ingested row");
+    let m_rec_q = bench.throughput("store/query/post-recovery", n_windows as u64, || {
+        let mut acc = 0usize;
+        for (lo, hi) in &windows {
+            acc += recovered.query_window_on(&rsnap, lo, hi).len();
+        }
+        acc
+    });
+    let _ = std::fs::remove_dir_all(&tmp);
+
+    let mut dur_t = Table::new(vec!["measure", "median", "per element"]);
+    for (name, m, unit) in [
+        ("durable ingest, fsync per batch", &m_dur_ingest, "pt"),
+        ("cold open, WAL-heavy", &m_open_wal, "pt"),
+        ("cold open, compacted", &m_open_seg, "pt"),
+        ("window query, post-recovery", &m_rec_q, "query"),
+    ] {
+        dur_t.row(vec![
+            name.to_string(),
+            format!("{:.2} ms", m.median.as_secs_f64() * 1e3),
+            format!(
+                "{:.2} µs/{unit}",
+                m.median.as_nanos() as f64 / 1e3 / m.elements.unwrap_or(1) as f64
+            ),
+        ]);
+    }
+    println!("\ndurability at n={n_dur} d={d} level={level} (in-memory ingest baseline above):");
+    print!("{}", dur_t.render());
 
     write_json(&bench, "reports/bench_store.json").expect("write bench JSON");
     println!("\nwrote reports/bench_store.json");

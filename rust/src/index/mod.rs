@@ -33,7 +33,9 @@ pub mod store;
 pub use grid::GridIndex;
 pub use ndgrid::{CellNd, GridIndexNd};
 pub use sfc::{QueryStats, SfcIndex};
-pub use store::{SfcStore, Snapshot, StoreConfig};
+pub use store::{
+    CrashMode, FailpointFs, RealFs, SfcStore, Snapshot, StoreConfig, StoreFs, SyncPolicy,
+};
 
 use crate::apps::Matrix;
 

@@ -56,6 +56,17 @@ impl Quantizer {
         }
     }
 
+    /// Rebuild a quantizer from persisted raw parts. The durable store's
+    /// manifest records `origin`/`cell` as f32 bit patterns so a reopened
+    /// store quantizes — and therefore keys — bit-for-bit identically to
+    /// the store that wrote them; re-deriving widths from `(max − origin)
+    /// / side` would not guarantee that.
+    pub fn from_raw(origin: Vec<f32>, cell: Vec<f32>, side: u32) -> Self {
+        assert_eq!(origin.len(), cell.len(), "raw parts dims must match");
+        assert!(side >= 1, "side must be positive");
+        Quantizer { dims: origin.len(), side, origin, cell }
+    }
+
     /// The all-zero map (every value lands in cell 0 on every axis).
     pub fn degenerate(dims: usize, side: u32) -> Self {
         Quantizer { dims, side, origin: vec![0.0; dims], cell: vec![0.0; dims] }

@@ -1,0 +1,781 @@
+//! On-disk formats for the durable store: segment files and the manifest.
+//!
+//! Both formats are hand-rolled little-endian binary (the zero-dependency
+//! constraint), versioned by magic + version word, and checksummed with
+//! CRC-32 so corruption is *detected*, never silently served.
+//!
+//! ## Segment file (`seg-NNNNNNNNNN.sfc`)
+//!
+//! ```text
+//! "SFCSEG1\0"  u32 version  u32 flags(bit0=sorted)  u32 dims  u64 rows
+//! block(1, keys:   rows × u64)
+//! block(2, ids:    rows × u32)
+//! block(3, seqs:   rows × u64)
+//! block(4, tombs:  ⌈rows/8⌉ bitset bytes)
+//! block(5, points: rows × dims × f32)
+//! block(6, footer: min/max key, fencepost key samples, bloom filter)
+//! "SFCSEGE\0"
+//! ```
+//!
+//! where `block(tag, payload)` is `u8 tag · u64 len · payload · u32
+//! crc32(payload)`. The column blocks mirror [`Segment`]'s in-memory
+//! layout, so encode/decode is a straight copy. The footer is redundant
+//! validation metadata (and a future probe accelerator): decode
+//! recomputes min/max, the every-16th-key fenceposts and the bloom
+//! filter from the keys column and requires bitwise equality, on top of
+//! verifying that the key column is actually sorted. A segment file
+//! decodes to exactly the bytes that were encoded or fails with a clean
+//! `InvalidData` error.
+//!
+//! ## Manifest (`MANIFEST-NNNNNNNNNN`)
+//!
+//! One self-contained generation of store metadata: curve/geometry
+//! parameters (including raw quantizer origin/cell widths for bit-exact
+//! re-keying), shard fenceposts, per-shard flushed-seq high-water marks
+//! and run file lists, the live WAL name, and `next_seq`/`next_id`
+//! counters. The trailing CRC covers the whole body; `CURRENT` names the
+//! live manifest and is swapped atomically (temp file + rename), which
+//! makes manifest publication the store's single commit point for
+//! structural changes.
+
+use crate::apps::Matrix;
+use crate::curves::CurveKind;
+use crate::index::quantize::Quantizer;
+use std::io;
+
+use super::segment::Segment;
+
+pub(crate) const SEG_MAGIC: [u8; 8] = *b"SFCSEG1\0";
+pub(crate) const SEG_END: [u8; 8] = *b"SFCSEGE\0";
+pub(crate) const MAN_MAGIC: [u8; 8] = *b"SFCMAN1\0";
+pub(crate) const FORMAT_VERSION: u32 = 1;
+
+/// Key-sample stride for the footer fenceposts.
+const FENCE_STRIDE: usize = 16;
+/// Bloom filter: bits per key (rounded up to a power-of-two word count).
+const BLOOM_BITS_PER_KEY: usize = 10;
+const BLOOM_HASHES: u32 = 4;
+
+const BLOCK_KEYS: u8 = 1;
+const BLOCK_IDS: u8 = 2;
+const BLOCK_SEQS: u8 = 3;
+const BLOCK_TOMBS: u8 = 4;
+const BLOCK_POINTS: u8 = 5;
+const BLOCK_FOOTER: u8 = 6;
+
+/// Clean decode failure (corruption, truncation, version skew).
+pub(crate) fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+pub(crate) fn to_usize(v: u64, what: &str) -> io::Result<usize> {
+    usize::try_from(v).map_err(|_| bad(format!("{what} {v} overflows usize")))
+}
+
+pub(crate) fn to_u64(v: usize, what: &str) -> io::Result<u64> {
+    u64::try_from(v).map_err(|_| bad(format!("{what} {v} overflows u64")))
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE, reflected) — table built at compile time.
+// ---------------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut j = 0;
+        while j < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            j += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE 802.3) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Little-endian writer / bounds-checked reader.
+// ---------------------------------------------------------------------------
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian cursor: every read is validated against
+/// the remaining length and fails with a clean error on truncation, so
+/// decoders never index out of bounds no matter how mangled the input.
+pub(crate) struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Cur { b, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize, what: &str) -> io::Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(bad(format!(
+                "truncated {what}: need {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> io::Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u32(&mut self, what: &str) -> io::Result<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn u64(&mut self, what: &str) -> io::Result<u64> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    pub fn f32(&mut self, what: &str) -> io::Result<f32> {
+        let s = self.take(4, what)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+fn put_block(out: &mut Vec<u8>, tag: u8, payload: &[u8]) -> io::Result<()> {
+    out.push(tag);
+    put_u64(out, to_u64(payload.len(), "block length")?);
+    out.extend_from_slice(payload);
+    put_u32(out, crc32(payload));
+    Ok(())
+}
+
+/// Read one `block(tag, …)`: checks the tag, that the declared length is
+/// exactly `expect_len`, and the payload CRC.
+fn take_block<'a>(cur: &mut Cur<'a>, tag: u8, expect_len: usize, what: &str) -> io::Result<&'a [u8]> {
+    let got_tag = cur.u8(what)?;
+    if got_tag != tag {
+        return Err(bad(format!("{what}: block tag {got_tag}, expected {tag}")));
+    }
+    let len = to_usize(cur.u64(what)?, "block length")?;
+    if len != expect_len {
+        return Err(bad(format!(
+            "{what}: block length {len}, expected {expect_len}"
+        )));
+    }
+    let payload = cur.take(len, what)?;
+    let crc = cur.u32(what)?;
+    if crc != crc32(payload) {
+        return Err(bad(format!("{what}: block checksum mismatch")));
+    }
+    Ok(payload)
+}
+
+// ---------------------------------------------------------------------------
+// Footer metadata: min/max, fenceposts, bloom filter.
+// ---------------------------------------------------------------------------
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn bloom_words_for(rows: usize) -> usize {
+    let bits = rows.saturating_mul(BLOOM_BITS_PER_KEY).max(64);
+    let words = bits.div_ceil(64);
+    words.next_power_of_two()
+}
+
+fn bloom_build(keys: &[u64]) -> Vec<u64> {
+    let words = bloom_words_for(keys.len());
+    let mask = (words as u64) * 64 - 1; // words is a power of two
+    let mut bloom = vec![0u64; words];
+    for &k in keys {
+        let h1 = splitmix64(k);
+        let h2 = splitmix64(h1) | 1;
+        for i in 0..BLOOM_HASHES as u64 {
+            let bit = h1.wrapping_add(i.wrapping_mul(h2)) & mask;
+            bloom[(bit / 64) as usize] |= 1u64 << (bit % 64);
+        }
+    }
+    bloom
+}
+
+fn fence_keys(keys: &[u64]) -> Vec<u64> {
+    let mut fences: Vec<u64> = keys.iter().copied().step_by(FENCE_STRIDE).collect();
+    if let Some(&last) = keys.last() {
+        if fences.last() != Some(&last) {
+            fences.push(last);
+        }
+    }
+    fences
+}
+
+fn encode_footer(keys: &[u64]) -> io::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    put_u64(&mut out, keys.first().copied().unwrap_or(0));
+    put_u64(&mut out, keys.last().copied().unwrap_or(0));
+    let fences = fence_keys(keys);
+    put_u32(&mut out, u32::try_from(FENCE_STRIDE).expect("stride fits"));
+    put_u32(
+        &mut out,
+        u32::try_from(fences.len()).map_err(|_| bad("too many fenceposts"))?,
+    );
+    for f in fences {
+        put_u64(&mut out, f);
+    }
+    let bloom = bloom_build(keys);
+    put_u32(&mut out, BLOOM_HASHES);
+    put_u32(
+        &mut out,
+        u32::try_from(bloom.len()).map_err(|_| bad("bloom too large"))?,
+    );
+    for w in bloom {
+        put_u64(&mut out, w);
+    }
+    Ok(out)
+}
+
+/// Validate a footer payload by recomputing every field from the decoded
+/// key column and requiring bitwise equality.
+fn check_footer(payload: &[u8], keys: &[u64]) -> io::Result<()> {
+    let expected = encode_footer(keys)?;
+    if payload != expected.as_slice() {
+        return Err(bad("segment footer does not match key column"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Segment encode / decode.
+// ---------------------------------------------------------------------------
+
+/// Serialize a sorted segment. Only sorted runs are ever persisted (the
+/// write buffer lives in the WAL), so unsorted input is a caller bug.
+pub fn encode_segment(seg: &Segment, dims: usize) -> io::Result<Vec<u8>> {
+    assert!(seg.sorted, "only sorted runs are persisted");
+    assert_eq!(seg.points.cols, dims, "segment dims mismatch");
+    let rows = seg.rows();
+    let mut out = Vec::new();
+    out.extend_from_slice(&SEG_MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u32(&mut out, 1); // flags: sorted
+    put_u32(&mut out, u32::try_from(dims).map_err(|_| bad("dims overflow"))?);
+    put_u64(&mut out, to_u64(rows, "row count")?);
+
+    let mut payload = Vec::with_capacity(rows * 8);
+    for &k in &seg.keys {
+        put_u64(&mut payload, k);
+    }
+    put_block(&mut out, BLOCK_KEYS, &payload)?;
+
+    payload.clear();
+    for &id in &seg.ids {
+        put_u32(&mut payload, id);
+    }
+    put_block(&mut out, BLOCK_IDS, &payload)?;
+
+    payload.clear();
+    for &s in &seg.seqs {
+        put_u64(&mut payload, s);
+    }
+    put_block(&mut out, BLOCK_SEQS, &payload)?;
+
+    payload.clear();
+    payload.resize(rows.div_ceil(8), 0u8);
+    for (i, &t) in seg.tombs.iter().enumerate() {
+        if t {
+            payload[i / 8] |= 1u8 << (i % 8);
+        }
+    }
+    put_block(&mut out, BLOCK_TOMBS, &payload)?;
+
+    payload.clear();
+    for &v in &seg.points.data {
+        put_f32(&mut payload, v);
+    }
+    put_block(&mut out, BLOCK_POINTS, &payload)?;
+
+    let footer = encode_footer(&seg.keys)?;
+    put_block(&mut out, BLOCK_FOOTER, &footer)?;
+
+    out.extend_from_slice(&SEG_END);
+    Ok(out)
+}
+
+/// Decode and fully validate a segment file: magic/version/dims, every
+/// block's length and CRC, key-column sortedness, and the footer's
+/// min/max/fencepost/bloom redundancy. Never panics on corrupt input.
+pub fn decode_segment(bytes: &[u8], dims: usize) -> io::Result<Segment> {
+    let mut cur = Cur::new(bytes);
+    if cur.take(8, "segment magic")? != SEG_MAGIC {
+        return Err(bad("not a segment file (bad magic)"));
+    }
+    let version = cur.u32("segment version")?;
+    if version != FORMAT_VERSION {
+        return Err(bad(format!("unsupported segment version {version}")));
+    }
+    let flags = cur.u32("segment flags")?;
+    if flags != 1 {
+        return Err(bad(format!("unsupported segment flags {flags:#x}")));
+    }
+    let file_dims = to_usize(cur.u32("segment dims")?.into(), "dims")?;
+    if file_dims != dims {
+        return Err(bad(format!(
+            "segment dims {file_dims}, store expects {dims}"
+        )));
+    }
+    let rows = to_usize(cur.u64("segment rows")?, "row count")?;
+    let col8 = rows
+        .checked_mul(8)
+        .ok_or_else(|| bad("row count overflows column size"))?;
+    let col4 = rows * 4;
+    let pts = rows
+        .checked_mul(dims)
+        .and_then(|c| c.checked_mul(4))
+        .ok_or_else(|| bad("row count overflows points size"))?;
+
+    let keys_raw = take_block(&mut cur, BLOCK_KEYS, col8, "keys block")?;
+    let ids_raw = take_block(&mut cur, BLOCK_IDS, col4, "ids block")?;
+    let seqs_raw = take_block(&mut cur, BLOCK_SEQS, col8, "seqs block")?;
+    let tombs_raw = take_block(&mut cur, BLOCK_TOMBS, rows.div_ceil(8), "tombs block")?;
+    let points_raw = take_block(&mut cur, BLOCK_POINTS, pts, "points block")?;
+
+    let keys: Vec<u64> = keys_raw
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect();
+    let ids: Vec<u32> = ids_raw
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let seqs: Vec<u64> = seqs_raw
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect();
+    let mut tombs = Vec::with_capacity(rows);
+    for i in 0..rows {
+        tombs.push(tombs_raw[i / 8] & (1u8 << (i % 8)) != 0);
+    }
+    // Trailing padding bits must be zero (canonical encoding).
+    for i in rows..tombs_raw.len() * 8 {
+        if tombs_raw[i / 8] & (1u8 << (i % 8)) != 0 {
+            return Err(bad("tombstone bitset has nonzero padding"));
+        }
+    }
+    let data: Vec<f32> = points_raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    if keys.windows(2).any(|w| w[0] > w[1]) {
+        return Err(bad("segment key column is not sorted"));
+    }
+    let footer_raw = {
+        // Footer length is data-dependent; read tag + declared length,
+        // then verify by recomputation.
+        let got_tag = cur.u8("footer block")?;
+        if got_tag != BLOCK_FOOTER {
+            return Err(bad(format!("footer block tag {got_tag}")));
+        }
+        let len = to_usize(cur.u64("footer length")?, "footer length")?;
+        let payload = cur.take(len, "footer block")?;
+        let crc = cur.u32("footer block")?;
+        if crc != crc32(payload) {
+            return Err(bad("footer checksum mismatch"));
+        }
+        payload
+    };
+    check_footer(footer_raw, &keys)?;
+
+    if cur.take(8, "end magic")? != SEG_END {
+        return Err(bad("segment end magic missing"));
+    }
+    if cur.remaining() != 0 {
+        return Err(bad(format!(
+            "{} trailing bytes after segment end",
+            cur.remaining()
+        )));
+    }
+
+    Ok(Segment {
+        keys,
+        ids,
+        seqs,
+        tombs,
+        points: Matrix {
+            rows,
+            cols: dims,
+            data,
+        },
+        sorted: true,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Manifest.
+// ---------------------------------------------------------------------------
+
+/// Per-shard durable metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    /// Entries with `seq <= flushed_seq` are fully contained in the run
+    /// files; WAL replay skips them.
+    pub flushed_seq: u64,
+    /// Run file names, oldest → newest.
+    pub runs: Vec<String>,
+}
+
+/// One durable generation of store metadata — everything `open()` needs
+/// to rebuild the exact pre-crash snapshot together with the run files
+/// and the WAL tail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub gen: u64,
+    pub kind: CurveKind,
+    pub dims: usize,
+    pub level: u32,
+    pub side: u32,
+    pub buffer_rows: usize,
+    /// Raw quantizer parts ([`Quantizer::from_raw`]) for bit-exact keys.
+    pub origin: Vec<f32>,
+    pub cell: Vec<f32>,
+    pub data_lo: Vec<f32>,
+    pub data_hi: Vec<f32>,
+    pub next_seq: u64,
+    pub next_id: u32,
+    /// Shard fenceposts (`shards + 1` entries).
+    pub bounds: Vec<u64>,
+    pub shards: Vec<ShardManifest>,
+    /// Live WAL file name.
+    pub wal: String,
+}
+
+impl Manifest {
+    /// Rebuild the quantizer exactly as persisted.
+    pub fn quantizer(&self) -> Quantizer {
+        Quantizer::from_raw(self.origin.clone(), self.cell.clone(), self.side)
+    }
+}
+
+fn put_name(out: &mut Vec<u8>, name: &str) -> io::Result<()> {
+    let bytes = name.as_bytes();
+    put_u32(
+        out,
+        u32::try_from(bytes.len()).map_err(|_| bad("file name too long"))?,
+    );
+    out.extend_from_slice(bytes);
+    Ok(())
+}
+
+fn take_name(cur: &mut Cur<'_>, what: &str) -> io::Result<String> {
+    let len = to_usize(cur.u32(what)?.into(), "name length")?;
+    if len > 4096 {
+        return Err(bad(format!("{what}: name length {len} implausible")));
+    }
+    let raw = cur.take(len, what)?;
+    let name = std::str::from_utf8(raw)
+        .map_err(|_| bad(format!("{what}: name is not utf-8")))?
+        .to_string();
+    if name.is_empty()
+        || name.contains('/')
+        || name.contains('\\')
+        || name.contains('\0')
+        || name == "."
+        || name == ".."
+    {
+        return Err(bad(format!("{what}: illegal file name {name:?}")));
+    }
+    Ok(name)
+}
+
+/// Serialize a manifest (body + trailing CRC over everything after the
+/// magic).
+pub fn encode_manifest(m: &Manifest) -> io::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAN_MAGIC);
+    put_u32(&mut out, FORMAT_VERSION);
+    put_u64(&mut out, m.gen);
+    put_name(&mut out, m.kind.name())?;
+    put_u32(&mut out, u32::try_from(m.dims).map_err(|_| bad("dims overflow"))?);
+    put_u32(&mut out, m.level);
+    put_u32(&mut out, m.side);
+    put_u64(&mut out, to_u64(m.buffer_rows, "buffer_rows")?);
+    put_u64(&mut out, to_u64(m.shards.len(), "shard count")?);
+    if m.origin.len() != m.dims
+        || m.cell.len() != m.dims
+        || m.data_lo.len() != m.dims
+        || m.data_hi.len() != m.dims
+    {
+        return Err(bad("manifest axis vectors must have dims entries"));
+    }
+    for &v in m.origin.iter().chain(&m.cell).chain(&m.data_lo).chain(&m.data_hi) {
+        put_f32(&mut out, v);
+    }
+    put_u64(&mut out, m.next_seq);
+    put_u32(&mut out, m.next_id);
+    if m.bounds.len() != m.shards.len() + 1 {
+        return Err(bad("manifest bounds must have shards + 1 entries"));
+    }
+    for &b in &m.bounds {
+        put_u64(&mut out, b);
+    }
+    for sh in &m.shards {
+        put_u64(&mut out, sh.flushed_seq);
+        put_u32(
+            &mut out,
+            u32::try_from(sh.runs.len()).map_err(|_| bad("too many runs"))?,
+        );
+        for name in &sh.runs {
+            put_name(&mut out, name)?;
+        }
+    }
+    put_name(&mut out, &m.wal)?;
+    let crc = crc32(&out[8..]);
+    put_u32(&mut out, crc);
+    Ok(out)
+}
+
+/// Decode and validate a manifest: magic, version, trailing CRC, name
+/// hygiene and structural lengths.
+pub fn decode_manifest(bytes: &[u8]) -> io::Result<Manifest> {
+    if bytes.len() < 12 || bytes[..8] != MAN_MAGIC {
+        return Err(bad("not a manifest (bad magic)"));
+    }
+    let body = &bytes[8..bytes.len() - 4];
+    let stored = {
+        let t = &bytes[bytes.len() - 4..];
+        u32::from_le_bytes([t[0], t[1], t[2], t[3]])
+    };
+    if crc32(body) != stored {
+        return Err(bad("manifest checksum mismatch"));
+    }
+    let mut cur = Cur::new(body);
+    let version = cur.u32("manifest version")?;
+    if version != FORMAT_VERSION {
+        return Err(bad(format!("unsupported manifest version {version}")));
+    }
+    let gen = cur.u64("manifest gen")?;
+    let kind_name = take_name(&mut cur, "curve kind")?;
+    let kind: CurveKind = kind_name
+        .parse()
+        .map_err(|_| bad(format!("unknown curve kind {kind_name:?}")))?;
+    let dims = to_usize(cur.u32("dims")?.into(), "dims")?;
+    if dims == 0 || dims > 64 {
+        return Err(bad(format!("manifest dims {dims} out of range")));
+    }
+    let level = cur.u32("level")?;
+    let side = cur.u32("side")?;
+    if side == 0 {
+        return Err(bad("manifest side must be positive"));
+    }
+    let buffer_rows = to_usize(cur.u64("buffer_rows")?, "buffer_rows")?;
+    let shards = to_usize(cur.u64("shard count")?, "shard count")?;
+    if shards == 0 || shards > 1 << 20 {
+        return Err(bad(format!("manifest shard count {shards} out of range")));
+    }
+    let axis = |what: &str, cur: &mut Cur<'_>| -> io::Result<Vec<f32>> {
+        let mut v = Vec::with_capacity(dims);
+        for _ in 0..dims {
+            v.push(cur.f32(what)?);
+        }
+        Ok(v)
+    };
+    let origin = axis("origin", &mut cur)?;
+    let cell = axis("cell widths", &mut cur)?;
+    let data_lo = axis("data_lo", &mut cur)?;
+    let data_hi = axis("data_hi", &mut cur)?;
+    let next_seq = cur.u64("next_seq")?;
+    let next_id = cur.u32("next_id")?;
+    let mut bounds = Vec::with_capacity(shards + 1);
+    for _ in 0..=shards {
+        bounds.push(cur.u64("bounds")?);
+    }
+    if bounds.windows(2).any(|w| w[0] > w[1]) {
+        return Err(bad("manifest bounds are not sorted"));
+    }
+    let mut shard_manifests = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        let flushed_seq = cur.u64("flushed_seq")?;
+        let nruns = to_usize(cur.u32("run count")?.into(), "run count")?;
+        if nruns > 1 << 20 {
+            return Err(bad(format!("run count {nruns} implausible")));
+        }
+        let mut runs = Vec::with_capacity(nruns);
+        for _ in 0..nruns {
+            runs.push(take_name(&mut cur, "run file")?);
+        }
+        shard_manifests.push(ShardManifest { flushed_seq, runs });
+    }
+    let wal = take_name(&mut cur, "wal file")?;
+    if cur.remaining() != 0 {
+        return Err(bad(format!(
+            "{} trailing bytes after manifest",
+            cur.remaining()
+        )));
+    }
+    Ok(Manifest {
+        gen,
+        kind,
+        dims,
+        level,
+        side,
+        buffer_rows,
+        origin,
+        cell,
+        data_lo,
+        data_hi,
+        next_seq,
+        next_id,
+        bounds,
+        shards: shard_manifests,
+        wal,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::quantize::Quantizer;
+    use crate::util::rng::Rng;
+
+    fn sample_segment(rows: usize, dims: usize) -> Segment {
+        let mapper = CurveKind::Hilbert.nd_mapper(dims, 5);
+        let quant = Quantizer::from_bounds(vec![0.0; dims], &vec![32.0; dims], 32);
+        let mut rng = Rng::new(7);
+        let points = Matrix::from_fn(rows, dims, |_, _| rng.f32() * 32.0);
+        let ids: Vec<u32> = (0..rows as u32).collect();
+        let mut seg =
+            Segment::from_rows(mapper.as_ref(), &quant, ids, points, false, 10).into_sorted();
+        // Sprinkle tombstones so the bitset round-trips non-trivially.
+        for i in (0..rows).step_by(5) {
+            seg.tombs[i] = true;
+        }
+        seg
+    }
+
+    #[test]
+    fn segment_roundtrip_bitwise() {
+        for (rows, dims) in [(0usize, 2usize), (1, 2), (37, 2), (64, 3)] {
+            let seg = sample_segment(rows, dims);
+            let bytes = encode_segment(&seg, dims).unwrap();
+            let back = decode_segment(&bytes, dims).unwrap();
+            assert_eq!(back.keys, seg.keys);
+            assert_eq!(back.ids, seg.ids);
+            assert_eq!(back.seqs, seg.seqs);
+            assert_eq!(back.tombs, seg.tombs);
+            assert_eq!(back.points.data, seg.points.data);
+            assert!(back.sorted);
+        }
+    }
+
+    #[test]
+    fn segment_decode_rejects_every_flip() {
+        let seg = sample_segment(23, 2);
+        let bytes = encode_segment(&seg, 2).unwrap();
+        for off in 0..bytes.len() {
+            let mut bad_bytes = bytes.clone();
+            bad_bytes[off] ^= 0xFF;
+            assert!(
+                decode_segment(&bad_bytes, 2).is_err(),
+                "flip at {off} went undetected"
+            );
+        }
+        for cut in 0..bytes.len() {
+            assert!(
+                decode_segment(&bytes[..cut], 2).is_err(),
+                "truncation to {cut} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn segment_dims_mismatch_rejected() {
+        let seg = sample_segment(8, 2);
+        let bytes = encode_segment(&seg, 2).unwrap();
+        assert!(decode_segment(&bytes, 3).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_rejects_flips() {
+        let m = Manifest {
+            gen: 42,
+            kind: CurveKind::Peano,
+            dims: 3,
+            level: 4,
+            side: 81,
+            buffer_rows: 256,
+            origin: vec![0.5, -1.0, 2.0],
+            cell: vec![0.25, 0.25, 0.125],
+            data_lo: vec![0.5, -1.0, 2.0],
+            data_hi: vec![20.0, 19.0, 18.0],
+            next_seq: 1001,
+            next_id: 77,
+            bounds: vec![0, 100, 200, 400, 1000],
+            shards: vec![
+                ShardManifest {
+                    flushed_seq: 9,
+                    runs: vec!["seg-0000000001.sfc".into(), "seg-0000000004.sfc".into()],
+                },
+                ShardManifest { flushed_seq: 0, runs: vec![] },
+                ShardManifest {
+                    flushed_seq: 1000,
+                    runs: vec!["seg-0000000002.sfc".into()],
+                },
+                ShardManifest { flushed_seq: 3, runs: vec![] },
+            ],
+            wal: "wal-0000000042.log".into(),
+        };
+        let bytes = encode_manifest(&m).unwrap();
+        assert_eq!(decode_manifest(&bytes).unwrap(), m);
+        for off in 0..bytes.len() {
+            let mut bad_bytes = bytes.clone();
+            bad_bytes[off] ^= 0xFF;
+            assert!(
+                decode_manifest(&bad_bytes).is_err(),
+                "manifest flip at {off} went undetected"
+            );
+        }
+        for cut in 0..bytes.len() {
+            assert!(decode_manifest(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The classic check value for CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

@@ -1,0 +1,524 @@
+//! Filesystem abstraction for the durable store.
+//!
+//! All store I/O goes through the object-safe [`StoreFs`] trait so tests can
+//! substitute a deterministic in-memory filesystem with fault injection.
+//! Two implementations live here:
+//!
+//! * [`RealFs`] — thin shims over `std::fs` for production use.
+//! * [`FailpointFs`] — an in-memory inode model that separates *live* state
+//!   (what the process observes) from *durable* state (what survives a
+//!   crash).  `fsync` copies a file's live bytes to its durable image;
+//!   `sync_dir` commits the live namespace (names → inodes) to the durable
+//!   namespace.  A fuse (`arm`) makes the N-th and every subsequent mutating
+//!   operation fail, modelling a process kill after any prefix of
+//!   writes/fsyncs/renames, and [`FailpointFs::crash`] then rolls the live
+//!   state back to what a real disk could plausibly hold.
+//!
+//! The crash model is deliberately adversarial: un-synced renames and
+//! removes roll back, un-synced file contents revert to the last fsync,
+//! and [`CrashMode::Torn`] leaks a bounded prefix of un-synced appended
+//! bytes (a torn tail) into the durable image.  [`CrashMode::Flushed`]
+//! models the opposite extreme where the page cache made everything
+//! durable just before the kill.  Recovery must cope with every mode.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Object-safe filesystem surface used by the durable store.
+///
+/// Contract notes:
+/// * `write` truncates/creates; `append` creates when missing.
+/// * `fsync` makes a file's current content durable; `sync_dir` makes the
+///   directory's current name set (creations, renames, removals) durable.
+/// * `list` returns file names (not paths) directly under `dir`, sorted.
+pub trait StoreFs: Send + Sync + std::fmt::Debug {
+    fn create_dir_all(&self, path: &Path) -> io::Result<()>;
+    fn write(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()>;
+    fn fsync(&self, path: &Path) -> io::Result<()>;
+    fn sync_dir(&self, path: &Path) -> io::Result<()>;
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()>;
+    fn remove(&self, path: &Path) -> io::Result<()>;
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>>;
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>>;
+    fn exists(&self, path: &Path) -> bool;
+}
+
+/// Production filesystem: direct `std::fs` calls.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RealFs;
+
+impl StoreFs for RealFs {
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        // `create_dir_all` is race-free: concurrent creators both succeed.
+        std::fs::create_dir_all(path)
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        std::fs::write(path, data)
+    }
+
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        f.write_all(data)
+    }
+
+    fn fsync(&self, path: &Path) -> io::Result<()> {
+        std::fs::File::open(path)?.sync_all()
+    }
+
+    fn sync_dir(&self, path: &Path) -> io::Result<()> {
+        // Opening a directory read-only works on unix; on platforms where it
+        // does not, directory durability is best-effort (as with most
+        // portable storage engines).
+        match std::fs::File::open(path) {
+            Ok(f) => match f.sync_all() {
+                Ok(()) => Ok(()),
+                Err(_) => Ok(()),
+            },
+            Err(_) => Ok(()),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        std::fs::read(path)
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                names.push(entry.file_name().to_string_lossy().into_owned());
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        path.exists()
+    }
+}
+
+/// What a simulated crash preserves beyond fsynced state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashMode {
+    /// Exactly the fsynced state survives: un-synced writes, appends,
+    /// renames and removes all roll back.
+    Clean,
+    /// Like `Clean`, but each file additionally keeps up to `n` bytes of
+    /// its un-synced appended tail (a torn write that must be detected).
+    Torn(usize),
+    /// Everything the process wrote survives, synced or not (the page
+    /// cache drained just before the kill).
+    Flushed,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Inode {
+    live: Vec<u8>,
+    durable: Vec<u8>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct SimState {
+    dirs: BTreeSet<String>,
+    /// Live namespace: file name -> inode id.
+    live: BTreeMap<String, u64>,
+    /// Durable namespace, committed by `sync_dir`.
+    durable: BTreeMap<String, u64>,
+    inodes: HashMap<u64, Inode>,
+    next_ino: u64,
+    /// Count of successful mutating operations.
+    ops: u64,
+    /// When `Some(k)`: k more mutating ops succeed, then all fail.
+    fuse: Option<u64>,
+}
+
+/// Deterministic in-memory filesystem with fault injection.
+///
+/// Mutating operations (`create_dir_all`, `write`, `append`, `fsync`,
+/// `sync_dir`, `rename`, `remove`) are counted; [`FailpointFs::arm`] places
+/// a fuse that makes the next operation beyond the given budget — and every
+/// one after it — fail with a "simulated crash" error, without mutating
+/// state.  [`FailpointFs::crash`] then discards non-durable state according
+/// to a [`CrashMode`].
+#[derive(Debug, Default)]
+pub struct FailpointFs {
+    state: Mutex<SimState>,
+}
+
+fn key(path: &Path) -> String {
+    path.to_string_lossy().into_owned()
+}
+
+fn crash_err() -> io::Error {
+    io::Error::new(io::ErrorKind::Other, "failpoint: simulated crash")
+}
+
+fn not_found(path: &Path) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::NotFound,
+        format!("no such file: {}", path.display()),
+    )
+}
+
+impl FailpointFs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Let `budget` more mutating operations succeed; the one after that,
+    /// and every subsequent one, fails without mutating state.
+    pub fn arm(&self, budget: u64) {
+        self.state.lock().unwrap().fuse = Some(budget);
+    }
+
+    /// Remove the fuse; all operations succeed again.
+    pub fn disarm(&self) {
+        self.state.lock().unwrap().fuse = None;
+    }
+
+    /// Number of successful mutating operations so far.
+    pub fn ops(&self) -> u64 {
+        self.state.lock().unwrap().ops
+    }
+
+    /// Simulate a process kill + restart: discard all non-durable state.
+    /// Also disarms any fuse so recovery runs unimpeded (re-`arm` to test
+    /// crashes during recovery itself).
+    pub fn crash(&self, mode: CrashMode) {
+        let mut s = self.state.lock().unwrap();
+        s.fuse = None;
+        if mode == CrashMode::Flushed {
+            s.durable = s.live.clone();
+            let ids: Vec<u64> = s.durable.values().copied().collect();
+            for id in ids {
+                if let Some(inode) = s.inodes.get_mut(&id) {
+                    inode.durable = inode.live.clone();
+                }
+            }
+        }
+        if let CrashMode::Torn(extra) = mode {
+            let ids: Vec<u64> = s.durable.values().copied().collect();
+            for id in ids {
+                if let Some(inode) = s.inodes.get_mut(&id) {
+                    let dlen = inode.durable.len();
+                    let keeps_prefix =
+                        inode.live.len() > dlen && inode.live[..dlen] == inode.durable[..];
+                    if keeps_prefix {
+                        let take = (inode.live.len() - dlen).min(extra);
+                        let tail = inode.live[dlen..dlen + take].to_vec();
+                        inode.durable.extend_from_slice(&tail);
+                    }
+                }
+            }
+        }
+        s.live = s.durable.clone();
+        let referenced: BTreeSet<u64> = s.live.values().copied().collect();
+        s.inodes.retain(|id, _| referenced.contains(id));
+        for inode in s.inodes.values_mut() {
+            inode.live = inode.durable.clone();
+        }
+    }
+
+    /// Deep copy of the current state with counters reset and fuse removed.
+    /// Lets a test branch one history into several futures.
+    pub fn fork(&self) -> FailpointFs {
+        let mut s = self.state.lock().unwrap().clone();
+        s.ops = 0;
+        s.fuse = None;
+        FailpointFs {
+            state: Mutex::new(s),
+        }
+    }
+
+    /// The bytes that would survive a `CrashMode::Clean` crash, if the file
+    /// has a durable directory entry.
+    pub fn durable_bytes(&self, path: &Path) -> Option<Vec<u8>> {
+        let s = self.state.lock().unwrap();
+        let id = s.durable.get(&key(path))?;
+        Some(s.inodes.get(id)?.durable.clone())
+    }
+
+    /// Test hook: place `bytes` at `path` in both live and durable state,
+    /// bypassing op counting.  Used by corruption-fuzz tests to install
+    /// flipped/truncated file images.
+    pub fn install(&self, path: &Path, bytes: &[u8]) {
+        let mut s = self.state.lock().unwrap();
+        let id = s.next_ino;
+        s.next_ino += 1;
+        s.inodes.insert(
+            id,
+            Inode {
+                live: bytes.to_vec(),
+                durable: bytes.to_vec(),
+            },
+        );
+        s.live.insert(key(path), id);
+        s.durable.insert(key(path), id);
+    }
+
+    /// Test hook: remove `path` from both live and durable state without
+    /// op counting.
+    pub fn remove_silent(&self, path: &Path) {
+        let mut s = self.state.lock().unwrap();
+        s.live.remove(&key(path));
+        s.durable.remove(&key(path));
+    }
+
+    fn gate(s: &mut SimState) -> io::Result<()> {
+        match s.fuse {
+            Some(0) => Err(crash_err()),
+            Some(n) => {
+                s.fuse = Some(n - 1);
+                s.ops += 1;
+                Ok(())
+            }
+            None => {
+                s.ops += 1;
+                Ok(())
+            }
+        }
+    }
+}
+
+impl StoreFs for FailpointFs {
+    fn create_dir_all(&self, path: &Path) -> io::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        Self::gate(&mut s)?;
+        let mut p = PathBuf::new();
+        for comp in path.components() {
+            p.push(comp);
+            s.dirs.insert(key(&p));
+        }
+        Ok(())
+    }
+
+    fn write(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        Self::gate(&mut s)?;
+        let k = key(path);
+        match s.live.get(&k).copied() {
+            Some(id) => {
+                // Overwrite in place: the durable image stays whatever the
+                // last fsync captured.
+                if let Some(inode) = s.inodes.get_mut(&id) {
+                    inode.live = data.to_vec();
+                }
+            }
+            None => {
+                let id = s.next_ino;
+                s.next_ino += 1;
+                s.inodes.insert(
+                    id,
+                    Inode {
+                        live: data.to_vec(),
+                        durable: Vec::new(),
+                    },
+                );
+                s.live.insert(k, id);
+            }
+        }
+        Ok(())
+    }
+
+    fn append(&self, path: &Path, data: &[u8]) -> io::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        Self::gate(&mut s)?;
+        let k = key(path);
+        match s.live.get(&k).copied() {
+            Some(id) => {
+                if let Some(inode) = s.inodes.get_mut(&id) {
+                    inode.live.extend_from_slice(data);
+                }
+            }
+            None => {
+                let id = s.next_ino;
+                s.next_ino += 1;
+                s.inodes.insert(
+                    id,
+                    Inode {
+                        live: data.to_vec(),
+                        durable: Vec::new(),
+                    },
+                );
+                s.live.insert(k, id);
+            }
+        }
+        Ok(())
+    }
+
+    fn fsync(&self, path: &Path) -> io::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        Self::gate(&mut s)?;
+        let id = s.live.get(&key(path)).copied().ok_or_else(|| not_found(path))?;
+        if let Some(inode) = s.inodes.get_mut(&id) {
+            inode.durable = inode.live.clone();
+        }
+        Ok(())
+    }
+
+    fn sync_dir(&self, _path: &Path) -> io::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        Self::gate(&mut s)?;
+        s.durable = s.live.clone();
+        Ok(())
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> io::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        Self::gate(&mut s)?;
+        let id = s
+            .live
+            .remove(&key(from))
+            .ok_or_else(|| not_found(from))?;
+        s.live.insert(key(to), id);
+        Ok(())
+    }
+
+    fn remove(&self, path: &Path) -> io::Result<()> {
+        let mut s = self.state.lock().unwrap();
+        Self::gate(&mut s)?;
+        s.live
+            .remove(&key(path))
+            .map(|_| ())
+            .ok_or_else(|| not_found(path))
+    }
+
+    fn read(&self, path: &Path) -> io::Result<Vec<u8>> {
+        let s = self.state.lock().unwrap();
+        let id = s.live.get(&key(path)).copied().ok_or_else(|| not_found(path))?;
+        Ok(s.inodes.get(&id).map(|i| i.live.clone()).unwrap_or_default())
+    }
+
+    fn list(&self, dir: &Path) -> io::Result<Vec<String>> {
+        let s = self.state.lock().unwrap();
+        let mut names = Vec::new();
+        for k in s.live.keys() {
+            let p = Path::new(k);
+            if p.parent() == Some(dir) {
+                if let Some(name) = p.file_name() {
+                    names.push(name.to_string_lossy().into_owned());
+                }
+            }
+        }
+        Ok(names)
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        let s = self.state.lock().unwrap();
+        let k = key(path);
+        s.live.contains_key(&k) || s.dirs.contains(&k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> PathBuf {
+        PathBuf::from(s)
+    }
+
+    #[test]
+    fn unsynced_write_rolls_back() {
+        let fs = FailpointFs::new();
+        fs.create_dir_all(&p("d")).unwrap();
+        fs.write(&p("d/a"), b"one").unwrap();
+        fs.fsync(&p("d/a")).unwrap();
+        fs.sync_dir(&p("d")).unwrap();
+        fs.write(&p("d/a"), b"two-longer").unwrap();
+        fs.crash(CrashMode::Clean);
+        assert_eq!(fs.read(&p("d/a")).unwrap(), b"one");
+    }
+
+    #[test]
+    fn unsynced_create_vanishes_without_dir_sync() {
+        let fs = FailpointFs::new();
+        fs.create_dir_all(&p("d")).unwrap();
+        fs.write(&p("d/a"), b"x").unwrap();
+        fs.fsync(&p("d/a")).unwrap();
+        // no sync_dir: the name was never committed
+        fs.crash(CrashMode::Clean);
+        assert!(fs.read(&p("d/a")).is_err());
+    }
+
+    #[test]
+    fn torn_append_keeps_bounded_prefix() {
+        let fs = FailpointFs::new();
+        fs.create_dir_all(&p("d")).unwrap();
+        fs.write(&p("d/log"), b"HDR").unwrap();
+        fs.fsync(&p("d/log")).unwrap();
+        fs.sync_dir(&p("d")).unwrap();
+        fs.append(&p("d/log"), b"abcdef").unwrap();
+        fs.crash(CrashMode::Torn(4));
+        assert_eq!(fs.read(&p("d/log")).unwrap(), b"HDRabcd");
+        // A second crash must not resurrect more bytes.
+        fs.crash(CrashMode::Clean);
+        assert_eq!(fs.read(&p("d/log")).unwrap(), b"HDRabcd");
+    }
+
+    #[test]
+    fn flushed_crash_keeps_everything() {
+        let fs = FailpointFs::new();
+        fs.create_dir_all(&p("d")).unwrap();
+        fs.write(&p("d/a"), b"x").unwrap();
+        fs.rename(&p("d/a"), &p("d/b")).unwrap();
+        fs.crash(CrashMode::Flushed);
+        assert!(fs.read(&p("d/a")).is_err());
+        assert_eq!(fs.read(&p("d/b")).unwrap(), b"x");
+    }
+
+    #[test]
+    fn unsynced_rename_rolls_back() {
+        let fs = FailpointFs::new();
+        fs.create_dir_all(&p("d")).unwrap();
+        fs.write(&p("d/a"), b"x").unwrap();
+        fs.fsync(&p("d/a")).unwrap();
+        fs.sync_dir(&p("d")).unwrap();
+        fs.rename(&p("d/a"), &p("d/b")).unwrap();
+        fs.crash(CrashMode::Clean);
+        assert_eq!(fs.read(&p("d/a")).unwrap(), b"x");
+        assert!(fs.read(&p("d/b")).is_err());
+    }
+
+    #[test]
+    fn fuse_fails_nth_and_later_ops() {
+        let fs = FailpointFs::new();
+        fs.arm(2);
+        assert!(fs.create_dir_all(&p("d")).is_ok());
+        assert!(fs.write(&p("d/a"), b"x").is_ok());
+        assert!(fs.write(&p("d/b"), b"y").is_err());
+        assert!(fs.fsync(&p("d/a")).is_err());
+        assert_eq!(fs.ops(), 2);
+        fs.disarm();
+        assert!(fs.write(&p("d/b"), b"y").is_ok());
+    }
+
+    #[test]
+    fn fork_is_independent() {
+        let fs = FailpointFs::new();
+        fs.create_dir_all(&p("d")).unwrap();
+        fs.write(&p("d/a"), b"x").unwrap();
+        let g = fs.fork();
+        fs.write(&p("d/a"), b"y").unwrap();
+        assert_eq!(g.read(&p("d/a")).unwrap(), b"x");
+        assert_eq!(g.ops(), 0);
+    }
+}

@@ -30,10 +30,38 @@
 //! Results are exact for the same reason [`SfcIndex`] is: candidates
 //! pass the shared float filter ([`quantize::window_contains`]) before
 //! they are returned.
+//!
+//! ## Durability
+//!
+//! A store created with [`SfcStore::create_durable`] (or reopened with
+//! [`SfcStore::open`]) persists itself under a directory: sorted runs as
+//! checksummed segment files ([`file`]), the write buffer as a
+//! write-ahead log ([`wal`]), and the membership + geometry metadata as
+//! a CRC'd manifest named by the `CURRENT` pointer file. Every mutation
+//! appends a WAL record before touching memory (the fsync of that
+//! append, governed by [`SyncPolicy`], is the acknowledgement);
+//! flush/compact/rebalance write new segment files to temp names,
+//! fsync + rename them, and commit by swapping `CURRENT` to a new
+//! manifest — the single atomic step — then rotate the WAL and delete
+//! unreferenced files. [`SfcStore::open`] replays the WAL's valid
+//! prefix into write-buffer mini-runs (skipping per-shard
+//! `flushed_seq` prefixes already captured in run files) and rebuilds
+//! the exact pre-crash snapshot. All I/O goes through the [`StoreFs`]
+//! trait, so the recovery tests drive a [`FailpointFs`] that kills the
+//! process model after any prefix of writes/fsyncs/renames.
+//!
+//! Durable mutations are serialized by one store-wide mutex (the
+//! in-memory, non-durable path keeps its finer per-shard locking and
+//! pays nothing), and their fallible `try_*` forms return `io::Error`;
+//! a failed durable mutation is **not acknowledged** and the store
+//! should be dropped and reopened.
 
+pub mod file;
+pub mod fs;
 pub mod segment;
 pub mod planner;
 pub(crate) mod shard;
+pub mod wal;
 
 use crate::apps::Matrix;
 use crate::curves::engine::{with_cells_scratch, CurveMapperNd, DomainNd};
@@ -43,13 +71,17 @@ use crate::curves::neighbor::{NeighborFinder, NeighborPath};
 use crate::index::knn::{expanding_knn, merge_ranges, subtract_ranges};
 use crate::index::quantize::{clamped_level, window_contains, Quantizer};
 use crate::index::QueryStats;
+pub use fs::{CrashMode, FailpointFs, RealFs, StoreFs};
 use planner::{plan_window, QueryPlan, ShardProbe};
 use segment::Segment;
 use shard::ShardState;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
+use std::io;
 use std::ops::Range;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+pub use wal::SyncPolicy;
 
 /// Tuning knobs of an [`SfcStore`].
 #[derive(Copy, Clone, Debug)]
@@ -143,6 +175,50 @@ fn shard_of(bounds: &[u64], key: u64) -> usize {
     bounds[1..slots].partition_point(|&b| b <= key)
 }
 
+/// The durable half of a store: filesystem handle, directory, sync
+/// policy, and the mutex-guarded bookkeeping below. The mutex doubles
+/// as the serializer of **all** durable mutations — WAL ordering, file
+/// numbering and manifest generations all assume one writer at a time.
+struct Durability {
+    fs: Arc<dyn StoreFs>,
+    dir: PathBuf,
+    sync: SyncPolicy,
+    state: Mutex<DurState>,
+}
+
+/// Mutable durable-side bookkeeping (guarded by [`Durability::state`]).
+struct DurState {
+    /// Generation of the manifest `CURRENT` points at.
+    gen: u64,
+    /// Live WAL file name.
+    wal_name: String,
+    /// WAL records appended since the last fsync (for `EveryN`).
+    unsynced: u64,
+    /// Next file number for `seg-*`/`wal-*` names (monotone, never
+    /// reused).
+    next_file: u64,
+    /// Per-shard replay high-water marks: entries with `seq <=
+    /// flushed_seq[s]` routed to shard `s` are fully contained in its
+    /// run files.
+    flushed_seq: Vec<u64>,
+    /// Per-shard persisted run file names, parallel to the in-memory
+    /// `ShardState::runs`.
+    shard_runs: Vec<Vec<String>>,
+    /// Segment identity → persisted file name. Keyed by `Arc` pointer;
+    /// the held `Arc` keeps the allocation alive so a key can never be
+    /// reused while its entry exists.
+    seg_files: HashMap<usize, (String, Arc<Segment>)>,
+    /// Files superseded by the last manifest swap, deleted (best-effort)
+    /// right after it commits.
+    old_files: Vec<String>,
+}
+
+/// `seg-NNNNNNNNNN.sfc` / `wal-NNNNNNNNNN.log` → `N`.
+fn parse_file_number(name: &str) -> Option<u64> {
+    let rest = name.split_once('-')?.1;
+    rest.split('.').next()?.parse().ok()
+}
+
 /// Sharded, mutable, concurrently-readable SFC store over `n×d` float
 /// rows (see the [module docs](self) for the segment/shard/epoch
 /// design).
@@ -164,6 +240,8 @@ pub struct SfcStore {
     published: Mutex<Arc<Snapshot>>,
     next_seq: AtomicU64,
     next_id: AtomicU32,
+    /// `Some` when the store persists itself (see the module docs).
+    durability: Option<Durability>,
 }
 
 impl SfcStore {
@@ -213,6 +291,7 @@ impl SfcStore {
             published: Mutex::new(Arc::new(snapshot)),
             next_seq: AtomicU64::new(1),
             next_id: AtomicU32::new(0),
+            durability: None,
         }
     }
 
@@ -309,46 +388,83 @@ impl SfcStore {
     // Mutation
     // ------------------------------------------------------------------
 
-    /// Insert one row, returning its assigned id.
+    /// Insert one row, returning its assigned id. Panics on durable I/O
+    /// failure — use [`SfcStore::try_insert`] to handle it.
     pub fn insert(&self, point: &[f32]) -> u32 {
+        self.try_insert(point).expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::insert`]. On `Err` the mutation is **not
+    /// acknowledged** (its WAL record never became durable); the id is
+    /// still consumed.
+    pub fn try_insert(&self, point: &[f32]) -> io::Result<u32> {
         assert_eq!(point.len(), self.dims, "row dims must match the store");
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let m = Matrix { rows: 1, cols: self.dims, data: point.to_vec() };
-        self.apply(vec![id], m, false);
-        id
+        self.apply(vec![id], m, false)?;
+        Ok(id)
     }
 
     /// Insert a batch of rows; ids are assigned sequentially and the
-    /// first one is returned.
+    /// first one is returned. Panics on durable I/O failure — use
+    /// [`SfcStore::try_insert_batch`] to handle it.
     pub fn insert_batch(&self, rows: &Matrix) -> u32 {
+        self.try_insert_batch(rows).expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::insert_batch`].
+    pub fn try_insert_batch(&self, rows: &Matrix) -> io::Result<u32> {
         assert_eq!(rows.cols, self.dims, "row dims must match the store");
         let n = rows.rows as u32;
         let first = self.next_id.fetch_add(n, Ordering::Relaxed);
         if n == 0 {
-            return first;
+            return Ok(first);
         }
-        self.apply((first..first + n).collect(), rows.clone(), false);
-        first
+        self.apply((first..first + n).collect(), rows.clone(), false)?;
+        Ok(first)
     }
 
     /// Delete the point `id` by writing a tombstone. `point` must be the
     /// row that was inserted under `id` — the tombstone takes its curve
     /// key from it, which is what guarantees any range probe that can
-    /// see the insert also sees the delete.
+    /// see the insert also sees the delete. Panics on durable I/O
+    /// failure — use [`SfcStore::try_delete`] to handle it.
     pub fn delete(&self, id: u32, point: &[f32]) {
+        self.try_delete(id, point).expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::delete`].
+    pub fn try_delete(&self, id: u32, point: &[f32]) -> io::Result<()> {
         assert_eq!(point.len(), self.dims, "row dims must match the store");
         let m = Matrix { rows: 1, cols: self.dims, data: point.to_vec() };
-        self.apply(vec![id], m, true);
+        self.apply(vec![id], m, true)
     }
 
     /// Route a batch to shards and append per-shard mini-runs, then
     /// publish the new epoch.
-    fn apply(&self, ids: Vec<u32>, points: Matrix, tomb: bool) {
+    ///
+    /// Durable stores write (and per [`SyncPolicy`] fsync) one WAL
+    /// record **before** the in-memory append — that is the commit
+    /// point: an `Err` from it leaves memory untouched and the batch
+    /// unacknowledged. If the append auto-flushes shards, their new runs
+    /// are persisted and a manifest committed afterwards; an `Err`
+    /// there leaves the batch applied in memory and recoverable from
+    /// the WAL.
+    fn apply(&self, ids: Vec<u32>, points: Matrix, tomb: bool) -> io::Result<()> {
         let n = points.rows;
+        if n == 0 {
+            return Ok(());
+        }
+        // Serialize durable mutations (no-op guard on in-memory stores);
+        // lock order dur → routing → shard → published.
+        let mut dur = self.lock_dur();
         let seq0 = self.next_seq.fetch_add(n as u64, Ordering::Relaxed);
         // Hold routing (read) across the whole append so a concurrent
         // rebalance cannot re-cut the key space under this batch.
         let routing = self.routing.read().expect("store lock poisoned");
+        if let Some(st) = dur.as_deref_mut() {
+            self.wal_append(st, tomb, seq0, &ids, &points)?;
+        }
         let mut keys = Vec::with_capacity(n);
         with_cells_scratch(|flat| {
             self.quant.cells_block(&points, flat);
@@ -369,6 +485,7 @@ impl SfcStore {
         }
         let mut touched: Vec<usize> = groups.keys().copied().collect();
         touched.sort_unstable();
+        let mut flushed: Vec<(usize, Vec<Arc<Segment>>)> = Vec::new();
         for s in touched {
             let (gids, grows, gseqs) = groups.remove(&s).expect("key from keys()");
             let mut seg =
@@ -379,9 +496,24 @@ impl SfcStore {
             // first would let a faster sibling writer publish a newer
             // list that this one then clobbers with a stale epoch.
             let mut state = self.shards[s].lock().expect("store lock poisoned");
-            state.append(seg, self.buffer_rows, self.dims);
+            let did_flush = state.append(seg, self.buffer_rows, self.dims);
+            if did_flush && dur.is_some() {
+                flushed.push((s, state.runs.clone()));
+            }
             self.publish_shard(s, state.segments(), Some(&points));
         }
+        if let Some(st) = dur.as_deref_mut() {
+            if !flushed.is_empty() {
+                // An auto-flush absorbed these shards' buffers into runs:
+                // every seq routed to them so far is run-resident.
+                let high = self.next_seq.load(Ordering::Relaxed) - 1;
+                for (s, runs) in &flushed {
+                    self.persist_shard_runs(st, *s, runs, high)?;
+                }
+                self.write_manifest(st)?;
+            }
+        }
+        Ok(())
     }
 
     /// Swap shard `s`'s segment list into the published epoch (and grow
@@ -406,49 +538,103 @@ impl SfcStore {
         *g = Arc::new(snap);
     }
 
-    /// Flush every shard's write buffer into sorted runs.
+    /// Flush every shard's write buffer into sorted runs. Panics on
+    /// durable I/O failure — use [`SfcStore::try_flush`] to handle it.
     pub fn flush(&self) {
-        let _routing = self.routing.read().expect("store lock poisoned");
-        for s in 0..self.shards.len() {
-            let mut state = self.shards[s].lock().expect("store lock poisoned");
-            state.flush(self.dims);
-            self.publish_shard(s, state.segments(), None);
+        self.try_flush().expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::flush`]. On durable stores this persists
+    /// every shard's runs, rotates the WAL and commits a manifest.
+    pub fn try_flush(&self) -> io::Result<()> {
+        let mut dur = self.lock_dur();
+        let mut all_runs: Vec<Vec<Arc<Segment>>> = Vec::new();
+        {
+            let _routing = self.routing.read().expect("store lock poisoned");
+            for s in 0..self.shards.len() {
+                let mut state = self.shards[s].lock().expect("store lock poisoned");
+                state.flush(self.dims);
+                if dur.is_some() {
+                    all_runs.push(state.runs.clone());
+                }
+                self.publish_shard(s, state.segments(), None);
+            }
         }
+        if let Some(st) = dur.as_deref_mut() {
+            self.persist_structural(st, &all_runs)?;
+        }
+        Ok(())
     }
 
     /// Fully compact every shard: one sorted, tombstone-free run each.
     /// In-flight queries keep their pre-compaction snapshots alive and
-    /// are unaffected.
+    /// are unaffected. Panics on durable I/O failure — use
+    /// [`SfcStore::try_compact`] to handle it.
     pub fn compact(&self) {
-        let _routing = self.routing.read().expect("store lock poisoned");
-        for s in 0..self.shards.len() {
-            let mut state = self.shards[s].lock().expect("store lock poisoned");
-            state.compact(self.dims);
-            self.publish_shard(s, state.segments(), None);
+        self.try_compact().expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::compact`].
+    pub fn try_compact(&self) -> io::Result<()> {
+        let mut dur = self.lock_dur();
+        let mut all_runs: Vec<Vec<Arc<Segment>>> = Vec::new();
+        {
+            let _routing = self.routing.read().expect("store lock poisoned");
+            for s in 0..self.shards.len() {
+                let mut state = self.shards[s].lock().expect("store lock poisoned");
+                state.compact(self.dims);
+                if dur.is_some() {
+                    all_runs.push(state.runs.clone());
+                }
+                self.publish_shard(s, state.segments(), None);
+            }
         }
+        if let Some(st) = dur.as_deref_mut() {
+            self.persist_structural(st, &all_runs)?;
+        }
+        Ok(())
     }
 
     /// Re-cut the shard fenceposts **equi-depth** over the live keys and
     /// redistribute every entry. Exclusive with writers (takes the
-    /// routing write lock); readers keep their old snapshots.
+    /// routing write lock); readers keep their old snapshots. Panics on
+    /// durable I/O failure — use [`SfcStore::try_rebalance`] to handle
+    /// it.
     pub fn rebalance(&self) {
-        let mut routing = self.routing.write().expect("store lock poisoned");
-        let mut guards: Vec<_> = self
-            .shards
-            .iter()
-            .map(|s| s.lock().expect("store lock poisoned"))
-            .collect();
-        // Full-merge everything into one resolved, tombstone-free run.
-        let all: Vec<Arc<Segment>> = guards.iter().flat_map(|g| g.segments()).collect();
-        let refs: Vec<&Segment> = all.iter().map(|s| s.as_ref()).collect();
-        let merged = Segment::merge(&refs, true, self.dims);
-        // Cut the merged run at the new fenceposts.
-        let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
-        let cuts = cut_positions(&merged.keys, &bounds);
-        let per_shard: Vec<Vec<Arc<Segment>>> = (0..self.shards.len())
-            .map(|s| cut_slice(&merged, cuts[s], cuts[s + 1], self.dims))
-            .collect();
-        self.install_rebalanced(&mut routing, &mut guards, bounds, per_shard);
+        self.try_rebalance().expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::rebalance`].
+    pub fn try_rebalance(&self) -> io::Result<()> {
+        let mut dur = self.lock_dur();
+        {
+            let mut routing = self.routing.write().expect("store lock poisoned");
+            let mut guards: Vec<_> = self
+                .shards
+                .iter()
+                .map(|s| s.lock().expect("store lock poisoned"))
+                .collect();
+            // Full-merge everything into one resolved, tombstone-free run.
+            let all: Vec<Arc<Segment>> = guards.iter().flat_map(|g| g.segments()).collect();
+            let refs: Vec<&Segment> = all.iter().map(|s| s.as_ref()).collect();
+            let merged = Segment::merge(&refs, true, self.dims);
+            // Cut the merged run at the new fenceposts.
+            let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
+            let cuts = cut_positions(&merged.keys, &bounds);
+            let per_shard: Vec<Vec<Arc<Segment>>> = (0..self.shards.len())
+                .map(|s| cut_slice(&merged, cuts[s], cuts[s + 1], self.dims))
+                .collect();
+            self.install_rebalanced(&mut routing, &mut guards, bounds, per_shard);
+        }
+        if let Some(st) = dur.as_deref_mut() {
+            let all_runs: Vec<Vec<Arc<Segment>>> = self
+                .shards
+                .iter()
+                .map(|m| m.lock().expect("store lock poisoned").runs.clone())
+                .collect();
+            self.persist_structural(st, &all_runs)?;
+        }
+        Ok(())
     }
 
     /// Swap the rebalanced per-shard runs, fenceposts, and published
@@ -487,13 +673,31 @@ impl SfcStore {
     /// (the same shard → published order every writer uses) — so any
     /// thread count converges to exactly the serial path's state.
     pub fn par_flush(&self, coord: &crate::coordinator::Coordinator) {
-        let _routing = self.routing.read().expect("store lock poisoned");
-        let shards: Vec<usize> = (0..self.shards.len()).collect();
-        coord.par_map(&shards, |_, &s| {
-            let mut state = self.shards[s].lock().expect("store lock poisoned");
-            state.flush(self.dims);
-            self.publish_shard(s, state.segments(), None);
-        });
+        self.try_par_flush(coord).expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::par_flush`] (the per-shard merges run in
+    /// parallel; persistence is serial under the durability mutex).
+    pub fn try_par_flush(&self, coord: &crate::coordinator::Coordinator) -> io::Result<()> {
+        let mut dur = self.lock_dur();
+        {
+            let _routing = self.routing.read().expect("store lock poisoned");
+            let shards: Vec<usize> = (0..self.shards.len()).collect();
+            coord.par_map(&shards, |_, &s| {
+                let mut state = self.shards[s].lock().expect("store lock poisoned");
+                state.flush(self.dims);
+                self.publish_shard(s, state.segments(), None);
+            });
+        }
+        if let Some(st) = dur.as_deref_mut() {
+            let all_runs: Vec<Vec<Arc<Segment>>> = self
+                .shards
+                .iter()
+                .map(|m| m.lock().expect("store lock poisoned").runs.clone())
+                .collect();
+            self.persist_structural(st, &all_runs)?;
+        }
+        Ok(())
     }
 
     /// [`SfcStore::compact`] with the per-shard full merges fanned
@@ -502,13 +706,30 @@ impl SfcStore {
     /// thread count). In-flight queries keep their pre-compaction
     /// snapshots alive and are unaffected.
     pub fn par_compact(&self, coord: &crate::coordinator::Coordinator) {
-        let _routing = self.routing.read().expect("store lock poisoned");
-        let shards: Vec<usize> = (0..self.shards.len()).collect();
-        coord.par_map(&shards, |_, &s| {
-            let mut state = self.shards[s].lock().expect("store lock poisoned");
-            state.compact(self.dims);
-            self.publish_shard(s, state.segments(), None);
-        });
+        self.try_par_compact(coord).expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::par_compact`].
+    pub fn try_par_compact(&self, coord: &crate::coordinator::Coordinator) -> io::Result<()> {
+        let mut dur = self.lock_dur();
+        {
+            let _routing = self.routing.read().expect("store lock poisoned");
+            let shards: Vec<usize> = (0..self.shards.len()).collect();
+            coord.par_map(&shards, |_, &s| {
+                let mut state = self.shards[s].lock().expect("store lock poisoned");
+                state.compact(self.dims);
+                self.publish_shard(s, state.segments(), None);
+            });
+        }
+        if let Some(st) = dur.as_deref_mut() {
+            let all_runs: Vec<Vec<Arc<Segment>>> = self
+                .shards
+                .iter()
+                .map(|m| m.lock().expect("store lock poisoned").runs.clone())
+                .collect();
+            self.persist_structural(st, &all_runs)?;
+        }
+        Ok(())
     }
 
     /// [`SfcStore::rebalance`] with the merge fanned across the
@@ -523,25 +744,42 @@ impl SfcStore {
     /// order, so the result is **byte-identical** to the serial
     /// all-at-once merge for any thread count.
     pub fn par_rebalance(&self, coord: &crate::coordinator::Coordinator) {
-        let mut routing = self.routing.write().expect("store lock poisoned");
-        let mut guards: Vec<_> = self
-            .shards
-            .iter()
-            .map(|s| s.lock().expect("store lock poisoned"))
-            .collect();
-        let stacks: Vec<Vec<Arc<Segment>>> = guards.iter().map(|g| g.segments()).collect();
-        let shard_runs: Vec<Segment> = coord.par_map(&stacks, |_, stack| {
-            let refs: Vec<&Segment> = stack.iter().map(|s| s.as_ref()).collect();
-            Segment::merge(&refs, false, self.dims)
-        });
-        let refs: Vec<&Segment> = shard_runs.iter().collect();
-        let merged = Segment::merge(&refs, true, self.dims);
-        let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
-        let cuts = cut_positions(&merged.keys, &bounds);
-        let shard_ids: Vec<usize> = (0..self.shards.len()).collect();
-        let per_shard: Vec<Vec<Arc<Segment>>> =
-            coord.par_map(&shard_ids, |_, &s| cut_slice(&merged, cuts[s], cuts[s + 1], self.dims));
-        self.install_rebalanced(&mut routing, &mut guards, bounds, per_shard);
+        self.try_par_rebalance(coord).expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::par_rebalance`].
+    pub fn try_par_rebalance(&self, coord: &crate::coordinator::Coordinator) -> io::Result<()> {
+        let mut dur = self.lock_dur();
+        {
+            let mut routing = self.routing.write().expect("store lock poisoned");
+            let mut guards: Vec<_> = self
+                .shards
+                .iter()
+                .map(|s| s.lock().expect("store lock poisoned"))
+                .collect();
+            let stacks: Vec<Vec<Arc<Segment>>> = guards.iter().map(|g| g.segments()).collect();
+            let shard_runs: Vec<Segment> = coord.par_map(&stacks, |_, stack| {
+                let refs: Vec<&Segment> = stack.iter().map(|s| s.as_ref()).collect();
+                Segment::merge(&refs, false, self.dims)
+            });
+            let refs: Vec<&Segment> = shard_runs.iter().collect();
+            let merged = Segment::merge(&refs, true, self.dims);
+            let bounds = equi_depth_bounds(&merged.keys, self.shards.len(), self.span);
+            let cuts = cut_positions(&merged.keys, &bounds);
+            let shard_ids: Vec<usize> = (0..self.shards.len()).collect();
+            let per_shard: Vec<Vec<Arc<Segment>>> = coord
+                .par_map(&shard_ids, |_, &s| cut_slice(&merged, cuts[s], cuts[s + 1], self.dims));
+            self.install_rebalanced(&mut routing, &mut guards, bounds, per_shard);
+        }
+        if let Some(st) = dur.as_deref_mut() {
+            let all_runs: Vec<Vec<Arc<Segment>>> = self
+                .shards
+                .iter()
+                .map(|m| m.lock().expect("store lock poisoned").runs.clone())
+                .collect();
+            self.persist_structural(st, &all_runs)?;
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -869,6 +1107,512 @@ impl SfcStore {
         }
         (ids, rows)
     }
+
+    // ------------------------------------------------------------------
+    // Durability
+    // ------------------------------------------------------------------
+
+    /// Whether this store persists itself to a directory.
+    pub fn is_durable(&self) -> bool {
+        self.durability.is_some()
+    }
+
+    /// The backing directory of a durable store.
+    pub fn dir(&self) -> Option<&Path> {
+        self.durability.as_ref().map(|d| d.dir.as_path())
+    }
+
+    /// Create a **durable** store at `dir` on the real filesystem (see
+    /// [`SfcStore::create_durable`] for the injectable-fs form). Fails
+    /// if `dir` already holds a store.
+    #[allow(clippy::too_many_arguments)]
+    pub fn create(
+        dir: impl AsRef<Path>,
+        dims: usize,
+        level: u32,
+        kind: CurveKind,
+        origin: Vec<f32>,
+        max: &[f32],
+        cfg: StoreConfig,
+        sync: SyncPolicy,
+    ) -> io::Result<SfcStore> {
+        Self::create_durable(dir, Arc::new(RealFs), dims, level, kind, origin, max, cfg, sync)
+    }
+
+    /// Reopen a durable store from `dir` on the real filesystem,
+    /// replaying the WAL into write-buffer mini-runs and rebuilding the
+    /// pre-crash snapshot (see [`SfcStore::open_durable`]).
+    pub fn open(dir: impl AsRef<Path>) -> io::Result<SfcStore> {
+        Self::open_durable(dir, Arc::new(RealFs), SyncPolicy::Always)
+    }
+
+    /// [`SfcStore::open`] with an explicit [`SyncPolicy`] for subsequent
+    /// writes.
+    pub fn open_with(dir: impl AsRef<Path>, sync: SyncPolicy) -> io::Result<SfcStore> {
+        Self::open_durable(dir, Arc::new(RealFs), sync)
+    }
+
+    /// Create a durable store at `dir` over an arbitrary [`StoreFs`].
+    /// Writes the initial (empty) WAL and manifest before returning, so
+    /// a crash at any later point finds a well-formed store.
+    #[allow(clippy::too_many_arguments)]
+    pub fn create_durable(
+        dir: impl AsRef<Path>,
+        fs: Arc<dyn StoreFs>,
+        dims: usize,
+        level: u32,
+        kind: CurveKind,
+        origin: Vec<f32>,
+        max: &[f32],
+        cfg: StoreConfig,
+        sync: SyncPolicy,
+    ) -> io::Result<SfcStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let mut store = Self::new(dims, level, kind, origin, max, cfg);
+        fs.create_dir_all(&dir)?;
+        if fs.exists(&dir.join("CURRENT")) {
+            return Err(io::Error::new(
+                io::ErrorKind::AlreadyExists,
+                format!("{} already holds a store", dir.display()),
+            ));
+        }
+        let shards = store.shards.len();
+        store.durability = Some(Durability {
+            fs,
+            dir,
+            sync,
+            state: Mutex::new(DurState {
+                gen: 0,
+                wal_name: String::new(),
+                unsynced: 0,
+                next_file: 0,
+                flushed_seq: vec![0; shards],
+                shard_runs: vec![Vec::new(); shards],
+                seg_files: HashMap::new(),
+                old_files: Vec::new(),
+            }),
+        });
+        {
+            let mut guard = store.lock_dur().expect("durability just installed");
+            let st = &mut *guard;
+            store.rotate_wal(st, &[])?;
+            store.write_manifest(st)?;
+        }
+        Ok(store)
+    }
+
+    /// Open a durable store from `dir` over an arbitrary [`StoreFs`]:
+    /// read `CURRENT` → manifest, decode + validate every referenced
+    /// segment file, replay the WAL's valid record prefix into
+    /// write-buffer mini-runs (skipping per-shard `flushed_seq`
+    /// prefixes already captured in runs), truncate a torn WAL tail by
+    /// rotation, and delete orphaned files from interrupted
+    /// flushes/compactions. Corruption anywhere yields a clean
+    /// `InvalidData` error — never a panic, never wrong rows.
+    pub fn open_durable(
+        dir: impl AsRef<Path>,
+        fs: Arc<dyn StoreFs>,
+        sync: SyncPolicy,
+    ) -> io::Result<SfcStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let cur_raw = fs.read(&dir.join("CURRENT"))?;
+        let man_name = std::str::from_utf8(&cur_raw)
+            .map_err(|_| file::bad("CURRENT is not utf-8"))?
+            .trim()
+            .to_string();
+        if !man_name.starts_with("MANIFEST-") || man_name.contains(['/', '\\', '\0']) {
+            return Err(file::bad(format!("CURRENT names {man_name:?}")));
+        }
+        let man = file::decode_manifest(&fs.read(&dir.join(&man_name))?)?;
+        if man.level != clamped_level(man.kind, man.dims, man.level) {
+            return Err(file::bad(format!(
+                "manifest level {} out of range for {} in {}d",
+                man.level,
+                man.kind.name(),
+                man.dims
+            )));
+        }
+        let mapper = man.kind.nd_mapper(man.dims, man.level);
+        let side = match mapper.domain_nd() {
+            DomainNd::HyperRect { shape } => shape[0],
+            _ => unreachable!("nd_mapper domains are hyperrects"),
+        };
+        if side != man.side {
+            return Err(file::bad(format!(
+                "manifest side {} disagrees with curve {} level {} (side {side})",
+                man.side,
+                man.kind.name(),
+                man.level
+            )));
+        }
+        let span = mapper.order_span_nd().expect("nd_mapper spans are finite");
+        let quant = man.quantizer();
+
+        // Decode every referenced run file.
+        let shards_n = man.shards.len();
+        let mut states: Vec<ShardState> = Vec::with_capacity(shards_n);
+        let mut seg_files: HashMap<usize, (String, Arc<Segment>)> = HashMap::new();
+        let mut next_file = man.gen + 1; // wal/manifest numbering floor
+        for sm in &man.shards {
+            let mut runs = Vec::with_capacity(sm.runs.len());
+            for name in &sm.runs {
+                let bytes = fs
+                    .read(&dir.join(name))
+                    .map_err(|e| file::bad(format!("run file {name}: {e}")))?;
+                let seg = Arc::new(file::decode_segment(&bytes, man.dims).map_err(|e| {
+                    file::bad(format!("run file {name}: {e}"))
+                })?);
+                seg_files.insert(Arc::as_ptr(&seg) as usize, (name.clone(), Arc::clone(&seg)));
+                if let Some(num) = parse_file_number(name) {
+                    next_file = next_file.max(num + 1);
+                }
+                runs.push(seg);
+            }
+            states.push(ShardState { minis: Vec::new(), runs, mini_rows: 0 });
+        }
+        if let Some(num) = parse_file_number(&man.wal) {
+            next_file = next_file.max(num + 1);
+        }
+
+        // Parse the WAL's valid prefix and replay it into mini-runs.
+        let wal_bytes = fs.read(&dir.join(&man.wal))?;
+        let contents = wal::parse(&wal_bytes, man.dims)?;
+        let mut next_seq = man.next_seq;
+        let mut next_id = man.next_id;
+        let mut data_lo = man.data_lo.clone();
+        let mut data_hi = man.data_hi.clone();
+        for rec in &contents.records {
+            let n = rec.points.rows;
+            let mut keys = Vec::with_capacity(n);
+            with_cells_scratch(|flat| {
+                quant.cells_block(&rec.points, flat);
+                mapper.order_batch_nd(flat, &mut keys);
+            });
+            let mut groups: HashMap<usize, (Vec<u32>, Matrix, Vec<u64>)> = HashMap::new();
+            for p in 0..n {
+                let seq = rec.seq0 + p as u64;
+                next_seq = next_seq.max(seq + 1);
+                next_id = next_id.max(rec.ids[p].saturating_add(1));
+                for (a, &v) in rec.points.row(p).iter().enumerate() {
+                    data_lo[a] = data_lo[a].min(v);
+                    data_hi[a] = data_hi[a].max(v);
+                }
+                let s = shard_of(&man.bounds, keys[p]);
+                if seq <= man.shards[s].flushed_seq {
+                    // Already captured in this shard's run files. The skip
+                    // set is a per-shard seq prefix, so a tombstone can
+                    // never be skipped while the insert it cancels is
+                    // replayed.
+                    continue;
+                }
+                let g = groups
+                    .entry(s)
+                    .or_insert_with(|| (Vec::new(), Matrix::zeros(0, man.dims), Vec::new()));
+                g.0.push(rec.ids[p]);
+                g.1.data.extend_from_slice(rec.points.row(p));
+                g.1.rows += 1;
+                g.2.push(seq);
+            }
+            let mut touched: Vec<usize> = groups.keys().copied().collect();
+            touched.sort_unstable();
+            for s in touched {
+                let (gids, grows, gseqs) = groups.remove(&s).expect("key from keys()");
+                let mut seg =
+                    Segment::from_rows(mapper.as_ref(), &quant, gids, grows, rec.tomb, 0);
+                seg.seqs = gseqs;
+                // Plain push, no auto-flush: replay reproduces the
+                // pre-crash write buffer; the next append flushes if it
+                // is over budget.
+                states[s].mini_rows += seg.rows();
+                states[s].minis.push(Arc::new(seg));
+            }
+        }
+
+        let mut snapshot = Snapshot {
+            bounds: man.bounds.clone(),
+            shards: states.iter().map(|st| Arc::new(st.segments())).collect(),
+            data_lo,
+            data_hi,
+            entries: 0,
+        };
+        snapshot.recount();
+        let store = SfcStore {
+            kind: man.kind,
+            level: man.level,
+            dims: man.dims,
+            quant,
+            mapper,
+            span,
+            buffer_rows: man.buffer_rows.max(1),
+            routing: RwLock::new(man.bounds.clone()),
+            shards: states.into_iter().map(Mutex::new).collect(),
+            published: Mutex::new(Arc::new(snapshot)),
+            next_seq: AtomicU64::new(next_seq),
+            next_id: AtomicU32::new(next_id),
+            durability: Some(Durability {
+                fs,
+                dir,
+                sync,
+                state: Mutex::new(DurState {
+                    gen: man.gen,
+                    wal_name: man.wal.clone(),
+                    unsynced: 0,
+                    next_file,
+                    flushed_seq: man.shards.iter().map(|s| s.flushed_seq).collect(),
+                    shard_runs: man.shards.iter().map(|s| s.runs.clone()).collect(),
+                    seg_files,
+                    old_files: Vec::new(),
+                }),
+            }),
+        };
+
+        if contents.torn {
+            // Truncate the torn tail by rewriting the valid prefix into a
+            // fresh WAL and committing a manifest that references it.
+            let mut guard = store.lock_dur().expect("durable");
+            let st = &mut *guard;
+            store.rotate_wal(st, &wal_bytes[wal::WAL_HEADER_LEN..contents.valid_len])?;
+            store.write_manifest(st)?;
+        }
+        store.cleanup_orphans()?;
+        Ok(store)
+    }
+
+    /// Make any unsynced WAL tail durable (a no-op under
+    /// `SyncPolicy::Always` or on in-memory stores).
+    pub fn sync(&self) -> io::Result<()> {
+        if let Some(d) = &self.durability {
+            let mut st = d.state.lock().expect("store lock poisoned");
+            if st.unsynced > 0 {
+                d.fs.fsync(&d.dir.join(&st.wal_name))?;
+                st.unsynced = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Close the store: sync the WAL tail and drop. (Dropping without
+    /// `close` loses nothing under `SyncPolicy::Always`; under the lazy
+    /// policies it can lose the unsynced tail — exactly like a crash.)
+    pub fn close(self) -> io::Result<()> {
+        self.sync()
+    }
+
+    /// Serialize durable mutations; `None` on in-memory stores.
+    fn lock_dur(&self) -> Option<MutexGuard<'_, DurState>> {
+        self.durability
+            .as_ref()
+            .map(|d| d.state.lock().expect("store lock poisoned"))
+    }
+
+    fn dur(&self) -> &Durability {
+        self.durability.as_ref().expect("durable-only path")
+    }
+
+    /// Append one record to the WAL and fsync per policy — the commit
+    /// point of [`SfcStore::apply`] on durable stores.
+    fn wal_append(
+        &self,
+        st: &mut DurState,
+        tomb: bool,
+        seq0: u64,
+        ids: &[u32],
+        points: &Matrix,
+    ) -> io::Result<()> {
+        let d = self.dur();
+        let rec = wal::encode_record(tomb, seq0, ids, points)?;
+        let path = d.dir.join(&st.wal_name);
+        d.fs.append(&path, &rec)?;
+        st.unsynced += 1;
+        let do_sync = match d.sync {
+            SyncPolicy::Always => true,
+            SyncPolicy::EveryN(k) => st.unsynced >= k as u64,
+            SyncPolicy::Never => false,
+        };
+        if do_sync {
+            d.fs.fsync(&path)?;
+            st.unsynced = 0;
+        }
+        Ok(())
+    }
+
+    /// Persist one segment (temp file + fsync + rename), memoized by
+    /// segment identity so shared `Arc`s write once.
+    fn persist_segment(&self, st: &mut DurState, seg: &Arc<Segment>) -> io::Result<String> {
+        let d = self.dur();
+        let ptr = Arc::as_ptr(seg) as usize;
+        if let Some((name, _)) = st.seg_files.get(&ptr) {
+            return Ok(name.clone());
+        }
+        let name = format!("seg-{:010}.sfc", st.next_file);
+        st.next_file += 1;
+        let bytes = file::encode_segment(seg, self.dims)?;
+        let tmp = d.dir.join(format!("{name}.tmp"));
+        d.fs.write(&tmp, &bytes)?;
+        d.fs.fsync(&tmp)?;
+        d.fs.rename(&tmp, &d.dir.join(&name))?;
+        st.seg_files.insert(ptr, (name.clone(), Arc::clone(seg)));
+        Ok(name)
+    }
+
+    /// Persist shard `s`'s run stack and advance its replay high-water
+    /// mark. (Callers pick `flushed_seq`: after any operation that
+    /// absorbed the shard's write buffer it is `next_seq − 1`.)
+    fn persist_shard_runs(
+        &self,
+        st: &mut DurState,
+        s: usize,
+        runs: &[Arc<Segment>],
+        flushed_seq: u64,
+    ) -> io::Result<()> {
+        let mut names = Vec::with_capacity(runs.len());
+        for seg in runs {
+            names.push(self.persist_segment(st, seg)?);
+        }
+        st.shard_runs[s] = names;
+        st.flushed_seq[s] = flushed_seq;
+        Ok(())
+    }
+
+    /// Shared durable tail of flush/compact/rebalance: persist every
+    /// shard's runs, rotate the WAL (the buffers are now empty) and
+    /// commit one manifest.
+    fn persist_structural(
+        &self,
+        st: &mut DurState,
+        all_runs: &[Vec<Arc<Segment>>],
+    ) -> io::Result<()> {
+        let high = self.next_seq.load(Ordering::Relaxed).saturating_sub(1);
+        for (s, runs) in all_runs.iter().enumerate() {
+            self.persist_shard_runs(st, s, runs, high)?;
+        }
+        self.rotate_wal(st, &[])?;
+        self.write_manifest(st)
+    }
+
+    /// Start a fresh WAL holding `keep` (re-encoded valid records, or
+    /// empty) and schedule the old one for deletion after the next
+    /// manifest swap. The old WAL stays on disk until then, so a crash
+    /// between rotation and swap recovers from it unharmed.
+    fn rotate_wal(&self, st: &mut DurState, keep: &[u8]) -> io::Result<()> {
+        let d = self.dur();
+        let name = format!("wal-{:010}.log", st.next_file);
+        st.next_file += 1;
+        let mut bytes = wal::wal_header(self.dims)?;
+        bytes.extend_from_slice(keep);
+        let path = d.dir.join(&name);
+        d.fs.write(&path, &bytes)?;
+        d.fs.fsync(&path)?;
+        let old = std::mem::replace(&mut st.wal_name, name);
+        if !old.is_empty() {
+            st.old_files.push(old);
+        }
+        st.unsynced = 0;
+        Ok(())
+    }
+
+    /// Commit the current durable state: write `MANIFEST-<gen+1>`,
+    /// fsync it, sync the directory (making it and any new segment
+    /// files durable by name), then swap `CURRENT` via temp file +
+    /// rename + directory sync — the atomic commit point. Afterwards,
+    /// garbage-collect files the new manifest no longer references.
+    fn write_manifest(&self, st: &mut DurState) -> io::Result<()> {
+        let d = self.dur();
+        let snap = self.snapshot();
+        let gen = st.gen + 1;
+        let m = file::Manifest {
+            gen,
+            kind: self.kind,
+            dims: self.dims,
+            level: self.level,
+            side: self.quant.side(),
+            buffer_rows: self.buffer_rows,
+            origin: self.quant.origin().to_vec(),
+            cell: self.quant.cell_widths().to_vec(),
+            data_lo: snap.data_lo.clone(),
+            data_hi: snap.data_hi.clone(),
+            next_seq: self.next_seq.load(Ordering::Relaxed),
+            next_id: self.next_id.load(Ordering::Relaxed),
+            bounds: snap.bounds.clone(),
+            shards: st
+                .flushed_seq
+                .iter()
+                .zip(&st.shard_runs)
+                .map(|(&flushed_seq, runs)| file::ShardManifest {
+                    flushed_seq,
+                    runs: runs.clone(),
+                })
+                .collect(),
+            wal: st.wal_name.clone(),
+        };
+        let name = format!("MANIFEST-{gen:010}");
+        let bytes = file::encode_manifest(&m)?;
+        let path = d.dir.join(&name);
+        d.fs.write(&path, &bytes)?;
+        d.fs.fsync(&path)?;
+        d.fs.sync_dir(&d.dir)?;
+        let cur_tmp = d.dir.join("CURRENT.tmp");
+        d.fs.write(&cur_tmp, name.as_bytes())?;
+        d.fs.fsync(&cur_tmp)?;
+        d.fs.rename(&cur_tmp, &d.dir.join("CURRENT"))?;
+        d.fs.sync_dir(&d.dir)?;
+        if st.gen > 0 {
+            st.old_files.push(format!("MANIFEST-{:010}", st.gen));
+        }
+        st.gen = gen;
+        self.gc(st);
+        Ok(())
+    }
+
+    /// Best-effort deletion of files the current manifest no longer
+    /// references (superseded segment files, the rotated WAL, the
+    /// previous manifest). Failures are ignored: survivors are orphans
+    /// that the next `open()` cleans up.
+    fn gc(&self, st: &mut DurState) {
+        let d = self.dur();
+        let referenced: BTreeSet<String> = st.shard_runs.iter().flatten().cloned().collect();
+        let mut stale: Vec<(String, usize)> = st
+            .seg_files
+            .iter()
+            .filter(|(_, (name, _))| !referenced.contains(name))
+            .map(|(&ptr, (name, _))| (name.clone(), ptr))
+            .collect();
+        stale.sort(); // deterministic deletion order for the fault harness
+        for (name, ptr) in stale {
+            st.seg_files.remove(&ptr);
+            let _ = d.fs.remove(&d.dir.join(&name));
+        }
+        for name in std::mem::take(&mut st.old_files) {
+            let _ = d.fs.remove(&d.dir.join(&name));
+        }
+    }
+
+    /// Delete store-owned files (`seg-*`, `wal-*`, `MANIFEST-*`,
+    /// `*.tmp`) that the live manifest does not reference — leftovers
+    /// of crashes between file creation and the manifest swap. Foreign
+    /// files are left alone. Deletion failures are ignored (they will
+    /// be retried by the next open).
+    fn cleanup_orphans(&self) -> io::Result<()> {
+        let d = self.dur();
+        let st = d.state.lock().expect("store lock poisoned");
+        let mut keep: BTreeSet<String> = st.shard_runs.iter().flatten().cloned().collect();
+        keep.insert(st.wal_name.clone());
+        keep.insert("CURRENT".to_string());
+        keep.insert(format!("MANIFEST-{:010}", st.gen));
+        for name in d.fs.list(&d.dir)? {
+            if keep.contains(&name) {
+                continue;
+            }
+            let owned = name.starts_with("seg-")
+                || name.starts_with("wal-")
+                || name.starts_with("MANIFEST-")
+                || name.ends_with(".tmp");
+            if owned {
+                let _ = d.fs.remove(&d.dir.join(&name));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Absolute positions where the fenceposts cut a sorted key column:
@@ -1018,5 +1762,85 @@ mod tests {
         let old = store.query_window_on(&snap, &[0.0, 0.0], &[5.0, 5.0]);
         assert_eq!(old.len(), 1, "snapshot must not see the later insert");
         assert!(!old.contains(&id2));
+    }
+
+    fn durable_cfg() -> StoreConfig {
+        StoreConfig { shards: 4, buffer_rows: 8 }
+    }
+
+    #[test]
+    fn durable_create_reopen_roundtrip() {
+        let fs = Arc::new(FailpointFs::new());
+        let dir = Path::new("store");
+        let store = SfcStore::create_durable(
+            dir,
+            fs.clone(),
+            2,
+            5,
+            CurveKind::Hilbert,
+            vec![0.0, 0.0],
+            &[32.0, 32.0],
+            durable_cfg(),
+            SyncPolicy::Always,
+        )
+        .unwrap();
+        assert!(store.is_durable());
+        let points = make_clustered(100, 2, 6, 1.5, 5);
+        store.insert_batch(&points);
+        for p in 0..20usize {
+            store.delete(p as u32, points.row(p));
+        }
+        store.flush();
+        // Leave a WAL tail past the last structural op.
+        store.insert(&[1.0, 2.0]);
+        let (ids_live, rows_live) = store.collect_live(&store.snapshot());
+        drop(store);
+        fs.crash(CrashMode::Clean);
+        let reopened = SfcStore::open_durable(dir, fs, SyncPolicy::Always).unwrap();
+        let (ids_rec, rows_rec) = reopened.collect_live(&reopened.snapshot());
+        assert_eq!(ids_live, ids_rec);
+        assert_eq!(rows_live.data, rows_rec.data);
+        // The recovered store keeps ingesting and re-persisting.
+        reopened.insert(&[3.0, 4.0]);
+        reopened.compact();
+        assert_eq!(reopened.len(), ids_live.len() + 1);
+    }
+
+    #[test]
+    fn durable_refuses_double_create() {
+        let fs = Arc::new(FailpointFs::new());
+        let dir = Path::new("store");
+        let mk = |fs: Arc<FailpointFs>| {
+            SfcStore::create_durable(
+                dir,
+                fs,
+                2,
+                5,
+                CurveKind::ZOrder,
+                vec![0.0, 0.0],
+                &[8.0, 8.0],
+                durable_cfg(),
+                SyncPolicy::Always,
+            )
+        };
+        mk(fs.clone()).unwrap();
+        let err = mk(fs).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::AlreadyExists);
+    }
+
+    #[test]
+    fn in_memory_store_is_not_durable() {
+        let store = SfcStore::new(
+            2,
+            5,
+            CurveKind::Hilbert,
+            vec![0.0, 0.0],
+            &[4.0, 4.0],
+            StoreConfig::default(),
+        );
+        assert!(!store.is_durable());
+        assert!(store.dir().is_none());
+        store.sync().unwrap();
+        store.close().unwrap();
     }
 }

@@ -40,13 +40,17 @@ impl ShardState {
     }
 
     /// Append a mini-run to the write buffer, flushing + tiering when
-    /// the buffer exceeds `buffer_rows`.
-    pub fn append(&mut self, seg: Segment, buffer_rows: usize, dims: usize) {
+    /// the buffer exceeds `buffer_rows`. Returns `true` when a flush ran
+    /// (the run stack changed), which is the durable store's cue to
+    /// persist this shard's new run files.
+    pub fn append(&mut self, seg: Segment, buffer_rows: usize, dims: usize) -> bool {
         self.mini_rows += seg.rows();
         self.minis.push(Arc::new(seg));
         if self.mini_rows > buffer_rows {
             self.flush(dims);
+            return true;
         }
+        false
     }
 
     /// Merge the write buffer into one sorted run (tombstones kept) and

@@ -1,0 +1,367 @@
+//! Write-ahead log for the store's write buffer.
+//!
+//! Every mutation batch (insert or delete) appends one self-describing,
+//! CRC-protected record *before* it touches the in-memory shards; the
+//! fsync of that append (governed by [`SyncPolicy`]) is the commit
+//! point — a mutation is **acknowledged** only once its record is
+//! durable, and recovery replays acknowledged records into write-buffer
+//! mini-runs. Sorted runs never live in the WAL: flush/compact/rebalance
+//! persist them as segment files and then rotate the log.
+//!
+//! ## Record grammar
+//!
+//! ```text
+//! wal    := header record*
+//! header := "SFCWAL1\0" u32 version u32 dims u32 crc32(version·dims)
+//! record := u32 len payload u32 crc32(payload)
+//! payload:= u8 kind(1=insert 2=delete) u64 seq0 u32 n
+//!           n × u32 ids
+//!           n × dims × f32 rows
+//! ```
+//!
+//! Row `i` of a record carries seq `seq0 + i`. [`parse`] walks records
+//! left to right and stops at the first violation — short length word,
+//! length/arity mismatch, bad kind, CRC failure, or truncated payload —
+//! returning the **valid prefix** plus a `torn` flag. A torn tail is
+//! expected after a crash (the last append raced the kill) and recovery
+//! truncates it away by rotating the log; anything before the tail is
+//! protected by its own CRC.
+
+use crate::apps::Matrix;
+use std::io;
+
+use super::file::{bad, crc32, put_f32, put_u32, put_u64, to_usize, Cur};
+
+pub(crate) const WAL_MAGIC: [u8; 8] = *b"SFCWAL1\0";
+pub(crate) const WAL_VERSION: u32 = 1;
+/// Header byte length: magic + version + dims + crc.
+pub(crate) const WAL_HEADER_LEN: usize = 20;
+
+const KIND_INSERT: u8 = 1;
+const KIND_DELETE: u8 = 2;
+
+/// When the WAL writer fsyncs.
+///
+/// `Always` makes every mutation durable before it is acknowledged (the
+/// recovery tests' setting). `EveryN(n)` amortizes the fsync over `n`
+/// records — a crash can lose up to the last `n − 1` acknowledged-in-
+/// memory-but-unsynced records, never a synced one. `Never` leaves
+/// durability to rotation points and `close()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    Always,
+    EveryN(u32),
+    Never,
+}
+
+impl std::str::FromStr for SyncPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "always" => Ok(SyncPolicy::Always),
+            "never" => Ok(SyncPolicy::Never),
+            other => match other.parse::<u32>() {
+                Ok(n) if n >= 1 => Ok(SyncPolicy::EveryN(n)),
+                _ => Err(format!(
+                    "bad sync policy {other:?} (use always, never, or a batch size)"
+                )),
+            },
+        }
+    }
+}
+
+/// One replayable mutation batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    /// `true` for a delete (tombstone) batch.
+    pub tomb: bool,
+    /// Seq of row 0; row `i` has seq `seq0 + i`.
+    pub seq0: u64,
+    pub ids: Vec<u32>,
+    pub points: Matrix,
+}
+
+/// The valid prefix of a WAL file.
+#[derive(Debug)]
+pub struct WalContents {
+    pub records: Vec<WalRecord>,
+    /// Byte span of each record (including its len/crc framing), parallel
+    /// to `records` — lets tests map corruption offsets to the records
+    /// they must knock out.
+    pub spans: Vec<std::ops::Range<usize>>,
+    /// Bytes of header + fully-valid records.
+    pub valid_len: usize,
+    /// Whether bytes beyond `valid_len` were discarded (torn tail).
+    pub torn: bool,
+}
+
+/// Serialized WAL header for a store of dimensionality `dims`.
+pub fn wal_header(dims: usize) -> io::Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(WAL_HEADER_LEN);
+    out.extend_from_slice(&WAL_MAGIC);
+    put_u32(&mut out, WAL_VERSION);
+    put_u32(
+        &mut out,
+        u32::try_from(dims).map_err(|_| bad("dims overflow"))?,
+    );
+    let crc = crc32(&out[8..16]);
+    put_u32(&mut out, crc);
+    Ok(out)
+}
+
+/// Serialize one mutation batch.
+pub fn encode_record(tomb: bool, seq0: u64, ids: &[u32], points: &Matrix) -> io::Result<Vec<u8>> {
+    assert_eq!(ids.len(), points.rows, "one id per row");
+    let mut payload = Vec::new();
+    payload.push(if tomb { KIND_DELETE } else { KIND_INSERT });
+    put_u64(&mut payload, seq0);
+    put_u32(
+        &mut payload,
+        u32::try_from(ids.len()).map_err(|_| bad("batch too large"))?,
+    );
+    for &id in ids {
+        put_u32(&mut payload, id);
+    }
+    for &v in &points.data {
+        put_f32(&mut payload, v);
+    }
+    let mut out = Vec::with_capacity(payload.len() + 8);
+    put_u32(
+        &mut out,
+        u32::try_from(payload.len()).map_err(|_| bad("record too large"))?,
+    );
+    let crc = crc32(&payload);
+    out.extend_from_slice(&payload);
+    put_u32(&mut out, crc);
+    Ok(out)
+}
+
+fn parse_payload(payload: &[u8], dims: usize) -> Option<WalRecord> {
+    let mut cur = Cur::new(payload);
+    let kind = cur.u8("record kind").ok()?;
+    let tomb = match kind {
+        KIND_INSERT => false,
+        KIND_DELETE => true,
+        _ => return None,
+    };
+    let seq0 = cur.u64("record seq0").ok()?;
+    let n = to_usize(cur.u32("record arity").ok()?.into(), "record arity").ok()?;
+    // The payload length must match the arity exactly.
+    let want = 13usize
+        .checked_add(n.checked_mul(4)?)?
+        .checked_add(n.checked_mul(dims)?.checked_mul(4)?)?;
+    if payload.len() != want {
+        return None;
+    }
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(cur.u32("record id").ok()?);
+    }
+    let mut data = Vec::with_capacity(n * dims);
+    for _ in 0..n * dims {
+        data.push(cur.f32("record row").ok()?);
+    }
+    Some(WalRecord {
+        tomb,
+        seq0,
+        ids,
+        points: Matrix {
+            rows: n,
+            cols: dims,
+            data,
+        },
+    })
+}
+
+/// Parse a WAL image into its valid record prefix.
+///
+/// A bad **header** is a hard error (the header is written and fsynced
+/// before the manifest ever references the file, so it cannot be torn —
+/// only corrupt). Anything wrong at or after a record boundary marks the
+/// tail torn and returns the records before it; this function never
+/// panics on arbitrary input.
+pub fn parse(bytes: &[u8], dims: usize) -> io::Result<WalContents> {
+    if bytes.len() < WAL_HEADER_LEN || bytes[..8] != WAL_MAGIC {
+        return Err(bad("not a WAL file (bad magic)"));
+    }
+    let mut cur = Cur::new(&bytes[8..WAL_HEADER_LEN]);
+    let version = cur.u32("wal version")?;
+    let file_dims = to_usize(cur.u32("wal dims")?.into(), "wal dims")?;
+    let crc = cur.u32("wal header crc")?;
+    if crc != crc32(&bytes[8..16]) {
+        return Err(bad("wal header checksum mismatch"));
+    }
+    if version != WAL_VERSION {
+        return Err(bad(format!("unsupported wal version {version}")));
+    }
+    if file_dims != dims {
+        return Err(bad(format!("wal dims {file_dims}, store expects {dims}")));
+    }
+
+    let mut records = Vec::new();
+    let mut spans = Vec::new();
+    let mut pos = WAL_HEADER_LEN;
+    loop {
+        if pos == bytes.len() {
+            return Ok(WalContents {
+                records,
+                spans,
+                valid_len: pos,
+                torn: false,
+            });
+        }
+        let start = pos;
+        let parsed = (|| -> Option<(WalRecord, usize)> {
+            let rem = &bytes[pos..];
+            if rem.len() < 4 {
+                return None;
+            }
+            let len = u32::from_le_bytes([rem[0], rem[1], rem[2], rem[3]]) as usize;
+            if rem.len() < 4 + len + 4 {
+                return None;
+            }
+            let payload = &rem[4..4 + len];
+            let stored = {
+                let t = &rem[4 + len..8 + len];
+                u32::from_le_bytes([t[0], t[1], t[2], t[3]])
+            };
+            if crc32(payload) != stored {
+                return None;
+            }
+            let rec = parse_payload(payload, dims)?;
+            Some((rec, 8 + len))
+        })();
+        match parsed {
+            Some((rec, consumed)) => {
+                pos += consumed;
+                records.push(rec);
+                spans.push(start..pos);
+            }
+            None => {
+                return Ok(WalContents {
+                    records,
+                    spans,
+                    valid_len: start,
+                    torn: true,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_records(dims: usize) -> Vec<WalRecord> {
+        vec![
+            WalRecord {
+                tomb: false,
+                seq0: 1,
+                ids: vec![0, 1, 2],
+                points: Matrix::from_fn(3, dims, |i, j| (i * dims + j) as f32 * 0.5),
+            },
+            WalRecord {
+                tomb: true,
+                seq0: 4,
+                ids: vec![1],
+                points: Matrix::from_fn(1, dims, |_, j| j as f32 - 1.5),
+            },
+            WalRecord {
+                tomb: false,
+                seq0: 5,
+                ids: vec![3, 4],
+                points: Matrix::from_fn(2, dims, |i, j| (10 + i + j) as f32),
+            },
+        ]
+    }
+
+    fn encode_wal(recs: &[WalRecord], dims: usize) -> Vec<u8> {
+        let mut bytes = wal_header(dims).unwrap();
+        for r in recs {
+            bytes.extend_from_slice(&encode_record(r.tomb, r.seq0, &r.ids, &r.points).unwrap());
+        }
+        bytes
+    }
+
+    #[test]
+    fn roundtrip_all_records() {
+        for dims in [2usize, 3] {
+            let recs = sample_records(dims);
+            let bytes = encode_wal(&recs, dims);
+            let parsed = parse(&bytes, dims).unwrap();
+            assert!(!parsed.torn);
+            assert_eq!(parsed.valid_len, bytes.len());
+            assert_eq!(parsed.records, recs);
+            assert_eq!(parsed.spans.len(), recs.len());
+            assert_eq!(parsed.spans[0].start, WAL_HEADER_LEN);
+            assert_eq!(parsed.spans.last().unwrap().end, bytes.len());
+        }
+    }
+
+    #[test]
+    fn truncation_yields_record_prefix() {
+        let dims = 2;
+        let recs = sample_records(dims);
+        let bytes = encode_wal(&recs, dims);
+        let parsed = parse(&bytes, dims).unwrap();
+        let spans = parsed.spans.clone();
+        for cut in WAL_HEADER_LEN..bytes.len() {
+            let got = parse(&bytes[..cut], dims).unwrap();
+            let want = spans.iter().take_while(|s| s.end <= cut).count();
+            assert_eq!(got.records.len(), want, "cut at {cut}");
+            assert_eq!(got.torn, want < recs.len());
+            assert_eq!(got.records[..], recs[..want]);
+        }
+        for cut in 0..WAL_HEADER_LEN {
+            assert!(parse(&bytes[..cut], dims).is_err(), "header cut {cut}");
+        }
+    }
+
+    #[test]
+    fn flip_invalidates_containing_suffix() {
+        let dims = 2;
+        let recs = sample_records(dims);
+        let bytes = encode_wal(&recs, dims);
+        let spans = parse(&bytes, dims).unwrap().spans;
+        for off in WAL_HEADER_LEN..bytes.len() {
+            let mut mangled = bytes.clone();
+            mangled[off] ^= 0xFF;
+            let got = parse(&mangled, dims).unwrap();
+            // Everything strictly before the flipped record must survive;
+            // the flipped record itself must not be parsed *as written*.
+            let first_hit = spans.iter().position(|s| s.contains(&off)).unwrap();
+            assert!(got.records.len() <= first_hit, "flip at {off}");
+            assert_eq!(got.records[..], recs[..got.records.len()], "flip at {off}");
+        }
+        for off in 0..WAL_HEADER_LEN {
+            let mut mangled = bytes.clone();
+            mangled[off] ^= 0xFF;
+            assert!(parse(&mangled, dims).is_err(), "header flip {off}");
+        }
+    }
+
+    #[test]
+    fn empty_wal_is_valid() {
+        let bytes = wal_header(3).unwrap();
+        let parsed = parse(&bytes, 3).unwrap();
+        assert!(parsed.records.is_empty());
+        assert!(!parsed.torn);
+    }
+
+    #[test]
+    fn dims_mismatch_is_error() {
+        let bytes = encode_wal(&sample_records(2), 2);
+        assert!(parse(&bytes, 3).is_err());
+    }
+
+    #[test]
+    fn sync_policy_parses() {
+        assert_eq!("always".parse::<SyncPolicy>().unwrap(), SyncPolicy::Always);
+        assert_eq!("never".parse::<SyncPolicy>().unwrap(), SyncPolicy::Never);
+        assert_eq!("8".parse::<SyncPolicy>().unwrap(), SyncPolicy::EveryN(8));
+        assert!("0".parse::<SyncPolicy>().is_err());
+        assert!("sometimes".parse::<SyncPolicy>().is_err());
+    }
+}

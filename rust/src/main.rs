@@ -13,7 +13,10 @@
 //! sfc-mine query [--mode point|window|knn --curve hilbert --dims 2
 //!                 --level 8 --max-ranges 0]   # SfcIndex query subsystem
 //! sfc-mine store [--n 20000 --dims 3 --shards 8 --ops 20000
-//!                 --threads 0]   # sharded mutable store: mixed workload
+//!                 --threads 0 --dir path --sync always|N|never]
+//!                                # sharded mutable store: mixed workload;
+//!                                # --dir persists it (and reopens+verifies
+//!                                # an existing store after a crash)
 //! ```
 //!
 //! All curve dispatch goes through the engine ([`CurveKind::mapper`] /
@@ -811,7 +814,7 @@ fn query_cmd(args: &Args) {
 /// the live set and report batched snapshot-query scaling across
 /// worker counts.
 fn store_cmd(args: &Args) {
-    use sfc_mine::index::{SfcStore, StoreConfig};
+    use sfc_mine::index::{SfcStore, StoreConfig, SyncPolicy};
 
     let n: usize = args.get("n", 20_000);
     let d: usize = args.get("dims", 3);
@@ -832,6 +835,21 @@ fn store_cmd(args: &Args) {
             std::process::exit(2);
         }
     };
+    let dir = args.get_str("dir", "");
+    let sync: SyncPolicy = match args.get_str("sync", "always").parse() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    // `--dir` pointing at an existing store: reopen-and-verify mode (the
+    // crash-recovery path — used by the CI recovery-smoke job after a
+    // SIGKILL mid-ingest).
+    if !dir.is_empty() && std::path::Path::new(&dir).join("CURRENT").exists() {
+        store_reopen_cmd(&dir, queries, frac);
+        return;
+    }
     let points = make_clustered(n, d, 40, 0.8, 7);
     let (min, max) = sfc_mine::index::axis_bounds(&points, d).expect("workload is non-empty");
     let mut rng = Rng::new(99);
@@ -840,7 +858,23 @@ fn store_cmd(args: &Args) {
     // ---- phase 1: bulk ingest ------------------------------------------
     let cfg = StoreConfig { shards, buffer_rows: buffer };
     let t0 = Instant::now();
-    let store = SfcStore::from_points(&points, level, curve, cfg);
+    let store = if dir.is_empty() {
+        SfcStore::from_points(&points, level, curve, cfg)
+    } else {
+        // Durable: create under `--dir`, ingest through the WAL, then
+        // re-cut the fenceposts equi-depth like `from_points` does.
+        let store =
+            match SfcStore::create(&dir, d, level, curve, min.clone(), &max, cfg, sync) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("store: cannot create {dir}: {e}");
+                    std::process::exit(2);
+                }
+            };
+        store.insert_batch(&points);
+        store.rebalance();
+        store
+    };
     let ingest_dt = t0.elapsed();
     let snap = store.snapshot();
     t.row(vec![
@@ -1035,8 +1069,89 @@ fn store_cmd(args: &Args) {
 
     println!(
         "store [{}]: n={n} d={d} level={level} shards={shards} buffer={buffer} \
-         ops={ops} (del {delete_frac} / qry {query_frac})",
-        curve.name()
+         ops={ops} (del {delete_frac} / qry {query_frac}){}",
+        curve.name(),
+        if dir.is_empty() { String::new() } else { format!(" dir={dir} sync={sync:?}") },
     );
     print!("{}", t.render());
+
+    // ---- phase 6 (durable only): close, cold-reopen, verify ------------
+    if !dir.is_empty() {
+        store.close().expect("store close");
+        let t0 = Instant::now();
+        let reopened = SfcStore::open_with(&dir, sync).expect("store reopen");
+        let open_dt = t0.elapsed();
+        let (rids, _) = reopened.collect_live(&reopened.snapshot());
+        assert_eq!(rids.len(), live_ids.len(), "reopened live set size");
+        for (lo, hi) in windows.iter().take(50) {
+            let mut got = reopened.query_window(lo, hi);
+            let mut want: Vec<u32> =
+                index.query_window(lo, hi).iter().map(|&i| live_ids[i as usize]).collect();
+            got.sort_unstable();
+            want.sort_unstable();
+            assert_eq!(got, want, "reopened store must match the fresh index");
+        }
+        println!(
+            "recovered {} rows, parity OK (cold open {}, {} windows verified)",
+            rids.len(),
+            fmt_ms(open_dt),
+            windows.len().min(50),
+        );
+    }
+}
+
+/// Reopen-only mode of the `store` subcommand: `--dir` points at an
+/// existing store (for example after a kill mid-ingest). Replays the
+/// WAL, rebuilds the snapshot, verifies query parity against a fresh
+/// `SfcIndex` over the recovered live set, and prints the
+/// `recovered N rows, parity OK` line the CI recovery-smoke job greps.
+fn store_reopen_cmd(dir: &str, queries: usize, frac: f32) {
+    use sfc_mine::index::SfcStore;
+
+    let t0 = Instant::now();
+    let store = match SfcStore::open(dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("store: cannot open {dir}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let open_dt = t0.elapsed();
+    let snap = store.snapshot();
+    let (live_ids, live_rows) = store.collect_live(&snap);
+    println!(
+        "store [{}]: reopened {dir} (d={}, level={}, {} shards, {} entries)",
+        store.curve().name(),
+        store.dims(),
+        store.level(),
+        store.shard_count(),
+        snap.entries(),
+    );
+    if live_rows.rows == 0 {
+        println!("recovered 0 rows, parity OK (store is empty)");
+        return;
+    }
+    let d = store.dims();
+    let index = SfcIndex::build_with(&live_rows, store.level(), store.curve());
+    let (min, max) = sfc_mine::index::axis_bounds(&live_rows, d).expect("live set is non-empty");
+    let mut rng = Rng::new(7);
+    let nq = queries.max(1);
+    for _ in 0..nq {
+        let c = rng.below_usize(live_rows.rows);
+        let lo: Vec<f32> =
+            (0..d).map(|a| live_rows.at(c, a) - frac * (max[a] - min[a])).collect();
+        let hi: Vec<f32> =
+            (0..d).map(|a| live_rows.at(c, a) + frac * (max[a] - min[a])).collect();
+        let mut got = store.query_window_on(&snap, &lo, &hi);
+        let mut want: Vec<u32> =
+            index.query_window(&lo, &hi).iter().map(|&i| live_ids[i as usize]).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "recovered store must match a fresh index");
+    }
+    println!(
+        "recovered {} rows, parity OK (cold open {}, {nq} window queries verified)",
+        live_ids.len(),
+        fmt_ms(open_dt),
+    );
 }

@@ -51,9 +51,12 @@ impl Manifest {
             })?;
             let comment = parts.next().unwrap_or("").to_string();
             let path = dir.join(file);
-            if !path.exists() {
+            // One metadata probe instead of an `exists()` pre-check: no
+            // check-then-use window, and "unreadable" is reported
+            // distinctly from "missing".
+            if let Err(e) = std::fs::metadata(&path) {
                 return Err(Error::Artifact(format!(
-                    "artifact '{name}' file missing: {}",
+                    "artifact '{name}' file unavailable ({e}): {}",
                     path.display()
                 )));
             }
