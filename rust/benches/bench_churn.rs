@@ -1,0 +1,360 @@
+//! Churn bench (ISSUE 10): sustained mixed insert/delete/query load at a
+//! target QPS through the async ingestion pipeline while maintenance
+//! (flush/compact/rebalance) runs concurrently, measuring query latency
+//! as a distribution (p50/p99/p999, log2 histogram) rather than a single
+//! median. Emits JSON (`reports/bench_churn.json`).
+//!
+//! Acceptance, asserted in-bench:
+//!   1. p99 under churn stays within a fixed multiple of the quiescent
+//!      p99 (fast-mode-aware: the multiple is looser under
+//!      `SFC_BENCH_FAST` where samples are few and noise is large);
+//!   2. after drain + settle, the router answers window queries
+//!      bit-for-bit identically to a fresh `SfcIndex` over the live set;
+//!   3. maintenance actually ran during the window (the bench would
+//!      otherwise measure an idle store and call it churn).
+//!
+//! A second table sweeps maintenance threads for a pure-ingest run: rows/s
+//! absorbed while flush/compact keep up, the knob the serving story in
+//! ARCHITECTURE.md ("serving pipeline") tells operators to turn first.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sfc_mine::apps::simjoin::make_clustered;
+use sfc_mine::apps::Matrix;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::{
+    IngestPipeline, PipelineConfig, QueryRouter, SfcIndex, SfcStore, StoreConfig,
+};
+use sfc_mine::util::latency::{fmt_ns, LatencyHistogram};
+use sfc_mine::util::rng::Rng;
+use sfc_mine::util::table::Table;
+
+const LEVEL: u32 = 8;
+const D: usize = 3;
+const K: usize = 8;
+const ROWS_PER_INSERT: usize = 8;
+const WINDOW_FRAC: f32 = 0.03;
+
+struct ChurnResult {
+    churn: LatencyHistogram,
+    quiet: LatencyHistogram,
+    ops: u64,
+}
+
+fn main() {
+    let fast = std::env::var("SFC_BENCH_FAST").is_ok();
+    let n: usize = if fast { 20_000 } else { 400_000 };
+    let qps: u64 = if fast { 8_000 } else { 40_000 };
+    let seconds: f64 = if fast { 1.2 } else { 6.0 };
+    let producers: usize = 4;
+    let replicas: usize = 3;
+    let queries: usize = if fast { 120 } else { 400 };
+    // Fast mode takes few latency samples on a tiny store; the tail
+    // estimate is mostly scheduler noise, so the budget is loose there.
+    let p99_mult: u64 = if fast { 100 } else { 25 };
+    let p99_floor_ns: u64 = 200_000;
+
+    let points = make_clustered(n, D, 40, 0.8, 7);
+    let (min, max) = sfc_mine::index::axis_bounds(&points, D).expect("non-empty");
+    let span: Vec<f32> = (0..D).map(|a| max[a] - min[a]).collect();
+
+    // Small buffers + a low compaction trigger so maintenance has real
+    // work to do during the measured window.
+    let store_cfg = StoreConfig { shards: 8, buffer_rows: 128 };
+    let pipe_cfg = PipelineConfig {
+        queue_rows: 4096,
+        batch_rows: 512,
+        batch_wait: Duration::from_micros(200),
+        maintenance_threads: 2,
+        compact_segments: 6,
+        ..PipelineConfig::default()
+    };
+
+    let t0 = Instant::now();
+    let store = Arc::new(SfcStore::from_points(&points, LEVEL, CurveKind::Hilbert, store_cfg));
+    let build_dt = t0.elapsed();
+    let router = Arc::new(QueryRouter::new(Arc::clone(&store), replicas, 4));
+
+    let random_window = |rng: &mut Rng, center: &[f32]| {
+        let lo: Vec<f32> = (0..D).map(|a| center[a] - WINDOW_FRAC * span[a]).collect();
+        let hi: Vec<f32> = (0..D).map(|a| center[a] + WINDOW_FRAC * span[a]).collect();
+        (lo, hi)
+    };
+
+    // --- quiescent baseline ---------------------------------------------
+    router.refresh();
+    let mut rng = Rng::new(42);
+    let mut quiet = LatencyHistogram::new();
+    for i in 0..queries {
+        let center = points.row(rng.below_usize(n)).to_vec();
+        let tq = Instant::now();
+        match i % 3 {
+            0 => drop(router.query_knn(&center, K)),
+            1 => drop(router.query_point(&center)),
+            _ => {
+                let (lo, hi) = random_window(&mut rng, &center);
+                drop(router.query_window(&lo, &hi));
+            }
+        }
+        quiet.record_duration(tq.elapsed());
+    }
+
+    // --- churn: mixed ops at target QPS with concurrent maintenance -----
+    let pipeline = IngestPipeline::with_router(Arc::clone(&store), pipe_cfg, Some(Arc::clone(&router)));
+    let total_ops = (qps as f64 * seconds) as u64;
+    let interval = Duration::from_nanos((1e9 * producers as f64 / qps as f64).max(1.0) as u64);
+    let churn_t0 = Instant::now();
+    let results: Vec<ChurnResult> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let my_ops = total_ops / producers as u64
+                + u64::from((p as u64) < total_ops % producers as u64);
+            let pipeline = &pipeline;
+            let router = &router;
+            let points = &points;
+            let span = &span;
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(9000 + p as u64);
+                let mut out = ChurnResult {
+                    churn: LatencyHistogram::new(),
+                    quiet: LatencyHistogram::new(),
+                    ops: 0,
+                };
+                let mut mine: Vec<(u32, Vec<f32>)> = Vec::new();
+                let mut next = Instant::now();
+                for _ in 0..my_ops {
+                    let now = Instant::now();
+                    if now < next {
+                        std::thread::sleep(next - now);
+                    }
+                    next += interval;
+                    let src = rng.below_usize(points.rows);
+                    let row: Vec<f32> = (0..D)
+                        .map(|a| points.at(src, a) + (rng.f32() - 0.5) * span[a] * 0.02)
+                        .collect();
+                    let r = rng.f32();
+                    if r < 0.45 {
+                        let rows = Matrix::from_fn(ROWS_PER_INSERT, D, |i, j| {
+                            row[j] + i as f32 * 1e-4
+                        });
+                        let first = pipeline.submit_insert(rows.clone());
+                        if mine.len() < 4096 {
+                            mine.push((first, rows.row(0).to_vec()));
+                        }
+                    } else if r < 0.55 {
+                        if let Some(last) = mine.pop() {
+                            let m = Matrix { rows: 1, cols: D, data: last.1 };
+                            pipeline.submit_delete(&[last.0], &m);
+                        }
+                    } else if r < 0.85 {
+                        let lo: Vec<f32> =
+                            (0..D).map(|a| row[a] - WINDOW_FRAC * span[a]).collect();
+                        let hi: Vec<f32> =
+                            (0..D).map(|a| row[a] + WINDOW_FRAC * span[a]).collect();
+                        let tq = Instant::now();
+                        drop(router.query_window(&lo, &hi));
+                        out.churn.record_duration(tq.elapsed());
+                    } else if r < 0.95 {
+                        let tq = Instant::now();
+                        drop(router.query_knn(&row, K));
+                        out.churn.record_duration(tq.elapsed());
+                    } else {
+                        let tq = Instant::now();
+                        drop(router.query_point(&row));
+                        out.churn.record_duration(tq.elapsed());
+                    }
+                    out.ops += 1;
+                }
+                out
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("producer panicked")).collect()
+    });
+    let churn_dt = churn_t0.elapsed();
+    pipeline.drain().expect("pipeline drain");
+    pipeline.settle_maintenance();
+    router.refresh();
+    let stats = pipeline.stats();
+    drop(pipeline);
+
+    let mut churn = LatencyHistogram::new();
+    let mut ops_done = 0u64;
+    for r in &results {
+        churn.merge(&r.churn);
+        ops_done += r.ops;
+    }
+
+    // --- quiescent after drain, and parity vs a fresh index -------------
+    let snap = store.snapshot();
+    let (live_ids, live_rows) = store.collect_live(&snap);
+    let mut quiet_after = LatencyHistogram::new();
+    for _ in 0..queries {
+        let c = rng.below_usize(live_rows.rows);
+        let (lo, hi) = random_window(&mut rng, live_rows.row(c));
+        let tq = Instant::now();
+        drop(router.query_window(&lo, &hi));
+        quiet_after.record_duration(tq.elapsed());
+    }
+    let index = SfcIndex::build_with(&live_rows, LEVEL, CurveKind::Hilbert);
+    let n_verify = queries.min(100);
+    for _ in 0..n_verify {
+        let c = rng.below_usize(live_rows.rows);
+        let (lo, hi) = random_window(&mut rng, live_rows.row(c));
+        let mut got = router.query_window(&lo, &hi);
+        let mut want: Vec<u32> =
+            index.query_window(&lo, &hi).iter().map(|&i| live_ids[i as usize]).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "post-drain router must match a fresh SfcIndex");
+    }
+
+    let dstats = store.durability_stats();
+    let mut t = Table::new(vec!["measure", "value", "notes"]);
+    t.row(vec![
+        "bulk build".into(),
+        format!("{:.1} ms", build_dt.as_secs_f64() * 1e3),
+        format!("{n} pts, 8 shards, {replicas} replicas"),
+    ]);
+    t.row(vec![
+        "churn".into(),
+        format!("{ops_done} ops"),
+        format!(
+            "{:.0} ops/s (target {qps}), {} rows applied",
+            ops_done as f64 / churn_dt.as_secs_f64(),
+            stats.applied_rows,
+        ),
+    ]);
+    t.row(vec![
+        "maintenance".into(),
+        format!(
+            "{} flush / {} compact / {} rebalance",
+            stats.flushes, stats.compactions, stats.rebalances
+        ),
+        format!("{} paced stalls, {} blocked", stats.paced_stalls, stats.blocked_producers),
+    ]);
+    t.row(vec!["query (churn)".into(), churn.summary(), format!("{} samples", churn.count())]);
+    t.row(vec![
+        "query (quiescent)".into(),
+        quiet.summary(),
+        format!("{} samples", quiet.count()),
+    ]);
+    t.row(vec![
+        "query (post-drain)".into(),
+        quiet_after.summary(),
+        format!("{} samples", quiet_after.count()),
+    ]);
+    t.row(vec![
+        "durability".into(),
+        format!("{} wal / {} fsync", dstats.wal_appends, dstats.fsyncs),
+        format!("{} batches coalesced", dstats.batches_coalesced),
+    ]);
+    println!("churn bench at n={n} qps={qps} producers={producers} (fast={fast}):");
+    print!("{}", t.render());
+
+    // Acceptance 1: bounded tail inflation under churn.
+    let budget = quiet.p99().max(p99_floor_ns).saturating_mul(p99_mult);
+    assert!(
+        churn.p99() <= budget,
+        "p99 under churn {} exceeds {}x quiescent budget {}",
+        fmt_ns(churn.p99()),
+        p99_mult,
+        fmt_ns(budget),
+    );
+    // Acceptance 3: the measured window really had concurrent maintenance.
+    assert!(
+        stats.flushes + stats.compactions + stats.rebalances > 0,
+        "no maintenance ran during the churn window — bench precondition broken"
+    );
+    println!(
+        "p99 under churn {} vs quiescent {} ({:.1}x, budget {}x); parity OK ({n_verify} windows)",
+        fmt_ns(churn.p99()),
+        fmt_ns(quiet.p99()),
+        churn.p99() as f64 / quiet.p99().max(1) as f64,
+        p99_mult,
+    );
+
+    // --- maintenance-thread sweep: pure-ingest scaling -------------------
+    let ingest_rows: usize = if fast { 40_000 } else { 400_000 };
+    let mut st = Table::new(vec!["maintenance threads", "rows/s", "flush/compact passes"]);
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    for mtn in [1usize, 2, 4] {
+        let s = Arc::new(SfcStore::new(
+            D,
+            LEVEL,
+            CurveKind::Hilbert,
+            min.clone(),
+            &max,
+            store_cfg,
+        ));
+        let cfg = PipelineConfig { maintenance_threads: mtn, ..pipe_cfg };
+        let p = IngestPipeline::new(Arc::clone(&s), cfg);
+        let ti = Instant::now();
+        std::thread::scope(|scope| {
+            let p = &p;
+            let points = &points;
+            for w in 0..producers {
+                scope.spawn(move || {
+                    let per = ingest_rows / producers / ROWS_PER_INSERT;
+                    let mut rng = Rng::new(777 + w as u64);
+                    for _ in 0..per {
+                        let src = rng.below_usize(points.rows);
+                        let rows = Matrix::from_fn(ROWS_PER_INSERT, D, |i, j| {
+                            points.at(src, j) + i as f32 * 1e-4
+                        });
+                        p.submit_insert(rows);
+                    }
+                });
+            }
+        });
+        p.drain().expect("ingest drain");
+        let dt = ti.elapsed();
+        let ps = p.close().expect("close");
+        let rate = ps.applied_rows as f64 / dt.as_secs_f64();
+        sweep.push((mtn, rate));
+        st.row(vec![
+            format!("x{mtn}"),
+            format!("{rate:.0}"),
+            format!("{} / {}", ps.flushes, ps.compactions),
+        ]);
+    }
+    println!("\npure-ingest scaling, {ingest_rows} rows, {producers} producers:");
+    print!("{}", st.render());
+
+    // --- JSON report -----------------------------------------------------
+    let mut s = String::from("[\n");
+    let hists = [
+        ("churn/query", &churn),
+        ("quiescent/query", &quiet),
+        ("post-drain/query", &quiet_after),
+    ];
+    for (idx, (name, h)) in hists.into_iter().enumerate() {
+        if idx > 0 {
+            s.push_str(",\n");
+        }
+        s.push_str(&format!(
+            "  {{\"name\": \"{name}\", \"p50_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}, \
+             \"max_ns\": {}, \"count\": {}}}",
+            h.p50(),
+            h.p99(),
+            h.p999(),
+            h.max_ns(),
+            h.count(),
+        ));
+    }
+    for (mtn, rate) in &sweep {
+        s.push_str(&format!(
+            ",\n  {{\"name\": \"ingest/x{mtn}\", \"rows_per_s\": {rate:.0}, \"count\": {ingest_rows}}}"
+        ));
+    }
+    s.push_str(&format!(
+        ",\n  {{\"name\": \"churn/ops\", \"ops\": {ops_done}, \"target_qps\": {qps}, \
+         \"seconds\": {seconds}}}\n]\n"
+    ));
+    let path = "reports/bench_churn.json";
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir).expect("mkdir reports");
+    }
+    std::fs::write(path, s).expect("write bench_churn.json");
+    println!("wrote {path}");
+}

@@ -16,6 +16,7 @@ use sfc_mine::coordinator::Coordinator;
 use sfc_mine::curves::CurveKind;
 use sfc_mine::index::{SfcIndex, SfcStore, StoreConfig, SyncPolicy};
 use sfc_mine::util::bench::Bench;
+use sfc_mine::util::latency::LatencyHistogram;
 use sfc_mine::util::rng::Rng;
 use sfc_mine::util::table::Table;
 
@@ -133,6 +134,28 @@ fn main() {
     }
     println!("\nstore vs index at n={n} d={d} level={level}:");
     print!("{}", t.render());
+
+    // --- per-query latency distribution (log2 histogram, not just the
+    // batch median): tails matter for the serving story in §7.
+    let mut store_lat = LatencyHistogram::new();
+    let mut index_lat = LatencyHistogram::new();
+    let mut acc = 0usize;
+    for _ in 0..if fast { 2 } else { 8 } {
+        for (lo, hi) in &windows {
+            let tq = std::time::Instant::now();
+            acc += store.query_window_on(&snap, lo, hi).len();
+            store_lat.record_duration(tq.elapsed());
+            let tq = std::time::Instant::now();
+            acc += index.query_window(lo, hi).len();
+            index_lat.record_duration(tq.elapsed());
+        }
+    }
+    println!(
+        "per-query window latency ({} samples each, {acc} rows touched):\n  store {}\n  index {}",
+        store_lat.count(),
+        store_lat.summary(),
+        index_lat.summary(),
+    );
 
     // --- sharded batched-query thread scaling ---------------------------
     let mut st = Table::new(vec!["threads", "ms/batch", "ms/query", "speedup vs x1"]);

@@ -33,8 +33,12 @@ pub mod store;
 pub use grid::GridIndex;
 pub use ndgrid::{CellNd, GridIndexNd};
 pub use sfc::{QueryStats, SfcIndex};
+pub use store::pipeline::{
+    IngestPipeline, PipelineConfig, PipelineStats, QueryRouter, RouterStats,
+};
 pub use store::{
-    CrashMode, FailpointFs, RealFs, SfcStore, Snapshot, StoreConfig, StoreFs, SyncPolicy,
+    CrashMode, DurabilityStats, FailpointFs, RealFs, SfcStore, Snapshot, StoreConfig, StoreFs,
+    SyncPolicy,
 };
 
 use crate::apps::Matrix;

@@ -59,6 +59,7 @@
 pub mod file;
 pub mod fs;
 pub mod segment;
+pub mod pipeline;
 pub mod planner;
 pub(crate) mod shard;
 pub mod wal;
@@ -159,6 +160,36 @@ impl Snapshot {
     }
 }
 
+/// Snapshot of a store's acknowledgment/durability counters
+/// ([`SfcStore::durability_stats`]) — the introspection probe the
+/// serving pipeline's ack contract rests on, mirroring
+/// [`SfcStore::key_path`]/[`SfcStore::sort_path`].
+///
+/// `wal_appends` counts WAL records written (one per `apply` batch on
+/// durable stores — each is an acknowledgment point), `fsyncs` counts
+/// WAL fsync calls actually issued under the store's [`SyncPolicy`],
+/// and `batches_coalesced` counts multi-row applies (batches that
+/// coalesced more than one row into a single WAL record + append).
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub struct DurabilityStats {
+    /// WAL records appended (0 on in-memory stores).
+    pub wal_appends: u64,
+    /// WAL fsyncs issued (0 on in-memory stores; lags `wal_appends`
+    /// under `SyncPolicy::EveryN`/`Never`).
+    pub fsyncs: u64,
+    /// Applies that carried more than one row — the batcher's
+    /// coalescing wins, visible on in-memory stores too.
+    pub batches_coalesced: u64,
+}
+
+/// Monotone counter cells behind [`DurabilityStats`].
+#[derive(Default)]
+struct StatCounters {
+    wal_appends: AtomicU64,
+    fsyncs: AtomicU64,
+    batches_coalesced: AtomicU64,
+}
+
 /// A visible candidate during resolution: the winning entry for an id.
 #[derive(Copy, Clone)]
 struct Hit {
@@ -240,6 +271,8 @@ pub struct SfcStore {
     published: Mutex<Arc<Snapshot>>,
     next_seq: AtomicU64,
     next_id: AtomicU32,
+    /// Ack/durability counters ([`SfcStore::durability_stats`]).
+    stats: StatCounters,
     /// `Some` when the store persists itself (see the module docs).
     durability: Option<Durability>,
 }
@@ -291,6 +324,7 @@ impl SfcStore {
             published: Mutex::new(Arc::new(snapshot)),
             next_seq: AtomicU64::new(1),
             next_id: AtomicU32::new(0),
+            stats: StatCounters::default(),
             durability: None,
         }
     }
@@ -384,12 +418,36 @@ impl SfcStore {
         crate::util::sort::sort_path(n, crate::util::sort::default_threads())
     }
 
+    /// Ack/durability counters since the store opened — introspection
+    /// mirroring [`SfcStore::key_path`]/[`SfcStore::sort_path`]. On
+    /// durable stores `wal_appends` counts acknowledgment points (one
+    /// WAL record per `apply` batch); the serving pipeline's contract —
+    /// the WAL append, not memory visibility, is what acknowledges a
+    /// mutation — is observable here: after `k` acknowledged batches,
+    /// `wal_appends == k` regardless of how many rows are still
+    /// buffer-resident.
+    pub fn durability_stats(&self) -> DurabilityStats {
+        DurabilityStats {
+            wal_appends: self.stats.wal_appends.load(Ordering::Relaxed),
+            fsyncs: self.stats.fsyncs.load(Ordering::Relaxed),
+            batches_coalesced: self.stats.batches_coalesced.load(Ordering::Relaxed),
+        }
+    }
+
     // ------------------------------------------------------------------
     // Mutation
     // ------------------------------------------------------------------
 
     /// Insert one row, returning its assigned id. Panics on durable I/O
     /// failure — use [`SfcStore::try_insert`] to handle it.
+    ///
+    /// **Ack semantics.** On durable stores the mutation is
+    /// acknowledged at the WAL append (+ fsync per [`SyncPolicy`]) —
+    /// *before* it becomes visible to new snapshots. Memory visibility
+    /// is not the commitment: a return from this method means the row
+    /// survives a crash (modulo an unsynced tail under the lazy sync
+    /// policies), even if it never left the write buffer. See
+    /// [`SfcStore::durability_stats`].
     pub fn insert(&self, point: &[f32]) -> u32 {
         self.try_insert(point).expect("store I/O failed")
     }
@@ -408,6 +466,12 @@ impl SfcStore {
     /// Insert a batch of rows; ids are assigned sequentially and the
     /// first one is returned. Panics on durable I/O failure — use
     /// [`SfcStore::try_insert_batch`] to handle it.
+    ///
+    /// The whole batch is one acknowledgment unit: a single WAL record
+    /// covers every row (one append, one policy fsync — see
+    /// [`SfcStore::insert`] for the ack contract), which is why the
+    /// serving pipeline coalesces queued ops into batches before
+    /// applying them.
     pub fn insert_batch(&self, rows: &Matrix) -> u32 {
         self.try_insert_batch(rows).expect("store I/O failed")
     }
@@ -440,6 +504,27 @@ impl SfcStore {
         self.apply(vec![id], m, true)
     }
 
+    /// Delete a batch of points in one acknowledgment unit: one
+    /// tombstone per `(ids[i], rows.row(i))` pair, a single WAL record
+    /// covering all of them (the delete-side twin of
+    /// [`SfcStore::insert_batch`] — the pipeline's batcher and the
+    /// trajectory scenario's sliding-window expiry both feed it).
+    /// Panics on durable I/O failure — use
+    /// [`SfcStore::try_delete_batch`] to handle it.
+    pub fn delete_batch(&self, ids: &[u32], rows: &Matrix) {
+        self.try_delete_batch(ids, rows).expect("store I/O failed")
+    }
+
+    /// Fallible [`SfcStore::delete_batch`].
+    pub fn try_delete_batch(&self, ids: &[u32], rows: &Matrix) -> io::Result<()> {
+        assert_eq!(rows.cols, self.dims, "row dims must match the store");
+        assert_eq!(ids.len(), rows.rows, "one id per tombstone row");
+        if ids.is_empty() {
+            return Ok(());
+        }
+        self.apply(ids.to_vec(), rows.clone(), true)
+    }
+
     /// Route a batch to shards and append per-shard mini-runs, then
     /// publish the new epoch.
     ///
@@ -454,6 +539,9 @@ impl SfcStore {
         let n = points.rows;
         if n == 0 {
             return Ok(());
+        }
+        if n > 1 {
+            self.stats.batches_coalesced.fetch_add(1, Ordering::Relaxed);
         }
         // Serialize durable mutations (no-op guard on in-memory stores);
         // lock order dur → routing → shard → published.
@@ -935,6 +1023,34 @@ impl SfcStore {
         (out, stats)
     }
 
+    /// [`SfcStore::query_window_on`] that also materializes the matched
+    /// rows: `(ids, rows)` with `rows.row(i)` the point of `ids[i]`.
+    /// This is the substrate of range deletes — the pipeline's
+    /// sliding-window expiry queries the victims on a snapshot and
+    /// tombstones them through [`SfcStore::delete_batch`] (a tombstone
+    /// needs its row to reproduce the curve key).
+    pub fn query_window_rows_on(
+        &self,
+        snap: &Snapshot,
+        lo: &[f32],
+        hi: &[f32],
+    ) -> (Vec<u32>, Matrix) {
+        let mut stats = QueryStats::default();
+        let plan = self.plan_window(snap, lo, hi, 0);
+        let mut rows = Matrix::zeros(0, self.dims);
+        let ids = Self::run_plan(snap, &plan, &mut stats, |_, row| {
+            if window_contains(lo, hi, row) {
+                rows.data.extend_from_slice(row);
+                rows.rows += 1;
+                true
+            } else {
+                false
+            }
+        });
+        debug_assert_eq!(ids.len(), rows.rows);
+        (ids, rows)
+    }
+
     /// Window query on the current epoch.
     pub fn query_window(&self, lo: &[f32], hi: &[f32]) -> Vec<u32> {
         self.query_window_on(&self.snapshot(), lo, hi)
@@ -1349,6 +1465,7 @@ impl SfcStore {
             published: Mutex::new(Arc::new(snapshot)),
             next_seq: AtomicU64::new(next_seq),
             next_id: AtomicU32::new(next_id),
+            stats: StatCounters::default(),
             durability: Some(Durability {
                 fs,
                 dir,
@@ -1385,6 +1502,7 @@ impl SfcStore {
             let mut st = d.state.lock().expect("store lock poisoned");
             if st.unsynced > 0 {
                 d.fs.fsync(&d.dir.join(&st.wal_name))?;
+                self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
                 st.unsynced = 0;
             }
         }
@@ -1423,6 +1541,7 @@ impl SfcStore {
         let rec = wal::encode_record(tomb, seq0, ids, points)?;
         let path = d.dir.join(&st.wal_name);
         d.fs.append(&path, &rec)?;
+        self.stats.wal_appends.fetch_add(1, Ordering::Relaxed);
         st.unsynced += 1;
         let do_sync = match d.sync {
             SyncPolicy::Always => true,
@@ -1431,6 +1550,7 @@ impl SfcStore {
         };
         if do_sync {
             d.fs.fsync(&path)?;
+            self.stats.fsyncs.fetch_add(1, Ordering::Relaxed);
             st.unsynced = 0;
         }
         Ok(())

@@ -1,0 +1,957 @@
+//! The serving pipeline: async backpressured ingestion + a replicated
+//! query tier over one [`SfcStore`] (ISSUE 10).
+//!
+//! This is the paper's §7 asynchronous-model idea — workers exchange
+//! intermediate results without a barrier, trading **bounded
+//! staleness** for zero idle time — applied to the store instead of
+//! k-means (the conceptual ancestor is
+//! [`crate::coordinator::async_model`]). Three moving parts:
+//!
+//! ```text
+//!  producers ──submit──▶ bounded MPSC queue ──▶ batcher ──apply──▶ SfcStore
+//!     ▲                   (rows-capped,          (coalesce ≤ N rows   │
+//!     └── blocks/sheds ──  gate + hysteresis)     or T µs → 1 WAL     │ debt
+//!         while gate closed                       record)             ▼
+//!                                                           maintenance worker
+//!  queries ──▶ QueryRouter ── replica snapshots ◀─refresh── (par_flush /
+//!              (fencepost affinity, least-loaded,             par_compact /
+//!               per-replica in-flight caps)                   par_rebalance)
+//! ```
+//!
+//! ## Backpressure invariants
+//!
+//! * The queue is bounded in **rows** ([`PipelineConfig::queue_rows`]).
+//!   An op is admitted only while `depth + cost ≤ cap` (an op larger
+//!   than the whole cap is admitted alone on an empty queue); when an
+//!   admission would overflow, the gate closes and every producer
+//!   blocks ([`IngestPipeline::submit_insert`]) or sheds
+//!   ([`IngestPipeline::try_submit_insert`]) until the batcher drains
+//!   the queue to the low watermark ([`PipelineConfig::resume_rows`])
+//!   — watermark hysteresis, so a saturated queue drains in bulk
+//!   instead of thrashing admit/block per op.
+//! * Ingest-vs-maintenance pacing: after each batch the batcher reads
+//!   the published epoch's per-shard segment counts; past the
+//!   compaction trigger it signals the maintenance worker, and past
+//!   the hard debt cap ([`PipelineConfig::debt_segments`]) it stalls
+//!   ingestion until maintenance catches up — compaction debt (and so
+//!   read amplification, and so query tail latency) cannot grow
+//!   unboundedly no matter the ingest rate.
+//!
+//! ## Durability / staleness contract
+//!
+//! The batcher applies each coalesced batch through the same
+//! [`SfcStore::insert_batch`]-shaped path as synchronous callers: on
+//! durable stores one WAL record covers the whole batch and its append
+//! (+ policy fsync) **is the acknowledgment point** — when
+//! [`IngestPipeline::drain`] returns, every submitted op has passed
+//! its WAL commit point (see [`SfcStore::durability_stats`]). Memory
+//! visibility trails acknowledgment by design; readers keep snapshot
+//! isolation untouched. Router replicas serve pinned [`Snapshot`]s and
+//! are refreshed one-per-batch by the batcher (plus explicitly via
+//! [`QueryRouter::refresh`]), so replica staleness is bounded by one
+//! in-flight batch; after `drain` + `refresh`, router results are
+//! bit-for-bit those of a fresh query on the store — which are in turn
+//! bit-for-bit those of a fresh [`SfcIndex`](crate::index::SfcIndex)
+//! over the live set (the parity asserted in `tests/pipeline.rs` and
+//! `bench_churn`).
+
+use super::{shard_of, SfcStore, Snapshot};
+use crate::apps::Matrix;
+use crate::coordinator::Coordinator;
+use std::collections::VecDeque;
+use std::io;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Tuning knobs of an [`IngestPipeline`].
+#[derive(Copy, Clone, Debug)]
+pub struct PipelineConfig {
+    /// Queue capacity in rows (the backpressure bound). Default 4096.
+    pub queue_rows: usize,
+    /// Low watermark: a closed gate reopens once the queue drains to
+    /// this many rows (`0` = half of `queue_rows`). Default 0.
+    pub resume_rows: usize,
+    /// Coalescing target: the batcher folds queued same-kind ops into
+    /// one `apply` of up to this many rows. Default 512.
+    pub batch_rows: usize,
+    /// Linger: with fewer than `batch_rows` rows queued the batcher
+    /// waits this long for more before applying a short batch.
+    /// Default 200µs.
+    pub batch_wait: Duration,
+    /// Background maintenance worker pool size (`0` = no maintenance
+    /// thread: triggers and pacing are disabled, the caller owns
+    /// flush/compact). Default 2.
+    pub maintenance_threads: usize,
+    /// Compaction trigger: signal the worker when any shard's published
+    /// segment count exceeds this. Default 12.
+    pub compact_segments: usize,
+    /// Rebalance trigger: signal the worker when the deepest shard
+    /// holds more than this multiple of the mean entries. Default 4.0.
+    pub rebalance_skew: f32,
+    /// Hard debt cap: the batcher stalls ingestion while any shard's
+    /// segment count exceeds this (`0` = `4 × compact_segments`).
+    /// Default 0.
+    pub debt_segments: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            queue_rows: 4096,
+            resume_rows: 0,
+            batch_rows: 512,
+            batch_wait: Duration::from_micros(200),
+            maintenance_threads: 2,
+            compact_segments: 12,
+            rebalance_skew: 4.0,
+            debt_segments: 0,
+        }
+    }
+}
+
+impl PipelineConfig {
+    fn resolved_resume(&self) -> usize {
+        if self.resume_rows == 0 {
+            self.queue_rows / 2
+        } else {
+            self.resume_rows.min(self.queue_rows)
+        }
+    }
+
+    fn resolved_debt(&self) -> usize {
+        if self.debt_segments == 0 {
+            self.compact_segments * 4
+        } else {
+            self.debt_segments
+        }
+    }
+}
+
+/// One queued mutation. Inserts carry ids pre-reserved at submission
+/// (so producers learn them immediately); deletes carry the rows their
+/// tombstones re-key from; expiry carries the window whose victims are
+/// looked up on the apply-time snapshot.
+enum OpKind {
+    Insert { first_id: u32, rows: Matrix },
+    Delete { ids: Vec<u32>, rows: Matrix },
+    Expire { lo: Vec<f32>, hi: Vec<f32> },
+}
+
+impl OpKind {
+    /// Queue-budget cost in rows (expiry counts 1 until resolved).
+    fn cost(&self) -> usize {
+        match self {
+            OpKind::Insert { rows, .. } => rows.rows,
+            OpKind::Delete { rows, .. } => rows.rows,
+            OpKind::Expire { .. } => 1,
+        }
+    }
+}
+
+struct QueuedOp {
+    ticket: u64,
+    kind: OpKind,
+}
+
+/// Queue state guarded by [`Shared::queue`].
+struct QueueState {
+    ops: VecDeque<QueuedOp>,
+    /// Total row cost of queued ops.
+    depth_rows: usize,
+    /// Closed on overflow; reopens at the low watermark (hysteresis).
+    gate_closed: bool,
+    shutdown: bool,
+    /// Tickets: monotone per submitted op; FIFO apply makes
+    /// `acked_ticket` the high-water mark of acknowledged ops.
+    next_ticket: u64,
+    acked_ticket: u64,
+    /// First apply failure (durable I/O): poisons the pipeline.
+    io_error: Option<String>,
+}
+
+/// Maintenance handshake guarded by [`Shared::maint`].
+struct MaintState {
+    pending: bool,
+    shutdown: bool,
+    /// Passes completed (so pacing can wait for "one more pass").
+    passes: u64,
+}
+
+/// Monotone pipeline counters (lock-free; see [`PipelineStats`]).
+#[derive(Default)]
+struct Counters {
+    submitted_ops: AtomicU64,
+    submitted_rows: AtomicU64,
+    acked_ops: AtomicU64,
+    applied_rows: AtomicU64,
+    expired_rows: AtomicU64,
+    batches: AtomicU64,
+    max_batch_rows: AtomicU64,
+    max_queue_rows: AtomicU64,
+    blocked_producers: AtomicU64,
+    shed_ops: AtomicU64,
+    paced_stalls: AtomicU64,
+    flushes: AtomicU64,
+    compactions: AtomicU64,
+    rebalances: AtomicU64,
+}
+
+/// A point-in-time copy of the pipeline's counters.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct PipelineStats {
+    /// Ops admitted into the queue.
+    pub submitted_ops: u64,
+    /// Row cost admitted into the queue.
+    pub submitted_rows: u64,
+    /// Ops whose batch passed its acknowledgment point.
+    pub acked_ops: u64,
+    /// Rows applied to the store (inserts + explicit tombstones).
+    pub applied_rows: u64,
+    /// Rows tombstoned by expiry windows.
+    pub expired_rows: u64,
+    /// `apply` calls issued by the batcher.
+    pub batches: u64,
+    /// Largest single coalesced batch, in rows.
+    pub max_batch_rows: u64,
+    /// Deepest the queue ever got, in rows (≤ `queue_rows` unless a
+    /// single op exceeded the whole cap).
+    pub max_queue_rows: u64,
+    /// Producer blocking events (a submit that had to wait at a closed
+    /// gate counts once).
+    pub blocked_producers: u64,
+    /// Ops rejected by `try_submit_*` at a closed gate.
+    pub shed_ops: u64,
+    /// Batcher stalls at the hard debt cap (ingest-vs-maintenance
+    /// pacing events).
+    pub paced_stalls: u64,
+    /// Background flush passes.
+    pub flushes: u64,
+    /// Background compaction passes.
+    pub compactions: u64,
+    /// Background rebalance passes.
+    pub rebalances: u64,
+}
+
+/// State shared between producers, the batcher and the maintenance
+/// worker.
+struct Shared {
+    store: Arc<SfcStore>,
+    cfg: PipelineConfig,
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    acked: Condvar,
+    maint: Mutex<MaintState>,
+    maint_cv: Condvar,
+    maint_done: Condvar,
+    counters: Counters,
+    router: Option<Arc<QueryRouter>>,
+}
+
+/// The ingestion front-end: a bounded MPSC queue of insert/delete/
+/// expiry ops, a batcher thread coalescing them into store batches,
+/// and an optional background maintenance worker (see the
+/// [module docs](self)).
+///
+/// Producers call `submit_*` (blocking backpressure) or `try_submit_*`
+/// (shedding) from any number of threads. [`IngestPipeline::drain`]
+/// waits until every admitted op is acknowledged;
+/// [`IngestPipeline::close`] drains, settles maintenance, stops the
+/// threads and returns the final [`PipelineStats`]. Submitting after
+/// `close` began is a caller bug (panics).
+pub struct IngestPipeline {
+    shared: Arc<Shared>,
+    batcher: Option<JoinHandle<()>>,
+    maintenance: Option<JoinHandle<()>>,
+}
+
+impl IngestPipeline {
+    /// Start the pipeline over `store` (in-memory or durable — the ack
+    /// point is wherever the store's `apply` commits).
+    pub fn new(store: Arc<SfcStore>, cfg: PipelineConfig) -> IngestPipeline {
+        Self::with_router(store, cfg, None)
+    }
+
+    /// [`IngestPipeline::new`] plus a router whose replicas the batcher
+    /// refreshes one-per-batch (bounded staleness: a replica lags the
+    /// store by at most `replicas` batches).
+    pub fn with_router(
+        store: Arc<SfcStore>,
+        cfg: PipelineConfig,
+        router: Option<Arc<QueryRouter>>,
+    ) -> IngestPipeline {
+        assert!(cfg.queue_rows > 0, "queue capacity must be positive");
+        assert!(cfg.batch_rows > 0, "batch size must be positive");
+        let shared = Arc::new(Shared {
+            store,
+            cfg,
+            queue: Mutex::new(QueueState {
+                ops: VecDeque::new(),
+                depth_rows: 0,
+                gate_closed: false,
+                shutdown: false,
+                next_ticket: 0,
+                acked_ticket: 0,
+                io_error: None,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            acked: Condvar::new(),
+            maint: Mutex::new(MaintState { pending: false, shutdown: false, passes: 0 }),
+            maint_cv: Condvar::new(),
+            maint_done: Condvar::new(),
+            counters: Counters::default(),
+            router,
+        });
+        let batcher = {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("sfc-pipeline-batcher".into())
+                .spawn(move || batcher_loop(&sh))
+                .expect("spawn batcher thread")
+        };
+        let maintenance = if cfg.maintenance_threads > 0 {
+            let sh = Arc::clone(&shared);
+            Some(
+                std::thread::Builder::new()
+                    .name("sfc-pipeline-maintenance".into())
+                    .spawn(move || maintenance_loop(&sh))
+                    .expect("spawn maintenance thread"),
+            )
+        } else {
+            None
+        };
+        IngestPipeline { shared, batcher: Some(batcher), maintenance }
+    }
+
+    /// The store this pipeline mutates.
+    pub fn store(&self) -> &Arc<SfcStore> {
+        &self.shared.store
+    }
+
+    /// Submit an insert batch, blocking while the gate is closed.
+    /// Ids are reserved immediately (sequential from the returned
+    /// first id); acknowledgment happens when the batcher's covering
+    /// `apply` commits — wait for it with [`IngestPipeline::drain`].
+    pub fn submit_insert(&self, rows: Matrix) -> u32 {
+        assert_eq!(rows.cols, self.shared.store.dims(), "row dims must match the store");
+        let n = rows.rows as u32;
+        let first_id = self.shared.store.next_id.fetch_add(n, Ordering::Relaxed);
+        if n > 0 {
+            self.enqueue(OpKind::Insert { first_id, rows }, true);
+        }
+        first_id
+    }
+
+    /// Shedding [`IngestPipeline::submit_insert`]: returns `None`
+    /// (without reserving ids) instead of blocking when the gate is
+    /// closed.
+    pub fn try_submit_insert(&self, rows: Matrix) -> Option<u32> {
+        assert_eq!(rows.cols, self.shared.store.dims(), "row dims must match the store");
+        let n = rows.rows as u32;
+        if n == 0 {
+            return Some(self.shared.store.next_id.load(Ordering::Relaxed));
+        }
+        if !self.admit(rows.rows, false) {
+            return None;
+        }
+        let first_id = self.shared.store.next_id.fetch_add(n, Ordering::Relaxed);
+        self.enqueue_admitted(OpKind::Insert { first_id, rows });
+        Some(first_id)
+    }
+
+    /// Submit tombstones for `(ids[i], rows.row(i))`, blocking while
+    /// the gate is closed.
+    pub fn submit_delete(&self, ids: &[u32], rows: &Matrix) {
+        assert_eq!(rows.cols, self.shared.store.dims(), "row dims must match the store");
+        assert_eq!(ids.len(), rows.rows, "one id per tombstone row");
+        if ids.is_empty() {
+            return;
+        }
+        self.enqueue(OpKind::Delete { ids: ids.to_vec(), rows: rows.clone() }, true);
+    }
+
+    /// Shedding [`IngestPipeline::submit_delete`].
+    pub fn try_submit_delete(&self, ids: &[u32], rows: &Matrix) -> bool {
+        assert_eq!(rows.cols, self.shared.store.dims(), "row dims must match the store");
+        assert_eq!(ids.len(), rows.rows, "one id per tombstone row");
+        if ids.is_empty() {
+            return true;
+        }
+        if !self.admit(rows.rows, false) {
+            return false;
+        }
+        self.enqueue_admitted(OpKind::Delete { ids: ids.to_vec(), rows: rows.clone() });
+        true
+    }
+
+    /// Submit a range delete: every row inside the closed window
+    /// `[lo, hi]` **at apply time** is tombstoned in one batch — the
+    /// trajectory scenario's sliding-window expiry. FIFO ordering
+    /// makes "at apply time" precise: the expiry sees exactly the ops
+    /// submitted before it.
+    pub fn submit_expire(&self, lo: &[f32], hi: &[f32]) {
+        assert_eq!(lo.len(), self.shared.store.dims(), "window dims must match the store");
+        assert_eq!(hi.len(), self.shared.store.dims(), "window dims must match the store");
+        self.enqueue(OpKind::Expire { lo: lo.to_vec(), hi: hi.to_vec() }, true);
+    }
+
+    /// Block until the queue is empty — gate admission for an op of
+    /// `cost` rows. Returns whether the op was admitted (always true
+    /// when `block`).
+    fn admit(&self, cost: usize, block: bool) -> bool {
+        let sh = &*self.shared;
+        let mut q = sh.queue.lock().expect("pipeline lock poisoned");
+        let cap = sh.cfg.queue_rows;
+        let mut blocked = false;
+        loop {
+            assert!(!q.shutdown, "submit on a closing pipeline");
+            let fits = q.depth_rows + cost <= cap || q.depth_rows == 0;
+            if !q.gate_closed && fits {
+                break;
+            }
+            q.gate_closed = true;
+            if !block {
+                sh.counters.shed_ops.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            if !blocked {
+                blocked = true;
+                sh.counters.blocked_producers.fetch_add(1, Ordering::Relaxed);
+            }
+            q = sh.not_full.wait(q).expect("pipeline lock poisoned");
+        }
+        // Reserve the admitted cost while still holding the lock so a
+        // sibling cannot over-admit past the cap in the gap before
+        // `enqueue_admitted`.
+        q.depth_rows += cost;
+        true
+    }
+
+    /// Push an already-admitted op (its cost is pre-charged).
+    fn enqueue_admitted(&self, kind: OpKind) {
+        let sh = &*self.shared;
+        let cost = kind.cost();
+        let mut q = sh.queue.lock().expect("pipeline lock poisoned");
+        q.next_ticket += 1;
+        let ticket = q.next_ticket;
+        q.ops.push_back(QueuedOp { ticket, kind });
+        sh.counters.max_queue_rows.fetch_max(q.depth_rows as u64, Ordering::Relaxed);
+        sh.counters.submitted_ops.fetch_add(1, Ordering::Relaxed);
+        sh.counters.submitted_rows.fetch_add(cost as u64, Ordering::Relaxed);
+        drop(q);
+        sh.not_empty.notify_one();
+    }
+
+    fn enqueue(&self, kind: OpKind, block: bool) {
+        let admitted = self.admit(kind.cost(), block);
+        debug_assert!(admitted, "blocking admission cannot fail");
+        self.enqueue_admitted(kind);
+    }
+
+    /// Wait until every op admitted so far is acknowledged (its batch
+    /// passed the store's commit point). Returns the first apply error
+    /// if the pipeline was poisoned by one.
+    pub fn drain(&self) -> io::Result<()> {
+        let sh = &*self.shared;
+        let mut q = sh.queue.lock().expect("pipeline lock poisoned");
+        let target = q.next_ticket;
+        while q.acked_ticket < target && q.io_error.is_none() {
+            q = sh.acked.wait(q).expect("pipeline lock poisoned");
+        }
+        match &q.io_error {
+            Some(e) => Err(io::Error::other(e.clone())),
+            None => Ok(()),
+        }
+    }
+
+    /// Run one synchronous maintenance pass after draining: signal the
+    /// worker and wait for it to finish (no-op without a maintenance
+    /// thread). Used by quiescence phases to settle compaction debt
+    /// deterministically before parity checks.
+    pub fn settle_maintenance(&self) {
+        if self.maintenance.is_none() {
+            return;
+        }
+        let sh = &*self.shared;
+        let mut m = sh.maint.lock().expect("pipeline lock poisoned");
+        let target = m.passes + 1;
+        m.pending = true;
+        sh.maint_cv.notify_one();
+        while m.passes < target && !m.shutdown {
+            m = sh.maint_done.wait(m).expect("pipeline lock poisoned");
+        }
+    }
+
+    /// Current counter values.
+    pub fn stats(&self) -> PipelineStats {
+        let c = &self.shared.counters;
+        PipelineStats {
+            submitted_ops: c.submitted_ops.load(Ordering::Relaxed),
+            submitted_rows: c.submitted_rows.load(Ordering::Relaxed),
+            acked_ops: c.acked_ops.load(Ordering::Relaxed),
+            applied_rows: c.applied_rows.load(Ordering::Relaxed),
+            expired_rows: c.expired_rows.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            max_batch_rows: c.max_batch_rows.load(Ordering::Relaxed),
+            max_queue_rows: c.max_queue_rows.load(Ordering::Relaxed),
+            blocked_producers: c.blocked_producers.load(Ordering::Relaxed),
+            shed_ops: c.shed_ops.load(Ordering::Relaxed),
+            paced_stalls: c.paced_stalls.load(Ordering::Relaxed),
+            flushes: c.flushes.load(Ordering::Relaxed),
+            compactions: c.compactions.load(Ordering::Relaxed),
+            rebalances: c.rebalances.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drain, stop both threads (the batcher finishes the queue first)
+    /// and return the final stats. Idempotent via [`Drop`] — an
+    /// explicit `close` surfaces apply errors instead of discarding
+    /// them.
+    pub fn close(mut self) -> io::Result<PipelineStats> {
+        let drained = self.drain();
+        self.stop_threads();
+        let stats = self.stats();
+        drained?;
+        Ok(stats)
+    }
+
+    fn stop_threads(&mut self) {
+        let sh = &*self.shared;
+        {
+            let mut q = sh.queue.lock().expect("pipeline lock poisoned");
+            q.shutdown = true;
+            sh.not_empty.notify_all();
+            sh.not_full.notify_all();
+        }
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+        {
+            let mut m = sh.maint.lock().expect("pipeline lock poisoned");
+            m.shutdown = true;
+            sh.maint_cv.notify_all();
+            sh.maint_done.notify_all();
+        }
+        if let Some(h) = self.maintenance.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for IngestPipeline {
+    fn drop(&mut self) {
+        // `close` already joined both threads; a bare drop still drains
+        // the queue (the batcher empties it before exiting).
+        self.stop_threads();
+    }
+}
+
+/// Max published segment count across shards — the compaction-debt
+/// metric both triggers and pacing read.
+fn max_debt(snap: &Snapshot) -> usize {
+    snap.shard_segment_counts().into_iter().max().unwrap_or(0)
+}
+
+/// The batcher thread: pop a coalescible prefix, apply it as one
+/// batch, acknowledge, then handle triggers/pacing/router refresh.
+fn batcher_loop(sh: &Shared) {
+    loop {
+        let mut q = sh.queue.lock().expect("pipeline lock poisoned");
+        while q.ops.is_empty() && !q.shutdown {
+            q = sh.not_empty.wait(q).expect("pipeline lock poisoned");
+        }
+        if q.ops.is_empty() {
+            return; // shutdown with a drained queue
+        }
+        // Linger for coalescing: under the batch target and not
+        // shutting down, give producers one window to top the batch up.
+        if !q.shutdown && q.depth_rows < sh.cfg.batch_rows && !sh.cfg.batch_wait.is_zero() {
+            let (g, _) = sh
+                .not_empty
+                .wait_timeout(q, sh.cfg.batch_wait)
+                .expect("pipeline lock poisoned");
+            q = g;
+        }
+        // Pop a same-kind prefix up to the batch target. Expiry ops
+        // apply alone (their victim set depends on apply order).
+        let mut ids: Vec<u32> = Vec::new();
+        let mut rows = Matrix::zeros(0, sh.store.dims());
+        let mut tomb = false;
+        let mut expire: Option<(Vec<f32>, Vec<f32>)> = None;
+        let mut last_ticket = 0u64;
+        let mut popped_ops = 0u64;
+        let mut popped_rows = 0usize;
+        while let Some(op) = q.ops.front() {
+            let op_tomb = matches!(op.kind, OpKind::Delete { .. });
+            let op_expire = matches!(op.kind, OpKind::Expire { .. });
+            if popped_ops > 0 {
+                if op_expire || expire.is_some() || op_tomb != tomb {
+                    break; // kind boundary: close the batch
+                }
+                if rows.rows + op.kind.cost() > sh.cfg.batch_rows {
+                    break; // batch target reached
+                }
+            }
+            let op = q.ops.pop_front().expect("front() was Some");
+            popped_rows += op.kind.cost();
+            last_ticket = op.ticket;
+            popped_ops += 1;
+            match op.kind {
+                OpKind::Insert { first_id, rows: r } => {
+                    ids.extend(first_id..first_id + r.rows as u32);
+                    rows.data.extend_from_slice(&r.data);
+                    rows.rows += r.rows;
+                }
+                OpKind::Delete { ids: del_ids, rows: r } => {
+                    tomb = true;
+                    ids.extend_from_slice(&del_ids);
+                    rows.data.extend_from_slice(&r.data);
+                    rows.rows += r.rows;
+                }
+                OpKind::Expire { lo, hi } => expire = Some((lo, hi)),
+            }
+        }
+        q.depth_rows -= popped_rows;
+        // Hysteresis: reopen the gate only at the low watermark.
+        if q.gate_closed && q.depth_rows <= sh.cfg.resolved_resume() {
+            q.gate_closed = false;
+            sh.not_full.notify_all();
+        }
+        drop(q);
+
+        // Apply outside the queue lock so producers keep enqueueing.
+        let result = if let Some((lo, hi)) = expire {
+            let snap = sh.store.snapshot();
+            let (victims, vrows) = sh.store.query_window_rows_on(&snap, &lo, &hi);
+            let n = victims.len() as u64;
+            let r = if victims.is_empty() {
+                Ok(())
+            } else {
+                sh.store.apply(victims, vrows, true)
+            };
+            if r.is_ok() {
+                sh.counters.expired_rows.fetch_add(n, Ordering::Relaxed);
+                sh.counters.applied_rows.fetch_add(n, Ordering::Relaxed);
+            }
+            r
+        } else {
+            let n = rows.rows as u64;
+            let r = sh.store.apply(ids, rows, tomb);
+            if r.is_ok() {
+                sh.counters.applied_rows.fetch_add(n, Ordering::Relaxed);
+                sh.counters.max_batch_rows.fetch_max(n, Ordering::Relaxed);
+            }
+            r
+        };
+        sh.counters.batches.fetch_add(1, Ordering::Relaxed);
+
+        // Acknowledge (or poison on the first apply error).
+        {
+            let mut q = sh.queue.lock().expect("pipeline lock poisoned");
+            match &result {
+                Ok(()) => {
+                    q.acked_ticket = last_ticket;
+                    sh.counters.acked_ops.fetch_add(popped_ops, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    if q.io_error.is_none() {
+                        q.io_error = Some(e.to_string());
+                    }
+                    q.shutdown = true;
+                    sh.not_full.notify_all();
+                }
+            }
+            sh.acked.notify_all();
+            if result.is_err() {
+                return;
+            }
+        }
+
+        // Bounded staleness: one replica refresh per batch.
+        if let Some(router) = &sh.router {
+            router.refresh_one();
+        }
+
+        // Maintenance triggers + hard-debt pacing.
+        if sh.cfg.maintenance_threads > 0 {
+            let snap = sh.store.snapshot();
+            let debt = max_debt(&snap);
+            let entries = snap.shard_entry_counts();
+            let total: usize = entries.iter().sum();
+            let mean = total as f32 / entries.len().max(1) as f32;
+            let max_entries = entries.into_iter().max().unwrap_or(0);
+            let skewed = total > 0 && max_entries as f32 > mean * sh.cfg.rebalance_skew;
+            if debt > sh.cfg.compact_segments || skewed {
+                let mut m = sh.maint.lock().expect("pipeline lock poisoned");
+                m.pending = true;
+                sh.maint_cv.notify_one();
+            }
+            if debt > sh.cfg.resolved_debt() {
+                // Pacing: stall ingestion until a maintenance pass
+                // lands (re-check on a timeout so a racing pass that
+                // finished before we started waiting cannot strand us).
+                sh.counters.paced_stalls.fetch_add(1, Ordering::Relaxed);
+                let mut m = sh.maint.lock().expect("pipeline lock poisoned");
+                while !m.shutdown && max_debt(&sh.store.snapshot()) > sh.cfg.resolved_debt() {
+                    m.pending = true;
+                    sh.maint_cv.notify_one();
+                    let (g, _) = sh
+                        .maint_done
+                        .wait_timeout(m, Duration::from_millis(5))
+                        .expect("pipeline lock poisoned");
+                    m = g;
+                }
+            }
+        }
+    }
+}
+
+/// The maintenance worker: on each signal, pick the most urgent pass —
+/// compact past the segment trigger, rebalance past the skew trigger,
+/// otherwise flush — and run it through a private worker pool, off the
+/// mutating thread.
+fn maintenance_loop(sh: &Shared) {
+    let coord = Coordinator::new(sh.cfg.maintenance_threads);
+    loop {
+        {
+            let mut m = sh.maint.lock().expect("pipeline lock poisoned");
+            while !m.pending && !m.shutdown {
+                m = sh.maint_cv.wait(m).expect("pipeline lock poisoned");
+            }
+            if m.shutdown {
+                return;
+            }
+            m.pending = false;
+        }
+        let snap = sh.store.snapshot();
+        let entries = snap.shard_entry_counts();
+        let total: usize = entries.iter().sum();
+        let mean = total as f32 / entries.len().max(1) as f32;
+        let max_entries = entries.into_iter().max().unwrap_or(0);
+        let result = if max_debt(&snap) > sh.cfg.compact_segments {
+            sh.counters.compactions.fetch_add(1, Ordering::Relaxed);
+            sh.store.try_par_compact(&coord)
+        } else if total > 0 && max_entries as f32 > mean * sh.cfg.rebalance_skew {
+            sh.counters.rebalances.fetch_add(1, Ordering::Relaxed);
+            sh.store.try_par_rebalance(&coord)
+        } else {
+            sh.counters.flushes.fetch_add(1, Ordering::Relaxed);
+            sh.store.try_par_flush(&coord)
+        };
+        let mut m = sh.maint.lock().expect("pipeline lock poisoned");
+        m.passes += 1;
+        if let Err(e) = result {
+            let mut q = sh.queue.lock().expect("pipeline lock poisoned");
+            if q.io_error.is_none() {
+                q.io_error = Some(e.to_string());
+            }
+            sh.acked.notify_all();
+            m.shutdown = true;
+        }
+        sh.maint_done.notify_all();
+        if m.shutdown {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Query tier
+// ---------------------------------------------------------------------
+
+/// One router replica: a pinned read snapshot plus load accounting.
+struct Replica {
+    snap: RwLock<Arc<Snapshot>>,
+    inflight: AtomicUsize,
+    max_inflight: AtomicUsize,
+    served: AtomicU64,
+}
+
+/// Per-replica load figures inside [`RouterStats`].
+#[derive(Copy, Clone, Debug, Default)]
+pub struct ReplicaStats {
+    /// Queries this replica served.
+    pub served: u64,
+    /// Peak concurrent queries observed (≤ the in-flight cap).
+    pub max_inflight: usize,
+}
+
+/// A point-in-time copy of a router's load counters.
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    /// Per-replica figures, indexed by replica.
+    pub replicas: Vec<ReplicaStats>,
+    /// Times a query found every replica at its in-flight cap and had
+    /// to wait for a slot.
+    pub stalls: u64,
+}
+
+/// The replicated query tier: `n` pinned read snapshots of one store
+/// behind fencepost-affine, least-loaded routing with per-replica
+/// in-flight caps (see the [module docs](self)).
+///
+/// Replication here is snapshot replication — the N "replicas" share
+/// the store's immutable segments through `Arc`s, so a replica costs
+/// an epoch pointer, not a copy of the data. Each query pins one
+/// replica's snapshot: bounded staleness, never a torn read. After
+/// [`QueryRouter::refresh`] on a quiescent store, results are
+/// bit-for-bit identical to direct store queries.
+pub struct QueryRouter {
+    store: Arc<SfcStore>,
+    replicas: Vec<Replica>,
+    /// Per-replica in-flight cap.
+    cap: usize,
+    /// Guards slot acquisition/release so cap waits never miss a wake.
+    gate: Mutex<()>,
+    slot_free: Condvar,
+    /// Rotation cursor for [`QueryRouter::refresh_one`].
+    rr: AtomicUsize,
+    stalls: AtomicU64,
+}
+
+impl QueryRouter {
+    /// A router with `replicas` snapshots of `store` (all current as
+    /// of now) and `inflight_cap` concurrent queries per replica.
+    pub fn new(store: Arc<SfcStore>, replicas: usize, inflight_cap: usize) -> QueryRouter {
+        assert!(replicas > 0, "router needs at least one replica");
+        assert!(inflight_cap > 0, "in-flight cap must be positive");
+        let snap = store.snapshot();
+        let replicas = (0..replicas)
+            .map(|_| Replica {
+                snap: RwLock::new(Arc::clone(&snap)),
+                inflight: AtomicUsize::new(0),
+                max_inflight: AtomicUsize::new(0),
+                served: AtomicU64::new(0),
+            })
+            .collect();
+        QueryRouter {
+            store,
+            replicas,
+            cap: inflight_cap,
+            gate: Mutex::new(()),
+            slot_free: Condvar::new(),
+            rr: AtomicUsize::new(0),
+            stalls: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of replicas.
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Pull the store's current epoch into every replica.
+    pub fn refresh(&self) {
+        let snap = self.store.snapshot();
+        for r in &self.replicas {
+            *r.snap.write().expect("router lock poisoned") = Arc::clone(&snap);
+        }
+    }
+
+    /// Refresh one replica (round-robin) — the batcher's per-batch
+    /// staleness bound.
+    pub fn refresh_one(&self) {
+        let i = self.rr.fetch_add(1, Ordering::Relaxed) % self.replicas.len();
+        let snap = self.store.snapshot();
+        *self.replicas[i].snap.write().expect("router lock poisoned") = snap;
+    }
+
+    /// Preferred replica for a query anchored at `point`: the shard
+    /// fencepost owning its curve key, mapped onto the replica ring —
+    /// queries against the same shard land on the same replica (warm
+    /// segment caches), spilling to the least-loaded one under load.
+    fn preferred(&self, point: &[f32]) -> usize {
+        let key = self.store.quantizer().key_of(self.store.mapper_nd(), point);
+        let snap = self.replicas[0].snap.read().expect("router lock poisoned");
+        shard_of(snap.bounds(), key) % self.replicas.len()
+    }
+
+    /// Claim a slot: scan from `preferred` for the least-loaded
+    /// replica under the cap, waiting when all are saturated. Returns
+    /// the replica index and its pinned snapshot.
+    fn acquire(&self, preferred: usize) -> (usize, Arc<Snapshot>) {
+        let n = self.replicas.len();
+        let mut g = self.gate.lock().expect("router lock poisoned");
+        let mut stalled = false;
+        let idx = loop {
+            let mut best: Option<(usize, usize)> = None;
+            for off in 0..n {
+                let i = (preferred + off) % n;
+                let load = self.replicas[i].inflight.load(Ordering::Relaxed);
+                let better = match best {
+                    None => true,
+                    Some((_, l)) => load < l,
+                };
+                if load < self.cap && better {
+                    best = Some((i, load));
+                }
+            }
+            if let Some((i, _)) = best {
+                break i;
+            }
+            if !stalled {
+                stalled = true;
+                self.stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            g = self.slot_free.wait(g).expect("router lock poisoned");
+        };
+        let r = &self.replicas[idx];
+        let now = r.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        r.max_inflight.fetch_max(now, Ordering::Relaxed);
+        r.served.fetch_add(1, Ordering::Relaxed);
+        drop(g);
+        let snap = Arc::clone(&r.snap.read().expect("router lock poisoned"));
+        (idx, snap)
+    }
+
+    fn release(&self, idx: usize) {
+        // Decrement under the gate so a cap-waiter's scan-then-wait
+        // cannot miss the freed slot.
+        let _g = self.gate.lock().expect("router lock poisoned");
+        self.replicas[idx].inflight.fetch_sub(1, Ordering::Relaxed);
+        self.slot_free.notify_one();
+    }
+
+    /// Window query on the routed replica's snapshot.
+    pub fn query_window(&self, lo: &[f32], hi: &[f32]) -> Vec<u32> {
+        let center: Vec<f32> = lo.iter().zip(hi).map(|(a, b)| (a + b) * 0.5).collect();
+        let (idx, snap) = self.acquire(self.preferred(&center));
+        let out = self.store.query_window_on(&snap, lo, hi);
+        self.release(idx);
+        out
+    }
+
+    /// Point query on the routed replica's snapshot.
+    pub fn query_point(&self, q: &[f32]) -> Vec<u32> {
+        let (idx, snap) = self.acquire(self.preferred(q));
+        let out = self.store.query_point_on(&snap, q);
+        self.release(idx);
+        out
+    }
+
+    /// kNN query on the routed replica's snapshot.
+    pub fn query_knn(&self, q: &[f32], k: usize) -> Vec<(u32, f32)> {
+        let (idx, snap) = self.acquire(self.preferred(q));
+        let out = self.store.query_knn_on(&snap, q, k);
+        self.release(idx);
+        out
+    }
+
+    /// Current load counters.
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| ReplicaStats {
+                    served: r.served.load(Ordering::Relaxed),
+                    max_inflight: r.max_inflight.load(Ordering::Relaxed),
+                })
+                .collect(),
+            stalls: self.stalls.load(Ordering::Relaxed),
+        }
+    }
+}

@@ -52,7 +52,12 @@
 //!   a sharded, mutable store of curve-key-sorted LSM segments with
 //!   lock-free-for-readers snapshot queries, a range-routed query
 //!   planner (decompose once, cut at the curve-order shard fenceposts)
-//!   and equi-depth shard rebalancing. One shared
+//!   and equi-depth shard rebalancing. The async serving pipeline on
+//!   top ([`index::IngestPipeline`]) batches and backpressures
+//!   concurrent insert/delete/expire producers, pushes
+//!   flush/compact/rebalance to background maintenance threads, and
+//!   fans queries across pinned snapshot replicas through
+//!   [`index::QueryRouter`]. One shared
 //!   [`index::quantize::Quantizer`] keeps every float→cell map
 //!   identical across all of them.
 //! * [`cachesim`] — the cache-hierarchy simulator used to regenerate the

@@ -17,6 +17,12 @@
 //!                                # sharded mutable store: mixed workload;
 //!                                # --dir persists it (and reopens+verifies
 //!                                # an existing store after a crash)
+//! sfc-mine serve [--n 100000 --qps 20000 --seconds 5 --producers 4
+//!                 --replicas 3 --maintenance-threads 2
+//!                 --scenario uniform|trajectory]
+//!                                # serving pipeline under sustained churn:
+//!                                # backpressured async ingest + replicated
+//!                                # query tier, p50/p99/p999 under load
 //! ```
 //!
 //! All curve dispatch goes through the engine ([`CurveKind::mapper`] /
@@ -34,7 +40,14 @@
 //! sharded, mutable `SfcStore` through a bulk ingest plus a mixed
 //! insert/delete/query phase, asserts recall 1.0 against a freshly
 //! rebuilt `SfcIndex` on the live set, and reports snapshot-query
-//! thread scaling.
+//! thread scaling. The `serve` command runs the full serving pipeline
+//! — async backpressured ingestion, background maintenance workers and
+//! the replicated query router — under a sustained mixed workload at a
+//! target QPS, reports p50/p99/p999 query latency under churn vs
+//! quiescence, then drains and asserts bit-for-bit parity against a
+//! fresh `SfcIndex` (`--scenario trajectory` ingests (x, y, t) points
+//! and expires a sliding time window via range deletes through the
+//! pipeline).
 
 use sfc_mine::apps::kmeans::{hilbert_point_order, init_centroids, make_blobs, permute_rows, KMeans};
 use sfc_mine::apps::matmul::{flops, matmul_curve, matmul_tiled, matmul_transposed};
@@ -50,6 +63,7 @@ use sfc_mine::curves::{metrics, CurveKind};
 use sfc_mine::index::SfcIndex;
 use sfc_mine::runtime::{artifact, Engine};
 use sfc_mine::util::cli::Args;
+use sfc_mine::util::latency::{fmt_ns, LatencyHistogram};
 use sfc_mine::util::rng::Rng;
 use sfc_mine::util::table::Table;
 use std::time::Instant;
@@ -66,12 +80,13 @@ fn main() {
         Some("simjoin") => simjoin_cmd(&args),
         Some("query") => query_cmd(&args),
         Some("store") => store_cmd(&args),
+        Some("serve") => serve_cmd(&args),
         other => {
             if let Some(cmd) = other {
                 eprintln!("unknown command '{cmd}'\n");
             }
             eprintln!(
-                "usage: sfc-mine <info|fig1|curves|matmul|linalg|kmeans|simjoin|query|store> \
+                "usage: sfc-mine <info|fig1|curves|matmul|linalg|kmeans|simjoin|query|store|serve> \
                  [--key value]…\n\
                  see README.md for options"
             );
@@ -900,7 +915,7 @@ fn store_cmd(args: &Args) {
 
     // ---- phase 2: mixed insert/delete/query ----------------------------
     let (mut n_ins, mut n_del, mut n_q) = (0u64, 0u64, 0u64);
-    let mut q_lat: Vec<u64> = Vec::new();
+    let mut q_lat = LatencyHistogram::new();
     let mut agg = sfc_mine::index::QueryStats::default();
     let mut batch_rows = Matrix::zeros(0, d);
     let t0 = Instant::now();
@@ -916,7 +931,7 @@ fn store_cmd(args: &Args) {
             let (lo, hi) = random_window(&live[c].1.clone());
             let tq = Instant::now();
             let (_, s) = store.query_window_stats(&lo, &hi, 0);
-            q_lat.push(tq.elapsed().as_nanos() as u64);
+            q_lat.record_duration(tq.elapsed());
             agg.ranges += s.ranges;
             agg.candidates += s.candidates;
             agg.results += s.results;
@@ -947,8 +962,6 @@ fn store_cmd(args: &Args) {
         }
     }
     let mixed_dt = t0.elapsed();
-    q_lat.sort_unstable();
-    let p50 = q_lat.get(q_lat.len() / 2).copied().unwrap_or(0);
     t.row(vec![
         "mixed workload".into(),
         ops.to_string(),
@@ -961,7 +974,7 @@ fn store_cmd(args: &Args) {
             "  window queries".into(),
             n_q.to_string(),
             "-".into(),
-            format!("{:.3} ms/query p50", p50 as f64 / 1e6),
+            q_lat.summary(),
             format!(
                 "{:.1} shards, {:.1} segs, {:.1} ranges/query, filter {:.0}%",
                 agg.shards_touched as f64 / n_q as f64,
@@ -1153,5 +1166,416 @@ fn store_reopen_cmd(dir: &str, queries: usize, frac: f32) {
         "recovered {} rows, parity OK (cold open {}, {nq} window queries verified)",
         live_ids.len(),
         fmt_ms(open_dt),
+    );
+}
+
+/// One churn producer's query-latency record (merged after the run).
+#[derive(Default)]
+struct ChurnLat {
+    window: LatencyHistogram,
+    knn: LatencyHistogram,
+    point: LatencyHistogram,
+    ops: u64,
+    rows: u64,
+}
+
+/// The `serve` subcommand: run the full serving pipeline — async
+/// backpressured ingestion ([`sfc_mine::index::IngestPipeline`]),
+/// background maintenance workers, and the replicated query tier
+/// ([`sfc_mine::index::QueryRouter`]) — under a sustained mixed
+/// insert/delete/window/kNN/point workload at a target QPS, then drain
+/// to quiescence and assert bit-for-bit query parity against a fresh
+/// [`SfcIndex`] over the live set. `--scenario trajectory` switches to
+/// (x, y, t) points with time as the third curve dimension and expires
+/// a sliding time window via range deletes through the pipeline.
+fn serve_cmd(args: &Args) {
+    use sfc_mine::index::{IngestPipeline, PipelineConfig, QueryRouter, SfcStore, StoreConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let scenario = args.get_str("scenario", "uniform");
+    let trajectory = match scenario.as_str() {
+        "uniform" => false,
+        "trajectory" => true,
+        other => {
+            eprintln!("unknown scenario '{other}' (uniform|trajectory)");
+            std::process::exit(2);
+        }
+    };
+    let n: usize = args.get("n", 100_000);
+    let d: usize = if trajectory { 3 } else { args.get("dims", 3) };
+    let level: u32 = args.get("level", 8);
+    let shards: usize = args.get("shards", 8);
+    let buffer: usize = args.get("buffer-rows", 256);
+    let curve: CurveKind = match args.get_str("curve", "hilbert").parse() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let qps: u64 = args.get("qps", 20_000).max(1);
+    let seconds: f64 = args.get("seconds", 5.0);
+    let producers: usize = args.get("producers", 4).max(1);
+    let replicas: usize = args.get("replicas", 3).max(1);
+    let inflight: usize = args.get("inflight", 4).max(1);
+    let mtn: usize = args.get("maintenance-threads", 2);
+    let rows_per_insert: usize = args.get("rows-per-insert", 8).max(1);
+    let frac: f32 = args.get("window-frac", 0.03);
+    let k: usize = args.get("k", 8).max(1);
+    let queries: usize = args.get("queries", 300).max(10);
+    let expire_window: f32 = args.get("expire-window", 1.0);
+    let cfg = PipelineConfig {
+        queue_rows: args.get("queue-rows", 4096),
+        batch_rows: args.get("batch-rows", 512),
+        batch_wait: Duration::from_micros(args.get("batch-wait-us", 200)),
+        maintenance_threads: mtn,
+        compact_segments: args.get("compact-segments", 12),
+        ..PipelineConfig::default()
+    };
+
+    // ---- build: initial point set + store + router ---------------------
+    let spatial = make_clustered(n, if trajectory { 2 } else { d }, 40, 0.8, 7);
+    let mut rng = Rng::new(42);
+    let points = if trajectory {
+        // (x, y, t): initial timestamps fill one expiry window.
+        Matrix::from_fn(n, 3, |i, j| {
+            if j < 2 {
+                spatial.at(i, j)
+            } else {
+                (i as f32 / n.max(1) as f32 - 1.0) * expire_window
+            }
+        })
+    } else {
+        spatial.clone()
+    };
+    let (min, max) = sfc_mine::index::axis_bounds(&points, d).expect("workload is non-empty");
+    let t0 = Instant::now();
+    let store = if trajectory {
+        // Size the t axis for the whole run up front so later
+        // timestamps keep their own cells instead of clamping.
+        let mut hi = max.clone();
+        hi[2] = seconds as f32 + expire_window;
+        let s = SfcStore::new(
+            d,
+            level,
+            curve,
+            min.clone(),
+            &hi,
+            StoreConfig { shards, buffer_rows: buffer },
+        );
+        s.insert_batch(&points);
+        s.rebalance();
+        Arc::new(s)
+    } else {
+        Arc::new(SfcStore::from_points(
+            &points,
+            level,
+            curve,
+            StoreConfig { shards, buffer_rows: buffer },
+        ))
+    };
+    let build_dt = t0.elapsed();
+    let router = Arc::new(QueryRouter::new(Arc::clone(&store), replicas, inflight));
+    let random_window = |center: &[f32]| {
+        let lo: Vec<f32> = (0..d).map(|a| center[a] - frac * (max[a] - min[a])).collect();
+        let hi: Vec<f32> = (0..d).map(|a| center[a] + frac * (max[a] - min[a])).collect();
+        (lo, hi)
+    };
+
+    // ---- quiescent baseline: same queries, no churn --------------------
+    router.refresh();
+    let mut quiet = LatencyHistogram::new();
+    for i in 0..queries {
+        let c = rng.below_usize(n);
+        let center = points.row(c).to_vec();
+        let tq = Instant::now();
+        match i % 3 {
+            0 => drop(router.query_knn(&center, k)),
+            1 => drop(router.query_point(&center)),
+            _ => {
+                let (lo, hi) = random_window(&center);
+                drop(router.query_window(&lo, &hi));
+            }
+        }
+        quiet.record_duration(tq.elapsed());
+    }
+
+    // ---- churn: producers at a target QPS through the pipeline ---------
+    let pipeline =
+        IngestPipeline::with_router(Arc::clone(&store), cfg, Some(Arc::clone(&router)));
+    let total_ops = (qps as f64 * seconds) as u64;
+    let interval =
+        Duration::from_nanos((1e9 * producers as f64 / qps as f64).max(1.0) as u64);
+    let churn_t0 = Instant::now();
+    let deadline = churn_t0 + Duration::from_secs_f64(seconds);
+    let lats: Vec<ChurnLat> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let my_ops = total_ops / producers as u64
+                + u64::from((p as u64) < total_ops % producers as u64);
+            let pipeline = &pipeline;
+            let router = &router;
+            let points = &points;
+            let min = &min;
+            let max = &max;
+            handles.push(scope.spawn(move || {
+                let mut rng = Rng::new(1000 + p as u64);
+                let mut out = ChurnLat::default();
+                let mut mine: Vec<(u32, Vec<f32>)> = Vec::new();
+                let mut next = Instant::now();
+                for _ in 0..my_ops {
+                    let now = Instant::now();
+                    if now < next {
+                        std::thread::sleep(next - now);
+                    }
+                    next += interval;
+                    let src = rng.below_usize(n);
+                    let mut row: Vec<f32> = (0..d)
+                        .map(|a| {
+                            points.at(src, a)
+                                + (rng.f32() - 0.5) * (max[a] - min[a]) * 0.02
+                        })
+                        .collect();
+                    if trajectory {
+                        row[2] = churn_t0.elapsed().as_secs_f32();
+                    }
+                    let r = rng.f32();
+                    let (ins_f, del_f, win_f, knn_f) = if trajectory {
+                        (0.55, 0.05, 0.20, 0.10)
+                    } else {
+                        (0.40, 0.10, 0.30, 0.10)
+                    };
+                    if r < ins_f {
+                        let rows = Matrix::from_fn(rows_per_insert, d, |i, j| {
+                            if trajectory && j == 2 {
+                                row[2]
+                            } else {
+                                row[j] + i as f32 * 1e-4
+                            }
+                        });
+                        let first = pipeline.submit_insert(rows.clone());
+                        if mine.len() < 4096 {
+                            mine.push((first, rows.row(0).to_vec()));
+                        }
+                        out.rows += rows_per_insert as u64;
+                    } else if r < ins_f + del_f {
+                        if let Some(last) = mine.pop() {
+                            let m = Matrix { rows: 1, cols: d, data: last.1 };
+                            pipeline.submit_delete(&[last.0], &m);
+                            out.rows += 1;
+                        }
+                    } else if r < ins_f + del_f + win_f {
+                        let (lo, hi) = {
+                            let lo: Vec<f32> = (0..d)
+                                .map(|a| row[a] - frac * (max[a] - min[a]))
+                                .collect();
+                            let hi: Vec<f32> = (0..d)
+                                .map(|a| row[a] + frac * (max[a] - min[a]))
+                                .collect();
+                            (lo, hi)
+                        };
+                        let tq = Instant::now();
+                        drop(router.query_window(&lo, &hi));
+                        out.window.record_duration(tq.elapsed());
+                    } else if r < ins_f + del_f + win_f + knn_f {
+                        let tq = Instant::now();
+                        drop(router.query_knn(&row, k));
+                        out.knn.record_duration(tq.elapsed());
+                    } else {
+                        let tq = Instant::now();
+                        drop(router.query_point(&row));
+                        out.point.record_duration(tq.elapsed());
+                    }
+                    out.ops += 1;
+                }
+                out
+            }));
+        }
+        if trajectory {
+            // Expiry clock: slide the time window via range deletes.
+            let pipeline = &pipeline;
+            let min = &min;
+            let max = &max;
+            handles.push(scope.spawn(move || {
+                let mut out = ChurnLat::default();
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(200).min(deadline - now));
+                    let cutoff = churn_t0.elapsed().as_secs_f32() - expire_window;
+                    let lo = vec![min[0] - 1.0, min[1] - 1.0, -expire_window - 1.0];
+                    let hi = vec![max[0] + 1.0, max[1] + 1.0, cutoff];
+                    if cutoff > -expire_window {
+                        pipeline.submit_expire(&lo, &hi);
+                        out.ops += 1;
+                    }
+                }
+                out
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("producer thread panicked")).collect()
+    });
+    let churn_dt = churn_t0.elapsed();
+    pipeline.drain().expect("pipeline drain");
+    pipeline.settle_maintenance();
+    router.refresh();
+
+    // ---- quiescent again (post-churn), then parity ---------------------
+    let mut quiet_after = LatencyHistogram::new();
+    let snap = store.snapshot();
+    let (live_ids, live_rows) = store.collect_live(&snap);
+    for _ in 0..queries.min(100) {
+        if live_rows.rows == 0 {
+            break;
+        }
+        let c = rng.below_usize(live_rows.rows);
+        let (lo, hi) = random_window(live_rows.row(c));
+        let tq = Instant::now();
+        drop(router.query_window(&lo, &hi));
+        quiet_after.record_duration(tq.elapsed());
+    }
+
+    let mut churn_all = LatencyHistogram::new();
+    let (mut wh, mut kh, mut ph) = (
+        LatencyHistogram::new(),
+        LatencyHistogram::new(),
+        LatencyHistogram::new(),
+    );
+    let (mut ops_done, mut rows_done) = (0u64, 0u64);
+    for l in &lats {
+        churn_all.merge(&l.window);
+        churn_all.merge(&l.knn);
+        churn_all.merge(&l.point);
+        wh.merge(&l.window);
+        kh.merge(&l.knn);
+        ph.merge(&l.point);
+        ops_done += l.ops;
+        rows_done += l.rows;
+    }
+    let stats = pipeline.stats();
+    let rstats = router.stats();
+    let dstats = store.durability_stats();
+
+    let mut t = Table::new(vec!["measure", "value", "notes"]);
+    t.row(vec![
+        "bulk build".into(),
+        fmt_ms(build_dt),
+        format!("{n} pts, {} shards, {} replicas", shards, replicas),
+    ]);
+    t.row(vec![
+        "churn ops".into(),
+        ops_done.to_string(),
+        format!(
+            "{:.0} ops/s achieved (target {qps}), {:.1} s",
+            ops_done as f64 / churn_dt.as_secs_f64(),
+            churn_dt.as_secs_f64(),
+        ),
+    ]);
+    t.row(vec![
+        "ingest".into(),
+        format!("{} rows", stats.applied_rows),
+        format!(
+            "{:.0} rows/s, {} batches, mean {:.1} rows/batch, max {}",
+            stats.applied_rows as f64 / churn_dt.as_secs_f64(),
+            stats.batches,
+            stats.applied_rows as f64 / stats.batches.max(1) as f64,
+            stats.max_batch_rows,
+        ),
+    ]);
+    t.row(vec![
+        "queue".into(),
+        format!("{} / {} rows max", stats.max_queue_rows, cfg.queue_rows),
+        format!(
+            "{} blocked, {} shed, {} paced stalls",
+            stats.blocked_producers, stats.shed_ops, stats.paced_stalls,
+        ),
+    ]);
+    t.row(vec![
+        "maintenance".into(),
+        format!("x{mtn} threads"),
+        format!(
+            "{} flush / {} compact / {} rebalance passes",
+            stats.flushes, stats.compactions, stats.rebalances,
+        ),
+    ]);
+    if stats.expired_rows > 0 {
+        t.row(vec![
+            "expiry".into(),
+            format!("{} rows", stats.expired_rows),
+            "sliding-window range deletes".into(),
+        ]);
+    }
+    for (name, h) in [("window", &wh), ("knn", &kh), ("point", &ph)] {
+        if h.count() > 0 {
+            t.row(vec![
+                format!("{name} latency (churn)"),
+                h.summary(),
+                format!("{} queries", h.count()),
+            ]);
+        }
+    }
+    t.row(vec!["all queries (churn)".into(), churn_all.summary(), String::new()]);
+    t.row(vec![
+        "quiescent before".into(),
+        quiet.summary(),
+        format!("{} queries", quiet.count()),
+    ]);
+    t.row(vec![
+        "quiescent after".into(),
+        quiet_after.summary(),
+        format!("{} queries", quiet_after.count()),
+    ]);
+    let served: Vec<String> = rstats
+        .replicas
+        .iter()
+        .map(|r| format!("{}({})", r.served, r.max_inflight))
+        .collect();
+    t.row(vec![
+        "router".into(),
+        format!("{} stalls", rstats.stalls),
+        format!("served(max-inflight) per replica: {}", served.join(" ")),
+    ]);
+    t.row(vec![
+        "durability probe".into(),
+        format!("{} wal / {} fsync", dstats.wal_appends, dstats.fsyncs),
+        format!("{} batches coalesced", dstats.batches_coalesced),
+    ]);
+    println!(
+        "serve [{}] scenario={scenario}: n={n} d={d} level={level} qps={qps} \
+         producers={producers} replicas={replicas} maintenance-threads={mtn}",
+        curve.name(),
+    );
+    print!("{}", t.render());
+    println!(
+        "p99 under churn {} vs quiescent p99 {} ({:.1}x), p999 {}",
+        fmt_ns(churn_all.p99()),
+        fmt_ns(quiet.p99()),
+        churn_all.p99() as f64 / quiet.p99().max(1) as f64,
+        fmt_ns(churn_all.p999()),
+    );
+
+    // ---- parity: drained pipeline vs a fresh SfcIndex ------------------
+    if live_rows.rows == 0 {
+        println!("drained; live set empty, parity OK (nothing to verify)");
+        return;
+    }
+    let index = SfcIndex::build_with(&live_rows, level, curve);
+    let nv = queries.min(100);
+    for _ in 0..nv {
+        let c = rng.below_usize(live_rows.rows);
+        let (lo, hi) = random_window(live_rows.row(c));
+        let mut got = router.query_window(&lo, &hi);
+        let mut want: Vec<u32> =
+            index.query_window(&lo, &hi).iter().map(|&i| live_ids[i as usize]).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "router must match a fresh SfcIndex after quiescence");
+    }
+    println!(
+        "drained {} ops ({} rows), {} live rows, parity OK ({nv} windows verified)",
+        stats.acked_ops, stats.applied_rows, live_ids.len(),
     );
 }

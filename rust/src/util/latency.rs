@@ -1,0 +1,287 @@
+//! Fixed-bucket log2 latency histogram (ISSUE 10).
+//!
+//! Every latency surface in the crate — the store CLI's mixed-workload
+//! phase, `bench_store`'s query rows, and all serving-pipeline metrics
+//! ([`crate::index::store::pipeline`]) — records nanosecond samples
+//! into a [`LatencyHistogram`] instead of keeping a sorted `Vec` of
+//! raw samples. The histogram is a fixed 976-counter array (constant
+//! memory no matter how many samples land in it, no sort at read
+//! time), mergeable across threads, with ≤ 1/16 ≈ 6.25% relative
+//! quantile error by construction.
+//!
+//! ## Bucketing
+//!
+//! HdrHistogram-style log-linear buckets: values below 16 ns map to
+//! exact unit buckets; every higher octave `[2^o, 2^(o+1))` splits
+//! into 16 linear sub-buckets of width `2^(o-4)`. The bucket index of
+//! a value `v` with highest set bit `o ≥ 4` is
+//!
+//! ```text
+//! idx = (o - 3) * 16 + ((v >> (o - 4)) & 15)
+//! ```
+//!
+//! which is continuous with the unit region (`v = 16` lands in bucket
+//! 16) and covers the whole `u64` range in `(64 - 3) * 16 = 976`
+//! buckets. Quantiles walk the counters and report the **upper edge**
+//! of the bucket holding the target rank, so a reported p99 is never
+//! below the true p99 and at most one sub-bucket width above it.
+
+/// Number of linear sub-buckets per octave (and the size of the exact
+/// unit region).
+const SUB: usize = 16;
+/// log2(SUB).
+const SUB_BITS: u32 = 4;
+/// Total bucket count: unit region + 60 sub-divided octaves.
+const BUCKETS: usize = (64 - SUB_BITS as usize + 1) * SUB;
+
+/// Bucket index of `v` (see the module docs for the layout).
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let o = 63 - v.leading_zeros();
+        ((o - SUB_BITS + 1) as usize) * SUB + ((v >> (o - SUB_BITS)) as usize & (SUB - 1))
+    }
+}
+
+/// Inclusive upper edge of bucket `idx` — the value quantiles report.
+#[inline]
+fn bucket_hi(idx: usize) -> u64 {
+    if idx < SUB {
+        idx as u64
+    } else {
+        let o = (idx / SUB) as u32 + SUB_BITS - 1;
+        let sub = (idx % SUB) as u64;
+        let width = 1u64 << (o - SUB_BITS);
+        (sub << (o - SUB_BITS)) + (1u64 << o) + width - 1
+    }
+}
+
+/// A mergeable fixed-memory log2 histogram of nanosecond latencies.
+///
+/// Typical use: one histogram per worker thread, `merge`d into one at
+/// report time, then `p50()`/`p99()`/`p999()`/`max_ns()`.
+#[derive(Clone)]
+pub struct LatencyHistogram {
+    counts: Box<[u64; BUCKETS]>,
+    count: u64,
+    sum: u64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LatencyHistogram { counts: Box::new([0u64; BUCKETS]), count: 0, sum: 0, max: 0 }
+    }
+
+    /// Record one sample in nanoseconds.
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(ns);
+        self.max = self.max.max(ns);
+    }
+
+    /// Record an elapsed [`std::time::Duration`].
+    #[inline]
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Fold another histogram into this one (exact: bucket-wise sums).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact maximum recorded sample (not bucketed).
+    pub fn max_ns(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of all samples in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum / self.count
+        }
+    }
+
+    /// The `q`-quantile (`0 < q ≤ 1`) in nanoseconds: the upper edge of
+    /// the bucket holding the sample of rank `ceil(q · count)`. Returns
+    /// 0 on an empty histogram; `quantile(1.0)` returns the exact max.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Never report past the true max (the last occupied
+                // bucket's edge can exceed it).
+                return bucket_hi(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// 99.9th percentile.
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// `"p50 12.3µs p99 45.6µs p999 1.2ms max 3.4ms"` — the one-line
+    /// form every CLI/bench surface prints.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {} p99 {} p999 {} max {}",
+            fmt_ns(self.p50()),
+            fmt_ns(self.p99()),
+            fmt_ns(self.p999()),
+            fmt_ns(self.max)
+        )
+    }
+}
+
+/// Human-readable nanoseconds (`ns`/`µs`/`ms`/`s`).
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_region_is_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.quantile(1.0 / 16.0), 0);
+        assert_eq!(h.p50(), 7);
+        assert_eq!(h.max_ns(), 15);
+    }
+
+    #[test]
+    fn buckets_are_monotone_and_cover_u64() {
+        let mut prev = 0usize;
+        let mut v = 1u64;
+        while v < u64::MAX / 2 {
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket index must be monotone at v={v}");
+            assert!(b < BUCKETS);
+            assert!(bucket_hi(b) >= v, "upper edge must bound the value at v={v}");
+            prev = b;
+            v = v.wrapping_mul(3) + 1;
+        }
+        assert!(bucket_of(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn quantiles_match_sorted_vec_within_bound() {
+        // Deterministic LCG workload spanning ns..ms scales.
+        let mut x = 0x2545f4914f6cdd1du64;
+        let mut samples: Vec<u64> = (0..10_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                x % 5_000_000
+            })
+            .collect();
+        let mut h = LatencyHistogram::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        samples.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let rank = ((q * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+            let exact = samples[rank - 1];
+            let got = h.quantile(q);
+            // Upper-edge reporting: got >= exact, within one sub-bucket
+            // (6.25% relative + the unit region floor).
+            assert!(got >= exact, "q={q}: got {got} < exact {exact}");
+            assert!(
+                got as f64 <= exact as f64 * (1.0 + 1.0 / SUB as f64) + 1.0,
+                "q={q}: got {got} too far above exact {exact}"
+            );
+        }
+        assert_eq!(h.quantile(1.0), *samples.last().unwrap());
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            let v = i * 977 % 100_000;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.max_ns(), all.max_ns());
+        assert_eq!(a.mean_ns(), all.mean_ns());
+        for q in [0.5, 0.9, 0.99, 0.999, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p999(), 0);
+        assert_eq!(h.mean_ns(), 0);
+    }
+}

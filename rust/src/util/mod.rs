@@ -7,6 +7,7 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod latency;
 pub mod rng;
 pub mod sort;
 pub mod table;

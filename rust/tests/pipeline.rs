@@ -1,0 +1,465 @@
+//! Serving-pipeline test suite (ISSUE 10): the async backpressured
+//! ingestion pipeline and the replicated query tier must preserve the
+//! store's correctness story under concurrency —
+//!
+//! * **No acked op lost.** After `drain`, the live set equals the
+//!   scripted ground truth bitwise, and queries match a fresh
+//!   `SfcIndex`, for producer counts {1, 2, 5, 8}.
+//! * **Backpressure engages and bounds the queue.** The queue never
+//!   exceeds its row cap, blocking producers are counted, shedding
+//!   submits are refused at a closed gate, and the gate reopens at the
+//!   low watermark.
+//! * **Clean shutdown.** Both `close` and a bare `drop` drain the
+//!   queue; nothing deadlocks.
+//! * **Router parity.** The replicated query tier answers bit-for-bit
+//!   like direct snapshot queries for every `CurveKind` at d ∈ {2, 3},
+//!   and per-replica in-flight caps hold under threaded load.
+//! * **WAL-append-is-ack.** On durable stores an acked batch survives a
+//!   clean crash before any flush; a batch whose WAL append failed is
+//!   reported through `drain` and is absent after reopen.
+
+use sfc_mine::apps::Matrix;
+use sfc_mine::curves::CurveKind;
+use sfc_mine::index::{
+    CrashMode, FailpointFs, IngestPipeline, PipelineConfig, QueryRouter, SfcIndex, SfcStore,
+    StoreConfig, SyncPolicy,
+};
+use sfc_mine::util::rng::Rng;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Ground truth: id → row.
+type Alive = BTreeMap<u32, Vec<f32>>;
+
+fn mem_store(d: usize, kind: CurveKind, shards: usize, buffer_rows: usize) -> Arc<SfcStore> {
+    Arc::new(SfcStore::new(
+        d,
+        6,
+        kind,
+        vec![0.0; d],
+        &vec![100.0; d],
+        StoreConfig { shards, buffer_rows },
+    ))
+}
+
+/// Assert the store's live set equals `alive` bitwise and that window
+/// queries match a fresh `SfcIndex` over it.
+fn assert_store_parity(store: &SfcStore, alive: &Alive, d: usize, kind: CurveKind, ctx: &str) {
+    let snap = store.snapshot();
+    let (sids, srows) = store.collect_live(&snap);
+    assert_eq!(sids.len(), alive.len(), "{ctx}: live count");
+    for (pos, &id) in sids.iter().enumerate() {
+        assert_eq!(srows.row(pos), &alive[&id][..], "{ctx}: row of id {id} diverged");
+    }
+    let ids: Vec<u32> = alive.keys().copied().collect();
+    let rows = Matrix::from_fn(ids.len(), d, |i, j| alive[&ids[i]][j]);
+    let index = SfcIndex::build_with(&rows, 6, kind);
+    let mut rng = Rng::new(7);
+    for _ in 0..8 {
+        let lo: Vec<f32> = (0..d).map(|_| rng.f32() * 80.0).collect();
+        let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 30.0).collect();
+        let mut got = store.query_window_on(&snap, &lo, &hi);
+        let mut want: Vec<u32> =
+            index.query_window(&lo, &hi).iter().map(|&i| ids[i as usize]).collect();
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "{ctx}: window parity");
+    }
+}
+
+/// No acked op lost: concurrent producers submit scripted inserts and
+/// deletes (each deletes only its own rows, so FIFO per producer makes
+/// the ground truth exact), drain, and the quiesced store must equal
+/// the script — for producer counts {1, 2, 5, 8}.
+#[test]
+fn stress_parity_under_producer_counts() {
+    let d = 3;
+    let kind = CurveKind::Hilbert;
+    for producers in [1usize, 2, 5, 8] {
+        let store = mem_store(d, kind, 4, 32);
+        let cfg = PipelineConfig {
+            queue_rows: 256,
+            batch_rows: 64,
+            batch_wait: Duration::from_micros(100),
+            compact_segments: 6,
+            ..PipelineConfig::default()
+        };
+        let pipeline = IngestPipeline::new(Arc::clone(&store), cfg);
+        type Log = (Vec<(u32, Matrix)>, Vec<u32>);
+        let logs: Vec<Log> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for p in 0..producers {
+                let pipeline = &pipeline;
+                handles.push(scope.spawn(move || {
+                    let mut rng = Rng::new(100 + p as u64);
+                    let mut inserts: Vec<(u32, Matrix)> = Vec::new();
+                    let mut deleted: Vec<u32> = Vec::new();
+                    for _ in 0..60 {
+                        if rng.f32() < 0.7 || inserts.is_empty() {
+                            let n = 1 + rng.below(5) as usize;
+                            let rows = Matrix::from_fn(n, d, |_, _| rng.f32() * 100.0);
+                            let first = pipeline.submit_insert(rows.clone());
+                            inserts.push((first, rows));
+                        } else {
+                            // Delete one of our own earlier rows.
+                            let pick = rng.below_usize(inserts.len());
+                            let (first, rows) = &inserts[pick];
+                            let off = rng.below_usize(rows.rows);
+                            let id = first + off as u32;
+                            if !deleted.contains(&id) {
+                                let m = Matrix {
+                                    rows: 1,
+                                    cols: d,
+                                    data: rows.row(off).to_vec(),
+                                };
+                                pipeline.submit_delete(&[id], &m);
+                                deleted.push(id);
+                            }
+                        }
+                    }
+                    (inserts, deleted)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("producer panicked")).collect()
+        });
+        let stats = pipeline.close().expect("close");
+        assert_eq!(
+            stats.acked_ops, stats.submitted_ops,
+            "x{producers}: every admitted op must be acked after close"
+        );
+        assert_eq!(
+            stats.applied_rows, stats.submitted_rows,
+            "x{producers}: every admitted row must be applied"
+        );
+        let mut alive = Alive::new();
+        for (inserts, deleted) in &logs {
+            for (first, rows) in inserts {
+                for i in 0..rows.rows {
+                    alive.insert(first + i as u32, rows.row(i).to_vec());
+                }
+            }
+            for id in deleted {
+                alive.remove(id);
+            }
+        }
+        assert_store_parity(&store, &alive, d, kind, &format!("x{producers} producers"));
+    }
+}
+
+/// Backpressure engages: with a tiny queue and a lingering batcher the
+/// gate must close (counting blocked producers), the queue depth must
+/// never exceed the cap, and everything still lands.
+#[test]
+fn backpressure_blocks_and_bounds_queue() {
+    let d = 2;
+    let store = mem_store(d, CurveKind::Hilbert, 2, 64);
+    let cfg = PipelineConfig {
+        queue_rows: 16,
+        batch_rows: 64,
+        // Long linger: the batcher sits on a full queue, forcing
+        // producers into the gate deterministically.
+        batch_wait: Duration::from_millis(5),
+        maintenance_threads: 0,
+        ..PipelineConfig::default()
+    };
+    let pipeline = IngestPipeline::new(Arc::clone(&store), cfg);
+    let per_producer = 20usize;
+    std::thread::scope(|scope| {
+        for p in 0..4 {
+            let pipeline = &pipeline;
+            scope.spawn(move || {
+                let mut rng = Rng::new(500 + p as u64);
+                for _ in 0..per_producer {
+                    let rows = Matrix::from_fn(8, d, |_, _| rng.f32() * 100.0);
+                    pipeline.submit_insert(rows);
+                }
+            });
+        }
+    });
+    let stats = pipeline.close().expect("close");
+    assert!(
+        stats.max_queue_rows <= 16,
+        "queue depth {} exceeded the {}-row cap",
+        stats.max_queue_rows,
+        16
+    );
+    assert!(stats.blocked_producers > 0, "gate never engaged under 4x overload");
+    assert_eq!(stats.acked_ops, (4 * per_producer) as u64);
+    let (ids, _) = store.collect_live(&store.snapshot());
+    assert_eq!(ids.len(), 4 * per_producer * 8, "rows lost under backpressure");
+}
+
+/// Shedding: `try_submit_*` refuses (and counts) ops at a closed gate
+/// instead of blocking, and the gate reopens at the low watermark.
+#[test]
+fn try_submit_sheds_at_closed_gate() {
+    let d = 2;
+    let store = mem_store(d, CurveKind::ZOrder, 2, 64);
+    let cfg = PipelineConfig {
+        queue_rows: 8,
+        batch_rows: 64,
+        batch_wait: Duration::from_millis(50),
+        maintenance_threads: 0,
+        ..PipelineConfig::default()
+    };
+    let pipeline = IngestPipeline::new(Arc::clone(&store), cfg);
+    // Fill the queue to its cap; the batcher lingers 50ms before it
+    // drains, so the next admission sees a full queue.
+    let full = Matrix::from_fn(8, d, |_, r| r as f32);
+    pipeline.submit_insert(full);
+    let one = Matrix::from_fn(1, d, |_, _| 1.0);
+    assert!(
+        pipeline.try_submit_insert(one.clone()).is_none(),
+        "try_submit must shed at a full queue"
+    );
+    assert!(
+        !pipeline.try_submit_delete(&[0], &one),
+        "try_submit_delete must shed at a closed gate"
+    );
+    let stats = pipeline.stats();
+    assert!(stats.shed_ops >= 2, "shed ops not counted: {}", stats.shed_ops);
+    // After the batcher drains past the watermark the gate reopens and
+    // blocking submits go straight through again.
+    pipeline.drain().expect("drain");
+    let id = pipeline.submit_insert(one);
+    let stats = pipeline.close().expect("close");
+    assert_eq!(stats.shed_ops, 2, "no further sheds after the gate reopened");
+    let (ids, _) = store.collect_live(&store.snapshot());
+    assert!(ids.contains(&id), "post-reopen insert lost");
+    assert_eq!(ids.len(), 9);
+}
+
+/// Clean shutdown: both `close` and a bare `drop` drain the queue
+/// (nothing is lost, nothing deadlocks).
+#[test]
+fn close_and_drop_both_drain() {
+    let d = 2;
+    for explicit_close in [true, false] {
+        let store = mem_store(d, CurveKind::Gray, 2, 32);
+        let pipeline = IngestPipeline::new(
+            Arc::clone(&store),
+            PipelineConfig { maintenance_threads: 1, ..PipelineConfig::default() },
+        );
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            pipeline.submit_insert(Matrix::from_fn(1, d, |_, _| rng.f32() * 100.0));
+        }
+        if explicit_close {
+            let stats = pipeline.close().expect("close");
+            assert_eq!(stats.acked_ops, 200);
+        } else {
+            drop(pipeline);
+        }
+        let (ids, _) = store.collect_live(&store.snapshot());
+        assert_eq!(ids.len(), 200, "shutdown (close={explicit_close}) lost rows");
+    }
+}
+
+/// Router parity: for every curve at d ∈ {2, 3}, the replicated tier
+/// answers window/point/kNN queries bit-for-bit like direct snapshot
+/// queries on the store.
+#[test]
+fn router_matches_single_store_queries() {
+    for kind in CurveKind::ALL {
+        for d in [2usize, 3] {
+            let mut rng = Rng::new(40 + d as u64);
+            let points = Matrix::from_fn(300, d, |_, _| rng.f32() * 100.0);
+            let store = Arc::new(SfcStore::from_points(
+                &points,
+                6,
+                kind,
+                StoreConfig { shards: 3, buffer_rows: 32 },
+            ));
+            for id in 0..30u32 {
+                store.delete(id, points.row(id as usize));
+            }
+            store.flush();
+            let router = QueryRouter::new(Arc::clone(&store), 3, 2);
+            router.refresh();
+            let snap = store.snapshot();
+            let ctx = format!("{} d={d}", kind.name());
+            for _ in 0..10 {
+                let lo: Vec<f32> = (0..d).map(|_| rng.f32() * 80.0).collect();
+                let hi: Vec<f32> = lo.iter().map(|&l| l + rng.f32() * 25.0).collect();
+                assert_eq!(
+                    router.query_window(&lo, &hi),
+                    store.query_window_on(&snap, &lo, &hi),
+                    "{ctx}: window"
+                );
+                let q: Vec<f32> = (0..d).map(|_| rng.f32() * 100.0).collect();
+                assert_eq!(router.query_point(&q), store.query_point_on(&snap, &q), "{ctx}: point");
+                let got = router.query_knn(&q, 5);
+                let want = store.query_knn_on(&snap, &q, 5);
+                assert_eq!(got.len(), want.len(), "{ctx}: knn count");
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.0, w.0, "{ctx}: knn id");
+                    assert_eq!(g.1.to_bits(), w.1.to_bits(), "{ctx}: knn distance");
+                }
+            }
+        }
+    }
+}
+
+/// Per-replica in-flight caps hold under threaded query load, and every
+/// query is served by some replica.
+#[test]
+fn router_inflight_caps_hold_under_load() {
+    let d = 3;
+    let mut rng = Rng::new(3);
+    let points = Matrix::from_fn(2000, d, |_, _| rng.f32() * 100.0);
+    let store =
+        Arc::new(SfcStore::from_points(&points, 6, CurveKind::Hilbert, StoreConfig::default()));
+    let cap = 2usize;
+    let router = Arc::new(QueryRouter::new(Arc::clone(&store), 2, cap));
+    std::thread::scope(|scope| {
+        for t in 0..8 {
+            let router = &router;
+            let points = &points;
+            scope.spawn(move || {
+                let mut rng = Rng::new(60 + t as u64);
+                for _ in 0..50 {
+                    let c = rng.below_usize(points.rows);
+                    let lo: Vec<f32> = (0..d).map(|a| points.at(c, a) - 2.0).collect();
+                    let hi: Vec<f32> = (0..d).map(|a| points.at(c, a) + 2.0).collect();
+                    drop(router.query_window(&lo, &hi));
+                }
+            });
+        }
+    });
+    let stats = router.stats();
+    let served: u64 = stats.replicas.iter().map(|r| r.served).sum();
+    assert_eq!(served, 8 * 50, "every query must be served exactly once");
+    for (i, r) in stats.replicas.iter().enumerate() {
+        assert!(
+            r.max_inflight <= cap,
+            "replica {i} peaked at {} > cap {cap}",
+            r.max_inflight
+        );
+    }
+}
+
+/// Expiry range deletes flow through the pipeline in FIFO order: an
+/// expire tombstones exactly the rows inside its window that were
+/// submitted before it, and later inserts survive.
+#[test]
+fn expire_is_a_fifo_range_delete() {
+    let d = 3;
+    let store = mem_store(d, CurveKind::Hilbert, 2, 16);
+    let pipeline = IngestPipeline::new(
+        Arc::clone(&store),
+        PipelineConfig { maintenance_threads: 0, ..PipelineConfig::default() },
+    );
+    // 100 rows with t = 0..100 in the third axis.
+    let rows = Matrix::from_fn(100, d, |i, j| if j == 2 { i as f32 } else { 50.0 });
+    pipeline.submit_insert(rows);
+    // Expire everything with t ≤ 50.5, then insert one row back inside
+    // the expired region — FIFO means it must survive.
+    pipeline.submit_expire(&[-1.0, -1.0, -1.0], &[101.0, 101.0, 50.5]);
+    let late = Matrix::from_fn(1, d, |_, j| if j == 2 { 10.0 } else { 50.0 });
+    let late_id = pipeline.submit_insert(late);
+    let stats = pipeline.close().expect("close");
+    assert_eq!(stats.expired_rows, 51, "t = 0..=50 must be expired");
+    let (ids, rows) = store.collect_live(&store.snapshot());
+    assert_eq!(ids.len(), 100 - 51 + 1);
+    for (pos, &id) in ids.iter().enumerate() {
+        if id == late_id {
+            assert_eq!(rows.at(pos, 2), 10.0, "late insert must survive the earlier expiry");
+        } else {
+            assert!(rows.at(pos, 2) > 50.5, "id {id} should have been expired");
+        }
+    }
+}
+
+/// WAL-append-is-ack, positive half: a drained (acked) batch survives a
+/// clean crash even though nothing was flushed — the WAL append plus
+/// `SyncPolicy::Always` fsync *is* the commit point. Also pins the
+/// `DurabilityStats` probe counters.
+#[test]
+fn acked_batch_survives_clean_crash() {
+    let d = 2;
+    let dir = Path::new("pipe_wal_ack");
+    let fs = Arc::new(FailpointFs::new());
+    let store = Arc::new(
+        SfcStore::create_durable(
+            dir,
+            Arc::clone(&fs),
+            d,
+            5,
+            CurveKind::Hilbert,
+            vec![0.0; d],
+            &vec![100.0; d],
+            StoreConfig { shards: 2, buffer_rows: 64 },
+            SyncPolicy::Always,
+        )
+        .expect("create durable store"),
+    );
+    let pipeline = IngestPipeline::new(
+        Arc::clone(&store),
+        PipelineConfig { maintenance_threads: 0, ..PipelineConfig::default() },
+    );
+    let rows = Matrix::from_fn(6, d, |i, j| (10 * i + j) as f32);
+    let first = pipeline.submit_insert(rows.clone());
+    pipeline.drain().expect("acked batch");
+    drop(pipeline);
+    let dstats = store.durability_stats();
+    assert!(dstats.wal_appends >= 1, "apply must append to the WAL");
+    assert!(dstats.fsyncs >= 1, "SyncPolicy::Always must fsync each append");
+    assert!(dstats.batches_coalesced >= 1, "a 6-row apply is a coalesced batch");
+    drop(store);
+    // Kill the process (buffered rows were never flushed to segments).
+    fs.crash(CrashMode::Clean);
+    let reopened = SfcStore::open_durable(dir, fs, SyncPolicy::Always).expect("reopen");
+    let (ids, got) = reopened.collect_live(&reopened.snapshot());
+    assert_eq!(ids.len(), 6, "acked rows lost across the crash");
+    for (pos, &id) in ids.iter().enumerate() {
+        let i = (id - first) as usize;
+        assert_eq!(got.row(pos), rows.row(i), "row {id} diverged after recovery");
+    }
+}
+
+/// WAL-append-is-ack, negative half: when the WAL append fails, the
+/// pipeline is poisoned — `drain` surfaces the I/O error and the failed
+/// batch is absent after reopen (never half-acked).
+#[test]
+fn failed_wal_append_poisons_and_loses_nothing_acked() {
+    let d = 2;
+    let dir = Path::new("pipe_wal_fail");
+    let fs = Arc::new(FailpointFs::new());
+    let store = Arc::new(
+        SfcStore::create_durable(
+            dir,
+            Arc::clone(&fs),
+            d,
+            5,
+            CurveKind::Hilbert,
+            vec![0.0; d],
+            &vec![100.0; d],
+            StoreConfig { shards: 2, buffer_rows: 64 },
+            SyncPolicy::Always,
+        )
+        .expect("create durable store"),
+    );
+    let pipeline = IngestPipeline::new(
+        Arc::clone(&store),
+        PipelineConfig { maintenance_threads: 0, ..PipelineConfig::default() },
+    );
+    let good = Matrix::from_fn(3, d, |i, j| (i + j) as f32);
+    pipeline.submit_insert(good.clone());
+    pipeline.drain().expect("first batch acks");
+    // Every further filesystem mutation fails.
+    fs.arm(0);
+    pipeline.submit_insert(Matrix::from_fn(2, d, |_, _| 99.0));
+    let err = pipeline.drain();
+    assert!(err.is_err(), "drain must surface the WAL append failure");
+    drop(pipeline);
+    drop(store);
+    fs.crash(CrashMode::Clean);
+    let reopened = SfcStore::open_durable(dir, fs, SyncPolicy::Always).expect("reopen");
+    let (ids, got) = reopened.collect_live(&reopened.snapshot());
+    assert_eq!(ids.len(), 3, "exactly the acked batch survives");
+    for (pos, &id) in ids.iter().enumerate() {
+        assert_eq!(got.row(pos), good.row(id as usize), "acked row {id} diverged");
+    }
+}
